@@ -1,0 +1,53 @@
+//! Fig. 4 + Fig. 8 reproduction driver: doubly-adaptive DFL (ascending
+//! s_k per Eq. 37) vs fixed-level baselines, under fixed and variable
+//! learning rates. CSVs written to results/.
+//!
+//!   cargo run --release --example doubly_adaptive [-- --full] [--cifar]
+
+use lmdfl::experiments::{fig4, fig8, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let scale = if args.iter().any(|a| a == "--full") {
+        Scale::Full
+    } else {
+        Scale::from_env()
+    };
+    let cifar = args.iter().any(|a| a == "--cifar");
+    std::fs::create_dir_all("results")?;
+
+    // ---- Fig. 4: adaptive vs fixed vs descending s (loss vs bits) ------
+    println!("===== Fig. 4: ascending vs fixed s =====");
+    let f4 = fig4::run_mnist(scale)?;
+    println!("{}", fig8::render_loss_vs_bits(&f4));
+    for c in &f4 {
+        let path = format!("results/fig4_{}.csv", c.label);
+        c.log.write_csv(std::path::Path::new(&path))?;
+    }
+
+    // ---- Fig. 8: doubly-adaptive vs QSGD 2/4/8-bit ----------------------
+    for variable_lr in [false, true] {
+        let tag = if variable_lr { "var-lr" } else { "fixed-lr" };
+        println!("\n===== Fig. 8 ({tag}) =====");
+        let curves = if cifar {
+            fig8::run_cifar(scale, variable_lr)?
+        } else {
+            fig8::run_mnist(scale, variable_lr)?
+        };
+        println!("{}", fig8::render_loss_vs_bits(&curves));
+        println!("{}", fig8::render_bits_per_element(&curves));
+        // bits to reach a shared mid-training target
+        let target = curves
+            .iter()
+            .map(|c| c.log.records.last().unwrap().loss)
+            .fold(f64::MIN, f64::max)
+            * 1.1;
+        println!("{}", fig8::bits_to_target(&curves, target));
+        for c in &curves {
+            let safe = c.label.replace('/', "_");
+            let path = format!("results/fig8_{safe}.csv");
+            c.log.write_csv(std::path::Path::new(&path))?;
+        }
+    }
+    Ok(())
+}

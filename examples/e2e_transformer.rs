@@ -1,0 +1,263 @@
+//! End-to-end driver (DESIGN.md §E2E): decentralized training of the
+//! AOT-compiled transformer LM over the full three-layer stack.
+//!
+//! * L1/L2: `artifacts/transformer_step.hlo.txt` — jax transformer whose
+//!   dense layers are the Pallas matmul kernel, lowered once at build time.
+//! * L3: this driver — N Rust nodes, ring topology, LM-DFL differential
+//!   quantized gossip (Algorithm 2), real bit accounting; Python never runs.
+//!
+//! Workload: next-byte prediction on a synthetic corpus (deterministic
+//! pseudo-English markov text). Logs the global loss curve to
+//! results/e2e_transformer.csv — the EXPERIMENTS.md §E2E record.
+//!
+//!   make artifacts && cargo run --release --example e2e_transformer
+//!   (flags: --rounds N --nodes N --tau N --s N --lr F)
+
+use lmdfl::cli::Args;
+use lmdfl::metrics::{fnum, RoundRecord, RunLog};
+use lmdfl::quant::LloydMaxQuantizer;
+use lmdfl::runtime::{literal_f32, literal_i32, HloExecutor, Manifest};
+use lmdfl::topology::Topology;
+use lmdfl::util::rng::Rng;
+
+/// Deterministic pseudo-text corpus: sampled words with punctuation —
+/// structured enough that a byte LM's loss falls quickly.
+fn synth_corpus(len: usize, seed: u64) -> Vec<u8> {
+    const WORDS: [&str; 12] = [
+        "the", "model", "gossip", "quantize", "level", "node", "learn",
+        "bits", "adapt", "lloyd", "max", "converge",
+    ];
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len + 16);
+    while out.len() < len {
+        let w = WORDS[rng.below(WORDS.len())];
+        out.extend_from_slice(w.as_bytes());
+        out.push(b' ');
+        if rng.uniform() < 0.12 {
+            out.extend_from_slice(b". ");
+        }
+    }
+    out.truncate(len);
+    out
+}
+
+struct LmNode {
+    /// x_k (params after mixing — round start)
+    params: Vec<f32>,
+    /// x̂ (globally consistent estimate; deterministic LM quantizer)
+    hat: Vec<f32>,
+    quantizer: LloydMaxQuantizer,
+    rng: Rng,
+    /// corpus shard (offset, len) — non-IID by position
+    shard: (usize, usize),
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let nodes = args.get_usize("nodes", 4)?;
+    let rounds = args.get_usize("rounds", 60)?;
+    let tau = args.get_usize("tau", 2)?;
+    let s = args.get_usize("s", 32)?;
+    let lr = args.get_f64("lr", 0.25)? as f32;
+
+    let dir = lmdfl::runtime::artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let info = manifest.get("transformer_step")?.clone();
+    let eval_info = manifest.get("transformer_eval")?.clone();
+    let p = info.params.expect("manifest params");
+    let tok_spec = info.input("tokens").expect("tokens input").clone();
+    let (batch, seq1) = (tok_spec.shape[0], tok_spec.shape[1]);
+    println!(
+        "transformer artifact: {p} params, batch {batch}, seq {} (+1 label)",
+        seq1 - 1
+    );
+
+    println!("compiling PJRT executables...");
+    let client = xla::PjRtClient::cpu()
+        .map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+    let step = HloExecutor::compile(&client, info)?;
+    let eval = HloExecutor::compile(&client, eval_info)?;
+
+    let corpus = synth_corpus(200_000, 99);
+    let shard_len = corpus.len() / nodes;
+
+    let topo =
+        Topology::build(&lmdfl::config::TopologyKind::Ring, nodes, 0);
+    println!(
+        "topology: ring, zeta = {:.4}; LM-DFL s = {s}, tau = {tau}, lr = {lr}",
+        topo.zeta
+    );
+
+    let mut root_rng = Rng::new(7);
+    let mut init = vec![0.0f32; p];
+    root_rng.fill_normal(&mut init, 0.0, 0.02);
+    let mut node_v: Vec<LmNode> = (0..nodes)
+        .map(|i| LmNode {
+            params: init.clone(),
+            hat: vec![0.0; p],
+            quantizer: LloydMaxQuantizer::new(s, 12),
+            rng: root_rng.split(i as u64),
+            shard: (i * shard_len, shard_len),
+        })
+        .collect();
+
+    // held-out eval windows from across the whole corpus
+    let eval_toks: Vec<i32> = {
+        let mut rng = Rng::new(12345);
+        let mut t = Vec::with_capacity(batch * seq1);
+        for _ in 0..batch {
+            let start = rng.below(corpus.len() - seq1 - 1);
+            t.extend(corpus[start..start + seq1].iter().map(|&b| b as i32));
+        }
+        t
+    };
+
+    let mut log = RunLog::new("e2e_transformer");
+    let mut cum_bits = 0u64;
+    let mut diff = vec![0.0f32; p];
+    let mut dq = vec![0.0f32; p];
+    let mut q1_all: Vec<Vec<f32>> = vec![vec![0.0; p]; nodes];
+
+    for k in 0..rounds {
+        let t0 = std::time::Instant::now();
+        let mut round_bits = 0u64;
+        let mut round_dist = 0.0f64;
+
+        // ---- Eq. 22 (estimate-referenced): x̂ += γ·Q(x_k − x̂) ----------
+        for node in node_v.iter_mut() {
+            for j in 0..p {
+                diff[j] = node.params[j] - node.hat[j];
+            }
+            let (msg, _) = lmdfl::quant::quantize_damped(
+                &mut node.quantizer, &diff, &mut node.rng, &mut dq);
+            round_bits += msg.paper_bits();
+            for j in 0..p {
+                node.hat[j] += dq[j];
+            }
+        }
+
+        // ---- τ local SGD steps through the AOT executable ---------------
+        let mut mean_local_loss = 0.0f64;
+        for node in node_v.iter_mut() {
+            for _ in 0..tau {
+                let (off, len) = node.shard;
+                let mut toks = Vec::with_capacity(batch * seq1);
+                for _ in 0..batch {
+                    let start = off + node.rng.below(len - seq1 - 1);
+                    toks.extend(
+                        corpus[start..start + seq1]
+                            .iter()
+                            .map(|&b| b as i32),
+                    );
+                }
+                let outs = step.run(&[
+                    literal_f32(&node.params, &[p])?,
+                    literal_i32(&toks, &[batch, seq1])?,
+                    literal_f32(&[lr], &[])?,
+                ])?;
+                let newp = outs[0]
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                node.params.copy_from_slice(&newp);
+                mean_local_loss += outs[1]
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?[0]
+                    as f64;
+            }
+        }
+        mean_local_loss /= (nodes * tau) as f64;
+
+        // ---- q1 = Q(x_{k,τ} − x̂): x̂ += γ·q1 ---------------------------
+        for (i, node) in node_v.iter_mut().enumerate() {
+            for j in 0..p {
+                diff[j] = node.params[j] - node.hat[j];
+            }
+            let (msg, omega) = lmdfl::quant::quantize_damped(
+                &mut node.quantizer, &diff, &mut node.rng,
+                &mut q1_all[i]);
+            round_bits += msg.paper_bits();
+            round_dist += omega;
+            for j in 0..p {
+                node.hat[j] += q1_all[i][j];
+            }
+        }
+
+        // ---- Eq. 21 mixing as consensus correction on true params ------
+        // x += (X̂C)_i − x̂_i   (== X̂C when estimates are exact)
+        let mut mixed: Vec<Vec<f32>> = vec![vec![0.0f32; p]; nodes];
+        for i in 0..nodes {
+            for j in 0..nodes {
+                let w = topo.c[(j, i)] as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                let hat = &node_v[j].hat;
+                let out = &mut mixed[i];
+                for x in 0..p {
+                    out[x] += w * hat[x];
+                }
+            }
+        }
+        for (node, m) in node_v.iter_mut().zip(mixed) {
+            for x in 0..p {
+                node.params[x] += m[x] - node.hat[x];
+            }
+        }
+
+        // ---- evaluate the averaged model on held-out windows ------------
+        let mut avg = vec![0.0f32; p];
+        for node in &node_v {
+            for (a, &v) in avg.iter_mut().zip(&node.params) {
+                *a += v;
+            }
+        }
+        avg.iter_mut().for_each(|x| *x /= nodes as f32);
+        let outs = eval.run(&[
+            literal_f32(&avg, &[p])?,
+            literal_i32(&eval_toks, &[batch, seq1])?,
+        ])?;
+        let eval_loss = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?[0] as f64;
+
+        cum_bits += round_bits / nodes as u64;
+        let rec = RoundRecord {
+            round: k + 1,
+            loss: eval_loss,
+            accuracy: f64::NAN,
+            bits_per_link: cum_bits,
+            distortion: round_dist / nodes as f64,
+            levels: s,
+            lr: lr as f64,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        };
+        println!(
+            "round {:3}  eval-loss {:.4}  local-loss {:.4}  \
+             {:6.2} Mbit/link  dist {:.5}  {:.2}s",
+            rec.round,
+            rec.loss,
+            mean_local_loss,
+            cum_bits as f64 / 1e6,
+            rec.distortion,
+            rec.wall_secs
+        );
+        log.push(rec);
+    }
+
+    std::fs::create_dir_all("results")?;
+    log.write_csv(std::path::Path::new("results/e2e_transformer.csv"))?;
+    println!("\nwrote results/e2e_transformer.csv");
+    println!(
+        "final loss {} after {} rounds, {:.2} Mbit/link",
+        fnum(log.last_loss().unwrap_or(f64::NAN)),
+        log.records.len(),
+        log.total_bits() as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Fig. 6 reproduction driver: LM-DFL vs no-quant / ALQ / QSGD on
+//! synth-MNIST and synth-CIFAR — all four panels per dataset, CSVs written
+//! to results/fig6_*.csv.
+//!
+//!   cargo run --release --example lm_vs_baselines [-- --full] [--cifar]
+
+use lmdfl::experiments::{fig6, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let scale = if args.iter().any(|a| a == "--full") {
+        Scale::Full
+    } else {
+        Scale::from_env()
+    };
+    let cifar = args.iter().any(|a| a == "--cifar");
+
+    let (tag, curves) = if cifar {
+        ("cifar", fig6::run_cifar(scale)?)
+    } else {
+        ("mnist", fig6::run_mnist(scale)?)
+    };
+
+    println!("{}", fig6::render_panels(&curves, 100e6));
+
+    std::fs::create_dir_all("results")?;
+    for c in &curves {
+        let safe = c.label.replace('/', "_");
+        let path = format!("results/fig6_{tag}_{safe}.csv");
+        c.log.write_csv(std::path::Path::new(&path))?;
+        println!("wrote {path}");
+    }
+
+    // headline check, mirroring the paper's §VI-B1 narrative
+    let last = |label: &str| {
+        curves
+            .iter()
+            .find(|c| c.label.ends_with(label))
+            .map(|c| c.log.records.last().unwrap().clone())
+            .unwrap()
+    };
+    let lm = last("LM-DFL");
+    let qsgd = last("QSGD");
+    let alq = last("ALQ");
+    println!(
+        "\nfinal distortion: LM-DFL {:.4}  ALQ {:.4}  QSGD {:.4}  \
+         (expect LM lowest)",
+        lm.distortion, alq.distortion, qsgd.distortion
+    );
+    println!(
+        "final loss      : LM-DFL {:.4}  ALQ {:.4}  QSGD {:.4}",
+        lm.loss, alq.loss, qsgd.loss
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quickstart: train a small model with LM-DFL on synth-MNIST and compare
+//! against unquantized DFL — the 60-second tour of the public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! If `make artifacts` has been run, the same training is repeated on the
+//! AOT-compiled HLO backend (PJRT) to show the production path.
+
+use lmdfl::config::{
+    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind,
+    TopologyKind,
+};
+use lmdfl::dfl::Trainer;
+use lmdfl::metrics::fnum;
+
+fn base_config() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "quickstart".into(),
+        seed: 1,
+        nodes: 10,
+        tau: 4,
+        rounds: 25,
+        batch_size: 32,
+        lr: LrSchedule::fixed(0.02),
+        topology: TopologyKind::Ring, // zeta ~ 0.87, the paper's setup
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 12 },
+        dataset: DatasetKind::SynthMnist { train: 1500, test: 400 },
+        backend: BackendKind::RustMlp { hidden: vec![64] },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== LM-DFL (Lloyd-Max quantizer, s=16) ==");
+    let lm_log = Trainer::build(&base_config())?.run()?;
+    report(&lm_log);
+
+    println!("\n== DFL without quantization (baseline) ==");
+    let mut cfg = base_config();
+    cfg.quantizer = QuantizerKind::Full;
+    let full_log = Trainer::build(&cfg)?.run()?;
+    report(&full_log);
+
+    let lm_bits = lm_log.total_bits() as f64;
+    let full_bits = full_log.total_bits() as f64;
+    println!(
+        "\nLM-DFL used {:.1}x fewer bits per link ({:.2} vs {:.2} Mbit) \
+         for final loss {} vs {}",
+        full_bits / lm_bits,
+        lm_bits / 1e6,
+        full_bits / 1e6,
+        fnum(lm_log.last_loss().unwrap()),
+        fnum(full_log.last_loss().unwrap()),
+    );
+
+    // production path: same algorithm, local updates on the AOT HLO model
+    if lmdfl::runtime::artifacts_available() {
+        println!("\n== LM-DFL on the PJRT HLO backend (mlp_mnist) ==");
+        let mut cfg = base_config();
+        cfg.name = "quickstart-hlo".into();
+        cfg.nodes = 4; // keep PJRT compile time short in the demo
+        cfg.rounds = 6;
+        cfg.dataset = DatasetKind::SynthMnist { train: 600, test: 200 };
+        cfg.backend = BackendKind::Hlo { artifact: "mlp_mnist".into() };
+        let log = Trainer::build(&cfg)?.run()?;
+        report(&log);
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` to demo the \
+                  PJRT HLO backend)");
+    }
+    Ok(())
+}
+
+fn report(log: &lmdfl::metrics::RunLog) {
+    let first = log.records.first().unwrap();
+    let last = log.records.last().unwrap();
+    println!(
+        "rounds {:3}: loss {} -> {}, accuracy {}, bits/link {}, \
+         mean distortion {}",
+        log.records.len(),
+        fnum(first.loss),
+        fnum(last.loss),
+        fnum(log.final_accuracy().unwrap_or(f64::NAN)),
+        last.bits_per_link,
+        fnum(
+            log.records.iter().map(|r| r.distortion).sum::<f64>()
+                / log.records.len() as f64
+        ),
+    );
+}

@@ -1,0 +1,194 @@
+"""AOT compile path: lower every L2 entry point to HLO TEXT artifacts.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits artifacts/<name>.hlo.txt plus artifacts/manifest.json describing every
+artifact's I/O shapes so the Rust runtime can bind buffers without any
+Python at run time.
+
+HLO *text* (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/ and gen_hlo.py there.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import lm_quant as LQ
+
+# ---------------------------------------------------------------------------
+# Presets — baked shapes. The Rust side reads these from manifest.json.
+# ---------------------------------------------------------------------------
+
+BATCH = 32
+MLP_DIMS = [784, 256, 128, 10]
+CNN_MNIST = dict(in_ch=1, img=28, c1=8, c2=16, fc=128, classes=10)
+CNN_CIFAR = dict(in_ch=3, img=32, c1=16, c2=32, fc=256, classes=10)
+TRANSFORMER = dict(vocab=256, d=128, layers=2, heads=4, dff=512,
+                   batch=8, seq=64)
+QUANT_D = 65536            # flat-vector length for the LM quantizer artifacts
+QUANT_S = [16, 64]         # level counts baked into quantizer artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_entry(name, arr_spec):
+    return {
+        "name": name,
+        "shape": list(arr_spec.shape),
+        "dtype": str(arr_spec.dtype),
+    }
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.manifest = {"artifacts": {}}
+
+    def emit(self, name: str, fn, specs, meta: dict, out_names=None):
+        """Lower fn(*specs) and write <name>.hlo.txt + manifest entry."""
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_avals)
+        entry = {
+            "file": fname,
+            "inputs": [_shape_entry(n, s) for n, s in specs],
+            "outputs": [
+                _shape_entry(
+                    out_names[i] if out_names else f"out{i}", o)
+                for i, o in enumerate(outs)
+            ],
+        }
+        entry.update(meta)
+        self.manifest["artifacts"][name] = entry
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def finish(self):
+        path = os.path.join(self.outdir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.manifest['artifacts'])} "
+              "artifacts)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def emit_classifier(em: Emitter, name: str, spec, loss_fn, forward,
+                    feat: int, meta: dict):
+    step = M.make_sgd_step(loss_fn)
+    ev = M.make_eval(forward)
+    gradf = M.make_grad_fn(loss_fn)
+    p = spec.total
+    io = [("params", f32(p)), ("x", f32(BATCH, feat)), ("y", i32(BATCH))]
+    meta = dict(meta, params=p, batch=BATCH, features=feat)
+    em.emit(f"{name}_step", step, io + [("lr", f32())],
+            dict(meta, kind="step"), out_names=["params", "loss"])
+    em.emit(f"{name}_eval", ev, io, dict(meta, kind="eval"),
+            out_names=["loss", "correct"])
+    em.emit(f"{name}_grad", gradf, io, dict(meta, kind="grad"),
+            out_names=["grad", "loss"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-group filter "
+                         "(mlp,cnn_mnist,cnn_cifar,transformer,quant)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(group):
+        return only is None or group in only
+
+    em = Emitter(args.out)
+
+    if want("mlp"):
+        print("lowering MLP (synth-MNIST sweep model)")
+        spec, loss_fn, fwd = M.make_mlp(MLP_DIMS)
+        emit_classifier(em, "mlp_mnist", spec, loss_fn, fwd, MLP_DIMS[0],
+                        {"model": "mlp", "dims": MLP_DIMS,
+                         "tensors": spec.manifest()["tensors"]})
+
+    if want("cnn_mnist"):
+        print("lowering CNN / synth-MNIST")
+        c = CNN_MNIST
+        spec, loss_fn, fwd = M.make_cnn(**c)
+        emit_classifier(em, "cnn_mnist", spec, loss_fn, fwd,
+                        c["in_ch"] * c["img"] ** 2,
+                        {"model": "cnn", "cnn": c,
+                         "tensors": spec.manifest()["tensors"]})
+
+    if want("cnn_cifar"):
+        print("lowering CNN / synth-CIFAR")
+        c = CNN_CIFAR
+        spec, loss_fn, fwd = M.make_cnn(**c)
+        emit_classifier(em, "cnn_cifar", spec, loss_fn, fwd,
+                        c["in_ch"] * c["img"] ** 2,
+                        {"model": "cnn", "cnn": c,
+                         "tensors": spec.manifest()["tensors"]})
+
+    if want("transformer"):
+        print("lowering transformer LM (e2e driver)")
+        t = TRANSFORMER
+        spec, loss_fn = M.make_transformer(
+            t["vocab"], t["d"], t["layers"], t["heads"], t["dff"])
+        step = M.make_lm_step(loss_fn)
+        ev = M.make_lm_eval(loss_fn)
+        p = spec.total
+        tok = i32(t["batch"], t["seq"] + 1)
+        meta = {"model": "transformer", "transformer": t, "params": p}
+        em.emit("transformer_step", step,
+                [("params", f32(p)), ("tokens", tok), ("lr", f32())],
+                dict(meta, kind="lm_step"), out_names=["params", "loss"])
+        em.emit("transformer_eval", ev,
+                [("params", f32(p)), ("tokens", tok)],
+                dict(meta, kind="lm_eval"), out_names=["loss"])
+
+    if want("quant"):
+        for s in QUANT_S:
+            print(f"lowering LM quantizer kernels (s={s}, d={QUANT_D})")
+            em.emit(
+                f"lm_quantize_s{s}",
+                lambda v, lev, bnd: LQ.lm_quantize(v, lev, bnd),
+                [("v", f32(QUANT_D)), ("levels", f32(s)),
+                 ("boundaries", f32(s + 1))],
+                {"kind": "lm_quantize", "s": s, "d": QUANT_D},
+                out_names=["q", "distortion"])
+            em.emit(
+                f"lloyd_iter_s{s}",
+                lambda r, bnd, s=s: LQ.lloyd_iter(r, bnd, s),
+                [("r", f32(QUANT_D)), ("boundaries", f32(s + 1))],
+                {"kind": "lloyd_iter", "s": s, "d": QUANT_D},
+                out_names=["levels", "boundaries"])
+
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

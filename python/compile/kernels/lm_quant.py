@@ -1,0 +1,159 @@
+"""L1 Pallas kernels for the Lloyd-Max quantizer (the paper's hot spot).
+
+Two kernels, both tiled over the flat parameter-difference vector:
+
+* `lm_assign` — bucketize each normalized magnitude r_i into its Lloyd-Max
+  bin and emit the dequantized level (Algorithm 1 step 8). The per-element
+  bin search is expressed as a broadcast compare against the interior
+  boundaries followed by a row-sum — an O(s) chain of VPU compare+adds,
+  which on TPU vectorizes across the (8, 128) lanes; no gather is needed
+  because the level lookup is a one-hot contraction that maps to the MXU.
+
+* `lm_stats` — per-bin sum and count of r (the sufficient statistics for
+  one empirical Lloyd-Max centroid iteration, Eq. 17). Grid-sequential
+  accumulation into the output ref (TPU "arbitrary" grid semantics): each
+  chunk adds its partial histogram.
+
+Both run `interpret=True` (CPU PJRT cannot run Mosaic custom-calls) and are
+validated against `ref.py` oracles by pytest/hypothesis sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk of the flat vector processed per grid step. At s <= 256 the
+# (CHUNK, s) compare matrix is CHUNK*s*4 bytes = 1 MiB @ s=256 — the
+# working set that has to fit VMEM alongside levels/boundaries.
+CHUNK = 1024
+
+
+def _assign_kernel(r_ref, inner_ref, levels_ref, o_ref):
+    r = r_ref[...]                      # (CHUNK,)
+    inner = inner_ref[...]              # (s-1,) interior boundaries
+    levels = levels_ref[...]            # (s,)
+    s = levels.shape[0]
+    # idx_i = #{m : r_i > inner_m}  ==  bin index in [0, s)
+    cmp = (r[:, None] > inner[None, :]).astype(jnp.int32)
+    idx = jnp.sum(cmp, axis=1)
+    # one-hot contraction instead of gather: MXU-friendly
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, s), 1))
+    o_ref[...] = jnp.sum(onehot.astype(jnp.float32) * levels[None, :], axis=1)
+
+
+def _stats_kernel(r_ref, inner_ref, sum_ref, cnt_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    r = r_ref[...]
+    inner = inner_ref[...]
+    s = sum_ref.shape[0]
+    cmp = (r[:, None] > inner[None, :]).astype(jnp.int32)
+    idx = jnp.sum(cmp, axis=1)
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, s), 1))
+    oh = onehot.astype(jnp.float32)
+    sum_ref[...] += jnp.sum(oh * r[:, None], axis=0)
+    cnt_ref[...] += jnp.sum(oh, axis=0)
+
+
+def _pad1(x: jnp.ndarray, mult: int, value: float) -> jnp.ndarray:
+    p = (-x.shape[0]) % mult
+    if p == 0:
+        return x
+    return jnp.pad(x, (0, p), constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lm_assign(r: jnp.ndarray, levels: jnp.ndarray, boundaries: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    """Dequantized Lloyd-Max assignment of (d,) magnitudes r in [0,1]."""
+    d = r.shape[0]
+    rp = _pad1(r.astype(jnp.float32), CHUNK, 0.0)
+    inner = boundaries[1:-1].astype(jnp.float32)
+    out = pl.pallas_call(
+        _assign_kernel,
+        grid=(rp.shape[0] // CHUNK,),
+        in_specs=[
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec(inner.shape, lambda i: (0,)),
+            pl.BlockSpec(levels.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((CHUNK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(rp.shape, jnp.float32),
+        interpret=interpret,
+    )(rp, inner, levels.astype(jnp.float32))
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def lm_stats(r: jnp.ndarray, boundaries: jnp.ndarray, s: int,
+             interpret: bool = True):
+    """Per-bin (sum, count) of (d,) magnitudes r under `boundaries`.
+
+    Padding: tail elements are set to 2.0 — every interior boundary is
+    <= 1, so all npad phantom elements land deterministically in the last
+    bin; the wrapper subtracts exactly (2.0 * npad, npad) from bin s-1,
+    making the result exact for any d.
+    """
+    d = r.shape[0]
+    rp = _pad1(r.astype(jnp.float32), CHUNK, 2.0)
+    npad = rp.shape[0] - d
+    inner = boundaries[1:-1].astype(jnp.float32)
+    bin_sum, bin_cnt = pl.pallas_call(
+        _stats_kernel,
+        grid=(rp.shape[0] // CHUNK,),
+        in_specs=[
+            pl.BlockSpec((CHUNK,), lambda i: (i,)),
+            pl.BlockSpec(inner.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rp, inner)
+    # Correct the phantom tail: padded values (2.0) all fell in the last bin.
+    correction_cnt = jnp.zeros((s,), jnp.float32).at[s - 1].set(float(npad))
+    correction_sum = jnp.zeros((s,), jnp.float32).at[s - 1].set(2.0 * npad)
+    return bin_sum - correction_sum, bin_cnt - correction_cnt
+
+
+def lloyd_iter(r: jnp.ndarray, boundaries: jnp.ndarray, s: int,
+               interpret: bool = True):
+    """One Lloyd-Max iteration (Algorithm 1 steps 4-5) on empirical data.
+
+    Kernel for the stats, plain jnp for the tiny (s,)-sized centroid /
+    midpoint arithmetic.
+    """
+    bin_sum, bin_cnt = lm_stats(r, boundaries, s, interpret=interpret)
+    mid = 0.5 * (boundaries[:-1] + boundaries[1:])
+    levels = jnp.where(bin_cnt > 0, bin_sum / jnp.maximum(bin_cnt, 1.0), mid)
+    inner = 0.5 * (levels[:-1] + levels[1:])
+    new_bounds = jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), inner, jnp.ones((1,), jnp.float32)])
+    return levels, new_bounds
+
+
+def lm_quantize(v: jnp.ndarray, levels: jnp.ndarray, boundaries: jnp.ndarray,
+                interpret: bool = True):
+    """Full LM vector quantizer (paper III-C3): norm + signs + levels.
+
+    Returns (q, distortion). This is the function AOT-lowered into
+    artifacts/lm_quantize_*.hlo.txt and benched against the Rust-native
+    quantizer.
+    """
+    norm = jnp.linalg.norm(v)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    r = jnp.abs(v) / safe
+    sign = jnp.where(v < 0, -1.0, 1.0)
+    q = norm * sign * lm_assign(r, levels, boundaries, interpret=interpret)
+    distortion = jnp.sum((q - v) ** 2)
+    return q, distortion

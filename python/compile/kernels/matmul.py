@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: tiled matmul with a Pallas backward pass.
+
+The dense layers of every L2 model route through `matmul()` below, so the
+Pallas kernel lowers into the same HLO artifact as the surrounding jax
+computation — forward AND backward (the custom_vjp's two gradient matmuls
+are the same kernel).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): 128x128 blocks match the
+MXU systolic array; the k-loop is the innermost grid dimension so each
+(i, j) output tile accumulates in VMEM scratch across k steps — the
+BlockSpec index maps express the HBM<->VMEM schedule the paper's CPU/PyTorch
+substrate left to the BLAS library. `interpret=True` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes. 128 matches both the MXU tile and the f32 VPU lane layout
+# (8, 128). Inputs not divisible by the block are padded by the wrapper.
+BM = 128
+BK = 128
+BN = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (BM, BN) output tile; accumulate over the k grid dimension."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    pm = (-x.shape[0]) % m
+    pn = (-x.shape[1]) % n
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """(M, K) @ (K, N) -> (M, N) via the tiled Pallas kernel.
+
+    Arbitrary shapes: inputs are zero-padded up to the block grid and the
+    result is sliced back. fp32 accumulation regardless of input dtype.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    ap = _pad_to(a.astype(jnp.float32), BM, BK)
+    bp = _pad_to(b.astype(jnp.float32), BK, BN)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // BM, np_ // BN, kp // BK)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul used by the L2 model dense layers."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # dA = g @ B^T ; dB = A^T @ g — both through the same Pallas kernel, so
+    # the backward pass of the AOT-lowered training step is also Pallas.
+    return matmul_pallas(g, b.T), matmul_pallas(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

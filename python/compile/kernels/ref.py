@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. pytest (python/tests/) asserts
+allclose between kernel and oracle across shape/dtype sweeps (hypothesis).
+This is the CORE correctness signal for layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle, fp32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def lm_assign_ref(r: jnp.ndarray, levels: jnp.ndarray,
+                  boundaries: jnp.ndarray) -> jnp.ndarray:
+    """Lloyd-Max assignment oracle.
+
+    r:          (d,) normalized magnitudes in [0, 1]
+    levels:     (s,) quantization levels, ascending
+    boundaries: (s+1,) bin edges, boundaries[0] = 0, boundaries[s] = 1
+
+    Element r_i is mapped to levels[j] where r_i falls in bin
+    (boundaries[j], boundaries[j+1]]  (r = 0 maps to the first level),
+    exactly the rule of Algorithm 1 step 8 in the paper.
+    """
+    s = levels.shape[0]
+    # index = number of interior boundaries strictly below r
+    idx = jnp.sum(r[:, None] > boundaries[None, 1:s], axis=1)
+    return levels[idx]
+
+
+def lm_stats_ref(r: jnp.ndarray, boundaries: jnp.ndarray, s: int):
+    """Per-bin (sum, count) oracle for one Lloyd-Max centroid step.
+
+    Returns (bin_sum[s], bin_cnt[s]) with the same binning rule as
+    lm_assign_ref. The centroid update of Eq. (17) on an empirical
+    distribution is then levels[j] = bin_sum[j] / max(bin_cnt[j], 1).
+    """
+    idx = jnp.sum(r[:, None] > boundaries[None, 1:s], axis=1)
+    onehot = (idx[:, None] == jnp.arange(s)[None, :]).astype(jnp.float32)
+    bin_sum = jnp.sum(onehot * r[:, None], axis=0)
+    bin_cnt = jnp.sum(onehot, axis=0)
+    return bin_sum, bin_cnt
+
+
+def lloyd_iter_ref(r: jnp.ndarray, boundaries: jnp.ndarray, s: int):
+    """One full Lloyd-Max iteration oracle (Algorithm 1 steps 4-5).
+
+    levels[j]  = centroid of bin j            (Eq. 17, empirical)
+    bounds[j]  = (levels[j] + levels[j+1])/2  (Eq. 16)
+    Empty bins keep their midpoint as the level so the sequence stays
+    monotone.
+    """
+    bin_sum, bin_cnt = lm_stats_ref(r, boundaries, s)
+    mid = 0.5 * (boundaries[:-1] + boundaries[1:])
+    levels = jnp.where(bin_cnt > 0, bin_sum / jnp.maximum(bin_cnt, 1.0), mid)
+    inner = 0.5 * (levels[:-1] + levels[1:])
+    new_bounds = jnp.concatenate(
+        [jnp.zeros((1,), r.dtype), inner, jnp.ones((1,), r.dtype)])
+    return levels, new_bounds
+
+
+def lm_quantize_ref(v: jnp.ndarray, levels: jnp.ndarray,
+                    boundaries: jnp.ndarray):
+    """LM vector quantizer oracle (paper section III-C3).
+
+    Decomposes v into (norm, signs, normalized magnitudes), assigns each
+    magnitude to its Lloyd-Max level, and reconstructs the dequantized
+    vector. Returns (q, distortion) with distortion = ||q - v||^2.
+    """
+    norm = jnp.linalg.norm(v)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    r = jnp.abs(v) / safe
+    sign = jnp.where(v < 0, -1.0, 1.0)
+    q = norm * sign * lm_assign_ref(r, levels, boundaries)
+    distortion = jnp.sum((q - v) ** 2)
+    return q, distortion

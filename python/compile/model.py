@@ -1,0 +1,310 @@
+"""L2: jax models (fwd/bwd) over a FLAT parameter vector.
+
+Every model here exposes the same interface so the Rust coordinator can
+drive any of them through one code path:
+
+    sgd_step(params[P], x, y, lr[]) -> (params'[P], loss[])
+    evaluate(params[P], x, y)       -> (loss[], correct[])
+
+Parameters live in a single flat f32 vector because the paper's quantizers
+(and the Rust L3 engine) operate on the flat exchanged buffer — the model
+unflattens internally with static slices. Dense layers route through the
+L1 Pallas matmul kernel (kernels/matmul.py) so the AOT-lowered HLO step
+contains the Pallas compute in both forward and backward.
+
+These functions are lowered ONCE by aot.py to artifacts/*.hlo.txt; python
+never runs on the training path.
+"""
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.matmul import matmul
+
+# ---------------------------------------------------------------------------
+# Flat parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+class ParamSpec:
+    """Named tensor layout inside the flat parameter vector."""
+
+    def __init__(self, entries: Sequence[Tuple[str, Tuple[int, ...]]]):
+        self.entries: List[Tuple[str, Tuple[int, ...]]] = list(entries)
+        self.offsets: Dict[str, Tuple[int, Tuple[int, ...]]] = {}
+        off = 0
+        for name, shape in self.entries:
+            size = 1
+            for dim in shape:
+                size *= dim
+            self.offsets[name] = (off, shape)
+            off += size
+        self.total = off
+
+    def get(self, flat: jnp.ndarray, name: str) -> jnp.ndarray:
+        off, shape = self.offsets[name]
+        size = 1
+        for dim in shape:
+            size *= dim
+        return flat[off:off + size].reshape(shape)
+
+    def manifest(self) -> dict:
+        return {
+            "total": self.total,
+            "tensors": [
+                {"name": n, "shape": list(s)} for n, s in self.entries
+            ],
+        }
+
+
+def _dense(spec: ParamSpec, flat: jnp.ndarray, name: str,
+           x: jnp.ndarray) -> jnp.ndarray:
+    """x @ W + b through the Pallas matmul kernel."""
+    w = spec.get(flat, name + ".w")
+    b = spec.get(flat, name + ".b")
+    return matmul(x, w) + b[None, :]
+
+
+def _xent(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper's MNIST-class workload, fast sweep model)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(dims: Sequence[int]) -> ParamSpec:
+    entries = []
+    for i in range(len(dims) - 1):
+        entries.append((f"l{i}.w", (dims[i], dims[i + 1])))
+        entries.append((f"l{i}.b", (dims[i + 1],)))
+    return ParamSpec(entries)
+
+
+def mlp_forward(spec: ParamSpec, dims: Sequence[int], flat: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    nlayer = len(dims) - 1
+    for i in range(nlayer):
+        h = _dense(spec, flat, f"l{i}", h)
+        if i + 1 < nlayer:
+            h = jax.nn.relu(h)
+    return h
+
+
+def make_mlp(dims: Sequence[int]):
+    spec = mlp_spec(dims)
+
+    def loss_fn(flat, x, y):
+        return _xent(mlp_forward(spec, dims, flat, x), y)
+
+    return spec, loss_fn, lambda flat, x: mlp_forward(spec, dims, flat, x)
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper section VI: "two different CNNs" for MNIST / CIFAR-10)
+# ---------------------------------------------------------------------------
+
+
+def cnn_spec(in_ch: int, img: int, c1: int, c2: int, fc: int,
+             classes: int) -> ParamSpec:
+    side = img // 4  # two 2x2 max-pools
+    return ParamSpec([
+        ("conv1.w", (c1, in_ch, 5, 5)),
+        ("conv1.b", (c1,)),
+        ("conv2.w", (c2, c1, 5, 5)),
+        ("conv2.b", (c2,)),
+        ("fc1.w", (c2 * side * side, fc)),
+        ("fc1.b", (fc,)),
+        ("fc2.w", (fc, classes)),
+        ("fc2.b", (classes,)),
+    ])
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """NCHW same-padding conv + bias."""
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out + b[None, :, None, None]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def cnn_forward(spec: ParamSpec, in_ch: int, img: int, flat: jnp.ndarray,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, in_ch*img*img) flat image rows -> logits."""
+    bsz = x.shape[0]
+    h = x.reshape(bsz, in_ch, img, img)
+    h = jax.nn.relu(_conv(h, spec.get(flat, "conv1.w"),
+                          spec.get(flat, "conv1.b")))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv(h, spec.get(flat, "conv2.w"),
+                          spec.get(flat, "conv2.b")))
+    h = _maxpool2(h)
+    h = h.reshape(bsz, -1)
+    h = jax.nn.relu(_dense(spec, flat, "fc1", h))
+    return _dense(spec, flat, "fc2", h)
+
+
+def make_cnn(in_ch: int, img: int, c1: int, c2: int, fc: int, classes: int):
+    spec = cnn_spec(in_ch, img, c1, c2, fc, classes)
+
+    def loss_fn(flat, x, y):
+        return _xent(cnn_forward(spec, in_ch, img, flat, x), y)
+
+    return spec, loss_fn, lambda flat, x: cnn_forward(spec, in_ch, img,
+                                                      flat, x)
+
+
+# ---------------------------------------------------------------------------
+# Tiny decoder-only transformer LM (end-to-end driver workload)
+# ---------------------------------------------------------------------------
+
+
+def transformer_spec(vocab: int, d: int, layers: int, dff: int) -> ParamSpec:
+    entries = [("embed", (vocab, d)), ("pos", (1024, d))]
+    for i in range(layers):
+        entries += [
+            (f"blk{i}.ln1.g", (d,)), (f"blk{i}.ln1.b", (d,)),
+            (f"blk{i}.qkv.w", (d, 3 * d)), (f"blk{i}.qkv.b", (3 * d,)),
+            (f"blk{i}.proj.w", (d, d)), (f"blk{i}.proj.b", (d,)),
+            (f"blk{i}.ln2.g", (d,)), (f"blk{i}.ln2.b", (d,)),
+            (f"blk{i}.ff1.w", (d, dff)), (f"blk{i}.ff1.b", (dff,)),
+            (f"blk{i}.ff2.w", (dff, d)), (f"blk{i}.ff2.b", (d,)),
+        ]
+    entries += [("lnf.g", (d,)), ("lnf.b", (d,)), ("head", (d, vocab))]
+    return ParamSpec(entries)
+
+
+def _layernorm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _mm2(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) x (d, e) through the Pallas kernel via a 2D reshape."""
+    bsz, s, d = x.shape
+    out = matmul(x.reshape(bsz * s, d), w) + b[None, :]
+    return out.reshape(bsz, s, -1)
+
+
+def transformer_forward(spec: ParamSpec, vocab: int, d: int, layers: int,
+                        heads: int, flat: jnp.ndarray,
+                        tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, S, vocab); causal attention."""
+    bsz, s = tokens.shape
+    hd = d // heads
+    h = spec.get(flat, "embed")[tokens] + spec.get(flat, "pos")[None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(layers):
+        pre = _layernorm(h, spec.get(flat, f"blk{i}.ln1.g"),
+                         spec.get(flat, f"blk{i}.ln1.b"))
+        qkv = _mm2(pre, spec.get(flat, f"blk{i}.qkv.w"),
+                   spec.get(flat, f"blk{i}.qkv.b"))
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def split_heads(t):
+            return t.reshape(bsz, s, heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = split_heads(q), split_heads(k), split_heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, s, d)
+        h = h + _mm2(ctx, spec.get(flat, f"blk{i}.proj.w"),
+                     spec.get(flat, f"blk{i}.proj.b"))
+        pre = _layernorm(h, spec.get(flat, f"blk{i}.ln2.g"),
+                         spec.get(flat, f"blk{i}.ln2.b"))
+        ff = jax.nn.gelu(_mm2(pre, spec.get(flat, f"blk{i}.ff1.w"),
+                              spec.get(flat, f"blk{i}.ff1.b")))
+        h = h + _mm2(ff, spec.get(flat, f"blk{i}.ff2.w"),
+                     spec.get(flat, f"blk{i}.ff2.b"))
+    h = _layernorm(h, spec.get(flat, "lnf.g"), spec.get(flat, "lnf.b"))
+    bszs = bsz * s
+    logits = matmul(h.reshape(bszs, d), spec.get(flat, "head"))
+    return logits.reshape(bsz, s, vocab)
+
+
+def make_transformer(vocab: int, d: int, layers: int, heads: int, dff: int):
+    spec = transformer_spec(vocab, d, layers, dff)
+
+    def loss_fn(flat, tokens, _y_unused=None):
+        """Next-token prediction over (B, S+1) token rows."""
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits = transformer_forward(spec, vocab, d, layers, heads, flat,
+                                     inp)
+        bsz, s, _ = logits.shape
+        return _xent(logits.reshape(bsz * s, vocab), tgt.reshape(bsz * s))
+
+    return spec, loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Shared step / eval wrappers (these are what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_sgd_step(loss_fn):
+    """(params, x, y, lr) -> (params', loss): one local SGD step, Eq. (3)."""
+
+    def step(params, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(params, x, y)
+        return params - lr * grad, loss
+
+    return step
+
+
+def make_grad_fn(loss_fn):
+    """(params, x, y) -> (grad, loss): for gradient-exchange variants."""
+
+    def gradf(params, x, y):
+        loss, grad = jax.value_and_grad(loss_fn)(params, x, y)
+        return grad, loss
+
+    return gradf
+
+
+def make_eval(forward):
+    """(params, x, y) -> (loss, correct-count) on one batch."""
+
+    def ev(params, x, y):
+        logits = forward(params, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(logz - picked)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y)
+                          .astype(jnp.float32))
+        return loss, correct
+
+    return ev
+
+
+def make_lm_step(loss_fn):
+    """(params, tokens, lr) -> (params', loss) for the transformer LM."""
+
+    def step(params, tokens, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(params, tokens)
+        return params - lr * grad, loss
+
+    return step
+
+
+def make_lm_eval(loss_fn):
+    def ev(params, tokens):
+        return (loss_fn(params, tokens),)
+
+    return ev

@@ -1,0 +1,193 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes, level counts and value distributions;
+assert_allclose against ref.py. This is the core L1 signal.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lm_quant as LQ
+from compile.kernels import matmul as MM
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _uniform_partition(s):
+    bnd = jnp.linspace(0.0, 1.0, s + 1).astype(jnp.float32)
+    lev = 0.5 * (bnd[:-1] + bnd[1:])
+    return lev, bnd
+
+
+def _rand_partition(rng, s):
+    """Random strictly-increasing boundaries in [0, 1] with valid levels."""
+    cuts = np.sort(rng.uniform(0.01, 0.99, size=s - 1)).astype(np.float32)
+    bnd = np.concatenate([[0.0], cuts, [1.0]]).astype(np.float32)
+    lev = (0.5 * (bnd[:-1] + bnd[1:])).astype(np.float32)
+    return jnp.array(lev), jnp.array(bnd)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.array(MM.matmul_pallas(jnp.array(a), jnp.array(b)))
+    want = np.array(ref.matmul_ref(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_block_multiple():
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(256, 128)).astype(np.float32)
+    b = rng.normal(size=(128, 384)).astype(np.float32)
+    got = np.array(MM.matmul_pallas(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_matches_jnp():
+    import jax
+
+    rng = np.random.default_rng(3)
+    a = jnp.array(rng.normal(size=(17, 33)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(33, 9)).astype(np.float32))
+
+    def f_pallas(a, b):
+        return jnp.sum(MM.matmul(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.matmul(a, b) ** 2)
+
+    ga = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    gr = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.array(ga[0]), np.array(gr[0]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.array(ga[1]), np.array(gr[1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# LM quantizer kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 5000),
+    s=st.sampled_from([2, 4, 8, 16, 50, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    uniform=st.booleans(),
+)
+def test_lm_assign_matches_ref(d, s, seed, uniform):
+    rng = np.random.default_rng(seed)
+    r = jnp.array(rng.uniform(0, 1, d).astype(np.float32))
+    lev, bnd = (_uniform_partition(s) if uniform
+                else _rand_partition(rng, s))
+    got = np.array(LQ.lm_assign(r, lev, bnd))
+    want = np.array(ref.lm_assign_ref(r, lev, bnd))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(1, 5000),
+    s=st.sampled_from([2, 4, 16, 50]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lm_stats_matches_ref(d, s, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.array(rng.uniform(0, 1, d).astype(np.float32))
+    lev, bnd = _rand_partition(rng, s)
+    gs, gc = LQ.lm_stats(r, bnd, s)
+    ws, wc = ref.lm_stats_ref(r, bnd, s)
+    np.testing.assert_allclose(np.array(gs), np.array(ws),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.array(gc), np.array(wc),
+                               rtol=0, atol=0.5)
+
+
+def test_lm_stats_counts_total():
+    rng = np.random.default_rng(0)
+    d, s = 3333, 16
+    r = jnp.array(rng.uniform(0, 1, d).astype(np.float32))
+    lev, bnd = _uniform_partition(s)
+    _, cnt = LQ.lm_stats(r, bnd, s)
+    assert float(jnp.sum(cnt)) == pytest.approx(d)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(2, 4000),
+    s=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_lm_quantize_matches_ref(d, s, seed, scale):
+    rng = np.random.default_rng(seed)
+    v = jnp.array((rng.normal(size=d) * scale).astype(np.float32))
+    lev, bnd = _uniform_partition(s)
+    gq, gd = LQ.lm_quantize(v, lev, bnd)
+    wq, wd = ref.lm_quantize_ref(v, lev, bnd)
+    np.testing.assert_allclose(np.array(gq), np.array(wq),
+                               rtol=1e-5, atol=1e-5 * scale)
+    np.testing.assert_allclose(float(gd), float(wd), rtol=1e-3, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(100, 5000),
+    s=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lloyd_iter_matches_ref_and_reduces_distortion(d, s, seed):
+    rng = np.random.default_rng(seed)
+    r = jnp.array(np.abs(rng.normal(size=d)).astype(np.float32))
+    r = r / jnp.max(r)
+    lev, bnd = _uniform_partition(s)
+    glev, gbnd = LQ.lloyd_iter(r, bnd, s)
+    wlev, wbnd = ref.lloyd_iter_ref(r, bnd, s)
+    np.testing.assert_allclose(np.array(glev), np.array(wlev),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(gbnd), np.array(wbnd),
+                               rtol=1e-4, atol=1e-4)
+    # Lloyd-Max iterations are monotone in distortion (Lemma 1)
+    def distortion(lev, bnd):
+        q = ref.lm_assign_ref(r, lev, bnd)
+        return float(jnp.sum((q - r) ** 2))
+
+    lev0 = 0.5 * (bnd[:-1] + bnd[1:])
+    d0 = distortion(lev0, bnd)
+    d1 = distortion(glev, gbnd)
+    assert d1 <= d0 * (1 + 1e-4)
+
+
+def test_lloyd_fixed_point_levels_are_centroids():
+    """After many iterations levels ~ bin centroids (Eq. 16-17)."""
+    rng = np.random.default_rng(1)
+    s = 8
+    r = jnp.array(rng.beta(2, 5, 20000).astype(np.float32))
+    lev, bnd = _uniform_partition(s)
+    for _ in range(40):
+        lev, bnd = LQ.lloyd_iter(r, bnd, s)
+    # levels at return are centroids of the PREVIOUS boundaries, so the
+    # fixed point is only approached (quadratically); allow ~1% slack.
+    ws, wc = ref.lm_stats_ref(r, bnd, s)
+    cent = np.array(ws) / np.maximum(np.array(wc), 1)
+    np.testing.assert_allclose(np.array(lev), cent, rtol=0.02, atol=0.01)
+    inner = 0.5 * (np.array(lev)[:-1] + np.array(lev)[1:])
+    np.testing.assert_allclose(np.array(bnd)[1:-1], inner,
+                               rtol=0.02, atol=0.01)

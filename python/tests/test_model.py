@@ -1,0 +1,171 @@
+"""L2 correctness: model shapes, loss descent, flat-param plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+def _params(rng, spec, scale=0.05):
+    return jnp.array(rng.normal(0, scale, spec.total).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+
+def test_param_spec_layout_roundtrip(rng):
+    spec = M.ParamSpec([("a", (3, 4)), ("b", (5,)), ("c", (2, 2, 2))])
+    assert spec.total == 12 + 5 + 8
+    flat = jnp.arange(spec.total, dtype=jnp.float32)
+    a = spec.get(flat, "a")
+    b = spec.get(flat, "b")
+    c = spec.get(flat, "c")
+    assert a.shape == (3, 4) and float(a[0, 0]) == 0.0
+    assert b.shape == (5,) and float(b[0]) == 12.0
+    assert c.shape == (2, 2, 2) and float(c[0, 0, 0]) == 17.0
+
+
+def test_param_spec_manifest():
+    spec = M.mlp_spec([4, 3, 2])
+    man = spec.manifest()
+    assert man["total"] == 4 * 3 + 3 + 3 * 2 + 2
+    assert man["tensors"][0] == {"name": "l0.w", "shape": [4, 3]}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_shapes(rng):
+    spec, loss_fn, fwd = M.make_mlp([20, 16, 10])
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(7, 20)).astype(np.float32))
+    assert fwd(p, x).shape == (7, 10)
+
+
+def test_mlp_loss_decreases(rng):
+    spec, loss_fn, fwd = M.make_mlp([20, 32, 5])
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(16, 20)).astype(np.float32))
+    y = jnp.array(rng.integers(0, 5, 16).astype(np.int32))
+    step = jax.jit(M.make_sgd_step(loss_fn))
+    p, l0 = step(p, x, y, jnp.float32(0.1))
+    for _ in range(15):
+        p, l = step(p, x, y, jnp.float32(0.1))
+    assert float(l) < float(l0)
+
+
+def test_mlp_eval_counts_correct(rng):
+    spec, loss_fn, fwd = M.make_mlp([8, 4])
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(10, 8)).astype(np.float32))
+    logits = fwd(p, x)
+    y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    ev = M.make_eval(fwd)
+    loss, correct = ev(p, x, y)
+    assert float(correct) == 10.0
+
+
+def test_grad_fn_matches_step(rng):
+    spec, loss_fn, _ = M.make_mlp([6, 5, 3])
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(4, 6)).astype(np.float32))
+    y = jnp.array(rng.integers(0, 3, 4).astype(np.int32))
+    g, l1 = M.make_grad_fn(loss_fn)(p, x, y)
+    p2, l2 = M.make_sgd_step(loss_fn)(p, x, y, jnp.float32(0.5))
+    np.testing.assert_allclose(np.array(p2), np.array(p - 0.5 * g),
+                               rtol=1e-5, atol=1e-6)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_shapes_mnist_like(rng):
+    spec, loss_fn, fwd = M.make_cnn(in_ch=1, img=28, c1=4, c2=8, fc=32,
+                                    classes=10)
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(3, 784)).astype(np.float32))
+    assert fwd(p, x).shape == (3, 10)
+
+
+def test_cnn_shapes_cifar_like(rng):
+    spec, loss_fn, fwd = M.make_cnn(in_ch=3, img=32, c1=4, c2=8, fc=32,
+                                    classes=10)
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(2, 3 * 32 * 32)).astype(np.float32))
+    assert fwd(p, x).shape == (2, 10)
+
+
+def test_cnn_loss_decreases(rng):
+    spec, loss_fn, fwd = M.make_cnn(in_ch=1, img=28, c1=2, c2=4, fc=16,
+                                    classes=4)
+    p = _params(rng, spec)
+    x = jnp.array(rng.normal(size=(8, 784)).astype(np.float32))
+    y = jnp.array(rng.integers(0, 4, 8).astype(np.int32))
+    step = jax.jit(M.make_sgd_step(loss_fn))
+    p, l0 = step(p, x, y, jnp.float32(0.05))
+    for _ in range(10):
+        p, l = step(p, x, y, jnp.float32(0.05))
+    assert float(l) < float(l0)
+
+
+# ---------------------------------------------------------------------------
+# Transformer
+# ---------------------------------------------------------------------------
+
+
+def test_transformer_shapes(rng):
+    spec, loss_fn = M.make_transformer(vocab=32, d=16, layers=1, heads=2,
+                                       dff=32)
+    p = _params(rng, spec)
+    tok = jnp.array(rng.integers(0, 32, (2, 9)).astype(np.int32))
+    logits = M.transformer_forward(spec, 32, 16, 1, 2, p, tok[:, :-1])
+    assert logits.shape == (2, 8, 32)
+
+
+def test_transformer_causality(rng):
+    """Changing a future token must not change past logits."""
+    spec, _ = M.make_transformer(vocab=16, d=8, layers=1, heads=1, dff=16)
+    p = _params(rng, spec)
+    tok = jnp.array(rng.integers(0, 16, (1, 8)).astype(np.int32))
+    tok2 = tok.at[0, 7].set((int(tok[0, 7]) + 1) % 16)
+    l1 = M.transformer_forward(spec, 16, 8, 1, 1, p, tok)
+    l2 = M.transformer_forward(spec, 16, 8, 1, 1, p, tok2)
+    np.testing.assert_allclose(np.array(l1[0, :7]), np.array(l2[0, :7]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_transformer_loss_decreases(rng):
+    spec, loss_fn = M.make_transformer(vocab=16, d=16, layers=1, heads=2,
+                                       dff=32)
+    p = _params(rng, spec)
+    # a memorizable repeating sequence
+    seq = np.tile(np.arange(8), 3)[:17]
+    tok = jnp.array(np.stack([seq, seq]).astype(np.int32))
+    step = jax.jit(M.make_lm_step(loss_fn))
+    p, l0 = step(p, tok, jnp.float32(0.1))
+    for _ in range(30):
+        p, l = step(p, tok, jnp.float32(0.1))
+    assert float(l) < float(l0)
+
+
+def test_lm_eval_matches_loss(rng):
+    spec, loss_fn = M.make_transformer(vocab=16, d=8, layers=1, heads=1,
+                                       dff=16)
+    p = _params(rng, spec)
+    tok = jnp.array(rng.integers(0, 16, (2, 9)).astype(np.int32))
+    (le,) = M.make_lm_eval(loss_fn)(p, tok)
+    assert float(le) == pytest.approx(float(loss_fn(p, tok)), rel=1e-6)

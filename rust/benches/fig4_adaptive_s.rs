@@ -1,0 +1,20 @@
+//! Fig. 4 bench: loss vs communicated bits under ascending / fixed /
+//! descending numbers of quantization levels (the §V motivation).
+//!
+//!   cargo bench --bench fig4_adaptive_s
+//!   LMDFL_FULL=1 cargo bench --bench fig4_adaptive_s
+
+use lmdfl::experiments::{fig4, fig8, Scale};
+
+fn main() {
+    println!("=== Fig. 4: adaptive vs fixed s (loss vs bits) ===");
+    let curves = fig4::run_mnist(Scale::from_env()).expect("fig4");
+    println!("{}", fig8::render_loss_vs_bits(&curves));
+    println!("{}", fig8::render_bits_per_element(&curves));
+    let target = curves
+        .iter()
+        .map(|c| c.log.records.last().unwrap().loss)
+        .fold(f64::MIN, f64::max)
+        * 1.1;
+    println!("{}", fig8::bits_to_target(&curves, target));
+}

@@ -1,0 +1,14 @@
+//! Fig. 6(e-h) bench: LM-DFL vs no-quant / ALQ / QSGD on synth-CIFAR
+//! (paper settings: s = 100, lower lr).
+//!
+//!   cargo bench --bench fig6_cifar
+//!   LMDFL_FULL=1 cargo bench --bench fig6_cifar
+
+use lmdfl::experiments::{fig6, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("=== Fig. 6 (e-h): synth-CIFAR, {scale:?} scale ===");
+    let curves = fig6::run_cifar(scale).expect("fig6 cifar");
+    println!("{}", fig6::render_panels(&curves, 100e6));
+}

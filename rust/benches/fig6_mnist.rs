@@ -1,0 +1,49 @@
+//! Fig. 6(a-d) bench: LM-DFL vs no-quant / ALQ / QSGD on synth-MNIST.
+//!
+//!   cargo bench --bench fig6_mnist          (quick scale)
+//!   LMDFL_FULL=1 cargo bench --bench fig6_mnist
+
+use lmdfl::experiments::{fig6, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    println!("=== Fig. 6 (a-d): synth-MNIST, {scale:?} scale ===");
+    let curves = fig6::run_mnist(scale).expect("fig6 mnist");
+    println!("{}", fig6::render_panels(&curves, 100e6));
+    summary(&curves);
+}
+
+fn summary(curves: &[lmdfl::experiments::Curve]) {
+    println!("headline ordering checks:");
+    let last = |label: &str| {
+        curves
+            .iter()
+            .find(|c| c.label.ends_with(label))
+            .unwrap()
+            .log
+            .records
+            .last()
+            .unwrap()
+            .clone()
+    };
+    let (lm, alq, qsgd, noq) = (
+        last("LM-DFL"),
+        last("ALQ"),
+        last("QSGD"),
+        last("no-quant"),
+    );
+    println!(
+        "  distortion: LM {:.5} <= ALQ {:.5} ? {}   LM <= QSGD {:.5} ? {}",
+        lm.distortion,
+        alq.distortion,
+        lm.distortion <= alq.distortion * 1.1,
+        qsgd.distortion,
+        lm.distortion <= qsgd.distortion,
+    );
+    println!(
+        "  bits/link:  LM {} << no-quant {} ? {}",
+        lm.bits_per_link,
+        noq.bits_per_link,
+        lm.bits_per_link * 2 < noq.bits_per_link,
+    );
+}

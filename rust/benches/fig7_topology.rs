@@ -1,0 +1,29 @@
+//! Fig. 7 bench: LM-DFL test accuracy under ζ ∈ {0, 0.87, 1} topologies.
+//!
+//!   cargo bench --bench fig7_topology
+//!   LMDFL_FULL=1 cargo bench --bench fig7_topology
+
+use lmdfl::experiments::{fig7, Scale};
+
+fn main() {
+    println!("=== Fig. 7: topology impact ===");
+    for (label, zeta) in fig7::zetas(10) {
+        println!(
+            "{label:<26} zeta={zeta:.4} alpha={:.3}",
+            lmdfl::linalg::eigen::alpha_of_zeta(zeta)
+        );
+    }
+    let curves = fig7::run(Scale::from_env()).expect("fig7");
+    println!("{}", fig7::render(&curves));
+    let accs: Vec<f64> = curves
+        .iter()
+        .map(|c| c.log.final_accuracy().unwrap_or(f64::NAN))
+        .collect();
+    println!(
+        "final accuracy: full {:.3} >= ring {:.3} >= disconnected {:.3} ? {}",
+        accs[0],
+        accs[1],
+        accs[2],
+        accs[0] >= accs[1] - 0.03 && accs[1] >= accs[2] - 0.03,
+    );
+}

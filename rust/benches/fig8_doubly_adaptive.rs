@@ -1,0 +1,31 @@
+//! Fig. 8 bench: doubly-adaptive DFL vs QSGD 2/4/8-bit, fixed + variable
+//! learning rates, with the bits-per-element schedule (panels a-f).
+//!
+//!   cargo bench --bench fig8_doubly_adaptive
+//!   LMDFL_FULL=1 cargo bench --bench fig8_doubly_adaptive
+
+use lmdfl::experiments::{fig8, Curve, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    type Runner = fn(Scale, bool) -> anyhow::Result<Vec<Curve>>;
+    let runners: [(&str, Runner); 2] = [
+        ("synth-MNIST", fig8::run_mnist),
+        ("synth-CIFAR", fig8::run_cifar),
+    ];
+    for (dataset, runner) in runners {
+        for variable_lr in [false, true] {
+            let tag = if variable_lr { "variable lr" } else { "fixed lr" };
+            println!("=== Fig. 8: {dataset}, {tag} ===");
+            let curves = runner(scale, variable_lr).expect("fig8");
+            println!("{}", fig8::render_loss_vs_bits(&curves));
+            println!("{}", fig8::render_bits_per_element(&curves));
+            let target = curves
+                .iter()
+                .map(|c| c.log.records.last().unwrap().loss)
+                .fold(f64::MIN, f64::max)
+                * 1.1;
+            println!("{}", fig8::bits_to_target(&curves, target));
+        }
+    }
+}

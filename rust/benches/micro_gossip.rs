@@ -1,0 +1,73 @@
+//! Micro-bench: end-to-end gossip round cost on the matrix engine and the
+//! threaded runtime — isolates L3 coordination overhead from model compute.
+//!
+//!   cargo bench --bench micro_gossip
+
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::config::{
+    DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind, TopologyKind,
+};
+use lmdfl::dfl::{NetOptions, Trainer};
+
+fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "bench".into(),
+        seed: 3,
+        nodes,
+        tau: 4,
+        rounds: 4,
+        batch_size: 32,
+        lr: LrSchedule::fixed(0.05),
+        topology: TopologyKind::Ring,
+        quantizer: quant,
+        dataset: DatasetKind::Blobs {
+            train: 64 * nodes,
+            test: 64,
+            dim: 64,
+            classes: 10,
+        },
+        backend: lmdfl::config::BackendKind::RustMlp {
+            hidden: vec![hidden],
+        },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1000, // exclude eval cost from the round timing
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    for &nodes in &[4usize, 10, 20] {
+        for quant in [
+            QuantizerKind::Full,
+            QuantizerKind::Qsgd { s: 16 },
+            QuantizerKind::LloydMax { s: 16, iters: 12 },
+        ] {
+            let c = cfg(nodes, 128, quant.clone());
+            let mut trainer = Trainer::build(&c).unwrap();
+            let mut k = 0usize;
+            b.run(
+                &format!("matrix round n={nodes} {}", quant.name()),
+                || {
+                    black_box(
+                        trainer.engine_mut().round(k).unwrap());
+                    k += 1;
+                },
+            );
+        }
+    }
+
+    // threaded runtime: full short runs (includes thread setup)
+    for &nodes in &[4usize, 10] {
+        let c = cfg(nodes, 64, QuantizerKind::LloydMax { s: 16, iters: 8 });
+        b.run(&format!("threaded 4-round run n={nodes}"), || {
+            black_box(
+                Trainer::run_threaded(
+                    &c,
+                    NetOptions { drop_prob: 0.0, eval_every: 1000 },
+                )
+                .unwrap(),
+            );
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Micro-bench: quantizer hot paths — quantize / dequantize / encode /
+//! decode throughput per quantizer and vector size. The L3 perf targets in
+//! DESIGN.md §Perf are tracked here.
+//!
+//!   cargo bench --bench micro_quant
+
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::quant::{
+    build_quantizer, codec, AlqQuantizer, LloydMaxQuantizer,
+    NaturalQuantizer, QsgdQuantizer, Quantizer,
+};
+use lmdfl::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0);
+
+    for &d in &[10_000usize, 100_000, 1_000_000] {
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        println!("--- d = {d} ---");
+
+        let mut lm = LloydMaxQuantizer::new(64, 12);
+        b.run_elems(&format!("lloyd_max s=64 quantize d={d}"), d as u64, || {
+            black_box(lm.quantize(&v, &mut rng));
+        });
+
+        let mut lm4 = LloydMaxQuantizer::new(4, 12);
+        b.run_elems(&format!("lloyd_max s=4 quantize d={d}"), d as u64, || {
+            black_box(lm4.quantize(&v, &mut rng));
+        });
+
+        let mut qsgd = QsgdQuantizer::new(64);
+        b.run_elems(&format!("qsgd s=64 quantize d={d}"), d as u64, || {
+            black_box(qsgd.quantize(&v, &mut rng));
+        });
+
+        let mut nat = NaturalQuantizer::new(16);
+        b.run_elems(&format!("natural s=16 quantize d={d}"), d as u64, || {
+            black_box(nat.quantize(&v, &mut rng));
+        });
+
+        let mut alq = AlqQuantizer::new(16);
+        b.run_elems(&format!("alq s=16 quantize d={d}"), d as u64, || {
+            black_box(alq.quantize(&v, &mut rng));
+        });
+
+        // codec
+        let msg = lm.quantize(&v, &mut rng);
+        b.run_elems(&format!("codec encode d={d}"), d as u64, || {
+            black_box(codec::encode(&msg));
+        });
+        let bytes = codec::encode(&msg);
+        b.run_elems(&format!("codec decode d={d}"), d as u64, || {
+            black_box(codec::decode(&bytes, |_| unreachable!()).unwrap());
+        });
+        let mut buf = vec![0.0f32; d];
+        b.run_elems(&format!("dequantize_into d={d}"), d as u64, || {
+            msg.dequantize_into(&mut buf);
+            black_box(&buf);
+        });
+    }
+
+    // level-count sensitivity of the LM fit
+    println!("--- lloyd-max fit cost vs s (d = 100k) ---");
+    let v: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();
+    for &s in &[4usize, 16, 64, 256, 1024] {
+        let mut q = build_quantizer(
+            &lmdfl::config::QuantizerKind::LloydMax { s, iters: 12 });
+        b.run_elems(&format!("lloyd_max quantize s={s}"), 100_000, || {
+            black_box(q.quantize(&v, &mut rng));
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Micro-bench: PJRT HLO executable dispatch — per-step latency of the AOT
+//! model step vs the pure-Rust backend, and the LM-quantize HLO kernel vs
+//! the native Rust quantizer (L1-vs-L3 comparison).
+//!
+//! Skips (cleanly) when artifacts/ is missing.
+//!
+//!   make artifacts && cargo bench --bench micro_runtime
+
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::dfl::backend::{LocalUpdate, RustMlpBackend};
+use lmdfl::quant::{LloydMaxQuantizer, Quantizer};
+use lmdfl::runtime::{
+    artifacts_available, artifacts_dir, literal_f32, HloBackend,
+    HloExecutor, Manifest,
+};
+use lmdfl::util::rng::Rng;
+
+fn main() {
+    if !artifacts_available() {
+        println!("artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let dir = artifacts_dir();
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0);
+
+    // ---- model step: HLO vs pure Rust ----------------------------------
+    let mut hlo = HloBackend::load(&dir, "mlp_mnist", 784, 10).unwrap();
+    let mut rust = RustMlpBackend::new(784, &[256, 128], 10);
+    assert_eq!(hlo.param_count(), rust.param_count(),
+        "manifest MLP dims drifted from the rust mirror");
+    let mut params = hlo.init_params(&mut rng);
+    let x: Vec<f32> =
+        (0..32 * 784).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<u32> = (0..32).map(|_| rng.below(10) as u32).collect();
+
+    b.run("hlo mlp_mnist step (B=32)", || {
+        black_box(hlo.step(&mut params, &x, &y, 0.01).unwrap());
+    });
+    let mut params2 = params.clone();
+    b.run("rust mlp step (B=32)", || {
+        black_box(rust.step(&mut params2, &x, &y, 0.01).unwrap());
+    });
+    b.run("hlo mlp_mnist evaluate (B=32)", || {
+        black_box(hlo.evaluate(&params, &x, &y).unwrap());
+    });
+
+    // ---- LM quantize: HLO Pallas kernel vs native Rust ------------------
+    let manifest = Manifest::load(&dir).unwrap();
+    if let Ok(info) = manifest.get("lm_quantize_s16") {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let exe = HloExecutor::compile(&client, info.clone()).unwrap();
+        let d = info.input("v").unwrap().elements();
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let bnd: Vec<f32> =
+            (0..=16).map(|j| j as f32 / 16.0).collect();
+        let lev: Vec<f32> =
+            (0..16).map(|j| (j as f32 + 0.5) / 16.0).collect();
+        let inputs = vec![
+            literal_f32(&v, &[d]).unwrap(),
+            literal_f32(&lev, &[16]).unwrap(),
+            literal_f32(&bnd, &[17]).unwrap(),
+        ];
+        b.run_elems("hlo lm_quantize s=16 (pallas)", d as u64, || {
+            black_box(exe.run(&inputs).unwrap());
+        });
+        let mut native = LloydMaxQuantizer::new(16, 12);
+        b.run_elems("rust lm quantize s=16 (incl. fit)", d as u64, || {
+            black_box(native.quantize(&v, &mut rng));
+        });
+    }
+}

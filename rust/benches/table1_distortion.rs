@@ -1,0 +1,47 @@
+//! Table I bench: quantization distortion of QSGD / natural / ALQ / LM-DFL
+//! vs the paper's analytical bounds, across d, s and value distributions.
+//!
+//!   cargo bench --bench table1_distortion
+//!   LMDFL_FULL=1 cargo bench ... for the full grid
+
+use lmdfl::experiments::table1;
+use lmdfl::experiments::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (ds, ss, trials) = match scale {
+        Scale::Quick => (vec![1000usize, 10_000], vec![4usize, 16, 64], 2),
+        Scale::Full => (
+            vec![1000usize, 10_000, 100_000],
+            vec![4usize, 16, 64, 256],
+            5,
+        ),
+    };
+    println!("=== Table I: normalized quantization distortion ===");
+    let mut rows = Vec::new();
+    for &d in &ds {
+        for &s in &ss {
+            for dist in ["gaussian", "laplace", "gradient"] {
+                rows.extend(table1::measure(d, s, dist, trials, 42));
+            }
+        }
+    }
+    println!("{}", table1::render(&rows));
+
+    // headline check: LM vs QSGD distortion at same s
+    println!(
+        "LM vs QSGD measured-distortion ratio (expect roughly an order of \
+         magnitude):"
+    );
+    for &s in &ss {
+        let rows = table1::measure(10_000, s, "gaussian", 3, 7);
+        let get = |name: &str| {
+            rows.iter().find(|r| r.quantizer == name).unwrap().measured
+        };
+        println!(
+            "  s={s:4}: QSGD/LM = {:.1}x   ALQ/LM = {:.1}x",
+            get("QSGD") / get("LM-DFL"),
+            get("ALQ") / get("LM-DFL"),
+        );
+    }
+}

@@ -1,0 +1,242 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bencher::run`]: auto-calibrated iteration counts, warmup, and a
+//! mean/std/min/p50/p95 report in criterion-like format. Figure benches
+//! also use it to time end-to-end rounds.
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// One benchmark's timing results (per-iteration seconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// optional elements-processed per iteration for throughput reporting
+    pub elems_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let v = self
+            .samples
+            .iter()
+            .map(|&x| (x - m) * (x - m))
+            .sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        v.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.sorted(), 0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.sorted(), 0.95)
+    }
+
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "{:<40} mean {:>12}  std {:>10}  min {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            fmt_time(self.mean()),
+            fmt_time(self.std()),
+            fmt_time(self.min()),
+            fmt_time(self.p50()),
+            fmt_time(self.p95()),
+        );
+        if let Some(n) = self.elems_per_iter {
+            let rate = n as f64 / self.mean();
+            line.push_str(&format!("  [{}/s]", fmt_count(rate)));
+        }
+        line
+    }
+}
+
+/// Pretty time: ns/µs/ms/s.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Pretty count: K/M/G suffixes.
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Benchmark runner.
+pub struct Bencher {
+    /// target seconds of measurement per benchmark
+    pub measure_secs: f64,
+    /// warmup seconds before measuring
+    pub warmup_secs: f64,
+    /// number of measured samples
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Honor quick runs: LMDFL_BENCH_QUICK=1 shrinks the budget so CI
+        // and `cargo bench` smoke passes stay fast.
+        let quick = std::env::var("LMDFL_BENCH_QUICK").is_ok();
+        Bencher {
+            measure_secs: if quick { 0.05 } else { 1.0 },
+            warmup_secs: if quick { 0.01 } else { 0.2 },
+            samples: if quick { 5 } else { 20 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, auto-calibrating inner iterations. `f` must do one unit of
+    /// work per call; use `black_box` on its result in the caller.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_elems(name, None, &mut f)
+    }
+
+    /// As [`run`], also recording an elements-per-iteration figure so the
+    /// report includes throughput.
+    pub fn run_elems<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elems: u64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.run_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn run_with_elems(
+        &mut self,
+        name: &str,
+        elems: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // warmup + calibration: find iters/sample so each sample ~
+        // measure_secs / samples
+        let mut iters_per_sample = 1u64;
+        let warm_deadline = Instant::now();
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if warm_deadline.elapsed().as_secs_f64() > self.warmup_secs
+                && dt * self.samples as f64 >= self.measure_secs * 0.5
+            {
+                break;
+            }
+            if dt * (self.samples as f64) < self.measure_secs {
+                iters_per_sample = (iters_per_sample * 2).min(1 << 30);
+            } else {
+                break;
+            }
+            if warm_deadline.elapsed().as_secs_f64() > self.warmup_secs * 10.0
+            {
+                break; // long single iterations: stop calibrating
+            }
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            elems_per_iter: elems,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+}
+
+/// Opaque value sink to stop the optimizer deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        std::env::set_var("LMDFL_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let expect_samples = b.samples;
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.samples.len(), expect_samples);
+        assert!(r.mean() >= 0.0);
+        assert!(r.min() <= r.p95());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+        assert_eq!(fmt_count(1500.0), "1.50K");
+        assert_eq!(fmt_count(2.5e6), "2.50M");
+    }
+
+    #[test]
+    fn result_stats_consistent() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            elems_per_iter: Some(10),
+        };
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert!((r.p50() - 2.0).abs() < 1e-12);
+        assert!(r.report().contains("/s]"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports `command [--key value] [--flag] [positional...]`, typed
+//! accessors with defaults, required options, and auto-generated usage.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// first non-flag token (subcommand), if any
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse tokens. `--key value` and `--key=value` are options; a `--key`
+    /// followed by another `--...` (or end) is a boolean flag. The first
+    /// positional token becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len()
+                    && !toks[i + 1].starts_with("--")
+                {
+                    out.options
+                        .insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, ArgError> {
+        self.get(name)
+            .ok_or_else(|| ArgError(format!("missing required --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize)
+        -> Result<usize, ArgError>
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError(format!("--{name} expects a number, got '{v}'"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("train --config cfg.json --verbose --rounds 50 extra");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("cfg.json"));
+        assert_eq!(a.get("rounds"), Some("50"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --lr=0.01 --s=16");
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get_usize("s", 0).unwrap(), 16);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --dry-run");
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,40 @@
+//! Configuration substrate: hand-written JSON + typed experiment schema.
+
+pub mod json;
+pub mod schema;
+
+pub use json::Json;
+pub use schema::{
+    BackendKind, ConfigError, DatasetKind, ExperimentConfig, LrSchedule,
+    QuantizerKind, TopologyKind,
+};
+
+use std::path::Path;
+
+/// Load an [`ExperimentConfig`] from a JSON file.
+pub fn load_config(path: &Path) -> anyhow::Result<ExperimentConfig> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    Ok(ExperimentConfig::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_config_from_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("lmdfl_test_config.json");
+        let cfg = ExperimentConfig::default();
+        std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+        let back = load_config(&path).unwrap();
+        assert_eq!(back, cfg);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_config_missing_file_errors() {
+        assert!(load_config(Path::new("/nonexistent/x.json")).is_err());
+    }
+}

@@ -1,0 +1,512 @@
+//! Typed experiment configuration (parsed from / serialized to JSON).
+//!
+//! A single [`ExperimentConfig`] drives a DFL run end-to-end: topology,
+//! quantizer, dataset, model backend, schedule. `lmdfl train --config x.json`
+//! consumes these; every example/bench builds them programmatically.
+
+use crate::config::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error: {0}")]
+pub struct ConfigError(pub String);
+
+fn bad(msg: impl Into<String>) -> ConfigError {
+    ConfigError(msg.into())
+}
+
+/// Network topology choices (paper Fig. 7 evaluates full/ring/disconnected).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopologyKind {
+    /// C = J: fully connected uniform averaging (ζ = 0).
+    Full,
+    /// Ring with uniform self+neighbour weights (paper's ζ≈0.87 at N=10
+    /// comes from a ring-like sparse graph).
+    Ring,
+    /// C = I: no communication (ζ = 1).
+    Disconnected,
+    /// Erdős–Rényi random graph with Metropolis–Hastings weights.
+    Random { p: f64 },
+    /// Star around node 0 with Metropolis–Hastings weights.
+    Star,
+    /// 2D torus grid (rows x cols = N) with Metropolis–Hastings weights.
+    Torus,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Full => "full",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Disconnected => "disconnected",
+            TopologyKind::Random { .. } => "random",
+            TopologyKind::Star => "star",
+            TopologyKind::Torus => "torus",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            TopologyKind::Random { p } => Json::obj(vec![
+                ("kind", Json::str("random")),
+                ("p", Json::num(*p)),
+            ]),
+            other => Json::obj(vec![("kind", Json::str(other.name()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get_str("kind")
+            .ok_or_else(|| bad("topology.kind missing"))?;
+        Ok(match kind {
+            "full" => TopologyKind::Full,
+            "ring" => TopologyKind::Ring,
+            "disconnected" => TopologyKind::Disconnected,
+            "star" => TopologyKind::Star,
+            "torus" => TopologyKind::Torus,
+            "random" => TopologyKind::Random {
+                p: j.get_f64("p").unwrap_or(0.4),
+            },
+            other => return Err(bad(format!("unknown topology '{other}'"))),
+        })
+    }
+}
+
+/// Quantizer choices (paper Table I + baselines of section VI).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantizerKind {
+    /// No quantization: full-precision exchange (paper's "DFL without
+    /// quantization" baseline; s = 16000 in their setup).
+    Full,
+    /// QSGD uniform stochastic quantizer [14].
+    Qsgd { s: usize },
+    /// Natural compression: binary-geometric levels [16].
+    Natural { s: usize },
+    /// ALQ: adaptive levels via coordinate descent [18].
+    Alq { s: usize },
+    /// Lloyd-Max quantizer (the paper's LM-DFL).
+    LloydMax { s: usize, iters: usize },
+    /// Doubly-adaptive: Lloyd-Max levels + ascending level count (Eq. 37).
+    DoublyAdaptive { s1: usize, iters: usize, s_max: usize },
+}
+
+impl QuantizerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantizerKind::Full => "full",
+            QuantizerKind::Qsgd { .. } => "qsgd",
+            QuantizerKind::Natural { .. } => "natural",
+            QuantizerKind::Alq { .. } => "alq",
+            QuantizerKind::LloydMax { .. } => "lloyd_max",
+            QuantizerKind::DoublyAdaptive { .. } => "doubly_adaptive",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::str(self.name()))];
+        match self {
+            QuantizerKind::Full => {}
+            QuantizerKind::Qsgd { s }
+            | QuantizerKind::Natural { s }
+            | QuantizerKind::Alq { s } => {
+                pairs.push(("s", Json::num(*s as f64)));
+            }
+            QuantizerKind::LloydMax { s, iters } => {
+                pairs.push(("s", Json::num(*s as f64)));
+                pairs.push(("iters", Json::num(*iters as f64)));
+            }
+            QuantizerKind::DoublyAdaptive { s1, iters, s_max } => {
+                pairs.push(("s1", Json::num(*s1 as f64)));
+                pairs.push(("iters", Json::num(*iters as f64)));
+                pairs.push(("s_max", Json::num(*s_max as f64)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get_str("kind")
+            .ok_or_else(|| bad("quantizer.kind missing"))?;
+        let s = || j.get_usize("s").unwrap_or(16);
+        Ok(match kind {
+            "full" => QuantizerKind::Full,
+            "qsgd" => QuantizerKind::Qsgd { s: s() },
+            "natural" => QuantizerKind::Natural { s: s() },
+            "alq" => QuantizerKind::Alq { s: s() },
+            "lloyd_max" => QuantizerKind::LloydMax {
+                s: s(),
+                iters: j.get_usize("iters").unwrap_or(12),
+            },
+            "doubly_adaptive" => QuantizerKind::DoublyAdaptive {
+                s1: j.get_usize("s1").unwrap_or(4),
+                iters: j.get_usize("iters").unwrap_or(12),
+                s_max: j.get_usize("s_max").unwrap_or(4096),
+            },
+            other => return Err(bad(format!("unknown quantizer '{other}'"))),
+        })
+    }
+}
+
+/// Synthetic dataset choices (§Substitutions in DESIGN.md).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetKind {
+    /// Procedural 28x28 grayscale digit glyphs, 10 classes.
+    SynthMnist { train: usize, test: usize },
+    /// Procedural 3x32x32 class-conditioned textures, 10 classes.
+    SynthCifar { train: usize, test: usize },
+    /// Gaussian blobs in `dim` dimensions, `classes` classes.
+    Blobs { train: usize, test: usize, dim: usize, classes: usize },
+}
+
+impl DatasetKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthMnist { .. } => "synth_mnist",
+            DatasetKind::SynthCifar { .. } => "synth_cifar",
+            DatasetKind::Blobs { .. } => "blobs",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            DatasetKind::SynthMnist { train, test }
+            | DatasetKind::SynthCifar { train, test } => Json::obj(vec![
+                ("kind", Json::str(self.name())),
+                ("train", Json::num(*train as f64)),
+                ("test", Json::num(*test as f64)),
+            ]),
+            DatasetKind::Blobs { train, test, dim, classes } => Json::obj(vec![
+                ("kind", Json::str("blobs")),
+                ("train", Json::num(*train as f64)),
+                ("test", Json::num(*test as f64)),
+                ("dim", Json::num(*dim as f64)),
+                ("classes", Json::num(*classes as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get_str("kind")
+            .ok_or_else(|| bad("dataset.kind missing"))?;
+        let train = j.get_usize("train").unwrap_or(2000);
+        let test = j.get_usize("test").unwrap_or(500);
+        Ok(match kind {
+            "synth_mnist" => DatasetKind::SynthMnist { train, test },
+            "synth_cifar" => DatasetKind::SynthCifar { train, test },
+            "blobs" => DatasetKind::Blobs {
+                train,
+                test,
+                dim: j.get_usize("dim").unwrap_or(32),
+                classes: j.get_usize("classes").unwrap_or(10),
+            },
+            other => return Err(bad(format!("unknown dataset '{other}'"))),
+        })
+    }
+}
+
+/// Which local-update backend executes the SGD steps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendKind {
+    /// Pure-Rust MLP with hand-derived gradients (fast sweeps).
+    RustMlp { hidden: Vec<usize> },
+    /// AOT-compiled HLO artifact executed via PJRT (the production path).
+    Hlo { artifact: String },
+}
+
+impl BackendKind {
+    pub fn to_json(&self) -> Json {
+        match self {
+            BackendKind::RustMlp { hidden } => Json::obj(vec![
+                ("kind", Json::str("rust_mlp")),
+                ("hidden", Json::arr_usize(hidden)),
+            ]),
+            BackendKind::Hlo { artifact } => Json::obj(vec![
+                ("kind", Json::str("hlo")),
+                ("artifact", Json::str(artifact)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get_str("kind")
+            .ok_or_else(|| bad("backend.kind missing"))?;
+        Ok(match kind {
+            "rust_mlp" => {
+                let hidden = j
+                    .get("hidden")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter().filter_map(Json::as_usize).collect()
+                    })
+                    .unwrap_or_else(|| vec![64]);
+                BackendKind::RustMlp { hidden }
+            }
+            "hlo" => BackendKind::Hlo {
+                artifact: j
+                    .get_str("artifact")
+                    .ok_or_else(|| bad("backend.artifact missing"))?
+                    .to_string(),
+            },
+            other => return Err(bad(format!("unknown backend '{other}'"))),
+        })
+    }
+}
+
+/// Learning-rate schedule. The paper evaluates fixed η and a variable η_k
+/// decaying 20% every 10 iterations (Fig. 8).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f64,
+    /// multiplicative decay applied every `decay_every` rounds (1.0 = fixed)
+    pub decay: f64,
+    pub decay_every: usize,
+}
+
+impl LrSchedule {
+    pub fn fixed(base: f64) -> Self {
+        LrSchedule { base, decay: 1.0, decay_every: 1 }
+    }
+
+    /// Paper Fig. 8 variable rate: −20% per 10 iterations.
+    pub fn paper_variable(base: f64) -> Self {
+        LrSchedule { base, decay: 0.8, decay_every: 10 }
+    }
+
+    /// η_k for round k (0-based).
+    pub fn at(&self, round: usize) -> f64 {
+        let steps = if self.decay_every == 0 {
+            0
+        } else {
+            round / self.decay_every
+        };
+        self.base * self.decay.powi(steps as i32)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", Json::num(self.base)),
+            ("decay", Json::num(self.decay)),
+            ("decay_every", Json::num(self.decay_every as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        Ok(LrSchedule {
+            base: j.get_f64("base").ok_or_else(|| bad("lr.base missing"))?,
+            decay: j.get_f64("decay").unwrap_or(1.0),
+            decay_every: j.get_usize("decay_every").unwrap_or(1),
+        })
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// number of nodes N
+    pub nodes: usize,
+    /// local updates per round (paper τ)
+    pub tau: usize,
+    /// total communication rounds K
+    pub rounds: usize,
+    pub batch_size: usize,
+    pub lr: LrSchedule,
+    pub topology: TopologyKind,
+    pub quantizer: QuantizerKind,
+    pub dataset: DatasetKind,
+    pub backend: BackendKind,
+    /// fraction of samples assigned by-label (paper: 0.5 non-IID split)
+    pub noniid_fraction: f64,
+    /// link rate used to convert bits to "time progression" (paper: 100 Mbps)
+    pub link_bps: f64,
+    /// evaluate global loss/accuracy every this many rounds
+    pub eval_every: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 0,
+            nodes: 10,
+            tau: 4,
+            rounds: 100,
+            batch_size: 32,
+            lr: LrSchedule::fixed(0.05),
+            topology: TopologyKind::Ring,
+            quantizer: QuantizerKind::LloydMax { s: 16, iters: 12 },
+            dataset: DatasetKind::SynthMnist { train: 2000, test: 500 },
+            backend: BackendKind::RustMlp { hidden: vec![64] },
+            noniid_fraction: 0.5,
+            link_bps: 100e6,
+            eval_every: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.nodes == 0 {
+            return Err(bad("nodes must be > 0"));
+        }
+        if self.tau == 0 {
+            return Err(bad("tau must be > 0"));
+        }
+        if self.rounds == 0 {
+            return Err(bad("rounds must be > 0"));
+        }
+        if self.batch_size == 0 {
+            return Err(bad("batch_size must be > 0"));
+        }
+        if !(0.0..=1.0).contains(&self.noniid_fraction) {
+            return Err(bad("noniid_fraction must be in [0,1]"));
+        }
+        if self.lr.base <= 0.0 {
+            return Err(bad("lr.base must be > 0"));
+        }
+        if let TopologyKind::Random { p } = self.topology {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(bad("topology.p must be in [0,1]"));
+            }
+        }
+        match &self.quantizer {
+            QuantizerKind::Qsgd { s }
+            | QuantizerKind::Natural { s }
+            | QuantizerKind::Alq { s }
+            | QuantizerKind::LloydMax { s, .. } => {
+                if *s < 2 {
+                    return Err(bad("quantizer.s must be >= 2"));
+                }
+            }
+            QuantizerKind::DoublyAdaptive { s1, s_max, .. } => {
+                if *s1 < 2 || s_max < s1 {
+                    return Err(bad("need 2 <= s1 <= s_max"));
+                }
+            }
+            QuantizerKind::Full => {}
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("seed", Json::num(self.seed as f64)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("lr", self.lr.to_json()),
+            ("topology", self.topology.to_json()),
+            ("quantizer", self.quantizer.to_json()),
+            ("dataset", self.dataset.to_json()),
+            ("backend", self.backend.to_json()),
+            ("noniid_fraction", Json::num(self.noniid_fraction)),
+            ("link_bps", Json::num(self.link_bps)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let d = ExperimentConfig::default();
+        let cfg = ExperimentConfig {
+            name: j.get_str("name").unwrap_or("unnamed").to_string(),
+            seed: j.get_f64("seed").unwrap_or(0.0) as u64,
+            nodes: j.get_usize("nodes").unwrap_or(d.nodes),
+            tau: j.get_usize("tau").unwrap_or(d.tau),
+            rounds: j.get_usize("rounds").unwrap_or(d.rounds),
+            batch_size: j.get_usize("batch_size").unwrap_or(d.batch_size),
+            lr: match j.get("lr") {
+                Some(lj) => LrSchedule::from_json(lj)?,
+                None => d.lr.clone(),
+            },
+            topology: match j.get("topology") {
+                Some(tj) => TopologyKind::from_json(tj)?,
+                None => d.topology.clone(),
+            },
+            quantizer: match j.get("quantizer") {
+                Some(qj) => QuantizerKind::from_json(qj)?,
+                None => d.quantizer.clone(),
+            },
+            dataset: match j.get("dataset") {
+                Some(dj) => DatasetKind::from_json(dj)?,
+                None => d.dataset.clone(),
+            },
+            backend: match j.get("backend") {
+                Some(bj) => BackendKind::from_json(bj)?,
+                None => d.backend.clone(),
+            },
+            noniid_fraction: j
+                .get_f64("noniid_fraction")
+                .unwrap_or(d.noniid_fraction),
+            link_bps: j.get_f64("link_bps").unwrap_or(d.link_bps),
+            eval_every: j.get_usize("eval_every").unwrap_or(d.eval_every),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let j = Json::parse(text)
+            .map_err(|e| bad(format!("invalid json: {e}")))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "rt".into();
+        cfg.quantizer = QuantizerKind::DoublyAdaptive {
+            s1: 4,
+            iters: 9,
+            s_max: 1024,
+        };
+        cfg.topology = TopologyKind::Random { p: 0.3 };
+        cfg.lr = LrSchedule::paper_variable(0.002);
+        cfg.backend = BackendKind::Hlo { artifact: "mlp_mnist".into() };
+        let text = cfg.to_json().to_pretty();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ExperimentConfig::parse(r#"{"name": "x", "nodes": 4}"#)
+            .unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.tau, ExperimentConfig::default().tau);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ExperimentConfig::parse(r#"{"nodes": 0}"#).is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"quantizer": {"kind": "qsgd", "s": 1}}"#).is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"quantizer": {"kind": "bogus"}}"#).is_err());
+        assert!(ExperimentConfig::parse("not json").is_err());
+    }
+
+    #[test]
+    fn lr_schedule_paper_variable() {
+        let lr = LrSchedule::paper_variable(1.0);
+        assert!((lr.at(0) - 1.0).abs() < 1e-12);
+        assert!((lr.at(9) - 1.0).abs() < 1e-12);
+        assert!((lr.at(10) - 0.8).abs() < 1e-12);
+        assert!((lr.at(25) - 0.64).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,85 @@
+//! Gaussian-blob classification data — the fast dataset for unit tests,
+//! property tests and quick sweeps.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Class means drawn once (seeded), samples = mean + N(0, 0.3).
+pub fn generate(
+    train: usize,
+    test: usize,
+    dim: usize,
+    classes: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(classes >= 2 && dim >= 1);
+    let mut rng = Rng::new(seed ^ 0x5EED_0003);
+    let means: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..dim).map(|_| rng.normal_ms(0.0, 1.5) as f32).collect())
+        .collect();
+    let mut gen_split = |n: usize| {
+        let mut x = vec![0.0f32; n * dim];
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            for j in 0..dim {
+                x[i * dim + j] =
+                    means[c][j] + rng.normal_ms(0.0, 0.3) as f32;
+            }
+            y.push(c as u32);
+        }
+        (x, y)
+    };
+    let (train_x, train_y) = gen_split(train);
+    let (test_x, test_y) = gen_split(test);
+    Dataset { train_x, train_y, test_x, test_y, feat_dim: dim, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = generate(40, 12, 6, 4, 0);
+        assert_eq!(d.feat_dim, 6);
+        assert_eq!(d.classes, 4);
+        assert_eq!(d.train_n(), 40);
+        assert!(d.train_y.iter().all(|&y| y < 4));
+    }
+
+    #[test]
+    fn blobs_linearly_separable_enough() {
+        let d = generate(200, 100, 8, 3, 1);
+        // nearest class mean classifier should be near-perfect at std 0.3
+        let mut means = vec![vec![0.0f64; 8]; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..d.train_n() {
+            let y = d.train_y[i] as usize;
+            counts[y] += 1;
+            for (m, &v) in means[y].iter_mut().zip(d.train_row(i)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            m.iter_mut().for_each(|v| *v /= c as f64);
+        }
+        let mut correct = 0;
+        for i in 0..d.test_n() {
+            let row = d.test_row(i);
+            let pred = (0..3)
+                .min_by(|&a, &b| {
+                    let da: f64 = means[a].iter().zip(row)
+                        .map(|(m, &p)| (m - p as f64).powi(2)).sum();
+                    let db: f64 = means[b].iter().zip(row)
+                        .map(|(m, &p)| (m - p as f64).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == d.test_y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / d.test_n() as f64 > 0.9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Non-IID data partitioner (paper §VI-A2).
+//!
+//! "For half of the data samples, we allocate the data samples with the
+//! same label into a individual node. For another half of the data samples,
+//! we distribute the data samples uniformly." `noniid_fraction` generalizes
+//! the paper's 0.5: 0.0 = fully IID, 1.0 = fully by-label.
+
+use crate::util::rng::Rng;
+
+/// Assign train-set indices to `nodes` partitions.
+///
+/// The by-label share routes samples of label ℓ to node ℓ mod nodes; the
+/// rest are shuffled uniformly. Every node is guaranteed at least one
+/// sample (the engine needs a non-empty sampler).
+pub fn partition_noniid(
+    labels: &[u32],
+    nodes: usize,
+    noniid_fraction: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(nodes > 0);
+    assert!((0.0..=1.0).contains(&noniid_fraction));
+    let mut rng = Rng::new(seed ^ 0x5EED_0004);
+    let n = labels.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let cut = ((n as f64) * noniid_fraction).round() as usize;
+    let mut parts = vec![Vec::new(); nodes];
+    // by-label share
+    for &i in &order[..cut] {
+        let node = labels[i] as usize % nodes;
+        parts[node].push(i);
+    }
+    // uniform share
+    for (k, &i) in order[cut..].iter().enumerate() {
+        parts[k % nodes].push(i);
+    }
+    // guarantee non-empty: steal from the largest node
+    for victim in 0..nodes {
+        if parts[victim].is_empty() {
+            let donor = (0..nodes)
+                .max_by_key(|&j| parts[j].len())
+                .expect("nodes > 0");
+            if parts[donor].len() > 1 {
+                let idx = parts[donor].pop().unwrap();
+                parts[victim].push(idx);
+            }
+        }
+    }
+    parts
+}
+
+/// Label histogram of a partition — used by tests and the CLI `inspect`.
+pub fn label_histogram(
+    labels: &[u32],
+    part: &[usize],
+    classes: usize,
+) -> Vec<usize> {
+    let mut h = vec![0usize; classes];
+    for &i in part {
+        h[labels[i] as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels_balanced(n: usize, classes: usize) -> Vec<u32> {
+        (0..n).map(|i| (i % classes) as u32).collect()
+    }
+
+    #[test]
+    fn covers_all_indices_exactly_once() {
+        let labels = labels_balanced(100, 10);
+        let parts = partition_noniid(&labels, 10, 0.5, 0);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iid_partition_roughly_balanced() {
+        let labels = labels_balanced(1000, 10);
+        let parts = partition_noniid(&labels, 10, 0.0, 1);
+        for p in &parts {
+            assert_eq!(p.len(), 100);
+        }
+        // each node sees most classes
+        for p in &parts {
+            let h = label_histogram(&labels, p, 10);
+            let present = h.iter().filter(|&&c| c > 0).count();
+            assert!(present >= 8, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn fully_noniid_concentrates_labels() {
+        let labels = labels_balanced(1000, 10);
+        let parts = partition_noniid(&labels, 10, 1.0, 2);
+        for (node, p) in parts.iter().enumerate() {
+            let h = label_histogram(&labels, p, 10);
+            // all mass on label == node
+            assert_eq!(h[node], p.len(), "node {node}: {h:?}");
+        }
+    }
+
+    #[test]
+    fn paper_half_split_skews_but_covers() {
+        let labels = labels_balanced(1000, 10);
+        let parts = partition_noniid(&labels, 10, 0.5, 3);
+        for (node, p) in parts.iter().enumerate() {
+            let h = label_histogram(&labels, p, 10);
+            // own label over-represented vs perfect balance
+            assert!(
+                h[node] > p.len() / 10,
+                "node {node} own-label {h:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_nodes_than_samples_still_nonempty() {
+        let labels = labels_balanced(5, 3);
+        let parts = partition_noniid(&labels, 4, 0.5, 4);
+        let nonempty = parts.iter().filter(|p| !p.is_empty()).count();
+        assert!(nonempty >= 4.min(labels.len()), "{parts:?}");
+    }
+
+    #[test]
+    fn fewer_nodes_than_classes() {
+        let labels = labels_balanced(60, 10);
+        let parts = partition_noniid(&labels, 3, 1.0, 5);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 60);
+        for p in &parts {
+            assert!(!p.is_empty());
+        }
+    }
+}

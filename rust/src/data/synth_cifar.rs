@@ -1,0 +1,132 @@
+//! synth-CIFAR: procedural 3x32x32 color-texture classes.
+//!
+//! Each class is a distinct (orientation, spatial frequency, color palette)
+//! sinusoidal grating; samples draw random phase, slight frequency jitter
+//! and additive noise. Ten separable but non-trivial classes with the
+//! CIFAR-10 tensor shape (3x32x32, CHW flat), per DESIGN.md §Substitutions.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const CLASSES: usize = 10;
+
+/// Class texture parameters: (angle rad, cycles across image, rgb base).
+fn class_params(class: usize) -> (f32, f32, [f32; 3]) {
+    let angle = (class % 5) as f32 * std::f32::consts::PI / 5.0;
+    let freq = if class < 5 { 2.0 } else { 4.5 };
+    let palette: [[f32; 3]; 10] = [
+        [0.9, 0.2, 0.2],
+        [0.2, 0.9, 0.2],
+        [0.2, 0.3, 0.9],
+        [0.9, 0.8, 0.1],
+        [0.8, 0.2, 0.8],
+        [0.1, 0.8, 0.8],
+        [0.9, 0.5, 0.1],
+        [0.5, 0.5, 0.9],
+        [0.6, 0.9, 0.4],
+        [0.9, 0.4, 0.6],
+    ];
+    (angle, freq, palette[class % 10])
+}
+
+/// Render one sample into a CHW flat buffer of length 3*32*32.
+pub fn render_texture(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), CHANNELS * IMG * IMG);
+    let (angle, freq, rgb) = class_params(class % CLASSES);
+    let phase = rng.range(0.0, std::f64::consts::TAU) as f32;
+    let fjit = rng.range(0.9, 1.1) as f32;
+    let (ca, sa) = (angle.cos(), angle.sin());
+    let noise = 0.1f32;
+    for row in 0..IMG {
+        for col in 0..IMG {
+            let x = col as f32 / IMG as f32 - 0.5;
+            let y = row as f32 / IMG as f32 - 0.5;
+            let u = ca * x + sa * y;
+            let wave =
+                0.5 + 0.5 * (std::f32::consts::TAU * freq * fjit * u + phase)
+                    .sin();
+            for ch in 0..CHANNELS {
+                let n = rng.normal() as f32 * noise;
+                let v = (rgb[ch] * wave + n).clamp(0.0, 1.0);
+                out[ch * IMG * IMG + row * IMG + col] = v;
+            }
+        }
+    }
+}
+
+pub fn generate(train: usize, test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5EED_0002);
+    let feat = CHANNELS * IMG * IMG;
+    let mut gen_split = |n: usize| {
+        let mut x = vec![0.0f32; n * feat];
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % CLASSES;
+            render_texture(class, &mut rng, &mut x[i * feat..(i + 1) * feat]);
+            y.push(class as u32);
+        }
+        (x, y)
+    };
+    let (train_x, train_y) = gen_split(train);
+    let (test_x, test_y) = gen_split(test);
+    Dataset {
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+        feat_dim: feat,
+        classes: CLASSES,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_range_with_energy() {
+        let mut rng = Rng::new(0);
+        let mut buf = vec![0.0f32; CHANNELS * IMG * IMG];
+        for c in 0..CLASSES {
+            render_texture(c, &mut rng, &mut buf);
+            assert!(buf.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let energy: f32 = buf.iter().sum();
+            assert!(energy > 50.0, "class {c} energy {energy}");
+        }
+    }
+
+    #[test]
+    fn classes_have_distinct_color_signature() {
+        let mut rng = Rng::new(1);
+        let mut mean_rgb = vec![[0.0f64; 3]; CLASSES];
+        let mut buf = vec![0.0f32; CHANNELS * IMG * IMG];
+        for c in 0..CLASSES {
+            render_texture(c, &mut rng, &mut buf);
+            for ch in 0..3 {
+                let s: f32 =
+                    buf[ch * IMG * IMG..(ch + 1) * IMG * IMG].iter().sum();
+                mean_rgb[c][ch] = s as f64 / (IMG * IMG) as f64;
+            }
+        }
+        // at least one channel pair differs meaningfully between any two
+        // adjacent classes
+        for a in 0..CLASSES {
+            for b in (a + 1)..CLASSES {
+                let diff: f64 = (0..3)
+                    .map(|ch| (mean_rgb[a][ch] - mean_rgb[b][ch]).abs())
+                    .sum();
+                assert!(diff > 0.02, "classes {a},{b} too similar: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let d = generate(30, 10, 7);
+        assert_eq!(d.feat_dim, 3072);
+        assert_eq!(d.classes, 10);
+        assert_eq!(d.train_x.len(), 30 * 3072);
+    }
+}

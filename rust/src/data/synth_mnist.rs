@@ -1,0 +1,215 @@
+//! synth-MNIST: procedural 28x28 grayscale digit glyphs.
+//!
+//! Digits are rendered seven-segment style (segments of the classic LED
+//! layout), rasterized with thick anti-aliased strokes, then augmented per
+//! sample with random shift, scale, shear and pixel noise. Ten visually
+//! distinct, genuinely learnable classes with the exact MNIST shape
+//! (1x28x28), replacing the offline-unavailable MNIST per DESIGN.md
+//! §Substitutions.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 28;
+pub const CLASSES: usize = 10;
+
+/// Seven-segment truth table: segments a,b,c,d,e,f,g for digits 0-9.
+///    aaaa
+///   f    b
+///    gggg
+///   e    c
+///    dddd
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],     // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],    // 2
+    [true, true, true, true, false, false, true],    // 3
+    [false, true, true, false, false, true, true],   // 4
+    [true, false, true, true, false, true, true],    // 5
+    [true, false, true, true, true, true, true],     // 6
+    [true, true, true, false, false, false, false],  // 7
+    [true, true, true, true, true, true, true],      // 8
+    [true, true, true, true, false, true, true],     // 9
+];
+
+/// Segment endpoints in a unit box [0,1]^2 (x right, y down).
+const SEG_LINES: [[f32; 4]; 7] = [
+    [0.2, 0.1, 0.8, 0.1], // a (top)
+    [0.8, 0.1, 0.8, 0.5], // b (top right)
+    [0.8, 0.5, 0.8, 0.9], // c (bottom right)
+    [0.2, 0.9, 0.8, 0.9], // d (bottom)
+    [0.2, 0.5, 0.2, 0.9], // e (bottom left)
+    [0.2, 0.1, 0.2, 0.5], // f (top left)
+    [0.2, 0.5, 0.8, 0.5], // g (middle)
+];
+
+/// Distance from point to segment, in unit-box coordinates.
+fn seg_dist(px: f32, py: f32, l: &[f32; 4]) -> f32 {
+    let (x1, y1, x2, y2) = (l[0], l[1], l[2], l[3]);
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - x1) * dx + (py - y1) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let (cx, cy) = (x1 + t * dx, y1 + t * dy);
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+/// Render one digit with per-sample augmentation into a 784-length buffer.
+pub fn render_digit(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), IMG * IMG);
+    let segs = &SEGMENTS[digit % CLASSES];
+    // augmentation: shift, scale, shear, stroke width
+    let sx = rng.range(0.75, 1.1) as f32;
+    let sy = rng.range(0.75, 1.1) as f32;
+    let tx = rng.range(-0.08, 0.08) as f32;
+    let ty = rng.range(-0.08, 0.08) as f32;
+    let shear = rng.range(-0.15, 0.15) as f32;
+    let width = rng.range(0.05, 0.09) as f32;
+    let noise = 0.08f32;
+    for row in 0..IMG {
+        for col in 0..IMG {
+            // map pixel to unit box, inverse-transforming the augmentation
+            let px0 = (col as f32 + 0.5) / IMG as f32;
+            let py0 = (row as f32 + 0.5) / IMG as f32;
+            let px = (px0 - 0.5 - tx) / sx + 0.5;
+            let py = (py0 - 0.5 - ty) / sy + 0.5 - shear * (px0 - 0.5);
+            let mut dmin = f32::INFINITY;
+            for (s, line) in SEG_LINES.iter().enumerate() {
+                if segs[s] {
+                    dmin = dmin.min(seg_dist(px, py, line));
+                }
+            }
+            // soft stroke: 1 inside, fall off over ~1.5px
+            let ink = (1.0 - (dmin - width) / 0.05).clamp(0.0, 1.0);
+            let n = rng.normal() as f32 * noise;
+            out[row * IMG + col] = (ink + n).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Generate the dataset: labels uniform over the 10 digits.
+pub fn generate(train: usize, test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5EED_0001);
+    let feat = IMG * IMG;
+    let mut gen_split = |n: usize| {
+        let mut x = vec![0.0f32; n * feat];
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = i % CLASSES; // balanced classes
+            render_digit(digit, &mut rng, &mut x[i * feat..(i + 1) * feat]);
+            y.push(digit as u32);
+        }
+        (x, y)
+    };
+    let (train_x, train_y) = gen_split(train);
+    let (test_x, test_y) = gen_split(test);
+    Dataset {
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+        feat_dim: feat,
+        classes: CLASSES,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_range() {
+        let mut rng = Rng::new(0);
+        let mut buf = vec![0.0f32; IMG * IMG];
+        for d in 0..10 {
+            render_digit(d, &mut rng, &mut buf);
+            assert!(buf.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            // a digit must have meaningful ink
+            let ink: f32 = buf.iter().sum();
+            assert!(ink > 20.0, "digit {d} ink {ink}");
+        }
+    }
+
+    #[test]
+    fn one_and_eight_differ_substantially() {
+        let mut rng = Rng::new(1);
+        let mut one = vec![0.0f32; IMG * IMG];
+        let mut eight = vec![0.0f32; IMG * IMG];
+        render_digit(1, &mut rng, &mut one);
+        render_digit(8, &mut rng, &mut eight);
+        let ink1: f32 = one.iter().sum();
+        let ink8: f32 = eight.iter().sum();
+        assert!(ink8 > ink1 * 1.8, "8 ({ink8}) should have more ink than 1 ({ink1})");
+    }
+
+    #[test]
+    fn same_class_varies_between_samples() {
+        let mut rng = Rng::new(2);
+        let mut a = vec![0.0f32; IMG * IMG];
+        let mut b = vec![0.0f32; IMG * IMG];
+        render_digit(3, &mut rng, &mut a);
+        render_digit(3, &mut rng, &mut b);
+        let diff: f32 =
+            a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 5.0, "augmentation too weak: {diff}");
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let d = generate(100, 20, 3);
+        let mut counts = [0usize; 10];
+        for &y in &d.train_y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn nearest_centroid_separates_classes() {
+        // classes must be learnable: nearest-class-mean classifier on raw
+        // pixels should beat random (0.1) by a wide margin
+        let d = generate(400, 100, 4);
+        let feat = d.feat_dim;
+        let mut means = vec![vec![0.0f64; feat]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..d.train_n() {
+            let y = d.train_y[i] as usize;
+            counts[y] += 1;
+            for (m, &p) in means[y].iter_mut().zip(d.train_row(i)) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..d.test_n() {
+            let row = d.test_row(i);
+            let pred = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = means[a]
+                        .iter()
+                        .zip(row)
+                        .map(|(m, &p)| (m - p as f64).powi(2))
+                        .sum();
+                    let db: f64 = means[b]
+                        .iter()
+                        .zip(row)
+                        .map(|(m, &p)| (m - p as f64).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == d.test_y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.test_n() as f64;
+        assert!(acc > 0.6, "nearest-centroid accuracy only {acc}");
+    }
+}

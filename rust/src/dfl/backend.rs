@@ -1,0 +1,128 @@
+//! Local-update backend abstraction.
+//!
+//! The DFL engine drives τ SGD steps per round through [`LocalUpdate`];
+//! two implementations exist:
+//! * [`RustMlpBackend`] — the pure-Rust MLP (fast sweeps, tests)
+//! * `runtime::HloBackend` — the AOT-compiled PJRT path (production)
+
+use crate::models::mlp::{MlpModel, MlpScratch};
+use crate::util::rng::Rng;
+
+/// One node's compute engine: SGD steps + evaluation on flat params.
+///
+/// Deliberately NOT `Send`: the PJRT wrapper types hold raw pointers. The
+/// threaded runtime (dfl::net) takes a `Sync` *factory* and constructs each
+/// node's backend inside its own thread instead.
+pub trait LocalUpdate {
+    /// Flat parameter vector length.
+    fn param_count(&self) -> usize;
+
+    /// Expected feature dimension of a batch row.
+    fn input_dim(&self) -> usize;
+
+    /// Deterministic initial parameters (all nodes start identical —
+    /// paper §VI-A3 initializes x_{1,0} equal at every node).
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32>;
+
+    /// One SGD step in place on a batch; returns the batch loss.
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[u32],
+        lr: f32,
+    ) -> anyhow::Result<f64>;
+
+    /// Mean loss + number of correct predictions on a labeled set.
+    fn evaluate(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+    ) -> anyhow::Result<(f64, usize)>;
+}
+
+/// Pure-Rust MLP backend.
+pub struct RustMlpBackend {
+    model: MlpModel,
+    grad: Vec<f32>,
+    scratch: MlpScratch,
+}
+
+impl RustMlpBackend {
+    pub fn new(input_dim: usize, hidden: &[usize], classes: usize) -> Self {
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        let model = MlpModel::new(&dims);
+        let grad = vec![0.0f32; model.param_count()];
+        RustMlpBackend { model, grad, scratch: MlpScratch::default() }
+    }
+
+    pub fn model(&self) -> &MlpModel {
+        &self.model
+    }
+}
+
+impl LocalUpdate for RustMlpBackend {
+    fn param_count(&self) -> usize {
+        self.model.param_count()
+    }
+
+    fn input_dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        self.model.init_params(rng)
+    }
+
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[u32],
+        lr: f32,
+    ) -> anyhow::Result<f64> {
+        Ok(self.model.sgd_step(
+            params, x, y, lr, &mut self.grad, &mut self.scratch))
+    }
+
+    fn evaluate(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+    ) -> anyhow::Result<(f64, usize)> {
+        Ok(self.model.evaluate(params, x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_roundtrip() {
+        let mut b = RustMlpBackend::new(8, &[16], 3);
+        let mut rng = Rng::new(0);
+        let mut params = b.init_params(&mut rng);
+        assert_eq!(params.len(), b.param_count());
+        let x: Vec<f32> = (0..4 * 8).map(|_| rng.normal() as f32).collect();
+        let y = vec![0u32, 1, 2, 0];
+        let l0 = b.step(&mut params, &x, &y, 0.1).unwrap();
+        for _ in 0..30 {
+            b.step(&mut params, &x, &y, 0.1).unwrap();
+        }
+        let (l1, _) = b.evaluate(&params, &x, &y).unwrap();
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+
+    #[test]
+    fn init_params_deterministic_per_seed() {
+        let b = RustMlpBackend::new(4, &[], 2);
+        let p1 = b.init_params(&mut Rng::new(5));
+        let p2 = b.init_params(&mut Rng::new(5));
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,573 @@
+//! The LM-DFL / QDFL gossip engine (paper Algorithms 2 & 3).
+//!
+//! Implements the differential-quantized exchange in matrix form:
+//!
+//!   X̂_k     = X̂_{k-1,τ} + Q(X_k − X̂_{k-1,τ})      (mixing delta, Eq. 22)
+//!   X̂_{k,τ} = X̂_k      + Q(X_{k,τ} − X̂_k)        (local-update delta)
+//!   X_{k+1}  = X̂_{k,τ} · C                         (Eq. 21)
+//!
+//! Every round each node ships TWO quantized differentials per directed
+//! link (Algorithm 2 step 8), and the estimate recursion "X̂ += the two
+//! quantized deltas" is exactly Eq. (22). One deliberate deviation from
+//! the paper's literal reference points (documented in DESIGN.md
+//! §Deviations): the deltas are measured against the receiver-side
+//! *running estimate* (x̂) rather than the raw previous state
+//! (x_{k-1,τ}). The two are identical when quantization is exact, but the
+//! literal form lets estimate error accumulate as a random walk
+//! (E_{k+1} = E_k + e1 + e2, with e re-amplified through the mixing —
+//! empirically divergent at coarse s), whereas the estimate-referenced
+//! form is the standard error-feedback contraction (‖x − x̂‖ shrinks by
+//! √ω per message, ω < 1) that makes Theorem 1-style tracking actually
+//! hold. All nodes start from identical parameters and quantization is
+//! deterministic-broadcast, so X̂ is globally consistent and the matrix
+//! form is exact — the threaded message-passing runtime (dfl::net)
+//! reproduces the same protocol over real encoded bitstreams.
+
+use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::data::{BatchSampler, Dataset};
+use crate::dfl::backend::LocalUpdate;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::quant::adaptive::AdaptiveLevels;
+use crate::quant::{build_quantizer, Quantizer};
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Per-node state.
+struct NodeState {
+    /// x_k^(i): params after mixing (start of round)
+    params: Vec<f32>,
+    /// x̂^(i): globally consistent estimate column (error-feedback ref)
+    hat: Vec<f32>,
+    sampler: BatchSampler,
+    quantizer: Box<dyn Quantizer>,
+    adaptive: Option<AdaptiveLevels>,
+    rng: Rng,
+}
+
+/// Options beyond [`ExperimentConfig`] (failure injection, eval subsample).
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// cap on training samples used for the global-loss evaluation
+    pub eval_train_cap: usize,
+    /// cap on test samples for accuracy
+    pub eval_test_cap: usize,
+    /// probability a quantized message is dropped (failure injection; the
+    /// matrix engine models a drop as "receiver reuses the stale estimate",
+    /// i.e. the delta is skipped for everyone — a broadcast-level fault)
+    pub drop_prob: f64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            eval_train_cap: 2048,
+            eval_test_cap: 2048,
+            drop_prob: 0.0,
+        }
+    }
+}
+
+/// The matrix-form DFL engine.
+pub struct DflEngine {
+    pub cfg: ExperimentConfig,
+    pub topology: Topology,
+    pub dataset: Dataset,
+    nodes: Vec<NodeState>,
+    backends: Vec<Box<dyn LocalUpdate>>,
+    param_count: usize,
+    opts: EngineOptions,
+    rng: Rng,
+    /// scratch: mixing result
+    mix_buf: Vec<Vec<f32>>,
+    /// scratch: dequantized q1 per node
+    q1_buf: Vec<Vec<f32>>,
+}
+
+impl DflEngine {
+    /// Assemble an engine from parts (the [`crate::dfl::Trainer`] builder
+    /// is the friendlier entry point).
+    pub fn new(
+        cfg: ExperimentConfig,
+        topology: Topology,
+        dataset: Dataset,
+        backends: Vec<Box<dyn LocalUpdate>>,
+        opts: EngineOptions,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(backends.len() == cfg.nodes, "one backend per node");
+        let n = cfg.nodes;
+        let param_count = backends[0].param_count();
+        for b in &backends {
+            anyhow::ensure!(
+                b.param_count() == param_count,
+                "backends disagree on param_count"
+            );
+            anyhow::ensure!(
+                b.input_dim() == dataset.feat_dim,
+                "backend input dim {} != dataset feat dim {}",
+                b.input_dim(),
+                dataset.feat_dim
+            );
+        }
+        let mut rng = Rng::new(cfg.seed);
+        // paper: identical initial params at every node
+        let init = backends[0].init_params(&mut rng.split(0xBEEF));
+        let parts = crate::data::partition::partition_noniid(
+            &dataset.train_y,
+            n,
+            cfg.noniid_fraction,
+            cfg.seed,
+        );
+        let mut nodes = Vec::with_capacity(n);
+        for (i, part) in parts.into_iter().enumerate() {
+            let adaptive = match &cfg.quantizer {
+                QuantizerKind::DoublyAdaptive { s1, s_max, .. } => {
+                    Some(AdaptiveLevels::new(*s1, *s_max))
+                }
+                _ => None,
+            };
+            nodes.push(NodeState {
+                params: init.clone(),
+                hat: vec![0.0; param_count],
+                sampler: BatchSampler::new(part, rng.split(i as u64)),
+                quantizer: build_quantizer(&cfg.quantizer),
+                adaptive,
+                rng: rng.split(0x1000 + i as u64),
+            });
+        }
+        Ok(DflEngine {
+            cfg,
+            topology,
+            dataset,
+            nodes,
+            backends,
+            param_count,
+            opts,
+            rng,
+            mix_buf: vec![vec![0.0; param_count]; n],
+            q1_buf: vec![vec![0.0; param_count]; n],
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Average model u_k = X_k · 1/N.
+    pub fn average_model(&self) -> Vec<f32> {
+        let n = self.nodes.len();
+        let mut u = vec![0.0f32; self.param_count];
+        for node in &self.nodes {
+            for (a, &p) in u.iter_mut().zip(&node.params) {
+                *a += p;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        u.iter_mut().for_each(|x| *x *= inv);
+        u
+    }
+
+    /// Node i's current parameters.
+    pub fn node_params(&self, i: usize) -> &[f32] {
+        &self.nodes[i].params
+    }
+
+    /// Max pairwise L∞ disagreement across node params (consensus gap).
+    pub fn consensus_gap(&self) -> f64 {
+        let u = self.average_model();
+        let mut gap = 0.0f64;
+        for node in &self.nodes {
+            for (&p, &m) in node.params.iter().zip(&u) {
+                gap = gap.max((p as f64 - m as f64).abs());
+            }
+        }
+        gap
+    }
+
+    /// Evaluate the averaged model: (global train loss, test accuracy).
+    pub fn evaluate_global(&mut self) -> anyhow::Result<(f64, f64)> {
+        let u = self.average_model();
+        let train_n = self.dataset.train_n().min(self.opts.eval_train_cap);
+        let (tx, ty): (Vec<f32>, Vec<u32>) = {
+            let idx: Vec<usize> = (0..train_n).collect();
+            self.dataset.gather_batch(&idx)
+        };
+        let (loss, _) = self.backends[0].evaluate(&u, &tx, &ty)?;
+        let test_n = self.dataset.test_n().min(self.opts.eval_test_cap);
+        let mut correct = 0usize;
+        if test_n > 0 {
+            let x = &self.dataset.test_x
+                [..test_n * self.dataset.feat_dim];
+            let y = &self.dataset.test_y[..test_n];
+            let (_, c) = self.backends[0].evaluate(&u, x, y)?;
+            correct = c;
+        }
+        let acc = if test_n > 0 {
+            correct as f64 / test_n as f64
+        } else {
+            f64::NAN
+        };
+        Ok((loss, acc))
+    }
+
+    /// Run one full communication round `k` (0-based); returns the record.
+    pub fn round(&mut self, k: usize) -> anyhow::Result<RoundRecord> {
+        let timer = Timer::start();
+        let n = self.nodes.len();
+        let lr = self.cfg.lr.at(k) as f32;
+        let tau = self.cfg.tau;
+        let batch = self.cfg.batch_size;
+
+        // ---- step A: mixing-delta message (Eq. 22 first term) -----------
+        // q2 = Q(x_k − x̂);  x̂ += q2   →  x̂ = X̂_k
+        let mut q2_bits_paper = 0u64;
+        let mut diff = vec![0.0f32; self.param_count];
+        let mut dq = vec![0.0f32; self.param_count];
+        for i in 0..n {
+            let node = &mut self.nodes[i];
+            let dropped = self.opts.drop_prob > 0.0
+                && node.rng.uniform() < self.opts.drop_prob;
+            if dropped {
+                continue; // receivers keep the stale estimate
+            }
+            for j in 0..diff.len() {
+                diff[j] = node.params[j] - node.hat[j];
+            }
+            let (msg, _) = crate::quant::quantize_damped(
+                node.quantizer.as_mut(), &diff, &mut node.rng, &mut dq);
+            q2_bits_paper += msg.paper_bits();
+            for j in 0..self.param_count {
+                node.hat[j] += dq[j];
+            }
+        }
+
+        // ---- step B: τ local SGD steps (Eq. 18) -------------------------
+        let mut local_loss_sum = vec![0.0f64; n];
+        for i in 0..n {
+            for _ in 0..tau {
+                let idx = self.nodes[i].sampler.next_batch(batch);
+                let (x, y) = self.dataset.gather_batch(&idx);
+                let loss = self.backends[i].step(
+                    &mut self.nodes[i].params, &x, &y, lr)?;
+                local_loss_sum[i] += loss;
+            }
+        }
+
+        // ---- step C: doubly-adaptive level update (Alg. 3 step 8) ------
+        let mut levels_now = 0usize;
+        for i in 0..n {
+            let node = &mut self.nodes[i];
+            if let Some(ad) = node.adaptive.as_mut() {
+                let local_loss = local_loss_sum[i] / tau as f64;
+                let s = ad.update(local_loss);
+                node.quantizer.set_levels(s);
+            }
+            levels_now += node.quantizer.levels();
+        }
+        levels_now /= n;
+
+        // ---- step D: local-update delta q1 (Alg. 2 step 8) -------------
+        // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
+        let mut q1_bits_paper = 0u64;
+        let mut distortion_sum = 0.0f64;
+        for i in 0..n {
+            let node = &mut self.nodes[i];
+            for j in 0..self.param_count {
+                diff[j] = node.params[j] - node.hat[j];
+            }
+            let (msg, omega) = crate::quant::quantize_damped(
+                node.quantizer.as_mut(), &diff, &mut node.rng,
+                &mut self.q1_buf[i]);
+            q1_bits_paper += msg.paper_bits();
+            distortion_sum += omega;
+            for j in 0..self.param_count {
+                node.hat[j] += self.q1_buf[i][j];
+            }
+        }
+
+        // ---- step E: mixing (Eq. 21) ------------------------------------
+        // X_{k+1} = X_{k,τ} + (X̂_{k,τ}C − X̂_{k,τ})
+        // — identical to the paper's X̂_{k,τ}C when x̂ = x (exact
+        // quantization), but expressed as a consensus *correction* on the
+        // true local params so residual estimate error (coarse/damped
+        // quantizers) never erases local SGD progress (CHOCO-SGD [21]).
+        let c = &self.topology.c;
+        for i in 0..n {
+            let out = &mut self.mix_buf[i];
+            out.iter_mut().for_each(|x| *x = 0.0);
+            for j in 0..n {
+                let w = c[(j, i)] as f32;
+                if w == 0.0 {
+                    continue;
+                }
+                let hat = &self.nodes[j].hat;
+                for (o, h) in out.iter_mut().zip(hat.iter()) {
+                    *o += w * h;
+                }
+            }
+        }
+        for i in 0..n {
+            let node = &mut self.nodes[i];
+            let mix = &self.mix_buf[i];
+            for j in 0..self.param_count {
+                node.params[j] += mix[j] - node.hat[j];
+            }
+        }
+
+        // ---- metrics -----------------------------------------------------
+        // Per-link bits: each directed link carried q1 + q2 this round.
+        // The per-node totals are identical (synchronized s), so report the
+        // mean per-node message cost (q1+q2)/n.
+        let bits_this_round = (q1_bits_paper + q2_bits_paper) / n as u64;
+        let (loss, acc) = if k % self.cfg.eval_every == 0 {
+            self.evaluate_global()?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        Ok(RoundRecord {
+            round: k + 1,
+            loss,
+            accuracy: acc,
+            bits_per_link: bits_this_round, // cumulative handled by caller
+            distortion: distortion_sum / n as f64,
+            levels: levels_now,
+            lr: lr as f64,
+            wall_secs: timer.elapsed_secs(),
+        })
+    }
+
+    /// Run the configured number of rounds; returns the full log with
+    /// cumulative per-link bits.
+    pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::new(&self.cfg.name);
+        let mut cum_bits = 0u64;
+        for k in 0..self.cfg.rounds {
+            let mut rec = self.round(k)?;
+            cum_bits += rec.bits_per_link;
+            rec.bits_per_link = cum_bits;
+            log.push(rec);
+        }
+        Ok(log)
+    }
+
+    /// Access the engine rng (tests).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Force every node's quantizer to `s` levels (used by scripted level
+    /// schedules, e.g. the Fig. 4 descending ablation).
+    pub fn set_all_levels(&mut self, s: usize) {
+        for node in &mut self.nodes {
+            node.quantizer.set_levels(s);
+        }
+    }
+
+    /// Replace every node's quantizer (extension baselines such as
+    /// TernGrad / top-k that are not part of the config enum).
+    pub fn set_all_quantizers(
+        &mut self,
+        mut make: impl FnMut() -> Box<dyn Quantizer>,
+    ) {
+        for node in &mut self.nodes {
+            node.quantizer = make();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        BackendKind, DatasetKind, QuantizerKind, TopologyKind,
+    };
+    use crate::dfl::backend::RustMlpBackend;
+
+    fn small_cfg(quant: QuantizerKind) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "test".into(),
+            seed: 42,
+            nodes: 4,
+            tau: 2,
+            rounds: 12,
+            batch_size: 16,
+            lr: crate::config::LrSchedule::fixed(0.1),
+            topology: TopologyKind::Ring,
+            quantizer: quant,
+            dataset: DatasetKind::Blobs {
+                train: 240,
+                test: 80,
+                dim: 8,
+                classes: 3,
+            },
+            backend: BackendKind::RustMlp { hidden: vec![16] },
+            noniid_fraction: 0.5,
+            link_bps: 100e6,
+            eval_every: 1,
+        }
+    }
+
+    fn build_engine(cfg: ExperimentConfig) -> DflEngine {
+        let topo = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let data = Dataset::build(&cfg.dataset, cfg.seed);
+        let backends: Vec<Box<dyn LocalUpdate>> = (0..cfg.nodes)
+            .map(|_| {
+                Box::new(RustMlpBackend::new(
+                    data.feat_dim,
+                    &[16],
+                    data.classes,
+                )) as Box<dyn LocalUpdate>
+            })
+            .collect();
+        DflEngine::new(cfg, topo, data, backends,
+                       EngineOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn loss_decreases_with_lm_quantizer() {
+        let mut e = build_engine(
+            small_cfg(QuantizerKind::LloydMax { s: 16, iters: 8 }));
+        let log = e.run().unwrap();
+        let first = log.records.first().unwrap().loss;
+        let last = log.records.last().unwrap().loss;
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn loss_decreases_with_all_quantizers() {
+        for q in [
+            QuantizerKind::Full,
+            QuantizerKind::Qsgd { s: 16 },
+            QuantizerKind::Natural { s: 16 },
+            QuantizerKind::Alq { s: 16 },
+            QuantizerKind::DoublyAdaptive { s1: 4, iters: 8, s_max: 64 },
+        ] {
+            let name = format!("{q:?}");
+            let mut e = build_engine(small_cfg(q));
+            let log = e.run().unwrap();
+            let first = log.records.first().unwrap().loss;
+            let last = log.records.last().unwrap().loss;
+            assert!(
+                last < first,
+                "{name}: loss did not decrease ({first} -> {last})"
+            );
+        }
+    }
+
+    #[test]
+    fn bits_accumulate_monotonically() {
+        let mut e =
+            build_engine(small_cfg(QuantizerKind::Qsgd { s: 16 }));
+        let log = e.run().unwrap();
+        let mut prev = 0;
+        for r in &log.records {
+            assert!(r.bits_per_link > prev);
+            prev = r.bits_per_link;
+        }
+    }
+
+    #[test]
+    fn lower_s_means_fewer_bits() {
+        let mut e4 =
+            build_engine(small_cfg(QuantizerKind::Qsgd { s: 4 }));
+        let mut e256 =
+            build_engine(small_cfg(QuantizerKind::Qsgd { s: 256 }));
+        let b4 = e4.run().unwrap().total_bits();
+        let b256 = e256.run().unwrap().total_bits();
+        assert!(b4 < b256, "{b4} !< {b256}");
+    }
+
+    #[test]
+    fn consensus_gap_shrinks_on_full_topology() {
+        let mut cfg = small_cfg(QuantizerKind::Full);
+        cfg.topology = TopologyKind::Full;
+        cfg.rounds = 2;
+        let mut e = build_engine(cfg);
+        let _ = e.round(0).unwrap();
+        let gap1 = e.consensus_gap();
+        // a couple more rounds: nodes stay near consensus despite local
+        // updates because C = J averages fully
+        let _ = e.round(1).unwrap();
+        let gap2 = e.consensus_gap();
+        assert!(gap2 < gap1 * 5.0 + 1.0, "gap exploded: {gap1} -> {gap2}");
+    }
+
+    #[test]
+    fn doubly_adaptive_levels_ascend() {
+        let mut e = build_engine(small_cfg(
+            QuantizerKind::DoublyAdaptive { s1: 4, iters: 8, s_max: 256 }));
+        let log = e.run().unwrap();
+        let first = log.records.first().unwrap().levels;
+        let last = log.records.last().unwrap().levels;
+        assert_eq!(first, 4);
+        assert!(last >= first, "levels should ascend: {first} -> {last}");
+        for w in log.records.windows(2) {
+            assert!(w[1].levels >= w[0].levels, "levels dipped");
+        }
+    }
+
+    #[test]
+    fn distortion_recorded_and_reasonable() {
+        let mut e = build_engine(
+            small_cfg(QuantizerKind::LloydMax { s: 16, iters: 10 }));
+        let log = e.run().unwrap();
+        for r in &log.records {
+            assert!(r.distortion.is_finite());
+            assert!(r.distortion >= 0.0);
+            // Theorem 2 bound with slack: d/(12 s^2)
+            let bound =
+                e.param_count() as f64 / (12.0 * 256.0);
+            assert!(r.distortion <= bound * 2.0 + 0.05,
+                "distortion {} above bound {bound}", r.distortion);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let l1 = build_engine(
+            small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 }))
+            .run()
+            .unwrap();
+        let l2 = build_engine(
+            small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 }))
+            .run()
+            .unwrap();
+        assert_eq!(l1.records.len(), l2.records.len());
+        for (a, b) in l1.records.iter().zip(&l2.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bits_per_link, b.bits_per_link);
+        }
+    }
+
+    #[test]
+    fn failure_injection_still_converges() {
+        let cfg = small_cfg(QuantizerKind::LloydMax { s: 16, iters: 8 });
+        let topo = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let data = Dataset::build(&cfg.dataset, cfg.seed);
+        let backends: Vec<Box<dyn LocalUpdate>> = (0..cfg.nodes)
+            .map(|_| {
+                Box::new(RustMlpBackend::new(
+                    data.feat_dim, &[16], data.classes))
+                    as Box<dyn LocalUpdate>
+            })
+            .collect();
+        let opts = EngineOptions { drop_prob: 0.2, ..Default::default() };
+        let mut e =
+            DflEngine::new(cfg, topo, data, backends, opts).unwrap();
+        let log = e.run().unwrap();
+        let first = log.records.first().unwrap().loss;
+        let last = log.records.last().unwrap().loss;
+        assert!(last < first, "lossy links broke training entirely");
+    }
+
+    #[test]
+    fn full_quantizer_matches_exact_dfl_closely() {
+        // with the full-precision quantizer, X̂ ≈ X and the update reduces
+        // to plain DFL; average model must track a direct simulation well.
+        let cfg = small_cfg(QuantizerKind::Full);
+        let mut e = build_engine(cfg);
+        let log = e.run().unwrap();
+        // sanity: loss went down substantially on blobs
+        assert!(log.records.last().unwrap().loss < 0.7);
+    }
+}

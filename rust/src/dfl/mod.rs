@@ -1,0 +1,124 @@
+//! Decentralized federated learning engine (the paper's system layer).
+//!
+//! * [`engine::DflEngine`] — matrix-form gossip simulator (Algorithms 2-3)
+//! * [`net`] — threaded message-passing runtime over encoded bitstreams
+//! * [`backend`] — local-update compute backends (pure Rust / PJRT HLO)
+//! * [`Trainer`] — config-to-run convenience wrapper
+
+pub mod backend;
+pub mod engine;
+pub mod net;
+
+pub use backend::{LocalUpdate, RustMlpBackend};
+pub use engine::{DflEngine, EngineOptions};
+pub use net::{run_threaded, NetOptions};
+
+use std::sync::Arc;
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::data::Dataset;
+use crate::metrics::RunLog;
+use crate::topology::Topology;
+
+/// Build one backend instance per the config.
+pub fn build_backend(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+) -> anyhow::Result<Box<dyn LocalUpdate>> {
+    match &cfg.backend {
+        BackendKind::RustMlp { hidden } => Ok(Box::new(RustMlpBackend::new(
+            dataset.feat_dim,
+            hidden,
+            dataset.classes,
+        ))),
+        BackendKind::Hlo { artifact } => {
+            let dir = crate::runtime::artifacts_dir();
+            let backend = crate::runtime::HloBackend::load(
+                &dir, artifact, dataset.feat_dim, dataset.classes)?;
+            Ok(Box::new(backend))
+        }
+    }
+}
+
+/// High-level runner: config in, metrics out.
+pub struct Trainer {
+    engine: DflEngine,
+}
+
+impl Trainer {
+    /// Build topology, dataset and per-node backends from the config.
+    pub fn build(cfg: &ExperimentConfig) -> anyhow::Result<Trainer> {
+        Self::build_with_options(cfg, EngineOptions::default())
+    }
+
+    pub fn build_with_options(
+        cfg: &ExperimentConfig,
+        opts: EngineOptions,
+    ) -> anyhow::Result<Trainer> {
+        cfg.validate()?;
+        let topology = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let dataset = Dataset::build(&cfg.dataset, cfg.seed);
+        let mut backends = Vec::with_capacity(cfg.nodes);
+        for _ in 0..cfg.nodes {
+            backends.push(build_backend(cfg, &dataset)?);
+        }
+        let engine = DflEngine::new(
+            cfg.clone(), topology, dataset, backends, opts)?;
+        Ok(Trainer { engine })
+    }
+
+    /// Run all configured rounds on the matrix engine.
+    pub fn run(mut self) -> anyhow::Result<RunLog> {
+        self.engine.run()
+    }
+
+    /// Run on the threaded message-passing runtime instead.
+    pub fn run_threaded(
+        cfg: &ExperimentConfig,
+        opts: NetOptions,
+    ) -> anyhow::Result<RunLog> {
+        cfg.validate()?;
+        let topology = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let dataset = Arc::new(Dataset::build(&cfg.dataset, cfg.seed));
+        let cfg2 = cfg.clone();
+        let ds2 = Arc::clone(&dataset);
+        let factory =
+            move |_i: usize| build_backend(&cfg2, &ds2);
+        net::run_threaded(cfg, &topology, dataset, &factory, opts)
+    }
+
+    /// Borrow the engine (examples/benches that drive rounds manually).
+    pub fn engine_mut(&mut self) -> &mut DflEngine {
+        &mut self.engine
+    }
+
+    pub fn engine(&self) -> &DflEngine {
+        &self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, QuantizerKind};
+
+    #[test]
+    fn trainer_end_to_end_small() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 3;
+        cfg.rounds = 5;
+        cfg.dataset =
+            DatasetKind::Blobs { train: 90, test: 30, dim: 6, classes: 3 };
+        cfg.quantizer = QuantizerKind::LloydMax { s: 8, iters: 5 };
+        let log = Trainer::build(&cfg).unwrap().run().unwrap();
+        assert_eq!(log.records.len(), 5);
+        assert!(log.last_loss().unwrap().is_finite());
+    }
+
+    #[test]
+    fn trainer_rejects_invalid_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 0;
+        assert!(Trainer::build(&cfg).is_err());
+    }
+}

@@ -1,0 +1,511 @@
+//! Threaded message-passing DFL runtime.
+//!
+//! Where [`super::engine::DflEngine`] simulates the gossip in matrix form,
+//! this runtime runs one OS thread per node exchanging *encoded bitstreams*
+//! (quant::codec) over channels — the wire bytes are measured, per-link
+//! faults drop real messages, and each node maintains its own per-neighbor
+//! estimate state (no shared memory between nodes beyond the channels).
+//!
+//! Protocol per round k (Algorithm 2 with estimate-referenced deltas —
+//! see dfl::engine for the deviation note):
+//!   phase 0: broadcast  q2 = Q(x_k − x̂_self)     → everyone x̂ += q2
+//!   phase 1: τ local SGD steps
+//!   phase 2: broadcast  q1 = Q(x_{k,τ} − x̂_self) → everyone x̂ += q1
+//!   phase 3: x_{k+1} = Σ_j c_ji x̂_j               (neighbors ∪ self)
+//!
+//! Messages are tagged (round, phase) and buffered, so fast neighbors may
+//! run ahead one round without corrupting a slow receiver.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::data::{BatchSampler, Dataset};
+use crate::dfl::backend::LocalUpdate;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::quant::adaptive::AdaptiveLevels;
+use crate::quant::codec;
+use crate::quant::{build_quantizer, FullPrecision, NaturalQuantizer,
+                   QsgdQuantizer, Quantizer};
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// A tagged wire message.
+struct WireMsg {
+    from: usize,
+    round: usize,
+    phase: u8,
+    bytes: Vec<u8>,
+}
+
+/// Per-round report a node thread sends to the coordinator.
+struct NodeReport {
+    round: usize,
+    wire_bits: u64,
+    /// paper-accounting bits (Eq. 12) — kept alongside the measured wire
+    /// bits for the overhead cross-check in integration tests
+    #[allow(dead_code)]
+    paper_bits: u64,
+    levels: usize,
+    #[allow(dead_code)]
+    local_loss: f64,
+    /// params snapshot (only when the coordinator asked for an eval round)
+    params: Option<Vec<f32>>,
+}
+
+/// Options for the threaded runtime.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// per-message drop probability on each directed link
+    pub drop_prob: f64,
+    /// evaluate (collect params) every this many rounds
+    pub eval_every: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions { drop_prob: 0.0, eval_every: 1 }
+    }
+}
+
+/// Reconstruct the implied level table for table-less quantizer kinds.
+fn implied_levels(kind: &QuantizerKind, s: usize) -> Vec<f32> {
+    match kind {
+        QuantizerKind::Qsgd { .. } => QsgdQuantizer::level_table(s),
+        QuantizerKind::Natural { .. } => NaturalQuantizer::level_table(s),
+        QuantizerKind::Full => FullPrecision::level_table(s),
+        // adaptive quantizers always ship their table
+        _ => Vec::new(),
+    }
+}
+
+/// Buffered receiver: returns the message for (from, round, phase),
+/// stashing any out-of-order arrivals.
+struct Mailbox {
+    rx: Receiver<WireMsg>,
+    stash: HashMap<(usize, usize, u8), VecDeque<Vec<u8>>>,
+}
+
+impl Mailbox {
+    fn new(rx: Receiver<WireMsg>) -> Self {
+        Mailbox { rx, stash: HashMap::new() }
+    }
+
+    fn recv(
+        &mut self,
+        from: usize,
+        round: usize,
+        phase: u8,
+    ) -> anyhow::Result<Vec<u8>> {
+        let key = (from, round, phase);
+        loop {
+            if let Some(q) = self.stash.get_mut(&key) {
+                if let Some(bytes) = q.pop_front() {
+                    return Ok(bytes);
+                }
+            }
+            let msg = self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("peer channel closed"))?;
+            let mkey = (msg.from, msg.round, msg.phase);
+            if mkey == key {
+                return Ok(msg.bytes);
+            }
+            self.stash.entry(mkey).or_default().push_back(msg.bytes);
+        }
+    }
+}
+
+/// Backend factory: called once per node *inside that node's thread* (the
+/// PJRT types are not `Send`, so backends cannot cross threads).
+pub type BackendFactory<'a> =
+    &'a (dyn Fn(usize) -> anyhow::Result<Box<dyn LocalUpdate>> + Sync);
+
+/// Run a full DFL training with one thread per node. Returns a [`RunLog`]
+/// whose bits_per_link are MEASURED wire bits (cumulative, averaged over
+/// directed links).
+pub fn run_threaded(
+    cfg: &ExperimentConfig,
+    topology: &Topology,
+    dataset: Arc<Dataset>,
+    factory: BackendFactory<'_>,
+    opts: NetOptions,
+) -> anyhow::Result<RunLog> {
+    let n = cfg.nodes;
+    // probe instance: shared init params + param_count (coordinator reuses
+    // it for evaluation)
+    let mut eval_backend = factory(n)?;
+    let param_count = eval_backend.param_count();
+    let mut seed_rng = Rng::new(cfg.seed);
+    let init = eval_backend.init_params(&mut seed_rng.split(0xBEEF));
+    let parts = crate::data::partition::partition_noniid(
+        &dataset.train_y, n, cfg.noniid_fraction, cfg.seed);
+
+    // channels: one receiver per node; senders cloned per incoming edge
+    let mut txs: Vec<Sender<WireMsg>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<WireMsg>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    let (report_tx, report_rx) = channel::<anyhow::Result<NodeReport>>();
+
+    let kind = cfg.quantizer.clone();
+    let rounds = cfg.rounds;
+    let tau = cfg.tau;
+    let batch = cfg.batch_size;
+    let lr = cfg.lr.clone();
+
+    let result: anyhow::Result<RunLog> = std::thread::scope(|scope| {
+        for i in 0..n {
+            let my_rx = rxs[i].take().unwrap();
+            let neighbors: Vec<usize> = topology.neighbors(i).to_vec();
+            let peer_tx: Vec<Sender<WireMsg>> =
+                neighbors.iter().map(|&j| txs[j].clone()).collect();
+            let weights: Vec<f32> = neighbors
+                .iter()
+                .map(|&j| topology.c[(j, i)] as f32)
+                .collect();
+            let self_weight = topology.c[(i, i)] as f32;
+            let dataset = Arc::clone(&dataset);
+            let part = parts[i].clone();
+            let init = init.clone();
+            let kind = kind.clone();
+            let report_tx = report_tx.clone();
+            let lr = lr.clone();
+            let drop_prob = opts.drop_prob;
+            let eval_every = opts.eval_every;
+            let node_seed = cfg.seed ^ (0xA000 + i as u64);
+
+            scope.spawn(move || {
+                let run = || -> anyhow::Result<()> {
+                    let mut backend = factory(i)?;
+                    let mut rng = Rng::new(node_seed);
+                    let mut sampler =
+                        BatchSampler::new(part, rng.split(1));
+                    let mut quantizer = build_quantizer(&kind);
+                    let mut adaptive = match &kind {
+                        QuantizerKind::DoublyAdaptive {
+                            s1, s_max, ..
+                        } => Some(AdaptiveLevels::new(*s1, *s_max)),
+                        _ => None,
+                    };
+                    let mut mailbox = Mailbox::new(my_rx);
+                    let mut params = init.clone();
+                    // own + per-neighbor estimates x̂
+                    let mut hat_self = vec![0.0f32; param_count];
+                    let mut hat: Vec<Vec<f32>> =
+                        vec![vec![0.0f32; param_count]; neighbors.len()];
+                    let mut dq = vec![0.0f32; param_count];
+                    let mut diff = vec![0.0f32; param_count];
+
+                    for k in 0..rounds {
+                        let mut wire_bits = 0u64;
+                        let mut paper_bits = 0u64;
+
+                        // one broadcast phase: q = Q(target − x̂_self),
+                        // everyone (incl. self) applies x̂ += q
+                        let mut broadcast = |phase: u8,
+                                             params: &[f32],
+                                             hat_self: &mut [f32],
+                                             hat: &mut [Vec<f32>],
+                                             quantizer: &mut Box<dyn Quantizer>,
+                                             rng: &mut Rng,
+                                             mailbox: &mut Mailbox,
+                                             wire_bits: &mut u64,
+                                             paper_bits: &mut u64|
+                         -> anyhow::Result<()> {
+                            for j in 0..param_count {
+                                diff[j] = params[j] - hat_self[j];
+                            }
+                            let (q, _) = crate::quant::quantize_damped(
+                                quantizer.as_mut(), &diff, rng, &mut dq);
+                            let bytes = codec::encode(&q);
+                            for tx in &peer_tx {
+                                let dropped = drop_prob > 0.0
+                                    && rng.uniform() < drop_prob;
+                                *wire_bits += bytes.len() as u64 * 8;
+                                *paper_bits += q.paper_bits();
+                                // tombstone (empty payload) on drop so
+                                // receivers don't deadlock
+                                let payload = if dropped {
+                                    Vec::new()
+                                } else {
+                                    bytes.clone()
+                                };
+                                let _ = tx.send(WireMsg {
+                                    from: i,
+                                    round: k,
+                                    phase,
+                                    bytes: payload,
+                                });
+                            }
+                            q.dequantize_into(&mut dq);
+                            for j in 0..param_count {
+                                hat_self[j] += dq[j];
+                            }
+                            for (ni, &from) in
+                                neighbors.iter().enumerate()
+                            {
+                                let bytes = mailbox.recv(from, k, phase)?;
+                                if bytes.is_empty() {
+                                    continue; // dropped: stale estimate
+                                }
+                                let msg = codec::decode(&bytes, |s| {
+                                    implied_levels(&kind, s)
+                                })?;
+                                msg.dequantize_into(&mut dq);
+                                for j in 0..param_count {
+                                    hat[ni][j] += dq[j];
+                                }
+                            }
+                            Ok(())
+                        };
+
+                        // ---- phase 0: mixing-delta broadcast ----------
+                        broadcast(
+                            0, &params, &mut hat_self, &mut hat,
+                            &mut quantizer, &mut rng, &mut mailbox,
+                            &mut wire_bits, &mut paper_bits,
+                        )?;
+
+                        // ---- phase 1: τ local updates -----------------
+                        let lr_k = lr.at(k) as f32;
+                        let mut local_loss = 0.0f64;
+                        for _ in 0..tau {
+                            let idx = sampler.next_batch(batch);
+                            let (x, y) = dataset.gather_batch(&idx);
+                            local_loss += backend.step(
+                                &mut params, &x, &y, lr_k)?;
+                        }
+                        local_loss /= tau as f64;
+                        if let Some(ad) = adaptive.as_mut() {
+                            let s = ad.update(local_loss);
+                            quantizer.set_levels(s);
+                        }
+
+                        // ---- phase 2: local-update-delta broadcast ----
+                        broadcast(
+                            2, &params, &mut hat_self, &mut hat,
+                            &mut quantizer, &mut rng, &mut mailbox,
+                            &mut wire_bits, &mut paper_bits,
+                        )?;
+
+                        // ---- phase 3: mixing ---------------------------
+                        // x += Σ c_ji x̂_j − x̂_self (consensus correction
+                        // on true params; = X̂C when estimates are exact)
+                        let mut mix = vec![0.0f32; param_count];
+                        for j in 0..param_count {
+                            mix[j] = self_weight * hat_self[j];
+                        }
+                        for (ni, _) in neighbors.iter().enumerate() {
+                            let w = weights[ni];
+                            for j in 0..param_count {
+                                mix[j] += w * hat[ni][j];
+                            }
+                        }
+                        for j in 0..param_count {
+                            params[j] += mix[j] - hat_self[j];
+                        }
+
+                        // ---- report -----------------------------------
+                        let snapshot = if k % eval_every == 0 {
+                            Some(params.clone())
+                        } else {
+                            None
+                        };
+                        report_tx
+                            .send(Ok(NodeReport {
+                                round: k,
+                                wire_bits,
+                                paper_bits,
+                                levels: quantizer.levels(),
+                                local_loss,
+                                params: snapshot,
+                            }))
+                            .ok();
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    let _ = report_tx.send(Err(e));
+                }
+            });
+        }
+        drop(report_tx);
+        drop(txs);
+
+        // ---- coordinator: aggregate reports, evaluate ------------------
+        let mut log = RunLog::new(&cfg.name);
+        let mut cum_bits = 0u64;
+        let links = topology.directed_links().max(1) as u64;
+        let mut per_round: HashMap<usize, Vec<NodeReport>> = HashMap::new();
+        let mut done_rounds = 0usize;
+        while done_rounds < rounds {
+            let report = report_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all nodes exited early"))??;
+            let k = report.round;
+            let entry = per_round.entry(k).or_default();
+            entry.push(report);
+            if entry.len() == n {
+                let reports = per_round.remove(&k).unwrap();
+                let wire: u64 =
+                    reports.iter().map(|r| r.wire_bits).sum();
+                let levels = reports.iter().map(|r| r.levels).sum::<usize>()
+                    / n;
+                let lr_k = lr.at(k);
+                let (loss, acc) = if reports
+                    .iter()
+                    .all(|r| r.params.is_some())
+                {
+                    let mut avg = vec![0.0f32; param_count];
+                    for r in &reports {
+                        for (a, &p) in
+                            avg.iter_mut().zip(r.params.as_ref().unwrap())
+                        {
+                            *a += p;
+                        }
+                    }
+                    avg.iter_mut().for_each(|x| *x /= n as f32);
+                    let cap = dataset.train_n().min(2048);
+                    let idx: Vec<usize> = (0..cap).collect();
+                    let (x, y) = dataset.gather_batch(&idx);
+                    let (l, _) = eval_backend.evaluate(&avg, &x, &y)?;
+                    let tcap = dataset.test_n().min(2048);
+                    let acc = if tcap > 0 {
+                        let tx = &dataset.test_x
+                            [..tcap * dataset.feat_dim];
+                        let ty = &dataset.test_y[..tcap];
+                        let (_, c) =
+                            eval_backend.evaluate(&avg, tx, ty)?;
+                        c as f64 / tcap as f64
+                    } else {
+                        f64::NAN
+                    };
+                    (l, acc)
+                } else {
+                    (f64::NAN, f64::NAN)
+                };
+                // per-directed-link average of measured wire bits
+                cum_bits += wire / links;
+                log.push(RoundRecord {
+                    round: k + 1,
+                    loss,
+                    accuracy: acc,
+                    bits_per_link: cum_bits,
+                    distortion: f64::NAN,
+                    levels,
+                    lr: lr_k,
+                    wall_secs: 0.0,
+                });
+                done_rounds += 1;
+            }
+        }
+        log.records.sort_by_key(|r| r.round);
+        Ok(log)
+    });
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, LrSchedule, TopologyKind};
+    use crate::dfl::backend::RustMlpBackend;
+
+    fn cfg(quant: QuantizerKind) -> ExperimentConfig {
+        ExperimentConfig {
+            name: "net-test".into(),
+            seed: 11,
+            nodes: 4,
+            tau: 2,
+            rounds: 8,
+            batch_size: 16,
+            lr: LrSchedule::fixed(0.1),
+            topology: TopologyKind::Ring,
+            quantizer: quant,
+            dataset: DatasetKind::Blobs {
+                train: 200,
+                test: 60,
+                dim: 8,
+                classes: 3,
+            },
+            backend: crate::config::BackendKind::RustMlp {
+                hidden: vec![16],
+            },
+            noniid_fraction: 0.5,
+            link_bps: 100e6,
+            eval_every: 1,
+        }
+    }
+
+    fn run(c: &ExperimentConfig, opts: NetOptions) -> RunLog {
+        let topo = Topology::build(&c.topology, c.nodes, c.seed);
+        let data = Arc::new(Dataset::build(&c.dataset, c.seed));
+        let feat = data.feat_dim;
+        let classes = data.classes;
+        let factory = move |_i: usize| {
+            Ok(Box::new(RustMlpBackend::new(feat, &[16], classes))
+                as Box<dyn LocalUpdate>)
+        };
+        run_threaded(c, &topo, Arc::clone(&data), &factory, opts).unwrap()
+    }
+
+    #[test]
+    fn threaded_training_converges() {
+        let c = cfg(QuantizerKind::LloydMax { s: 16, iters: 8 });
+        let log = run(&c, NetOptions::default());
+        assert_eq!(log.records.len(), 8);
+        let first = log.records.first().unwrap().loss;
+        let last = log.records.last().unwrap().loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn wire_bits_measured_and_monotone() {
+        let c = cfg(QuantizerKind::Qsgd { s: 16 });
+        let log = run(&c, NetOptions::default());
+        let mut prev = 0;
+        for r in &log.records {
+            assert!(r.bits_per_link > prev);
+            prev = r.bits_per_link;
+        }
+    }
+
+    #[test]
+    fn survives_dropped_messages() {
+        let c = cfg(QuantizerKind::LloydMax { s: 16, iters: 6 });
+        let log = run(
+            &c,
+            NetOptions { drop_prob: 0.25, eval_every: 1 },
+        );
+        let first = log.records.first().unwrap().loss;
+        let last = log.records.last().unwrap().loss;
+        assert!(last.is_finite());
+        assert!(last < first * 1.5, "diverged: {first} -> {last}");
+    }
+
+    #[test]
+    fn matches_matrix_engine_bits_order() {
+        // threaded wire bits ≈ paper C_s bits + small header/table overhead
+        let c = cfg(QuantizerKind::Qsgd { s: 16 });
+        let log = run(&c, NetOptions::default());
+        let d = {
+            let m = crate::models::MlpModel::new(&[8, 16, 3]);
+            m.param_count()
+        };
+        let per_round_paper =
+            2 * crate::quant::bits::c_s(d, 16); // q1 + q2
+        let total_paper = per_round_paper * c.rounds as u64;
+        let measured = log.total_bits();
+        let ratio = measured as f64 / total_paper as f64;
+        assert!(
+            (0.9..1.2).contains(&ratio),
+            "wire/paper ratio {ratio} (measured {measured}, paper {total_paper})"
+        );
+    }
+}

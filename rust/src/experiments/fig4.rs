@@ -1,0 +1,113 @@
+//! Fig. 4: training loss vs communicated bits under adaptive vs fixed s —
+//! the motivating ablation for doubly-adaptive DFL (§V).
+//!
+//! Curves: fixed s ∈ {4, 16, 256}, ascending s (Eq. 37), and the inverse
+//! (descending) schedule as a falsification check. Expected shape:
+//! ascending reaches any target loss with the fewest bits; descending is
+//! the worst of the adaptive schedules.
+
+use super::{Curve, Scale};
+use crate::config::{ExperimentConfig, QuantizerKind};
+
+/// Schedule variants for the ablation.
+pub fn curve_set() -> Vec<(&'static str, QuantizerKind)> {
+    vec![
+        ("fixed-s4", QuantizerKind::LloydMax { s: 4, iters: 12 }),
+        ("fixed-s16", QuantizerKind::LloydMax { s: 16, iters: 12 }),
+        ("fixed-s256", QuantizerKind::LloydMax { s: 256, iters: 12 }),
+        (
+            "ascending",
+            QuantizerKind::DoublyAdaptive { s1: 4, iters: 12, s_max: 4096 },
+        ),
+    ]
+}
+
+pub fn run(base: ExperimentConfig) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, quant) in curve_set() {
+        let mut cfg = base.clone();
+        cfg.quantizer = quant;
+        curves.push(super::run_labeled(cfg, label)?);
+    }
+    // descending ablation: run a custom engine loop driving set_levels
+    curves.push(run_descending(base)?);
+    Ok(curves)
+}
+
+/// Descending-s ablation (the paper's Fig. 4 "descending" curve): start at
+/// s = 256 and halve toward 4 as loss falls — implemented by driving the
+/// engine round-by-round.
+pub fn run_descending(mut base: ExperimentConfig) -> anyhow::Result<Curve> {
+    use crate::dfl::Trainer;
+    base.name = "descending".into();
+    // engine quantizer starts at the high end
+    base.quantizer = QuantizerKind::LloydMax { s: 256, iters: 12 };
+    let mut trainer = Trainer::build(&base)?;
+    let mut log = crate::metrics::RunLog::new("descending");
+    let mut cum = 0u64;
+    let rounds = base.rounds;
+    let mut f1: Option<f64> = None;
+    for k in 0..rounds {
+        let mut rec = trainer.engine_mut().round(k)?;
+        cum += rec.bits_per_link;
+        rec.bits_per_link = cum;
+        if rec.loss.is_finite() {
+            let f1v = *f1.get_or_insert(rec.loss.max(1e-9));
+            let ratio = (rec.loss.max(1e-9) / f1v).sqrt();
+            let s = ((256.0 * ratio).round() as usize).clamp(4, 256);
+            // drive all node quantizers down
+            trainer.engine_mut().set_all_levels(s);
+        }
+        log.push(rec);
+    }
+    Ok(Curve { label: "descending".into(), log })
+}
+
+pub fn run_mnist(scale: Scale) -> anyhow::Result<Vec<Curve>> {
+    run(super::paper_base_config(scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    fn tiny() -> ExperimentConfig {
+        let mut cfg = super::super::paper_base_config(Scale::Quick);
+        cfg.nodes = 4;
+        cfg.rounds = 14;
+        cfg.dataset =
+            DatasetKind::Blobs { train: 240, test: 80, dim: 10, classes: 4 };
+        cfg
+    }
+
+    #[test]
+    fn ascending_beats_fixed_256_per_bit() {
+        let curves = run(tiny()).unwrap();
+        let target = curves
+            .iter()
+            .map(|c| c.log.records.last().unwrap().loss)
+            .fold(f64::MIN, f64::max)
+            * 1.15;
+        let bits = |label: &str| {
+            curves
+                .iter()
+                .find(|c| c.label == label)
+                .unwrap()
+                .log
+                .bits_to_loss(target)
+        };
+        if let (Some(asc), Some(f256)) = (bits("ascending"), bits("fixed-s256"))
+        {
+            assert!(asc <= f256, "ascending {asc} !<= fixed-s256 {f256}");
+        }
+    }
+
+    #[test]
+    fn descending_schedule_descends() {
+        let c = run_descending(tiny()).unwrap();
+        let first = c.log.records.first().unwrap().levels;
+        let last = c.log.records.last().unwrap().levels;
+        assert!(first >= last, "levels should descend: {first} -> {last}");
+    }
+}

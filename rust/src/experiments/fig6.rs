@@ -1,0 +1,164 @@
+//! Fig. 6: LM-DFL vs baselines on synth-MNIST (a-d) and synth-CIFAR (e-h).
+//!
+//! Four curves per dataset — DFL without quantization, LM-DFL, DFL+ALQ,
+//! DFL+QSGD — and four panels: training loss vs iteration, training loss vs
+//! time progression (bits / 100 Mbps), test accuracy vs iteration, and
+//! quantization distortion vs iteration.
+//!
+//! Expected shape (paper §VI-B1): no-quant best per-iteration; LM-DFL ≤
+//! ALQ ≤ QSGD per-iteration among quantized; LM-DFL best per-bit (its
+//! time-progression curve is left-most); LM distortion lowest.
+
+use super::{Curve, Scale};
+use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::metrics::{fnum, Table};
+
+/// The four Fig. 6 configurations at the paper's s for the dataset.
+pub fn curve_set(base: &ExperimentConfig, s: usize) -> Vec<(String, QuantizerKind)> {
+    let set: Vec<(&str, QuantizerKind)> = vec![
+        ("no-quant", QuantizerKind::Full),
+        ("LM-DFL", QuantizerKind::LloydMax { s, iters: 12 }),
+        ("ALQ", QuantizerKind::Alq { s }),
+        ("QSGD", QuantizerKind::Qsgd { s }),
+    ];
+    set.into_iter()
+        .map(|(l, q)| (format!("{}/{}", base.name, l), q))
+        .collect()
+}
+
+/// Run the full figure for one dataset config.
+pub fn run(base: ExperimentConfig, s: usize) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, quant) in curve_set(&base, s) {
+        let mut cfg = base.clone();
+        cfg.quantizer = quant;
+        curves.push(super::run_labeled(cfg, &label)?);
+    }
+    Ok(curves)
+}
+
+/// MNIST panels (Fig. 6a-d).
+pub fn run_mnist(scale: Scale) -> anyhow::Result<Vec<Curve>> {
+    run(super::paper_base_config(scale), 50)
+}
+
+/// CIFAR panels (Fig. 6e-h).
+pub fn run_cifar(scale: Scale) -> anyhow::Result<Vec<Curve>> {
+    run(super::paper_cifar_config(scale), 100)
+}
+
+/// Render the four panels as aligned tables (what the bench prints).
+pub fn render_panels(curves: &[Curve], link_bps: f64) -> String {
+    let mut out = String::new();
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+
+    // panel 1: loss vs iteration
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(
+            curves.iter().map(|c| fnum(c.log.records[k].loss)));
+        t.row(row);
+    }
+    out.push_str("panel: training loss vs iteration\n");
+    out.push_str(&t.render());
+
+    // panel 2: loss vs time progression (ms at link rate)
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(curves.iter().map(|c| {
+            let r = &c.log.records[k];
+            let ms = r.bits_per_link as f64 / link_bps * 1e3;
+            format!("{}@{:.1}ms", fnum(r.loss), ms)
+        }));
+        t.row(row);
+    }
+    out.push_str("\npanel: training loss @ time progression (100 Mbps)\n");
+    out.push_str(&t.render());
+
+    // panel 3: accuracy vs iteration
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(
+            curves.iter().map(|c| fnum(c.log.records[k].accuracy)));
+        t.row(row);
+    }
+    out.push_str("\npanel: test accuracy vs iteration\n");
+    out.push_str(&t.render());
+
+    // panel 4: distortion vs iteration
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(
+            curves.iter().map(|c| fnum(c.log.records[k].distortion)));
+        t.row(row);
+    }
+    out.push_str("\npanel: quantization distortion vs iteration\n");
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = super::super::paper_base_config(Scale::Quick);
+        cfg.nodes = 4;
+        cfg.rounds = 10;
+        cfg.dataset =
+            DatasetKind::Blobs { train: 200, test: 60, dim: 10, classes: 4 };
+        cfg
+    }
+
+    #[test]
+    fn fig6_shape_holds_on_tiny_workload() {
+        let curves = run(tiny_base(), 16).unwrap();
+        assert_eq!(curves.len(), 4);
+        let last = |label: &str| {
+            curves
+                .iter()
+                .find(|c| c.label.ends_with(label))
+                .unwrap()
+                .log
+                .records
+                .last()
+                .unwrap()
+                .clone()
+        };
+        // distortion ordering: LM lowest among quantized (the headline)
+        let lm = last("LM-DFL");
+        let qsgd = last("QSGD");
+        let noq = last("no-quant");
+        assert!(lm.distortion < qsgd.distortion,
+                "LM {} !< QSGD {}", lm.distortion, qsgd.distortion);
+        assert!(noq.distortion < 1e-6);
+        // everything converged somewhat
+        for c in &curves {
+            let f = c.log.records.first().unwrap().loss;
+            let l = c.log.records.last().unwrap().loss;
+            assert!(l < f, "{}: {f} -> {l}", c.label);
+        }
+        // per-bit: quantized methods spend far fewer bits than no-quant
+        assert!(lm.bits_per_link < noq.bits_per_link / 2);
+    }
+
+    #[test]
+    fn render_has_four_panels() {
+        let curves = run(tiny_base(), 8).unwrap();
+        let s = render_panels(&curves, 100e6);
+        assert_eq!(s.matches("panel:").count(), 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Fig. 7: impact of network topology — testing accuracy vs iteration for
+//! ζ ∈ {0, 0.87, 1} (fully-connected / ring / disconnected).
+//!
+//! Expected shape (Remark 3): accuracy(ζ=0) ≥ accuracy(ζ=0.87) ≥
+//! accuracy(ζ=1); sparser topology ⇒ worse convergence.
+
+use super::{Curve, Scale};
+use crate::config::TopologyKind;
+use crate::metrics::{fnum, Table};
+use crate::topology::Topology;
+
+pub const TOPOLOGIES: [(&str, TopologyKind); 3] = [
+    ("full (zeta=0)", TopologyKind::Full),
+    ("ring (zeta~0.87)", TopologyKind::Ring),
+    ("disconnected (zeta=1)", TopologyKind::Disconnected),
+];
+
+pub fn run(scale: Scale) -> anyhow::Result<Vec<Curve>> {
+    let base = super::paper_base_config(scale);
+    let mut curves = Vec::new();
+    for (label, topo) in TOPOLOGIES {
+        let mut cfg = base.clone();
+        cfg.topology = topo;
+        curves.push(super::run_labeled(cfg, label)?);
+    }
+    Ok(curves)
+}
+
+/// The measured ζ values for the three topologies at N nodes.
+pub fn zetas(n: usize) -> Vec<(String, f64)> {
+    TOPOLOGIES
+        .iter()
+        .map(|(label, kind)| {
+            (label.to_string(), Topology::build(kind, n, 0).zeta)
+        })
+        .collect()
+}
+
+pub fn render(curves: &[Curve]) -> String {
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(
+            curves.iter().map(|c| fnum(c.log.records[k].accuracy)));
+        t.row(row);
+    }
+    let mut out = String::from("panel: test accuracy vs iteration\n");
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    #[test]
+    fn zeta_values_match_paper_setup() {
+        let z = zetas(10);
+        assert!(z[0].1.abs() < 1e-9);
+        assert!((z[1].1 - 0.87).abs() < 0.01);
+        assert!((z[2].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn denser_topology_no_worse() {
+        // tiny workload: full topology should reach accuracy >= disconnected
+        let mut base = super::super::paper_base_config(Scale::Quick);
+        base.nodes = 4;
+        base.rounds = 15;
+        base.noniid_fraction = 0.8; // make topology matter
+        base.dataset =
+            DatasetKind::Blobs { train: 240, test: 120, dim: 10, classes: 4 };
+        let mut accs = Vec::new();
+        for (label, topo) in TOPOLOGIES {
+            let mut cfg = base.clone();
+            cfg.topology = topo;
+            let c = super::super::run_labeled(cfg, label).unwrap();
+            accs.push(c.log.final_accuracy().unwrap());
+        }
+        assert!(
+            accs[0] >= accs[2] - 0.05,
+            "full {} vs disconnected {}",
+            accs[0],
+            accs[2]
+        );
+    }
+}

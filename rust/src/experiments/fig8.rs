@@ -1,0 +1,201 @@
+//! Fig. 8: doubly-adaptive DFL vs fixed-level QSGD (2/4/8-bit), under both
+//! a fixed learning rate and the paper's variable rate (−20% / 10 iters),
+//! plus the bits-per-element schedule ⌈log₂ s_k⌉ (panels c/f).
+//!
+//! Expected shape (§VI-B3): doubly-adaptive reaches any target loss with
+//! the fewest communicated bits; its bits-per-element start low (s₁) and
+//! ascend as the loss falls (Eq. 37).
+
+use super::{Curve, Scale};
+use crate::config::{ExperimentConfig, LrSchedule, QuantizerKind};
+use crate::metrics::{fnum, Table};
+
+/// Fig. 8 curve set: QSGD at s = 4/16/256 (2/4/8 bits) + doubly-adaptive.
+pub fn curve_set() -> Vec<(&'static str, QuantizerKind)> {
+    vec![
+        ("QSGD-2bit", QuantizerKind::Qsgd { s: 4 }),
+        ("QSGD-4bit", QuantizerKind::Qsgd { s: 16 }),
+        ("QSGD-8bit", QuantizerKind::Qsgd { s: 256 }),
+        (
+            "doubly-adaptive",
+            QuantizerKind::DoublyAdaptive { s1: 4, iters: 12, s_max: 4096 },
+        ),
+    ]
+}
+
+/// Run one dataset config under fixed or variable learning rate.
+pub fn run(
+    base: ExperimentConfig,
+    variable_lr: bool,
+) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, quant) in curve_set() {
+        let mut cfg = base.clone();
+        cfg.quantizer = quant;
+        if variable_lr {
+            cfg.lr = LrSchedule {
+                base: cfg.lr.base,
+                decay: 0.8,
+                decay_every: 10,
+            };
+        }
+        let tag = if variable_lr { "var-lr" } else { "fixed-lr" };
+        curves.push(super::run_labeled(cfg, &format!("{label}/{tag}"))?);
+    }
+    Ok(curves)
+}
+
+pub fn run_mnist(scale: Scale, variable_lr: bool) -> anyhow::Result<Vec<Curve>> {
+    run(super::paper_base_config(scale), variable_lr)
+}
+
+pub fn run_cifar(scale: Scale, variable_lr: bool) -> anyhow::Result<Vec<Curve>> {
+    run(super::paper_cifar_config(scale), variable_lr)
+}
+
+/// Panels a/b/d/e: training loss vs communicated bits.
+pub fn render_loss_vs_bits(curves: &[Curve]) -> String {
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(curves.iter().map(|c| {
+            let r = &c.log.records[k];
+            format!("{}@{}b", fnum(r.loss), r.bits_per_link)
+        }));
+        t.row(row);
+    }
+    let mut out =
+        String::from("panel: training loss @ cumulative bits per link\n");
+    out.push_str(&t.render());
+    out
+}
+
+/// Panels c/f: quantized bits per element ⌈log₂ s_k⌉ vs iteration.
+pub fn render_bits_per_element(curves: &[Curve]) -> String {
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(curves.iter().map(|c| {
+            let s = c.log.records[k].levels;
+            format!("{}", crate::quant::bits::bits_per_element(s))
+        }));
+        t.row(row);
+    }
+    let mut out = String::from(
+        "panel: quantized bits per element (ceil log2 s_k) vs iteration\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Communication-efficiency summary: bits needed to reach a target loss.
+pub fn bits_to_target(curves: &[Curve], target: f64) -> String {
+    let mut t = Table::new(&["curve", "target loss", "bits per link"]);
+    for c in curves {
+        let bits = c
+            .log
+            .bits_to_loss(target)
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "not reached".into());
+        t.row(vec![c.label.clone(), fnum(target), bits]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = super::super::paper_base_config(Scale::Quick);
+        cfg.nodes = 4;
+        cfg.rounds = 16;
+        cfg.dataset =
+            DatasetKind::Blobs { train: 240, test: 80, dim: 10, classes: 4 };
+        cfg
+    }
+
+    #[test]
+    fn doubly_adaptive_most_bit_efficient_to_target() {
+        let curves = run(tiny_base(), false).unwrap();
+        // pick a mid-training target everyone eventually reaches
+        let target = curves
+            .iter()
+            .map(|c| c.log.records.last().unwrap().loss)
+            .fold(f64::MIN, f64::max)
+            * 1.15;
+        let bits = |label: &str| {
+            curves
+                .iter()
+                .find(|c| c.label.starts_with(label))
+                .unwrap()
+                .log
+                .bits_to_loss(target)
+        };
+        let da = bits("doubly-adaptive");
+        let q8 = bits("QSGD-8bit");
+        if let (Some(da), Some(q8)) = (da, q8) {
+            assert!(
+                da < q8,
+                "doubly-adaptive {da} bits should beat 8-bit QSGD {q8}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_bits_per_element_ascend() {
+        let curves = run(tiny_base(), false).unwrap();
+        let da = curves
+            .iter()
+            .find(|c| c.label.starts_with("doubly-adaptive"))
+            .unwrap();
+        let first = da.log.records.first().unwrap().levels;
+        let last = da.log.records.last().unwrap().levels;
+        assert_eq!(first, 4);
+        assert!(last >= first);
+        // fixed QSGD stays fixed
+        let q4 = curves
+            .iter()
+            .find(|c| c.label.starts_with("QSGD-4bit"))
+            .unwrap();
+        assert!(q4
+            .log
+            .records
+            .iter()
+            .all(|r| r.levels == 16));
+    }
+
+    #[test]
+    fn variable_lr_runs_and_decays() {
+        let curves = run(tiny_base(), true).unwrap();
+        let r = &curves[0].log.records;
+        assert!(r.last().unwrap().lr < r.first().unwrap().lr);
+    }
+
+    #[test]
+    fn renders_nonempty() {
+        let curves = run(tiny_base(), false).unwrap();
+        assert!(render_loss_vs_bits(&curves).contains("panel:"));
+        assert!(render_bits_per_element(&curves).contains("panel:"));
+        assert!(bits_to_target(&curves, 1.0).contains("target"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Table I: quantization distortion comparison across quantizers.
+//!
+//! Measures the empirical normalized distortion E‖Q(v)−v‖²/‖v‖² of each
+//! quantizer on gaussian / laplace / real-gradient-like vectors and prints
+//! it beside the paper's analytical bound. Expected shape: LM ≪ QSGD and
+//! ALQ at equal s; natural compression floors at 1/8.
+
+use crate::metrics::{fnum, Table};
+use crate::quant::distortion::{
+    alq_bound, lm_bound, natural_bound, normalized_distortion, qsgd_bound,
+};
+use crate::quant::{
+    AlqQuantizer, LloydMaxQuantizer, NaturalQuantizer, QsgdQuantizer,
+    Quantizer,
+};
+use crate::util::rng::Rng;
+
+/// One measured row of Table I.
+#[derive(Clone, Debug)]
+pub struct DistortionRow {
+    pub quantizer: &'static str,
+    pub dist_name: &'static str,
+    pub d: usize,
+    pub s: usize,
+    pub measured: f64,
+    pub bound: f64,
+}
+
+/// Generate a test vector of the named distribution.
+pub fn test_vector(dist: &str, d: usize, rng: &mut Rng) -> Vec<f32> {
+    match dist {
+        "gaussian" => (0..d).map(|_| rng.normal() as f32).collect(),
+        "laplace" => (0..d).map(|_| rng.laplace(0.5) as f32).collect(),
+        // "gradient": sparse-ish heavy-tailed values like real model deltas
+        "gradient" => (0..d)
+            .map(|_| {
+                let mag = rng.laplace(0.1) as f32;
+                if rng.uniform() < 0.7 {
+                    mag * 0.05
+                } else {
+                    mag
+                }
+            })
+            .collect(),
+        other => panic!("unknown distribution {other}"),
+    }
+}
+
+/// Measure all quantizers at (d, s) on `dist`, averaged over `trials`.
+pub fn measure(
+    d: usize,
+    s: usize,
+    dist: &'static str,
+    trials: usize,
+    seed: u64,
+) -> Vec<DistortionRow> {
+    let mut rng = Rng::new(seed);
+    let mut quantizers: Vec<(Box<dyn Quantizer>, Box<dyn Fn(&[f32]) -> f64>)> = vec![
+        (
+            Box::new(QsgdQuantizer::new(s)),
+            Box::new(move |_: &[f32]| qsgd_bound(d, s)),
+        ),
+        (
+            Box::new(NaturalQuantizer::new(s)),
+            Box::new(move |_: &[f32]| natural_bound(d, s)),
+        ),
+        (
+            Box::new(AlqQuantizer::new(s)),
+            Box::new(move |levels: &[f32]| alq_bound(levels)),
+        ),
+        (
+            Box::new(LloydMaxQuantizer::new(s, 20)),
+            Box::new(move |_: &[f32]| lm_bound(d, s)),
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (q, bound_fn) in quantizers.iter_mut() {
+        let mut acc = 0.0;
+        let mut bound = 0.0;
+        for t in 0..trials {
+            let v = test_vector(dist, d, &mut rng.split(t as u64));
+            let msg = q.quantize(&v, &mut rng);
+            let dq = msg.dequantize();
+            acc += normalized_distortion(&v, &dq);
+            bound = bound_fn(&msg.levels);
+        }
+        rows.push(DistortionRow {
+            quantizer: match q.name() {
+                "qsgd" => "QSGD",
+                "natural" => "Natural",
+                "alq" => "ALQ",
+                "lloyd_max" => "LM-DFL",
+                other => Box::leak(other.to_string().into_boxed_str()),
+            },
+            dist_name: dist,
+            d,
+            s,
+            measured: acc / trials as f64,
+            bound,
+        });
+    }
+    rows
+}
+
+/// Render the full table (the bench prints this).
+pub fn render(rows: &[DistortionRow]) -> String {
+    let mut t = Table::new(&[
+        "quantizer", "distribution", "d", "s", "measured", "paper bound",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.quantizer.to_string(),
+            r.dist_name.to_string(),
+            r.d.to_string(),
+            r.s.to_string(),
+            fnum(r.measured),
+            fnum(r.bound),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_beats_qsgd_and_alq_on_all_distributions() {
+        for dist in ["gaussian", "laplace", "gradient"] {
+            let rows = measure(2000, 16, dist, 3, 42);
+            let get = |name: &str| {
+                rows.iter().find(|r| r.quantizer == name).unwrap().measured
+            };
+            let lm = get("LM-DFL");
+            assert!(
+                lm < get("QSGD"),
+                "{dist}: LM {lm} !< QSGD {}",
+                get("QSGD")
+            );
+            assert!(
+                lm < get("ALQ") * 1.05,
+                "{dist}: LM {lm} !< ALQ {}",
+                get("ALQ")
+            );
+        }
+    }
+
+    #[test]
+    fn measured_within_bounds() {
+        // stochastic quantizers measured on a single draw can exceed the
+        // expectation bound slightly; allow 3x
+        let rows = measure(4000, 16, "gaussian", 3, 1);
+        for r in &rows {
+            assert!(
+                r.measured <= r.bound * 3.0 + 0.01,
+                "{}: measured {} bound {}",
+                r.quantizer,
+                r.measured,
+                r.bound
+            );
+        }
+    }
+
+    #[test]
+    fn render_contains_all_quantizers() {
+        let rows = measure(500, 8, "gaussian", 1, 2);
+        let s = render(&rows);
+        for name in ["QSGD", "Natural", "ALQ", "LM-DFL"] {
+            assert!(s.contains(name), "{s}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! # lmdfl — Communication-Efficient Quantized Decentralized Federated Learning
+//!
+//! Production-grade reproduction of *"Communication-Efficient Design for
+//! Quantized Decentralized Federated Learning"* (Chen, Liu, Chen, Wang —
+//! 2023): LM-DFL (Lloyd-Max quantized gossip learning) and doubly-adaptive
+//! DFL (ascending quantization-level schedule), with the QSGD / natural
+//! compression / ALQ baselines, on a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! * **L3 (this crate)** — the decentralized training coordinator: topology,
+//!   gossip rounds, quantizers, wire codec, adaptive level control, metrics.
+//! * **L2/L1 (python/, build-time only)** — jax models + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed from [`runtime`] via
+//!   PJRT. Python never runs on the training path.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//! ```no_run
+//! use lmdfl::config::ExperimentConfig;
+//! use lmdfl::dfl::Trainer;
+//!
+//! let cfg = ExperimentConfig::default();
+//! let log = Trainer::build(&cfg).unwrap().run().unwrap();
+//! println!("final loss = {:?}", log.last_loss());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dfl;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod topology;
+pub mod util;

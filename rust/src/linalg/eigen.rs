@@ -1,0 +1,193 @@
+//! Cyclic Jacobi eigensolver for real symmetric matrices.
+//!
+//! Used to compute the full spectrum of the confusion matrix `C`; the paper
+//! characterizes topologies by ζ = max(|λ₂|, |λ_N|), the second-largest
+//! absolute eigenvalue (Assumption 1.5), which drives the convergence bound
+//! through α = ζ²/(1-ζ²) + ζ/(1-ζ)².
+
+use super::Matrix;
+
+/// Eigenvalues of a symmetric matrix, sorted descending.
+///
+/// Cyclic Jacobi sweeps; O(n³) per sweep, converges quadratically. The
+/// confusion matrices here are small (N ≲ a few hundred nodes), so this is
+/// more than fast enough and numerically robust.
+pub fn symmetric_eigenvalues(m: &Matrix) -> Vec<f64> {
+    assert_eq!(m.rows, m.cols, "eigenvalues need a square matrix");
+    debug_assert!(m.is_symmetric(1e-9), "matrix must be symmetric");
+    let n = m.rows;
+    if n == 0 {
+        return vec![];
+    }
+    let mut a = m.clone();
+    let max_sweeps = 100;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + a.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[(p, p)];
+                let aqq = a[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tangent of the rotation angle
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A <- G^T A G with Givens rotation G in plane (p, q)
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut evals: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    evals.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    evals
+}
+
+/// ζ = max(|λ₂|, |λ_N|) for a doubly-stochastic symmetric matrix whose
+/// leading eigenvalue is 1 (Assumption 1.5). The eigenvalue closest to 1
+/// is treated as λ₁ and excluded.
+pub fn second_largest_abs_eigenvalue(c: &Matrix) -> f64 {
+    let evals = symmetric_eigenvalues(c);
+    assert!(!evals.is_empty());
+    if evals.len() == 1 {
+        return 0.0;
+    }
+    // drop one eigenvalue closest to 1 (the Perron root)
+    let mut idx = 0;
+    let mut best = f64::INFINITY;
+    for (i, &e) in evals.iter().enumerate() {
+        let d = (e - 1.0).abs();
+        if d < best {
+            best = d;
+            idx = i;
+        }
+    }
+    evals
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != idx)
+        .map(|(_, &e)| e.abs())
+        .fold(0.0, f64::max)
+}
+
+/// α(ζ) = ζ²/(1-ζ²) + ζ/(1-ζ)² from Lemma 2 — the topology term of the
+/// convergence bound. Returns +inf at ζ = 1 (disconnected network).
+pub fn alpha_of_zeta(zeta: f64) -> f64 {
+    if zeta >= 1.0 {
+        return f64::INFINITY;
+    }
+    zeta * zeta / (1.0 - zeta * zeta) + zeta / ((1.0 - zeta) * (1.0 - zeta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut m = Matrix::zeros(3, 3);
+        m[(0, 0)] = 3.0;
+        m[(1, 1)] = -1.0;
+        m[(2, 2)] = 2.0;
+        let e = symmetric_eigenvalues(&m);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 2.0).abs() < 1e-10);
+        assert!((e[2] + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1
+        let m = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = symmetric_eigenvalues(&m);
+        assert!((e[0] - 3.0).abs() < 1e-10);
+        assert!((e[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let m = Matrix::from_rows(&[
+            &[4.0, 1.0, 0.5],
+            &[1.0, 3.0, -0.25],
+            &[0.5, -0.25, 1.0],
+        ]);
+        let e = symmetric_eigenvalues(&m);
+        let trace = 4.0 + 3.0 + 1.0;
+        assert!((e.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_matrix_zeta_zero() {
+        let j = Matrix::consensus(6);
+        let z = second_largest_abs_eigenvalue(&j);
+        assert!(z.abs() < 1e-10, "zeta(J)={z}");
+    }
+
+    #[test]
+    fn identity_zeta_one() {
+        let i = Matrix::identity(5);
+        let z = second_largest_abs_eigenvalue(&i);
+        assert!((z - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ring_eigenvalues_match_closed_form() {
+        // Uniform ring averaging over self + 2 neighbours:
+        // eigenvalues are (1 + 2cos(2*pi*k/n)) / 3.
+        let n = 8;
+        let mut c = Matrix::zeros(n, n);
+        for i in 0..n {
+            c[(i, i)] = 1.0 / 3.0;
+            c[(i, (i + 1) % n)] = 1.0 / 3.0;
+            c[(i, (i + n - 1) % n)] = 1.0 / 3.0;
+        }
+        let mut expect: Vec<f64> = (0..n)
+            .map(|k| {
+                (1.0 + 2.0 * (2.0 * std::f64::consts::PI * k as f64
+                    / n as f64)
+                    .cos())
+                    / 3.0
+            })
+            .collect();
+        expect.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let got = symmetric_eigenvalues(&c);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-9, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn alpha_monotone_in_zeta() {
+        let mut prev = alpha_of_zeta(0.0);
+        assert_eq!(prev, 0.0);
+        for i in 1..10 {
+            let z = i as f64 * 0.1;
+            let a = alpha_of_zeta(z);
+            assert!(a > prev);
+            prev = a;
+        }
+        assert!(alpha_of_zeta(1.0).is_infinite());
+    }
+}

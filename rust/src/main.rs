@@ -1,0 +1,315 @@
+//! lmdfl — CLI for the quantized decentralized federated learning system.
+//!
+//! Subcommands:
+//!   train      run a DFL training from a JSON config (or inline flags)
+//!   table1     regenerate Table I (distortion comparison)
+//!   fig4       regenerate Fig. 4 (adaptive vs fixed s)
+//!   fig6       regenerate Fig. 6 (--dataset mnist|cifar)
+//!   fig7       regenerate Fig. 7 (topology sweep)
+//!   fig8       regenerate Fig. 8 (--variable-lr for panels b/e)
+//!   topo       inspect a topology (confusion matrix, ζ, α)
+//!   quant      inspect quantizer bit costs and distortion bounds
+//!   artifacts  list AOT artifacts from the manifest
+
+use std::path::Path;
+
+use lmdfl::cli::Args;
+use lmdfl::config::{ExperimentConfig, QuantizerKind, TopologyKind};
+use lmdfl::experiments::{self, Scale};
+use lmdfl::metrics::{fnum, Table};
+
+const USAGE: &str = "\
+lmdfl <command> [options]
+
+commands:
+  train      --config <file.json> [--threaded] [--csv out.csv]
+             or inline: --nodes N --rounds K --tau T --quantizer q --s S
+                        --dataset synth_mnist|synth_cifar|blobs --lr F
+  table1     [--d N]... [--s N]... [--trials N]
+  fig4       [--full]
+  fig6       --dataset mnist|cifar [--full]
+  fig7       [--full]
+  fig8       --dataset mnist|cifar [--variable-lr] [--full]
+  topo       --kind full|ring|disconnected|star|torus|random --nodes N
+  quant      --d N --s N
+  artifacts  [--dir artifacts]
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scale_of(args: &Args) -> Scale {
+    if args.has_flag("full") {
+        Scale::Full
+    } else {
+        Scale::from_env()
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("table1") => cmd_table1(args),
+        Some("fig4") => cmd_fig4(args),
+        Some("fig6") => cmd_fig6(args),
+        Some("fig7") => cmd_fig7(args),
+        Some("fig8") => cmd_fig8(args),
+        Some("topo") => cmd_topo(args),
+        Some("quant") => cmd_quant(args),
+        Some("artifacts") => cmd_artifacts(args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    if let Some(path) = args.get("config") {
+        return Ok(lmdfl::config::load_config(Path::new(path))?);
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = args.get_or("name", "cli").to_string();
+    cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
+    cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
+    cfg.tau = args.get_usize("tau", cfg.tau)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.batch_size = args.get_usize("batch", cfg.batch_size)?;
+    cfg.lr = lmdfl::config::LrSchedule::fixed(
+        args.get_f64("lr", cfg.lr.base)?);
+    let s = args.get_usize("s", 16)?;
+    if let Some(q) = args.get("quantizer") {
+        cfg.quantizer = match q {
+            "full" => QuantizerKind::Full,
+            "qsgd" => QuantizerKind::Qsgd { s },
+            "natural" => QuantizerKind::Natural { s },
+            "alq" => QuantizerKind::Alq { s },
+            "lloyd_max" | "lm" => QuantizerKind::LloydMax { s, iters: 12 },
+            "doubly_adaptive" | "da" => QuantizerKind::DoublyAdaptive {
+                s1: args.get_usize("s1", 4)?,
+                iters: 12,
+                s_max: args.get_usize("s-max", 4096)?,
+            },
+            other => anyhow::bail!("unknown quantizer '{other}'"),
+        };
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = match d {
+            "synth_mnist" | "mnist" => lmdfl::config::DatasetKind::SynthMnist {
+                train: args.get_usize("train", 2000)?,
+                test: args.get_usize("test", 500)?,
+            },
+            "synth_cifar" | "cifar" => lmdfl::config::DatasetKind::SynthCifar {
+                train: args.get_usize("train", 2000)?,
+                test: args.get_usize("test", 500)?,
+            },
+            "blobs" => lmdfl::config::DatasetKind::Blobs {
+                train: args.get_usize("train", 2000)?,
+                test: args.get_usize("test", 500)?,
+                dim: args.get_usize("dim", 32)?,
+                classes: args.get_usize("classes", 10)?,
+            },
+            other => anyhow::bail!("unknown dataset '{other}'"),
+        };
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = match t {
+            "full" => TopologyKind::Full,
+            "ring" => TopologyKind::Ring,
+            "disconnected" => TopologyKind::Disconnected,
+            "star" => TopologyKind::Star,
+            "torus" => TopologyKind::Torus,
+            "random" => TopologyKind::Random {
+                p: args.get_f64("p", 0.4)?,
+            },
+            other => anyhow::bail!("unknown topology '{other}'"),
+        };
+    }
+    if let Some(a) = args.get("hlo") {
+        cfg.backend = lmdfl::config::BackendKind::Hlo {
+            artifact: a.to_string(),
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    println!("config:\n{}", cfg.to_json().to_pretty());
+    let log = if args.has_flag("threaded") {
+        lmdfl::dfl::Trainer::run_threaded(
+            &cfg,
+            lmdfl::dfl::NetOptions {
+                drop_prob: args.get_f64("drop-prob", 0.0)?,
+                eval_every: cfg.eval_every,
+            },
+        )?
+    } else {
+        lmdfl::dfl::Trainer::build(&cfg)?.run()?
+    };
+    let mut t = Table::new(&["round", "loss", "acc", "bits/link", "s_k"]);
+    let stride = (log.records.len() / 20).max(1);
+    for r in log.records.iter().step_by(stride) {
+        t.row(vec![
+            r.round.to_string(),
+            fnum(r.loss),
+            fnum(r.accuracy),
+            r.bits_per_link.to_string(),
+            r.levels.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "final: loss={} acc={} bits/link={} time@{}Mbps={:.1}ms",
+        fnum(log.last_loss().unwrap_or(f64::NAN)),
+        fnum(log.final_accuracy().unwrap_or(f64::NAN)),
+        log.total_bits(),
+        cfg.link_bps / 1e6,
+        log.total_bits() as f64 / cfg.link_bps * 1e3,
+    );
+    if let Some(csv) = args.get("csv") {
+        log.write_csv(Path::new(csv))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let trials = args.get_usize("trials", 3)?;
+    let mut rows = Vec::new();
+    for d in [1000usize, 10_000, 100_000] {
+        for s in [4usize, 16, 64, 256] {
+            for dist in ["gaussian", "laplace", "gradient"] {
+                rows.extend(experiments::table1::measure(
+                    d, s, dist, trials, 42));
+            }
+        }
+    }
+    println!("{}", experiments::table1::render(&rows));
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+    let curves = experiments::fig4::run_mnist(scale_of(args))?;
+    println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
+    println!("{}", experiments::fig8::render_bits_per_element(&curves));
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> anyhow::Result<()> {
+    let scale = scale_of(args);
+    let curves = match args.get_or("dataset", "mnist") {
+        "cifar" => experiments::fig6::run_cifar(scale)?,
+        _ => experiments::fig6::run_mnist(scale)?,
+    };
+    println!("{}", experiments::fig6::render_panels(&curves, 100e6));
+    Ok(())
+}
+
+fn cmd_fig7(args: &Args) -> anyhow::Result<()> {
+    for (label, zeta) in experiments::fig7::zetas(10) {
+        println!("{label}: zeta = {zeta:.4}");
+    }
+    let curves = experiments::fig7::run(scale_of(args))?;
+    println!("{}", experiments::fig7::render(&curves));
+    Ok(())
+}
+
+fn cmd_fig8(args: &Args) -> anyhow::Result<()> {
+    let scale = scale_of(args);
+    let var = args.has_flag("variable-lr");
+    let curves = match args.get_or("dataset", "mnist") {
+        "cifar" => experiments::fig8::run_cifar(scale, var)?,
+        _ => experiments::fig8::run_mnist(scale, var)?,
+    };
+    println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
+    println!("{}", experiments::fig8::render_bits_per_element(&curves));
+    Ok(())
+}
+
+fn cmd_topo(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("nodes", 10)?;
+    let kind = match args.get_or("kind", "ring") {
+        "full" => TopologyKind::Full,
+        "ring" => TopologyKind::Ring,
+        "disconnected" => TopologyKind::Disconnected,
+        "star" => TopologyKind::Star,
+        "torus" => TopologyKind::Torus,
+        "random" => TopologyKind::Random { p: args.get_f64("p", 0.4)? },
+        other => anyhow::bail!("unknown topology '{other}'"),
+    };
+    let t = lmdfl::topology::Topology::build(
+        &kind, n, args.get_u64("seed", 0)?);
+    println!(
+        "topology: {} n={} zeta={:.6} alpha={:.4} connected={}",
+        kind.name(),
+        n,
+        t.zeta,
+        t.alpha(),
+        t.is_connected()
+    );
+    println!("directed links: {}", t.directed_links());
+    if n <= 12 {
+        println!("confusion matrix C:");
+        for i in 0..n {
+            let row: Vec<String> =
+                (0..n).map(|j| format!("{:.3}", t.c[(i, j)])).collect();
+            println!("  [{}]", row.join(" "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_quant(args: &Args) -> anyhow::Result<()> {
+    let d = args.get_usize("d", 100_000)?;
+    let mut t = Table::new(&[
+        "s", "bits/elem", "C_s (bits)", "vs f32", "QSGD bound",
+        "natural bound", "LM bound",
+    ]);
+    for s in [2usize, 4, 16, 50, 64, 100, 256, 1024, 16384] {
+        let cs = lmdfl::quant::bits::c_s(d, s);
+        let full = lmdfl::quant::bits::full_precision_bits(d);
+        t.row(vec![
+            s.to_string(),
+            lmdfl::quant::bits::bits_per_element(s).to_string(),
+            cs.to_string(),
+            format!("{:.1}x", full as f64 / cs as f64),
+            fnum(lmdfl::quant::distortion::qsgd_bound(d, s)),
+            fnum(lmdfl::quant::distortion::natural_bound(d, s)),
+            fnum(lmdfl::quant::distortion::lm_bound(d, s)),
+        ]);
+    }
+    println!("d = {d}");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(lmdfl::runtime::artifacts_dir);
+    let m = lmdfl::runtime::Manifest::load(&dir)?;
+    let mut t = Table::new(&["artifact", "kind", "params", "batch", "file"]);
+    for (name, a) in &m.artifacts {
+        t.row(vec![
+            name.clone(),
+            a.kind.clone(),
+            a.params.map(|p| p.to_string()).unwrap_or_default(),
+            a.batch.map(|b| b.to_string()).unwrap_or_default(),
+            a.file.file_name().unwrap().to_string_lossy().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

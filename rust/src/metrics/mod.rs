@@ -1,0 +1,285 @@
+//! Training metrics: per-round records, CSV/JSON writers, run summaries.
+//!
+//! Every experiment driver appends [`RoundRecord`]s to a [`RunLog`]; the
+//! figure benches print the same series the paper plots (loss vs iteration,
+//! loss vs communicated bits / time progression, accuracy, distortion).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::config::json::Json;
+
+/// One communication round's measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// global loss F(u_k) on the averaged model
+    pub loss: f64,
+    /// test accuracy of the averaged model (NaN if not evaluated)
+    pub accuracy: f64,
+    /// cumulative bits sent over a single directed link (paper's B metric)
+    pub bits_per_link: u64,
+    /// normalized quantization distortion E||Q(x)-x||^2 / ||x||^2 this round
+    pub distortion: f64,
+    /// number of quantization levels used this round (s_k)
+    pub levels: usize,
+    /// learning rate used this round
+    pub lr: f64,
+    /// wall-clock seconds spent in this round
+    pub wall_secs: f64,
+}
+
+/// A full run: config echo + round series.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        RunLog { name: name.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| !r.accuracy.is_nan())
+            .map(|r| r.accuracy)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.records.last().map_or(0, |r| r.bits_per_link)
+    }
+
+    /// Time progression in seconds at the paper's link rate.
+    pub fn time_progression(&self, link_bps: f64) -> Vec<f64> {
+        self.records
+            .iter()
+            .map(|r| r.bits_per_link as f64 / link_bps)
+            .collect()
+    }
+
+    /// First round index at which loss <= target (communication-efficiency
+    /// comparisons: "bits to reach targeted training loss").
+    pub fn rounds_to_loss(&self, target: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.loss <= target).map(|r| r.round)
+    }
+
+    /// Bits on one link needed to reach the target loss.
+    pub fn bits_to_loss(&self, target: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.loss <= target)
+            .map(|r| r.bits_per_link)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,loss,accuracy,bits_per_link,distortion,levels,lr,wall_secs\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                r.round,
+                r.loss,
+                r.accuracy,
+                r.bits_per_link,
+                r.distortion,
+                r.levels,
+                r.lr,
+                r.wall_secs
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::num(r.round as f64)),
+                                ("loss", Json::num(r.loss)),
+                                ("accuracy", Json::num(r.accuracy)),
+                                (
+                                    "bits_per_link",
+                                    Json::num(r.bits_per_link as f64),
+                                ),
+                                ("distortion", Json::num(r.distortion)),
+                                ("levels", Json::num(r.levels as f64)),
+                                ("lr", Json::num(r.lr)),
+                                ("wall_secs", Json::num(r.wall_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Console table printer for the figure benches — fixed-width columns so
+/// the bench output reads like the paper's series.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", c, w = width[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style short precision for tables.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e6 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, loss: f64, bits: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss,
+            accuracy: f64::NAN,
+            bits_per_link: bits,
+            distortion: 0.01,
+            levels: 16,
+            lr: 0.05,
+            wall_secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 2.0, 100));
+        log.push(rec(2, 1.0, 200));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("round,loss"));
+    }
+
+    #[test]
+    fn bits_and_rounds_to_loss() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 2.0, 100));
+        log.push(rec(2, 1.0, 200));
+        log.push(rec(3, 0.5, 300));
+        assert_eq!(log.rounds_to_loss(1.0), Some(2));
+        assert_eq!(log.bits_to_loss(0.6), Some(300));
+        assert_eq!(log.bits_to_loss(0.1), None);
+        assert_eq!(log.total_bits(), 300);
+    }
+
+    #[test]
+    fn time_progression_scales_bits() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 2.0, 100_000_000));
+        let t = log.time_progression(100e6);
+        assert!((t[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips_structure() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 2.0, 100));
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get_str("name"), Some("t"));
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "metric"]);
+        t.row(vec!["1".into(), "2.5".into()]);
+        t.row(vec!["100".into(), "3".into()]);
+        let s = t.render();
+        assert!(s.contains("a  metric"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(0.0), "0");
+        assert!(fnum(1234567.0).contains('e'));
+        assert!(fnum(0.25).starts_with("0.25"));
+    }
+}

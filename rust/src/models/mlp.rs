@@ -1,0 +1,386 @@
+//! MLP with hand-derived gradients over a flat parameter vector.
+//!
+//! Layout matches python/compile/model.py `mlp_spec`: per layer, W
+//! (in×out, row-major) then b (out). ReLU hidden activations, linear
+//! output, mean softmax cross-entropy — the exact computation the HLO
+//! artifact `mlp_mnist_step` performs, reimplemented natively so sweeps
+//! don't pay PJRT dispatch.
+
+use super::xent_row;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub dims: Vec<usize>,
+    /// (w_offset, b_offset) per layer into the flat vector
+    offsets: Vec<(usize, usize)>,
+    total: usize,
+}
+
+/// Reusable forward/backward scratch so the τ-step inner loop allocates
+/// nothing (hot-path requirement; see DESIGN.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct MlpScratch {
+    /// activations per layer: a[0] = input batch, a[L] = logits
+    acts: Vec<Vec<f32>>,
+    /// gradient buffers per layer (same shapes as acts[1..])
+    deltas: Vec<Vec<f32>>,
+}
+
+impl MlpModel {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        let mut offsets = Vec::new();
+        let mut total = 0usize;
+        for i in 0..dims.len() - 1 {
+            offsets.push((total, total + dims[i] * dims[i + 1]));
+            total += dims[i] * dims[i + 1] + dims[i + 1];
+        }
+        MlpModel { dims: dims.to_vec(), offsets, total }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.total
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// He-style init matching the jax models' N(0, 0.05) scale.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.total];
+        rng.fill_normal(&mut p, 0.0, 0.05);
+        // zero biases
+        for (l, &(_, b_off)) in self.offsets.iter().enumerate() {
+            for v in &mut p[b_off..b_off + self.dims[l + 1]] {
+                *v = 0.0;
+            }
+        }
+        p
+    }
+
+    fn w<'a>(&self, params: &'a [f32], layer: usize) -> &'a [f32] {
+        let (w_off, b_off) = self.offsets[layer];
+        &params[w_off..b_off]
+    }
+
+    fn b<'a>(&self, params: &'a [f32], layer: usize) -> &'a [f32] {
+        let (_, b_off) = self.offsets[layer];
+        &params[b_off..b_off + self.dims[layer + 1]]
+    }
+
+    /// Forward pass on a batch. `x` is batch-major (batch × dims[0]).
+    /// Fills `scratch.acts`; returns nothing (logits live in last act).
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize,
+               scratch: &mut MlpScratch) {
+        let nl = self.layers();
+        scratch.acts.resize(nl + 1, Vec::new());
+        scratch.acts[0].clear();
+        scratch.acts[0].extend_from_slice(x);
+        for l in 0..nl {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let w = self.w(params, l);
+            let bias = self.b(params, l);
+            // split_at_mut dance: read acts[l], write acts[l+1]
+            let (head, tail) = scratch.acts.split_at_mut(l + 1);
+            let input = &head[l];
+            let out = &mut tail[0];
+            out.clear();
+            out.resize(batch * dout, 0.0);
+            for bi in 0..batch {
+                let xrow = &input[bi * din..(bi + 1) * din];
+                let orow = &mut out[bi * dout..(bi + 1) * dout];
+                orow.copy_from_slice(bias);
+                for (i, &xi) in xrow.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[i * dout..(i + 1) * dout];
+                    for (o, &wij) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wij;
+                    }
+                }
+                if l + 1 < nl {
+                    for o in orow.iter_mut() {
+                        if *o < 0.0 {
+                            *o = 0.0; // ReLU
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mean loss + gradient into `grad` (len = param_count). Returns loss.
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        grad: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) -> f64 {
+        let batch = y.len();
+        assert_eq!(x.len(), batch * self.dims[0]);
+        assert_eq!(grad.len(), self.total);
+        self.forward(params, x, batch, scratch);
+        let nl = self.layers();
+        scratch.deltas.resize(nl, Vec::new());
+        grad.iter_mut().for_each(|g| *g = 0.0);
+
+        // output delta: softmax - onehot, averaged over batch
+        let classes = self.classes();
+        let mut loss = 0.0f64;
+        {
+            let logits = &scratch.acts[nl];
+            let delta = &mut scratch.deltas[nl - 1];
+            delta.clear();
+            delta.resize(batch * classes, 0.0);
+            for bi in 0..batch {
+                let lrow = &logits[bi * classes..(bi + 1) * classes];
+                let drow = &mut delta[bi * classes..(bi + 1) * classes];
+                loss += xent_row(lrow, y[bi] as usize, drow) as f64;
+            }
+        }
+        loss /= batch as f64;
+        let inv_b = 1.0 / batch as f32;
+
+        // backprop layers top-down
+        for l in (0..nl).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let (w_off, b_off) = self.offsets[l];
+            // dW = a_l^T delta ; db = sum(delta)
+            {
+                let input = &scratch.acts[l];
+                let delta = &scratch.deltas[l];
+                let gw = &mut grad[w_off..b_off];
+                for bi in 0..batch {
+                    let xrow = &input[bi * din..(bi + 1) * din];
+                    let drow = &delta[bi * dout..(bi + 1) * dout];
+                    for (i, &xi) in xrow.iter().enumerate() {
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        let gww = &mut gw[i * dout..(i + 1) * dout];
+                        let scale = xi * inv_b;
+                        for (g, &d) in gww.iter_mut().zip(drow) {
+                            *g += scale * d;
+                        }
+                    }
+                }
+                let gb = &mut grad[b_off..b_off + dout];
+                for bi in 0..batch {
+                    let drow = &delta[bi * dout..(bi + 1) * dout];
+                    for (g, &d) in gb.iter_mut().zip(drow) {
+                        *g += inv_b * d;
+                    }
+                }
+            }
+            // delta_{l-1} = (delta_l W^T) ⊙ relu'(a_l)
+            if l > 0 {
+                let w = self.w(params, l);
+                let (head, tail) = scratch.deltas.split_at_mut(l);
+                let delta = &tail[0];
+                let prev = &mut head[l - 1];
+                prev.clear();
+                prev.resize(batch * din, 0.0);
+                let acts_l = &scratch.acts[l];
+                for bi in 0..batch {
+                    let drow = &delta[bi * dout..(bi + 1) * dout];
+                    let prow = &mut prev[bi * din..(bi + 1) * din];
+                    let arow = &acts_l[bi * din..(bi + 1) * din];
+                    for i in 0..din {
+                        if arow[i] <= 0.0 {
+                            continue; // ReLU gate (also skips the matmul)
+                        }
+                        let wrow = &w[i * dout..(i + 1) * dout];
+                        let mut acc = 0.0f32;
+                        for (&wij, &d) in wrow.iter().zip(drow) {
+                            acc += wij * d;
+                        }
+                        prow[i] = acc;
+                    }
+                }
+            }
+        }
+        loss
+    }
+
+    /// One SGD step in place; returns the batch loss (pre-update).
+    pub fn sgd_step(
+        &self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[u32],
+        lr: f32,
+        grad: &mut [f32],
+        scratch: &mut MlpScratch,
+    ) -> f64 {
+        let loss = self.loss_grad(params, x, y, grad, scratch);
+        for (p, &g) in params.iter_mut().zip(grad.iter()) {
+            *p -= lr * g;
+        }
+        loss
+    }
+
+    /// Mean loss + correct count on a labeled set.
+    pub fn evaluate(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+    ) -> (f64, usize) {
+        let batch = y.len();
+        let mut scratch = MlpScratch::default();
+        self.forward(params, x, batch, &mut scratch);
+        let classes = self.classes();
+        let logits = &scratch.acts[self.layers()];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut dump = vec![0.0f32; classes];
+        for bi in 0..batch {
+            let lrow = &logits[bi * classes..(bi + 1) * classes];
+            loss += xent_row(lrow, y[bi] as usize, &mut dump) as f64;
+            // first-max argmax (matches jnp.argmax tie-breaking)
+            let mut pred = 0usize;
+            for (c, &v) in lrow.iter().enumerate() {
+                if v > lrow[pred] {
+                    pred = c;
+                }
+            }
+            if pred == y[bi] as usize {
+                correct += 1;
+            }
+        }
+        (loss / batch as f64, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn finite_diff_check(dims: &[usize], seed: u64) {
+        let model = MlpModel::new(dims);
+        let mut rng = Rng::new(seed);
+        let params = model.init_params(&mut rng);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * dims[0])
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let y: Vec<u32> = (0..batch)
+            .map(|_| rng.below(*dims.last().unwrap()) as u32)
+            .collect();
+        let mut grad = vec![0.0f32; model.param_count()];
+        let mut scratch = MlpScratch::default();
+        let base =
+            model.loss_grad(&params, &x, &y, &mut grad, &mut scratch);
+        // check a few random coordinates by central differences
+        let eps = 1e-3f32;
+        let mut dump = vec![0.0f32; model.param_count()];
+        for _ in 0..12 {
+            let k = rng.below(model.param_count());
+            let mut pp = params.clone();
+            pp[k] += eps;
+            let lp = model.loss_grad(&pp, &x, &y, &mut dump, &mut scratch);
+            pp[k] -= 2.0 * eps;
+            let lm = model.loss_grad(&pp, &x, &y, &mut dump, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - grad[k] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "coord {k}: fd={fd} analytic={} (base loss {base})",
+                grad[k]
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        finite_diff_check(&[5, 8, 3], 0);
+        finite_diff_check(&[7, 4], 1); // logistic regression case
+        finite_diff_check(&[6, 10, 10, 4], 2); // two hidden layers
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let m = MlpModel::new(&[784, 256, 128, 10]);
+        assert_eq!(
+            m.param_count(),
+            784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10
+        );
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns_blobs() {
+        let data = crate::data::blobs::generate(300, 100, 8, 3, 5);
+        let model = MlpModel::new(&[8, 16, 3]);
+        let mut rng = Rng::new(7);
+        let mut params = model.init_params(&mut rng);
+        let mut grad = vec![0.0f32; model.param_count()];
+        let mut scratch = MlpScratch::default();
+        let mut sampler = crate::data::BatchSampler::new(
+            (0..data.train_n()).collect(),
+            Rng::new(8),
+        );
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let idx = sampler.next_batch(32);
+            let (x, y) = data.gather_batch(&idx);
+            last = model.sgd_step(
+                &mut params, &x, &y, 0.1, &mut grad, &mut scratch);
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() * 0.5, "{last} vs {first:?}");
+        let (loss, correct) =
+            model.evaluate(&params, &data.test_x, &data.test_y);
+        assert!(loss < 0.5);
+        assert!(correct as f64 / data.test_n() as f64 > 0.85);
+    }
+
+    #[test]
+    fn evaluate_counts_match_manual_argmax() {
+        let model = MlpModel::new(&[4, 3]);
+        let params = vec![0.0f32; model.param_count()];
+        // zero params → uniform logits → argmax = class 0
+        let x = vec![1.0f32; 8];
+        let y = vec![0u32, 1];
+        let (_, correct) = model.evaluate(&params, &x, &y);
+        assert_eq!(correct, 1);
+    }
+
+    #[test]
+    fn prop_gradient_zero_at_uniform_when_labels_balanced() {
+        // with zero params the logit gradient rows are softmax-uniform;
+        // bias gradient for class c is (1/C - freq(c))·(-1)... just check
+        // gradient is finite and loss = ln(C)
+        check("mlp zero-params loss ln C", 20, |g| {
+            let classes = g.usize_in(2..6);
+            let din = g.usize_in(2..10);
+            let model = MlpModel::new(&[din, classes]);
+            let params = vec![0.0f32; model.param_count()];
+            let batch = g.usize_in(1..8);
+            let x: Vec<f32> =
+                (0..batch * din).map(|_| g.f32_in(-1.0..1.0)).collect();
+            let y: Vec<u32> = (0..batch)
+                .map(|_| g.usize_in(0..classes) as u32)
+                .collect();
+            let mut grad = vec![0.0f32; model.param_count()];
+            let mut scratch = MlpScratch::default();
+            let loss = model.loss_grad(
+                &params, &x, &y, &mut grad, &mut scratch);
+            assert!((loss - (classes as f64).ln()).abs() < 1e-5);
+            assert!(grad.iter().all(|g| g.is_finite()));
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! Pure-Rust model substrate: an MLP with hand-derived gradients.
+//!
+//! Mirrors the L2 jax MLP (python/compile/model.py) on the same flat
+//! parameter layout, so the DFL engine can run fast multi-config sweeps
+//! without PJRT in the loop; the HLO backend (runtime::HloBackend) is the
+//! production path and the integration tests assert the two agree.
+
+pub mod mlp;
+
+pub use mlp::MlpModel;
+
+/// Numerically stable log-sum-exp over a logits row.
+pub(crate) fn log_sum_exp(row: &[f32]) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let s: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Softmax cross-entropy loss and probability-space gradient for one row:
+/// grad = softmax(logits) - onehot(y).
+pub(crate) fn xent_row(
+    logits: &[f32],
+    y: usize,
+    grad: &mut [f32],
+) -> f32 {
+    let lse = log_sum_exp(logits);
+    for (g, &l) in grad.iter_mut().zip(logits) {
+        *g = (l - lse).exp();
+    }
+    grad[y] -= 1.0;
+    lse - logits[y]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_sum_exp_stable() {
+        let row = [1000.0f32, 1000.0];
+        let lse = log_sum_exp(&row);
+        assert!((lse - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn xent_uniform_logits() {
+        let logits = [0.0f32; 4];
+        let mut grad = [0.0f32; 4];
+        let loss = xent_row(&logits, 2, &mut grad);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+        assert!((grad[0] - 0.25).abs() < 1e-6);
+        assert!((grad[2] + 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,146 @@
+//! Doubly-adaptive level-count controller (paper §V, Eq. 36-37).
+//!
+//! The optimal number of quantization levels grows as training loss falls:
+//!
+//!   s_k ≈ √(F(u₁)/F(u_k)) · s₁
+//!
+//! Intuition (paper): early training has fast loss descent — coarse
+//! quantization suffices; near convergence fine quantization is needed for
+//! the remaining small gradient steps. Each node evaluates s_k from its
+//! *local* loss (Algorithm 3 step 8) since the global F(u_k) is not
+//! observable in a decentralized system.
+
+/// Per-node ascending-s controller.
+#[derive(Clone, Debug)]
+pub struct AdaptiveLevels {
+    /// initial level count s₁
+    pub s1: usize,
+    /// cap (memory/bit-width guard)
+    pub s_max: usize,
+    /// F_i(x₁) — loss at the first round, set on first observation
+    f1: Option<f64>,
+    /// monotone guard: s_k never decreases (ascending schedule)
+    last_s: usize,
+}
+
+impl AdaptiveLevels {
+    pub fn new(s1: usize, s_max: usize) -> Self {
+        assert!(s1 >= 2 && s_max >= s1);
+        AdaptiveLevels { s1, s_max, f1: None, last_s: s1 }
+    }
+
+    /// Observe the current loss and return s_k (Eq. 37). The first call
+    /// pins F₁ and returns s₁.
+    pub fn update(&mut self, loss: f64) -> usize {
+        let loss = loss.max(1e-12);
+        let f1 = *self.f1.get_or_insert(loss);
+        let ratio = (f1 / loss).max(0.0).sqrt();
+        let s = (self.s1 as f64 * ratio).round() as usize;
+        let s = s.clamp(self.s1, self.s_max);
+        // ascending schedule: loss is noisy, never step s back down
+        self.last_s = self.last_s.max(s);
+        self.last_s
+    }
+
+    /// Current s without observing a new loss.
+    pub fn current(&self) -> usize {
+        self.last_s
+    }
+
+    /// Reset (new run).
+    pub fn reset(&mut self) {
+        self.f1 = None;
+        self.last_s = self.s1;
+    }
+}
+
+/// A fixed or scripted schedule — used by the Fig. 4 ablation to compare
+/// ascending vs fixed vs descending level counts.
+#[derive(Clone, Debug)]
+pub enum LevelSchedule {
+    Fixed(usize),
+    /// Adaptive per Eq. 37.
+    Ascending(AdaptiveLevels),
+    /// Inverse of the adaptive rule (ablation: starts fine, gets coarse).
+    Descending { s1: usize, s_min: usize, f1: Option<f64> },
+}
+
+impl LevelSchedule {
+    pub fn next(&mut self, loss: f64) -> usize {
+        match self {
+            LevelSchedule::Fixed(s) => *s,
+            LevelSchedule::Ascending(a) => a.update(loss),
+            LevelSchedule::Descending { s1, s_min, f1 } => {
+                let loss = loss.max(1e-12);
+                let f1v = *f1.get_or_insert(loss);
+                let ratio = (loss / f1v).sqrt(); // inverse of Eq. 37
+                (((*s1 as f64) * ratio).round() as usize)
+                    .clamp(*s_min, *s1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_call_returns_s1() {
+        let mut a = AdaptiveLevels::new(4, 1024);
+        assert_eq!(a.update(2.3), 4);
+        assert_eq!(a.current(), 4);
+    }
+
+    #[test]
+    fn follows_sqrt_rule() {
+        let mut a = AdaptiveLevels::new(4, 1 << 20);
+        a.update(1.0);
+        // loss 1/4 => sqrt(4) = 2x levels
+        assert_eq!(a.update(0.25), 8);
+        // loss 1/100 => 10x
+        assert_eq!(a.update(0.01), 40);
+    }
+
+    #[test]
+    fn ascending_guard_never_decreases() {
+        let mut a = AdaptiveLevels::new(4, 1024);
+        a.update(1.0);
+        let s_low = a.update(0.0625); // 16
+        assert_eq!(s_low, 16);
+        // noisy loss spike must not reduce s
+        assert_eq!(a.update(0.5), 16);
+        assert!(a.update(0.01) >= 16);
+    }
+
+    #[test]
+    fn capped_at_s_max() {
+        let mut a = AdaptiveLevels::new(4, 32);
+        a.update(1.0);
+        assert_eq!(a.update(1e-9), 32);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut a = AdaptiveLevels::new(4, 64);
+        a.update(1.0);
+        a.update(0.01);
+        a.reset();
+        assert_eq!(a.update(5.0), 4);
+    }
+
+    #[test]
+    fn descending_schedule_inverse() {
+        let mut d = LevelSchedule::Descending { s1: 64, s_min: 2, f1: None };
+        assert_eq!(d.next(1.0), 64);
+        assert_eq!(d.next(0.25), 32);
+        assert_eq!(d.next(1e-9), 2);
+    }
+
+    #[test]
+    fn fixed_schedule_constant() {
+        let mut f = LevelSchedule::Fixed(16);
+        assert_eq!(f.next(9.0), 16);
+        assert_eq!(f.next(0.001), 16);
+    }
+}

@@ -1,0 +1,74 @@
+//! Bit accounting (paper Eq. 12): C_s = d⌈log₂ s⌉ + d + 32.
+//!
+//! Transmitting one quantized vector costs: ⌈log₂ s⌉ bits per element for
+//! the level index, 1 bit per element for the sign, and 32 bits for the
+//! full-precision ‖v‖. The paper measures "communicated bits" as the
+//! cumulative C_s over a single directed link.
+
+/// ⌈log₂ s⌉ for s >= 1.
+pub fn ceil_log2(s: usize) -> u32 {
+    assert!(s >= 1);
+    if s == 1 {
+        0
+    } else {
+        (usize::BITS - (s - 1).leading_zeros()) as u32
+    }
+}
+
+/// C_s (Eq. 12) for a d-dimensional vector with s levels.
+pub fn c_s(d: usize, s: usize) -> u64 {
+    d as u64 * ceil_log2(s) as u64 + d as u64 + 32
+}
+
+/// Bits for a full-precision (unquantized) exchange of d f32 elements.
+pub fn full_precision_bits(d: usize) -> u64 {
+    d as u64 * 32 + 32
+}
+
+/// Bits-per-element for the quantized message (paper Fig. 8c/f series is
+/// ⌈log₂ s_k⌉).
+pub fn bits_per_element(s: usize) -> u32 {
+    ceil_log2(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(16), 4);
+        assert_eq!(ceil_log2(17), 5);
+        assert_eq!(ceil_log2(256), 8);
+        assert_eq!(ceil_log2(16000), 14);
+    }
+
+    #[test]
+    fn c_s_matches_paper_formula() {
+        // d=100, s=16: 100*4 + 100 + 32 = 532
+        assert_eq!(c_s(100, 16), 532);
+        // s=4 => 2 bits/elem (paper's "2 bits quantization")
+        assert_eq!(c_s(10, 4), 10 * 2 + 10 + 32);
+        // s=256 => 8 bits/elem
+        assert_eq!(c_s(10, 256), 10 * 8 + 10 + 32);
+    }
+
+    #[test]
+    fn quantized_cheaper_than_full_precision() {
+        let d = 10_000;
+        for s in [2usize, 4, 16, 256, 1024] {
+            assert!(c_s(d, s) < full_precision_bits(d));
+        }
+    }
+
+    #[test]
+    fn monotone_in_s_and_d() {
+        assert!(c_s(100, 4) <= c_s(100, 16));
+        assert!(c_s(100, 16) <= c_s(1000, 16));
+    }
+}

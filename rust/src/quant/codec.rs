@@ -1,0 +1,342 @@
+//! Wire codec: packs a [`QuantizedVector`] into an actual bitstream.
+//!
+//! The threaded DFL runtime (dfl::net) ships these bytes over channels, so
+//! reported wire sizes are *measured*, not estimated. Format (little-endian
+//! bit order within bytes):
+//!
+//! ```text
+//! u32  d                 element count
+//! u16  s                 level count
+//! u8   flags             bit0: table present (1) or implied (0)
+//! f32  norm
+//! [f32; s]               level table   (only if table present)
+//! d bits                 signs (1 = negative)
+//! d * ceil_log2(s) bits  level indices
+//! padding to byte
+//! ```
+
+use super::QuantizedVector;
+use crate::quant::bits::ceil_log2;
+
+#[derive(Debug, thiserror::Error)]
+#[error("codec error: {0}")]
+pub struct CodecError(pub String);
+
+/// Bit-level writer, LSB-first within each byte. Word-wise accumulator —
+/// bits are staged in a u64 and flushed a byte at a time, so `write_bits`
+/// is O(bytes), not O(bits) (the encode hot path; see DESIGN.md §Perf).
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// staged bits (LSB-first), `nacc` of them valid
+    acc: u64,
+    nacc: u32,
+    bitpos: usize,
+}
+
+impl Default for BitWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        BitWriter { buf: Vec::new(), acc: 0, nacc: 0, bitpos: 0 }
+    }
+
+    #[inline]
+    fn flush_bytes(&mut self) {
+        while self.nacc >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nacc -= 8;
+        }
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write the low `nbits` of `value`.
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, nbits: u32) {
+        debug_assert!(nbits <= 56, "write_bits supports up to 56 bits");
+        let value = if nbits == 0 {
+            return;
+        } else {
+            value & (u64::MAX >> (64 - nbits))
+        };
+        // nacc < 8 after every flush, so nacc + nbits <= 63 always fits
+        self.acc |= value << self.nacc;
+        self.nacc += nbits;
+        self.bitpos += nbits as usize;
+        self.flush_bytes();
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.write_bits(v as u64, 8);
+    }
+
+    pub fn write_u16(&mut self, v: u16) {
+        self.write_bits(v as u64, 16);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bits(v as u64, 32);
+    }
+
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_u32(v.to_bits());
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bitpos
+    }
+
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.nacc > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+}
+
+/// Bit-level reader matching [`BitWriter`] — same u64 staging.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// next unread byte
+    pos: usize,
+    acc: u64,
+    nacc: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, acc: 0, nacc: 0 }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool, CodecError> {
+        Ok(self.read_bits(1)? == 1)
+    }
+
+    #[inline]
+    pub fn read_bits(&mut self, nbits: u32) -> Result<u64, CodecError> {
+        debug_assert!(nbits <= 56);
+        while self.nacc < nbits {
+            if self.pos >= self.buf.len() {
+                return Err(CodecError("out of bits".into()));
+            }
+            self.acc |= (self.buf[self.pos] as u64) << self.nacc;
+            self.pos += 1;
+            self.nacc += 8;
+        }
+        if nbits == 0 {
+            return Ok(0);
+        }
+        let v = self.acc & (u64::MAX >> (64 - nbits));
+        self.acc >>= nbits;
+        self.nacc -= nbits;
+        Ok(v)
+    }
+
+    pub fn read_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.read_bits(8)? as u8)
+    }
+
+    pub fn read_u16(&mut self) -> Result<u16, CodecError> {
+        Ok(self.read_bits(16)? as u16)
+    }
+
+    pub fn read_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(self.read_bits(32)? as u32)
+    }
+
+    pub fn read_f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.read_u32()?))
+    }
+}
+
+/// Exact encoded size in bits for (d, s, implied_table).
+pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
+    let header = 32 + 16 + 8 + 32u64;
+    let table = if implied_table { 0 } else { 32 * s as u64 };
+    let signs = d as u64;
+    let indices = d as u64 * ceil_log2(s) as u64;
+    let total = header + table + signs + indices;
+    // padding to byte boundary
+    (total + 7) / 8 * 8
+}
+
+/// Encode a quantized vector to bytes.
+pub fn encode(qv: &QuantizedVector) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_u32(qv.dim() as u32);
+    w.write_u16(qv.s() as u16);
+    w.write_u8(if qv.implied_table { 0 } else { 1 });
+    w.write_f32(qv.norm);
+    if !qv.implied_table {
+        for &l in &qv.levels {
+            w.write_f32(l);
+        }
+    }
+    for &n in &qv.negative {
+        w.write_bit(n);
+    }
+    let idx_bits = ceil_log2(qv.s());
+    for &i in &qv.indices {
+        w.write_bits(i as u64, idx_bits);
+    }
+    w.into_bytes()
+}
+
+/// Decode. `implied_levels` supplies the level table when the flag says it
+/// was not shipped (fixed-grid quantizers): callback from s -> table.
+pub fn decode(
+    bytes: &[u8],
+    implied_levels: impl Fn(usize) -> Vec<f32>,
+) -> Result<QuantizedVector, CodecError> {
+    let mut r = BitReader::new(bytes);
+    let d = r.read_u32()? as usize;
+    let s = r.read_u16()? as usize;
+    if s == 0 {
+        return Err(CodecError("s must be >= 1".into()));
+    }
+    let has_table = r.read_u8()? == 1;
+    let norm = r.read_f32()?;
+    let levels = if has_table {
+        let mut t = Vec::with_capacity(s);
+        for _ in 0..s {
+            t.push(r.read_f32()?);
+        }
+        t
+    } else {
+        let t = implied_levels(s);
+        if t.len() != s {
+            return Err(CodecError(format!(
+                "implied table has {} levels, message says {s}",
+                t.len()
+            )));
+        }
+        t
+    };
+    let mut negative = Vec::with_capacity(d);
+    for _ in 0..d {
+        negative.push(r.read_bit()?);
+    }
+    let idx_bits = ceil_log2(s);
+    let mut indices = Vec::with_capacity(d);
+    for _ in 0..d {
+        let i = r.read_bits(idx_bits)? as u32;
+        if i as usize >= s {
+            return Err(CodecError(format!("index {i} out of range s={s}")));
+        }
+        indices.push(i);
+    }
+    Ok(QuantizedVector {
+        norm,
+        negative,
+        indices,
+        levels,
+        implied_table: !has_table,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Quantizer, QsgdQuantizer, LloydMaxQuantizer};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitwriter_reader_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        w.write_bits(0b1011, 4);
+        w.write_u8(0xAB);
+        w.write_u16(0x1234);
+        w.write_u32(0xDEADBEEF);
+        w.write_f32(3.75);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.read_u8().unwrap(), 0xAB);
+        assert_eq!(r.read_u16().unwrap(), 0x1234);
+        assert_eq!(r.read_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.read_f32().unwrap(), 3.75);
+        // 93 payload bits were written → 3 zero padding bits remain in the
+        // final byte, then the stream ends
+        assert_eq!(r.read_bits(3).unwrap(), 0);
+        assert!(r.read_bit().is_err());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_with_table() {
+        let mut q = LloydMaxQuantizer::new(8, 6);
+        let mut rng = Rng::new(0);
+        let v: Vec<f32> = (0..257).map(|i| ((i as f32) - 128.0) / 7.0).collect();
+        let qv = q.quantize(&v, &mut rng);
+        assert!(!qv.implied_table);
+        let bytes = encode(&qv);
+        assert_eq!(bytes.len() as u64 * 8, encoded_bits(257, 8, false));
+        let back = decode(&bytes, |_| unreachable!()).unwrap();
+        assert_eq!(back, qv);
+        assert_eq!(back.dequantize(), qv.dequantize());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_implied_table() {
+        let mut q = QsgdQuantizer::new(16);
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        assert!(qv.implied_table);
+        let bytes = encode(&qv);
+        assert_eq!(bytes.len() as u64 * 8, encoded_bits(100, 16, true));
+        let back =
+            decode(&bytes, |s| QsgdQuantizer::level_table(s)).unwrap();
+        assert_eq!(back, qv);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[1, 2, 3], |_| vec![]).is_err());
+        // valid header but truncated payload
+        let mut q = QsgdQuantizer::new(4);
+        let mut rng = Rng::new(2);
+        let v = vec![1.0f32; 50];
+        let bytes = encode(&q.quantize(&v, &mut rng));
+        let truncated = &bytes[..bytes.len() - 4];
+        assert!(
+            decode(truncated, |s| QsgdQuantizer::level_table(s)).is_err()
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_vectors() {
+        check("codec roundtrip", 40, |g| {
+            let v = g.vec_normal(1..400, 2.0);
+            let s = *g.pick(&[2usize, 3, 8, 16, 100]);
+            let mut q = LloydMaxQuantizer::new(s, 4);
+            let mut rng = Rng::new(g.seed);
+            let qv = q.quantize(&v, &mut rng);
+            let back = decode(&encode(&qv), |_| unreachable!()).unwrap();
+            assert_eq!(back, qv);
+        });
+    }
+
+    #[test]
+    fn wire_bits_close_to_paper_bits() {
+        // wire overhead (header+table) must be small relative to payload
+        // for realistic d
+        let d = 100_000;
+        let s = 64;
+        let paper = crate::quant::bits::c_s(d, s);
+        let wire = encoded_bits(d, s, false);
+        let overhead = wire as f64 / paper as f64;
+        assert!(overhead < 1.01, "overhead ratio {overhead}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Quantization distortion: empirical measurement + Table I analytical
+//! bounds. The Table I bench (`table1_distortion`) cross-checks every
+//! quantizer's measured normalized distortion against its bound.
+
+use crate::util::stats::{l2_norm, sq_dist};
+
+/// Measured normalized distortion ‖Q(v) − v‖² / ‖v‖² (Eq. 13-14).
+pub fn normalized_distortion(v: &[f32], dequantized: &[f32]) -> f64 {
+    let nsq = l2_norm(v).powi(2);
+    if nsq == 0.0 {
+        return 0.0;
+    }
+    sq_dist(dequantized, v) / nsq
+}
+
+/// Table I bound for QSGD: min(d/s², √d/s).
+pub fn qsgd_bound(d: usize, s: usize) -> f64 {
+    let d = d as f64;
+    let s = s as f64;
+    (d / (s * s)).min(d.sqrt() / s)
+}
+
+/// Table I bound for natural compression: 1/8 + min(√d/2^{s−1}, d/2^{2(s−1)}).
+pub fn natural_bound(d: usize, s: usize) -> f64 {
+    let d = d as f64;
+    let p = 2f64.powi(s as i32 - 1);
+    0.125 + (d.sqrt() / p).min(d / (p * p))
+}
+
+/// Table I bound for LM-DFL (Theorem 2): d/(12 s²).
+pub fn lm_bound(d: usize, s: usize) -> f64 {
+    d as f64 / (12.0 * (s * s) as f64)
+}
+
+/// Worst adjacent-level ratio ρ = max_j ℓ_{j+1}/ℓ_j over strictly positive
+/// levels — the quantity both the ALQ bound and Theorem 6 are written in.
+pub fn max_level_ratio(levels: &[f32]) -> f64 {
+    let mut rho: f64 = 1.0;
+    for w in levels.windows(2) {
+        if w[0] > 0.0 && w[1] > w[0] {
+            rho = rho.max(w[1] as f64 / w[0] as f64);
+        }
+    }
+    rho
+}
+
+/// Table I bound for ALQ: (ρ − 1)² / (4ρ).
+pub fn alq_bound(levels: &[f32]) -> f64 {
+    let rho = max_level_ratio(levels);
+    (rho - 1.0).powi(2) / (4.0 * rho)
+}
+
+/// Theorem 6 alternative LM-DFL expression: ((ρ − 1)/(ρ + 1))².
+pub fn lm_ratio_bound(levels: &[f32]) -> f64 {
+    let rho = max_level_ratio(levels);
+    ((rho - 1.0) / (rho + 1.0)).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_vector_distortion_zero() {
+        assert_eq!(normalized_distortion(&[0.0; 4], &[0.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn identical_vectors_zero() {
+        let v = [1.0f32, -2.0, 3.0];
+        assert_eq!(normalized_distortion(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn known_distortion() {
+        let v = [1.0f32, 0.0];
+        let q = [0.0f32, 0.0];
+        assert!((normalized_distortion(&v, &q) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lm_bound_beats_qsgd_bound() {
+        // "for the same degree of distortion LM-DFL uses only 0.29 s levels"
+        for (d, s) in [(1000, 16), (10_000, 64), (100_000, 256)] {
+            assert!(lm_bound(d, s) < qsgd_bound(d, s));
+            // the 12x factor: d/12s^2 vs d/s^2
+            let ratio = qsgd_bound(d, s) / lm_bound(d, s);
+            if (d as f64) / ((s * s) as f64) < (d as f64).sqrt() / s as f64 {
+                assert!((ratio - 12.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn natural_bound_floor_at_one_eighth() {
+        // fine-grained s: natural compression stalls at 1/8, LM keeps
+        // improving (paper's comparison after Table I)
+        let d = 10_000;
+        assert!(natural_bound(d, 30) >= 0.125);
+        assert!(lm_bound(d, 1000) < 0.125);
+    }
+
+    #[test]
+    fn alq_vs_lm_ratio_bound() {
+        // Theorem 6 discussion: ((ρ-1)/(ρ+1))^2 <= (ρ-1)^2/(4ρ) because
+        // (ρ+1)^2 >= 4ρ
+        for levels in [
+            vec![0.0f32, 0.1, 0.3, 1.0],
+            vec![0.0f32, 0.01, 0.5, 1.0],
+            vec![0.0f32, 0.25, 0.5, 0.75, 1.0],
+        ] {
+            assert!(lm_ratio_bound(&levels) <= alq_bound(&levels) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn max_level_ratio_ignores_zero() {
+        let levels = [0.0f32, 0.1, 0.4, 1.0];
+        assert!((max_level_ratio(&levels) - 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,442 @@
+//! Lloyd-Max quantizer (paper §III-C, Algorithm 1) — the LM-DFL quantizer.
+//!
+//! Deterministic, distortion-minimizing scalar quantizer applied to the
+//! normalized magnitudes r_i = |v_i|/‖v‖ ∈ [0, 1]:
+//!
+//! * levels ℓ_j = centroid of φ(r) over bin j              (Eq. 17)
+//! * boundaries b_j = (ℓ_j + ℓ_{j+1}) / 2                  (Eq. 16)
+//!
+//! iterated to a fixed point. The "probability density function
+//! constructed from the statistics of the differential model parameters"
+//! (Algorithm 2 step 7) is an empirical histogram: each call builds an
+//! `HIST_BINS`-bin histogram of r (counts + per-bin sums) and runs the
+//! Lloyd iterations on it — O(d + iters·HIST_BINS) instead of O(iters·d).
+//! Levels warm-start from the previous call (the gradient distribution
+//! drifts slowly across rounds), so few iterations are needed.
+//!
+//! Quantization is deterministic nearest-level assignment — Table I's
+//! "Deterministic" row — and unbiased *with respect to the constructed
+//! density* (Theorem 1): the centroid condition makes E[q(r)] = E[r] under
+//! φ, unlike QSGD-style per-element stochastic unbiasedness.
+
+use super::{decompose, QuantizedVector, Quantizer};
+use crate::util::rng::Rng;
+
+/// Histogram resolution for the empirical density φ(r).
+const HIST_BINS: usize = 8192;
+
+#[derive(Clone, Debug)]
+pub struct LloydMaxQuantizer {
+    s: usize,
+    iters: usize,
+    /// current level table (warm start between calls)
+    levels: Vec<f32>,
+    /// boundaries b_0..b_s (b_0 = 0, b_s = top of the fitted range)
+    boundaries: Vec<f32>,
+    /// top of the fitted range — max |r| observed in the last fit. For
+    /// high-dimensional vectors the normalized magnitudes concentrate near
+    /// 1/√d, so fitting the histogram over [0, r_max] instead of [0, 1]
+    /// keeps full resolution regardless of d.
+    r_max: f32,
+    /// scratch histogram (counts, sums) reused across calls
+    hist_cnt: Vec<f64>,
+    hist_sum: Vec<f64>,
+    /// histogram-bin → first-candidate level index (assignment LUT):
+    /// lut[b] = #\{interior boundaries < b·w\}. Per-element assignment is
+    /// then O(1) amortized — a LUT load plus at most a couple of compares —
+    /// instead of an O(log s) binary search (DESIGN.md §Perf).
+    lut: Vec<u32>,
+}
+
+impl LloydMaxQuantizer {
+    pub fn new(s: usize, iters: usize) -> Self {
+        assert!(s >= 2);
+        let mut q = LloydMaxQuantizer {
+            s,
+            iters: iters.max(1),
+            levels: Vec::new(),
+            boundaries: Vec::new(),
+            r_max: 1.0,
+            hist_cnt: vec![0.0; HIST_BINS],
+            hist_sum: vec![0.0; HIST_BINS],
+            lut: Vec::new(),
+        };
+        q.reset_uniform(1.0);
+        q.rebuild_lut();
+        q
+    }
+
+    /// Rebuild the bin→index LUT from the current boundaries.
+    fn rebuild_lut(&mut self) {
+        self.lut.resize(HIST_BINS, 0);
+        let inner = &self.boundaries[1..self.s];
+        let w = self.r_max / HIST_BINS as f32;
+        let mut j = 0usize;
+        for (b, slot) in self.lut.iter_mut().enumerate() {
+            let edge = b as f32 * w;
+            while j < inner.len() && inner[j] < edge {
+                j += 1;
+            }
+            *slot = j as u32;
+        }
+    }
+
+    fn reset_uniform(&mut self, r_max: f32) {
+        let s = self.s;
+        self.r_max = r_max;
+        self.boundaries =
+            (0..=s).map(|j| j as f32 / s as f32 * r_max).collect();
+        self.levels = (0..s)
+            .map(|j| (j as f32 + 0.5) / s as f32 * r_max)
+            .collect();
+    }
+
+    /// Current level table (normalized, ascending).
+    pub fn level_table(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// Current boundaries (len s+1).
+    pub fn boundary_table(&self) -> &[f32] {
+        &self.boundaries
+    }
+
+    /// Build the empirical histogram of r over [0, r_max].
+    fn build_histogram(&mut self, r: &[f32]) {
+        self.hist_cnt.iter_mut().for_each(|x| *x = 0.0);
+        self.hist_sum.iter_mut().for_each(|x| *x = 0.0);
+        let scale = HIST_BINS as f32 / self.r_max;
+        for &ri in r {
+            let b = ((ri * scale) as usize).min(HIST_BINS - 1);
+            self.hist_cnt[b] += 1.0;
+            self.hist_sum[b] += ri as f64;
+        }
+    }
+
+    /// One Lloyd iteration on the histogram:
+    /// levels <- centroids(boundaries), boundaries <- midpoints(levels).
+    fn lloyd_iteration(&mut self) {
+        let s = self.s;
+        let scale = HIST_BINS as f32 / self.r_max;
+        // centroid of each [b_{j-1}, b_j] from histogram mass
+        let mut hb = 0usize; // histogram cursor
+        for j in 0..s {
+            let hi_edge = self.boundaries[j + 1];
+            let hb_end = if j + 1 == s {
+                HIST_BINS
+            } else {
+                ((hi_edge * scale) as usize).min(HIST_BINS)
+            };
+            let mut cnt = 0.0;
+            let mut sum = 0.0;
+            while hb < hb_end {
+                cnt += self.hist_cnt[hb];
+                sum += self.hist_sum[hb];
+                hb += 1;
+            }
+            self.levels[j] = if cnt > 0.0 {
+                (sum / cnt) as f32
+            } else {
+                // empty bin: keep the midpoint so the sequence stays sorted
+                0.5 * (self.boundaries[j] + self.boundaries[j + 1])
+            };
+        }
+        // midpoints
+        for j in 1..s {
+            self.boundaries[j] = 0.5 * (self.levels[j - 1] + self.levels[j]);
+        }
+        self.boundaries[0] = 0.0;
+        self.boundaries[s] = self.r_max;
+    }
+
+    /// Fit levels to the empirical distribution of `r` (Algorithm 1).
+    pub fn fit(&mut self, r: &[f32]) {
+        if r.is_empty() {
+            return;
+        }
+        let r_max = r.iter().cloned().fold(0.0f32, f32::max);
+        if r_max <= 0.0 {
+            return;
+        }
+        // warm-start only while the data range is comparable; re-init the
+        // tables when it shifts (new level count, different vector scale)
+        let ratio = r_max / self.r_max;
+        if !(0.5..=2.0).contains(&ratio) {
+            self.reset_uniform(r_max);
+        } else {
+            self.r_max = r_max;
+            self.boundaries[self.s] = r_max;
+        }
+        self.build_histogram(r);
+        for _ in 0..self.iters {
+            self.lloyd_iteration();
+        }
+        // enforce strict monotonicity for the binary search
+        for j in 1..self.s {
+            if self.levels[j] <= self.levels[j - 1] {
+                self.levels[j] = self.levels[j - 1] + f32::EPSILON;
+            }
+        }
+        for j in 1..=self.s {
+            let prev = self.boundaries[j - 1];
+            if self.boundaries[j] <= prev {
+                self.boundaries[j] = prev + f32::EPSILON;
+            }
+        }
+        self.rebuild_lut();
+    }
+
+    /// LUT-accelerated assignment — exact same result as [`assign`].
+    #[inline]
+    fn assign_fast(&self, ri: f32) -> u32 {
+        let scale = HIST_BINS as f32 / self.r_max;
+        let b = ((ri * scale) as usize).min(HIST_BINS - 1);
+        let mut j = self.lut[b] as usize;
+        let inner = &self.boundaries[1..self.s];
+        // at most the boundaries that fall inside this histogram bin
+        while j < inner.len() && inner[j] < ri {
+            j += 1;
+        }
+        j as u32
+    }
+
+    /// Deterministic bin assignment: r ∈ (b_{j-1}, b_j] → j-1 (0-based).
+    #[inline]
+    pub fn assign(&self, ri: f32) -> u32 {
+        // branchless-ish binary search over interior boundaries
+        let inner = &self.boundaries[1..self.s];
+        let mut lo = 0usize;
+        let mut len = inner.len();
+        while len > 0 {
+            let half = len / 2;
+            let mid = lo + half;
+            // count of interior boundaries strictly below ri
+            if inner[mid] < ri {
+                lo = mid + 1;
+                len -= half + 1;
+            } else {
+                len = half;
+            }
+        }
+        lo as u32
+    }
+}
+
+impl Quantizer for LloydMaxQuantizer {
+    fn name(&self) -> &'static str {
+        "lloyd_max"
+    }
+
+    fn levels(&self) -> usize {
+        self.s
+    }
+
+    fn set_levels(&mut self, s: usize) {
+        assert!(s >= 2);
+        if s != self.s {
+            self.s = s;
+            let r_max = self.r_max;
+            self.reset_uniform(r_max);
+        }
+    }
+
+    fn quantize(&mut self, v: &[f32], _rng: &mut Rng) -> QuantizedVector {
+        let (norm, negative, r) = decompose(v);
+        self.fit(&r);
+        let indices: Vec<u32> =
+            r.iter().map(|&ri| self.assign_fast(ri)).collect();
+        QuantizedVector {
+            norm,
+            negative,
+            indices,
+            levels: self.levels.clone(),
+            implied_table: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::stats::{l2_norm, sq_dist};
+
+    fn normalized_distortion(v: &[f32], dq: &[f32]) -> f64 {
+        sq_dist(dq, v) / l2_norm(v).powi(2)
+    }
+
+    #[test]
+    fn uniform_init_tables() {
+        let q = LloydMaxQuantizer::new(4, 1);
+        assert_eq!(q.boundary_table(), &[0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(q.level_table(), &[0.125, 0.375, 0.625, 0.875]);
+    }
+
+    #[test]
+    fn assign_fast_matches_binary_search() {
+        let mut q = LloydMaxQuantizer::new(16, 10);
+        let mut rng = Rng::new(77);
+        let v: Vec<f32> = (0..4096).map(|_| rng.laplace(0.3) as f32).collect();
+        let _ = q.quantize(&v, &mut rng);
+        for i in 0..5000 {
+            let ri = i as f32 / 5000.0 * q.r_max;
+            assert_eq!(q.assign_fast(ri), q.assign(ri), "ri={ri}");
+        }
+    }
+
+    #[test]
+    fn assign_matches_linear_scan() {
+        let mut q = LloydMaxQuantizer::new(8, 5);
+        let mut rng = Rng::new(0);
+        let v: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let _ = q.quantize(&v, &mut rng);
+        for i in 0..200 {
+            let ri = i as f32 / 199.0;
+            let fast = q.assign(ri);
+            let slow = q.boundaries[1..q.s]
+                .iter()
+                .filter(|&&b| b < ri)
+                .count() as u32;
+            assert_eq!(fast, slow, "ri={ri}");
+        }
+    }
+
+    #[test]
+    fn deterministic_same_input_same_output() {
+        let mut q1 = LloydMaxQuantizer::new(16, 8);
+        let mut q2 = LloydMaxQuantizer::new(16, 8);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999); // rng must not matter
+        let v: Vec<f32> = (0..300).map(|i| ((i * 31 % 97) as f32) - 48.0).collect();
+        assert_eq!(q1.quantize(&v, &mut r1), q2.quantize(&v, &mut r2));
+    }
+
+    #[test]
+    fn beats_uniform_grid_on_gaussian() {
+        // Lloyd-Max fits the density; on non-uniform data it must beat the
+        // same-s uniform deterministic grid.
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+        let s = 16;
+
+        let mut lm = LloydMaxQuantizer::new(s, 30);
+        let dq_lm = lm.quantize(&v, &mut rng).dequantize();
+        let lm_dist = normalized_distortion(&v, &dq_lm);
+
+        // deterministic uniform grid at the same s
+        let (norm, neg, r) = super::super::decompose(&v);
+        let grid: Vec<f32> =
+            (0..s).map(|j| (j as f32 + 0.5) / s as f32).collect();
+        let dq_grid: Vec<f32> = r
+            .iter()
+            .zip(&neg)
+            .map(|(&ri, &n)| {
+                let j = ((ri * s as f32) as usize).min(s - 1);
+                let mag = norm * grid[j];
+                if n { -mag } else { mag }
+            })
+            .collect();
+        let grid_dist = normalized_distortion(&v, &dq_grid);
+        assert!(
+            lm_dist < grid_dist,
+            "lm {lm_dist} should beat uniform {grid_dist}"
+        );
+    }
+
+    #[test]
+    fn distortion_within_theorem2_bound() {
+        // Theorem 2: E||Q(x)-x||^2 <= d/(12 s^2) ||x||^2. The histogram
+        // approximation adds resolution error; allow modest slack.
+        check("lm distortion d/12s^2", 25, |g| {
+            let v = g.vec_normal(200..4000, 1.0);
+            let s = *g.pick(&[4usize, 8, 16, 32]);
+            let mut q = LloydMaxQuantizer::new(s, 25);
+            let mut rng = Rng::new(g.seed);
+            let dq = q.quantize(&v, &mut rng).dequantize();
+            let d = v.len() as f64;
+            let bound = d / (12.0 * (s * s) as f64);
+            let nd = normalized_distortion(&v, &dq);
+            assert!(nd <= bound * 1.5 + 1e-6, "nd={nd} bound={bound} s={s}");
+        });
+    }
+
+    #[test]
+    fn iterations_reduce_distortion() {
+        let mut rng = Rng::new(11);
+        let v: Vec<f32> = (0..10_000)
+            .map(|_| (rng.laplace(0.2)) as f32)
+            .collect();
+        let mut prev = f64::INFINITY;
+        for iters in [1usize, 3, 10, 30] {
+            let mut q = LloydMaxQuantizer::new(8, iters);
+            let dq = q.quantize(&v, &mut rng).dequantize();
+            let nd = normalized_distortion(&v, &dq);
+            assert!(nd <= prev * 1.05, "iters={iters}: {nd} > {prev}");
+            prev = nd;
+        }
+    }
+
+    #[test]
+    fn warm_start_consistent_across_calls() {
+        // second call on same distribution should not be worse
+        let mut rng = Rng::new(13);
+        let v1: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let v2: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let mut q = LloydMaxQuantizer::new(16, 5);
+        let _ = q.quantize(&v1, &mut rng);
+        let dq2 = q.quantize(&v2, &mut rng).dequantize();
+        let nd = normalized_distortion(&v2, &dq2);
+        let bound = 5000.0 / (12.0 * 256.0);
+        assert!(nd <= bound * 1.5, "warm nd={nd}");
+    }
+
+    #[test]
+    fn levels_sorted_and_boundaries_interleave() {
+        check("lm tables monotone", 30, |g| {
+            let v = g.vec_laplace(50..3000, 0.5);
+            if l2_norm(&v) == 0.0 {
+                return;
+            }
+            let s = *g.pick(&[2usize, 4, 16, 50]);
+            let mut q = LloydMaxQuantizer::new(s, 10);
+            let mut rng = Rng::new(g.seed);
+            let _ = q.quantize(&v, &mut rng);
+            let lev = q.level_table();
+            let bnd = q.boundary_table();
+            for w in lev.windows(2) {
+                assert!(w[0] < w[1], "levels not sorted: {lev:?}");
+            }
+            for j in 0..s {
+                assert!(bnd[j] <= lev[j] + 1e-6 && lev[j] <= bnd[j + 1] + 1e-6,
+                    "level {j} outside its bin");
+            }
+        });
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        let mut q = LloydMaxQuantizer::new(4, 5);
+        let mut rng = Rng::new(0);
+        // zero vector
+        let qv = q.quantize(&[0.0f32; 8], &mut rng);
+        assert!(qv.dequantize().iter().all(|&x| x == 0.0));
+        // single element (r = 1 exactly)
+        let qv = q.quantize(&[5.0f32], &mut rng);
+        let dq = qv.dequantize();
+        assert!((dq[0] - 5.0).abs() < 0.2, "{dq:?}");
+        // constant vector
+        let qv = q.quantize(&[1.0f32; 16], &mut rng);
+        for x in qv.dequantize() {
+            assert!((x - 1.0).abs() < 0.05, "{x}");
+        }
+    }
+
+    #[test]
+    fn set_levels_resets() {
+        let mut q = LloydMaxQuantizer::new(4, 5);
+        q.set_levels(9);
+        assert_eq!(q.levels(), 9);
+        assert_eq!(q.level_table().len(), 9);
+        assert_eq!(q.boundary_table().len(), 10);
+    }
+}

@@ -1,0 +1,149 @@
+//! Natural compression [16] (paper §III-B2): binary-geometric levels,
+//! stochastic (unbiased) rounding.
+//!
+//! Levels: ℓ = [0, 2^{2-s}, 2^{3-s}, …, 2^{-1}, 1] (s values; the paper's
+//! binary geometric partition). Rounding between bracketing levels with
+//! proximity probabilities — unbiased. Distortion bound (Table I):
+//! 1/8 + min(√d/2^{s-1}, d/2^{2(s-1)}).
+
+use super::{decompose, QuantizedVector, Quantizer};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct NaturalQuantizer {
+    s: usize,
+    table: Vec<f32>,
+}
+
+impl NaturalQuantizer {
+    pub fn new(s: usize) -> Self {
+        assert!(s >= 2);
+        NaturalQuantizer { s, table: Self::level_table(s) }
+    }
+
+    /// ℓ_0 = 0, ℓ_j = 2^(j+1-s) for j = 1..s-1 (so ℓ_{s-1} = 1).
+    pub fn level_table(s: usize) -> Vec<f32> {
+        let mut t = Vec::with_capacity(s);
+        t.push(0.0);
+        for j in 1..s {
+            t.push((2.0f32).powi(j as i32 + 1 - s as i32));
+        }
+        t
+    }
+}
+
+impl Quantizer for NaturalQuantizer {
+    fn name(&self) -> &'static str {
+        "natural"
+    }
+
+    fn levels(&self) -> usize {
+        self.s
+    }
+
+    fn set_levels(&mut self, s: usize) {
+        assert!(s >= 2);
+        self.s = s;
+        self.table = Self::level_table(s);
+    }
+
+    fn quantize(&mut self, v: &[f32], rng: &mut Rng) -> QuantizedVector {
+        let (norm, negative, r) = decompose(v);
+        let t = &self.table;
+        let indices: Vec<u32> = r
+            .iter()
+            .map(|&ri| {
+                let ri = ri.clamp(0.0, 1.0);
+                // find bracketing levels [t[j], t[j+1]] containing ri
+                let j = match t
+                    .binary_search_by(|x| x.partial_cmp(&ri).unwrap())
+                {
+                    Ok(exact) => return exact as u32,
+                    Err(ins) => ins - 1, // t[j] < ri < t[j+1]
+                };
+                let lo = t[j];
+                let hi = t[j + 1];
+                let p_hi = (ri - lo) / (hi - lo);
+                if rng.uniform_f32() < p_hi {
+                    (j + 1) as u32
+                } else {
+                    j as u32
+                }
+            })
+            .collect();
+        QuantizedVector {
+            norm,
+            negative,
+            indices,
+            levels: t.clone(),
+            implied_table: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::l2_norm;
+
+    #[test]
+    fn table_is_binary_geometric() {
+        let t = NaturalQuantizer::level_table(5);
+        assert_eq!(t, vec![0.0, 0.0625 * 2.0, 0.25, 0.5, 1.0]);
+        assert_eq!(*t.last().unwrap(), 1.0);
+        for w in t[1..].windows(2) {
+            assert!((w[1] / w[0] - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn exact_levels_are_fixed_points() {
+        let mut q = NaturalQuantizer::new(6);
+        let mut rng = Rng::new(0);
+        // single-element vector: r = 1 exactly (top level)
+        let qv = q.quantize(&[3.0f32], &mut rng);
+        assert_eq!(qv.dequantize(), vec![3.0f32]);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut q = NaturalQuantizer::new(8);
+        let mut rng = Rng::new(7);
+        let v = vec![0.3f32, -0.77, 0.05, 0.9];
+        let n = 20_000;
+        let mut acc = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            for (a, x) in acc.iter_mut().zip(q.quantize(&v, &mut rng).dequantize()) {
+                *a += x as f64;
+            }
+        }
+        for (a, &want) in acc.iter().zip(&v) {
+            let mean = a / n as f64;
+            assert!(
+                (mean - want as f64).abs() < 0.02,
+                "mean {mean} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_values_quantize_coarsely_but_bounded() {
+        let mut q = NaturalQuantizer::new(8);
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..1000).map(|i| ((i * 37) % 1000) as f32 / 1000.0 - 0.5).collect();
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        let nsq = l2_norm(&v).powi(2);
+        let dist = crate::util::stats::sq_dist(&dq, &v);
+        // Table I: 1/8 + min(...) — generous slack for single draw
+        assert!(dist <= nsq * (0.125 + 1.0), "dist {dist} nsq {nsq}");
+    }
+
+    #[test]
+    fn indices_in_range() {
+        let mut q = NaturalQuantizer::new(4);
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..500).map(|i| (i as f32 * 0.017).sin()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        assert!(qv.indices.iter().all(|&i| (i as usize) < 4));
+    }
+}

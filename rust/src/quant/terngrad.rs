@@ -1,0 +1,111 @@
+//! TernGrad [11] extension baseline (paper §I): ternary {−1, 0, +1}
+//! stochastic quantization — 2 bits/element, no convergence guarantee in
+//! the original paper. Expressed in the (norm, sign, level) wire format
+//! with s = 2 levels {0, 1} scaled by max |v_i|/‖v‖ rather than 1, i.e.
+//! h(v_i) = s_max · sign(v_i) · b_i with b_i ~ Bernoulli(|v_i|/max|v|).
+
+use super::{QuantizedVector, Quantizer};
+use crate::util::rng::Rng;
+use crate::util::stats::l2_norm;
+
+#[derive(Clone, Debug, Default)]
+pub struct TernGradQuantizer;
+
+impl TernGradQuantizer {
+    pub fn new() -> Self {
+        TernGradQuantizer
+    }
+}
+
+impl Quantizer for TernGradQuantizer {
+    fn name(&self) -> &'static str {
+        "terngrad"
+    }
+
+    fn levels(&self) -> usize {
+        2
+    }
+
+    fn quantize(&mut self, v: &[f32], rng: &mut Rng) -> QuantizedVector {
+        let norm = l2_norm(v) as f32;
+        let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let negative: Vec<bool> = v.iter().map(|&x| x < 0.0).collect();
+        let (levels, indices) = if norm > 0.0 && vmax > 0.0 {
+            // level table normalized by ||v||: {0, vmax/||v||}
+            let top = vmax / norm;
+            let idx = v
+                .iter()
+                .map(|&x| {
+                    let p = x.abs() / vmax;
+                    (rng.uniform_f32() < p) as u32
+                })
+                .collect();
+            (vec![0.0, top], idx)
+        } else {
+            (vec![0.0, 1.0], vec![0u32; v.len()])
+        };
+        QuantizedVector {
+            norm,
+            negative,
+            indices,
+            levels,
+            implied_table: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut q = TernGradQuantizer::new();
+        let mut rng = Rng::new(1);
+        let v = vec![0.5f32, -0.25, 0.1, -0.9];
+        let n = 30_000;
+        let mut acc = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            for (a, x) in acc.iter_mut().zip(q.quantize(&v, &mut rng).dequantize()) {
+                *a += x as f64;
+            }
+        }
+        for (a, &want) in acc.iter().zip(&v) {
+            let mean = a / n as f64;
+            assert!((mean - want as f64).abs() < 0.02, "{mean} vs {want}");
+        }
+    }
+
+    #[test]
+    fn output_is_ternary() {
+        let mut q = TernGradQuantizer::new();
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..500).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for x in dq {
+            assert!(
+                x == 0.0 || (x.abs() - vmax).abs() < 1e-3,
+                "non-ternary value {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_bits_per_element_accounting() {
+        let mut q = TernGradQuantizer::new();
+        let mut rng = Rng::new(3);
+        let v = vec![1.0f32; 100];
+        let msg = q.quantize(&v, &mut rng);
+        // 1 index bit + 1 sign bit per element + 32-bit norm
+        assert_eq!(msg.paper_bits(), 100 + 100 + 32);
+    }
+
+    #[test]
+    fn zero_vector_ok() {
+        let mut q = TernGradQuantizer::new();
+        let mut rng = Rng::new(4);
+        let dq = q.quantize(&[0.0f32; 8], &mut rng).dequantize();
+        assert!(dq.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Top-k sparsification [12] extension baseline (paper §I): keep the k
+//! largest-magnitude coordinates at full precision, drop the rest.
+//!
+//! Expressed in the shared wire format by shipping a level table holding
+//! the k surviving normalized magnitudes is wasteful; instead top-k
+//! messages are accounted as k·(32 + ⌈log₂ d⌉) bits (value + coordinate
+//! index) + 32-bit norm — the standard sparse encoding. The dequantized
+//! form still plugs into the same engine via [`Quantizer`].
+
+use super::{QuantizedVector, Quantizer};
+use crate::util::rng::Rng;
+use crate::util::stats::l2_norm;
+
+#[derive(Clone, Debug)]
+pub struct TopKQuantizer {
+    /// fraction of coordinates kept, in (0, 1]
+    pub keep: f64,
+}
+
+impl TopKQuantizer {
+    pub fn new(keep: f64) -> Self {
+        assert!(keep > 0.0 && keep <= 1.0);
+        TopKQuantizer { keep }
+    }
+
+    /// Sparse-encoding bit cost (value+index per kept coordinate).
+    pub fn sparse_bits(&self, d: usize) -> u64 {
+        let k = ((d as f64 * self.keep).ceil() as u64).max(1);
+        k * (32 + crate::quant::bits::ceil_log2(d.max(2)) as u64) + 32
+    }
+}
+
+impl Quantizer for TopKQuantizer {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn levels(&self) -> usize {
+        // not level-based; report 2 so C_s accounting stays defined
+        2
+    }
+
+    fn quantize(&mut self, v: &[f32], _rng: &mut Rng) -> QuantizedVector {
+        let d = v.len();
+        let k = ((d as f64 * self.keep).ceil() as usize).clamp(1, d.max(1));
+        let norm = l2_norm(v) as f32;
+        // threshold = k-th largest |v_i| via select_nth
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        let thresh = if k < d {
+            let idx = d - k;
+            mags.select_nth_unstable_by(idx, |a, b| {
+                a.partial_cmp(b).unwrap()
+            });
+            mags[idx]
+        } else {
+            0.0
+        };
+        // level table: 0 plus each kept magnitude (normalized); index i
+        // selects its own slot. Ties at the threshold may keep a few
+        // extra coordinates — harmless for the baseline.
+        let safe = if norm > 0.0 { norm } else { 1.0 };
+        let mut levels = vec![0.0f32];
+        let mut indices = Vec::with_capacity(d);
+        let mut negative = Vec::with_capacity(d);
+        for &x in v {
+            negative.push(x < 0.0);
+            if x.abs() >= thresh && x != 0.0 {
+                levels.push(x.abs() / safe);
+                indices.push((levels.len() - 1) as u32);
+            } else {
+                indices.push(0);
+            }
+        }
+        QuantizedVector { norm, negative, indices, levels, implied_table: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes_exactly() {
+        let mut q = TopKQuantizer::new(0.25);
+        let mut rng = Rng::new(0);
+        let v = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 0.01, 4.0, 0.3];
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        // top-2 of 8 = 25%: -5.0 and 4.0 survive exactly
+        assert!((dq[1] + 5.0).abs() < 1e-4);
+        assert!((dq[6] - 4.0).abs() < 1e-4);
+        assert_eq!(dq[0], 0.0);
+        assert_eq!(dq[5], 0.0);
+    }
+
+    #[test]
+    fn keep_all_is_lossless() {
+        let mut q = TopKQuantizer::new(1.0);
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) / 7.0).collect();
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        for (a, b) in dq.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_bits_smaller_than_dense_for_small_keep() {
+        let q = TopKQuantizer::new(0.01);
+        assert!(q.sparse_bits(100_000)
+            < crate::quant::bits::full_precision_bits(100_000) / 50);
+    }
+
+    #[test]
+    fn engine_trains_with_topk() {
+        use crate::config::*;
+        use crate::data::Dataset;
+        use crate::dfl::backend::{LocalUpdate, RustMlpBackend};
+        use crate::dfl::{DflEngine, EngineOptions};
+        use crate::topology::Topology;
+        let cfg = ExperimentConfig {
+            nodes: 3,
+            rounds: 10,
+            tau: 2,
+            dataset: DatasetKind::Blobs {
+                train: 150, test: 50, dim: 8, classes: 3,
+            },
+            lr: LrSchedule::fixed(0.1),
+            ..Default::default()
+        };
+        let topo = Topology::build(&cfg.topology, cfg.nodes, 0);
+        let data = Dataset::build(&cfg.dataset, 0);
+        let backends: Vec<Box<dyn LocalUpdate>> = (0..3)
+            .map(|_| {
+                Box::new(RustMlpBackend::new(8, &[16], 3))
+                    as Box<dyn LocalUpdate>
+            })
+            .collect();
+        let mut engine = DflEngine::new(
+            cfg, topo, data, backends, EngineOptions::default()).unwrap();
+        engine.set_all_quantizers(|| Box::new(TopKQuantizer::new(0.3)));
+        let log = engine.run().unwrap();
+        assert!(
+            log.records.last().unwrap().loss
+                < log.records.first().unwrap().loss
+        );
+    }
+}

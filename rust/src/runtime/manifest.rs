@@ -1,0 +1,184 @@
+//! artifacts/manifest.json reader — the contract between the python AOT
+//! compile path and the Rust runtime. Describes every artifact's file and
+//! I/O shapes so buffers can be bound with zero Python at run time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let name = j
+            .get_str("name")
+            .ok_or_else(|| anyhow::anyhow!("tensor missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tensor missing shape"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let dtype = j.get_str("dtype").unwrap_or("float32").to_string();
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// flat parameter count (step/eval/grad artifacts)
+    pub params: Option<usize>,
+    /// baked batch size
+    pub batch: Option<usize>,
+    /// feature dim of one input row
+    pub features: Option<usize>,
+    /// parameter tensor layout (name, shape) — lets the runtime zero
+    /// biases at init like the python models do
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ArtifactInfo {
+    pub fn input(&self, name: &str) -> Option<&TensorSpec> {
+        self.inputs.iter().find(|t| t.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in arts {
+            let file = dir.join(
+                aj.get_str("file")
+                    .ok_or_else(|| anyhow::anyhow!("{name}: no file"))?,
+            );
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                aj.get(key)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file,
+                    kind: aj.get_str("kind").unwrap_or("").to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    params: aj.get_usize("params"),
+                    batch: aj.get_usize("batch"),
+                    features: aj.get_usize("features"),
+                    tensors: parse_specs("tensors")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactInfo> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest ({} known: {:?})",
+                self.artifacts.len(),
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        let text = r#"{
+ "artifacts": {
+  "toy_step": {
+   "file": "toy_step.hlo.txt",
+   "kind": "step",
+   "params": 10,
+   "batch": 4,
+   "features": 3,
+   "inputs": [
+    {"name": "params", "shape": [10], "dtype": "float32"},
+    {"name": "x", "shape": [4, 3], "dtype": "float32"},
+    {"name": "y", "shape": [4], "dtype": "int32"},
+    {"name": "lr", "shape": [], "dtype": "float32"}
+   ],
+   "outputs": [
+    {"name": "params", "shape": [10], "dtype": "float32"},
+    {"name": "loss", "shape": [], "dtype": "float32"}
+   ],
+   "tensors": [
+    {"name": "l0.w", "shape": [3, 2]},
+    {"name": "l0.b", "shape": [2]}
+   ]
+  }
+ }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("lmdfl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy_step").unwrap();
+        assert_eq!(a.kind, "step");
+        assert_eq!(a.params, Some(10));
+        assert_eq!(a.batch, Some(4));
+        assert_eq!(a.input("x").unwrap().shape, vec![4, 3]);
+        assert_eq!(a.input("x").unwrap().elements(), 12);
+        assert_eq!(a.tensors.len(), 2);
+        assert!(m.get("nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent-lmdfl"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,299 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them on the
+//! request path with zero Python.
+//!
+//! Pipeline (see /opt/xla-example/load_hlo/): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+
+use std::path::{Path, PathBuf};
+
+use crate::dfl::backend::LocalUpdate;
+use crate::util::rng::Rng;
+
+/// Artifact directory: $LMDFL_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LMDFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if the manifest exists — used by tests/benches to skip gracefully
+/// when `make artifacts` has not run.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// A compiled HLO executable plus its I/O contract.
+pub struct HloExecutor {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloExecutor {
+    /// Compile `info.file` on the given client.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        info: ArtifactInfo,
+    ) -> anyhow::Result<HloExecutor> {
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .map_err(|e| {
+                anyhow::anyhow!("loading {}: {e:?}", info.file.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", info.name))?;
+        Ok(HloExecutor { info, exe })
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    pub fn run(
+        &self,
+        inputs: &[xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "{} expects {} inputs, got {}",
+            self.info.name,
+            self.info.inputs.len(),
+            inputs.len()
+        );
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.info.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {}: {e:?}", self.info.name))?;
+        // aot.py lowers with return_tuple=True
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {}: {e:?}", self.info.name))
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(
+        data.len() == expect,
+        "literal shape {shape:?} wants {expect} elements, got {}",
+        data.len()
+    );
+    let lit = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        // scalar
+        return lit
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("reshape scalar: {e:?}"));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal of the given logical shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// The PJRT-backed [`LocalUpdate`] implementation for classifier models.
+///
+/// Loads `<artifact>_step` and `<artifact>_eval` (e.g. `mlp_mnist_step`).
+/// The artifacts bake a fixed batch B; batches smaller than B are padded by
+/// cycling rows (sampling with replacement), larger ones are processed in
+/// chunks.
+pub struct HloBackend {
+    client: xla::PjRtClient,
+    step_exe: HloExecutor,
+    eval_exe: HloExecutor,
+    param_count: usize,
+    batch: usize,
+    features: usize,
+    /// parameter tensor layout for bias-zeroing at init
+    tensors: Vec<TensorSpec>,
+}
+
+impl HloBackend {
+    /// Load and compile the step/eval artifacts for `artifact` from `dir`.
+    pub fn load(
+        dir: &Path,
+        artifact: &str,
+        expect_features: usize,
+        _classes: usize,
+    ) -> anyhow::Result<HloBackend> {
+        let manifest = Manifest::load(dir)?;
+        let step_info = manifest.get(&format!("{artifact}_step"))?.clone();
+        let eval_info = manifest.get(&format!("{artifact}_eval"))?.clone();
+        let features = step_info
+            .features
+            .ok_or_else(|| anyhow::anyhow!("{artifact}_step: no features"))?;
+        anyhow::ensure!(
+            features == expect_features,
+            "artifact {artifact} expects feature dim {features}, dataset \
+             provides {expect_features}"
+        );
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        let param_count = step_info
+            .params
+            .ok_or_else(|| anyhow::anyhow!("{artifact}_step: no params"))?;
+        let batch = step_info
+            .batch
+            .ok_or_else(|| anyhow::anyhow!("{artifact}_step: no batch"))?;
+        let tensors = step_info.tensors.clone();
+        let step_exe = HloExecutor::compile(&client, step_info)?;
+        let eval_exe = HloExecutor::compile(&client, eval_info)?;
+        Ok(HloBackend {
+            client,
+            step_exe,
+            eval_exe,
+            param_count,
+            batch,
+            features,
+            tensors,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Pad (by cycling) or keep a batch to exactly `self.batch` rows.
+    fn fix_batch(&self, x: &[f32], y: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        let n = y.len();
+        let f = self.features;
+        let mut xo = Vec::with_capacity(self.batch * f);
+        let mut yo = Vec::with_capacity(self.batch);
+        for bi in 0..self.batch {
+            let src = bi % n;
+            xo.extend_from_slice(&x[src * f..(src + 1) * f]);
+            yo.push(y[src] as i32);
+        }
+        (xo, yo)
+    }
+}
+
+impl LocalUpdate for HloBackend {
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn input_dim(&self) -> usize {
+        self.features
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.param_count];
+        rng.fill_normal(&mut p, 0.0, 0.05);
+        // zero bias tensors (names ending ".b"), mirroring the rust MLP
+        let mut off = 0usize;
+        for t in &self.tensors {
+            let sz = t.elements();
+            if t.name.ends_with(".b") {
+                p[off..off + sz].iter_mut().for_each(|v| *v = 0.0);
+            }
+            off += sz;
+        }
+        p
+    }
+
+    fn step(
+        &mut self,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[u32],
+        lr: f32,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(!y.is_empty(), "empty batch");
+        let (xb, yb) = self.fix_batch(x, y);
+        let inputs = vec![
+            literal_f32(params, &[self.param_count])?,
+            literal_f32(&xb, &[self.batch, self.features])?,
+            literal_i32(&yb, &[self.batch])?,
+            literal_f32(&[lr], &[])?,
+        ];
+        let outs = self.step_exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 2, "step returns (params, loss)");
+        let new_params = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("params out: {e:?}"))?;
+        params.copy_from_slice(&new_params);
+        let loss = outs[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss out: {e:?}"))?[0];
+        Ok(loss as f64)
+    }
+
+    fn evaluate(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+    ) -> anyhow::Result<(f64, usize)> {
+        anyhow::ensure!(!y.is_empty(), "empty eval set");
+        let n = y.len();
+        let params_lit = literal_f32(params, &[self.param_count])?;
+        let mut weighted_loss = 0.0f64;
+        let mut correct_est = 0.0f64;
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(self.batch);
+            let (xb, yb) = self.fix_batch(
+                &x[done * self.features..(done + take) * self.features],
+                &y[done..done + take],
+            );
+            let inputs = vec![
+                params_lit.clone(),
+                literal_f32(&xb, &[self.batch, self.features])?,
+                literal_i32(&yb, &[self.batch])?,
+            ];
+            let outs = self.eval_exe.run(&inputs)?;
+            let loss = outs[0].to_vec::<f32>().map_err(
+                |e| anyhow::anyhow!("eval loss: {e:?}"))?[0] as f64;
+            let correct = outs[1].to_vec::<f32>().map_err(
+                |e| anyhow::anyhow!("eval correct: {e:?}"))?[0] as f64;
+            // the padded tail duplicates rows; rescale both stats by the
+            // real fraction of the chunk
+            let frac = take as f64 / self.batch as f64;
+            weighted_loss += loss * take as f64;
+            correct_est += correct * frac;
+            done += take;
+        }
+        Ok((weighted_loss / n as f64, correct_est.round() as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_validate_shapes() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_f32(&[0.5], &[]).is_ok());
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("LMDFL_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("LMDFL_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,361 @@
+//! Network topology → confusion matrix C (paper §II-B, Assumption 1.5).
+//!
+//! `C` is symmetric doubly stochastic; `c_ji` is node j's weight in node
+//! i's model averaging; `c_ij = 0` iff i and j are not neighbors. The
+//! spectral quantity ζ = max(|λ₂|, |λ_N|) measures confusion degree
+//! (ζ=0: C=J fully mixed; ζ=1: C=I disconnected) and enters the bounds
+//! via α(ζ) (Lemma 2).
+//!
+//! Irregular graphs get Metropolis–Hastings weights, the standard way to
+//! make a doubly-stochastic symmetric matrix from an arbitrary graph:
+//! `c_ij = 1/(1 + max(deg_i, deg_j))` for edges, diagonal = remainder.
+
+use crate::config::TopologyKind;
+use crate::linalg::eigen::{alpha_of_zeta, second_largest_abs_eigenvalue};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// A built topology: adjacency + confusion matrix + spectral info.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n: usize,
+    /// adjacency (excluding self-loops)
+    pub adj: Vec<Vec<usize>>,
+    /// confusion matrix C (row-major, symmetric doubly stochastic)
+    pub c: Matrix,
+    /// ζ = max(|λ₂|, |λ_N|)
+    pub zeta: f64,
+}
+
+impl Topology {
+    /// Build from a [`TopologyKind`]; `seed` only matters for random graphs.
+    pub fn build(kind: &TopologyKind, n: usize, seed: u64) -> Topology {
+        assert!(n > 0);
+        let adj = match kind {
+            TopologyKind::Full => full_adj(n),
+            TopologyKind::Ring => ring_adj(n),
+            TopologyKind::Disconnected => vec![Vec::new(); n],
+            TopologyKind::Star => star_adj(n),
+            TopologyKind::Torus => torus_adj(n),
+            TopologyKind::Random { p } => random_adj(n, *p, seed),
+        };
+        let c = match kind {
+            TopologyKind::Full => Matrix::consensus(n),
+            TopologyKind::Disconnected => Matrix::identity(n),
+            TopologyKind::Ring => ring_matrix(n),
+            _ => metropolis_weights(&adj),
+        };
+        let zeta = second_largest_abs_eigenvalue(&c);
+        Topology { n, adj, c, zeta }
+    }
+
+    /// Neighbors of node i (excluding i itself).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Number of directed links (paper counts bits per directed link).
+    pub fn directed_links(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum()
+    }
+
+    /// α(ζ) — topology term of the convergence bound (Lemma 2).
+    pub fn alpha(&self) -> f64 {
+        alpha_of_zeta(self.zeta)
+    }
+
+    /// Whether the graph is connected (BFS). Disconnected topologies can
+    /// never reach consensus; the engine warns on them.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(i) = stack.pop() {
+            for &j in &self.adj[i] {
+                if !seen[j] {
+                    seen[j] = true;
+                    count += 1;
+                    stack.push(j);
+                }
+            }
+        }
+        count == self.n
+    }
+}
+
+fn full_adj(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| (0..n).filter(|&j| j != i).collect())
+        .collect()
+}
+
+fn ring_adj(n: usize) -> Vec<Vec<usize>> {
+    if n == 1 {
+        return vec![Vec::new()];
+    }
+    if n == 2 {
+        return vec![vec![1], vec![0]];
+    }
+    (0..n)
+        .map(|i| vec![(i + n - 1) % n, (i + 1) % n])
+        .collect()
+}
+
+fn star_adj(n: usize) -> Vec<Vec<usize>> {
+    if n == 1 {
+        return vec![Vec::new()];
+    }
+    let mut adj = vec![Vec::new(); n];
+    for i in 1..n {
+        adj[0].push(i);
+        adj[i].push(0);
+    }
+    adj
+}
+
+fn torus_adj(n: usize) -> Vec<Vec<usize>> {
+    // closest-to-square factorization
+    let mut rows = (n as f64).sqrt() as usize;
+    while rows > 1 && n % rows != 0 {
+        rows -= 1;
+    }
+    let cols = n / rows.max(1);
+    let idx = |r: usize, c: usize| (r % rows) * cols + (c % cols);
+    let mut adj = vec![Vec::new(); n];
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = idx(r, c);
+            let mut push = |j: usize| {
+                if j != i && !adj[i].contains(&j) {
+                    adj[i].push(j);
+                }
+            };
+            push(idx(r + 1, c));
+            push(idx(r + rows - 1, c));
+            push(idx(r, c + 1));
+            push(idx(r, c + cols - 1));
+        }
+    }
+    adj
+}
+
+fn random_adj(n: usize, p: f64, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed ^ 0x7070_1064);
+    let mut adj = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.uniform() < p {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+    }
+    // ensure connectivity by threading a ring through any isolated parts
+    for i in 0..n {
+        if adj[i].is_empty() && n > 1 {
+            let j = (i + 1) % n;
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+    }
+    adj
+}
+
+/// Uniform ring averaging over {left, self, right} — the matrix whose ζ has
+/// the closed form (1 + 2cos(2πk/n))/3; at n=10 this is the paper's ring.
+fn ring_matrix(n: usize) -> Matrix {
+    let mut c = Matrix::zeros(n, n);
+    if n == 1 {
+        c[(0, 0)] = 1.0;
+        return c;
+    }
+    if n == 2 {
+        // avoid double-counting the single edge
+        c[(0, 0)] = 0.5;
+        c[(1, 1)] = 0.5;
+        c[(0, 1)] = 0.5;
+        c[(1, 0)] = 0.5;
+        return c;
+    }
+    let w = 1.0 / 3.0;
+    for i in 0..n {
+        c[(i, i)] = w;
+        c[(i, (i + 1) % n)] = w;
+        c[(i, (i + n - 1) % n)] = w;
+    }
+    c
+}
+
+/// Metropolis–Hastings weights: symmetric doubly stochastic for any graph.
+pub fn metropolis_weights(adj: &[Vec<usize>]) -> Matrix {
+    let n = adj.len();
+    let deg: Vec<usize> = adj.iter().map(|a| a.len()).collect();
+    let mut c = Matrix::zeros(n, n);
+    for i in 0..n {
+        let mut diag = 1.0;
+        for &j in &adj[i] {
+            let w = 1.0 / (1 + deg[i].max(deg[j])) as f64;
+            c[(i, j)] = w;
+            diag -= w;
+        }
+        c[(i, i)] = diag;
+    }
+    c
+}
+
+/// A ring-like sparse topology tuned to hit a target ζ by mixing the ring
+/// matrix with identity: C(λ) = λ·C_ring + (1-λ)·I has
+/// ζ(λ) = λ·ζ_ring + (1-λ). Used to reproduce the paper's ζ = 0.87 setup.
+pub fn ring_with_zeta(n: usize, target_zeta: f64) -> Topology {
+    let base = Topology::build(&TopologyKind::Ring, n, 0);
+    let zr = base.zeta;
+    if target_zeta <= zr || zr >= 1.0 {
+        return base;
+    }
+    // solve λ·zr + (1-λ) = target  =>  λ = (1-target)/(1-zr)
+    let lambda = (1.0 - target_zeta) / (1.0 - zr);
+    let mut c = Matrix::zeros(n, n);
+    let eye = Matrix::identity(n);
+    for i in 0..n {
+        for j in 0..n {
+            c[(i, j)] = lambda * base.c[(i, j)] + (1.0 - lambda) * eye[(i, j)];
+        }
+    }
+    let zeta = second_largest_abs_eigenvalue(&c);
+    Topology { n, adj: base.adj, c, zeta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> Vec<TopologyKind> {
+        vec![
+            TopologyKind::Full,
+            TopologyKind::Ring,
+            TopologyKind::Disconnected,
+            TopologyKind::Star,
+            TopologyKind::Torus,
+            TopologyKind::Random { p: 0.4 },
+        ]
+    }
+
+    #[test]
+    fn all_kinds_doubly_stochastic_symmetric() {
+        for kind in kinds() {
+            for n in [1, 2, 3, 4, 10, 17] {
+                let t = Topology::build(&kind, n, 7);
+                assert!(
+                    t.c.is_doubly_stochastic(1e-9),
+                    "{kind:?} n={n} not doubly stochastic"
+                );
+                assert!(
+                    t.c.is_symmetric(1e-9),
+                    "{kind:?} n={n} not symmetric"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zeta_extremes() {
+        let full = Topology::build(&TopologyKind::Full, 10, 0);
+        assert!(full.zeta.abs() < 1e-9, "full zeta={}", full.zeta);
+        let disc = Topology::build(&TopologyKind::Disconnected, 10, 0);
+        assert!((disc.zeta - 1.0).abs() < 1e-9);
+        let ring = Topology::build(&TopologyKind::Ring, 10, 0);
+        assert!(ring.zeta > 0.0 && ring.zeta < 1.0);
+    }
+
+    #[test]
+    fn ring_zeta_closed_form_n10() {
+        // (1 + 2cos(2π/10))/3 ≈ 0.8727 — the paper's ζ = 0.87 topology
+        let t = Topology::build(&TopologyKind::Ring, 10, 0);
+        let expect = (1.0
+            + 2.0 * (2.0 * std::f64::consts::PI / 10.0).cos())
+            / 3.0;
+        assert!((t.zeta - expect).abs() < 1e-9, "{} vs {expect}", t.zeta);
+        assert!((t.zeta - 0.87).abs() < 0.01);
+    }
+
+    #[test]
+    fn adjacency_symmetric_no_self_loops() {
+        for kind in kinds() {
+            let t = Topology::build(&kind, 12, 3);
+            for i in 0..t.n {
+                assert!(!t.adj[i].contains(&i));
+                for &j in &t.adj[i] {
+                    assert!(t.adj[j].contains(&i), "{kind:?} asym edge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(Topology::build(&TopologyKind::Full, 8, 0).is_connected());
+        assert!(Topology::build(&TopologyKind::Ring, 8, 0).is_connected());
+        assert!(Topology::build(&TopologyKind::Star, 8, 0).is_connected());
+        assert!(Topology::build(&TopologyKind::Torus, 12, 0).is_connected());
+        assert!(
+            !Topology::build(&TopologyKind::Disconnected, 8, 0)
+                .is_connected()
+        );
+        assert!(
+            Topology::build(&TopologyKind::Random { p: 0.3 }, 20, 5)
+                .is_connected()
+        );
+    }
+
+    #[test]
+    fn metropolis_on_path_graph() {
+        // path 0-1-2: degrees 1,2,1
+        let adj = vec![vec![1], vec![0, 2], vec![1]];
+        let c = metropolis_weights(&adj);
+        assert!(c.is_doubly_stochastic(1e-12));
+        assert!((c[(0, 1)] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((c[(0, 0)] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c[(1, 1)] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_with_zeta_hits_target() {
+        let t = ring_with_zeta(10, 0.95);
+        assert!((t.zeta - 0.95).abs() < 1e-6, "zeta={}", t.zeta);
+        assert!(t.c.is_doubly_stochastic(1e-9));
+    }
+
+    #[test]
+    fn directed_links_count() {
+        let t = Topology::build(&TopologyKind::Ring, 10, 0);
+        assert_eq!(t.directed_links(), 20);
+        let f = Topology::build(&TopologyKind::Full, 10, 0);
+        assert_eq!(f.directed_links(), 90);
+    }
+
+    #[test]
+    fn mixing_contracts_disagreement() {
+        // X C^k -> consensus for connected topologies
+        let t = Topology::build(&TopologyKind::Ring, 10, 0);
+        let mut x = Matrix::zeros(1, 10);
+        for j in 0..10 {
+            x[(0, j)] = j as f64;
+        }
+        let mean = 4.5;
+        let mut spread_prev = f64::INFINITY;
+        let mut cur = x.clone();
+        for _ in 0..50 {
+            cur = cur.matmul(&t.c);
+            let spread: f64 = (0..10)
+                .map(|j| (cur[(0, j)] - mean).abs())
+                .fold(0.0, f64::max);
+            assert!(spread <= spread_prev + 1e-12);
+            spread_prev = spread;
+        }
+        assert!(spread_prev < 0.2, "spread={spread_prev}");
+    }
+}

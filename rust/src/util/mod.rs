@@ -1,0 +1,6 @@
+//! Utility substrates: PRNG, statistics, property-test harness, timing.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Integration tests for the CLI binary surface and the config system as a
+//! user would exercise them.
+
+use std::process::Command;
+
+fn lmdfl_bin() -> Option<std::path::PathBuf> {
+    // cargo puts test binaries next to the main binary
+    let mut path = std::env::current_exe().ok()?;
+    path.pop(); // test binary name
+    if path.ends_with("deps") {
+        path.pop();
+    }
+    let bin = path.join("lmdfl");
+    bin.exists().then_some(bin)
+}
+
+macro_rules! require_bin {
+    () => {
+        match lmdfl_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: lmdfl binary not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let bin = require_bin!();
+    let out = Command::new(&bin).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("lmdfl <command>"), "{text}");
+}
+
+#[test]
+fn topo_command_reports_ring_zeta() {
+    let bin = require_bin!();
+    let out = Command::new(&bin)
+        .args(["topo", "--kind", "ring", "--nodes", "10"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("zeta=0.87"), "{text}");
+    assert!(text.contains("connected=true"), "{text}");
+}
+
+#[test]
+fn quant_command_prints_bounds_table() {
+    let bin = require_bin!();
+    let out = Command::new(&bin)
+        .args(["quant", "--d", "1000"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("LM bound"), "{text}");
+    assert!(text.contains("16384"), "{text}");
+}
+
+#[test]
+fn train_inline_runs_and_writes_csv() {
+    let bin = require_bin!();
+    let csv = std::env::temp_dir().join("lmdfl_cli_train.csv");
+    let _ = std::fs::remove_file(&csv);
+    let out = Command::new(&bin)
+        .args([
+            "train",
+            "--nodes", "3",
+            "--rounds", "3",
+            "--tau", "2",
+            "--quantizer", "lm",
+            "--s", "8",
+            "--dataset", "blobs",
+            "--train", "120",
+            "--test", "40",
+            "--dim", "8",
+            "--classes", "3",
+            "--lr", "0.1",
+            "--csv",
+        ])
+        .arg(&csv)
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}",
+            String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("final:"), "{text}");
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(content.lines().count(), 4, "{content}");
+    let _ = std::fs::remove_file(&csv);
+}
+
+#[test]
+fn train_from_config_file() {
+    let bin = require_bin!();
+    let cfg_path = std::env::temp_dir().join("lmdfl_cli_cfg.json");
+    let mut cfg = lmdfl::config::ExperimentConfig::default();
+    cfg.nodes = 3;
+    cfg.rounds = 2;
+    cfg.dataset = lmdfl::config::DatasetKind::Blobs {
+        train: 90,
+        test: 30,
+        dim: 6,
+        classes: 3,
+    };
+    std::fs::write(&cfg_path, cfg.to_json().to_pretty()).unwrap();
+    let out = Command::new(&bin)
+        .args(["train", "--config"])
+        .arg(&cfg_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}",
+            String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_file(&cfg_path);
+}
+
+#[test]
+fn unknown_quantizer_fails_with_message() {
+    let bin = require_bin!();
+    let out = Command::new(&bin)
+        .args(["train", "--quantizer", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("unknown quantizer"), "{text}");
+}

@@ -1,0 +1,212 @@
+//! Integration tests over the full DFL stack: matrix engine vs threaded
+//! runtime, convergence quality gates, non-IID behaviour, failure
+//! injection, and CSV/metrics plumbing.
+
+use lmdfl::config::{
+    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind,
+    TopologyKind,
+};
+use lmdfl::dfl::{NetOptions, Trainer};
+
+fn blob_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "itest".into(),
+        seed: 21,
+        nodes: 5,
+        tau: 3,
+        rounds: 20,
+        batch_size: 24,
+        lr: LrSchedule::fixed(0.1),
+        topology: TopologyKind::Ring,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 10 },
+        dataset: DatasetKind::Blobs {
+            train: 500,
+            test: 150,
+            dim: 12,
+            classes: 5,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![24] },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1,
+    }
+}
+
+#[test]
+fn lm_dfl_learns_blobs_to_high_accuracy() {
+    let log = Trainer::build(&blob_cfg()).unwrap().run().unwrap();
+    let acc = log.final_accuracy().unwrap();
+    assert!(acc > 0.8, "accuracy {acc}");
+    assert!(log.last_loss().unwrap() < 1.0);
+}
+
+#[test]
+fn synth_mnist_end_to_end_learns() {
+    let mut cfg = blob_cfg();
+    cfg.dataset = DatasetKind::SynthMnist { train: 800, test: 200 };
+    cfg.lr = LrSchedule::fixed(0.03);
+    cfg.rounds = 25;
+    cfg.backend = BackendKind::RustMlp { hidden: vec![48] };
+    let log = Trainer::build(&cfg).unwrap().run().unwrap();
+    let acc = log.final_accuracy().unwrap();
+    assert!(acc > 0.5, "synth-mnist accuracy only {acc}");
+}
+
+#[test]
+fn threaded_and_matrix_engines_agree_qualitatively() {
+    // identical config: both must converge to similar loss (they are not
+    // bit-identical: thread scheduling does not affect math, but the
+    // threaded runtime wire-quantizes through f32 encode/decode exactly,
+    // so losses should match closely; allow small tolerance)
+    let cfg = blob_cfg();
+    let m = Trainer::build(&cfg).unwrap().run().unwrap();
+    let t = Trainer::run_threaded(
+        &cfg, NetOptions { drop_prob: 0.0, eval_every: 1 }).unwrap();
+    let lm = m.last_loss().unwrap();
+    let lt = t.last_loss().unwrap();
+    assert!(
+        (lm - lt).abs() < 0.35 * lm.max(0.2),
+        "matrix {lm} vs threaded {lt}"
+    );
+    // both converged
+    assert!(lm < m.records.first().unwrap().loss);
+    assert!(lt < t.records.first().unwrap().loss);
+}
+
+#[test]
+fn noniid_harder_than_iid() {
+    let mut iid = blob_cfg();
+    iid.noniid_fraction = 0.0;
+    iid.rounds = 10;
+    let mut skew = blob_cfg();
+    skew.noniid_fraction = 1.0;
+    skew.rounds = 10;
+    let li = Trainer::build(&iid).unwrap().run().unwrap();
+    let ls = Trainer::build(&skew).unwrap().run().unwrap();
+    // fully-by-label split should not converge faster than IID
+    assert!(
+        ls.last_loss().unwrap() >= li.last_loss().unwrap() * 0.7,
+        "non-iid {} unexpectedly beat iid {}",
+        ls.last_loss().unwrap(),
+        li.last_loss().unwrap()
+    );
+}
+
+#[test]
+fn quantized_variants_track_full_precision() {
+    // at s=256 the quantized run must be close to the unquantized one
+    let mut full = blob_cfg();
+    full.quantizer = QuantizerKind::Full;
+    let mut fine = blob_cfg();
+    fine.quantizer = QuantizerKind::LloydMax { s: 256, iters: 10 };
+    let lf = Trainer::build(&full).unwrap().run().unwrap();
+    let lq = Trainer::build(&fine).unwrap().run().unwrap();
+    let (a, b) = (lf.last_loss().unwrap(), lq.last_loss().unwrap());
+    assert!(
+        (a - b).abs() < 0.3 * a.max(0.2),
+        "full {a} vs lm-256 {b}"
+    );
+}
+
+#[test]
+fn coarse_quantization_converges_but_slower_or_noisier() {
+    let mut coarse = blob_cfg();
+    coarse.quantizer = QuantizerKind::LloydMax { s: 2, iters: 10 };
+    let log = Trainer::build(&coarse).unwrap().run().unwrap();
+    assert!(
+        log.last_loss().unwrap() < log.records.first().unwrap().loss,
+        "even 1-bit levels should make progress"
+    );
+}
+
+#[test]
+fn dropped_messages_degrade_gracefully_threaded() {
+    let cfg = blob_cfg();
+    let clean = Trainer::run_threaded(
+        &cfg, NetOptions { drop_prob: 0.0, eval_every: 1 }).unwrap();
+    let lossy = Trainer::run_threaded(
+        &cfg, NetOptions { drop_prob: 0.3, eval_every: 1 }).unwrap();
+    assert!(lossy.last_loss().unwrap().is_finite());
+    // lossy should still learn
+    assert!(
+        lossy.last_loss().unwrap()
+            < lossy.records.first().unwrap().loss
+    );
+    // and not be wildly better than clean (sanity on the fault model)
+    assert!(
+        lossy.last_loss().unwrap()
+            > clean.last_loss().unwrap() * 0.5 - 0.05
+    );
+}
+
+#[test]
+fn star_and_torus_topologies_train() {
+    for topo in [TopologyKind::Star, TopologyKind::Torus,
+                 TopologyKind::Random { p: 0.5 }] {
+        let mut cfg = blob_cfg();
+        cfg.topology = topo.clone();
+        cfg.rounds = 10;
+        let log = Trainer::build(&cfg).unwrap().run().unwrap();
+        assert!(
+            log.last_loss().unwrap()
+                < log.records.first().unwrap().loss,
+            "{topo:?} failed to learn"
+        );
+    }
+}
+
+#[test]
+fn run_log_csv_and_json_outputs() {
+    let mut cfg = blob_cfg();
+    cfg.rounds = 4;
+    let log = Trainer::build(&cfg).unwrap().run().unwrap();
+    let csv = log.to_csv();
+    assert_eq!(csv.lines().count(), 5);
+    let json = log.to_json().to_string();
+    let parsed = lmdfl::config::Json::parse(&json).unwrap();
+    assert_eq!(
+        parsed.get("records").unwrap().as_arr().unwrap().len(),
+        4
+    );
+}
+
+#[test]
+fn config_roundtrips_through_file_and_trains() {
+    let cfg = blob_cfg();
+    let dir = std::env::temp_dir();
+    let path = dir.join("lmdfl_itest_cfg.json");
+    std::fs::write(&path, cfg.to_json().to_pretty()).unwrap();
+    let loaded = lmdfl::config::load_config(&path).unwrap();
+    assert_eq!(loaded, cfg);
+    let mut quick = loaded;
+    quick.rounds = 2;
+    let log = Trainer::build(&quick).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn doubly_adaptive_beats_fixed_coarse_per_bit_on_blobs() {
+    let mut da = blob_cfg();
+    da.quantizer =
+        QuantizerKind::DoublyAdaptive { s1: 4, iters: 10, s_max: 1024 };
+    da.rounds = 25;
+    let mut fixed8 = blob_cfg();
+    fixed8.quantizer = QuantizerKind::Qsgd { s: 256 };
+    fixed8.rounds = 25;
+    let lda = Trainer::build(&da).unwrap().run().unwrap();
+    let lf = Trainer::build(&fixed8).unwrap().run().unwrap();
+    let target = lda
+        .last_loss()
+        .unwrap()
+        .max(lf.last_loss().unwrap())
+        * 1.1;
+    if let (Some(a), Some(b)) =
+        (lda.bits_to_loss(target), lf.bits_to_loss(target))
+    {
+        assert!(
+            a <= b,
+            "doubly-adaptive {a} bits should be <= QSGD-8bit {b}"
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests across the quant stack: quantize → encode → wire →
+//! decode → dequantize, distortion orderings, and paper-bound conformance.
+
+use lmdfl::config::QuantizerKind;
+use lmdfl::quant::distortion::{
+    lm_bound, normalized_distortion, qsgd_bound,
+};
+use lmdfl::quant::{
+    build_quantizer, codec, FullPrecision, NaturalQuantizer, QsgdQuantizer,
+};
+use lmdfl::util::proptest::check;
+use lmdfl::util::rng::Rng;
+use lmdfl::util::stats::l2_norm;
+
+fn all_kinds(s: usize) -> Vec<QuantizerKind> {
+    vec![
+        QuantizerKind::Full,
+        QuantizerKind::Qsgd { s },
+        QuantizerKind::Natural { s },
+        QuantizerKind::Alq { s },
+        QuantizerKind::LloydMax { s, iters: 10 },
+    ]
+}
+
+fn implied(kind: &QuantizerKind, s: usize) -> Vec<f32> {
+    match kind {
+        QuantizerKind::Qsgd { .. } => QsgdQuantizer::level_table(s),
+        QuantizerKind::Natural { .. } => NaturalQuantizer::level_table(s),
+        QuantizerKind::Full => FullPrecision::level_table(s),
+        _ => Vec::new(),
+    }
+}
+
+#[test]
+fn wire_roundtrip_preserves_dequantization_for_all_quantizers() {
+    let mut rng = Rng::new(1);
+    let v: Vec<f32> = (0..3000).map(|_| rng.normal() as f32).collect();
+    for kind in all_kinds(16) {
+        let mut q = build_quantizer(&kind);
+        let msg = q.quantize(&v, &mut rng);
+        let bytes = codec::encode(&msg);
+        let back = codec::decode(&bytes, |s| implied(&kind, s)).unwrap();
+        assert_eq!(
+            back.dequantize(),
+            msg.dequantize(),
+            "{kind:?} wire roundtrip changed values"
+        );
+    }
+}
+
+#[test]
+fn distortion_ordering_lm_best_on_gaussian() {
+    let mut rng = Rng::new(2);
+    let v: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+    let mut results = Vec::new();
+    for kind in all_kinds(16) {
+        let mut q = build_quantizer(&kind);
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        results.push((kind, normalized_distortion(&v, &dq)));
+    }
+    let get = |name: &str| {
+        results
+            .iter()
+            .find(|(k, _)| format!("{k:?}").contains(name))
+            .unwrap()
+            .1
+    };
+    // d * step^2 / 12 ≈ 1.6e-5 at d = 50k, s = 16384
+    assert!(get("Full") < 1e-4);
+    let lm = get("LloydMax");
+    assert!(lm < get("Qsgd"), "LM {lm} !< QSGD {}", get("Qsgd"));
+    assert!(lm < get("Natural"));
+    assert!(lm < get("Alq") * 1.05);
+}
+
+#[test]
+fn lm_bound_holds_across_scales_and_distributions() {
+    check("lm theorem-2 bound", 40, |g| {
+        let scale = g.f64_in(1e-4..1e4) as f32;
+        let mut v = if g.bool() {
+            g.vec_normal(200..3000, 1.0)
+        } else {
+            g.vec_laplace(200..3000, 0.4)
+        };
+        v.iter_mut().for_each(|x| *x *= scale);
+        if l2_norm(&v) == 0.0 {
+            return;
+        }
+        let s = *g.pick(&[4usize, 16, 64]);
+        let mut q = build_quantizer(
+            &QuantizerKind::LloydMax { s, iters: 25 });
+        let mut rng = Rng::new(g.seed);
+        let dq = q.quantize(&v, &mut rng).dequantize();
+        let nd = normalized_distortion(&v, &dq);
+        let bound = lm_bound(v.len(), s);
+        assert!(nd <= bound * 1.5 + 1e-9, "nd {nd} bound {bound} s={s}");
+    });
+}
+
+#[test]
+fn lm_needs_fewer_levels_than_qsgd_for_same_distortion() {
+    // Table I discussion: "LM-DFL uses only 0.29 s levels" — check that
+    // LM at s=16 beats QSGD at s=32 on gaussian data.
+    let mut rng = Rng::new(3);
+    let v: Vec<f32> = (0..40_000).map(|_| rng.normal() as f32).collect();
+    let mut lm = build_quantizer(
+        &QuantizerKind::LloydMax { s: 16, iters: 25 });
+    let mut qsgd = build_quantizer(&QuantizerKind::Qsgd { s: 32 });
+    let lm_d = normalized_distortion(
+        &v, &lm.quantize(&v, &mut rng).dequantize());
+    let qs_d = normalized_distortion(
+        &v, &qsgd.quantize(&v, &mut rng).dequantize());
+    assert!(
+        lm_d < qs_d,
+        "LM s=16 ({lm_d}) should beat QSGD s=32 ({qs_d})"
+    );
+}
+
+#[test]
+fn paper_bits_scale_with_level_count() {
+    let mut rng = Rng::new(4);
+    let v: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+    let mut prev = 0u64;
+    for s in [2usize, 4, 16, 256] {
+        let mut q = build_quantizer(&QuantizerKind::Qsgd { s });
+        let bits = q.quantize(&v, &mut rng).paper_bits();
+        assert!(bits >= prev);
+        prev = bits;
+        assert_eq!(
+            bits,
+            lmdfl::quant::bits::c_s(1000, s),
+            "paper bits must match Eq. 12"
+        );
+    }
+}
+
+#[test]
+fn stochastic_quantizers_unbiased_through_wire() {
+    // encode/decode then average many draws: mean ~ v
+    let mut rng = Rng::new(5);
+    let v = vec![0.42f32, -0.17, 0.9, -0.66];
+    for kind in [QuantizerKind::Qsgd { s: 4 }, QuantizerKind::Alq { s: 6 }] {
+        let mut q = build_quantizer(&kind);
+        let n = 8000;
+        let mut acc = vec![0.0f64; v.len()];
+        for _ in 0..n {
+            let msg = q.quantize(&v, &mut rng);
+            let bytes = codec::encode(&msg);
+            let back =
+                codec::decode(&bytes, |s| implied(&kind, s)).unwrap();
+            for (a, x) in acc.iter_mut().zip(back.dequantize()) {
+                *a += x as f64;
+            }
+        }
+        for (a, &want) in acc.iter().zip(&v) {
+            let mean = a / n as f64;
+            assert!(
+                (mean - want as f64).abs() < 0.03,
+                "{kind:?}: mean {mean} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qsgd_bound_comparison_sanity() {
+    // the measured distortion tracks the analytic bound direction in s
+    let mut rng = Rng::new(6);
+    let v: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+    let mut prev = f64::INFINITY;
+    for s in [4usize, 16, 64] {
+        let mut q = build_quantizer(&QuantizerKind::Qsgd { s });
+        let nd = normalized_distortion(
+            &v, &q.quantize(&v, &mut rng).dequantize());
+        assert!(nd < prev, "distortion should fall with s");
+        assert!(nd <= qsgd_bound(v.len(), s) * 3.0);
+        prev = nd;
+    }
+}
+
+#[test]
+fn adaptive_levels_integration_with_quantizer() {
+    use lmdfl::quant::adaptive::AdaptiveLevels;
+    use lmdfl::quant::Quantizer;
+    let mut lm = lmdfl::quant::LloydMaxQuantizer::new(4, 8);
+    let mut ad = AdaptiveLevels::new(4, 256);
+    let mut rng = Rng::new(7);
+    let v: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+    let mut losses = vec![2.0, 1.0, 0.5, 0.25, 0.1];
+    let mut last_bits = 0u64;
+    for loss in losses.drain(..) {
+        let s = ad.update(loss);
+        lm.set_levels(s);
+        let msg = lm.quantize(&v, &mut rng);
+        assert_eq!(msg.s(), s);
+        assert!(msg.paper_bits() >= last_bits);
+        last_bits = msg.paper_bits();
+    }
+    // s = round(4 * sqrt(2.0 / 0.1)) = round(17.9) = 18
+    assert_eq!(ad.current(), (4.0 * (2.0f64 / 0.1).sqrt()).round() as usize);
+}

@@ -1,0 +1,232 @@
+//! Integration tests for the PJRT HLO runtime — gated on `make artifacts`
+//! having run (they skip cleanly otherwise, so `cargo test` works before
+//! the python compile path).
+
+use lmdfl::dfl::backend::{LocalUpdate, RustMlpBackend};
+use lmdfl::runtime::{
+    artifacts_available, artifacts_dir, literal_f32, HloBackend,
+    HloExecutor, Manifest,
+};
+use lmdfl::util::rng::Rng;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for name in [
+        "mlp_mnist_step",
+        "mlp_mnist_eval",
+        "mlp_mnist_grad",
+        "cnn_mnist_step",
+        "cnn_cifar_step",
+        "transformer_step",
+        "transformer_eval",
+        "lm_quantize_s16",
+        "lloyd_iter_s16",
+    ] {
+        assert!(m.get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn hlo_mlp_step_decreases_loss() {
+    require_artifacts!();
+    let mut b = HloBackend::load(&artifacts_dir(), "mlp_mnist", 784, 10)
+        .unwrap();
+    let mut rng = Rng::new(0);
+    let mut params = b.init_params(&mut rng);
+    let x: Vec<f32> =
+        (0..32 * 784).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<u32> = (0..32).map(|i| (i % 10) as u32).collect();
+    let l0 = b.step(&mut params, &x, &y, 0.2).unwrap();
+    let mut l = l0;
+    for _ in 0..40 {
+        l = b.step(&mut params, &x, &y, 0.2).unwrap();
+    }
+    assert!(l < l0 * 0.7, "HLO loss {l0} -> {l}");
+}
+
+#[test]
+fn hlo_and_rust_backends_agree_on_gradient_direction() {
+    // identical math (same layout, same loss): one step from the same
+    // params on the same batch must produce very similar parameters.
+    require_artifacts!();
+    let mut hlo = HloBackend::load(&artifacts_dir(), "mlp_mnist", 784, 10)
+        .unwrap();
+    let mut rust = RustMlpBackend::new(784, &[256, 128], 10);
+    assert_eq!(hlo.param_count(), rust.param_count());
+    let mut rng = Rng::new(3);
+    let params0 = hlo.init_params(&mut rng);
+    let x: Vec<f32> =
+        (0..32 * 784).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<u32> = (0..32).map(|_| rng.below(10) as u32).collect();
+
+    let mut p_hlo = params0.clone();
+    let loss_hlo = hlo.step(&mut p_hlo, &x, &y, 0.1).unwrap();
+    let mut p_rust = params0.clone();
+    let loss_rust = rust.step(&mut p_rust, &x, &y, 0.1).unwrap();
+
+    assert!(
+        (loss_hlo - loss_rust).abs() < 1e-3 * (1.0 + loss_rust.abs()),
+        "losses diverge: hlo {loss_hlo} rust {loss_rust}"
+    );
+    // parameter updates nearly identical
+    let mut max_diff = 0.0f32;
+    for (a, b) in p_hlo.iter().zip(&p_rust) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 5e-3, "param max diff {max_diff}");
+}
+
+#[test]
+fn hlo_eval_matches_rust_eval() {
+    require_artifacts!();
+    let mut hlo = HloBackend::load(&artifacts_dir(), "mlp_mnist", 784, 10)
+        .unwrap();
+    let mut rust = RustMlpBackend::new(784, &[256, 128], 10);
+    let mut rng = Rng::new(5);
+    let params = hlo.init_params(&mut rng);
+    // exact multiple of the baked batch (32) → no padding approximation
+    let n = 64;
+    let x: Vec<f32> =
+        (0..n * 784).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<u32> = (0..n).map(|_| rng.below(10) as u32).collect();
+    let (lh, ch) = hlo.evaluate(&params, &x, &y).unwrap();
+    let (lr, cr) = rust.evaluate(&params, &x, &y).unwrap();
+    assert!((lh - lr).abs() < 1e-3 * (1.0 + lr.abs()), "{lh} vs {lr}");
+    assert_eq!(ch, cr, "correct counts differ");
+}
+
+#[test]
+fn hlo_lm_quantize_matches_rust_quantizer_tables() {
+    // run the AOT Pallas LM-quantize kernel and compare against the native
+    // Rust assignment with the same levels/boundaries
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let info = m.get("lm_quantize_s16").unwrap().clone();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = HloExecutor::compile(&client, info.clone()).unwrap();
+    let d = info.input("v").unwrap().elements();
+    let s = 16usize;
+    let mut rng = Rng::new(9);
+    let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let bnd: Vec<f32> = (0..=s).map(|j| j as f32 / s as f32).collect();
+    let lev: Vec<f32> =
+        (0..s).map(|j| (j as f32 + 0.5) / s as f32).collect();
+    let outs = exe
+        .run(&[
+            literal_f32(&v, &[d]).unwrap(),
+            literal_f32(&lev, &[s]).unwrap(),
+            literal_f32(&bnd, &[s + 1]).unwrap(),
+        ])
+        .unwrap();
+    let q_hlo = outs[0].to_vec::<f32>().unwrap();
+    let dist_hlo = outs[1].to_vec::<f32>().unwrap()[0] as f64;
+
+    // native reference with the same fixed tables
+    let norm = lmdfl::util::stats::l2_norm(&v) as f32;
+    let mut q_ref = Vec::with_capacity(d);
+    for &x in &v {
+        let r = x.abs() / norm;
+        // bin index = #\{interior boundaries < r\}
+        let mut idx = 0usize;
+        for &bv in &bnd[1..s] {
+            if bv < r {
+                idx += 1;
+            }
+        }
+        let mag = norm * lev[idx];
+        q_ref.push(if x < 0.0 { -mag } else { mag });
+    }
+    let mut max_diff = 0.0f32;
+    for (a, b) in q_hlo.iter().zip(&q_ref) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-4 * norm, "pallas vs native max diff {max_diff}");
+    let dist_ref = lmdfl::util::stats::sq_dist(&q_ref, &v);
+    assert!(
+        (dist_hlo - dist_ref).abs() < 1e-2 * (1.0 + dist_ref),
+        "distortion {dist_hlo} vs {dist_ref}"
+    );
+}
+
+#[test]
+fn hlo_lloyd_iter_reduces_distortion() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let info = m.get("lloyd_iter_s16").unwrap().clone();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = HloExecutor::compile(&client, info.clone()).unwrap();
+    let d = info.input("r").unwrap().elements();
+    let s = 16usize;
+    let mut rng = Rng::new(11);
+    let r: Vec<f32> =
+        (0..d).map(|_| (rng.uniform() as f32).powi(2)).collect();
+    let mut bnd: Vec<f32> = (0..=s).map(|j| j as f32 / s as f32).collect();
+    let mut lev: Vec<f32> =
+        (0..s).map(|j| (j as f32 + 0.5) / s as f32).collect();
+
+    let dist = |lev: &[f32], bnd: &[f32]| -> f64 {
+        let mut acc = 0.0f64;
+        for &x in &r {
+            let mut idx = 0usize;
+            for &bv in &bnd[1..s] {
+                if bv < x {
+                    idx += 1;
+                }
+            }
+            let dd = (x - lev[idx]) as f64;
+            acc += dd * dd;
+        }
+        acc
+    };
+    let d0 = dist(&lev, &bnd);
+    for _ in 0..5 {
+        let outs = exe
+            .run(&[
+                literal_f32(&r, &[d]).unwrap(),
+                literal_f32(&bnd, &[s + 1]).unwrap(),
+            ])
+            .unwrap();
+        lev = outs[0].to_vec::<f32>().unwrap();
+        bnd = outs[1].to_vec::<f32>().unwrap();
+    }
+    let d5 = dist(&lev, &bnd);
+    assert!(d5 < d0, "lloyd iterations did not reduce distortion: {d0} -> {d5}");
+}
+
+#[test]
+fn dfl_training_on_hlo_backend_converges() {
+    require_artifacts!();
+    use lmdfl::config::*;
+    let cfg = ExperimentConfig {
+        name: "hlo-dfl".into(),
+        seed: 2,
+        nodes: 3,
+        tau: 2,
+        rounds: 4,
+        batch_size: 32,
+        lr: LrSchedule::fixed(0.05),
+        topology: TopologyKind::Ring,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 8 },
+        dataset: DatasetKind::SynthMnist { train: 400, test: 100 },
+        backend: BackendKind::Hlo { artifact: "mlp_mnist".into() },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1,
+    };
+    let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
+    assert_eq!(log.records.len(), 4);
+    let first = log.records.first().unwrap().loss;
+    let last = log.records.last().unwrap().loss;
+    assert!(last < first, "HLO DFL did not learn: {first} -> {last}");
+}
