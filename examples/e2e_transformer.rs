@@ -19,6 +19,7 @@ use lmdfl::quant::LloydMaxQuantizer;
 use lmdfl::runtime::{literal_f32, literal_i32, HloExecutor, Manifest};
 use lmdfl::topology::Topology;
 use lmdfl::util::rng::Rng;
+use lmdfl::xla;
 
 /// Deterministic pseudo-text corpus: sampled words with punctuation —
 /// structured enough that a byte LM's loss falls quickly.

@@ -29,6 +29,7 @@ fn base_config() -> ExperimentConfig {
         noniid_fraction: 0.5,
         link_bps: 100e6,
         eval_every: 1,
+        parallelism: lmdfl::config::Parallelism::Auto,
     }
 }
 

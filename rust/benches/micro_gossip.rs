@@ -32,6 +32,7 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         noniid_fraction: 0.5,
         link_bps: 100e6,
         eval_every: 1000, // exclude eval cost from the round timing
+        parallelism: lmdfl::config::Parallelism::Auto,
     }
 }
 
@@ -70,4 +71,6 @@ fn main() {
             );
         });
     }
+
+    b.finish("micro_gossip");
 }

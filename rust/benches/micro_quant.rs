@@ -70,4 +70,20 @@ fn main() {
             black_box(q.quantize(&v, &mut rng));
         });
     }
+
+    // allocation-free path vs the allocating one (same math; the into
+    // variant reuses message buffers — the engines' hot path)
+    println!("--- quantize vs quantize_into (d = 100k) ---");
+    use lmdfl::quant::QuantizedVector;
+    let mut lm = LloydMaxQuantizer::new(64, 12);
+    b.run_elems("lloyd_max s=64 quantize (alloc)", 100_000, || {
+        black_box(lm.quantize(&v, &mut rng));
+    });
+    let mut msg = QuantizedVector::empty();
+    b.run_elems("lloyd_max s=64 quantize_into", 100_000, || {
+        lm.quantize_into(&v, &mut rng, &mut msg);
+        black_box(&msg);
+    });
+
+    b.finish("micro_quant");
 }

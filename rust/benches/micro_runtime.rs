@@ -1,72 +1,88 @@
-//! Micro-bench: PJRT HLO executable dispatch — per-step latency of the AOT
-//! model step vs the pure-Rust backend, and the LM-quantize HLO kernel vs
-//! the native Rust quantizer (L1-vs-L3 comparison).
+//! Micro-bench: matrix-engine round throughput, sequential vs parallel.
 //!
-//! Skips (cleanly) when artifacts/ is missing.
+//! Runs the same LM-DFL round workload at 8 / 16 / 32 nodes with
+//! `parallelism = off` and `parallelism = auto` and reports the speedup —
+//! the acceptance number for the parallel zero-alloc round executor (the
+//! two paths are bit-identical; see rust/tests/engine_parallel.rs).
 //!
-//!   make artifacts && cargo bench --bench micro_runtime
+//!   cargo bench --bench micro_runtime
+//!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
+//!       cargo bench --bench micro_runtime     # CI smoke + JSON artifact
 
 use lmdfl::bench::{black_box, Bencher};
-use lmdfl::dfl::backend::{LocalUpdate, RustMlpBackend};
-use lmdfl::quant::{LloydMaxQuantizer, Quantizer};
-use lmdfl::runtime::{
-    artifacts_available, artifacts_dir, literal_f32, HloBackend,
-    HloExecutor, Manifest,
+use lmdfl::config::{
+    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, Parallelism,
+    QuantizerKind, TopologyKind,
 };
-use lmdfl::util::rng::Rng;
+use lmdfl::dfl::Trainer;
+
+fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "micro_runtime".into(),
+        seed: 3,
+        nodes,
+        tau: 4,
+        rounds: 4,
+        batch_size: 32,
+        lr: LrSchedule::fixed(0.05),
+        topology: TopologyKind::Ring,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 12 },
+        dataset: DatasetKind::Blobs {
+            train: 64 * nodes,
+            test: 64,
+            dim: 64,
+            classes: 10,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![128] },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1_000_000, // exclude eval cost from the round timing
+        parallelism,
+    }
+}
 
 fn main() {
-    if !artifacts_available() {
-        println!("artifacts/ missing — run `make artifacts`; skipping");
-        return;
-    }
-    let dir = artifacts_dir();
     let mut b = Bencher::new();
-    let mut rng = Rng::new(0);
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("hardware threads: {hw}");
 
-    // ---- model step: HLO vs pure Rust ----------------------------------
-    let mut hlo = HloBackend::load(&dir, "mlp_mnist", 784, 10).unwrap();
-    let mut rust = RustMlpBackend::new(784, &[256, 128], 10);
-    assert_eq!(hlo.param_count(), rust.param_count(),
-        "manifest MLP dims drifted from the rust mirror");
-    let mut params = hlo.init_params(&mut rng);
-    let x: Vec<f32> =
-        (0..32 * 784).map(|_| rng.normal() as f32 * 0.3).collect();
-    let y: Vec<u32> = (0..32).map(|_| rng.below(10) as u32).collect();
+    for &nodes in &[8usize, 16, 32] {
+        let mut seq =
+            Trainer::build(&cfg(nodes, Parallelism::Off)).unwrap();
+        let mut k = 0usize;
+        let seq_mean = b
+            .run(&format!("engine round n={nodes} parallelism=off"), || {
+                black_box(seq.engine_mut().round(k).unwrap());
+                k += 1;
+            })
+            .mean();
 
-    b.run("hlo mlp_mnist step (B=32)", || {
-        black_box(hlo.step(&mut params, &x, &y, 0.01).unwrap());
-    });
-    let mut params2 = params.clone();
-    b.run("rust mlp step (B=32)", || {
-        black_box(rust.step(&mut params2, &x, &y, 0.01).unwrap());
-    });
-    b.run("hlo mlp_mnist evaluate (B=32)", || {
-        black_box(hlo.evaluate(&params, &x, &y).unwrap());
-    });
+        let mut par =
+            Trainer::build(&cfg(nodes, Parallelism::Auto)).unwrap();
+        let workers = par.engine().workers();
+        let mut k = 0usize;
+        let par_mean = b
+            .run(
+                &format!(
+                    "engine round n={nodes} parallelism=auto(w={workers})"
+                ),
+                || {
+                    black_box(par.engine_mut().round(k).unwrap());
+                    k += 1;
+                },
+            )
+            .mean();
 
-    // ---- LM quantize: HLO Pallas kernel vs native Rust ------------------
-    let manifest = Manifest::load(&dir).unwrap();
-    if let Ok(info) = manifest.get("lm_quantize_s16") {
-        let client = xla::PjRtClient::cpu().unwrap();
-        let exe = HloExecutor::compile(&client, info.clone()).unwrap();
-        let d = info.input("v").unwrap().elements();
-        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-        let bnd: Vec<f32> =
-            (0..=16).map(|j| j as f32 / 16.0).collect();
-        let lev: Vec<f32> =
-            (0..16).map(|j| (j as f32 + 0.5) / 16.0).collect();
-        let inputs = vec![
-            literal_f32(&v, &[d]).unwrap(),
-            literal_f32(&lev, &[16]).unwrap(),
-            literal_f32(&bnd, &[17]).unwrap(),
-        ];
-        b.run_elems("hlo lm_quantize s=16 (pallas)", d as u64, || {
-            black_box(exe.run(&inputs).unwrap());
-        });
-        let mut native = LloydMaxQuantizer::new(16, 12);
-        b.run_elems("rust lm quantize s=16 (incl. fit)", d as u64, || {
-            black_box(native.quantize(&v, &mut rng));
-        });
+        println!(
+            "n={nodes}: {:.2}x round-throughput speedup \
+             (off {:.3}ms -> auto {:.3}ms, {workers} workers)",
+            seq_mean / par_mean,
+            seq_mean * 1e3,
+            par_mean * 1e3,
+        );
     }
+
+    b.finish("micro_runtime");
 }

@@ -4,9 +4,33 @@
 //! [`Bencher::run`]: auto-calibrated iteration counts, warmup, and a
 //! mean/std/min/p50/p95 report in criterion-like format. Figure benches
 //! also use it to time end-to-end rounds.
+//!
+//! # Machine-readable reports
+//!
+//! Alongside the text report, [`Bencher::finish`] emits a JSON document
+//! (`BENCH_<target>.json`) so CI can archive the perf trajectory across
+//! PRs. Set `LMDFL_BENCH_JSON=<dir>` to enable it (the CI bench-smoke job
+//! does; unset = no file I/O). Schema (`lmdfl-bench-v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "lmdfl-bench-v1",
+//!   "bench": "micro_runtime",
+//!   "results": [
+//!     {"name": "...", "mean_s": 1e-3, "std_s": 1e-5, "min_s": 9e-4,
+//!      "p50_s": 1e-3, "p95_s": 1.2e-3, "samples": 20,
+//!      "elems_per_iter": 1000, "elems_per_s": 1e6}
+//!   ]
+//! }
+//! ```
+//!
+//! Environment knobs: `LMDFL_BENCH_QUICK=1` shrinks the measurement budget
+//! (CI smoke), `LMDFL_BENCH_JSON=<dir>` enables the JSON artifact.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::config::json::Json;
 use crate::util::stats::percentile;
 
 /// One benchmark's timing results (per-iteration seconds).
@@ -67,6 +91,24 @@ impl BenchResult {
             line.push_str(&format!("  [{}/s]", fmt_count(rate)));
         }
         line
+    }
+
+    /// Machine-readable form (see module docs for the schema).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("mean_s", Json::num(self.mean())),
+            ("std_s", Json::num(self.std())),
+            ("min_s", Json::num(self.min())),
+            ("p50_s", Json::num(self.p50())),
+            ("p95_s", Json::num(self.p95())),
+            ("samples", Json::num(self.samples.len() as f64)),
+        ];
+        if let Some(n) = self.elems_per_iter {
+            pairs.push(("elems_per_iter", Json::num(n as f64)));
+            pairs.push(("elems_per_s", Json::num(n as f64 / self.mean())));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -191,6 +233,46 @@ impl Bencher {
         self.results.push(result);
         self.results.last().unwrap()
     }
+
+    /// Full machine-readable report for a named bench target.
+    pub fn to_json(&self, bench: &str) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("lmdfl-bench-v1")),
+            ("bench", Json::str(bench)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir` (created if missing).
+    pub fn write_json(
+        &self,
+        bench: &str,
+        dir: &Path,
+    ) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{bench}.json"));
+        std::fs::write(&path, self.to_json(bench).to_pretty())?;
+        Ok(path)
+    }
+
+    /// End-of-target hook every bench binary calls: when
+    /// `LMDFL_BENCH_JSON=<dir>` is set, persist the JSON report there and
+    /// announce the path; otherwise do nothing (local text-only runs).
+    pub fn finish(&self, bench: &str) {
+        let Ok(dir) = std::env::var("LMDFL_BENCH_JSON") else {
+            return;
+        };
+        if dir.is_empty() {
+            return;
+        }
+        match self.write_json(bench, Path::new(&dir)) {
+            Ok(path) => println!("bench json: {}", path.display()),
+            Err(e) => eprintln!("bench json write failed: {e}"),
+        }
+    }
 }
 
 /// Opaque value sink to stop the optimizer deleting benchmarked work.
@@ -238,5 +320,54 @@ mod tests {
         assert_eq!(r.min(), 1.0);
         assert!((r.p50() - 2.0).abs() < 1e-12);
         assert!(r.report().contains("/s]"));
+    }
+
+    #[test]
+    fn json_report_schema() {
+        let b = Bencher {
+            measure_secs: 0.0,
+            warmup_secs: 0.0,
+            samples: 0,
+            results: vec![BenchResult {
+                name: "roundtrip".into(),
+                samples: vec![2.0, 4.0],
+                elems_per_iter: Some(6),
+            }],
+        };
+        let j = b.to_json("unit");
+        assert_eq!(j.get_str("schema"), Some("lmdfl-bench-v1"));
+        assert_eq!(j.get_str("bench"), Some("unit"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.get_str("name"), Some("roundtrip"));
+        assert!((r.get_f64("mean_s").unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(r.get_usize("samples"), Some(2));
+        assert!((r.get_f64("elems_per_s").unwrap() - 2.0).abs() < 1e-12);
+        // serialized form parses back
+        let text = j.to_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn json_report_written_to_dir() {
+        let b = Bencher {
+            measure_secs: 0.0,
+            warmup_secs: 0.0,
+            samples: 0,
+            results: vec![BenchResult {
+                name: "w".into(),
+                samples: vec![1.0],
+                elems_per_iter: None,
+            }],
+        };
+        let dir = std::env::temp_dir().join("lmdfl_bench_json_test");
+        let path = b.write_json("unitfile", &dir).unwrap();
+        assert!(path.ends_with("BENCH_unitfile.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get_str("bench"), Some("unitfile"));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -6,7 +6,7 @@ pub mod schema;
 pub use json::Json;
 pub use schema::{
     BackendKind, ConfigError, DatasetKind, ExperimentConfig, LrSchedule,
-    QuantizerKind, TopologyKind,
+    Parallelism, QuantizerKind, TopologyKind,
 };
 
 use std::path::Path;

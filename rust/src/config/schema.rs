@@ -6,9 +6,16 @@
 
 use crate::config::json::Json;
 
-#[derive(Debug, thiserror::Error)]
-#[error("config error: {0}")]
+#[derive(Debug)]
 pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 fn bad(msg: impl Into<String>) -> ConfigError {
     ConfigError(msg.into())
@@ -255,6 +262,76 @@ impl BackendKind {
     }
 }
 
+/// Round-executor parallelism: how many worker threads the matrix engine
+/// partitions its per-node phases across (see `util::pool`). The parallel
+/// path is bit-identical to the sequential one (node-partitioned work,
+/// sequential reductions), so this is purely a throughput knob.
+///
+/// JSON forms: `"auto"`, `"off"`, or a positive integer worker count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// One worker per available hardware thread (clamped to node count).
+    #[default]
+    Auto,
+    /// Single-threaded execution on the calling thread.
+    Off,
+    /// Exactly this many workers (clamped to node count).
+    Fixed(usize),
+}
+
+impl Parallelism {
+    /// Resolve to a concrete worker count for `items` parallel work items.
+    pub fn workers(&self, items: usize) -> usize {
+        let raw = match self {
+            Parallelism::Off => 1,
+            Parallelism::Fixed(n) => (*n).max(1),
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        };
+        raw.min(items.max(1))
+    }
+
+    /// Parse the CLI / JSON-string form.
+    pub fn parse_str(text: &str) -> Result<Self, ConfigError> {
+        match text {
+            "auto" => Ok(Parallelism::Auto),
+            "off" => Ok(Parallelism::Off),
+            other => other
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .map(Parallelism::Fixed)
+                .ok_or_else(|| {
+                    bad(format!(
+                        "parallelism must be 'auto', 'off' or a positive \
+                         integer, got '{other}'"
+                    ))
+                }),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Parallelism::Auto => Json::str("auto"),
+            Parallelism::Off => Json::str("off"),
+            Parallelism::Fixed(n) => Json::num(*n as f64),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        if let Some(s) = j.as_str() {
+            return Self::parse_str(s);
+        }
+        if let Some(n) = j.as_usize() {
+            if n >= 1 {
+                return Ok(Parallelism::Fixed(n));
+            }
+        }
+        Err(bad("parallelism must be 'auto', 'off' or a positive integer"))
+    }
+}
+
 /// Learning-rate schedule. The paper evaluates fixed η and a variable η_k
 /// decaying 20% every 10 iterations (Fig. 8).
 #[derive(Clone, Debug, PartialEq)]
@@ -325,6 +402,8 @@ pub struct ExperimentConfig {
     pub link_bps: f64,
     /// evaluate global loss/accuracy every this many rounds
     pub eval_every: usize,
+    /// worker threads for the matrix engine's per-node phases
+    pub parallelism: Parallelism,
 }
 
 impl Default for ExperimentConfig {
@@ -344,6 +423,7 @@ impl Default for ExperimentConfig {
             noniid_fraction: 0.5,
             link_bps: 100e6,
             eval_every: 1,
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -408,6 +488,7 @@ impl ExperimentConfig {
             ("noniid_fraction", Json::num(self.noniid_fraction)),
             ("link_bps", Json::num(self.link_bps)),
             ("eval_every", Json::num(self.eval_every as f64)),
+            ("parallelism", self.parallelism.to_json()),
         ])
     }
 
@@ -445,6 +526,10 @@ impl ExperimentConfig {
                 .unwrap_or(d.noniid_fraction),
             link_bps: j.get_f64("link_bps").unwrap_or(d.link_bps),
             eval_every: j.get_usize("eval_every").unwrap_or(d.eval_every),
+            parallelism: match j.get("parallelism") {
+                Some(pj) => Parallelism::from_json(pj)?,
+                None => d.parallelism,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -478,9 +563,47 @@ mod tests {
         cfg.topology = TopologyKind::Random { p: 0.3 };
         cfg.lr = LrSchedule::paper_variable(0.002);
         cfg.backend = BackendKind::Hlo { artifact: "mlp_mnist".into() };
+        cfg.parallelism = Parallelism::Fixed(3);
         let text = cfg.to_json().to_pretty();
         let back = ExperimentConfig::parse(&text).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn parallelism_forms_parse() {
+        assert_eq!(
+            Parallelism::parse_str("auto").unwrap(),
+            Parallelism::Auto
+        );
+        assert_eq!(Parallelism::parse_str("off").unwrap(), Parallelism::Off);
+        assert_eq!(
+            Parallelism::parse_str("4").unwrap(),
+            Parallelism::Fixed(4)
+        );
+        assert!(Parallelism::parse_str("0").is_err());
+        assert!(Parallelism::parse_str("many").is_err());
+
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "p", "parallelism": "off"}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Off);
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "p", "parallelism": 2}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Fixed(2));
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "p", "parallelism": 0}"#).is_err());
+        // absent -> default (auto)
+        let cfg = ExperimentConfig::parse(r#"{"name": "p"}"#).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Auto);
+    }
+
+    #[test]
+    fn parallelism_worker_resolution() {
+        assert_eq!(Parallelism::Off.workers(16), 1);
+        assert_eq!(Parallelism::Fixed(4).workers(16), 4);
+        // clamped to the number of work items
+        assert_eq!(Parallelism::Fixed(32).workers(5), 5);
+        assert!(Parallelism::Auto.workers(16) >= 1);
+        assert!(Parallelism::Auto.workers(2) <= 2);
     }
 
     #[test]

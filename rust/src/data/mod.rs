@@ -45,13 +45,29 @@ impl Dataset {
 
     /// Gather a batch (features, labels) from train-set indices.
     pub fn gather_batch(&self, idx: &[usize]) -> (Vec<f32>, Vec<u32>) {
-        let mut x = Vec::with_capacity(idx.len() * self.feat_dim);
-        let mut y = Vec::with_capacity(idx.len());
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.gather_batch_into(idx, &mut x, &mut y);
+        (x, y)
+    }
+
+    /// Gather a batch into caller-owned buffers (hot path: the round
+    /// executor reuses per-node scratch so τ·rounds batch gathers cost no
+    /// allocations after warm-up).
+    pub fn gather_batch_into(
+        &self,
+        idx: &[usize],
+        x: &mut Vec<f32>,
+        y: &mut Vec<u32>,
+    ) {
+        x.clear();
+        x.reserve(idx.len() * self.feat_dim);
+        y.clear();
+        y.reserve(idx.len());
         for &i in idx {
             x.extend_from_slice(self.train_row(i));
             y.push(self.train_y[i]);
         }
-        (x, y)
     }
 
     /// Build from config.
@@ -96,8 +112,17 @@ impl BatchSampler {
 
     /// Next mini-batch of up to `batch` indices; reshuffles each epoch.
     pub fn next_batch(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.next_batch_into(batch, &mut out);
+        out
+    }
+
+    /// As [`next_batch`](BatchSampler::next_batch), into a caller-owned
+    /// buffer (hot path; same index sequence).
+    pub fn next_batch_into(&mut self, batch: usize, out: &mut Vec<usize>) {
         let batch = batch.min(self.indices.len());
-        let mut out = Vec::with_capacity(batch);
+        out.clear();
+        out.reserve(batch);
         for _ in 0..batch {
             if self.cursor >= self.indices.len() {
                 self.rng.shuffle(&mut self.indices);
@@ -106,7 +131,6 @@ impl BatchSampler {
             out.push(self.indices[self.cursor]);
             self.cursor += 1;
         }
-        out
     }
 }
 

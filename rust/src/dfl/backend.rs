@@ -10,10 +10,14 @@ use crate::util::rng::Rng;
 
 /// One node's compute engine: SGD steps + evaluation on flat params.
 ///
-/// Deliberately NOT `Send`: the PJRT wrapper types hold raw pointers. The
-/// threaded runtime (dfl::net) takes a `Sync` *factory* and constructs each
-/// node's backend inside its own thread instead.
-pub trait LocalUpdate {
+/// `Send` is required so the matrix engine's round executor can partition
+/// node backends across its worker pool (each backend is owned by exactly
+/// one worker at a time; it is never shared). Both implementations are
+/// plain owned data — the PJRT stand-in included. If real PJRT bindings
+/// (raw device pointers) return, wrap them in a `Send` handle or construct
+/// them per-thread the way the threaded runtime (dfl::net) already does
+/// with its `Sync` factory.
+pub trait LocalUpdate: Send {
     /// Flat parameter vector length.
     fn param_count(&self) -> usize;
 

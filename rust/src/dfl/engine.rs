@@ -22,18 +22,56 @@
 //! deterministic-broadcast, so X̂ is globally consistent and the matrix
 //! form is exact — the threaded message-passing runtime (dfl::net)
 //! reproduces the same protocol over real encoded bitstreams.
+//!
+//! # Round execution model (parallel, allocation-free)
+//!
+//! A round is three fork-join phases over a [`crate::util::pool`] worker
+//! pool sized by `cfg.parallelism` (`auto` / `off` / N):
+//!
+//! 1. **per-node phase** — quantized mixing-delta broadcast (step A),
+//!    τ local-SGD steps (step B), the doubly-adaptive level update
+//!    (step C) and the local-update delta (step D). These touch only the
+//!    node's own state, so nodes are partitioned contiguously across
+//!    workers.
+//! 2. **mixing accumulate** — `mix_i = Σ_j c_ji · x̂_j` reads every node's
+//!    (now frozen) estimate and writes node-i's private accumulator.
+//! 3. **mixing apply** — `x_i += mix_i − x̂_i` (Eq. 21 as a consensus
+//!    correction, CHOCO-SGD style).
+//!
+//! Determinism contract: per-node work always runs in node order within a
+//! worker, cross-node reductions (bits, distortion, levels) happen
+//! sequentially in node order after the phase, and every per-node buffer
+//! (delta / decode / message / batch scratch, the mixing accumulators) is
+//! preallocated — so the parallel engine is **bit-identical** to the
+//! sequential one (`parallelism = off`) for any worker count, and rounds
+//! allocate nothing after warm-up. `rust/tests/engine_parallel.rs`
+//! enforces this.
 
 use crate::config::{ExperimentConfig, QuantizerKind};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::adaptive::AdaptiveLevels;
-use crate::quant::{build_quantizer, Quantizer};
+use crate::quant::{build_quantizer, QuantizedVector, Quantizer};
 use crate::topology::Topology;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// Per-node state.
+/// Per-node outputs of the round's per-node phase. Reduced sequentially in
+/// node order afterwards so floating-point accumulation order never
+/// depends on the worker count.
+#[derive(Clone, Copy, Debug, Default)]
+struct NodeRound {
+    /// paper bits (Eq. 12) of the mixing-delta message q2 (0 if dropped)
+    q2_bits: u64,
+    /// paper bits of the local-update delta message q1
+    q1_bits: u64,
+    /// measured relative distortion ω̂ of q1
+    distortion: f64,
+}
+
+/// Per-node state, including all per-round scratch buffers.
 struct NodeState {
     /// x_k^(i): params after mixing (start of round)
     params: Vec<f32>,
@@ -43,6 +81,19 @@ struct NodeState {
     quantizer: Box<dyn Quantizer>,
     adaptive: Option<AdaptiveLevels>,
     rng: Rng,
+    // ---- preallocated scratch (rounds allocate nothing after warm-up) --
+    /// delta scratch: x − x̂
+    diff: Vec<f32>,
+    /// decode scratch: dequantized (damped) delta
+    dq: Vec<f32>,
+    /// reusable quantized-message buffers
+    msg: QuantizedVector,
+    /// mini-batch index / feature / label scratch
+    batch_idx: Vec<usize>,
+    batch_x: Vec<f32>,
+    batch_y: Vec<u32>,
+    /// per-round outputs for the sequential reduction
+    out: NodeRound,
 }
 
 /// Options beyond [`ExperimentConfig`] (failure injection, eval subsample).
@@ -78,10 +129,10 @@ pub struct DflEngine {
     param_count: usize,
     opts: EngineOptions,
     rng: Rng,
-    /// scratch: mixing result
+    /// round executor sized by `cfg.parallelism`
+    pool: WorkerPool,
+    /// scratch: per-node mixing accumulators
     mix_buf: Vec<Vec<f32>>,
-    /// scratch: dequantized q1 per node
-    q1_buf: Vec<Vec<f32>>,
 }
 
 impl DflEngine {
@@ -133,8 +184,16 @@ impl DflEngine {
                 quantizer: build_quantizer(&cfg.quantizer),
                 adaptive,
                 rng: rng.split(0x1000 + i as u64),
+                diff: vec![0.0; param_count],
+                dq: vec![0.0; param_count],
+                msg: QuantizedVector::empty(),
+                batch_idx: Vec::new(),
+                batch_x: Vec::new(),
+                batch_y: Vec::new(),
+                out: NodeRound::default(),
             });
         }
+        let pool = WorkerPool::from_parallelism(cfg.parallelism, n);
         Ok(DflEngine {
             cfg,
             topology,
@@ -144,13 +203,18 @@ impl DflEngine {
             param_count,
             opts,
             rng,
+            pool,
             mix_buf: vec![vec![0.0; param_count]; n],
-            q1_buf: vec![vec![0.0; param_count]; n],
         })
     }
 
     pub fn param_count(&self) -> usize {
         self.param_count
+    }
+
+    /// Resolved worker count of the round executor.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Average model u_k = X_k · 1/N.
@@ -217,102 +281,131 @@ impl DflEngine {
         let lr = self.cfg.lr.at(k) as f32;
         let tau = self.cfg.tau;
         let batch = self.cfg.batch_size;
+        let drop_prob = self.opts.drop_prob;
+        let param_count = self.param_count;
 
-        // ---- step A: mixing-delta message (Eq. 22 first term) -----------
-        // q2 = Q(x_k − x̂);  x̂ += q2   →  x̂ = X̂_k
+        // ---- parallel per-node phase: steps A-D -------------------------
+        // Each node touches only its own state; workers process contiguous
+        // node ranges in index order (see module docs).
+        let dataset = &self.dataset;
+        self.pool.run2(
+            &mut self.nodes,
+            &mut self.backends,
+            |_, node, backend| {
+                node.out = NodeRound::default();
+
+                // step A: mixing-delta message (Eq. 22 first term)
+                // q2 = Q(x_k − x̂);  x̂ += q2  →  x̂ = X̂_k
+                let dropped = drop_prob > 0.0
+                    && node.rng.uniform() < drop_prob;
+                if !dropped {
+                    for j in 0..param_count {
+                        node.diff[j] = node.params[j] - node.hat[j];
+                    }
+                    crate::quant::quantize_damped_into(
+                        node.quantizer.as_mut(),
+                        &node.diff,
+                        &mut node.rng,
+                        &mut node.dq,
+                        &mut node.msg,
+                    );
+                    node.out.q2_bits = node.msg.paper_bits();
+                    for j in 0..param_count {
+                        node.hat[j] += node.dq[j];
+                    }
+                }
+                // (dropped: receivers keep the stale estimate)
+
+                // step B: τ local SGD steps (Eq. 18)
+                let mut local_loss = 0.0f64;
+                for _ in 0..tau {
+                    node.sampler
+                        .next_batch_into(batch, &mut node.batch_idx);
+                    dataset.gather_batch_into(
+                        &node.batch_idx,
+                        &mut node.batch_x,
+                        &mut node.batch_y,
+                    );
+                    local_loss += backend.step(
+                        &mut node.params,
+                        &node.batch_x,
+                        &node.batch_y,
+                        lr,
+                    )?;
+                }
+
+                // step C: doubly-adaptive level update (Alg. 3 step 8)
+                if let Some(ad) = node.adaptive.as_mut() {
+                    let s = ad.update(local_loss / tau as f64);
+                    node.quantizer.set_levels(s);
+                }
+
+                // step D: local-update delta q1 (Alg. 2 step 8)
+                // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
+                for j in 0..param_count {
+                    node.diff[j] = node.params[j] - node.hat[j];
+                }
+                let omega = crate::quant::quantize_damped_into(
+                    node.quantizer.as_mut(),
+                    &node.diff,
+                    &mut node.rng,
+                    &mut node.dq,
+                    &mut node.msg,
+                );
+                node.out.q1_bits = node.msg.paper_bits();
+                node.out.distortion = omega;
+                for j in 0..param_count {
+                    node.hat[j] += node.dq[j];
+                }
+                Ok(())
+            },
+        )?;
+
+        // ---- sequential reduction (node order, worker-count invariant) --
+        let mut q1_bits_paper = 0u64;
         let mut q2_bits_paper = 0u64;
-        let mut diff = vec![0.0f32; self.param_count];
-        let mut dq = vec![0.0f32; self.param_count];
-        for i in 0..n {
-            let node = &mut self.nodes[i];
-            let dropped = self.opts.drop_prob > 0.0
-                && node.rng.uniform() < self.opts.drop_prob;
-            if dropped {
-                continue; // receivers keep the stale estimate
-            }
-            for j in 0..diff.len() {
-                diff[j] = node.params[j] - node.hat[j];
-            }
-            let (msg, _) = crate::quant::quantize_damped(
-                node.quantizer.as_mut(), &diff, &mut node.rng, &mut dq);
-            q2_bits_paper += msg.paper_bits();
-            for j in 0..self.param_count {
-                node.hat[j] += dq[j];
-            }
-        }
-
-        // ---- step B: τ local SGD steps (Eq. 18) -------------------------
-        let mut local_loss_sum = vec![0.0f64; n];
-        for i in 0..n {
-            for _ in 0..tau {
-                let idx = self.nodes[i].sampler.next_batch(batch);
-                let (x, y) = self.dataset.gather_batch(&idx);
-                let loss = self.backends[i].step(
-                    &mut self.nodes[i].params, &x, &y, lr)?;
-                local_loss_sum[i] += loss;
-            }
-        }
-
-        // ---- step C: doubly-adaptive level update (Alg. 3 step 8) ------
+        let mut distortion_sum = 0.0f64;
         let mut levels_now = 0usize;
-        for i in 0..n {
-            let node = &mut self.nodes[i];
-            if let Some(ad) = node.adaptive.as_mut() {
-                let local_loss = local_loss_sum[i] / tau as f64;
-                let s = ad.update(local_loss);
-                node.quantizer.set_levels(s);
-            }
+        for node in &self.nodes {
+            q1_bits_paper += node.out.q1_bits;
+            q2_bits_paper += node.out.q2_bits;
+            distortion_sum += node.out.distortion;
             levels_now += node.quantizer.levels();
         }
         levels_now /= n;
 
-        // ---- step D: local-update delta q1 (Alg. 2 step 8) -------------
-        // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
-        let mut q1_bits_paper = 0u64;
-        let mut distortion_sum = 0.0f64;
-        for i in 0..n {
-            let node = &mut self.nodes[i];
-            for j in 0..self.param_count {
-                diff[j] = node.params[j] - node.hat[j];
-            }
-            let (msg, omega) = crate::quant::quantize_damped(
-                node.quantizer.as_mut(), &diff, &mut node.rng,
-                &mut self.q1_buf[i]);
-            q1_bits_paper += msg.paper_bits();
-            distortion_sum += omega;
-            for j in 0..self.param_count {
-                node.hat[j] += self.q1_buf[i][j];
-            }
-        }
-
-        // ---- step E: mixing (Eq. 21) ------------------------------------
+        // ---- mixing (Eq. 21) --------------------------------------------
         // X_{k+1} = X_{k,τ} + (X̂_{k,τ}C − X̂_{k,τ})
         // — identical to the paper's X̂_{k,τ}C when x̂ = x (exact
         // quantization), but expressed as a consensus *correction* on the
         // true local params so residual estimate error (coarse/damped
         // quantizers) never erases local SGD progress (CHOCO-SGD [21]).
+        // Phase 1: accumulate mix_i = Σ_j c_ji x̂_j (reads frozen hats).
         let c = &self.topology.c;
-        for i in 0..n {
-            let out = &mut self.mix_buf[i];
+        let nodes = &self.nodes;
+        self.pool.run(&mut self.mix_buf, |i, out| {
             out.iter_mut().for_each(|x| *x = 0.0);
             for j in 0..n {
                 let w = c[(j, i)] as f32;
                 if w == 0.0 {
                     continue;
                 }
-                let hat = &self.nodes[j].hat;
+                let hat = &nodes[j].hat;
                 for (o, h) in out.iter_mut().zip(hat.iter()) {
                     *o += w * h;
                 }
             }
-        }
-        for i in 0..n {
-            let node = &mut self.nodes[i];
-            let mix = &self.mix_buf[i];
-            for j in 0..self.param_count {
+            Ok(())
+        })?;
+        // Phase 2: apply the consensus correction.
+        let mix_buf = &self.mix_buf;
+        self.pool.run(&mut self.nodes, |i, node| {
+            let mix = &mix_buf[i];
+            for j in 0..param_count {
                 node.params[j] += mix[j] - node.hat[j];
             }
-        }
+            Ok(())
+        })?;
 
         // ---- metrics -----------------------------------------------------
         // Per-link bits: each directed link carried q1 + q2 this round.
@@ -379,7 +472,7 @@ impl DflEngine {
 mod tests {
     use super::*;
     use crate::config::{
-        BackendKind, DatasetKind, QuantizerKind, TopologyKind,
+        BackendKind, DatasetKind, Parallelism, QuantizerKind, TopologyKind,
     };
     use crate::dfl::backend::RustMlpBackend;
 
@@ -404,6 +497,7 @@ mod tests {
             noniid_fraction: 0.5,
             link_bps: 100e6,
             eval_every: 1,
+            parallelism: Parallelism::Auto,
         }
     }
 
@@ -537,6 +631,35 @@ mod tests {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits());
             assert_eq!(a.bits_per_link, b.bits_per_link);
         }
+    }
+
+    #[test]
+    fn sequential_and_parallel_rounds_bit_identical() {
+        // the dedicated integration test covers all quantizers; this is
+        // the fast in-module smoke for the core guarantee
+        let mut cfg = small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.parallelism = Parallelism::Off;
+        let seq = build_engine(cfg.clone()).run().unwrap();
+        cfg.parallelism = Parallelism::Fixed(3);
+        let par = build_engine(cfg).run().unwrap();
+        for (a, b) in seq.records.iter().zip(&par.records) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.distortion.to_bits(), b.distortion.to_bits());
+            assert_eq!(a.bits_per_link, b.bits_per_link);
+            assert_eq!(a.levels, b.levels);
+        }
+    }
+
+    #[test]
+    fn worker_count_follows_config() {
+        let mut cfg = small_cfg(QuantizerKind::Full);
+        cfg.parallelism = Parallelism::Off;
+        assert_eq!(build_engine(cfg.clone()).workers(), 1);
+        cfg.parallelism = Parallelism::Fixed(2);
+        assert_eq!(build_engine(cfg.clone()).workers(), 2);
+        // fixed counts clamp to the node count
+        cfg.parallelism = Parallelism::Fixed(64);
+        assert_eq!(build_engine(cfg).workers(), 4);
     }
 
     #[test]

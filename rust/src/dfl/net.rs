@@ -201,6 +201,8 @@ pub fn run_threaded(
                         vec![vec![0.0f32; param_count]; neighbors.len()];
                     let mut dq = vec![0.0f32; param_count];
                     let mut diff = vec![0.0f32; param_count];
+                    // reusable outgoing-message buffers (zero-alloc path)
+                    let mut msg_out = crate::quant::QuantizedVector::empty();
 
                     for k in 0..rounds {
                         let mut wire_bits = 0u64;
@@ -221,9 +223,11 @@ pub fn run_threaded(
                             for j in 0..param_count {
                                 diff[j] = params[j] - hat_self[j];
                             }
-                            let (q, _) = crate::quant::quantize_damped(
-                                quantizer.as_mut(), &diff, rng, &mut dq);
-                            let bytes = codec::encode(&q);
+                            crate::quant::quantize_damped_into(
+                                quantizer.as_mut(), &diff, rng, &mut dq,
+                                &mut msg_out);
+                            let q = &msg_out;
+                            let bytes = codec::encode(q);
                             for tx in &peer_tx {
                                 let dropped = drop_prob > 0.0
                                     && rng.uniform() < drop_prob;
@@ -440,6 +444,7 @@ mod tests {
             noniid_fraction: 0.5,
             link_bps: 100e6,
             eval_every: 1,
+            parallelism: crate::config::Parallelism::Auto,
         }
     }
 

@@ -73,6 +73,7 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         noniid_fraction: 0.5,
         link_bps: 100e6,
         eval_every: 1,
+        parallelism: crate::config::Parallelism::Auto,
     }
 }
 

@@ -22,6 +22,34 @@
 //! let log = Trainer::build(&cfg).unwrap().run().unwrap();
 //! println!("final loss = {:?}", log.last_loss());
 //! ```
+//!
+//! ## Parallel round execution
+//!
+//! The matrix engine partitions its per-node round phases across a
+//! scoped-thread worker pool ([`util::pool`]) sized by the
+//! `parallelism` config knob — `"auto"` (default: one worker per
+//! hardware thread), `"off"` (sequential), or a fixed worker count; on
+//! the CLI: `lmdfl train --parallelism auto|off|N`. The parallel path is
+//! **bit-identical** to the sequential one for a fixed seed (node
+//! partitioned work, node-order reductions; enforced by
+//! `rust/tests/engine_parallel.rs`), so it is purely a throughput knob —
+//! `cargo bench --bench micro_runtime` reports the speedup.
+//!
+//! ## Bench reports
+//!
+//! Bench targets print a criterion-like text table and, when
+//! `LMDFL_BENCH_JSON=<dir>` is set, also write a machine-readable
+//! `BENCH_<target>.json` (schema `lmdfl-bench-v1`, see [`bench`]) that CI
+//! archives to track the perf trajectory across PRs.
+//!
+//! ## Offline build notes
+//!
+//! The workspace builds with zero registry dependencies: `anyhow` is a
+//! vendored minimal implementation (`vendor/anyhow`), and the PJRT/XLA
+//! bindings are an inert API-compatible stand-in ([`xla`]) — HLO-backend
+//! runs fail fast with a clear message until a real toolchain is wired
+//! back in; everything else (matrix engine, threaded runtime, quantizers,
+//! figure drivers) is pure Rust.
 
 pub mod bench;
 pub mod cli;
@@ -36,3 +64,4 @@ pub mod quant;
 pub mod runtime;
 pub mod topology;
 pub mod util;
+pub mod xla;

@@ -25,6 +25,7 @@ commands:
   train      --config <file.json> [--threaded] [--csv out.csv]
              or inline: --nodes N --rounds K --tau T --quantizer q --s S
                         --dataset synth_mnist|synth_cifar|blobs --lr F
+                        --parallelism auto|off|N   (matrix-engine workers)
   table1     [--d N]... [--s N]... [--trials N]
   fig4       [--full]
   fig6       --dataset mnist|cifar [--full]
@@ -138,6 +139,9 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
         cfg.backend = lmdfl::config::BackendKind::Hlo {
             artifact: a.to_string(),
         };
+    }
+    if let Some(p) = args.get("parallelism") {
+        cfg.parallelism = lmdfl::config::Parallelism::parse_str(p)?;
     }
     cfg.validate()?;
     Ok(cfg)

@@ -18,9 +18,16 @@
 use super::QuantizedVector;
 use crate::quant::bits::ceil_log2;
 
-#[derive(Debug, thiserror::Error)]
-#[error("codec error: {0}")]
+#[derive(Debug)]
 pub struct CodecError(pub String);
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "codec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Bit-level writer, LSB-first within each byte. Word-wise accumulator —
 /// bits are staged in a u64 and flushed a byte at a time, so `write_bits`

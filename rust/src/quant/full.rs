@@ -59,6 +59,27 @@ impl Quantizer for FullPrecision {
             implied_table: true,
         }
     }
+
+    /// Allocation-free path: identical deterministic rounding to
+    /// [`quantize`], writing into `out`'s reused buffers.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        _rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        let norm = super::norm_and_signs_into(v, &mut out.negative);
+        out.norm = norm;
+        let scale = (FULL_PRECISION_LEVELS - 1) as f32;
+        out.indices.clear();
+        for &x in v {
+            let ri = super::normalized_magnitude(x, norm);
+            out.indices.push((ri * scale + 0.5).clamp(0.0, scale) as u32);
+        }
+        out.levels.clear();
+        out.levels.extend_from_slice(&self.table);
+        out.implied_table = true;
+    }
 }
 
 #[cfg(test)]

@@ -46,6 +46,9 @@ pub struct LloydMaxQuantizer {
     /// then O(1) amortized — a LUT load plus at most a couple of compares —
     /// instead of an O(log s) binary search (DESIGN.md §Perf).
     lut: Vec<u32>,
+    /// scratch for the normalized magnitudes r (reused by `quantize_into`
+    /// so the hot path performs no per-call allocation)
+    r_scratch: Vec<f32>,
 }
 
 impl LloydMaxQuantizer {
@@ -60,6 +63,7 @@ impl LloydMaxQuantizer {
             hist_cnt: vec![0.0; HIST_BINS],
             hist_sum: vec![0.0; HIST_BINS],
             lut: Vec::new(),
+            r_scratch: Vec::new(),
         };
         q.reset_uniform(1.0);
         q.rebuild_lut();
@@ -252,6 +256,30 @@ impl Quantizer for LloydMaxQuantizer {
             levels: self.levels.clone(),
             implied_table: false,
         }
+    }
+
+    /// Allocation-free path: identical math to [`quantize`] (same norm,
+    /// same fit, same LUT assignment), writing into `out`'s reused buffers
+    /// and the internal `r` scratch.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        _rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        let norm = super::norm_and_signs_into(v, &mut out.negative);
+        out.norm = norm;
+        // take the scratch out so `fit(&r)` can borrow self mutably
+        let mut r = std::mem::take(&mut self.r_scratch);
+        r.clear();
+        r.extend(v.iter().map(|&x| super::normalized_magnitude(x, norm)));
+        self.fit(&r);
+        out.indices.clear();
+        out.indices.extend(r.iter().map(|&ri| self.assign_fast(ri)));
+        self.r_scratch = r;
+        out.levels.clear();
+        out.levels.extend_from_slice(&self.levels);
+        out.implied_table = false;
     }
 }
 

@@ -49,7 +49,26 @@ pub struct QuantizedVector {
     pub implied_table: bool,
 }
 
+impl Default for QuantizedVector {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
 impl QuantizedVector {
+    /// An empty message buffer, ready to be filled by
+    /// [`Quantizer::quantize_into`] (capacity grows on first use and is
+    /// then reused).
+    pub fn empty() -> Self {
+        QuantizedVector {
+            norm: 0.0,
+            negative: Vec::new(),
+            indices: Vec::new(),
+            levels: Vec::new(),
+            implied_table: false,
+        }
+    }
+
     pub fn dim(&self) -> usize {
         self.indices.len()
     }
@@ -91,12 +110,30 @@ impl QuantizedVector {
 /// Common interface for all quantizers. `quantize` may adapt internal state
 /// (Lloyd-Max levels, ALQ coordinate descent) based on the observed data —
 /// that is precisely the paper's "adaptive sequence of quantization levels".
-pub trait Quantizer: Send {
+///
+/// `Send + Sync` is required so per-node quantizers can be partitioned
+/// across the round executor's worker pool (every implementation is plain
+/// owned data; `&self` is only ever shared for reads).
+pub trait Quantizer: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Quantize `v`. Stochastic quantizers draw from `rng` (unbiasedness);
     /// deterministic quantizers ignore it.
     fn quantize(&mut self, v: &[f32], rng: &mut Rng) -> QuantizedVector;
+
+    /// Quantize `v` into an existing message buffer (hot path): must
+    /// produce results bit-identical to [`quantize`](Quantizer::quantize),
+    /// including the `rng` draw sequence. The default implementation
+    /// delegates to the allocating path; hot quantizers (Lloyd-Max, QSGD,
+    /// natural, full) override it to reuse `out`'s vectors.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        *out = self.quantize(v, rng);
+    }
 
     /// Current number of quantization levels s.
     fn levels(&self) -> usize;
@@ -140,7 +177,23 @@ pub fn quantize_damped(
     rng: &mut Rng,
     dq: &mut [f32],
 ) -> (QuantizedVector, f64) {
-    let mut msg = q.quantize(diff, rng);
+    let mut msg = QuantizedVector::empty();
+    let omega = quantize_damped_into(q, diff, rng, dq, &mut msg);
+    (msg, omega)
+}
+
+/// Allocation-free [`quantize_damped`]: the message is built in `msg`
+/// (reusing its buffers) and the damped dequantized delta in `dq`. Returns
+/// the measured relative distortion ω̂. Both engines call this on the
+/// per-round hot path.
+pub fn quantize_damped_into(
+    q: &mut dyn Quantizer,
+    diff: &[f32],
+    rng: &mut Rng,
+    dq: &mut [f32],
+    msg: &mut QuantizedVector,
+) -> f64 {
+    q.quantize_into(diff, rng, msg);
     msg.dequantize_into(dq);
     let omega = crate::quant::distortion::normalized_distortion(diff, dq);
     let gamma = (1.0 / (1.0 + omega)) as f32;
@@ -150,20 +203,46 @@ pub fn quantize_damped(
             *x *= gamma;
         }
     }
-    (msg, omega)
+    omega
 }
 
 /// Split v into (norm, signs, normalized magnitudes r) — shared by every
 /// quantizer implementation (Eq. 10-11).
 pub(crate) fn decompose(v: &[f32]) -> (f32, Vec<bool>, Vec<f32>) {
-    let norm = crate::util::stats::l2_norm(v) as f32;
-    let negative: Vec<bool> = v.iter().map(|&x| x < 0.0).collect();
+    let mut negative = Vec::new();
+    let norm = norm_and_signs_into(v, &mut negative);
     let r: Vec<f32> = if norm > 0.0 {
         v.iter().map(|&x| x.abs() / norm).collect()
     } else {
         vec![0.0; v.len()]
     };
     (norm, negative, r)
+}
+
+/// Allocation-free prologue of [`decompose`] shared by the
+/// `quantize_into` overrides: computes ‖v‖ and refills the sign buffer —
+/// bit-for-bit the first two components of `decompose`, so the two paths
+/// cannot drift. Per-element `r_i` is `normalized_magnitude(x, norm)`.
+pub(crate) fn norm_and_signs_into(
+    v: &[f32],
+    negative: &mut Vec<bool>,
+) -> f32 {
+    let norm = crate::util::stats::l2_norm(v) as f32;
+    negative.clear();
+    negative.extend(v.iter().map(|&x| x < 0.0));
+    norm
+}
+
+/// `r_i = |x|/‖v‖` (0 when the norm is zero) — the per-element third
+/// component of [`decompose`], used by the streaming `quantize_into`
+/// overrides that never materialize the full r vector.
+#[inline]
+pub(crate) fn normalized_magnitude(x: f32, norm: f32) -> f32 {
+    if norm > 0.0 {
+        x.abs() / norm
+    } else {
+        0.0
+    }
 }
 
 #[cfg(test)]

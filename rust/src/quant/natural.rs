@@ -79,6 +79,45 @@ impl Quantizer for NaturalQuantizer {
             implied_table: true,
         }
     }
+
+    /// Allocation-free path: same per-element bracketing and the same
+    /// `rng` draw sequence as [`quantize`] (exact level hits draw nothing),
+    /// writing into `out`'s reused buffers.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        let norm = super::norm_and_signs_into(v, &mut out.negative);
+        out.norm = norm;
+        let t = &self.table;
+        out.indices.clear();
+        for &x in v {
+            let ri = super::normalized_magnitude(x, norm).clamp(0.0, 1.0);
+            let idx = match t
+                .binary_search_by(|p| p.partial_cmp(&ri).unwrap())
+            {
+                Ok(exact) => exact as u32,
+                Err(ins) => {
+                    // ri >= 0 = t[0], so ins >= 1 always holds
+                    let j = ins - 1;
+                    let lo = t[j];
+                    let hi = t[j + 1];
+                    let p_hi = (ri - lo) / (hi - lo);
+                    if rng.uniform_f32() < p_hi {
+                        (j + 1) as u32
+                    } else {
+                        j as u32
+                    }
+                }
+            };
+            out.indices.push(idx);
+        }
+        out.levels.clear();
+        out.levels.extend_from_slice(t);
+        out.implied_table = true;
+    }
 }
 
 #[cfg(test)]

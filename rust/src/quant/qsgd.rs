@@ -63,6 +63,32 @@ impl Quantizer for QsgdQuantizer {
             implied_table: true,
         }
     }
+
+    /// Allocation-free path: same per-element math and the same `rng`
+    /// draw sequence as [`quantize`] (one uniform per element, including
+    /// zero-norm inputs), writing into `out`'s reused buffers.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        let norm = super::norm_and_signs_into(v, &mut out.negative);
+        out.norm = norm;
+        let scale = (self.s - 1) as f32;
+        out.indices.clear();
+        for &x in v {
+            let ri = super::normalized_magnitude(x, norm);
+            let xq = (ri * scale).clamp(0.0, scale);
+            let lo = xq.floor();
+            let frac = xq - lo;
+            let up = (rng.uniform_f32() < frac) as u32;
+            out.indices.push((lo as u32 + up).min(self.s as u32 - 1));
+        }
+        out.levels.clear();
+        out.levels.extend_from_slice(&self.table);
+        out.implied_table = true;
+    }
 }
 
 #[cfg(test)]

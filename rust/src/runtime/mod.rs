@@ -15,6 +15,9 @@ use std::path::{Path, PathBuf};
 
 use crate::dfl::backend::LocalUpdate;
 use crate::util::rng::Rng;
+// Resolves to the in-crate PJRT stand-in (see `crate::xla`); when the real
+// bindings are wired back in, this import is the only line that changes.
+use crate::xla;
 
 /// Artifact directory: $LMDFL_ARTIFACTS or ./artifacts.
 pub fn artifacts_dir() -> PathBuf {

@@ -1,5 +1,7 @@
-//! Utility substrates: PRNG, statistics, property-test harness, timing.
+//! Utility substrates: PRNG, statistics, property-test harness, timing,
+//! and the scoped-thread worker pool behind the parallel round executor.
 
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,237 @@
+//! Scoped-thread worker pool for node-partitioned round execution.
+//!
+//! The DFL engines run the same three per-node phases every round
+//! (quantized-delta broadcast, τ local-SGD steps, mixing); this pool
+//! partitions the node slice into `workers` contiguous chunks and runs one
+//! scoped thread per chunk. Design rules that keep the parallel path
+//! *bit-identical* to the sequential one:
+//!
+//! * **Node partitioning, not work stealing** — every item is processed by
+//!   exactly one worker, in index order within its chunk, so all per-item
+//!   state (RNG streams, quantizer warm starts) sees the same operation
+//!   sequence regardless of worker count.
+//! * **No cross-item reduction inside the pool** — workers only write
+//!   per-item outputs; callers reduce them sequentially in index order
+//!   afterwards, so floating-point accumulation order never changes.
+//! * `workers == 1` (or a single item) short-circuits to a plain loop on
+//!   the calling thread: the sequential engine *is* the parallel engine
+//!   with one worker.
+//!
+//! Errors: the first `Err` in chunk order is returned. A panicking worker
+//! re-raises the panic on the calling thread (so test assertions inside
+//! closures behave as usual).
+
+use crate::config::Parallelism;
+
+/// A small fork-join executor over mutable slices.
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Pool with an explicit worker count (clamped to >= 1).
+    pub fn new(workers: usize) -> Self {
+        WorkerPool { workers: workers.max(1) }
+    }
+
+    /// Pool sized by the config knob for `items` work items:
+    /// `auto` = available hardware parallelism, `off` = 1, `N` = N —
+    /// always clamped to `items`.
+    pub fn from_parallelism(p: Parallelism, items: usize) -> Self {
+        WorkerPool::new(p.workers(items))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// True when this pool executes on the calling thread only.
+    pub fn is_sequential(&self) -> bool {
+        self.workers == 1
+    }
+
+    /// Contiguous chunk sizes for `len` items over `w` workers (first
+    /// `len % w` chunks get one extra item).
+    fn chunk_sizes(len: usize, w: usize) -> Vec<usize> {
+        let base = len / w;
+        let rem = len % w;
+        (0..w).map(|ci| base + usize::from(ci < rem)).collect()
+    }
+
+    /// Run `f(index, &mut items[index])` for every index, partitioned
+    /// across the pool. See module docs for the determinism contract.
+    pub fn run<T, F>(&self, items: &mut [T], f: F) -> anyhow::Result<()>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> anyhow::Result<()> + Sync,
+    {
+        // delegate to the two-slice core with a zero-sized companion slice
+        // (Vec<()> never allocates), so both entry points share one
+        // spawn/join/error implementation
+        let mut unit: Vec<()> = vec![(); items.len()];
+        self.run2(items, &mut unit, |i, item, _| f(i, item))
+    }
+
+    /// As [`run`](WorkerPool::run) over two equally partitioned slices:
+    /// `f(index, &mut a[index], &mut b[index])`. Used where per-node state
+    /// lives in two parallel vectors (node states + compute backends).
+    pub fn run2<A, B, F>(
+        &self,
+        a: &mut [A],
+        b: &mut [B],
+        f: F,
+    ) -> anyhow::Result<()>
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut A, &mut B) -> anyhow::Result<()> + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "run2 slices must be equal length");
+        let w = self.workers.min(a.len());
+        if w <= 1 {
+            for (i, (ai, bi)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                f(i, ai, bi)?;
+            }
+            return Ok(());
+        }
+        let sizes = Self::chunk_sizes(a.len(), w);
+        let mut results: Vec<anyhow::Result<()>> = Vec::with_capacity(w);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(w);
+            let mut rest_a = a;
+            let mut rest_b = b;
+            let mut start = 0usize;
+            for &take in &sizes {
+                let (chunk_a, tail_a) = rest_a.split_at_mut(take);
+                let (chunk_b, tail_b) = rest_b.split_at_mut(take);
+                rest_a = tail_a;
+                rest_b = tail_b;
+                let fr = &f;
+                handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                    for (off, (ai, bi)) in
+                        chunk_a.iter_mut().zip(chunk_b.iter_mut()).enumerate()
+                    {
+                        fr(start + off, ai, bi)?;
+                    }
+                    Ok(())
+                }));
+                start += take;
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(r) => results.push(r),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_sizes_cover_everything() {
+        for len in [0usize, 1, 2, 5, 16, 33] {
+            for w in [1usize, 2, 3, 8] {
+                let sizes = WorkerPool::chunk_sizes(len, w);
+                assert_eq!(sizes.len(), w);
+                assert_eq!(sizes.iter().sum::<usize>(), len);
+                // balanced within one item
+                let mx = sizes.iter().max().unwrap();
+                let mn = sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1, "len={len} w={w}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_visits_every_index_once() {
+        for workers in [1usize, 2, 3, 7] {
+            let pool = WorkerPool::new(workers);
+            let mut items: Vec<usize> = vec![0; 23];
+            pool.run(&mut items, |i, slot| {
+                *slot += i + 1;
+                Ok(())
+            })
+            .unwrap();
+            for (i, &v) in items.iter().enumerate() {
+                assert_eq!(v, i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn run2_keeps_slices_aligned() {
+        let pool = WorkerPool::new(4);
+        let mut a: Vec<usize> = (0..17).collect();
+        let mut b: Vec<usize> = vec![0; 17];
+        pool.run2(&mut a, &mut b, |i, ai, bi| {
+            assert_eq!(*ai, i);
+            *bi = *ai * 2;
+            Ok(())
+        })
+        .unwrap();
+        for (i, &v) in b.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+
+    #[test]
+    fn first_error_in_index_order_wins() {
+        let pool = WorkerPool::new(4);
+        let mut items = vec![0u8; 16];
+        let err = pool
+            .run(&mut items, |i, _| {
+                if i >= 3 {
+                    anyhow::bail!("failed at {i}");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        // chunk 0 holds indices 0..4 and fails first at 3; later chunks
+        // also fail, but chunk order must report the earliest chunk's error
+        assert_eq!(err.to_string(), "failed at 3");
+    }
+
+    #[test]
+    fn parallel_workers_actually_run() {
+        let pool = WorkerPool::new(2);
+        assert!(!pool.is_sequential());
+        let count = AtomicUsize::new(0);
+        let mut items = vec![(); 8];
+        pool.run(&mut items, |_, _| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn from_parallelism_clamps() {
+        assert!(WorkerPool::from_parallelism(Parallelism::Off, 64)
+            .is_sequential());
+        assert_eq!(
+            WorkerPool::from_parallelism(Parallelism::Fixed(8), 3).workers(),
+            3
+        );
+        assert!(WorkerPool::from_parallelism(Parallelism::Auto, 64)
+            .workers() >= 1);
+    }
+
+    #[test]
+    fn empty_slice_is_a_no_op() {
+        let pool = WorkerPool::new(4);
+        let mut items: Vec<u32> = Vec::new();
+        pool.run(&mut items, |_, _| anyhow::bail!("never called"))
+            .unwrap();
+    }
+}

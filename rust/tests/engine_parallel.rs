@@ -1,0 +1,216 @@
+//! Equivalence gates for the parallel round executor and the
+//! allocation-free quantizer path:
+//!
+//! * the parallel engine's `RunLog` must be **bit-identical** to the
+//!   sequential engine's for a fixed seed, across quantizers and worker
+//!   counts (the engine's core determinism contract), and
+//! * `Quantizer::quantize_into` must match the allocating `quantize`
+//!   exactly — same message, same RNG draw sequence — including when the
+//!   output buffer is dirty from a previous (differently-sized) message.
+
+use lmdfl::config::{
+    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, Parallelism,
+    QuantizerKind, TopologyKind,
+};
+use lmdfl::dfl::Trainer;
+use lmdfl::metrics::RunLog;
+use lmdfl::quant::{
+    build_quantizer, FullPrecision, LloydMaxQuantizer, NaturalQuantizer,
+    QsgdQuantizer, QuantizedVector, Quantizer,
+};
+use lmdfl::util::proptest::check;
+use lmdfl::util::rng::Rng;
+
+fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "engine-parallel".into(),
+        seed: 1234,
+        nodes: 6,
+        tau: 2,
+        rounds: 8,
+        batch_size: 16,
+        lr: LrSchedule::fixed(0.1),
+        topology: TopologyKind::Ring,
+        quantizer: quant,
+        dataset: DatasetKind::Blobs {
+            train: 300,
+            test: 90,
+            dim: 10,
+            classes: 3,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![20] },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1,
+        parallelism,
+    }
+}
+
+fn run(quant: QuantizerKind, parallelism: Parallelism) -> RunLog {
+    Trainer::build(&cfg(quant, parallelism))
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Field-by-field bit equality (wall_secs excluded: it is the only
+/// measurement, not a computation).
+fn assert_logs_bit_identical(a: &RunLog, b: &RunLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: round count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.round, rb.round, "{label}");
+        assert_eq!(
+            ra.loss.to_bits(),
+            rb.loss.to_bits(),
+            "{label} round {}: loss {} vs {}",
+            ra.round,
+            ra.loss,
+            rb.loss
+        );
+        assert_eq!(
+            ra.accuracy.to_bits(),
+            rb.accuracy.to_bits(),
+            "{label} round {}: accuracy",
+            ra.round
+        );
+        assert_eq!(
+            ra.bits_per_link, rb.bits_per_link,
+            "{label} round {}: bits",
+            ra.round
+        );
+        assert_eq!(
+            ra.distortion.to_bits(),
+            rb.distortion.to_bits(),
+            "{label} round {}: distortion",
+            ra.round
+        );
+        assert_eq!(ra.levels, rb.levels, "{label} round {}", ra.round);
+        assert_eq!(
+            ra.lr.to_bits(),
+            rb.lr.to_bits(),
+            "{label} round {}",
+            ra.round
+        );
+    }
+}
+
+#[test]
+fn parallel_engine_bit_identical_across_quantizers() {
+    for quant in [
+        QuantizerKind::LloydMax { s: 16, iters: 8 },
+        QuantizerKind::Qsgd { s: 16 },
+        QuantizerKind::Natural { s: 16 },
+    ] {
+        let label = format!("{quant:?}");
+        let seq = run(quant.clone(), Parallelism::Off);
+        let par = run(quant.clone(), Parallelism::Fixed(4));
+        assert_logs_bit_identical(&seq, &par, &label);
+    }
+}
+
+#[test]
+fn parallel_engine_bit_identical_for_any_worker_count() {
+    let quant = QuantizerKind::LloydMax { s: 8, iters: 5 };
+    let seq = run(quant.clone(), Parallelism::Off);
+    for workers in [2usize, 3, 6, 16] {
+        let par = run(quant.clone(), Parallelism::Fixed(workers));
+        assert_logs_bit_identical(&seq, &par, &format!("w={workers}"));
+    }
+    let auto = run(quant, Parallelism::Auto);
+    assert_logs_bit_identical(&seq, &auto, "auto");
+}
+
+#[test]
+fn doubly_adaptive_schedule_survives_parallelism() {
+    // the adaptive level controller feeds on per-node local loss; its
+    // trajectory must not depend on the worker count either
+    let quant = QuantizerKind::DoublyAdaptive { s1: 4, iters: 6, s_max: 64 };
+    let seq = run(quant.clone(), Parallelism::Off);
+    let par = run(quant, Parallelism::Fixed(3));
+    assert_logs_bit_identical(&seq, &par, "doubly_adaptive");
+}
+
+// ---- quantize_into == quantize ---------------------------------------------
+
+/// Run both paths from identical quantizer + rng clones and compare.
+fn assert_into_matches<Q: Quantizer + Clone>(
+    proto: &Q,
+    v: &[f32],
+    seed: u64,
+    dirty: Option<&QuantizedVector>,
+    label: &str,
+) {
+    let mut q_alloc = proto.clone();
+    let mut rng_alloc = Rng::new(seed);
+    let want = q_alloc.quantize(v, &mut rng_alloc);
+
+    let mut q_into = proto.clone();
+    let mut rng_into = Rng::new(seed);
+    let mut got = dirty.cloned().unwrap_or_default();
+    q_into.quantize_into(v, &mut rng_into, &mut got);
+
+    assert_eq!(want, got, "{label}: message mismatch");
+    // the rng streams must stay in lockstep (same number of draws)
+    assert_eq!(
+        rng_alloc.next_u64(),
+        rng_into.next_u64(),
+        "{label}: rng stream diverged"
+    );
+}
+
+#[test]
+fn prop_quantize_into_matches_quantize() {
+    check("quantize_into == quantize", 60, |g| {
+        let v = g.vec_normal(1..500, 1.5);
+        let s = *g.pick(&[2usize, 3, 8, 16, 64]);
+        let seed = g.seed;
+        // a dirty buffer from a previous, differently-shaped message must
+        // not leak into the next fill
+        let dirty = QuantizedVector {
+            norm: 9.0,
+            negative: vec![true; 7],
+            indices: vec![1; 7],
+            levels: vec![0.5; 3],
+            implied_table: true,
+        };
+        assert_into_matches(
+            &LloydMaxQuantizer::new(s, 6), &v, seed, Some(&dirty),
+            "lloyd_max");
+        assert_into_matches(
+            &QsgdQuantizer::new(s), &v, seed, Some(&dirty), "qsgd");
+        assert_into_matches(
+            &NaturalQuantizer::new(s), &v, seed, Some(&dirty), "natural");
+        assert_into_matches(
+            &FullPrecision::new(), &v, seed, Some(&dirty), "full");
+    });
+}
+
+#[test]
+fn prop_quantize_into_degenerate_inputs() {
+    check("quantize_into degenerate", 20, |g| {
+        let seed = g.seed;
+        for v in [vec![0.0f32; 16], vec![5.0f32], vec![-3.0f32; 4]] {
+            assert_into_matches(
+                &LloydMaxQuantizer::new(4, 3), &v, seed, None, "lm-deg");
+            assert_into_matches(
+                &QsgdQuantizer::new(4), &v, seed, None, "qsgd-deg");
+            assert_into_matches(
+                &NaturalQuantizer::new(4), &v, seed, None, "natural-deg");
+        }
+    });
+}
+
+#[test]
+fn default_quantize_into_delegates() {
+    // quantizers without an override (e.g. ALQ) fall back to the
+    // allocating path through the trait default — same contract
+    let mut a = build_quantizer(&QuantizerKind::Alq { s: 8 });
+    let mut b = build_quantizer(&QuantizerKind::Alq { s: 8 });
+    let v: Vec<f32> = (0..200).map(|i| ((i * 37 % 97) as f32) - 48.0).collect();
+    let mut r1 = Rng::new(7);
+    let mut r2 = Rng::new(7);
+    let want = a.quantize(&v, &mut r1);
+    let mut got = QuantizedVector::empty();
+    b.quantize_into(&v, &mut r2, &mut got);
+    assert_eq!(want, got);
+}

@@ -8,6 +8,7 @@ use lmdfl::runtime::{
     HloExecutor, Manifest,
 };
 use lmdfl::util::rng::Rng;
+use lmdfl::xla;
 
 macro_rules! require_artifacts {
     () => {
@@ -223,6 +224,7 @@ fn dfl_training_on_hlo_backend_converges() {
         noniid_fraction: 0.5,
         link_bps: 100e6,
         eval_every: 1,
+        parallelism: Parallelism::Auto,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);

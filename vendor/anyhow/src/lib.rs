@@ -1,0 +1,175 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline, so instead
+//! of pulling `anyhow` from crates.io this workspace vendors the small
+//! subset the `lmdfl` crate actually uses:
+//!
+//! * [`Error`] — an opaque boxed error with `Display`/`Debug`
+//! * [`Result`] — `Result<T, Error>` alias with the same defaulted form
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros
+//! * a blanket `From<E: std::error::Error>` so `?` lifts concrete errors
+//!
+//! Context chains (`.context(...)`) and downcasting are intentionally not
+//! implemented; nothing in the workspace uses them. If the real crate ever
+//! becomes available, swapping the path dependency back to the registry
+//! version is a one-line change in `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Opaque error: a boxed `std::error::Error` (or a formatted message).
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, matching the
+/// real crate's signature.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A plain-message error payload (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// Borrow the underlying error object.
+    pub fn as_std(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        self.0.as_ref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` in the real crate prints the context chain; this stand-in
+        // carries no context, so both forms print the root message.
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+// `Error` itself deliberately does NOT implement `std::error::Error`: that
+// is what makes this blanket conversion coherent (same trick as the real
+// crate), and it is what `?` uses to lift concrete error types.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work) or
+/// from any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let x = 7;
+        let e = anyhow!("bad value {x} in {}", "ctx");
+        assert_eq!(e.to_string(), "bad value 7 in ctx");
+        // alternate form prints the same (no context chain here)
+        assert_eq!(format!("{e:#}"), "bad value 7 in ctx");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted ok, got {ok}");
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("always fails");
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert!(f(false).unwrap_err().to_string().contains("wanted ok"));
+        assert!(g().is_err());
+        fn bare(x: u32) -> Result<u32> {
+            ensure!(x > 2);
+            Ok(x)
+        }
+        assert!(bare(1).unwrap_err().to_string().contains("x > 2"));
+        assert_eq!(bare(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
