@@ -237,6 +237,8 @@ fn main() -> anyhow::Result<()> {
             levels: s,
             lr: lr as f64,
             wall_secs: t0.elapsed().as_secs_f64(),
+            virtual_secs: 0.0,
+            straggler_wait_secs: 0.0,
         };
         println!(
             "round {:3}  eval-loss {:.4}  local-loss {:.4}  \

@@ -30,6 +30,7 @@ fn base_config() -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1,
         parallelism: lmdfl::config::Parallelism::Auto,
+        network: None,
     }
 }
 

@@ -33,6 +33,7 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1000, // exclude eval cost from the round timing
         parallelism: lmdfl::config::Parallelism::Auto,
+        network: None,
     }
 }
 
@@ -65,7 +66,10 @@ fn main() {
             black_box(
                 Trainer::run_threaded(
                     &c,
-                    NetOptions { drop_prob: 0.0, eval_every: 1000 },
+                    NetOptions {
+                        link: lmdfl::simnet::LinkModel::ideal(),
+                        eval_every: 1000,
+                    },
                 )
                 .unwrap(),
             );

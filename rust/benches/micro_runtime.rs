@@ -38,6 +38,7 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1_000_000, // exclude eval cost from the round timing
         parallelism,
+        network: None,
     }
 }
 

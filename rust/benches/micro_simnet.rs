@@ -1,0 +1,87 @@
+//! Micro-bench: simnet event throughput.
+//!
+//! Measures (a) the raw event-queue schedule/pop rate and (b) full
+//! fabric rounds (links + compute + stragglers) at 16 and 64 nodes on a
+//! torus — the events-per-second figure every future scaling PR (async
+//! gossip, sharded fleets) budgets against. Reports into the shared
+//! `BENCH_*.json` pipeline; CI's bench-smoke job fails if the simnet
+//! section goes missing.
+//!
+//!   cargo bench --bench micro_simnet
+//!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
+//!       cargo bench --bench micro_simnet    # CI smoke + JSON artifact
+
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::config::TopologyKind;
+use lmdfl::simnet::{
+    ComputeModel, EventQueue, Fabric, LinkModel, NetworkConfig,
+};
+use lmdfl::topology::Topology;
+
+fn network() -> NetworkConfig {
+    NetworkConfig {
+        link: LinkModel {
+            latency_s: 0.002,
+            bandwidth_bps: 5e6,
+            jitter_s: 0.0005,
+            drop_prob: 0.01,
+        },
+        link_hetero_spread: 0.5,
+        compute: ComputeModel {
+            base_step_s: 1e-3,
+            hetero_spread: 0.5,
+            straggler_prob: 0.1,
+            straggler_slowdown: 4.0,
+        },
+        churn: Default::default(),
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // raw queue: schedule + drain 4096 events per iteration
+    const QN: u64 = 4096;
+    b.run_elems("event queue schedule+pop x4096", QN, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..QN {
+            // scatter times deterministically to exercise heap reordering
+            q.schedule(i.wrapping_mul(0x9E37) % 100_000, i as u32);
+        }
+        let mut acc = 0u64;
+        while let Some((t, p)) = q.pop() {
+            acc = acc.wrapping_add(t).wrapping_add(p as u64);
+        }
+        black_box(acc);
+    });
+
+    // full fabric rounds: events/iteration is measured once, then used
+    // as the throughput denominator for the timed runs
+    for &nodes in &[16usize, 64] {
+        let topo = Topology::build(&TopologyKind::Torus, nodes, 0);
+        let net = network();
+        let bytes = vec![4096u64; nodes];
+
+        let events_per_round = {
+            let mut probe = Fabric::new(&net, &topo, 1);
+            let before = probe.events_processed();
+            probe.simulate_round(4, &bytes, &bytes);
+            probe.events_processed() - before
+        };
+
+        let mut fabric = Fabric::new(&net, &topo, 1);
+        b.run_elems(
+            &format!("fabric round n={nodes} torus"),
+            events_per_round,
+            || {
+                black_box(fabric.simulate_round(4, &bytes, &bytes));
+            },
+        );
+        println!(
+            "n={nodes}: {events_per_round} events/round, digest {:#x}",
+            fabric.event_digest()
+        );
+    }
+
+    b.finish("micro_simnet");
+}

@@ -404,6 +404,11 @@ pub struct ExperimentConfig {
     pub eval_every: usize,
     /// worker threads for the matrix engine's per-node phases
     pub parallelism: Parallelism,
+    /// `network:` section — the simnet fabric model (heterogeneous
+    /// links, stragglers, churn). `None` = ideal instantaneous network;
+    /// `Some` enables `DflEngine::run_simulated` / `lmdfl train
+    /// --simulate` virtual-time runs. See [`crate::simnet`].
+    pub network: Option<crate::simnet::NetworkConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -424,6 +429,7 @@ impl Default for ExperimentConfig {
             link_bps: 100e6,
             eval_every: 1,
             parallelism: Parallelism::Auto,
+            network: None,
         }
     }
 }
@@ -469,11 +475,14 @@ impl ExperimentConfig {
             }
             QuantizerKind::Full => {}
         }
+        if let Some(net) = &self.network {
+            net.validate()?;
+        }
         Ok(())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(&self.name)),
             ("seed", Json::num(self.seed as f64)),
             ("nodes", Json::num(self.nodes as f64)),
@@ -489,7 +498,11 @@ impl ExperimentConfig {
             ("link_bps", Json::num(self.link_bps)),
             ("eval_every", Json::num(self.eval_every as f64)),
             ("parallelism", self.parallelism.to_json()),
-        ])
+        ];
+        if let Some(net) = &self.network {
+            pairs.push(("network", net.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
@@ -529,6 +542,12 @@ impl ExperimentConfig {
             parallelism: match j.get("parallelism") {
                 Some(pj) => Parallelism::from_json(pj)?,
                 None => d.parallelism,
+            },
+            network: match j.get("network") {
+                Some(nj) => {
+                    Some(crate::simnet::NetworkConfig::from_json(nj)?)
+                }
+                None => None,
             },
         };
         cfg.validate()?;
@@ -622,6 +641,32 @@ mod tests {
         assert!(ExperimentConfig::parse(
             r#"{"quantizer": {"kind": "bogus"}}"#).is_err());
         assert!(ExperimentConfig::parse("not json").is_err());
+    }
+
+    #[test]
+    fn network_section_roundtrip_and_defaults() {
+        // absent -> None (ideal network)
+        let cfg = ExperimentConfig::parse(r#"{"name": "n"}"#).unwrap();
+        assert!(cfg.network.is_none());
+        // partial section fills defaults
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "n", "network": {"bandwidth_bps": 1e6,
+                "compute": {"straggler_prob": 0.25}}}"#,
+        )
+        .unwrap();
+        let net = cfg.network.clone().unwrap();
+        assert_eq!(net.link.bandwidth_bps, 1e6);
+        assert_eq!(net.compute.straggler_prob, 0.25);
+        assert_eq!(net.link.latency_s, 0.0);
+        // full roundtrip through to_json
+        let text = cfg.to_json().to_pretty();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back, cfg);
+        // invalid network fields are rejected at the config level
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "n", "network": {"drop_prob": 7.0}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -67,6 +67,10 @@ struct NodeRound {
     q2_bits: u64,
     /// paper bits of the local-update delta message q1
     q1_bits: u64,
+    /// measured *wire* bytes of q2 / q1 (codec framing included) — what
+    /// a simnet fabric puts on the links
+    q2_wire_bytes: u64,
+    q1_wire_bytes: u64,
     /// measured relative distortion ω̂ of q1
     distortion: f64,
 }
@@ -133,6 +137,9 @@ pub struct DflEngine {
     pool: WorkerPool,
     /// scratch: per-node mixing accumulators
     mix_buf: Vec<Vec<f32>>,
+    /// scratch: per-node wire bytes handed to the simnet fabric
+    q2_wire: Vec<u64>,
+    q1_wire: Vec<u64>,
 }
 
 impl DflEngine {
@@ -205,6 +212,8 @@ impl DflEngine {
             rng,
             pool,
             mix_buf: vec![vec![0.0; param_count]; n],
+            q2_wire: Vec::with_capacity(n),
+            q1_wire: Vec::with_capacity(n),
         })
     }
 
@@ -248,25 +257,81 @@ impl DflEngine {
         gap
     }
 
+    /// Evaluate `u` on `x`/`y` sharded across the worker pool: one fixed
+    /// contiguous chunk per *node* (NOT per worker), one backend per
+    /// chunk, and a sequential node-order reduction of (Σ chunk-loss ×
+    /// chunk-rows, Σ correct) — so the result is bit-identical for any
+    /// `parallelism` setting.
+    fn evaluate_sharded(
+        pool: &WorkerPool,
+        backends: &mut [Box<dyn LocalUpdate>],
+        feat: usize,
+        u: &[f32],
+        x: &[f32],
+        y: &[u32],
+    ) -> anyhow::Result<(f64, usize)> {
+        let n = backends.len();
+        let (base, rem) = (y.len() / n, y.len() % n);
+        let mut bounds = Vec::with_capacity(n);
+        let mut start = 0usize;
+        for i in 0..n {
+            let take = base + usize::from(i < rem);
+            bounds.push((start, start + take));
+            start += take;
+        }
+        let mut outs: Vec<(f64, usize)> = vec![(0.0, 0); n];
+        let b = &bounds;
+        pool.run2(&mut outs, backends, |i, out, backend| {
+            let (s, e) = b[i];
+            if s < e {
+                *out =
+                    backend.evaluate(u, &x[s * feat..e * feat], &y[s..e])?;
+            }
+            Ok(())
+        })?;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (i, (l, c)) in outs.iter().enumerate() {
+            let (s, e) = bounds[i];
+            loss_sum += l * (e - s) as f64;
+            correct += c;
+        }
+        Ok((loss_sum, correct))
+    }
+
     /// Evaluate the averaged model: (global train loss, test accuracy).
+    ///
+    /// Runs sharded across the round executor's worker pool (ROADMAP
+    /// "parallel eval path"); the node-order reduction keeps the result
+    /// bit-identical across `parallelism` settings.
     pub fn evaluate_global(&mut self) -> anyhow::Result<(f64, f64)> {
         let u = self.average_model();
+        let feat = self.dataset.feat_dim;
         let train_n = self.dataset.train_n().min(self.opts.eval_train_cap);
-        let (tx, ty): (Vec<f32>, Vec<u32>) = {
-            let idx: Vec<usize> = (0..train_n).collect();
-            self.dataset.gather_batch(&idx)
+        // the eval prefix is contiguous, so shards are plain row slices
+        let (loss_sum, _) = Self::evaluate_sharded(
+            &self.pool,
+            &mut self.backends,
+            feat,
+            &u,
+            &self.dataset.train_x[..train_n * feat],
+            &self.dataset.train_y[..train_n],
+        )?;
+        let loss = if train_n > 0 {
+            loss_sum / train_n as f64
+        } else {
+            f64::NAN
         };
-        let (loss, _) = self.backends[0].evaluate(&u, &tx, &ty)?;
         let test_n = self.dataset.test_n().min(self.opts.eval_test_cap);
-        let mut correct = 0usize;
-        if test_n > 0 {
-            let x = &self.dataset.test_x
-                [..test_n * self.dataset.feat_dim];
-            let y = &self.dataset.test_y[..test_n];
-            let (_, c) = self.backends[0].evaluate(&u, x, y)?;
-            correct = c;
-        }
         let acc = if test_n > 0 {
+            let (_, correct) = Self::evaluate_sharded(
+                &self.pool,
+                &mut self.backends,
+                feat,
+                &u,
+                &self.dataset.test_x[..test_n * feat],
+                &self.dataset.test_y[..test_n],
+            )?;
             correct as f64 / test_n as f64
         } else {
             f64::NAN
@@ -310,6 +375,7 @@ impl DflEngine {
                         &mut node.msg,
                     );
                     node.out.q2_bits = node.msg.paper_bits();
+                    node.out.q2_wire_bytes = node.msg.wire_bits() / 8;
                     for j in 0..param_count {
                         node.hat[j] += node.dq[j];
                     }
@@ -353,6 +419,7 @@ impl DflEngine {
                     &mut node.msg,
                 );
                 node.out.q1_bits = node.msg.paper_bits();
+                node.out.q1_wire_bytes = node.msg.wire_bits() / 8;
                 node.out.distortion = omega;
                 for j in 0..param_count {
                     node.hat[j] += node.dq[j];
@@ -426,16 +493,82 @@ impl DflEngine {
             levels: levels_now,
             lr: lr as f64,
             wall_secs: timer.elapsed_secs(),
+            virtual_secs: 0.0,
+            straggler_wait_secs: 0.0,
         })
     }
 
     /// Run the configured number of rounds; returns the full log with
     /// cumulative per-link bits.
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        self.run_with(None)
+    }
+
+    /// Run all configured rounds on a [`crate::simnet::Fabric`]: the
+    /// matrix engine produces the learning dynamics, the fabric's
+    /// discrete-event clock produces *when* each round happens —
+    /// `virtual_secs` / `straggler_wait_secs` in the returned log hold
+    /// the paper's time-progression axis under heterogeneous links,
+    /// stragglers, and churn.
+    ///
+    /// The fabric's link drop probability subsumes
+    /// [`EngineOptions::drop_prob`] (broadcast-level fault injection),
+    /// and churn-rebuilt topologies replace the engine's confusion
+    /// matrix mid-run.
+    pub fn run_simulated(
+        &mut self,
+        fabric: &mut crate::simnet::Fabric,
+    ) -> anyhow::Result<RunLog> {
+        // borrow the fabric's loss rate for the duration of this run
+        // only — the engine stays reusable for ideal-network runs after
+        let saved_drop_prob = self.opts.drop_prob;
+        self.opts.drop_prob = fabric.link_drop_prob();
+        let result = self.run_with(Some(fabric));
+        self.opts.drop_prob = saved_drop_prob;
+        result
+    }
+
+    /// Shared driver for [`run`](Self::run) / [`run_simulated`]: one
+    /// round loop, one cumulative-bits convention.
+    fn run_with(
+        &mut self,
+        mut fabric: Option<&mut crate::simnet::Fabric>,
+    ) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(&self.cfg.name);
         let mut cum_bits = 0u64;
         for k in 0..self.cfg.rounds {
+            if let Some(f) = fabric.as_deref_mut() {
+                if let Some(topo) = f.pre_round(k) {
+                    self.topology = topo;
+                }
+            }
             let mut rec = self.round(k)?;
+            if let Some(f) = fabric.as_deref_mut() {
+                self.q2_wire.clear();
+                self.q1_wire.clear();
+                for node in &self.nodes {
+                    let q1 = node.out.q1_wire_bytes;
+                    // an engine-level dropped broadcast was still
+                    // *transmitted* (receivers lost it), so it occupies
+                    // the links; the same-dimension q1 wire size stands
+                    // in for the lost q2 (off by one adaptive level
+                    // step at most, since step C runs between them)
+                    let q2 = if node.out.q2_wire_bytes > 0 {
+                        node.out.q2_wire_bytes
+                    } else {
+                        q1
+                    };
+                    self.q2_wire.push(q2);
+                    self.q1_wire.push(q1);
+                }
+                let timing = f.simulate_round(
+                    self.cfg.tau,
+                    &self.q2_wire,
+                    &self.q1_wire,
+                );
+                rec.virtual_secs = timing.virtual_secs;
+                rec.straggler_wait_secs = timing.straggler_wait_secs;
+            }
             cum_bits += rec.bits_per_link;
             rec.bits_per_link = cum_bits;
             log.push(rec);
@@ -498,6 +631,7 @@ mod tests {
             link_bps: 100e6,
             eval_every: 1,
             parallelism: Parallelism::Auto,
+            network: None,
         }
     }
 
@@ -681,6 +815,39 @@ mod tests {
         let first = log.records.first().unwrap().loss;
         let last = log.records.last().unwrap().loss;
         assert!(last < first, "lossy links broke training entirely");
+    }
+
+    #[test]
+    fn simulated_run_fills_virtual_time() {
+        let cfg = small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        let topo = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let net = crate::simnet::NetworkConfig {
+            link: crate::simnet::LinkModel {
+                latency_s: 0.001,
+                bandwidth_bps: 1e6,
+                jitter_s: 0.0,
+                drop_prob: 0.0,
+            },
+            ..Default::default()
+        };
+        let mut fabric =
+            crate::simnet::Fabric::new(&net, &topo, cfg.seed);
+        let mut e = build_engine(cfg);
+        let log = e.run_simulated(&mut fabric).unwrap();
+        let mut prev = 0.0;
+        for r in &log.records {
+            assert!(
+                r.virtual_secs > prev,
+                "virtual clock not monotone: {} -> {}",
+                prev,
+                r.virtual_secs
+            );
+            prev = r.virtual_secs;
+            assert!(r.straggler_wait_secs >= 0.0);
+        }
+        let first = log.records.first().unwrap().loss;
+        let last = log.records.last().unwrap().loss;
+        assert!(last < first, "simulated run did not learn");
     }
 
     #[test]

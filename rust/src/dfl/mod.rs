@@ -72,6 +72,23 @@ impl Trainer {
         self.engine.run()
     }
 
+    /// Run on a simnet fabric: builds the topology, the fabric (from
+    /// the config's `network:` section), and the engine, then drives
+    /// the virtual-time rounds. Errors when the config has no
+    /// `network:` section.
+    pub fn run_simulated(
+        cfg: &ExperimentConfig,
+    ) -> anyhow::Result<RunLog> {
+        let net = cfg.network.clone().ok_or_else(|| {
+            anyhow::anyhow!("config has no network: section to simulate")
+        })?;
+        let topology = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let mut fabric =
+            crate::simnet::Fabric::new(&net, &topology, cfg.seed);
+        let mut trainer = Self::build(cfg)?;
+        trainer.engine.run_simulated(&mut fabric)
+    }
+
     /// Run on the threaded message-passing runtime instead.
     pub fn run_threaded(
         cfg: &ExperimentConfig,

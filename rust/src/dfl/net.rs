@@ -15,6 +15,15 @@
 //!
 //! Messages are tagged (round, phase) and buffered, so fast neighbors may
 //! run ahead one round without corrupting a slow receiver.
+//!
+//! # Zero-alloc message path
+//!
+//! After warm-up a node thread allocates one `Arc<[u8]>` per *broadcast*
+//! (shared by every peer — the old path cloned the byte vector per
+//! peer): the encode scratch buffer, the decode-side message buffer, the
+//! implied-level-table cache, and the batch index/feature/label buffers
+//! are all reused across rounds, and the mailbox stash only moves `Arc`
+//! handles around.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,17 +35,21 @@ use crate::dfl::backend::LocalUpdate;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::adaptive::AdaptiveLevels;
 use crate::quant::codec;
-use crate::quant::{build_quantizer, FullPrecision, NaturalQuantizer,
-                   QsgdQuantizer, Quantizer};
+use crate::quant::{
+    build_quantizer, FullPrecision, NaturalQuantizer, QsgdQuantizer,
+    Quantizer,
+};
+use crate::simnet::LinkModel;
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
-/// A tagged wire message.
+/// A tagged wire message. The payload is shared across every receiver of
+/// the broadcast; an empty payload is the drop tombstone.
 struct WireMsg {
     from: usize,
     round: usize,
     phase: u8,
-    bytes: Vec<u8>,
+    bytes: Arc<[u8]>,
 }
 
 /// Per-round report a node thread sends to the coordinator.
@@ -57,15 +70,26 @@ struct NodeReport {
 /// Options for the threaded runtime.
 #[derive(Clone, Debug)]
 pub struct NetOptions {
-    /// per-message drop probability on each directed link
-    pub drop_prob: f64,
+    /// per-directed-link transmission model. The old `drop_prob` knob is
+    /// `link.drop_prob` now; latency/bandwidth/jitter are carried for
+    /// simnet-configured runs (they shape the virtual-time axis, not the
+    /// OS thread scheduling).
+    pub link: LinkModel,
     /// evaluate (collect params) every this many rounds
     pub eval_every: usize,
 }
 
 impl Default for NetOptions {
     fn default() -> Self {
-        NetOptions { drop_prob: 0.0, eval_every: 1 }
+        NetOptions { link: LinkModel::ideal(), eval_every: 1 }
+    }
+}
+
+impl NetOptions {
+    /// Back-compat constructor for the common "ideal link with losses"
+    /// setup (the old `drop_prob` field).
+    pub fn lossy(drop_prob: f64) -> Self {
+        NetOptions { link: LinkModel::lossy(drop_prob), eval_every: 1 }
     }
 }
 
@@ -81,10 +105,11 @@ fn implied_levels(kind: &QuantizerKind, s: usize) -> Vec<f32> {
 }
 
 /// Buffered receiver: returns the message for (from, round, phase),
-/// stashing any out-of-order arrivals.
+/// stashing any out-of-order arrivals. Payloads are shared `Arc`s, so
+/// stashing moves a handle, never the bytes.
 struct Mailbox {
     rx: Receiver<WireMsg>,
-    stash: HashMap<(usize, usize, u8), VecDeque<Vec<u8>>>,
+    stash: HashMap<(usize, usize, u8), VecDeque<Arc<[u8]>>>,
 }
 
 impl Mailbox {
@@ -97,7 +122,7 @@ impl Mailbox {
         from: usize,
         round: usize,
         phase: u8,
-    ) -> anyhow::Result<Vec<u8>> {
+    ) -> anyhow::Result<Arc<[u8]>> {
         let key = (from, round, phase);
         loop {
             if let Some(q) = self.stash.get_mut(&key) {
@@ -176,7 +201,7 @@ pub fn run_threaded(
             let kind = kind.clone();
             let report_tx = report_tx.clone();
             let lr = lr.clone();
-            let drop_prob = opts.drop_prob;
+            let link = opts.link.clone();
             let eval_every = opts.eval_every;
             let node_seed = cfg.seed ^ (0xA000 + i as u64);
 
@@ -201,8 +226,20 @@ pub fn run_threaded(
                         vec![vec![0.0f32; param_count]; neighbors.len()];
                     let mut dq = vec![0.0f32; param_count];
                     let mut diff = vec![0.0f32; param_count];
-                    // reusable outgoing-message buffers (zero-alloc path)
+                    let mut mix = vec![0.0f32; param_count];
+                    // reusable message buffers (zero-alloc path): encode
+                    // scratch, decode target, implied-table cache,
+                    // mini-batch scratch, and the shared drop tombstone
                     let mut msg_out = crate::quant::QuantizedVector::empty();
+                    let mut msg_in = crate::quant::QuantizedVector::empty();
+                    let mut enc_buf: Vec<u8> = Vec::new();
+                    let mut implied_cache: HashMap<usize, Vec<f32>> =
+                        HashMap::new();
+                    let tombstone: Arc<[u8]> =
+                        Arc::from(Vec::new().into_boxed_slice());
+                    let mut batch_idx: Vec<usize> = Vec::new();
+                    let mut batch_x: Vec<f32> = Vec::new();
+                    let mut batch_y: Vec<u32> = Vec::new();
 
                     for k in 0..rounds {
                         let mut wire_bits = 0u64;
@@ -227,18 +264,24 @@ pub fn run_threaded(
                                 quantizer.as_mut(), &diff, rng, &mut dq,
                                 &mut msg_out);
                             let q = &msg_out;
-                            let bytes = codec::encode(q);
+                            enc_buf = codec::encode_with_buf(
+                                q,
+                                std::mem::take(&mut enc_buf),
+                            );
+                            // one shared allocation per broadcast; peers
+                            // clone the Arc handle, not the bytes
+                            let bytes: Arc<[u8]> =
+                                Arc::from(enc_buf.as_slice());
                             for tx in &peer_tx {
-                                let dropped = drop_prob > 0.0
-                                    && rng.uniform() < drop_prob;
+                                let dropped = link.dropped(rng);
                                 *wire_bits += bytes.len() as u64 * 8;
                                 *paper_bits += q.paper_bits();
                                 // tombstone (empty payload) on drop so
                                 // receivers don't deadlock
                                 let payload = if dropped {
-                                    Vec::new()
+                                    Arc::clone(&tombstone)
                                 } else {
-                                    bytes.clone()
+                                    Arc::clone(&bytes)
                                 };
                                 let _ = tx.send(WireMsg {
                                     from: i,
@@ -258,10 +301,19 @@ pub fn run_threaded(
                                 if bytes.is_empty() {
                                     continue; // dropped: stale estimate
                                 }
-                                let msg = codec::decode(&bytes, |s| {
-                                    implied_levels(&kind, s)
-                                })?;
-                                msg.dequantize_into(&mut dq);
+                                codec::decode_into(
+                                    &bytes,
+                                    |s, table: &mut Vec<f32>| {
+                                        let t = implied_cache
+                                            .entry(s)
+                                            .or_insert_with(|| {
+                                                implied_levels(&kind, s)
+                                            });
+                                        table.extend_from_slice(t);
+                                    },
+                                    &mut msg_in,
+                                )?;
+                                msg_in.dequantize_into(&mut dq);
                                 for j in 0..param_count {
                                     hat[ni][j] += dq[j];
                                 }
@@ -280,10 +332,18 @@ pub fn run_threaded(
                         let lr_k = lr.at(k) as f32;
                         let mut local_loss = 0.0f64;
                         for _ in 0..tau {
-                            let idx = sampler.next_batch(batch);
-                            let (x, y) = dataset.gather_batch(&idx);
+                            sampler.next_batch_into(batch, &mut batch_idx);
+                            dataset.gather_batch_into(
+                                &batch_idx,
+                                &mut batch_x,
+                                &mut batch_y,
+                            );
                             local_loss += backend.step(
-                                &mut params, &x, &y, lr_k)?;
+                                &mut params,
+                                &batch_x,
+                                &batch_y,
+                                lr_k,
+                            )?;
                         }
                         local_loss /= tau as f64;
                         if let Some(ad) = adaptive.as_mut() {
@@ -301,7 +361,6 @@ pub fn run_threaded(
                         // ---- phase 3: mixing ---------------------------
                         // x += Σ c_ji x̂_j − x̂_self (consensus correction
                         // on true params; = X̂C when estimates are exact)
-                        let mut mix = vec![0.0f32; param_count];
                         for j in 0..param_count {
                             mix[j] = self_weight * hat_self[j];
                         }
@@ -405,6 +464,8 @@ pub fn run_threaded(
                     levels,
                     lr: lr_k,
                     wall_secs: 0.0,
+                    virtual_secs: 0.0,
+                    straggler_wait_secs: 0.0,
                 });
                 done_rounds += 1;
             }
@@ -445,6 +506,7 @@ mod tests {
             link_bps: 100e6,
             eval_every: 1,
             parallelism: crate::config::Parallelism::Auto,
+            network: None,
         }
     }
 
@@ -484,10 +546,7 @@ mod tests {
     #[test]
     fn survives_dropped_messages() {
         let c = cfg(QuantizerKind::LloydMax { s: 16, iters: 6 });
-        let log = run(
-            &c,
-            NetOptions { drop_prob: 0.25, eval_every: 1 },
-        );
+        let log = run(&c, NetOptions::lossy(0.25));
         let first = log.records.first().unwrap().loss;
         let last = log.records.last().unwrap().loss;
         assert!(last.is_finite());

@@ -1,0 +1,263 @@
+//! fig-time: training loss vs *virtual time* on a simulated fabric —
+//! the paper's time-progression comparison (§VI) generalized from
+//! "bits ÷ 100 Mbps" to a discrete-event network with heterogeneous
+//! links and stragglers.
+//!
+//! The flagship preset (`torus-16`) trains 16 nodes on a 2D torus over
+//! bandwidth-constrained (2 Mbps), 5 ms links with heterogeneous node
+//! speeds and a 10% straggler tail, and compares LM-DFL against QSGD
+//! and the doubly-adaptive schedule. Expected shape: the coarse/adaptive
+//! quantizers buy wall-clock, not just bits — message serialization
+//! makes the 8-bit baselines pay for every extra level.
+
+use super::{Curve, Scale};
+use crate::config::{
+    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind,
+    TopologyKind,
+};
+use crate::metrics::{fnum, Table};
+use crate::simnet::{ComputeModel, LinkModel, NetworkConfig};
+
+/// Named scenario presets for the `fig-time` CLI.
+pub fn preset(
+    name: &str,
+    scale: Scale,
+) -> anyhow::Result<(ExperimentConfig, NetworkConfig)> {
+    match name {
+        "torus-16" => Ok((torus16_config(scale), torus16_network())),
+        other => anyhow::bail!(
+            "unknown fig-time preset '{other}' (have: torus-16)"
+        ),
+    }
+}
+
+/// 16-node torus training config (quantizer is filled per curve).
+pub fn torus16_config(scale: Scale) -> ExperimentConfig {
+    let (train, test, rounds) = match scale {
+        Scale::Quick => (480, 160, 20),
+        Scale::Full => (3200, 800, 80),
+    };
+    ExperimentConfig {
+        name: "fig-time-torus-16".into(),
+        seed: 17,
+        nodes: 16,
+        tau: 4,
+        rounds,
+        batch_size: 32,
+        lr: LrSchedule::fixed(0.02),
+        topology: TopologyKind::Torus,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 12 },
+        dataset: DatasetKind::SynthMnist { train, test },
+        backend: BackendKind::RustMlp { hidden: vec![64] },
+        noniid_fraction: 0.5,
+        link_bps: 2e6,
+        eval_every: 1,
+        parallelism: crate::config::Parallelism::Auto,
+        network: None, // filled by the driver per curve
+    }
+}
+
+/// Bandwidth-constrained heterogeneous fabric for the torus-16 preset.
+pub fn torus16_network() -> NetworkConfig {
+    NetworkConfig {
+        link: LinkModel {
+            latency_s: 0.005,
+            bandwidth_bps: 2e6,
+            jitter_s: 0.001,
+            drop_prob: 0.0,
+        },
+        link_hetero_spread: 0.5,
+        compute: ComputeModel {
+            base_step_s: 2e-3,
+            hetero_spread: 0.5,
+            straggler_prob: 0.1,
+            straggler_slowdown: 4.0,
+        },
+        churn: Default::default(),
+    }
+}
+
+/// The three quantizer curves the time comparison plots.
+pub fn curve_set() -> Vec<(&'static str, QuantizerKind)> {
+    vec![
+        ("LM-DFL", QuantizerKind::LloydMax { s: 16, iters: 12 }),
+        ("QSGD", QuantizerKind::Qsgd { s: 16 }),
+        (
+            "doubly-adaptive",
+            QuantizerKind::DoublyAdaptive { s1: 4, iters: 12, s_max: 1024 },
+        ),
+    ]
+}
+
+/// Run every curve of the preset under its own (identically seeded)
+/// fabric: same links, same stragglers, same churn trajectory — only
+/// the quantizer differs, exactly like the paper's per-figure setups.
+pub fn run(
+    base: ExperimentConfig,
+    net: NetworkConfig,
+) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, quant) in curve_set() {
+        let mut cfg = base.clone();
+        cfg.name = label.to_string();
+        cfg.quantizer = quant;
+        cfg.network = Some(net.clone());
+        curves.push(run_simulated_labeled(cfg, label)?);
+    }
+    Ok(curves)
+}
+
+/// Run a simulated training (via [`crate::dfl::Trainer::run_simulated`])
+/// and stamp the curve label.
+pub fn run_simulated_labeled(
+    cfg: ExperimentConfig,
+    label: &str,
+) -> anyhow::Result<Curve> {
+    let log = crate::dfl::Trainer::run_simulated(&cfg)?;
+    Ok(Curve { label: label.to_string(), log })
+}
+
+/// Panel: training loss at cumulative virtual seconds, per curve.
+pub fn render_loss_vs_time(curves: &[Curve]) -> String {
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(curves.iter().map(|c| {
+            let r = &c.log.records[k];
+            format!("{}@{:.2}s", fnum(r.loss), r.virtual_secs)
+        }));
+        t.row(row);
+    }
+    let mut out = String::from(
+        "panel: training loss @ cumulative virtual seconds\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Summary: virtual seconds (and straggler wait share) to a target loss.
+pub fn time_to_target(curves: &[Curve], target: f64) -> String {
+    let mut t = Table::new(&[
+        "curve",
+        "target loss",
+        "virtual secs",
+        "mean straggler wait",
+    ]);
+    for c in curves {
+        let secs = c
+            .log
+            .virtual_secs_to_loss(target)
+            .map(|s| format!("{s:.2}"))
+            .unwrap_or_else(|| "not reached".into());
+        let wait = c
+            .log
+            .records
+            .iter()
+            .map(|r| r.straggler_wait_secs)
+            .sum::<f64>()
+            / c.log.records.len().max(1) as f64;
+        t.row(vec![
+            c.label.clone(),
+            fnum(target),
+            secs,
+            format!("{wait:.3}s"),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (ExperimentConfig, NetworkConfig) {
+        let mut cfg = torus16_config(Scale::Quick);
+        cfg.nodes = 8;
+        cfg.rounds = 8;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 240,
+            test: 80,
+            dim: 10,
+            classes: 4,
+        };
+        (cfg, torus16_network())
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(preset("torus-16", Scale::Quick).is_ok());
+        assert!(preset("nope", Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn three_curves_with_monotone_virtual_time() {
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        assert_eq!(curves.len(), 3);
+        for c in &curves {
+            let mut prev = 0.0;
+            for r in &c.log.records {
+                assert!(
+                    r.virtual_secs > prev,
+                    "{}: clock not monotone",
+                    c.label
+                );
+                prev = r.virtual_secs;
+            }
+        }
+        // curves are distinct series (different quantizers -> different
+        // losses and different on-wire message sizes -> different clocks)
+        let final_losses: Vec<u64> = curves
+            .iter()
+            .map(|c| c.log.last_loss().unwrap().to_bits())
+            .collect();
+        assert!(
+            final_losses[0] != final_losses[1]
+                || final_losses[1] != final_losses[2],
+            "all curves identical"
+        );
+    }
+
+    #[test]
+    fn coarser_quantizer_runs_faster_in_virtual_time() {
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        let by_label = |l: &str| {
+            curves
+                .iter()
+                .find(|c| c.label == l)
+                .unwrap()
+                .log
+                .records
+                .last()
+                .unwrap()
+                .virtual_secs
+        };
+        // doubly-adaptive starts at s1=4 (2-bit messages) — on a
+        // bandwidth-bound fabric it must finish its rounds sooner than
+        // the fixed 4-bit baselines
+        assert!(
+            by_label("doubly-adaptive") < by_label("QSGD"),
+            "adaptive {} !< qsgd {}",
+            by_label("doubly-adaptive"),
+            by_label("QSGD")
+        );
+    }
+
+    #[test]
+    fn renders_nonempty() {
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        assert!(render_loss_vs_time(&curves).contains("panel:"));
+        assert!(time_to_target(&curves, 1.0).contains("virtual secs"));
+    }
+}

@@ -9,6 +9,7 @@ pub mod fig4;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_time;
 pub mod table1;
 
 use crate::config::{
@@ -74,6 +75,7 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1,
         parallelism: crate::config::Parallelism::Auto,
+        network: None,
     }
 }
 

@@ -35,6 +35,19 @@
 //! `rust/tests/engine_parallel.rs`), so it is purely a throughput knob —
 //! `cargo bench --bench micro_runtime` reports the speedup.
 //!
+//! ## Virtual-time simulation (simnet)
+//!
+//! [`simnet`] is a deterministic discrete-event fabric simulator:
+//! heterogeneous links (latency / bandwidth / jitter / drop), per-node
+//! compute models with stragglers, and topology churn that rebuilds the
+//! Metropolis confusion matrix mid-run. `DflEngine::run_simulated`
+//! wraps training rounds in a [`simnet::Fabric`], filling the
+//! `virtual_secs` / `straggler_wait_secs` metrics columns so `RunLog`
+//! can emit the paper's loss-vs-time series; `lmdfl fig-time --preset
+//! torus-16` compares LM-DFL / QSGD / doubly-adaptive on a
+//! bandwidth-constrained torus. Configure via the `network:` config
+//! section or the `--net-*` CLI flags.
+//!
 //! ## Bench reports
 //!
 //! Bench targets print a criterion-like text table and, when
@@ -62,6 +75,7 @@ pub mod metrics;
 pub mod models;
 pub mod quant;
 pub mod runtime;
+pub mod simnet;
 pub mod topology;
 pub mod util;
 pub mod xla;

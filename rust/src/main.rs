@@ -7,6 +7,7 @@
 //!   fig6       regenerate Fig. 6 (--dataset mnist|cifar)
 //!   fig7       regenerate Fig. 7 (topology sweep)
 //!   fig8       regenerate Fig. 8 (--variable-lr for panels b/e)
+//!   fig-time   loss vs virtual time on a simulated fabric (simnet)
 //!   topo       inspect a topology (confusion matrix, ζ, α)
 //!   quant      inspect quantizer bit costs and distortion bounds
 //!   artifacts  list AOT artifacts from the manifest
@@ -22,15 +23,24 @@ const USAGE: &str = "\
 lmdfl <command> [options]
 
 commands:
-  train      --config <file.json> [--threaded] [--csv out.csv]
+  train      --config <file.json> [--threaded] [--simulate] [--csv out.csv]
              or inline: --nodes N --rounds K --tau T --quantizer q --s S
                         --dataset synth_mnist|synth_cifar|blobs --lr F
                         --parallelism auto|off|N   (matrix-engine workers)
+             network (simnet) flags, enable virtual-time simulation:
+                        --net-latency-s F --net-bandwidth-bps F
+                        --net-jitter-s F --net-drop P
+                        --net-link-spread F --compute-step-s F
+                        --compute-spread F --straggler-prob P
+                        --straggler-slowdown F --churn-interval N
+                        --churn-link-fail P --churn-link-heal P
+                        --churn-node-leave P --churn-node-return P
   table1     [--d N]... [--s N]... [--trials N]
   fig4       [--full]
   fig6       --dataset mnist|cifar [--full]
   fig7       [--full]
   fig8       --dataset mnist|cifar [--variable-lr] [--full]
+  fig-time   --preset torus-16 [--target-loss F] [--full]
   topo       --kind full|ring|disconnected|star|torus|random --nodes N
   quant      --d N --s N
   artifacts  [--dir artifacts]
@@ -64,6 +74,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("fig6") => cmd_fig6(args),
         Some("fig7") => cmd_fig7(args),
         Some("fig8") => cmd_fig8(args),
+        Some("fig-time") => cmd_fig_time(args),
         Some("topo") => cmd_topo(args),
         Some("quant") => cmd_quant(args),
         Some("artifacts") => cmd_artifacts(args),
@@ -143,6 +154,55 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(p) = args.get("parallelism") {
         cfg.parallelism = lmdfl::config::Parallelism::parse_str(p)?;
     }
+    // network (simnet) flags: any of them present materializes a
+    // `network:` section (over the config file's, when both are given)
+    let net_keys = [
+        "net-latency-s",
+        "net-bandwidth-bps",
+        "net-jitter-s",
+        "net-drop",
+        "net-link-spread",
+        "compute-step-s",
+        "compute-spread",
+        "straggler-prob",
+        "straggler-slowdown",
+        "churn-interval",
+        "churn-link-fail",
+        "churn-link-heal",
+        "churn-node-leave",
+        "churn-node-return",
+    ];
+    if net_keys.iter().any(|k| args.get(k).is_some()) {
+        let mut net = cfg.network.clone().unwrap_or_default();
+        net.link.latency_s =
+            args.get_f64("net-latency-s", net.link.latency_s)?;
+        net.link.bandwidth_bps =
+            args.get_f64("net-bandwidth-bps", net.link.bandwidth_bps)?;
+        net.link.jitter_s =
+            args.get_f64("net-jitter-s", net.link.jitter_s)?;
+        net.link.drop_prob = args.get_f64("net-drop", net.link.drop_prob)?;
+        net.link_hetero_spread =
+            args.get_f64("net-link-spread", net.link_hetero_spread)?;
+        net.compute.base_step_s =
+            args.get_f64("compute-step-s", net.compute.base_step_s)?;
+        net.compute.hetero_spread =
+            args.get_f64("compute-spread", net.compute.hetero_spread)?;
+        net.compute.straggler_prob =
+            args.get_f64("straggler-prob", net.compute.straggler_prob)?;
+        net.compute.straggler_slowdown = args
+            .get_f64("straggler-slowdown", net.compute.straggler_slowdown)?;
+        net.churn.interval_rounds =
+            args.get_usize("churn-interval", net.churn.interval_rounds)?;
+        net.churn.link_fail_prob =
+            args.get_f64("churn-link-fail", net.churn.link_fail_prob)?;
+        net.churn.link_heal_prob =
+            args.get_f64("churn-link-heal", net.churn.link_heal_prob)?;
+        net.churn.node_leave_prob =
+            args.get_f64("churn-node-leave", net.churn.node_leave_prob)?;
+        net.churn.node_return_prob =
+            args.get_f64("churn-node-return", net.churn.node_return_prob)?;
+        cfg.network = Some(net);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -150,18 +210,44 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
     println!("config:\n{}", cfg.to_json().to_pretty());
+    let simulate = args.has_flag("simulate") || cfg.network.is_some();
+    if args.has_flag("threaded") && args.has_flag("simulate") {
+        anyhow::bail!(
+            "--threaded and --simulate are mutually exclusive: the \
+             threaded runtime runs on real OS threads (no virtual clock)"
+        );
+    }
     let log = if args.has_flag("threaded") {
+        if cfg.network.is_some() {
+            eprintln!(
+                "note: --threaded uses only the network link's drop_prob; \
+                 latency/bandwidth/stragglers/churn need the simulated \
+                 engine (drop --threaded)"
+            );
+        }
+        let mut link = cfg
+            .network
+            .as_ref()
+            .map(|n| n.link.clone())
+            .unwrap_or_else(lmdfl::simnet::LinkModel::ideal);
+        // legacy knob: --drop-prob still works (now a LinkModel field)
+        link.drop_prob = args.get_f64("drop-prob", link.drop_prob)?;
         lmdfl::dfl::Trainer::run_threaded(
             &cfg,
-            lmdfl::dfl::NetOptions {
-                drop_prob: args.get_f64("drop-prob", 0.0)?,
-                eval_every: cfg.eval_every,
-            },
+            lmdfl::dfl::NetOptions { link, eval_every: cfg.eval_every },
         )?
+    } else if simulate {
+        let mut sim_cfg = cfg.clone();
+        if sim_cfg.network.is_none() {
+            sim_cfg.network = Some(Default::default());
+        }
+        lmdfl::dfl::Trainer::run_simulated(&sim_cfg)?
     } else {
         lmdfl::dfl::Trainer::build(&cfg)?.run()?
     };
-    let mut t = Table::new(&["round", "loss", "acc", "bits/link", "s_k"]);
+    let mut t = Table::new(&[
+        "round", "loss", "acc", "bits/link", "s_k", "virt_s",
+    ]);
     let stride = (log.records.len() / 20).max(1);
     for r in log.records.iter().step_by(stride) {
         t.row(vec![
@@ -170,6 +256,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             fnum(r.accuracy),
             r.bits_per_link.to_string(),
             r.levels.to_string(),
+            format!("{:.3}", r.virtual_secs),
         ]);
     }
     println!("{}", t.render());
@@ -181,10 +268,54 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.link_bps / 1e6,
         log.total_bits() as f64 / cfg.link_bps * 1e3,
     );
+    if let Some(last) = log.records.last() {
+        if last.virtual_secs > 0.0 {
+            println!(
+                "simnet: virtual time {:.3}s, mean straggler wait {:.4}s",
+                last.virtual_secs,
+                log.records
+                    .iter()
+                    .map(|r| r.straggler_wait_secs)
+                    .sum::<f64>()
+                    / log.records.len() as f64,
+            );
+        }
+    }
     if let Some(csv) = args.get("csv") {
         log.write_csv(Path::new(csv))?;
         println!("wrote {csv}");
     }
+    Ok(())
+}
+
+fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
+    let scale = scale_of(args);
+    let preset_name = args.get_or("preset", "torus-16");
+    let (cfg, net) =
+        experiments::fig_time::preset(preset_name, scale)?;
+    println!(
+        "fig-time preset {preset_name}: {} nodes, {} topology, \
+         {:.1} Mbps links, straggler p={}",
+        cfg.nodes,
+        cfg.topology.name(),
+        net.link.bandwidth_bps / 1e6,
+        net.compute.straggler_prob,
+    );
+    let curves = experiments::fig_time::run(cfg, net)?;
+    println!(
+        "{}",
+        experiments::fig_time::render_loss_vs_time(&curves)
+    );
+    let default_target = curves
+        .iter()
+        .map(|c| c.log.last_loss().unwrap_or(f64::NAN))
+        .fold(f64::MIN, f64::max)
+        * 1.1;
+    let target = args.get_f64("target-loss", default_target)?;
+    println!(
+        "{}",
+        experiments::fig_time::time_to_target(&curves, target)
+    );
     Ok(())
 }
 

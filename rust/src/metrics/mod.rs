@@ -27,6 +27,12 @@ pub struct RoundRecord {
     pub lr: f64,
     /// wall-clock seconds spent in this round
     pub wall_secs: f64,
+    /// cumulative *virtual* seconds on the simulated fabric at the end
+    /// of this round (0 outside `run_simulated`; monotone within a run)
+    pub virtual_secs: f64,
+    /// mean virtual seconds nodes idled at this round's straggler
+    /// barrier (simnet runs only)
+    pub straggler_wait_secs: f64,
 }
 
 /// A full run: config echo + round series.
@@ -69,6 +75,20 @@ impl RunLog {
             .collect()
     }
 
+    /// Simulated time progression: the cumulative virtual clock per
+    /// round (all zeros unless the run went through a simnet fabric).
+    pub fn virtual_time_progression(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.virtual_secs).collect()
+    }
+
+    /// Virtual seconds needed to reach the target loss (simnet runs).
+    pub fn virtual_secs_to_loss(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.loss <= target)
+            .map(|r| r.virtual_secs)
+    }
+
     /// First round index at which loss <= target (communication-efficiency
     /// comparisons: "bits to reach targeted training loss").
     pub fn rounds_to_loss(&self, target: f64) -> Option<usize> {
@@ -85,11 +105,12 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,loss,accuracy,bits_per_link,distortion,levels,lr,wall_secs\n",
+            "round,loss,accuracy,bits_per_link,distortion,levels,lr,\
+             wall_secs,virtual_secs,straggler_wait_secs\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.loss,
                 r.accuracy,
@@ -97,7 +118,9 @@ impl RunLog {
                 r.distortion,
                 r.levels,
                 r.lr,
-                r.wall_secs
+                r.wall_secs,
+                r.virtual_secs,
+                r.straggler_wait_secs
             ));
         }
         out
@@ -124,6 +147,14 @@ impl RunLog {
                                 ("levels", Json::num(r.levels as f64)),
                                 ("lr", Json::num(r.lr)),
                                 ("wall_secs", Json::num(r.wall_secs)),
+                                (
+                                    "virtual_secs",
+                                    Json::num(r.virtual_secs),
+                                ),
+                                (
+                                    "straggler_wait_secs",
+                                    Json::num(r.straggler_wait_secs),
+                                ),
                             ])
                         })
                         .collect(),
@@ -220,7 +251,19 @@ mod tests {
             levels: 16,
             lr: 0.05,
             wall_secs: 0.1,
+            virtual_secs: round as f64 * 2.0,
+            straggler_wait_secs: 0.0,
         }
+    }
+
+    #[test]
+    fn virtual_time_series_and_target() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 2.0, 100));
+        log.push(rec(2, 1.0, 200));
+        assert_eq!(log.virtual_time_progression(), vec![2.0, 4.0]);
+        assert_eq!(log.virtual_secs_to_loss(1.5), Some(4.0));
+        assert_eq!(log.virtual_secs_to_loss(0.5), None);
     }
 
     #[test]

@@ -48,7 +48,14 @@ impl Default for BitWriter {
 
 impl BitWriter {
     pub fn new() -> Self {
-        BitWriter { buf: Vec::new(), acc: 0, nacc: 0, bitpos: 0 }
+        Self::with_buf(Vec::new())
+    }
+
+    /// Writer over a caller-owned buffer (cleared first) — the zero-alloc
+    /// encode path reuses one buffer across messages.
+    pub fn with_buf(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter { buf, acc: 0, nacc: 0, bitpos: 0 }
     }
 
     #[inline]
@@ -178,7 +185,15 @@ pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
 
 /// Encode a quantized vector to bytes.
 pub fn encode(qv: &QuantizedVector) -> Vec<u8> {
-    let mut w = BitWriter::new();
+    encode_with_buf(qv, Vec::new())
+}
+
+/// Zero-alloc [`encode`]: reuse `out` as the backing buffer (the encoded
+/// bytes land in the returned `Vec`, which is `out`'s storage, grown at
+/// most once to the message size). Callers in the threaded runtime swap
+/// the buffer back in after shipping the bytes.
+pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
+    let mut w = BitWriter::with_buf(out);
     w.write_u32(qv.dim() as u32);
     w.write_u16(qv.s() as u16);
     w.write_u8(if qv.implied_table { 0 } else { 1 });
@@ -204,6 +219,25 @@ pub fn decode(
     bytes: &[u8],
     implied_levels: impl Fn(usize) -> Vec<f32>,
 ) -> Result<QuantizedVector, CodecError> {
+    let mut out = QuantizedVector::empty();
+    decode_into(
+        bytes,
+        |s, table: &mut Vec<f32>| *table = implied_levels(s),
+        &mut out,
+    )?;
+    Ok(out)
+}
+
+/// Zero-alloc [`decode`]: parse into an existing message buffer, reusing
+/// its vectors (the threaded runtime's per-message receive path).
+/// `fill_implied` writes the implied level table into the provided
+/// (cleared) buffer when the message did not ship one. On error `out`
+/// may be partially overwritten — discard it.
+pub fn decode_into(
+    bytes: &[u8],
+    mut fill_implied: impl FnMut(usize, &mut Vec<f32>),
+    out: &mut QuantizedVector,
+) -> Result<(), CodecError> {
     let mut r = BitReader::new(bytes);
     let d = r.read_u32()? as usize;
     let s = r.read_u16()? as usize;
@@ -211,43 +245,39 @@ pub fn decode(
         return Err(CodecError("s must be >= 1".into()));
     }
     let has_table = r.read_u8()? == 1;
-    let norm = r.read_f32()?;
-    let levels = if has_table {
-        let mut t = Vec::with_capacity(s);
+    out.norm = r.read_f32()?;
+    out.levels.clear();
+    if has_table {
+        out.levels.reserve(s);
         for _ in 0..s {
-            t.push(r.read_f32()?);
+            out.levels.push(r.read_f32()?);
         }
-        t
     } else {
-        let t = implied_levels(s);
-        if t.len() != s {
+        fill_implied(s, &mut out.levels);
+        if out.levels.len() != s {
             return Err(CodecError(format!(
                 "implied table has {} levels, message says {s}",
-                t.len()
+                out.levels.len()
             )));
         }
-        t
-    };
-    let mut negative = Vec::with_capacity(d);
+    }
+    out.negative.clear();
+    out.negative.reserve(d);
     for _ in 0..d {
-        negative.push(r.read_bit()?);
+        out.negative.push(r.read_bit()?);
     }
     let idx_bits = ceil_log2(s);
-    let mut indices = Vec::with_capacity(d);
+    out.indices.clear();
+    out.indices.reserve(d);
     for _ in 0..d {
         let i = r.read_bits(idx_bits)? as u32;
         if i as usize >= s {
             return Err(CodecError(format!("index {i} out of range s={s}")));
         }
-        indices.push(i);
+        out.indices.push(i);
     }
-    Ok(QuantizedVector {
-        norm,
-        negative,
-        indices,
-        levels,
-        implied_table: !has_table,
-    })
+    out.implied_table = !has_table;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -306,6 +336,27 @@ mod tests {
         let back =
             decode(&bytes, |s| QsgdQuantizer::level_table(s)).unwrap();
         assert_eq!(back, qv);
+    }
+
+    #[test]
+    fn zero_alloc_paths_match_allocating_ones() {
+        let mut q = LloydMaxQuantizer::new(8, 6);
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> =
+            (0..300).map(|i| (i as f32 * 0.37).cos()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        let bytes = encode(&qv);
+        // encode_with_buf reuses storage and produces identical bytes
+        let buf = encode_with_buf(&qv, Vec::with_capacity(bytes.len()));
+        assert_eq!(buf, bytes);
+        let again = encode_with_buf(&qv, buf);
+        assert_eq!(again, bytes);
+        // decode_into matches decode, reusing the target's vectors
+        let mut out = QuantizedVector::empty();
+        decode_into(&bytes, |_, _| unreachable!(), &mut out).unwrap();
+        assert_eq!(out, qv);
+        decode_into(&bytes, |_, _| unreachable!(), &mut out).unwrap();
+        assert_eq!(out, qv);
     }
 
     #[test]

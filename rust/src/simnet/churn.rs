@@ -1,0 +1,267 @@
+//! Topology churn: nodes leave/return and links fail/heal mid-run.
+//!
+//! Every `interval_rounds` rounds the churn layer re-draws the fault
+//! state of the base graph and rebuilds the confusion matrix with
+//! Metropolis–Hastings weights over the surviving edges (the standard
+//! construction — stays symmetric doubly stochastic for any subgraph,
+//! isolated nodes degenerate to self-weight 1), then recomputes ζ so the
+//! engine's spectral bookkeeping (α(ζ), Lemma 2) tracks the live graph
+//! instead of the stale build-time one.
+//!
+//! Determinism: the fault coins come from a dedicated rng stream and are
+//! drawn in sorted edge / node order, so the churn trajectory is a pure
+//! function of (seed, base graph, config).
+
+use std::collections::BTreeSet;
+
+use crate::linalg::eigen::second_largest_abs_eigenvalue;
+use crate::topology::{metropolis_weights, Topology};
+use crate::util::rng::Rng;
+
+/// Churn process parameters. All probabilities are per churn epoch
+/// (every `interval_rounds` rounds); `interval_rounds == 0` disables
+/// churn entirely.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnConfig {
+    /// re-draw faults every this many rounds (0 = never)
+    pub interval_rounds: usize,
+    /// probability an up link fails this epoch
+    pub link_fail_prob: f64,
+    /// probability a failed link heals this epoch
+    pub link_heal_prob: f64,
+    /// probability an online node leaves this epoch
+    pub node_leave_prob: f64,
+    /// probability an offline node returns this epoch
+    pub node_return_prob: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            interval_rounds: 0,
+            link_fail_prob: 0.0,
+            link_heal_prob: 0.5,
+            node_leave_prob: 0.0,
+            node_return_prob: 0.5,
+        }
+    }
+}
+
+impl ChurnConfig {
+    pub fn enabled(&self) -> bool {
+        self.interval_rounds > 0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("link_fail_prob", self.link_fail_prob),
+            ("link_heal_prob", self.link_heal_prob),
+            ("node_leave_prob", self.node_leave_prob),
+            ("node_return_prob", self.node_return_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("churn {name} must be in [0, 1]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Live churn state over a fixed base graph.
+#[derive(Clone, Debug)]
+pub struct ChurnState {
+    cfg: ChurnConfig,
+    /// undirected base edges, sorted, as (min, max) pairs
+    base_edges: Vec<(usize, usize)>,
+    n: usize,
+    failed_links: BTreeSet<(usize, usize)>,
+    offline_nodes: BTreeSet<usize>,
+    rng: Rng,
+}
+
+impl ChurnState {
+    /// Capture the base graph from the build-time topology.
+    pub fn new(cfg: ChurnConfig, base: &Topology, rng: Rng) -> Self {
+        let mut base_edges = Vec::new();
+        for (i, nbrs) in base.adj.iter().enumerate() {
+            for &j in nbrs {
+                if i < j {
+                    base_edges.push((i, j));
+                }
+            }
+        }
+        base_edges.sort_unstable();
+        ChurnState {
+            cfg,
+            base_edges,
+            n: base.n,
+            failed_links: BTreeSet::new(),
+            offline_nodes: BTreeSet::new(),
+            rng,
+        }
+    }
+
+    /// Nodes currently offline (for the fabric's compute scheduling).
+    pub fn offline(&self) -> &BTreeSet<usize> {
+        &self.offline_nodes
+    }
+
+    /// Whether the undirected link {i, j} currently carries traffic.
+    pub fn link_up(&self, i: usize, j: usize) -> bool {
+        let key = (i.min(j), i.max(j));
+        !self.failed_links.contains(&key)
+            && !self.offline_nodes.contains(&i)
+            && !self.offline_nodes.contains(&j)
+    }
+
+    /// Maybe re-draw faults before round `k`; returns the rebuilt
+    /// topology when the live graph changed. Round 0 uses the pristine
+    /// base graph.
+    pub fn pre_round(&mut self, k: usize) -> Option<Topology> {
+        if !self.cfg.enabled() || k == 0 || k % self.cfg.interval_rounds != 0
+        {
+            return None;
+        }
+        let mut changed = false;
+        // links first, then nodes — both in sorted order (determinism)
+        for &edge in &self.base_edges {
+            if self.failed_links.contains(&edge) {
+                if self.cfg.link_heal_prob > 0.0
+                    && self.rng.uniform() < self.cfg.link_heal_prob
+                {
+                    self.failed_links.remove(&edge);
+                    changed = true;
+                }
+            } else if self.cfg.link_fail_prob > 0.0
+                && self.rng.uniform() < self.cfg.link_fail_prob
+            {
+                self.failed_links.insert(edge);
+                changed = true;
+            }
+        }
+        for i in 0..self.n {
+            if self.offline_nodes.contains(&i) {
+                if self.cfg.node_return_prob > 0.0
+                    && self.rng.uniform() < self.cfg.node_return_prob
+                {
+                    self.offline_nodes.remove(&i);
+                    changed = true;
+                }
+            } else if self.cfg.node_leave_prob > 0.0
+                && self.rng.uniform() < self.cfg.node_leave_prob
+            {
+                self.offline_nodes.insert(i);
+                changed = true;
+            }
+        }
+        if changed {
+            Some(self.rebuild())
+        } else {
+            None
+        }
+    }
+
+    /// Build the live topology: surviving edges, Metropolis weights,
+    /// fresh ζ. Isolated / offline nodes keep self-weight 1, so C stays
+    /// symmetric doubly stochastic no matter what failed.
+    pub fn rebuild(&self) -> Topology {
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for &(i, j) in &self.base_edges {
+            if self.link_up(i, j) {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+        let c = metropolis_weights(&adj);
+        let zeta = second_largest_abs_eigenvalue(&c);
+        Topology { n: self.n, adj, c, zeta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+
+    fn churny(interval: usize) -> ChurnConfig {
+        ChurnConfig {
+            interval_rounds: interval,
+            link_fail_prob: 0.4,
+            link_heal_prob: 0.5,
+            node_leave_prob: 0.2,
+            node_return_prob: 0.5,
+        }
+    }
+
+    #[test]
+    fn disabled_churn_never_fires() {
+        let base = Topology::build(&TopologyKind::Ring, 8, 0);
+        let mut st =
+            ChurnState::new(ChurnConfig::default(), &base, Rng::new(1));
+        for k in 0..50 {
+            assert!(st.pre_round(k).is_none());
+        }
+    }
+
+    #[test]
+    fn rebuilt_matrix_stays_symmetric_doubly_stochastic() {
+        let base = Topology::build(&TopologyKind::Torus, 16, 3);
+        let mut st = ChurnState::new(churny(1), &base, Rng::new(9));
+        let mut rebuilds = 0;
+        for k in 1..40 {
+            if let Some(t) = st.pre_round(k) {
+                rebuilds += 1;
+                assert!(t.c.is_symmetric(1e-12), "round {k}: asymmetric");
+                assert!(
+                    t.c.is_doubly_stochastic(1e-9),
+                    "round {k}: not doubly stochastic"
+                );
+                assert!(t.zeta >= -1e-12 && t.zeta <= 1.0 + 1e-9);
+                // adjacency stays a subgraph of the base torus
+                for (i, nbrs) in t.adj.iter().enumerate() {
+                    for &j in nbrs {
+                        assert!(base.adj[i].contains(&j));
+                    }
+                }
+            }
+        }
+        assert!(rebuilds > 5, "churn too quiet: {rebuilds} rebuilds");
+    }
+
+    #[test]
+    fn deterministic_trajectory() {
+        let base = Topology::build(&TopologyKind::Ring, 10, 0);
+        let run = |seed| {
+            let mut st = ChurnState::new(churny(2), &base, Rng::new(seed));
+            let mut trace = Vec::new();
+            for k in 0..30 {
+                if let Some(t) = st.pre_round(k) {
+                    trace.push((k, t.directed_links(), t.zeta.to_bits()));
+                }
+            }
+            trace
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn offline_node_loses_all_links() {
+        let base = Topology::build(&TopologyKind::Full, 5, 0);
+        let cfg = ChurnConfig {
+            interval_rounds: 1,
+            node_leave_prob: 1.0,
+            node_return_prob: 0.0,
+            link_fail_prob: 0.0,
+            link_heal_prob: 0.0,
+        };
+        let mut st = ChurnState::new(cfg, &base, Rng::new(0));
+        let t = st.pre_round(1).unwrap();
+        // everyone left: fully disconnected, C = I, zeta = 1
+        assert!(t.adj.iter().all(|a| a.is_empty()));
+        for i in 0..5 {
+            assert!((t.c[(i, i)] - 1.0).abs() < 1e-12);
+        }
+        assert!((t.zeta - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,204 @@
+//! Deterministic discrete-event clock: a binary-heap event queue over
+//! integer virtual nanoseconds.
+//!
+//! Determinism contract: events are ordered by `(time, seq)` where `seq`
+//! is the insertion sequence number, so simultaneous events pop in the
+//! exact order they were scheduled — the queue is a stable priority
+//! queue. Payloads never participate in the ordering (no `Ord` bound),
+//! and virtual time is integral (nanoseconds), so two runs that schedule
+//! the same events produce byte-identical pop sequences on any platform.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in integer nanoseconds since simulation start.
+pub type VirtualTime = u64;
+
+/// Convert (non-negative, finite) seconds to virtual nanoseconds,
+/// rounding to the nearest integer so link/compute durations derived
+/// from `f64` models stay platform-independent.
+#[inline]
+pub fn secs_to_ns(secs: f64) -> VirtualTime {
+    debug_assert!(secs >= 0.0 && secs.is_finite(), "bad duration {secs}");
+    (secs * 1e9).round() as VirtualTime
+}
+
+/// Convert virtual nanoseconds back to seconds (reporting only).
+#[inline]
+pub fn ns_to_secs(ns: VirtualTime) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// One scheduled event. Heap entries compare on `(time, seq)` only.
+struct Entry<P> {
+    time: VirtualTime,
+    seq: u64,
+    payload: P,
+}
+
+impl<P> PartialEq for Entry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<P> Eq for Entry<P> {}
+
+impl<P> PartialOrd for Entry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Entry<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Stable min-priority event queue with a monotonic virtual clock.
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Entry<P>>,
+    next_seq: u64,
+    now: VirtualTime,
+    /// total events popped over the queue's lifetime (bench/report metric)
+    processed: u64,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: 0,
+            processed: 0,
+        }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> VirtualTime {
+        self.now
+    }
+
+    /// Pending event count.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Lifetime count of popped events.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` at absolute virtual time `at`. Scheduling in
+    /// the past is a logic error; the check is unconditional (not a
+    /// `debug_assert`) so debug and release builds can never diverge on
+    /// the replay contract.
+    pub fn schedule(&mut self, at: VirtualTime, payload: P) {
+        assert!(at >= self.now, "event scheduled in the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time: at, seq, payload });
+    }
+
+    /// Schedule `payload` `delay` nanoseconds after the current time.
+    pub fn schedule_in(&mut self, delay: VirtualTime, payload: P) {
+        self.schedule(self.now.saturating_add(delay), payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(VirtualTime, P)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.payload))
+    }
+
+    /// Reset the clock to a new epoch without clearing statistics. Only
+    /// valid when no events are pending (between simulation rounds).
+    pub fn rebase(&mut self, now: VirtualTime) {
+        assert!(self.heap.is_empty(), "rebase with pending events");
+        self.now = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule(7, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((7, i)));
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5, ());
+        q.schedule(5, ());
+        q.schedule(9, ());
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(q.now(), 9);
+    }
+
+    #[test]
+    fn schedule_in_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule(100, 0u8);
+        q.pop();
+        q.schedule_in(50, 1u8);
+        assert_eq!(q.pop(), Some((150, 1u8)));
+    }
+
+    #[test]
+    fn rebase_moves_epoch() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.schedule(10, 0);
+        q.pop();
+        q.rebase(1000);
+        q.schedule_in(5, 1);
+        assert_eq!(q.pop(), Some((1005, 1)));
+    }
+
+    #[test]
+    fn secs_ns_roundtrip() {
+        assert_eq!(secs_to_ns(0.0), 0);
+        assert_eq!(secs_to_ns(1.0), 1_000_000_000);
+        assert_eq!(secs_to_ns(0.005), 5_000_000);
+        assert!((ns_to_secs(secs_to_ns(2.5)) - 2.5).abs() < 1e-12);
+    }
+}

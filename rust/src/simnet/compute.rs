@@ -1,0 +1,158 @@
+//! Per-node compute models: heterogeneous τ-step SGD durations and
+//! transient stragglers.
+//!
+//! Every node gets a fixed speed factor drawn once at fabric build time
+//! (hardware heterogeneity), and each round independently becomes a
+//! straggler with `straggler_prob`, multiplying that round's local-update
+//! time by `straggler_slowdown` (GC pauses, co-tenant interference,
+//! thermal throttling — the transient tail DAdaQuant-style schedules
+//! have to survive).
+
+use super::clock::{secs_to_ns, VirtualTime};
+use crate::util::rng::Rng;
+
+/// Fabric-wide compute distribution parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// seconds one local SGD step takes on the fastest node
+    pub base_step_s: f64,
+    /// per-node speed factor is uniform in [1, 1 + hetero_spread]
+    pub hetero_spread: f64,
+    /// per-round probability a node straggles
+    pub straggler_prob: f64,
+    /// multiplier applied to a straggling node's round compute time
+    pub straggler_slowdown: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel {
+            base_step_s: 1e-3,
+            hetero_spread: 0.0,
+            straggler_prob: 0.0,
+            straggler_slowdown: 4.0,
+        }
+    }
+}
+
+impl ComputeModel {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.base_step_s >= 0.0 && self.base_step_s.is_finite()) {
+            return Err("compute base_step_s must be finite and >= 0".into());
+        }
+        if !(self.hetero_spread >= 0.0 && self.hetero_spread.is_finite()) {
+            return Err("compute hetero_spread must be finite and >= 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err("compute straggler_prob must be in [0, 1]".into());
+        }
+        if !(self.straggler_slowdown >= 1.0
+            && self.straggler_slowdown.is_finite())
+        {
+            return Err("compute straggler_slowdown must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One node's resolved compute state.
+#[derive(Clone, Debug)]
+pub struct NodeCompute {
+    /// fixed hardware speed factor (>= 1; 1 = fastest)
+    pub speed: f64,
+}
+
+impl NodeCompute {
+    /// Draw the per-node fleet for `n` nodes from a dedicated rng stream.
+    pub fn fleet(model: &ComputeModel, n: usize, rng: &mut Rng) -> Vec<Self> {
+        (0..n)
+            .map(|_| {
+                let u = if model.hetero_spread > 0.0 {
+                    rng.uniform()
+                } else {
+                    0.0
+                };
+                NodeCompute { speed: 1.0 + model.hetero_spread * u }
+            })
+            .collect()
+    }
+
+    /// Virtual duration of this round's τ local steps; returns the
+    /// duration and whether the node straggled. One uniform is drawn per
+    /// round when straggling is enabled (none otherwise).
+    pub fn local_update_ns(
+        &self,
+        model: &ComputeModel,
+        tau: usize,
+        rng: &mut Rng,
+    ) -> (VirtualTime, bool) {
+        let mut secs = model.base_step_s * tau as f64 * self.speed;
+        let straggled = model.straggler_prob > 0.0
+            && rng.uniform() < model.straggler_prob;
+        if straggled {
+            secs *= model.straggler_slowdown;
+        }
+        (secs_to_ns(secs), straggled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_fleet_all_unit_speed() {
+        let m = ComputeModel::default();
+        let mut rng = Rng::new(0);
+        let fleet = NodeCompute::fleet(&m, 8, &mut rng);
+        assert!(fleet.iter().all(|c| c.speed == 1.0));
+        let (ns, s) = fleet[0].local_update_ns(&m, 4, &mut rng);
+        assert_eq!(ns, secs_to_ns(4e-3));
+        assert!(!s);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_spreads_speeds() {
+        let m = ComputeModel { hetero_spread: 1.0, ..Default::default() };
+        let mut rng = Rng::new(5);
+        let fleet = NodeCompute::fleet(&m, 32, &mut rng);
+        assert!(fleet.iter().all(|c| (1.0..=2.0).contains(&c.speed)));
+        let min = fleet.iter().map(|c| c.speed).fold(f64::MAX, f64::min);
+        let max = fleet.iter().map(|c| c.speed).fold(f64::MIN, f64::max);
+        assert!(max - min > 0.2, "no spread: {min}..{max}");
+    }
+
+    #[test]
+    fn stragglers_slow_the_round() {
+        let m = ComputeModel {
+            straggler_prob: 1.0,
+            straggler_slowdown: 10.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let node = NodeCompute { speed: 1.0 };
+        let (ns, straggled) = node.local_update_ns(&m, 2, &mut rng);
+        assert!(straggled);
+        assert_eq!(ns, secs_to_ns(2e-3 * 10.0));
+    }
+
+    #[test]
+    fn validate_catches_bad_fields() {
+        assert!(ComputeModel::default().validate().is_ok());
+        assert!(
+            ComputeModel { straggler_prob: -0.1, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            ComputeModel { straggler_slowdown: 0.5, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            ComputeModel { base_step_s: f64::NAN, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+    }
+}

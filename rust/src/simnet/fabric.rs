@@ -1,0 +1,444 @@
+//! The fabric: a virtual-time model of one DFL deployment.
+//!
+//! [`Fabric::simulate_round`] replays one communication round of the
+//! gossip protocol on the event queue: at round start every node
+//! broadcasts its mixing delta q2 (one message per up directed link,
+//! links serialize), runs its τ local steps on its own compute model,
+//! then broadcasts the local-update delta q1; a node is done when its
+//! own compute finished AND every surviving inbound message arrived, and
+//! the round closes at the straggler barrier — the latest node-done
+//! time. The engine keeps producing the learning dynamics; the fabric
+//! produces *when* each round happens, which is exactly the decomposition
+//! the paper's time-progression axis assumes (bits → seconds), extended
+//! to heterogeneous links, stragglers, and churn.
+//!
+//! Loss semantics: the fabric's per-link drop coins shape the timeline
+//! (a lost message still occupies its link — the sender transmitted it —
+//! but lands nowhere, so no arrival barrier); the *learning-level*
+//! effect of loss in the matrix engine stays broadcast-level
+//! (`EngineOptions::drop_prob`, which
+//! [`DflEngine::run_simulated`](crate::dfl::DflEngine::run_simulated)
+//! seeds from this fabric's link model), because the matrix form keeps
+//! one globally consistent estimate — the two layers draw independent
+//! coins at the same rate. An engine-dropped broadcast is still charged
+//! to the links (run_simulated substitutes the same-sized q1 message),
+//! so lossier networks never get *faster* timelines. The threaded
+//! runtime (`dfl::net`) drops per link for real. A zero entry in
+//! `q2_bytes`/`q1_bytes` means "nothing transmitted at all" (offline
+//! sender semantics at the caller's discretion).
+
+use std::collections::BTreeMap;
+
+use super::churn::ChurnState;
+use super::clock::{ns_to_secs, EventQueue, VirtualTime};
+use super::compute::NodeCompute;
+use super::link::Link;
+use super::NetworkConfig;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Timing record of one simulated round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTiming {
+    /// this round's duration in virtual seconds
+    pub round_secs: f64,
+    /// cumulative virtual clock at the end of the round
+    pub virtual_secs: f64,
+    /// mean time online nodes idled at the round barrier
+    pub straggler_wait_secs: f64,
+    /// nodes whose compute straggled this round
+    pub stragglers: usize,
+    /// messages lost in flight this round
+    pub messages_lost: u64,
+}
+
+/// Simulation events: a node finishing its τ local steps, or a message
+/// (phase 0 = q2 mixing delta, phase 1 = q1 local-update delta) landing.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    ComputeDone { node: usize },
+    Arrive { to: usize, phase: u8 },
+}
+
+/// A deployment's communication fabric in virtual time.
+pub struct Fabric {
+    cfg: NetworkConfig,
+    /// per-directed-link live state, keyed (from, to) over the base graph
+    links: BTreeMap<(usize, usize), Link>,
+    /// current adjacency (changes under churn)
+    adj: Vec<Vec<usize>>,
+    /// nodes currently offline (empty without churn)
+    offline: Vec<bool>,
+    compute: Vec<NodeCompute>,
+    churn: Option<ChurnState>,
+    queue: EventQueue<Ev>,
+    rng: Rng,
+    /// FNV-1a hash over the popped (time, kind, node) stream — the
+    /// deterministic-replay fingerprint the simnet tests compare
+    digest: u64,
+    /// per-round scratch: each node's done time
+    node_done: Vec<VirtualTime>,
+}
+
+impl Fabric {
+    /// Assemble the fabric for `topo` with per-link models drawn from
+    /// the config (a dedicated rng stream per concern keeps the build
+    /// deterministic and independent of call order).
+    pub fn new(cfg: &NetworkConfig, topo: &Topology, seed: u64) -> Fabric {
+        let mut root = Rng::new(seed ^ 0x51A7_ABBE);
+        let mut build_rng = root.split(1);
+        let n = topo.n;
+        let mut links = BTreeMap::new();
+        // BTreeMap iteration and sorted insertion keep per-link draws in
+        // (from, to) order regardless of adjacency-list layout
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for (i, nbrs) in topo.adj.iter().enumerate() {
+            for &j in nbrs {
+                edges.push((i, j));
+            }
+        }
+        edges.sort_unstable();
+        for (i, j) in edges {
+            let mut model = cfg.link.clone();
+            if cfg.link_hetero_spread > 0.0 {
+                let factor =
+                    1.0 + cfg.link_hetero_spread * build_rng.uniform();
+                model.bandwidth_bps /= factor;
+            }
+            links.insert((i, j), Link::new(model));
+        }
+        let compute =
+            NodeCompute::fleet(&cfg.compute, n, &mut root.split(2));
+        let churn = if cfg.churn.enabled() {
+            Some(ChurnState::new(cfg.churn.clone(), topo, root.split(3)))
+        } else {
+            None
+        };
+        Fabric {
+            cfg: cfg.clone(),
+            links,
+            adj: topo.adj.clone(),
+            offline: vec![false; n],
+            compute,
+            churn,
+            queue: EventQueue::new(),
+            rng: root.split(4),
+            digest: 0xcbf2_9ce4_8422_2325, // FNV-1a offset basis
+            node_done: vec![0; n],
+        }
+    }
+
+    /// Loss probability the engine's broadcast-level fault injection
+    /// should inherit (the old `drop_prob` knob, subsumed).
+    pub fn link_drop_prob(&self) -> f64 {
+        self.cfg.link.drop_prob
+    }
+
+    /// Lifetime count of processed simulation events.
+    pub fn events_processed(&self) -> u64 {
+        self.queue.processed()
+    }
+
+    /// Deterministic fingerprint of the full event stream so far.
+    pub fn event_digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Current virtual time in seconds.
+    pub fn virtual_secs(&self) -> f64 {
+        ns_to_secs(self.queue.now())
+    }
+
+    /// Run the churn process before round `k`; when the live graph
+    /// changed, returns the rebuilt topology (Metropolis weights, fresh
+    /// ζ) the engine must mix with from now on.
+    pub fn pre_round(&mut self, k: usize) -> Option<Topology> {
+        let churn = self.churn.as_mut()?;
+        let topo = churn.pre_round(k)?;
+        self.adj = topo.adj.clone();
+        for (&(i, j), link) in self.links.iter_mut() {
+            link.up = churn.link_up(i, j);
+        }
+        for (i, off) in self.offline.iter_mut().enumerate() {
+            *off = churn.offline().contains(&i);
+        }
+        Some(topo)
+    }
+
+    #[inline]
+    fn fold_digest(&mut self, t: VirtualTime, kind: u64, node: u64) {
+        const PRIME: u64 = 0x100_0000_01b3;
+        for x in [t, kind, node] {
+            self.digest = (self.digest ^ x).wrapping_mul(PRIME);
+        }
+    }
+
+    /// Simulate round `k`'s timeline. `q2_bytes[i]` / `q1_bytes[i]` are
+    /// node i's wire bytes for the two broadcast messages this round
+    /// (0 = that broadcast was suppressed). Advances the virtual clock
+    /// to the round barrier and returns the timing record.
+    pub fn simulate_round(
+        &mut self,
+        tau: usize,
+        q2_bytes: &[u64],
+        q1_bytes: &[u64],
+    ) -> RoundTiming {
+        let n = self.adj.len();
+        assert_eq!(q2_bytes.len(), n, "one q2 size per node");
+        assert_eq!(q1_bytes.len(), n, "one q1 size per node");
+        let t0 = self.queue.now();
+        let mut lost = 0u64;
+        let mut stragglers = 0usize;
+        self.node_done.iter_mut().for_each(|d| *d = t0);
+
+        // round start: q2 broadcasts depart and local compute begins
+        for i in 0..n {
+            if self.offline[i] {
+                continue;
+            }
+            if q2_bytes[i] > 0 {
+                lost += self.broadcast(i, t0, q2_bytes[i], 0);
+            }
+            let (dur, straggled) = self.compute[i].local_update_ns(
+                &self.cfg.compute,
+                tau,
+                &mut self.rng,
+            );
+            stragglers += usize::from(straggled);
+            self.queue.schedule(t0 + dur, Ev::ComputeDone { node: i });
+        }
+
+        // drain the queue: compute-done events trigger the q1 broadcast
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Ev::ComputeDone { node } => {
+                    self.fold_digest(t, 1, node as u64);
+                    self.node_done[node] = self.node_done[node].max(t);
+                    if q1_bytes[node] > 0 {
+                        lost += self.broadcast(node, t, q1_bytes[node], 1);
+                    }
+                }
+                Ev::Arrive { to, phase } => {
+                    self.fold_digest(t, 2 + phase as u64, to as u64);
+                    self.node_done[to] = self.node_done[to].max(t);
+                }
+            }
+        }
+
+        let round_end = self
+            .node_done
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(t0)
+            .max(t0);
+        let online: usize =
+            self.offline.iter().filter(|&&off| !off).count();
+        let wait_ns: u64 = self
+            .node_done
+            .iter()
+            .zip(self.offline.iter())
+            .filter(|(_, &off)| !off)
+            .map(|(&d, _)| round_end - d)
+            .sum();
+        self.queue.rebase(round_end);
+        RoundTiming {
+            round_secs: ns_to_secs(round_end - t0),
+            virtual_secs: ns_to_secs(round_end),
+            straggler_wait_secs: if online > 0 {
+                ns_to_secs(wait_ns) / online as f64
+            } else {
+                0.0
+            },
+            stragglers,
+            messages_lost: lost,
+        }
+    }
+
+    /// Send `bytes` from node `i` to every up neighbor starting at
+    /// `ready`; schedules arrivals for surviving messages and returns
+    /// how many were lost in flight.
+    fn broadcast(
+        &mut self,
+        i: usize,
+        ready: VirtualTime,
+        bytes: u64,
+        phase: u8,
+    ) -> u64 {
+        let mut lost = 0u64;
+        // adjacency lists are neighbor-sorted per Topology::build, so the
+        // rng draw order is deterministic
+        for ni in 0..self.adj[i].len() {
+            let j = self.adj[i][ni];
+            if self.offline[j] {
+                continue;
+            }
+            let Some(link) = self.links.get_mut(&(i, j)) else {
+                continue; // churn added no links, only removes: skip
+            };
+            if !link.up {
+                continue;
+            }
+            let (arrive, dropped) =
+                link.transmit(ready, bytes, &mut self.rng);
+            if dropped {
+                lost += 1;
+            } else {
+                self.queue.schedule(arrive, Ev::Arrive { to: j, phase });
+            }
+        }
+        lost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::simnet::compute::ComputeModel;
+    use crate::simnet::link::LinkModel;
+
+    fn net(bw: f64) -> NetworkConfig {
+        NetworkConfig {
+            link: LinkModel {
+                latency_s: 0.001,
+                bandwidth_bps: bw,
+                jitter_s: 0.0,
+                drop_prob: 0.0,
+            },
+            link_hetero_spread: 0.0,
+            compute: ComputeModel {
+                base_step_s: 1e-3,
+                ..Default::default()
+            },
+            churn: Default::default(),
+        }
+    }
+
+    fn fabric(bw: f64, n: usize) -> Fabric {
+        let topo = Topology::build(&TopologyKind::Ring, n, 0);
+        Fabric::new(&net(bw), &topo, 7)
+    }
+
+    #[test]
+    fn round_time_has_compute_and_transfer_floors() {
+        let mut f = fabric(1e6, 4);
+        let bytes = vec![12_500u64; 4]; // 0.1 s serialization at 1 Mbps
+        let t = f.simulate_round(4, &bytes, &bytes);
+        // per node: 4 ms compute; per link: two 0.1 s + 1 ms messages,
+        // q1 serializes behind q2 on the shared directed link
+        assert!(t.round_secs >= 0.2, "round {}", t.round_secs);
+        assert!(t.round_secs < 1.0);
+        assert_eq!(t.virtual_secs, t.round_secs);
+        assert_eq!(t.messages_lost, 0);
+    }
+
+    #[test]
+    fn clock_accumulates_across_rounds() {
+        let mut f = fabric(1e8, 6);
+        let bytes = vec![1000u64; 6];
+        let t1 = f.simulate_round(2, &bytes, &bytes);
+        let t2 = f.simulate_round(2, &bytes, &bytes);
+        assert!(t2.virtual_secs > t1.virtual_secs);
+        assert!(
+            (t2.virtual_secs - (t1.virtual_secs + t2.round_secs)).abs()
+                < 1e-12
+        );
+        assert!(f.events_processed() > 0);
+    }
+
+    #[test]
+    fn narrower_links_make_slower_rounds() {
+        let bytes = vec![50_000u64; 8];
+        let fast = fabric(1e8, 8).simulate_round(2, &bytes, &bytes);
+        let slow = fabric(1e6, 8).simulate_round(2, &bytes, &bytes);
+        assert!(
+            slow.round_secs > 2.0 * fast.round_secs,
+            "slow {} fast {}",
+            slow.round_secs,
+            fast.round_secs
+        );
+    }
+
+    #[test]
+    fn stragglers_create_barrier_wait() {
+        let topo = Topology::build(&TopologyKind::Ring, 8, 0);
+        let mut cfg = net(1e9);
+        cfg.compute = ComputeModel {
+            base_step_s: 1e-3,
+            hetero_spread: 0.0,
+            straggler_prob: 0.3,
+            straggler_slowdown: 20.0,
+        };
+        let mut f = Fabric::new(&cfg, &topo, 11);
+        let bytes = vec![100u64; 8];
+        let mut waited = 0.0;
+        let mut straggled = 0;
+        for _ in 0..20 {
+            let t = f.simulate_round(4, &bytes, &bytes);
+            waited += t.straggler_wait_secs;
+            straggled += t.stragglers;
+        }
+        assert!(straggled > 10, "stragglers never fired: {straggled}");
+        assert!(waited > 0.0, "stragglers caused no barrier wait");
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let bytes = vec![4096u64; 8];
+        let run = || {
+            let topo = Topology::build(&TopologyKind::Torus, 8, 0);
+            let mut cfg = net(1e6);
+            cfg.link.jitter_s = 0.002;
+            cfg.link.drop_prob = 0.1;
+            cfg.compute.hetero_spread = 0.7;
+            cfg.compute.straggler_prob = 0.2;
+            let mut f = Fabric::new(&cfg, &topo, 99);
+            let mut out = Vec::new();
+            for _ in 0..10 {
+                let t = f.simulate_round(4, &bytes, &bytes);
+                out.push((
+                    t.virtual_secs.to_bits(),
+                    t.straggler_wait_secs.to_bits(),
+                    t.messages_lost,
+                ));
+            }
+            (out, f.event_digest(), f.events_processed())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn suppressed_broadcasts_send_nothing() {
+        let mut f = fabric(1e6, 4);
+        let silent = vec![0u64; 4];
+        let t = f.simulate_round(1, &silent, &silent);
+        // only compute events: round = the 1 ms local step
+        assert!((t.round_secs - 1e-3).abs() < 1e-9, "{}", t.round_secs);
+        assert_eq!(f.events_processed(), 4);
+    }
+
+    #[test]
+    fn churned_fabric_reports_topology_changes() {
+        let topo = Topology::build(&TopologyKind::Torus, 16, 1);
+        let mut cfg = net(1e8);
+        cfg.churn = crate::simnet::ChurnConfig {
+            interval_rounds: 2,
+            link_fail_prob: 0.5,
+            link_heal_prob: 0.5,
+            node_leave_prob: 0.1,
+            node_return_prob: 0.5,
+        };
+        let mut f = Fabric::new(&cfg, &topo, 5);
+        let bytes = vec![1000u64; 16];
+        let mut changes = 0;
+        for k in 0..20 {
+            if let Some(t) = f.pre_round(k) {
+                changes += 1;
+                assert!(t.c.is_doubly_stochastic(1e-9));
+            }
+            let _ = f.simulate_round(2, &bytes, &bytes);
+        }
+        assert!(changes > 3, "churn produced only {changes} changes");
+    }
+}

@@ -1,0 +1,202 @@
+//! Per-directed-link transmission models.
+//!
+//! A [`LinkModel`] turns a message size into an occupancy interval: a
+//! message of `bytes` wire bytes holds the link for
+//! `latency + bytes·8/bandwidth (+ jitter)` virtual seconds, and links
+//! serialize — a second message queued on the same directed link waits
+//! for the first to clear ([`Link::transmit`] tracks `busy_until`). This
+//! is the store-and-forward fabric the paper's "time progression" axis
+//! assumes, generalized to heterogeneous rates and lossy links (the old
+//! `drop_prob` knob of `dfl::net` is one field of this model now).
+
+use super::clock::{secs_to_ns, VirtualTime};
+use crate::util::rng::Rng;
+
+/// A directed link's quality-of-service parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// one-way propagation delay in seconds
+    pub latency_s: f64,
+    /// serialization rate in bits per second
+    pub bandwidth_bps: f64,
+    /// uniform extra delay in [0, jitter_s) drawn per message
+    pub jitter_s: f64,
+    /// probability a message is lost (it still occupies the link)
+    pub drop_prob: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        Self::ideal()
+    }
+}
+
+impl LinkModel {
+    /// Zero-latency, paper-rate (100 Mbps), lossless link.
+    pub fn ideal() -> Self {
+        LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: 100e6,
+            jitter_s: 0.0,
+            drop_prob: 0.0,
+        }
+    }
+
+    /// Ideal link with a drop probability — the exact semantics of the
+    /// old `NetOptions::drop_prob` knob.
+    pub fn lossy(drop_prob: f64) -> Self {
+        LinkModel { drop_prob, ..Self::ideal() }
+    }
+
+    /// Transmission duration for `bytes` wire bytes, drawing jitter from
+    /// `rng` (one uniform per message when jitter is enabled, none
+    /// otherwise — keeps lossless/jitterless runs on the same rng
+    /// stream as before).
+    pub fn transfer_ns(&self, bytes: u64, rng: &mut Rng) -> VirtualTime {
+        let mut secs = self.latency_s + bytes as f64 * 8.0 / self.bandwidth_bps;
+        if self.jitter_s > 0.0 {
+            secs += rng.uniform() * self.jitter_s;
+        }
+        secs_to_ns(secs)
+    }
+
+    /// Draw the per-message loss coin (no rng consumed when lossless).
+    pub fn dropped(&self, rng: &mut Rng) -> bool {
+        self.drop_prob > 0.0 && rng.uniform() < self.drop_prob
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.latency_s >= 0.0 && self.latency_s.is_finite()) {
+            return Err("link latency_s must be finite and >= 0".into());
+        }
+        if !(self.bandwidth_bps > 0.0 && self.bandwidth_bps.is_finite()) {
+            return Err("link bandwidth_bps must be finite and > 0".into());
+        }
+        if !(self.jitter_s >= 0.0 && self.jitter_s.is_finite()) {
+            return Err("link jitter_s must be finite and >= 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.drop_prob) {
+            return Err("link drop_prob must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+/// One directed link's live state inside the fabric.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub model: LinkModel,
+    /// the link is transmitting until this virtual time
+    pub busy_until: VirtualTime,
+    /// whether churn has (temporarily) failed this link
+    pub up: bool,
+}
+
+impl Link {
+    pub fn new(model: LinkModel) -> Self {
+        Link { model, busy_until: 0, up: true }
+    }
+
+    /// Queue a message of `bytes` at earliest-start `ready`; returns the
+    /// arrival time and whether the message was lost in flight. Lost
+    /// messages still occupy the link (the sender transmitted them).
+    pub fn transmit(
+        &mut self,
+        ready: VirtualTime,
+        bytes: u64,
+        rng: &mut Rng,
+    ) -> (VirtualTime, bool) {
+        let start = ready.max(self.busy_until);
+        let arrive = start + self.model.transfer_ns(bytes, rng);
+        self.busy_until = arrive;
+        let lost = self.model.dropped(rng);
+        (arrive, lost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_is_latency_plus_serialization() {
+        let m = LinkModel {
+            latency_s: 0.010,
+            bandwidth_bps: 1e6,
+            jitter_s: 0.0,
+            drop_prob: 0.0,
+        };
+        let mut rng = Rng::new(0);
+        // 12_500 bytes = 100_000 bits = 0.1 s at 1 Mbps, + 10 ms latency
+        let ns = m.transfer_ns(12_500, &mut rng);
+        assert_eq!(ns, secs_to_ns(0.110));
+    }
+
+    #[test]
+    fn links_serialize_back_to_back_messages() {
+        let mut link = Link::new(LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: 8e6, // 1 byte per microsecond
+            jitter_s: 0.0,
+            drop_prob: 0.0,
+        });
+        let mut rng = Rng::new(1);
+        let (a1, _) = link.transmit(0, 1000, &mut rng);
+        let (a2, _) = link.transmit(0, 1000, &mut rng);
+        assert_eq!(a1, secs_to_ns(1000e-6));
+        // second message waits for the first to clear the link
+        assert_eq!(a2, 2 * a1);
+        assert_eq!(link.busy_until, a2);
+    }
+
+    #[test]
+    fn jitter_draws_are_bounded_and_deterministic() {
+        let m = LinkModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1e9,
+            jitter_s: 0.001,
+            drop_prob: 0.0,
+        };
+        let base = {
+            let mut rng = Rng::new(7);
+            m.transfer_ns(100, &mut rng)
+        };
+        let again = {
+            let mut rng = Rng::new(7);
+            m.transfer_ns(100, &mut rng)
+        };
+        assert_eq!(base, again, "same seed, same jitter");
+        let floor = secs_to_ns(100.0 * 8.0 / 1e9);
+        assert!(base >= floor && base <= floor + secs_to_ns(0.001));
+    }
+
+    #[test]
+    fn drop_probability_extremes() {
+        let mut rng = Rng::new(3);
+        assert!(!LinkModel::ideal().dropped(&mut rng));
+        let always = LinkModel::lossy(1.0);
+        for _ in 0..16 {
+            assert!(always.dropped(&mut rng));
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_fields() {
+        assert!(LinkModel::ideal().validate().is_ok());
+        assert!(
+            LinkModel { bandwidth_bps: 0.0, ..LinkModel::ideal() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            LinkModel { drop_prob: 1.5, ..LinkModel::ideal() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            LinkModel { latency_s: -1.0, ..LinkModel::ideal() }
+                .validate()
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! simnet — a deterministic discrete-event communication-fabric
+//! simulator for DFL training runs.
+//!
+//! The paper's headline claim is communication efficiency measured in
+//! bits *and* in time progression; counting bits over ideal static links
+//! only covers the first axis. This subsystem models the second:
+//!
+//! * [`clock`] — binary-heap event queue over integer virtual
+//!   nanoseconds with stable `(time, seq)` ordering;
+//! * [`link`] — per-directed-link latency + bandwidth + jitter + drop
+//!   models, with message serialization per link;
+//! * [`compute`] — heterogeneous per-node τ-step SGD durations and
+//!   transient stragglers;
+//! * [`churn`] — nodes leave/return and links fail/heal, rebuilding the
+//!   Metropolis confusion matrix (and ζ) on the live subgraph;
+//! * [`fabric`] — ties them together: one [`Fabric`] per run, one
+//!   [`fabric::RoundTiming`] per simulated round.
+//!
+//! Entry points: [`crate::dfl::DflEngine::run_simulated`] wraps the
+//! matrix engine's rounds in a fabric (filling the
+//! `virtual_secs` / `straggler_wait_secs` metrics columns), and the
+//! `fig-time` CLI / `experiments::fig_time` driver reproduces the
+//! paper's loss-vs-time comparison on a bandwidth-constrained torus.
+//! Everything is a pure function of (seed, config): two identical runs
+//! produce byte-identical logs and event digests
+//! (`rust/tests/simnet_determinism.rs`).
+
+pub mod churn;
+pub mod clock;
+pub mod compute;
+pub mod fabric;
+pub mod link;
+
+pub use churn::{ChurnConfig, ChurnState};
+pub use clock::{ns_to_secs, secs_to_ns, EventQueue, VirtualTime};
+pub use compute::{ComputeModel, NodeCompute};
+pub use fabric::{Fabric, RoundTiming};
+pub use link::{Link, LinkModel};
+
+use crate::config::json::Json;
+use crate::config::ConfigError;
+
+/// The `network:` config section: everything the fabric needs. Absent
+/// section = ideal instantaneous network (the pre-simnet behavior).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// base model applied to every directed link
+    pub link: LinkModel,
+    /// per-link bandwidth divisor is uniform in [1, 1 + spread]
+    /// (heterogeneous links; 0 = uniform fabric)
+    pub link_hetero_spread: f64,
+    pub compute: ComputeModel,
+    pub churn: ChurnConfig,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            link: LinkModel::ideal(),
+            link_hetero_spread: 0.0,
+            compute: ComputeModel::default(),
+            churn: ChurnConfig::default(),
+        }
+    }
+}
+
+impl NetworkConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |m: String| ConfigError(format!("network: {m}"));
+        self.link.validate().map_err(err)?;
+        if !(self.link_hetero_spread >= 0.0
+            && self.link_hetero_spread.is_finite())
+        {
+            return Err(err(
+                "link_hetero_spread must be finite and >= 0".into(),
+            ));
+        }
+        self.compute.validate().map_err(err)?;
+        self.churn.validate().map_err(err)?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("latency_s", Json::num(self.link.latency_s)),
+            ("bandwidth_bps", Json::num(self.link.bandwidth_bps)),
+            ("jitter_s", Json::num(self.link.jitter_s)),
+            ("drop_prob", Json::num(self.link.drop_prob)),
+            ("link_hetero_spread", Json::num(self.link_hetero_spread)),
+            (
+                "compute",
+                Json::obj(vec![
+                    ("base_step_s", Json::num(self.compute.base_step_s)),
+                    (
+                        "hetero_spread",
+                        Json::num(self.compute.hetero_spread),
+                    ),
+                    (
+                        "straggler_prob",
+                        Json::num(self.compute.straggler_prob),
+                    ),
+                    (
+                        "straggler_slowdown",
+                        Json::num(self.compute.straggler_slowdown),
+                    ),
+                ]),
+            ),
+            (
+                "churn",
+                Json::obj(vec![
+                    (
+                        "interval_rounds",
+                        Json::num(self.churn.interval_rounds as f64),
+                    ),
+                    (
+                        "link_fail_prob",
+                        Json::num(self.churn.link_fail_prob),
+                    ),
+                    (
+                        "link_heal_prob",
+                        Json::num(self.churn.link_heal_prob),
+                    ),
+                    (
+                        "node_leave_prob",
+                        Json::num(self.churn.node_leave_prob),
+                    ),
+                    (
+                        "node_return_prob",
+                        Json::num(self.churn.node_return_prob),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let d = NetworkConfig::default();
+        let link = LinkModel {
+            latency_s: j.get_f64("latency_s").unwrap_or(d.link.latency_s),
+            bandwidth_bps: j
+                .get_f64("bandwidth_bps")
+                .unwrap_or(d.link.bandwidth_bps),
+            jitter_s: j.get_f64("jitter_s").unwrap_or(d.link.jitter_s),
+            drop_prob: j.get_f64("drop_prob").unwrap_or(d.link.drop_prob),
+        };
+        let compute = match j.get("compute") {
+            Some(cj) => ComputeModel {
+                base_step_s: cj
+                    .get_f64("base_step_s")
+                    .unwrap_or(d.compute.base_step_s),
+                hetero_spread: cj
+                    .get_f64("hetero_spread")
+                    .unwrap_or(d.compute.hetero_spread),
+                straggler_prob: cj
+                    .get_f64("straggler_prob")
+                    .unwrap_or(d.compute.straggler_prob),
+                straggler_slowdown: cj
+                    .get_f64("straggler_slowdown")
+                    .unwrap_or(d.compute.straggler_slowdown),
+            },
+            None => d.compute.clone(),
+        };
+        let churn = match j.get("churn") {
+            Some(cj) => ChurnConfig {
+                interval_rounds: cj
+                    .get_usize("interval_rounds")
+                    .unwrap_or(d.churn.interval_rounds),
+                link_fail_prob: cj
+                    .get_f64("link_fail_prob")
+                    .unwrap_or(d.churn.link_fail_prob),
+                link_heal_prob: cj
+                    .get_f64("link_heal_prob")
+                    .unwrap_or(d.churn.link_heal_prob),
+                node_leave_prob: cj
+                    .get_f64("node_leave_prob")
+                    .unwrap_or(d.churn.node_leave_prob),
+                node_return_prob: cj
+                    .get_f64("node_return_prob")
+                    .unwrap_or(d.churn.node_return_prob),
+            },
+            None => d.churn.clone(),
+        };
+        let cfg = NetworkConfig {
+            link,
+            link_hetero_spread: j
+                .get_f64("link_hetero_spread")
+                .unwrap_or(d.link_hetero_spread),
+            compute,
+            churn,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_ideal() {
+        let d = NetworkConfig::default();
+        d.validate().unwrap();
+        assert_eq!(d.link, LinkModel::ideal());
+        assert!(!d.churn.enabled());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = NetworkConfig {
+            link: LinkModel {
+                latency_s: 0.005,
+                bandwidth_bps: 2e6,
+                jitter_s: 0.001,
+                drop_prob: 0.05,
+            },
+            link_hetero_spread: 0.5,
+            compute: ComputeModel {
+                base_step_s: 2e-3,
+                hetero_spread: 0.4,
+                straggler_prob: 0.1,
+                straggler_slowdown: 6.0,
+            },
+            churn: ChurnConfig {
+                interval_rounds: 5,
+                link_fail_prob: 0.1,
+                link_heal_prob: 0.6,
+                node_leave_prob: 0.02,
+                node_return_prob: 0.7,
+            },
+        };
+        let text = cfg.to_json().to_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = NetworkConfig::from_json(&parsed).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"bandwidth_bps": 1000000.0}"#).unwrap();
+        let cfg = NetworkConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.link.bandwidth_bps, 1e6);
+        assert_eq!(cfg.link.latency_s, 0.0);
+        assert_eq!(cfg.compute, ComputeModel::default());
+    }
+
+    #[test]
+    fn invalid_sections_rejected() {
+        let j = Json::parse(r#"{"drop_prob": 2.0}"#).unwrap();
+        assert!(NetworkConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"compute": {"straggler_slowdown": 0.1}}"#,
+        )
+        .unwrap();
+        assert!(NetworkConfig::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"churn": {"link_fail_prob": -0.5}}"#).unwrap();
+        assert!(NetworkConfig::from_json(&j).is_err());
+    }
+}

@@ -43,6 +43,7 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1,
         parallelism,
+        network: None,
     }
 }
 

@@ -119,6 +119,37 @@ fn train_from_config_file() {
 }
 
 #[test]
+fn train_simulated_reports_virtual_time() {
+    let bin = require_bin!();
+    let out = Command::new(&bin)
+        .args([
+            "train",
+            "--nodes", "4",
+            "--rounds", "3",
+            "--tau", "2",
+            "--quantizer", "qsgd",
+            "--s", "8",
+            "--dataset", "blobs",
+            "--train", "120",
+            "--test", "40",
+            "--dim", "8",
+            "--classes", "3",
+            "--lr", "0.1",
+            "--net-bandwidth-bps", "1e6",
+            "--net-latency-s", "0.002",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}",
+            String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // the config echo contains the network section and the summary the
+    // simnet line
+    assert!(text.contains("\"network\""), "{text}");
+    assert!(text.contains("simnet: virtual time"), "{text}");
+}
+
+#[test]
 fn unknown_quantizer_fails_with_message() {
     let bin = require_bin!();
     let out = Command::new(&bin)

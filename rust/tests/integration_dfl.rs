@@ -30,6 +30,7 @@ fn blob_cfg() -> ExperimentConfig {
         link_bps: 100e6,
         eval_every: 1,
         parallelism: lmdfl::config::Parallelism::Auto,
+        network: None,
     }
 }
 
@@ -61,8 +62,7 @@ fn threaded_and_matrix_engines_agree_qualitatively() {
     // so losses should match closely; allow small tolerance)
     let cfg = blob_cfg();
     let m = Trainer::build(&cfg).unwrap().run().unwrap();
-    let t = Trainer::run_threaded(
-        &cfg, NetOptions { drop_prob: 0.0, eval_every: 1 }).unwrap();
+    let t = Trainer::run_threaded(&cfg, NetOptions::default()).unwrap();
     let lm = m.last_loss().unwrap();
     let lt = t.last_loss().unwrap();
     assert!(
@@ -123,10 +123,10 @@ fn coarse_quantization_converges_but_slower_or_noisier() {
 #[test]
 fn dropped_messages_degrade_gracefully_threaded() {
     let cfg = blob_cfg();
-    let clean = Trainer::run_threaded(
-        &cfg, NetOptions { drop_prob: 0.0, eval_every: 1 }).unwrap();
-    let lossy = Trainer::run_threaded(
-        &cfg, NetOptions { drop_prob: 0.3, eval_every: 1 }).unwrap();
+    let clean =
+        Trainer::run_threaded(&cfg, NetOptions::default()).unwrap();
+    let lossy =
+        Trainer::run_threaded(&cfg, NetOptions::lossy(0.3)).unwrap();
     assert!(lossy.last_loss().unwrap().is_finite());
     // lossy should still learn
     assert!(

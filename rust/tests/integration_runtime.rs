@@ -225,6 +225,7 @@ fn dfl_training_on_hlo_backend_converges() {
         link_bps: 100e6,
         eval_every: 1,
         parallelism: Parallelism::Auto,
+        network: None,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);
