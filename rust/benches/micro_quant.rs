@@ -5,6 +5,7 @@
 //!   cargo bench --bench micro_quant
 
 use lmdfl::bench::{black_box, Bencher};
+use lmdfl::quant::kernels;
 use lmdfl::quant::{
     build_quantizer, codec, AlqQuantizer, LloydMaxQuantizer,
     NaturalQuantizer, QsgdQuantizer, Quantizer,
@@ -14,6 +15,7 @@ use lmdfl::util::rng::Rng;
 fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::new(0);
+    println!("avx2 kernels: {}", kernels::avx2_enabled());
 
     for &d in &[10_000usize, 100_000, 1_000_000] {
         let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
@@ -84,6 +86,112 @@ fn main() {
         lm.quantize_into(&v, &mut rng, &mut msg);
         black_box(&msg);
     });
+
+    // ---- batch kernels vs the in-tree scalar reference -----------------
+    // (assign / pack / unpack / dequantize-accumulate; the CI bench-smoke
+    // regression gate compares the d = 1M pack rows)
+    println!("--- batch kernels vs scalar reference ---");
+    for &d in &[10_000usize, 1_000_000] {
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let norm = lmdfl::util::stats::l2_norm(&v) as f32;
+
+        // Lloyd-Max-shaped deterministic assignment
+        let mut r = Vec::new();
+        kernels::normalized_magnitudes_into(&v, norm, &mut r);
+        let r_max = r.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
+        let s = 64usize;
+        let inner: Vec<f32> =
+            (1..s).map(|j| j as f32 / s as f32 * r_max).collect();
+        const BINS: usize = 8192;
+        let mut lut = Vec::new();
+        kernels::build_count_lut(&inner, r_max, BINS, &mut lut);
+        let scale = BINS as f32 / r_max;
+        let mut idx = Vec::new();
+        b.run_elems(&format!("kernel lm_assign d={d}"), d as u64, || {
+            kernels::assign_lut_slice(&inner, &lut, scale, &r, &mut idx);
+            black_box(&idx);
+        });
+        b.run_elems(&format!("scalar lm_assign d={d}"), d as u64, || {
+            kernels::reference::assign_lut_slice(
+                &inner, &lut, scale, &r, &mut idx,
+            );
+            black_box(&idx);
+        });
+
+        // pack / unpack at s = 16 (4-bit indices + 1 sign bit per elem)
+        let mut rng2 = Rng::new(1);
+        let vals: Vec<u32> =
+            (0..d).map(|_| (rng2.next_u64() & 0xF) as u32).collect();
+        let signs: Vec<bool> =
+            (0..d).map(|_| rng2.next_u64() & 1 == 1).collect();
+        let mut buf: Vec<u8> = Vec::new();
+        b.run_elems(&format!("kernel pack s=16 d={d}"), d as u64, || {
+            buf.clear();
+            let st = kernels::pack_bools(&signs, 0, 0, &mut buf);
+            let st = kernels::pack_values(&vals, 4, st.0, st.1, &mut buf);
+            if st.1 > 0 {
+                buf.push(st.0 as u8);
+            }
+            black_box(&buf);
+        });
+        let packed = buf.clone();
+        b.run_elems(&format!("scalar pack s=16 d={d}"), d as u64, || {
+            buf.clear();
+            let st =
+                kernels::reference::pack_bools(&signs, 0, 0, &mut buf);
+            let st = kernels::reference::pack_values(
+                &vals, 4, st.0, st.1, &mut buf,
+            );
+            if st.1 > 0 {
+                buf.push(st.0 as u8);
+            }
+            black_box(&buf);
+        });
+        let mut out_signs = Vec::new();
+        let mut out_vals = Vec::new();
+        b.run_elems(&format!("kernel unpack s=16 d={d}"), d as u64, || {
+            out_signs.clear();
+            out_vals.clear();
+            let st = kernels::unpack_bools(
+                &packed, 0, 0, 0, d, &mut out_signs,
+            )
+            .unwrap();
+            kernels::unpack_values(
+                &packed, st.0, st.1, st.2, 4, d, &mut out_vals,
+            )
+            .unwrap();
+            black_box((&out_signs, &out_vals));
+        });
+        b.run_elems(&format!("scalar unpack s=16 d={d}"), d as u64, || {
+            out_signs.clear();
+            out_vals.clear();
+            let st = kernels::reference::unpack_bools(
+                &packed, 0, 0, 0, d, &mut out_signs,
+            )
+            .unwrap();
+            kernels::reference::unpack_values(
+                &packed, st.0, st.1, st.2, 4, d, &mut out_vals,
+            )
+            .unwrap();
+            black_box((&out_signs, &out_vals));
+        });
+
+        // fused dequantize-accumulate (gossip estimate recursion)
+        let levels: Vec<f32> = (0..16).map(|j| j as f32 / 15.0).collect();
+        let mut acc = vec![0.0f32; d];
+        b.run_elems(&format!("kernel dequant_acc d={d}"), d as u64, || {
+            kernels::dequantize_accumulate(
+                norm, &signs, &vals, &levels, &mut acc,
+            );
+            black_box(&acc);
+        });
+        b.run_elems(&format!("scalar dequant_acc d={d}"), d as u64, || {
+            kernels::reference::dequantize_accumulate(
+                norm, &signs, &vals, &levels, &mut acc,
+            );
+            black_box(&acc);
+        });
+    }
 
     b.finish("micro_quant");
 }

@@ -25,8 +25,13 @@
 //!
 //! # Round execution model (parallel, allocation-free)
 //!
-//! A round is three fork-join phases over a [`crate::util::pool`] worker
-//! pool sized by `cfg.parallelism` (`auto` / `off` / N):
+//! A round is three fork-join phases over a [`crate::util::pool`]
+//! **persistent** worker pool sized by `cfg.parallelism`
+//! (`auto` / `off` / N) — the workers are spawned once per engine and
+//! parked between phases, so a round costs condvar hand-offs, not
+//! thread spawns. The per-element inner loops (delta, quantize,
+//! dequantize-apply, mixing) run as the batch kernels of
+//! [`crate::quant::kernels`]:
 //!
 //! 1. **per-node phase** — quantized mixing-delta broadcast (step A),
 //!    τ local-SGD steps (step B), the doubly-adaptive level update
@@ -347,7 +352,6 @@ impl DflEngine {
         let tau = self.cfg.tau;
         let batch = self.cfg.batch_size;
         let drop_prob = self.opts.drop_prob;
-        let param_count = self.param_count;
 
         // ---- parallel per-node phase: steps A-D -------------------------
         // Each node touches only its own state; workers process contiguous
@@ -364,9 +368,11 @@ impl DflEngine {
                 let dropped = drop_prob > 0.0
                     && node.rng.uniform() < drop_prob;
                 if !dropped {
-                    for j in 0..param_count {
-                        node.diff[j] = node.params[j] - node.hat[j];
-                    }
+                    crate::quant::kernels::sub_into(
+                        &mut node.diff,
+                        &node.params,
+                        &node.hat,
+                    );
                     crate::quant::quantize_damped_into(
                         node.quantizer.as_mut(),
                         &node.diff,
@@ -376,9 +382,10 @@ impl DflEngine {
                     );
                     node.out.q2_bits = node.msg.paper_bits();
                     node.out.q2_wire_bytes = node.msg.wire_bits() / 8;
-                    for j in 0..param_count {
-                        node.hat[j] += node.dq[j];
-                    }
+                    crate::quant::kernels::add_assign(
+                        &mut node.hat,
+                        &node.dq,
+                    );
                 }
                 // (dropped: receivers keep the stale estimate)
 
@@ -408,9 +415,11 @@ impl DflEngine {
 
                 // step D: local-update delta q1 (Alg. 2 step 8)
                 // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
-                for j in 0..param_count {
-                    node.diff[j] = node.params[j] - node.hat[j];
-                }
+                crate::quant::kernels::sub_into(
+                    &mut node.diff,
+                    &node.params,
+                    &node.hat,
+                );
                 let omega = crate::quant::quantize_damped_into(
                     node.quantizer.as_mut(),
                     &node.diff,
@@ -421,9 +430,7 @@ impl DflEngine {
                 node.out.q1_bits = node.msg.paper_bits();
                 node.out.q1_wire_bytes = node.msg.wire_bits() / 8;
                 node.out.distortion = omega;
-                for j in 0..param_count {
-                    node.hat[j] += node.dq[j];
-                }
+                crate::quant::kernels::add_assign(&mut node.hat, &node.dq);
                 Ok(())
             },
         )?;
@@ -457,20 +464,18 @@ impl DflEngine {
                 if w == 0.0 {
                     continue;
                 }
-                let hat = &nodes[j].hat;
-                for (o, h) in out.iter_mut().zip(hat.iter()) {
-                    *o += w * h;
-                }
+                crate::quant::kernels::axpy(out, w, &nodes[j].hat);
             }
             Ok(())
         })?;
         // Phase 2: apply the consensus correction.
         let mix_buf = &self.mix_buf;
         self.pool.run(&mut self.nodes, |i, node| {
-            let mix = &mix_buf[i];
-            for j in 0..param_count {
-                node.params[j] += mix[j] - node.hat[j];
-            }
+            crate::quant::kernels::add_delta(
+                &mut node.params,
+                &mix_buf[i],
+                &node.hat,
+            );
             Ok(())
         })?;
 

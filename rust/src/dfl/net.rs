@@ -257,9 +257,9 @@ pub fn run_threaded(
                                              wire_bits: &mut u64,
                                              paper_bits: &mut u64|
                          -> anyhow::Result<()> {
-                            for j in 0..param_count {
-                                diff[j] = params[j] - hat_self[j];
-                            }
+                            crate::quant::kernels::sub_into(
+                                &mut diff, params, hat_self,
+                            );
                             crate::quant::quantize_damped_into(
                                 quantizer.as_mut(), &diff, rng, &mut dq,
                                 &mut msg_out);
@@ -290,10 +290,11 @@ pub fn run_threaded(
                                     bytes: payload,
                                 });
                             }
-                            q.dequantize_into(&mut dq);
-                            for j in 0..param_count {
-                                hat_self[j] += dq[j];
-                            }
+                            // re-dequantize from the (damped) wire
+                            // message fused with the estimate update, so
+                            // sender and receivers apply byte-identical
+                            // deltas
+                            q.dequantize_accumulate_into(hat_self);
                             for (ni, &from) in
                                 neighbors.iter().enumerate()
                             {
@@ -313,10 +314,8 @@ pub fn run_threaded(
                                     },
                                     &mut msg_in,
                                 )?;
-                                msg_in.dequantize_into(&mut dq);
-                                for j in 0..param_count {
-                                    hat[ni][j] += dq[j];
-                                }
+                                msg_in
+                                    .dequantize_accumulate_into(&mut hat[ni]);
                             }
                             Ok(())
                         };
@@ -361,18 +360,17 @@ pub fn run_threaded(
                         // ---- phase 3: mixing ---------------------------
                         // x += Σ c_ji x̂_j − x̂_self (consensus correction
                         // on true params; = X̂C when estimates are exact)
-                        for j in 0..param_count {
-                            mix[j] = self_weight * hat_self[j];
-                        }
+                        crate::quant::kernels::scaled_into(
+                            &mut mix, self_weight, &hat_self,
+                        );
                         for (ni, _) in neighbors.iter().enumerate() {
-                            let w = weights[ni];
-                            for j in 0..param_count {
-                                mix[j] += w * hat[ni][j];
-                            }
+                            crate::quant::kernels::axpy(
+                                &mut mix, weights[ni], &hat[ni],
+                            );
                         }
-                        for j in 0..param_count {
-                            params[j] += mix[j] - hat_self[j];
-                        }
+                        crate::quant::kernels::add_delta(
+                            &mut params, &mix, &hat_self,
+                        );
 
                         // ---- report -----------------------------------
                         let snapshot = if k % eval_every == 0 {

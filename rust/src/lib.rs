@@ -26,14 +26,18 @@
 //! ## Parallel round execution
 //!
 //! The matrix engine partitions its per-node round phases across a
-//! scoped-thread worker pool ([`util::pool`]) sized by the
-//! `parallelism` config knob — `"auto"` (default: one worker per
-//! hardware thread), `"off"` (sequential), or a fixed worker count; on
-//! the CLI: `lmdfl train --parallelism auto|off|N`. The parallel path is
-//! **bit-identical** to the sequential one for a fixed seed (node
-//! partitioned work, node-order reductions; enforced by
-//! `rust/tests/engine_parallel.rs`), so it is purely a throughput knob —
-//! `cargo bench --bench micro_runtime` reports the speedup.
+//! persistent parked worker pool ([`util::pool`]; spawned once per
+//! engine, woken per phase) sized by the `parallelism` config knob —
+//! `"auto"` (default: one worker per hardware thread), `"off"`
+//! (sequential), or a fixed worker count; on the CLI: `lmdfl train
+//! --parallelism auto|off|N`. The per-element inner loops run as the
+//! batch kernels of [`quant::kernels`] (autovectorized, with
+//! runtime-gated AVX2 fast paths). Both are **bit-identical** to the
+//! sequential/scalar reference for a fixed seed (node-partitioned
+//! work, node-order reductions, IEEE-exact kernels; enforced by
+//! `rust/tests/engine_parallel.rs`), so they are purely throughput
+//! knobs — `cargo bench --bench micro_runtime` and `--bench
+//! micro_quant` report the speedups.
 //!
 //! ## Virtual-time simulation (simnet)
 //!

@@ -16,6 +16,9 @@
 use super::{decompose, QuantizedVector, Quantizer};
 use crate::util::rng::Rng;
 
+/// LUT resolution for the batch bracket locator of `quantize_into`.
+const LUT_BINS: usize = 1024;
+
 #[derive(Clone, Debug)]
 pub struct AlqQuantizer {
     s: usize,
@@ -23,6 +26,12 @@ pub struct AlqQuantizer {
     levels: Vec<f32>,
     /// coordinate-descent sweeps per quantize() call
     pub sweeps_per_call: usize,
+    // ---- batch-path scratch (quantize_into allocates nothing) ----------
+    r_scratch: Vec<f32>,
+    sorted_scratch: Vec<f32>,
+    prefix_scratch: Vec<f64>,
+    cnt_scratch: Vec<u32>,
+    lut: Vec<u32>,
 }
 
 impl AlqQuantizer {
@@ -32,6 +41,11 @@ impl AlqQuantizer {
             s,
             levels: Self::uniform_table(s),
             sweeps_per_call: 1,
+            r_scratch: Vec::new(),
+            sorted_scratch: Vec::new(),
+            prefix_scratch: Vec::new(),
+            cnt_scratch: Vec::new(),
+            lut: Vec::new(),
         }
     }
 
@@ -144,6 +158,89 @@ impl Quantizer for AlqQuantizer {
             levels: t.clone(),
             implied_table: false,
         }
+    }
+
+    /// Allocation-free batch path: identical sweep trajectory and the
+    /// same `rng` draw sequence as [`quantize`] (exact level hits draw
+    /// nothing). The magnitude prepass and the bracket location run as
+    /// slice kernels ([`super::kernels::assign_lut_slice`] counts levels
+    /// below each element — the reference binary search's Ok/Err split
+    /// on the strictly sorted table); the conditional stochastic
+    /// epilogue stays per-element.
+    fn quantize_into(
+        &mut self,
+        v: &[f32],
+        rng: &mut Rng,
+        out: &mut QuantizedVector,
+    ) {
+        let norm = super::norm_and_signs_into(v, &mut out.negative);
+        out.norm = norm;
+        let mut r = std::mem::take(&mut self.r_scratch);
+        super::kernels::normalized_magnitudes_into(v, norm, &mut r);
+        // coordinate descent on the empirical distribution — exactly the
+        // reference's sort + prefix sums + sweeps, on reused scratch
+        if norm > 0.0 {
+            let mut sorted = std::mem::take(&mut self.sorted_scratch);
+            sorted.clear();
+            sorted.extend_from_slice(&r);
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut prefix = std::mem::take(&mut self.prefix_scratch);
+            prefix.clear();
+            prefix.reserve(sorted.len() + 1);
+            prefix.push(0.0f64);
+            let mut acc = 0.0f64;
+            for &x in &sorted {
+                acc += x as f64;
+                prefix.push(acc);
+            }
+            for _ in 0..self.sweeps_per_call {
+                self.sweep(&sorted, &prefix);
+            }
+            self.sorted_scratch = sorted;
+            self.prefix_scratch = prefix;
+        }
+        // assignment clamps each magnitude like the reference does
+        for x in r.iter_mut() {
+            *x = x.clamp(0.0, 1.0);
+        }
+        super::kernels::build_count_lut(
+            &self.levels,
+            1.0,
+            LUT_BINS,
+            &mut self.lut,
+        );
+        super::kernels::assign_lut_slice(
+            &self.levels,
+            &self.lut,
+            LUT_BINS as f32,
+            &r,
+            &mut self.cnt_scratch,
+        );
+        let t = &self.levels;
+        out.indices.clear();
+        out.indices.reserve(v.len());
+        for (&ri, &c) in r.iter().zip(&self.cnt_scratch) {
+            let c = c as usize;
+            let idx = if c < t.len() && t[c] == ri {
+                c as u32
+            } else {
+                // t[c-1] < ri < t[c]; c >= 1 because ri >= 0 = t[0]
+                let j = (c - 1).min(self.s - 2);
+                let lo = t[j];
+                let hi = t[j + 1];
+                let p_hi = ((ri - lo) / (hi - lo)).clamp(0.0, 1.0);
+                if rng.uniform_f32() < p_hi {
+                    (j + 1) as u32
+                } else {
+                    j as u32
+                }
+            };
+            out.indices.push(idx);
+        }
+        self.r_scratch = r;
+        out.levels.clear();
+        out.levels.extend_from_slice(t);
+        out.implied_table = false;
     }
 }
 

@@ -25,6 +25,12 @@ pub fn full_precision_bits(d: usize) -> u64 {
     d as u64 * 32 + 32
 }
 
+/// Bytes needed to hold a `bits`-long stream (padded to a whole byte) —
+/// the codec's exact preallocation size for one encoded message.
+pub fn stream_bytes(bits: u64) -> usize {
+    ((bits + 7) / 8) as usize
+}
+
 /// Bits-per-element for the quantized message (paper Fig. 8c/f series is
 /// ⌈log₂ s_k⌉).
 pub fn bits_per_element(s: usize) -> u32 {
@@ -70,5 +76,14 @@ mod tests {
     fn monotone_in_s_and_d() {
         assert!(c_s(100, 4) <= c_s(100, 16));
         assert!(c_s(100, 16) <= c_s(1000, 16));
+    }
+
+    #[test]
+    fn stream_bytes_pads_to_whole_bytes() {
+        assert_eq!(stream_bytes(0), 0);
+        assert_eq!(stream_bytes(1), 1);
+        assert_eq!(stream_bytes(8), 1);
+        assert_eq!(stream_bytes(9), 2);
+        assert_eq!(stream_bytes(64), 8);
     }
 }

@@ -16,7 +16,8 @@
 //! ```
 
 use super::QuantizedVector;
-use crate::quant::bits::ceil_log2;
+use crate::quant::bits::{ceil_log2, stream_bytes};
+use crate::quant::kernels;
 
 #[derive(Debug)]
 pub struct CodecError(pub String);
@@ -32,6 +33,12 @@ impl std::error::Error for CodecError {}
 /// Bit-level writer, LSB-first within each byte. Word-wise accumulator —
 /// bits are staged in a u64 and flushed a byte at a time, so `write_bits`
 /// is O(bytes), not O(bits) (the encode hot path; see DESIGN.md §Perf).
+/// The bulk entry points ([`write_bools`](BitWriter::write_bools),
+/// [`write_packed`](BitWriter::write_packed)) run the u64 word-at-a-time
+/// packer from [`crate::quant::kernels`] — identical bitstream, several
+/// values per staged word — and
+/// [`with_capacity_bits`](BitWriter::with_capacity_bits) preallocates
+/// from the exact `encoded_bits` size instead of growing.
 pub struct BitWriter {
     buf: Vec<u8>,
     /// staged bits (LSB-first), `nacc` of them valid
@@ -56,6 +63,15 @@ impl BitWriter {
     pub fn with_buf(mut buf: Vec<u8>) -> Self {
         buf.clear();
         BitWriter { buf, acc: 0, nacc: 0, bitpos: 0 }
+    }
+
+    /// Writer over a caller-owned buffer, preallocated for a known
+    /// message size (`encoded_bits`): the encode path grows the buffer
+    /// at most once, up front, instead of amortized doubling.
+    pub fn with_capacity_bits(buf: Vec<u8>, bits: u64) -> Self {
+        let mut w = Self::with_buf(buf);
+        w.buf.reserve(stream_bytes(bits));
+        w
     }
 
     #[inline]
@@ -86,6 +102,29 @@ impl BitWriter {
         self.nacc += nbits;
         self.bitpos += nbits as usize;
         self.flush_bytes();
+    }
+
+    /// Append a bool slice (1 bit each) via the u64 word-at-a-time
+    /// packer — same bitstream as repeated [`write_bit`](Self::write_bit)
+    /// calls, ~64 bits per staged word instead of one.
+    pub fn write_bools(&mut self, bits: &[bool]) {
+        let (acc, nacc) =
+            kernels::pack_bools(bits, self.acc, self.nacc, &mut self.buf);
+        self.acc = acc;
+        self.nacc = nacc;
+        self.bitpos += bits.len();
+    }
+
+    /// Append `nbits`-wide values (`nbits <= 32`) via the word-at-a-time
+    /// packer — same bitstream as repeated
+    /// [`write_bits`](Self::write_bits) calls.
+    pub fn write_packed(&mut self, vals: &[u32], nbits: u32) {
+        let (acc, nacc) = kernels::pack_values(
+            vals, nbits, self.acc, self.nacc, &mut self.buf,
+        );
+        self.acc = acc;
+        self.nacc = nacc;
+        self.bitpos += vals.len() * nbits as usize;
     }
 
     pub fn write_u8(&mut self, v: u8) {
@@ -155,6 +194,42 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
+    /// Append `d` sign bits to `out` via the word-at-a-time unpacker —
+    /// consumes exactly the bits repeated
+    /// [`read_bit`](Self::read_bit) calls would.
+    pub fn read_bools_into(
+        &mut self,
+        d: usize,
+        out: &mut Vec<bool>,
+    ) -> Result<(), CodecError> {
+        let (pos, acc, nacc) = kernels::unpack_bools(
+            self.buf, self.pos, self.acc, self.nacc, d, out,
+        )
+        .map_err(|_| CodecError("out of bits".into()))?;
+        self.pos = pos;
+        self.acc = acc;
+        self.nacc = nacc;
+        Ok(())
+    }
+
+    /// Append `d` values of `nbits` each (`nbits <= 32`) to `out` via
+    /// the word-at-a-time unpacker.
+    pub fn read_packed_into(
+        &mut self,
+        nbits: u32,
+        d: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(), CodecError> {
+        let (pos, acc, nacc) = kernels::unpack_values(
+            self.buf, self.pos, self.acc, self.nacc, nbits, d, out,
+        )
+        .map_err(|_| CodecError("out of bits".into()))?;
+        self.pos = pos;
+        self.acc = acc;
+        self.nacc = nacc;
+        Ok(())
+    }
+
     pub fn read_u8(&mut self) -> Result<u8, CodecError> {
         Ok(self.read_bits(8)? as u8)
     }
@@ -193,7 +268,11 @@ pub fn encode(qv: &QuantizedVector) -> Vec<u8> {
 /// most once to the message size). Callers in the threaded runtime swap
 /// the buffer back in after shipping the bytes.
 pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
-    let mut w = BitWriter::with_buf(out);
+    // preallocate the exact message size so the buffer grows at most once
+    let mut w = BitWriter::with_capacity_bits(
+        out,
+        encoded_bits(qv.dim(), qv.s(), qv.implied_table),
+    );
     w.write_u32(qv.dim() as u32);
     w.write_u16(qv.s() as u16);
     w.write_u8(if qv.implied_table { 0 } else { 1 });
@@ -203,13 +282,9 @@ pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
             w.write_f32(l);
         }
     }
-    for &n in &qv.negative {
-        w.write_bit(n);
-    }
-    let idx_bits = ceil_log2(qv.s());
-    for &i in &qv.indices {
-        w.write_bits(i as u64, idx_bits);
-    }
+    // signs and indices are the bulk of the stream: word-at-a-time
+    w.write_bools(&qv.negative);
+    w.write_packed(&qv.indices, ceil_log2(qv.s()));
     w.into_bytes()
 }
 
@@ -262,19 +337,14 @@ pub fn decode_into(
         }
     }
     out.negative.clear();
-    out.negative.reserve(d);
-    for _ in 0..d {
-        out.negative.push(r.read_bit()?);
-    }
+    r.read_bools_into(d, &mut out.negative)?;
     let idx_bits = ceil_log2(s);
     out.indices.clear();
-    out.indices.reserve(d);
-    for _ in 0..d {
-        let i = r.read_bits(idx_bits)? as u32;
-        if i as usize >= s {
-            return Err(CodecError(format!("index {i} out of range s={s}")));
-        }
-        out.indices.push(i);
+    r.read_packed_into(idx_bits, d, &mut out.indices)?;
+    // range-check after the bulk unpack (one vectorizable scan instead
+    // of a branch per element)
+    if let Some(&i) = out.indices.iter().find(|&&i| i as usize >= s) {
+        return Err(CodecError(format!("index {i} out of range s={s}")));
     }
     out.implied_table = !has_table;
     Ok(())
@@ -357,6 +427,98 @@ mod tests {
         assert_eq!(out, qv);
         decode_into(&bytes, |_, _| unreachable!(), &mut out).unwrap();
         assert_eq!(out, qv);
+    }
+
+    #[test]
+    fn bulk_writes_match_per_bit_writes() {
+        check("write_bools/packed == write_bit/bits", 40, |g| {
+            let n = g.usize_in(0..300);
+            let nbits = g.usize_in(0..25) as u32;
+            let mut rng = Rng::new(g.seed);
+            let bools: Vec<bool> =
+                (0..n).map(|_| rng.next_u64() & 1 == 1).collect();
+            let mask = if nbits == 0 { 0 } else { (1u64 << nbits) - 1 };
+            let vals: Vec<u32> = (0..n)
+                .map(|_| (rng.next_u64() & mask) as u32)
+                .collect();
+            // desync the byte boundary with a random-width header
+            let head = g.usize_in(0..13) as u32;
+
+            let mut a = BitWriter::new();
+            a.write_bits(0x5A5, head);
+            for &b in &bools {
+                a.write_bit(b);
+            }
+            for &v in &vals {
+                a.write_bits(v as u64, nbits);
+            }
+            let mut b = BitWriter::new();
+            b.write_bits(0x5A5, head);
+            b.write_bools(&bools);
+            b.write_packed(&vals, nbits);
+            assert_eq!(a.bit_len(), b.bit_len());
+            assert_eq!(a.into_bytes(), b.into_bytes());
+        });
+    }
+
+    #[test]
+    fn bulk_reads_match_per_bit_reads() {
+        check("read_bools/packed == read_bit/bits", 40, |g| {
+            let n = g.usize_in(0..300);
+            let nbits = g.usize_in(1..25) as u32;
+            let head = g.usize_in(0..13) as u32;
+            let mut rng = Rng::new(g.seed);
+            let mut w = BitWriter::new();
+            w.write_bits(0x123, head);
+            let bools: Vec<bool> =
+                (0..n).map(|_| rng.next_u64() & 1 == 1).collect();
+            let mask = (1u64 << nbits) - 1;
+            let vals: Vec<u32> = (0..n)
+                .map(|_| (rng.next_u64() & mask) as u32)
+                .collect();
+            w.write_bools(&bools);
+            w.write_packed(&vals, nbits);
+            let bytes = w.into_bytes();
+
+            let mut r1 = BitReader::new(&bytes);
+            r1.read_bits(head).unwrap();
+            let got_bools: Vec<bool> =
+                (0..n).map(|_| r1.read_bit().unwrap()).collect();
+            let got_vals: Vec<u32> = (0..n)
+                .map(|_| r1.read_bits(nbits).unwrap() as u32)
+                .collect();
+            assert_eq!(got_bools, bools);
+            assert_eq!(got_vals, vals);
+
+            let mut r2 = BitReader::new(&bytes);
+            r2.read_bits(head).unwrap();
+            let mut bulk_bools = Vec::new();
+            r2.read_bools_into(n, &mut bulk_bools).unwrap();
+            let mut bulk_vals = Vec::new();
+            r2.read_packed_into(nbits, n, &mut bulk_vals).unwrap();
+            assert_eq!(bulk_bools, bools);
+            assert_eq!(bulk_vals, vals);
+        });
+    }
+
+    #[test]
+    fn encode_preallocates_exactly_once() {
+        let mut q = LloydMaxQuantizer::new(16, 6);
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let qv = q.quantize(&v, &mut rng);
+        let need = (encoded_bits(qv.dim(), qv.s(), qv.implied_table) / 8)
+            as usize;
+        let bytes = encode(&qv);
+        assert_eq!(bytes.len(), need);
+        // a fresh buffer is reserved up front: capacity never exceeds a
+        // single exact reservation (no amortized doubling overshoot)
+        assert!(
+            bytes.capacity() >= need && bytes.capacity() <= need * 2,
+            "capacity {} for {} bytes suggests growth-by-doubling",
+            bytes.capacity(),
+            need
+        );
     }
 
     #[test]

@@ -1,0 +1,1117 @@
+//! Batch kernels for the quantize / pack / dequantize hot path.
+//!
+//! Every DFL round spends its CPU budget in a handful of per-element
+//! loops: level assignment (Lloyd-Max LUT walk, QSGD stochastic
+//! rounding), sign/index bit-packing, and dequantize-accumulate in the
+//! gossip mix. This module hosts those loops as slice kernels in three
+//! tiers:
+//!
+//! * a **scalar reference** ([`reference`]) — the original per-element
+//!   loops, kept in-tree as the property-test oracle and the bench
+//!   baseline (`cargo bench --bench micro_quant` reports kernel vs
+//!   reference rows);
+//! * **portable chunked** implementations — branchless two-pass loops
+//!   (pre-drawn randomness, hoisted norm gates, split gather/arith
+//!   passes) that LLVM autovectorizes without changing IEEE semantics;
+//! * **runtime-feature-gated AVX2** paths for the gather-heavy kernels
+//!   (level-table dequantize, LUT assignment) where autovectorization
+//!   cannot help, selected per call via `is_x86_64_feature_detected!`
+//!   with the portable path as the fallback on every other target.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel is **bit-identical** to its scalar reference on every
+//! input: only IEEE-exact element-wise operations are used (add, mul,
+//! div, floor, compare, min/max — never FMA, never a reassociated
+//! reduction), stochastic kernels consume exactly the same RNG draw
+//! sequence per element, and index/tie-breaking logic is identical.
+//! The engine equivalence gates (`rust/tests/engine_parallel.rs`) and
+//! the simnet replay digests (`rust/tests/simnet_determinism.rs`) rely
+//! on this; the property tests below enforce it kernel by kernel.
+
+// ---------------------------------------------------------------------------
+// feature detection
+// ---------------------------------------------------------------------------
+
+/// True when the AVX2 fast paths are compiled in *and* the running CPU
+/// supports them (checked once per call; `std` caches the cpuid probe).
+#[inline]
+pub fn avx2_enabled() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// element-wise float kernels (autovectorized; exact by construction)
+// ---------------------------------------------------------------------------
+
+/// `out = |v_i| / ‖v‖` (zeros when the norm is not positive) — the
+/// vectorizable prologue shared by the `quantize_into` overrides.
+/// Bit-identical to mapping [`super::normalized_magnitude`] per element.
+pub fn normalized_magnitudes_into(v: &[f32], norm: f32, out: &mut Vec<f32>) {
+    out.clear();
+    if norm > 0.0 {
+        out.reserve(v.len());
+        out.extend(v.iter().map(|&x| x.abs() / norm));
+    } else {
+        out.resize(v.len(), 0.0);
+    }
+}
+
+/// As [`normalized_magnitudes_into`] with a `[0, 1]` clamp per element
+/// (the natural/ALQ assignment prologue).
+pub fn normalized_magnitudes_clamped_into(
+    v: &[f32],
+    norm: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    if norm > 0.0 {
+        out.reserve(v.len());
+        out.extend(v.iter().map(|&x| (x.abs() / norm).clamp(0.0, 1.0)));
+    } else {
+        out.resize(v.len(), 0.0);
+    }
+}
+
+/// `dst_i += src_i` (estimate-recursion apply).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (a, &b) in dst.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+/// `out_i = a_i - b_i` (differential delta).
+pub fn sub_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// `dst_i += w * src_i` — the gossip mix accumulate. Mul-then-add
+/// (never FMA), matching the scalar engine loop bit for bit.
+pub fn axpy(dst: &mut [f32], w: f32, src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (a, &b) in dst.iter_mut().zip(src) {
+        *a += w * b;
+    }
+}
+
+/// `out_i = w * src_i` (mix initialization with the self weight).
+pub fn scaled_into(out: &mut [f32], w: f32, src: &[f32]) {
+    assert_eq!(out.len(), src.len());
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = w * x;
+    }
+}
+
+/// `dst_i += a_i - b_i` — the consensus correction apply (Eq. 21).
+pub fn add_delta(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(dst.len(), a.len());
+    assert_eq!(dst.len(), b.len());
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d += x - y;
+    }
+}
+
+/// `xs_i *= c` (damping by γ*).
+pub fn scale_in_place(xs: &mut [f32], c: f32) {
+    for x in xs.iter_mut() {
+        *x *= c;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dequantize / dequantize-accumulate
+// ---------------------------------------------------------------------------
+
+/// Gather-safety pre-scan for the AVX2 path only (the portable loop's
+/// slice indexing already bounds-checks per element).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn indices_in_range(indices: &[u32], len: usize) -> bool {
+    // branch-free max-scan
+    let mut max = 0u32;
+    for &i in indices {
+        max = max.max(i);
+    }
+    (max as usize) < len || indices.is_empty()
+}
+
+/// `out_i = ±‖v‖·ℓ_{idx_i}` — batch dequantize. Bit-identical to
+/// [`reference::dequantize_into`] (sign application is an exact
+/// sign-bit flip, multiplication order unchanged).
+pub fn dequantize_into(
+    norm: f32,
+    negative: &[bool],
+    indices: &[u32],
+    levels: &[f32],
+    out: &mut [f32],
+) {
+    dequantize_core(norm, negative, indices, levels, out, false);
+}
+
+/// `acc_i += ±‖v‖·ℓ_{idx_i}` — fused dequantize-accumulate used by the
+/// gossip estimate recursion (x̂ += Q(...)); bit-identical to
+/// dequantize-into-scratch followed by an element-wise add.
+pub fn dequantize_accumulate(
+    norm: f32,
+    negative: &[bool],
+    indices: &[u32],
+    levels: &[f32],
+    acc: &mut [f32],
+) {
+    dequantize_core(norm, negative, indices, levels, acc, true);
+}
+
+fn dequantize_core(
+    norm: f32,
+    negative: &[bool],
+    indices: &[u32],
+    levels: &[f32],
+    out: &mut [f32],
+    accumulate: bool,
+) {
+    assert_eq!(out.len(), indices.len());
+    assert_eq!(negative.len(), indices.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_enabled() && indices_in_range(indices, levels.len()) {
+        // SAFETY: AVX2 is available and all indices are < levels.len()
+        // (the pre-scan makes the gathers in-bounds; an out-of-range
+        // message instead falls through to the portable loop, which
+        // panics at the offending element like the reference)
+        unsafe {
+            avx2::dequantize(norm, negative, indices, levels, out, accumulate)
+        };
+        return;
+    }
+    // portable: branchless sign application via an exact sign-bit XOR so
+    // the arithmetic lanes vectorize; slice indexing bounds-checks per
+    // element, panicking exactly where the reference would
+    if accumulate {
+        for i in 0..out.len() {
+            let mag = norm * levels[indices[i] as usize];
+            let bits = mag.to_bits() ^ ((negative[i] as u32) << 31);
+            out[i] += f32::from_bits(bits);
+        }
+    } else {
+        for i in 0..out.len() {
+            let mag = norm * levels[indices[i] as usize];
+            let bits = mag.to_bits() ^ ((negative[i] as u32) << 31);
+            out[i] = f32::from_bits(bits);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT level assignment (Lloyd-Max / ALQ / natural bracketing)
+// ---------------------------------------------------------------------------
+
+/// Build the histogram-bin → first-candidate LUT for [`assign_lut_slice`]:
+/// `lut[b] = #{ inner[k] < b · range_max / bins }` for the ascending
+/// `inner` table. One forward merge over (bins, inner).
+pub fn build_count_lut(
+    inner: &[f32],
+    range_max: f32,
+    bins: usize,
+    lut: &mut Vec<u32>,
+) {
+    lut.clear();
+    lut.resize(bins, 0);
+    let w = range_max / bins as f32;
+    let mut j = 0usize;
+    for (b, slot) in lut.iter_mut().enumerate() {
+        let edge = b as f32 * w;
+        while j < inner.len() && inner[j] < edge {
+            j += 1;
+        }
+        *slot = j as u32;
+    }
+}
+
+/// Batch `#{ inner[k] < r_i }` via LUT + fix-up walk — the Lloyd-Max
+/// deterministic assignment (with `inner = boundaries[1..s]` the result
+/// IS the level index) and the natural/ALQ bracket locator (with
+/// `inner = level table`). `scale` must be `bins / range_max` for the
+/// LUT built by [`build_count_lut`]. Bit-identical to
+/// [`reference::assign_lut_slice`].
+pub fn assign_lut_slice(
+    inner: &[f32],
+    lut: &[u32],
+    scale: f32,
+    r: &[f32],
+    out: &mut Vec<u32>,
+) {
+    assert!(!lut.is_empty());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_enabled() {
+        // SAFETY: AVX2 available; bins are clamped to lut's range and
+        // lut values never exceed inner.len() by construction
+        unsafe { avx2::assign_lut(inner, lut, scale, r, out) };
+        return;
+    }
+    out.clear();
+    out.reserve(r.len());
+    let top = lut.len() - 1;
+    // chunked two-pass: the bin computation (mul + trunc-cast + min)
+    // vectorizes; the LUT load + fix-up walk runs scalar per lane
+    let mut bins = [0usize; 64];
+    for chunk in r.chunks(64) {
+        for (slot, &ri) in bins.iter_mut().zip(chunk) {
+            *slot = ((ri * scale) as usize).min(top);
+        }
+        for (lane, &ri) in chunk.iter().enumerate() {
+            let mut j = lut[bins[lane]] as usize;
+            while j < inner.len() && inner[j] < ri {
+                j += 1;
+            }
+            out.push(j as u32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QSGD stochastic rounding
+// ---------------------------------------------------------------------------
+
+/// Batch QSGD assignment over the uniform grid with `s` levels and
+/// pre-drawn per-element uniforms `u` (one per element, in element
+/// order — exactly the draw sequence of the per-element loop). The
+/// whole loop is branchless, so it vectorizes: div, floor, compare and
+/// saturating casts all keep their scalar IEEE semantics lane-wise.
+pub fn qsgd_assign_slice(
+    v: &[f32],
+    norm: f32,
+    s: u32,
+    u: &[f32],
+    out: &mut Vec<u32>,
+) {
+    assert!(s >= 2);
+    assert_eq!(u.len(), v.len());
+    out.clear();
+    out.reserve(v.len());
+    let scale = (s - 1) as f32;
+    if norm > 0.0 {
+        out.extend(v.iter().zip(u).map(|(&x, &ui)| {
+            let xq = ((x.abs() / norm) * scale).clamp(0.0, scale);
+            let lo = xq.floor();
+            let up = (ui < xq - lo) as u32;
+            (lo as u32 + up).min(s - 1)
+        }));
+    } else {
+        // zero norm: r_i = 0 → frac = 0 → never rounds up (the uniforms
+        // are still consumed so the rng stream stays in lockstep)
+        out.extend(u.iter().map(|&ui| {
+            let up = (ui < 0.0) as u32;
+            up.min(s - 1)
+        }));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// u64 word-at-a-time bit pack / unpack
+// ---------------------------------------------------------------------------
+
+/// The bit stream ended before the requested items could be read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutOfBits;
+
+/// Append up to 64 low bits of `value` to the LSB-first stream tail
+/// `(acc, nacc)` (invariant `nacc < 8`), spilling whole 8-byte words.
+#[inline]
+fn push_wide(
+    value: u64,
+    nbits: u32,
+    mut acc: u64,
+    mut nacc: u32,
+    buf: &mut Vec<u8>,
+) -> (u64, u32) {
+    debug_assert!(nacc < 8);
+    debug_assert!(nbits <= 64);
+    if nbits == 0 {
+        return (acc, nacc);
+    }
+    let value = if nbits == 64 {
+        value
+    } else {
+        value & ((1u64 << nbits) - 1)
+    };
+    // bits above 63 fall off the top here; they are re-staged below
+    acc |= value << nacc;
+    let fit = 64 - nacc;
+    if nbits <= fit {
+        nacc += nbits;
+        if nacc == 64 {
+            buf.extend_from_slice(&acc.to_le_bytes());
+            acc = 0;
+            nacc = 0;
+        } else {
+            while nacc >= 8 {
+                buf.push(acc as u8);
+                acc >>= 8;
+                nacc -= 8;
+            }
+        }
+    } else {
+        // nbits > fit implies nacc > 0, so fit <= 63 and both shifts
+        // below are in range
+        buf.extend_from_slice(&acc.to_le_bytes());
+        acc = value >> fit;
+        nacc = nbits - fit;
+    }
+    (acc, nacc)
+}
+
+/// Pack a bool slice (1 bit each, LSB-first) into `buf`, continuing the
+/// stream tail `(acc, nacc < 8)`; returns the new tail. Produces exactly
+/// the bytes of the historical bit-at-a-time writer
+/// ([`reference::pack_bools`]), 64 bits per staged word.
+pub fn pack_bools(
+    bits: &[bool],
+    acc: u64,
+    nacc: u32,
+    buf: &mut Vec<u8>,
+) -> (u64, u32) {
+    debug_assert!(nacc < 8);
+    // exact byte count this call will push (the sub-byte tail stays
+    // staged), so a preallocated encode buffer never regrows
+    buf.reserve((nacc as usize + bits.len()) / 8);
+    let mut state = (acc, nacc);
+    let mut chunks = bits.chunks_exact(64);
+    for chunk in &mut chunks {
+        let mut word = 0u64;
+        for (i, &b) in chunk.iter().enumerate() {
+            word |= (b as u64) << i;
+        }
+        state = push_wide(word, 64, state.0, state.1, buf);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut word = 0u64;
+        for (i, &b) in rem.iter().enumerate() {
+            word |= (b as u64) << i;
+        }
+        state = push_wide(word, rem.len() as u32, state.0, state.1, buf);
+    }
+    state
+}
+
+/// Pack `nbits`-wide values (LSB-first concatenation, `nbits <= 32`)
+/// into `buf`, continuing the stream tail; returns the new tail.
+/// Multiple values are staged per u64 word (`⌊64 / nbits⌋` at a time).
+/// Bit-identical to [`reference::pack_values`].
+pub fn pack_values(
+    vals: &[u32],
+    nbits: u32,
+    acc: u64,
+    nacc: u32,
+    buf: &mut Vec<u8>,
+) -> (u64, u32) {
+    debug_assert!(nacc < 8);
+    debug_assert!(nbits <= 32);
+    if nbits == 0 || vals.is_empty() {
+        return (acc, nacc);
+    }
+    buf.reserve((nacc as usize + vals.len() * nbits as usize) / 8);
+    let mask = if nbits == 32 {
+        u32::MAX as u64
+    } else {
+        (1u64 << nbits) - 1
+    };
+    let per = (64 / nbits) as usize;
+    let mut state = (acc, nacc);
+    let mut chunks = vals.chunks_exact(per);
+    for chunk in &mut chunks {
+        let mut word = 0u64;
+        let mut off = 0u32;
+        for &v in chunk {
+            word |= (v as u64 & mask) << off;
+            off += nbits;
+        }
+        state = push_wide(word, off, state.0, state.1, buf);
+    }
+    for &v in chunks.remainder() {
+        state = push_wide(v as u64 & mask, nbits, state.0, state.1, buf);
+    }
+    state
+}
+
+/// Unpack `d` bools from the LSB-first stream, continuing reader state
+/// `(pos, acc, nacc)` (appends to `out`; returns the new state).
+/// Consumes exactly the bits the bit-at-a-time reader would.
+pub fn unpack_bools(
+    buf: &[u8],
+    mut pos: usize,
+    mut acc: u64,
+    mut nacc: u32,
+    d: usize,
+    out: &mut Vec<bool>,
+) -> Result<(usize, u64, u32), OutOfBits> {
+    out.reserve(d);
+    let mut remaining = d;
+    while remaining > 0 {
+        while nacc <= 56 && pos < buf.len() {
+            acc |= (buf[pos] as u64) << nacc;
+            pos += 1;
+            nacc += 8;
+        }
+        if nacc == 0 {
+            return Err(OutOfBits);
+        }
+        let take = remaining.min(nacc as usize);
+        for _ in 0..take {
+            out.push(acc & 1 == 1);
+            acc >>= 1;
+        }
+        nacc -= take as u32;
+        remaining -= take;
+    }
+    Ok((pos, acc, nacc))
+}
+
+/// Unpack `d` values of `nbits` each (`nbits <= 32`), continuing reader
+/// state `(pos, acc, nacc)`; appends to `out` and returns the new state.
+pub fn unpack_values(
+    buf: &[u8],
+    mut pos: usize,
+    mut acc: u64,
+    mut nacc: u32,
+    nbits: u32,
+    d: usize,
+    out: &mut Vec<u32>,
+) -> Result<(usize, u64, u32), OutOfBits> {
+    debug_assert!(nbits <= 32);
+    if nbits == 0 {
+        let fill = out.len() + d;
+        out.resize(fill, 0);
+        return Ok((pos, acc, nacc));
+    }
+    out.reserve(d);
+    let mask = if nbits == 32 {
+        u32::MAX as u64
+    } else {
+        (1u64 << nbits) - 1
+    };
+    let mut remaining = d;
+    while remaining > 0 {
+        while nacc <= 56 && pos < buf.len() {
+            acc |= (buf[pos] as u64) << nacc;
+            pos += 1;
+            nacc += 8;
+        }
+        if nacc < nbits {
+            return Err(OutOfBits);
+        }
+        let take = remaining.min((nacc / nbits) as usize);
+        for _ in 0..take {
+            out.push((acc & mask) as u32);
+            acc >>= nbits;
+        }
+        nacc -= take as u32 * nbits;
+        remaining -= take;
+    }
+    Ok((pos, acc, nacc))
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 fast paths
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Batch dequantize(-accumulate) with level-table gathers.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available, every index is
+    /// `< levels.len()`, and the three input slices share `out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize(
+        norm: f32,
+        negative: &[bool],
+        indices: &[u32],
+        levels: &[f32],
+        out: &mut [f32],
+        accumulate: bool,
+    ) {
+        let d = out.len();
+        let nv = _mm256_set1_ps(norm);
+        let lev = levels.as_ptr();
+        let neg = negative.as_ptr() as *const u8;
+        let idx = indices.as_ptr();
+        let dst = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let iv = _mm256_loadu_si256(idx.add(i) as *const __m256i);
+            let lv = _mm256_i32gather_ps::<4>(lev, iv);
+            let mag = _mm256_mul_ps(nv, lv);
+            // 0/1 sign bytes -> lane sign-bit masks; XOR is the exact
+            // equivalent of the scalar `if neg { -mag } else { mag }`
+            let nb = _mm_loadl_epi64(neg.add(i) as *const __m128i);
+            let n32 = _mm256_cvtepu8_epi32(nb);
+            let sign = _mm256_castsi256_ps(_mm256_slli_epi32::<31>(n32));
+            let val = _mm256_xor_ps(mag, sign);
+            if accumulate {
+                let prev = _mm256_loadu_ps(dst.add(i));
+                _mm256_storeu_ps(dst.add(i), _mm256_add_ps(prev, val));
+            } else {
+                _mm256_storeu_ps(dst.add(i), val);
+            }
+            i += 8;
+        }
+        while i < d {
+            let mag = norm * levels[indices[i] as usize];
+            let bits = mag.to_bits() ^ ((negative[i] as u32) << 31);
+            if accumulate {
+                out[i] += f32::from_bits(bits);
+            } else {
+                out[i] = f32::from_bits(bits);
+            }
+            i += 1;
+        }
+    }
+
+    /// Batch LUT assignment: vector bin computation + LUT gather, scalar
+    /// fix-up walk per lane.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `lut` is non-empty, and
+    /// every `lut` value is `<= inner.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn assign_lut(
+        inner: &[f32],
+        lut: &[u32],
+        scale: f32,
+        r: &[f32],
+        out: &mut Vec<u32>,
+    ) {
+        let d = r.len();
+        out.clear();
+        out.reserve(d);
+        let sv = _mm256_set1_ps(scale);
+        let zero = _mm256_setzero_si256();
+        let top = _mm256_set1_epi32(lut.len() as i32 - 1);
+        let rp = r.as_ptr();
+        let lp = lut.as_ptr() as *const i32;
+        let mut i = 0usize;
+        while i + 8 <= d {
+            let rv = _mm256_loadu_ps(rp.add(i));
+            // trunc-cast matches the scalar `as usize` here: r >= 0 and
+            // r*scale <= bins by construction; NaN truncates to i32::MIN
+            // and the max-with-zero mirrors the scalar saturate-to-0
+            let b = _mm256_cvttps_epi32(_mm256_mul_ps(rv, sv));
+            let b = _mm256_min_epi32(_mm256_max_epi32(b, zero), top);
+            let j8 = _mm256_i32gather_epi32::<4>(lp, b);
+            let mut js = [0i32; 8];
+            _mm256_storeu_si256(js.as_mut_ptr() as *mut __m256i, j8);
+            for (lane, &j0) in js.iter().enumerate() {
+                let ri = r[i + lane];
+                let mut j = j0 as usize;
+                while j < inner.len() && inner[j] < ri {
+                    j += 1;
+                }
+                out.push(j as u32);
+            }
+            i += 8;
+        }
+        let tail_top = lut.len() - 1;
+        while i < d {
+            let ri = r[i];
+            let b = ((ri * scale) as usize).min(tail_top);
+            let mut j = lut[b] as usize;
+            while j < inner.len() && inner[j] < ri {
+                j += 1;
+            }
+            out.push(j as u32);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference (property-test oracle, bench baseline)
+// ---------------------------------------------------------------------------
+
+/// The original per-element loops, unchanged: every batch kernel above
+/// must match these bit for bit on any input. Kept public so the
+/// property tests and `benches/micro_quant.rs` can drive them directly.
+pub mod reference {
+    use super::OutOfBits;
+
+    /// Per-element dequantize (the historical `dequantize_into` loop).
+    pub fn dequantize_into(
+        norm: f32,
+        negative: &[bool],
+        indices: &[u32],
+        levels: &[f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(out.len(), indices.len());
+        for i in 0..out.len() {
+            let mag = norm * levels[indices[i] as usize];
+            out[i] = if negative[i] { -mag } else { mag };
+        }
+    }
+
+    /// Per-element dequantize-accumulate.
+    pub fn dequantize_accumulate(
+        norm: f32,
+        negative: &[bool],
+        indices: &[u32],
+        levels: &[f32],
+        acc: &mut [f32],
+    ) {
+        assert_eq!(acc.len(), indices.len());
+        for i in 0..acc.len() {
+            let mag = norm * levels[indices[i] as usize];
+            acc[i] += if negative[i] { -mag } else { mag };
+        }
+    }
+
+    /// Per-element LUT assignment (the historical `assign_fast` walk).
+    pub fn assign_lut_slice(
+        inner: &[f32],
+        lut: &[u32],
+        scale: f32,
+        r: &[f32],
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        let top = lut.len() - 1;
+        out.extend(r.iter().map(|&ri| {
+            let b = ((ri * scale) as usize).min(top);
+            let mut j = lut[b] as usize;
+            while j < inner.len() && inner[j] < ri {
+                j += 1;
+            }
+            j as u32
+        }));
+    }
+
+    /// Per-element QSGD stochastic rounding with pre-drawn uniforms.
+    pub fn qsgd_assign_slice(
+        v: &[f32],
+        norm: f32,
+        s: u32,
+        u: &[f32],
+        out: &mut Vec<u32>,
+    ) {
+        assert_eq!(u.len(), v.len());
+        out.clear();
+        let scale = (s - 1) as f32;
+        for (&x, &ui) in v.iter().zip(u) {
+            let ri = if norm > 0.0 { x.abs() / norm } else { 0.0 };
+            let xq = (ri * scale).clamp(0.0, scale);
+            let lo = xq.floor();
+            let frac = xq - lo;
+            let up = (ui < frac) as u32;
+            out.push((lo as u32 + up).min(s - 1));
+        }
+    }
+
+    /// Bit-at-a-time bool packing (the historical `write_bit` loop).
+    pub fn pack_bools(
+        bits: &[bool],
+        mut acc: u64,
+        mut nacc: u32,
+        buf: &mut Vec<u8>,
+    ) -> (u64, u32) {
+        for &b in bits {
+            acc |= (b as u64) << nacc;
+            nacc += 1;
+            while nacc >= 8 {
+                buf.push(acc as u8);
+                acc >>= 8;
+                nacc -= 8;
+            }
+        }
+        (acc, nacc)
+    }
+
+    /// Value-at-a-time packing (the historical `write_bits` loop).
+    pub fn pack_values(
+        vals: &[u32],
+        nbits: u32,
+        mut acc: u64,
+        mut nacc: u32,
+        buf: &mut Vec<u8>,
+    ) -> (u64, u32) {
+        if nbits == 0 {
+            return (acc, nacc);
+        }
+        let mask = if nbits == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << nbits) - 1
+        };
+        for &v in vals {
+            acc |= (v as u64 & mask) << nacc;
+            nacc += nbits;
+            while nacc >= 8 {
+                buf.push(acc as u8);
+                acc >>= 8;
+                nacc -= 8;
+            }
+        }
+        (acc, nacc)
+    }
+
+    /// Bit-at-a-time bool unpacking (the historical `read_bit` loop).
+    pub fn unpack_bools(
+        buf: &[u8],
+        mut pos: usize,
+        mut acc: u64,
+        mut nacc: u32,
+        d: usize,
+        out: &mut Vec<bool>,
+    ) -> Result<(usize, u64, u32), OutOfBits> {
+        for _ in 0..d {
+            while nacc < 1 {
+                if pos >= buf.len() {
+                    return Err(OutOfBits);
+                }
+                acc |= (buf[pos] as u64) << nacc;
+                pos += 1;
+                nacc += 8;
+            }
+            out.push(acc & 1 == 1);
+            acc >>= 1;
+            nacc -= 1;
+        }
+        Ok((pos, acc, nacc))
+    }
+
+    /// Value-at-a-time unpacking (the historical `read_bits` loop).
+    pub fn unpack_values(
+        buf: &[u8],
+        mut pos: usize,
+        mut acc: u64,
+        mut nacc: u32,
+        nbits: u32,
+        d: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<(usize, u64, u32), OutOfBits> {
+        if nbits == 0 {
+            let fill = out.len() + d;
+            out.resize(fill, 0);
+            return Ok((pos, acc, nacc));
+        }
+        let mask = if nbits == 32 {
+            u32::MAX as u64
+        } else {
+            (1u64 << nbits) - 1
+        };
+        for _ in 0..d {
+            while nacc < nbits {
+                if pos >= buf.len() {
+                    return Err(OutOfBits);
+                }
+                acc |= (buf[pos] as u64) << nacc;
+                pos += 1;
+                nacc += 8;
+            }
+            out.push((acc & mask) as u32);
+            acc >>= nbits;
+            nacc -= nbits;
+        }
+        Ok((pos, acc, nacc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_dequantize_matches_reference() {
+        check("dequantize kernel == reference", 60, |g| {
+            let d = g.usize_in(0..700);
+            let s = g.usize_in(1..65);
+            let norm = g.f32_in(0.0..10.0);
+            let levels: Vec<f32> =
+                (0..s).map(|j| j as f32 / s as f32).collect();
+            let mut rng = Rng::new(g.seed);
+            let indices: Vec<u32> =
+                (0..d).map(|_| rng.below(s) as u32).collect();
+            let negative: Vec<bool> =
+                (0..d).map(|_| rng.next_u64() & 1 == 1).collect();
+            let mut want = vec![0.0f32; d];
+            reference::dequantize_into(
+                norm, &negative, &indices, &levels, &mut want,
+            );
+            let mut got = vec![0.0f32; d];
+            dequantize_into(norm, &negative, &indices, &levels, &mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // fused accumulate == dequantize + add
+            let base: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32).collect();
+            let mut acc_want = base.clone();
+            add_assign(&mut acc_want, &want);
+            let mut acc_got = base;
+            dequantize_accumulate(
+                norm, &negative, &indices, &levels, &mut acc_got,
+            );
+            for (a, b) in acc_want.iter().zip(&acc_got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assign_lut_matches_reference() {
+        check("assign_lut kernel == reference", 60, |g| {
+            let s = g.usize_in(2..65);
+            let bins = *g.pick(&[16usize, 256, 8192]);
+            let range = g.f32_in(0.01..2.0);
+            let mut rng = Rng::new(g.seed);
+            // ascending interior table inside [0, range]
+            let mut inner: Vec<f32> = (0..s - 1)
+                .map(|_| rng.uniform_f32() * range)
+                .collect();
+            inner.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut lut = Vec::new();
+            build_count_lut(&inner, range, bins, &mut lut);
+            let scale = bins as f32 / range;
+            let d = g.usize_in(0..900);
+            let r: Vec<f32> =
+                (0..d).map(|_| rng.uniform_f32() * range).collect();
+            let mut want = Vec::new();
+            reference::assign_lut_slice(&inner, &lut, scale, &r, &mut want);
+            let mut got = Vec::new();
+            assign_lut_slice(&inner, &lut, scale, &r, &mut got);
+            assert_eq!(want, got);
+            // the LUT walk equals a direct count of inner < r
+            for (&ri, &j) in r.iter().zip(&want) {
+                let direct =
+                    inner.iter().filter(|&&b| b < ri).count() as u32;
+                assert_eq!(j, direct, "ri={ri}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_qsgd_kernel_matches_reference() {
+        check("qsgd kernel == reference", 60, |g| {
+            let s = *g.pick(&[2usize, 3, 8, 64]) as u32;
+            let v = g.vec_normal(0..600, 1.0);
+            let norm = crate::util::stats::l2_norm(&v) as f32;
+            let mut rng = Rng::new(g.seed);
+            let mut u = vec![0.0f32; v.len()];
+            rng.fill_uniform_f32(&mut u);
+            let mut want = Vec::new();
+            reference::qsgd_assign_slice(&v, norm, s, &u, &mut want);
+            let mut got = Vec::new();
+            qsgd_assign_slice(&v, norm, s, &u, &mut got);
+            assert_eq!(want, got);
+        });
+    }
+
+    #[test]
+    fn prop_pack_matches_reference_and_roundtrips() {
+        check("word packer == bit packer", 80, |g| {
+            let nbits = g.usize_in(1..33) as u32;
+            let n = g.usize_in(0..500);
+            let mut rng = Rng::new(g.seed);
+            let vals: Vec<u32> = (0..n)
+                .map(|_| (rng.next_u64() as u32) & mask32(nbits))
+                .collect();
+            let bools: Vec<bool> =
+                (0..n).map(|_| rng.next_u64() & 1 == 1).collect();
+            // random starting tail state, as mid-message packing sees
+            let nacc0 = (rng.next_u64() % 8) as u32;
+            let acc0 = rng.next_u64() & ((1u64 << nacc0.max(1)) - 1);
+            let acc0 = if nacc0 == 0 { 0 } else { acc0 };
+
+            let mut want_buf = Vec::new();
+            let st =
+                reference::pack_bools(&bools, acc0, nacc0, &mut want_buf);
+            let st = reference::pack_values(
+                &vals, nbits, st.0, st.1, &mut want_buf,
+            );
+            finish(st, &mut want_buf);
+
+            let mut got_buf = Vec::new();
+            let st = pack_bools(&bools, acc0, nacc0, &mut got_buf);
+            let st = pack_values(&vals, nbits, st.0, st.1, &mut got_buf);
+            finish(st, &mut got_buf);
+            assert_eq!(want_buf, got_buf, "nbits={nbits} n={n}");
+
+            // word-wise unpack returns the original items (skipping the
+            // synthetic tail seed first)
+            let mut seed_bits = Vec::new();
+            let state = unpack_values(
+                &got_buf,
+                0,
+                0,
+                0,
+                nacc0,
+                usize::from(nacc0 > 0),
+                &mut seed_bits,
+            )
+            .unwrap();
+            let mut back_bools = Vec::new();
+            let state = unpack_bools(
+                &got_buf, state.0, state.1, state.2, n, &mut back_bools,
+            )
+            .unwrap();
+            let mut back_vals = Vec::new();
+            unpack_values(
+                &got_buf, state.0, state.1, state.2, nbits, n,
+                &mut back_vals,
+            )
+            .unwrap();
+            assert_eq!(back_bools, bools);
+            assert_eq!(back_vals, vals);
+        });
+    }
+
+    /// Consumed bits implied by a reader state (bytes read minus staged).
+    fn bit_cursor(state: (usize, u64, u32)) -> usize {
+        state.0 * 8 - state.2 as usize
+    }
+
+    fn mask32(nbits: u32) -> u32 {
+        if nbits == 32 {
+            u32::MAX
+        } else {
+            (1u32 << nbits) - 1
+        }
+    }
+
+    fn finish(state: (u64, u32), buf: &mut Vec<u8>) {
+        if state.1 > 0 {
+            buf.push(state.0 as u8);
+        }
+    }
+
+    #[test]
+    fn prop_unpack_matches_reference() {
+        check("word unpacker == bit unpacker", 60, |g| {
+            let nbits = g.usize_in(1..25) as u32;
+            let len = g.usize_in(0..200);
+            let mut rng = Rng::new(g.seed);
+            let buf: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            let d = g.usize_in(0..300);
+            let mut want = Vec::new();
+            let ref_res = reference::unpack_values(
+                &buf, 0, 0, 0, nbits, d, &mut want,
+            );
+            let mut got = Vec::new();
+            let got_res = unpack_values(&buf, 0, 0, 0, nbits, d, &mut got);
+            assert_eq!(ref_res.is_ok(), got_res.is_ok());
+            if let (Ok(a), Ok(b)) = (ref_res, got_res) {
+                // the word unpacker prefetches bytes into `acc` more
+                // greedily, so compare the logical bit cursor, not the
+                // raw staging state
+                assert_eq!(bit_cursor(a), bit_cursor(b), "cursor diverged");
+                assert_eq!(want, got);
+            }
+            let mut want_b = Vec::new();
+            let ref_res =
+                reference::unpack_bools(&buf, 0, 0, 0, d, &mut want_b);
+            let mut got_b = Vec::new();
+            let got_res = unpack_bools(&buf, 0, 0, 0, d, &mut got_b);
+            assert_eq!(ref_res.is_ok(), got_res.is_ok());
+            if let (Ok(a), Ok(b)) = (ref_res, got_res) {
+                assert_eq!(bit_cursor(a), bit_cursor(b));
+                assert_eq!(want_b, got_b);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_magnitude_prepass_matches_per_element() {
+        check("magnitude prepass == per-element", 40, |g| {
+            let v = g.vec_normal(0..500, 2.0);
+            let norm = crate::util::stats::l2_norm(&v) as f32;
+            for flip in [1.0f32, 0.0] {
+                let norm = norm * flip; // exercise the zero-norm gate
+                let mut out = Vec::new();
+                normalized_magnitudes_into(&v, norm, &mut out);
+                for (&x, &got) in v.iter().zip(&out) {
+                    let want = crate::quant::normalized_magnitude(x, norm);
+                    assert_eq!(want.to_bits(), got.to_bits());
+                }
+                let mut outc = Vec::new();
+                normalized_magnitudes_clamped_into(&v, norm, &mut outc);
+                for (&x, &got) in v.iter().zip(&outc) {
+                    let want = crate::quant::normalized_magnitude(x, norm)
+                        .clamp(0.0, 1.0);
+                    assert_eq!(want.to_bits(), got.to_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn build_count_lut_counts_below_edges() {
+        let inner = [0.1f32, 0.4, 0.4001, 0.9];
+        let mut lut = Vec::new();
+        build_count_lut(&inner, 1.0, 10, &mut lut);
+        assert_eq!(lut.len(), 10);
+        for (b, &c) in lut.iter().enumerate() {
+            let edge = b as f32 * 0.1;
+            let direct =
+                inner.iter().filter(|&&x| x < edge).count() as u32;
+            assert_eq!(c, direct, "bin {b}");
+        }
+    }
+
+    #[test]
+    fn elementwise_helpers_match_loops() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32 * 0.31).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let mut dst = a.clone();
+        add_assign(&mut dst, &b);
+        for i in 0..100 {
+            assert_eq!(dst[i].to_bits(), (a[i] + b[i]).to_bits());
+        }
+        let mut out = vec![0.0f32; 100];
+        sub_into(&mut out, &a, &b);
+        for i in 0..100 {
+            assert_eq!(out[i].to_bits(), (a[i] - b[i]).to_bits());
+        }
+        let mut dst = a.clone();
+        axpy(&mut dst, 0.37, &b);
+        for i in 0..100 {
+            assert_eq!(dst[i].to_bits(), (a[i] + 0.37 * b[i]).to_bits());
+        }
+        let mut dst = a.clone();
+        add_delta(&mut dst, &b, &a);
+        for i in 0..100 {
+            assert_eq!(dst[i].to_bits(), (a[i] + (b[i] - a[i])).to_bits());
+        }
+        let mut out = vec![0.0f32; 100];
+        scaled_into(&mut out, 2.5, &b);
+        let mut xs = b.clone();
+        scale_in_place(&mut xs, 2.5);
+        for i in 0..100 {
+            assert_eq!(out[i].to_bits(), (2.5 * b[i]).to_bits());
+            assert_eq!(xs[i].to_bits(), (b[i] * 2.5).to_bits());
+        }
+    }
+
+    #[test]
+    fn out_of_range_indices_panic_like_reference() {
+        let res = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 2];
+            dequantize_into(1.0, &[false, false], &[0, 7], &[0.5], &mut out);
+        });
+        assert!(res.is_err(), "OOB index must panic, not gather garbage");
+    }
+}

@@ -72,17 +72,12 @@ impl LloydMaxQuantizer {
 
     /// Rebuild the bin→index LUT from the current boundaries.
     fn rebuild_lut(&mut self) {
-        self.lut.resize(HIST_BINS, 0);
-        let inner = &self.boundaries[1..self.s];
-        let w = self.r_max / HIST_BINS as f32;
-        let mut j = 0usize;
-        for (b, slot) in self.lut.iter_mut().enumerate() {
-            let edge = b as f32 * w;
-            while j < inner.len() && inner[j] < edge {
-                j += 1;
-            }
-            *slot = j as u32;
-        }
+        super::kernels::build_count_lut(
+            &self.boundaries[1..self.s],
+            self.r_max,
+            HIST_BINS,
+            &mut self.lut,
+        );
     }
 
     fn reset_uniform(&mut self, r_max: f32) {
@@ -258,9 +253,12 @@ impl Quantizer for LloydMaxQuantizer {
         }
     }
 
-    /// Allocation-free path: identical math to [`quantize`] (same norm,
-    /// same fit, same LUT assignment), writing into `out`'s reused buffers
-    /// and the internal `r` scratch.
+    /// Allocation-free batch path: identical math to [`quantize`] (same
+    /// norm, same fit, same LUT assignment), but run as slice kernels —
+    /// the vectorized magnitude prepass plus the batch LUT walk of
+    /// [`super::kernels::assign_lut_slice`] — writing into `out`'s
+    /// reused buffers and the internal `r` scratch. [`quantize`] stays
+    /// the per-element reference this path is property-tested against.
     fn quantize_into(
         &mut self,
         v: &[f32],
@@ -271,11 +269,15 @@ impl Quantizer for LloydMaxQuantizer {
         out.norm = norm;
         // take the scratch out so `fit(&r)` can borrow self mutably
         let mut r = std::mem::take(&mut self.r_scratch);
-        r.clear();
-        r.extend(v.iter().map(|&x| super::normalized_magnitude(x, norm)));
+        super::kernels::normalized_magnitudes_into(v, norm, &mut r);
         self.fit(&r);
-        out.indices.clear();
-        out.indices.extend(r.iter().map(|&ri| self.assign_fast(ri)));
+        super::kernels::assign_lut_slice(
+            &self.boundaries[1..self.s],
+            &self.lut,
+            HIST_BINS as f32 / self.r_max,
+            &r,
+            &mut out.indices,
+        );
         self.r_scratch = r;
         out.levels.clear();
         out.levels.extend_from_slice(&self.levels);

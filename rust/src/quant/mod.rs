@@ -13,6 +13,7 @@ pub mod bits;
 pub mod codec;
 pub mod distortion;
 pub mod full;
+pub mod kernels;
 pub mod lloyd_max;
 pub mod natural;
 pub mod qsgd;
@@ -77,7 +78,11 @@ impl QuantizedVector {
         self.levels.len()
     }
 
-    /// Reconstruct the (lossy) vector: ‖v‖ · sign · ℓ_idx.
+    /// Reconstruct the (lossy) vector: ‖v‖ · sign · ℓ_idx. This is the
+    /// scalar reference path; the hot engines use
+    /// [`dequantize_into`](Self::dequantize_into) /
+    /// [`dequantize_accumulate_into`](Self::dequantize_accumulate_into),
+    /// which are bit-identical batch kernels (see [`kernels`]).
     pub fn dequantize(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.indices.len());
         for (i, &idx) in self.indices.iter().enumerate() {
@@ -87,13 +92,30 @@ impl QuantizedVector {
         out
     }
 
-    /// Dequantize into an existing buffer (hot path; no allocation).
+    /// Dequantize into an existing buffer (hot path; no allocation,
+    /// vectorized batch kernel).
     pub fn dequantize_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), self.indices.len());
-        for i in 0..out.len() {
-            let mag = self.norm * self.levels[self.indices[i] as usize];
-            out[i] = if self.negative[i] { -mag } else { mag };
-        }
+        kernels::dequantize_into(
+            self.norm,
+            &self.negative,
+            &self.indices,
+            &self.levels,
+            out,
+        );
+    }
+
+    /// Fused dequantize-accumulate: `acc_i += ±‖v‖·ℓ_{idx_i}` — the
+    /// gossip estimate recursion (x̂ += Q(δ)) in one pass, bit-identical
+    /// to [`dequantize_into`](Self::dequantize_into) followed by an
+    /// element-wise add.
+    pub fn dequantize_accumulate_into(&self, acc: &mut [f32]) {
+        kernels::dequantize_accumulate(
+            self.norm,
+            &self.negative,
+            &self.indices,
+            &self.levels,
+            acc,
+        );
     }
 
     /// Paper bit accounting C_s = d⌈log₂ s⌉ + d + 32 (Eq. 12).
@@ -199,9 +221,7 @@ pub fn quantize_damped_into(
     let gamma = (1.0 / (1.0 + omega)) as f32;
     if gamma < 0.999 {
         msg.norm *= gamma;
-        for x in dq.iter_mut() {
-            *x *= gamma;
-        }
+        kernels::scale_in_place(dq, gamma);
     }
     omega
 }
@@ -281,6 +301,9 @@ mod tests {
         let mut buf = vec![0.0f32; 3];
         qv.dequantize_into(&mut buf);
         assert_eq!(buf, vec![0.0, -1.0, 2.0]);
+        // fused accumulate adds the same values on top
+        qv.dequantize_accumulate_into(&mut buf);
+        assert_eq!(buf, vec![0.0, -2.0, 4.0]);
     }
 
     #[test]

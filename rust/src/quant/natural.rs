@@ -9,16 +9,35 @@
 use super::{decompose, QuantizedVector, Quantizer};
 use crate::util::rng::Rng;
 
+/// LUT resolution for the batch bracket locator (coarse is fine: the
+/// fix-up walk makes the count exact regardless).
+const LUT_BINS: usize = 512;
+
 #[derive(Clone, Debug)]
 pub struct NaturalQuantizer {
     s: usize,
     table: Vec<f32>,
+    /// bin → #levels-below LUT for the batch bracket locator
+    lut: Vec<u32>,
+    /// normalized-magnitude scratch (batch path)
+    r_scratch: Vec<f32>,
+    /// per-element level-below counts (batch path)
+    cnt_scratch: Vec<u32>,
 }
 
 impl NaturalQuantizer {
     pub fn new(s: usize) -> Self {
         assert!(s >= 2);
-        NaturalQuantizer { s, table: Self::level_table(s) }
+        let table = Self::level_table(s);
+        let mut lut = Vec::new();
+        super::kernels::build_count_lut(&table, 1.0, LUT_BINS, &mut lut);
+        NaturalQuantizer {
+            s,
+            table,
+            lut,
+            r_scratch: Vec::new(),
+            cnt_scratch: Vec::new(),
+        }
     }
 
     /// ℓ_0 = 0, ℓ_j = 2^(j+1-s) for j = 1..s-1 (so ℓ_{s-1} = 1).
@@ -45,6 +64,12 @@ impl Quantizer for NaturalQuantizer {
         assert!(s >= 2);
         self.s = s;
         self.table = Self::level_table(s);
+        super::kernels::build_count_lut(
+            &self.table,
+            1.0,
+            LUT_BINS,
+            &mut self.lut,
+        );
     }
 
     fn quantize(&mut self, v: &[f32], rng: &mut Rng) -> QuantizedVector {
@@ -80,9 +105,13 @@ impl Quantizer for NaturalQuantizer {
         }
     }
 
-    /// Allocation-free path: same per-element bracketing and the same
-    /// `rng` draw sequence as [`quantize`] (exact level hits draw nothing),
-    /// writing into `out`'s reused buffers.
+    /// Allocation-free batch path: same per-element bracketing and the
+    /// same `rng` draw sequence as [`quantize`] (exact level hits draw
+    /// nothing). The magnitude prepass and the bracket location (a
+    /// levels-below count via the LUT kernel — identical Ok/Err
+    /// classification to the reference binary search on the strictly
+    /// sorted table) are batch kernels; only the stochastic epilogue
+    /// stays per-element because its draws are conditional.
     fn quantize_into(
         &mut self,
         v: &[f32],
@@ -91,25 +120,36 @@ impl Quantizer for NaturalQuantizer {
     ) {
         let norm = super::norm_and_signs_into(v, &mut out.negative);
         out.norm = norm;
+        super::kernels::normalized_magnitudes_clamped_into(
+            v,
+            norm,
+            &mut self.r_scratch,
+        );
+        super::kernels::assign_lut_slice(
+            &self.table,
+            &self.lut,
+            LUT_BINS as f32,
+            &self.r_scratch,
+            &mut self.cnt_scratch,
+        );
         let t = &self.table;
         out.indices.clear();
-        for &x in v {
-            let ri = super::normalized_magnitude(x, norm).clamp(0.0, 1.0);
-            let idx = match t
-                .binary_search_by(|p| p.partial_cmp(&ri).unwrap())
-            {
-                Ok(exact) => exact as u32,
-                Err(ins) => {
-                    // ri >= 0 = t[0], so ins >= 1 always holds
-                    let j = ins - 1;
-                    let lo = t[j];
-                    let hi = t[j + 1];
-                    let p_hi = (ri - lo) / (hi - lo);
-                    if rng.uniform_f32() < p_hi {
-                        (j + 1) as u32
-                    } else {
-                        j as u32
-                    }
+        out.indices.reserve(v.len());
+        for (&ri, &c) in self.r_scratch.iter().zip(&self.cnt_scratch) {
+            let c = c as usize;
+            // c = #{levels < ri}; t[c] == ri is the reference's Ok(c)
+            let idx = if c < t.len() && t[c] == ri {
+                c as u32
+            } else {
+                // t[c-1] < ri < t[c]; c >= 1 because ri >= 0 = t[0]
+                let j = c - 1;
+                let lo = t[j];
+                let hi = t[j + 1];
+                let p_hi = (ri - lo) / (hi - lo);
+                if rng.uniform_f32() < p_hi {
+                    (j + 1) as u32
+                } else {
+                    j as u32
                 }
             };
             out.indices.push(idx);

@@ -13,12 +13,20 @@ use crate::util::rng::Rng;
 pub struct QsgdQuantizer {
     s: usize,
     table: Vec<f32>,
+    /// pre-drawn per-element uniforms (hot-path scratch): drawing them
+    /// up front keeps the rng sequence identical to the per-element
+    /// loop while letting the assignment kernel vectorize
+    u_scratch: Vec<f32>,
 }
 
 impl QsgdQuantizer {
     pub fn new(s: usize) -> Self {
         assert!(s >= 2, "QSGD needs at least 2 levels");
-        QsgdQuantizer { s, table: Self::level_table(s) }
+        QsgdQuantizer {
+            s,
+            table: Self::level_table(s),
+            u_scratch: Vec::new(),
+        }
     }
 
     /// The implied uniform grid (receivers regenerate it from s).
@@ -64,9 +72,12 @@ impl Quantizer for QsgdQuantizer {
         }
     }
 
-    /// Allocation-free path: same per-element math and the same `rng`
-    /// draw sequence as [`quantize`] (one uniform per element, including
-    /// zero-norm inputs), writing into `out`'s reused buffers.
+    /// Allocation-free batch path: same per-element math and the same
+    /// `rng` draw sequence as [`quantize`] (one uniform per element,
+    /// including zero-norm inputs) — the uniforms are pre-drawn into a
+    /// scratch buffer so [`super::kernels::qsgd_assign_slice`] runs
+    /// branchless and vectorized. [`quantize`] stays the per-element
+    /// reference this path is property-tested against.
     fn quantize_into(
         &mut self,
         v: &[f32],
@@ -75,16 +86,15 @@ impl Quantizer for QsgdQuantizer {
     ) {
         let norm = super::norm_and_signs_into(v, &mut out.negative);
         out.norm = norm;
-        let scale = (self.s - 1) as f32;
-        out.indices.clear();
-        for &x in v {
-            let ri = super::normalized_magnitude(x, norm);
-            let xq = (ri * scale).clamp(0.0, scale);
-            let lo = xq.floor();
-            let frac = xq - lo;
-            let up = (rng.uniform_f32() < frac) as u32;
-            out.indices.push((lo as u32 + up).min(self.s as u32 - 1));
-        }
+        self.u_scratch.resize(v.len(), 0.0);
+        rng.fill_uniform_f32(&mut self.u_scratch);
+        super::kernels::qsgd_assign_slice(
+            v,
+            norm,
+            self.s as u32,
+            &self.u_scratch,
+            &mut out.indices,
+        );
         out.levels.clear();
         out.levels.extend_from_slice(&self.table);
         out.implied_table = true;

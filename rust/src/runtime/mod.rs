@@ -124,6 +124,10 @@ pub struct HloBackend {
     features: usize,
     /// parameter tensor layout for bias-zeroing at init
     tensors: Vec<TensorSpec>,
+    /// padded-batch scratch (reused per step/eval chunk — the per-call
+    /// feature/label Vec allocations were the runtime's hot-path leak)
+    xb_scratch: Vec<f32>,
+    yb_scratch: Vec<i32>,
 }
 
 impl HloBackend {
@@ -164,6 +168,8 @@ impl HloBackend {
             batch,
             features,
             tensors,
+            xb_scratch: Vec::new(),
+            yb_scratch: Vec::new(),
         })
     }
 
@@ -175,18 +181,21 @@ impl HloBackend {
         &self.client
     }
 
-    /// Pad (by cycling) or keep a batch to exactly `self.batch` rows.
-    fn fix_batch(&self, x: &[f32], y: &[u32]) -> (Vec<f32>, Vec<i32>) {
+    /// Pad (by cycling) or keep a batch to exactly `self.batch` rows,
+    /// filling the reused scratch buffers (no per-call allocation).
+    fn fill_batch(&mut self, x: &[f32], y: &[u32]) {
         let n = y.len();
         let f = self.features;
-        let mut xo = Vec::with_capacity(self.batch * f);
-        let mut yo = Vec::with_capacity(self.batch);
+        self.xb_scratch.clear();
+        self.xb_scratch.reserve(self.batch * f);
+        self.yb_scratch.clear();
+        self.yb_scratch.reserve(self.batch);
         for bi in 0..self.batch {
             let src = bi % n;
-            xo.extend_from_slice(&x[src * f..(src + 1) * f]);
-            yo.push(y[src] as i32);
+            self.xb_scratch
+                .extend_from_slice(&x[src * f..(src + 1) * f]);
+            self.yb_scratch.push(y[src] as i32);
         }
-        (xo, yo)
     }
 }
 
@@ -222,11 +231,11 @@ impl LocalUpdate for HloBackend {
         lr: f32,
     ) -> anyhow::Result<f64> {
         anyhow::ensure!(!y.is_empty(), "empty batch");
-        let (xb, yb) = self.fix_batch(x, y);
+        self.fill_batch(x, y);
         let inputs = vec![
             literal_f32(params, &[self.param_count])?,
-            literal_f32(&xb, &[self.batch, self.features])?,
-            literal_i32(&yb, &[self.batch])?,
+            literal_f32(&self.xb_scratch, &[self.batch, self.features])?,
+            literal_i32(&self.yb_scratch, &[self.batch])?,
             literal_f32(&[lr], &[])?,
         ];
         let outs = self.step_exe.run(&inputs)?;
@@ -255,14 +264,14 @@ impl LocalUpdate for HloBackend {
         let mut done = 0usize;
         while done < n {
             let take = (n - done).min(self.batch);
-            let (xb, yb) = self.fix_batch(
+            self.fill_batch(
                 &x[done * self.features..(done + take) * self.features],
                 &y[done..done + take],
             );
             let inputs = vec![
                 params_lit.clone(),
-                literal_f32(&xb, &[self.batch, self.features])?,
-                literal_i32(&yb, &[self.batch])?,
+                literal_f32(&self.xb_scratch, &[self.batch, self.features])?,
+                literal_i32(&self.yb_scratch, &[self.batch])?,
             ];
             let outs = self.eval_exe.run(&inputs)?;
             let loss = outs[0].to_vec::<f32>().map_err(

@@ -1,38 +1,158 @@
-//! Scoped-thread worker pool for node-partitioned round execution.
+//! Persistent parked worker pool for node-partitioned round execution.
 //!
 //! The DFL engines run the same three per-node phases every round
-//! (quantized-delta broadcast, τ local-SGD steps, mixing); this pool
-//! partitions the node slice into `workers` contiguous chunks and runs one
-//! scoped thread per chunk. Design rules that keep the parallel path
-//! *bit-identical* to the sequential one:
+//! (quantized-delta broadcast, τ local-SGD steps, mixing) plus the
+//! sharded eval. Historically each phase forked and joined a fresh set
+//! of scoped threads (3+ spawns per round); this pool instead spawns its
+//! workers **once** (per `DflEngine` / `Trainer`), parks them on a
+//! condvar between phases, and wakes them per job — per-round overhead
+//! is a mutex hand-off instead of thread creation. Design rules that
+//! keep the parallel path *bit-identical* to the sequential one are
+//! unchanged from the scoped-thread pool:
 //!
-//! * **Node partitioning, not work stealing** — every item is processed by
-//!   exactly one worker, in index order within its chunk, so all per-item
-//!   state (RNG streams, quantizer warm starts) sees the same operation
-//!   sequence regardless of worker count.
+//! * **Node partitioning, not work stealing** — every item is processed
+//!   by exactly one worker, in index order within its contiguous chunk,
+//!   so all per-item state (RNG streams, quantizer warm starts) sees the
+//!   same operation sequence regardless of worker count.
 //! * **No cross-item reduction inside the pool** — workers only write
 //!   per-item outputs; callers reduce them sequentially in index order
 //!   afterwards, so floating-point accumulation order never changes.
 //! * `workers == 1` (or a single item) short-circuits to a plain loop on
-//!   the calling thread: the sequential engine *is* the parallel engine
-//!   with one worker.
+//!   the calling thread — a sequential pool owns **no threads at all**.
 //!
-//! Errors: the first `Err` in chunk order is returned. A panicking worker
-//! re-raises the panic on the calling thread (so test assertions inside
-//! closures behave as usual).
+//! Chunk 0 of every job runs on the submitting thread itself (one fewer
+//! wakeup; the submitter would otherwise just block), chunks 1..w on the
+//! parked workers — the chunk→thread mapping is fixed, so per-chunk
+//! cache locality carries across rounds.
+//!
+//! Errors: the first `Err` in chunk order is returned. A panicking chunk
+//! re-raises its payload on the calling thread (earliest chunk wins),
+//! and the pool remains serviceable afterwards. Jobs must not submit
+//! nested jobs to the same pool (the engines never do).
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::config::Parallelism;
 
-/// A small fork-join executor over mutable slices.
-#[derive(Clone, Debug)]
+/// Fat pointer to the current job's per-chunk closure, lifetime-erased.
+/// Only valid while the submitting `run_job` call blocks: workers never
+/// touch it after decrementing `active`, and `run_job` does not return
+/// until `active == 0`.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (callable from any thread through a
+// shared reference) and outlives every use — the submitting thread keeps
+// the closure alive for the whole job (see `JobPtr` docs).
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    /// chunk closure of the in-flight job (`None` between jobs)
+    job: Option<JobPtr>,
+    /// bumped once per job so parked workers recognize new work
+    epoch: u64,
+    /// chunk count of the current job (worker `w` runs chunk `w + 1`
+    /// when `w + 1 < width`)
+    width: usize,
+    /// participating workers still running the current job
+    active: usize,
+    /// worker panics as (chunk index, payload); resolved in chunk order
+    panics: Vec<(usize, Box<dyn Any + Send>)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers park here waiting for a new epoch
+    work: Condvar,
+    /// the submitting thread parks here waiting for `active == 0`
+    done: Condvar,
+}
+
+fn worker_loop(shared: &Shared, wi: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    last_epoch = st.epoch;
+                    if wi + 1 < st.width {
+                        break st.job.expect("job set for new epoch");
+                    }
+                    // narrower job than the pool: not our chunk
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let chunk = wi + 1;
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the submitter keeps the closure alive until every
+            // participating worker has decremented `active` (below)
+            let f = unsafe { &*job.0 };
+            f(chunk)
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            st.panics.push((chunk, payload));
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Raw slice base pointer smuggled into the shared chunk closure.
+struct SendSlice<T>(*mut T);
+
+// SAFETY: workers only ever form &mut chunks over *disjoint* index
+// ranges (one chunk per worker per job, synchronized by the job
+// protocol); `T: Send` on the entry points keeps the cross-thread
+// access legal.
+unsafe impl<T: Send> Sync for SendSlice<T> {}
+
+/// A persistent fork-join executor over mutable slices.
 pub struct WorkerPool {
     workers: usize,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Pool with an explicit worker count (clamped to >= 1).
+    /// Pool with an explicit worker count (clamped to >= 1). Spawns
+    /// `workers - 1` parked OS threads once — job submission never
+    /// spawns.
     pub fn new(workers: usize) -> Self {
-        WorkerPool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                width: 0,
+                active: 0,
+                panics: Vec::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers - 1)
+            .map(|wi| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lmdfl-pool-{wi}"))
+                    .spawn(move || worker_loop(&shared, wi))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { workers, shared, handles }
     }
 
     /// Pool sized by the config knob for `items` work items:
@@ -59,6 +179,50 @@ impl WorkerPool {
         (0..w).map(|ci| base + usize::from(ci < rem)).collect()
     }
 
+    /// Submit one job of `width >= 2` chunks: wake the parked workers
+    /// for chunks 1..width, run chunk 0 inline, wait for completion, and
+    /// re-raise the earliest chunk's panic (if any).
+    fn run_job(&self, width: usize, f: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(width >= 2);
+        debug_assert!(width - 1 <= self.handles.len());
+        let job = {
+            // SAFETY: lifetime erasure only — this function blocks until
+            // every worker is done with the closure (wait loop below),
+            // so the borrow outlives all use
+            let f: &'static (dyn Fn(usize) + Sync + 'static) =
+                unsafe { std::mem::transmute(f) };
+            JobPtr(f as *const _)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none() && st.active == 0);
+            st.job = Some(job);
+            st.width = width;
+            st.active = width - 1;
+            st.epoch = st.epoch.wrapping_add(1);
+        }
+        self.shared.work.notify_all();
+
+        // chunk 0 runs on the submitting thread
+        let own = catch_unwind(AssertUnwindSafe(|| f(0)));
+
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let mut panics = std::mem::take(&mut st.panics);
+        drop(st);
+        if let Err(payload) = own {
+            panics.push((0, payload));
+        }
+        if !panics.is_empty() {
+            panics.sort_by_key(|(chunk, _)| *chunk);
+            let (_, payload) = panics.swap_remove(0);
+            resume_unwind(payload);
+        }
+    }
+
     /// Run `f(index, &mut items[index])` for every index, partitioned
     /// across the pool. See module docs for the determinism contract.
     pub fn run<T, F>(&self, items: &mut [T], f: F) -> anyhow::Result<()>
@@ -68,7 +232,7 @@ impl WorkerPool {
     {
         // delegate to the two-slice core with a zero-sized companion slice
         // (Vec<()> never allocates), so both entry points share one
-        // spawn/join/error implementation
+        // submission/error implementation
         let mut unit: Vec<()> = vec![(); items.len()];
         self.run2(items, &mut unit, |i, item, _| f(i, item))
     }
@@ -96,45 +260,85 @@ impl WorkerPool {
             return Ok(());
         }
         let sizes = Self::chunk_sizes(a.len(), w);
-        let mut results: Vec<anyhow::Result<()>> = Vec::with_capacity(w);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(w);
-            let mut rest_a = a;
-            let mut rest_b = b;
-            let mut start = 0usize;
-            for &take in &sizes {
-                let (chunk_a, tail_a) = rest_a.split_at_mut(take);
-                let (chunk_b, tail_b) = rest_b.split_at_mut(take);
-                rest_a = tail_a;
-                rest_b = tail_b;
-                let fr = &f;
-                handles.push(scope.spawn(move || -> anyhow::Result<()> {
-                    for (off, (ai, bi)) in
-                        chunk_a.iter_mut().zip(chunk_b.iter_mut()).enumerate()
-                    {
-                        fr(start + off, ai, bi)?;
-                    }
-                    Ok(())
-                }));
-                start += take;
-            }
-            for h in handles {
-                match h.join() {
-                    Ok(r) => results.push(r),
-                    Err(payload) => std::panic::resume_unwind(payload),
+        let mut bounds = Vec::with_capacity(w);
+        let mut start = 0usize;
+        for &take in &sizes {
+            bounds.push((start, start + take));
+            start += take;
+        }
+        let errors: Vec<Mutex<Option<anyhow::Error>>> =
+            (0..w).map(|_| Mutex::new(None)).collect();
+        let a_ptr = SendSlice(a.as_mut_ptr());
+        let b_ptr = SendSlice(b.as_mut_ptr());
+        let bounds = &bounds;
+        let errors_ref = &errors;
+        let fr = &f;
+        let chunk_fn = move |ci: usize| {
+            let (s, e) = bounds[ci];
+            // SAFETY: chunk index ranges are disjoint and each chunk is
+            // executed by exactly one thread per job, so these &mut
+            // sub-slices never alias
+            let ca = unsafe {
+                std::slice::from_raw_parts_mut(a_ptr.0.add(s), e - s)
+            };
+            let cb = unsafe {
+                std::slice::from_raw_parts_mut(b_ptr.0.add(s), e - s)
+            };
+            for (off, (ai, bi)) in
+                ca.iter_mut().zip(cb.iter_mut()).enumerate()
+            {
+                if let Err(err) = fr(s + off, ai, bi) {
+                    // first error stops this chunk, like the scoped
+                    // pool's `?` did
+                    *errors_ref[ci].lock().unwrap() = Some(err);
+                    return;
                 }
             }
-        });
-        for r in results {
-            r?;
+        };
+        self.run_job(w, &chunk_fn);
+        for slot in errors {
+            if let Some(err) = slot.into_inner().unwrap() {
+                return Err(err);
+            }
         }
         Ok(())
+    }
+}
+
+impl Clone for WorkerPool {
+    /// A clone is a fresh pool of the same width — parked threads are
+    /// never shared between pools.
+    fn clone(&self) -> Self {
+        WorkerPool::new(self.workers)
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("parked_threads", &self.handles.len())
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -233,5 +437,129 @@ mod tests {
         let mut items: Vec<u32> = Vec::new();
         pool.run(&mut items, |_, _| anyhow::bail!("never called"))
             .unwrap();
+    }
+
+    #[test]
+    fn sequential_pool_owns_no_threads() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.is_sequential());
+        assert!(pool.handles.is_empty());
+        let mut items = vec![0usize; 4];
+        pool.run(&mut items, |i, slot| {
+            *slot = i;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn workers_persist_across_jobs() {
+        // the per-round phases must reuse the same parked threads: the
+        // chunk -> thread-id mapping is stable across many jobs
+        let pool = WorkerPool::new(4);
+        let ids = |pool: &WorkerPool| -> Vec<std::thread::ThreadId> {
+            let mut slots: Vec<Option<std::thread::ThreadId>> =
+                vec![None; 8];
+            pool.run(&mut slots, |_, slot| {
+                *slot = Some(std::thread::current().id());
+                Ok(())
+            })
+            .unwrap();
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        };
+        let first = ids(&pool);
+        for round in 0..20 {
+            let again = ids(&pool);
+            assert_eq!(first, again, "thread mapping moved at {round}");
+        }
+        // chunk 0 runs inline on the submitting thread
+        assert_eq!(first[0], std::thread::current().id());
+        // 8 items over 4 workers -> 4 chunks on 4 distinct threads
+        let distinct: HashSet<_> = first.iter().cloned().collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn panic_in_worker_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let mut items = vec![0u32; 9];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut items, |i, _| {
+                if i == 7 {
+                    panic!("boom at {i}");
+                }
+                Ok(())
+            })
+        }));
+        assert!(result.is_err(), "worker panic must re-raise");
+        // the pool stays serviceable after a panic
+        let mut items = vec![0u32; 9];
+        pool.run(&mut items, |i, slot| {
+            *slot = i as u32;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items[8], 8);
+    }
+
+    #[test]
+    fn earliest_chunk_panic_wins() {
+        // scoped-pool parity: panics resolve in chunk order (and take
+        // precedence over later Err returns)
+        let pool = WorkerPool::new(4);
+        let mut items = vec![0u8; 8];
+        let payload = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut items, |i, _| {
+                if i >= 2 {
+                    panic!("chunk payload {}", i / 2);
+                }
+                Ok(())
+            })
+        }))
+        .unwrap_err();
+        let msg = payload.downcast_ref::<String>().unwrap();
+        assert_eq!(msg, "chunk payload 1");
+    }
+
+    #[test]
+    fn panic_beats_error_like_scoped_join_order_did() {
+        // old pool: join in chunk order resumed the first panic even if
+        // an earlier-indexed chunk had returned Err
+        let pool = WorkerPool::new(2);
+        let mut items = vec![0u8; 4];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut items, |i, _| {
+                if i < 2 {
+                    anyhow::bail!("error in chunk 0");
+                }
+                panic!("panic in chunk 1");
+            })
+        }));
+        assert!(result.is_err(), "the panic must win over the error");
+    }
+
+    #[test]
+    fn errors_from_many_rounds_reported_independently() {
+        // reuse across "rounds": failures in one job don't leak into the
+        // next (state fully resets between jobs)
+        let pool = WorkerPool::new(3);
+        for round in 0..10 {
+            let mut items = vec![0usize; 9];
+            let res = pool.run(&mut items, |i, slot| {
+                if round % 2 == 0 && i == 4 {
+                    anyhow::bail!("round {round} item {i}");
+                }
+                *slot = i;
+                Ok(())
+            });
+            if round % 2 == 0 {
+                let msg = res.unwrap_err().to_string();
+                assert_eq!(msg, format!("round {round} item 4"));
+            } else {
+                res.unwrap();
+                assert_eq!(items[8], 8);
+            }
+        }
     }
 }

@@ -147,6 +147,47 @@ mod tests {
     }
 
     #[test]
+    fn prop_word_packer_roundtrips_every_width() {
+        // ISSUE 3 satellite: the u64 word-at-a-time packer must
+        // round-trip through the wire writer/reader at every index bit
+        // width the codec can emit (1..=24 covers ceil_log2(s) for
+        // every supported level count, full precision included)
+        use crate::quant::codec::{BitReader, BitWriter};
+        for nbits in 1u32..=24 {
+            check(&format!("packer roundtrip nbits={nbits}"), 8, |g| {
+                let n = g.usize_in(0..400);
+                let mask = (1u64 << nbits) - 1;
+                let vals: Vec<u32> = (0..n)
+                    .map(|_| (g.rng().next_u64() & mask) as u32)
+                    .collect();
+                let signs: Vec<bool> =
+                    (0..n).map(|_| g.bool()).collect();
+                let mut w = BitWriter::new();
+                w.write_bools(&signs);
+                w.write_packed(&vals, nbits);
+                assert_eq!(
+                    w.bit_len(),
+                    n + n * nbits as usize,
+                    "bit accounting"
+                );
+                let bytes = w.into_bytes();
+                let mut r = BitReader::new(&bytes);
+                let mut back_signs = Vec::new();
+                r.read_bools_into(n, &mut back_signs).unwrap();
+                let mut back_vals = Vec::new();
+                r.read_packed_into(nbits, n, &mut back_vals).unwrap();
+                assert_eq!(back_signs, signs);
+                assert_eq!(back_vals, vals);
+                // reading past the end must fail, not fabricate bits
+                let mut overflow = Vec::new();
+                assert!(r
+                    .read_packed_into(nbits, bytes.len() + 8, &mut overflow)
+                    .is_err());
+            });
+        }
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let mut out1 = Vec::new();
         let mut out2 = Vec::new();

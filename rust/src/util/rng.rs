@@ -120,6 +120,17 @@ impl Rng {
         }
     }
 
+    /// Fill a slice with uniform f32s in [0, 1) — one
+    /// [`uniform_f32`](Self::uniform_f32)-equivalent draw per element in
+    /// element order. The batched quantizer kernels pre-draw their
+    /// stochastic-rounding uniforms with this so the draw sequence stays
+    /// bit-identical to the per-element loops.
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.uniform_f32();
+        }
+    }
+
     /// Laplace(0, b) sample — used by the distortion benches: gradient
     /// coordinates are famously heavier-tailed than Gaussian.
     pub fn laplace(&mut self, b: f64) -> f64 {
@@ -228,6 +239,17 @@ mod tests {
         v = v / n as f64 - m * m;
         assert!(m.abs() < 0.02);
         assert!((v - 2.0 * b * b).abs() < 0.1, "var={v}");
+    }
+
+    #[test]
+    fn fill_uniform_matches_per_element_draws() {
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        let mut buf = vec![0.0f32; 64];
+        a.fill_uniform_f32(&mut buf);
+        for &x in &buf {
+            assert_eq!(x.to_bits(), b.uniform_f32().to_bits());
+        }
     }
 
     #[test]

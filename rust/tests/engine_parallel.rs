@@ -15,8 +15,8 @@ use lmdfl::config::{
 use lmdfl::dfl::Trainer;
 use lmdfl::metrics::RunLog;
 use lmdfl::quant::{
-    build_quantizer, FullPrecision, LloydMaxQuantizer, NaturalQuantizer,
-    QsgdQuantizer, QuantizedVector, Quantizer,
+    AlqQuantizer, FullPrecision, LloydMaxQuantizer, NaturalQuantizer,
+    QsgdQuantizer, QuantizedVector, Quantizer, TernGradQuantizer,
 };
 use lmdfl::util::proptest::check;
 use lmdfl::util::rng::Rng;
@@ -182,6 +182,8 @@ fn prop_quantize_into_matches_quantize() {
         assert_into_matches(
             &NaturalQuantizer::new(s), &v, seed, Some(&dirty), "natural");
         assert_into_matches(
+            &AlqQuantizer::new(s), &v, seed, Some(&dirty), "alq");
+        assert_into_matches(
             &FullPrecision::new(), &v, seed, Some(&dirty), "full");
     });
 }
@@ -203,10 +205,10 @@ fn prop_quantize_into_degenerate_inputs() {
 
 #[test]
 fn default_quantize_into_delegates() {
-    // quantizers without an override (e.g. ALQ) fall back to the
+    // quantizers without an override (e.g. TernGrad) fall back to the
     // allocating path through the trait default — same contract
-    let mut a = build_quantizer(&QuantizerKind::Alq { s: 8 });
-    let mut b = build_quantizer(&QuantizerKind::Alq { s: 8 });
+    let mut a = TernGradQuantizer::new();
+    let mut b = TernGradQuantizer::new();
     let v: Vec<f32> = (0..200).map(|i| ((i * 37 % 97) as f32) - 48.0).collect();
     let mut r1 = Rng::new(7);
     let mut r2 = Rng::new(7);
