@@ -31,6 +31,8 @@ fn base_config() -> ExperimentConfig {
         eval_every: 1,
         parallelism: lmdfl::config::Parallelism::Auto,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

@@ -1,0 +1,132 @@
+//! Micro-bench: asynchronous gossip engine throughput + sync-vs-async
+//! virtual-time-to-loss.
+//!
+//! Measures (a) end-to-end async engine runs (events/s over the full
+//! state-machine loop: local steps, quantize, broadcast, quorum, mix)
+//! at 8/16/32 nodes on a straggler-heavy torus, and (b) the virtual
+//! time each engine needs to reach a shared target loss — the headline
+//! number of the `async-torus-16` preset, reported here per fleet
+//! size. Reports into the shared `BENCH_*.json` pipeline; CI's
+//! bench-smoke job checks the artifact.
+//!
+//!   cargo bench --bench micro_agossip
+//!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
+//!       cargo bench --bench micro_agossip   # CI smoke + JSON artifact
+
+use lmdfl::agossip::{AsyncConfig, AsyncGossipEngine, WaitPolicy};
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::config::{
+    BackendKind, DatasetKind, EngineMode, ExperimentConfig, LrSchedule,
+    Parallelism, QuantizerKind, TopologyKind,
+};
+use lmdfl::simnet::{ComputeModel, LinkModel, NetworkConfig};
+
+fn network() -> NetworkConfig {
+    NetworkConfig {
+        link: LinkModel {
+            latency_s: 0.005,
+            bandwidth_bps: 2e6,
+            jitter_s: 0.001,
+            drop_prob: 0.0,
+        },
+        link_hetero_spread: 0.5,
+        compute: ComputeModel {
+            base_step_s: 2e-3,
+            hetero_spread: 0.5,
+            straggler_prob: 0.25,
+            straggler_slowdown: 8.0,
+        },
+        churn: Default::default(),
+    }
+}
+
+fn cfg(nodes: usize, mode: EngineMode) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "micro_agossip".into(),
+        seed: 9,
+        nodes,
+        tau: 4,
+        rounds: 6,
+        batch_size: 16,
+        lr: LrSchedule::fixed(0.05),
+        topology: TopologyKind::Torus,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 8 },
+        dataset: DatasetKind::Blobs {
+            train: 30 * nodes,
+            test: 64,
+            dim: 16,
+            classes: 4,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![32] },
+        noniid_fraction: 0.5,
+        link_bps: 2e6,
+        eval_every: 1,
+        parallelism: Parallelism::Off,
+        network: Some(network()),
+        mode,
+        agossip: Some(AsyncConfig {
+            wait_for: WaitPolicy::Quorum { k: 2 },
+            staleness_lambda: 0.5,
+            quorum_timeout_s: 0.5,
+        }),
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for &nodes in &[8usize, 16, 32] {
+        // events per full run, measured once on a probe
+        let events_per_run = {
+            let probe = AsyncGossipEngine::new(&cfg(
+                nodes,
+                EngineMode::Async,
+            ))
+            .unwrap()
+            .run()
+            .unwrap();
+            probe.events
+        };
+
+        b.run_elems(
+            &format!("agossip run n={nodes} torus"),
+            events_per_run,
+            || {
+                let log = AsyncGossipEngine::new(&cfg(
+                    nodes,
+                    EngineMode::Async,
+                ))
+                .unwrap()
+                .run()
+                .unwrap();
+                black_box(log.events);
+            },
+        );
+
+        // virtual-time-to-loss: one sync + one async run on the same
+        // fabric seed, shared target just above the worse final loss
+        let sync_log = lmdfl::dfl::Trainer::run_simulated(&cfg(
+            nodes,
+            EngineMode::Sync,
+        ))
+        .unwrap();
+        let async_log = lmdfl::dfl::Trainer::run_simulated(&cfg(
+            nodes,
+            EngineMode::Async,
+        ))
+        .unwrap();
+        let target = sync_log
+            .last_loss()
+            .unwrap()
+            .max(async_log.last_loss().unwrap())
+            * 1.1;
+        let t_sync = sync_log.virtual_secs_to_loss(target);
+        let t_async = async_log.virtual_secs_to_loss(target);
+        println!(
+            "n={nodes}: {events_per_run} events/run; virtual secs to \
+             loss {target:.4}: sync {t_sync:?} vs async {t_async:?}",
+        );
+    }
+
+    b.finish("micro_agossip");
+}

@@ -34,6 +34,8 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         eval_every: 1000, // exclude eval cost from the round timing
         parallelism: lmdfl::config::Parallelism::Auto,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

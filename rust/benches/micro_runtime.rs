@@ -39,6 +39,8 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         eval_every: 1_000_000, // exclude eval cost from the round timing
         parallelism,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

@@ -1,0 +1,246 @@
+//! agossip — asynchronous event-driven gossip DFL on the simnet
+//! virtual clock.
+//!
+//! The paper analyzes LM-DFL / doubly-adaptive DFL under a synchronous
+//! round barrier: every node waits for the slowest node (and the
+//! slowest message) before mixing. On a heterogeneous fabric with
+//! transient stragglers that barrier wastes exactly the virtual time
+//! the quantizers are trying to save — Liu, Chen & Zhang
+//! ("Decentralized Federated Learning: Balancing Communication and
+//! Computing Costs") show the communication/computation trade-off is
+//! governed by *when* nodes exchange, not just how many bits. This
+//! subsystem removes the barrier: each node is a state machine driven
+//! directly by [`crate::simnet`] events —
+//!
+//! 1. it runs its τ local SGD steps as soon as its *own* compute
+//!    finishes (heterogeneous [`crate::simnet::ComputeModel`] timing);
+//! 2. it quantizes its differential with the exact
+//!    [`crate::quant::Quantizer`] stack the synchronous engine uses
+//!    (LM-DFL level refits and doubly-adaptive schedules re-keyed to
+//!    the node's *local* step count) and broadcasts it to its one-hop
+//!    neighbors over the per-link [`crate::simnet::LinkModel`]s;
+//! 3. it mixes as soon as a configurable neighborhood quorum of fresh
+//!    neighbor messages has arrived — [`WaitPolicy::All`] (neighborhood
+//!    barrier), [`WaitPolicy::Quorum`] (any k fresh neighbors), or
+//!    [`WaitPolicy::Staleness`] (bounded-staleness progress) — with a
+//!    per-node quorum timer as the deadlock-free fallback;
+//! 4. the mixing weights are **staleness-weighted Metropolis** rows
+//!    ([`weights::staleness_row`]): each neighbor's Metropolis weight
+//!    is decayed by λ^staleness and the self-weight absorbs the
+//!    remainder, so the row stays stochastic for every arrival order
+//!    and the full matrix is doubly stochastic when everything is
+//!    fresh (property-tested in [`weights`]).
+//!
+//! Determinism contract: identical seed + config ⇒ byte-identical
+//! event digests, node records, and merged logs — the same contract as
+//! the synchronous fabric, enforced by
+//! `rust/tests/simnet_determinism.rs` (with and without churn).
+//!
+//! Configure with `mode: "async"` plus the optional `async:` section
+//! of the experiment JSON, or `lmdfl train --mode async --async-*`.
+
+pub mod engine;
+pub mod weights;
+
+pub use engine::{AsyncGossipEngine, AsyncRunLog, NodeRecord};
+
+use crate::config::json::Json;
+use crate::config::ConfigError;
+
+/// When a node may mix after finishing its own local steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaitPolicy {
+    /// every *eligible* neighbor (online, link up, not finished) has
+    /// delivered a fresh message since the node's last mix — the
+    /// neighborhood barrier (strictest; still no global barrier)
+    All,
+    /// at least `min(k, eligible)` neighbors delivered fresh messages
+    Quorum { k: usize },
+    /// proceed immediately unless more than `tau` local rounds ahead of
+    /// the slowest eligible neighbor's last reported progress
+    Staleness { tau: usize },
+}
+
+impl WaitPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WaitPolicy::All => "all",
+            WaitPolicy::Quorum { .. } => "quorum",
+            WaitPolicy::Staleness { .. } => "staleness",
+        }
+    }
+}
+
+/// The `async:` config section: everything the asynchronous engine
+/// needs beyond the shared `network:` fabric model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncConfig {
+    /// quorum policy gating each node's mix
+    pub wait_for: WaitPolicy,
+    /// staleness decay base λ of the mixing weights: a neighbor whose
+    /// last message is `s` of my rounds old mixes with weight
+    /// `c_ij · λ^s` (1.0 = no decay)
+    pub staleness_lambda: f64,
+    /// forced-mix timer: a quorum-blocked node mixes with whatever it
+    /// has after this many virtual seconds (the deadlock-free fallback
+    /// under drops / finished neighbors)
+    pub quorum_timeout_s: f64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            wait_for: WaitPolicy::Quorum { k: 2 },
+            staleness_lambda: 0.5,
+            quorum_timeout_s: 1.0,
+        }
+    }
+}
+
+impl AsyncConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |m: &str| ConfigError(format!("async: {m}"));
+        match self.wait_for {
+            WaitPolicy::Quorum { k } if k == 0 => {
+                return Err(err("quorum must be >= 1"));
+            }
+            WaitPolicy::Staleness { tau } if tau == 0 => {
+                return Err(err("staleness must be >= 1"));
+            }
+            _ => {}
+        }
+        if !(self.staleness_lambda > 0.0 && self.staleness_lambda <= 1.0) {
+            return Err(err("staleness_lambda must be in (0, 1]"));
+        }
+        if !(self.quorum_timeout_s > 0.0
+            && self.quorum_timeout_s.is_finite())
+        {
+            return Err(err("quorum_timeout_s must be finite and > 0"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs =
+            vec![("wait_for", Json::str(self.wait_for.name()))];
+        match self.wait_for {
+            WaitPolicy::Quorum { k } => {
+                pairs.push(("quorum", Json::num(k as f64)));
+            }
+            WaitPolicy::Staleness { tau } => {
+                pairs.push(("staleness", Json::num(tau as f64)));
+            }
+            WaitPolicy::All => {}
+        }
+        pairs.push((
+            "staleness_lambda",
+            Json::num(self.staleness_lambda),
+        ));
+        pairs.push(("quorum_timeout_s", Json::num(self.quorum_timeout_s)));
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let d = AsyncConfig::default();
+        let wait_for = match j.get_str("wait_for") {
+            // a bare count key selects the matching policy (same
+            // contract as the CLI's --async-quorum / --async-staleness)
+            None => match (j.get_usize("quorum"), j.get_usize("staleness"))
+            {
+                (Some(k), _) => WaitPolicy::Quorum { k },
+                (None, Some(tau)) => WaitPolicy::Staleness { tau },
+                (None, None) => d.wait_for,
+            },
+            Some("all") => WaitPolicy::All,
+            Some("quorum") => WaitPolicy::Quorum {
+                k: j.get_usize("quorum").unwrap_or(2),
+            },
+            Some("staleness") => WaitPolicy::Staleness {
+                tau: j.get_usize("staleness").unwrap_or(2),
+            },
+            Some(other) => {
+                return Err(ConfigError(format!(
+                    "async: unknown wait_for '{other}' \
+                     (have: all, quorum, staleness)"
+                )));
+            }
+        };
+        let cfg = AsyncConfig {
+            wait_for,
+            staleness_lambda: j
+                .get_f64("staleness_lambda")
+                .unwrap_or(d.staleness_lambda),
+            quorum_timeout_s: j
+                .get_f64("quorum_timeout_s")
+                .unwrap_or(d.quorum_timeout_s),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        AsyncConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_all_policies() {
+        for wait_for in [
+            WaitPolicy::All,
+            WaitPolicy::Quorum { k: 3 },
+            WaitPolicy::Staleness { tau: 4 },
+        ] {
+            let cfg = AsyncConfig {
+                wait_for,
+                staleness_lambda: 0.8,
+                quorum_timeout_s: 2.5,
+            };
+            let text = cfg.to_json().to_pretty();
+            let parsed = Json::parse(&text).unwrap();
+            let back = AsyncConfig::from_json(&parsed).unwrap();
+            assert_eq!(back, cfg);
+        }
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"wait_for": "all"}"#).unwrap();
+        let cfg = AsyncConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.wait_for, WaitPolicy::All);
+        assert_eq!(
+            cfg.staleness_lambda,
+            AsyncConfig::default().staleness_lambda
+        );
+    }
+
+    #[test]
+    fn bare_count_keys_select_their_policy() {
+        let j = Json::parse(r#"{"quorum": 4}"#).unwrap();
+        let cfg = AsyncConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.wait_for, WaitPolicy::Quorum { k: 4 });
+        let j = Json::parse(r#"{"staleness": 3}"#).unwrap();
+        let cfg = AsyncConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.wait_for, WaitPolicy::Staleness { tau: 3 });
+    }
+
+    #[test]
+    fn invalid_fields_rejected() {
+        let bad = [
+            r#"{"wait_for": "quorum", "quorum": 0}"#,
+            r#"{"wait_for": "staleness", "staleness": 0}"#,
+            r#"{"staleness_lambda": 0.0}"#,
+            r#"{"staleness_lambda": 1.5}"#,
+            r#"{"quorum_timeout_s": 0.0}"#,
+            r#"{"wait_for": "bogus"}"#,
+        ];
+        for text in bad {
+            let j = Json::parse(text).unwrap();
+            assert!(AsyncConfig::from_json(&j).is_err(), "{text}");
+        }
+    }
+}

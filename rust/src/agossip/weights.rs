@@ -1,0 +1,215 @@
+//! Staleness-weighted Metropolis mixing weights.
+//!
+//! The asynchronous engine cannot mix with the symmetric doubly
+//! stochastic confusion matrix directly: at mix time some neighbor
+//! estimates are stale (their last message is several of my local
+//! rounds old) and trusting them at full Metropolis weight re-amplifies
+//! stale drift through the gossip recursion (the failure mode DAdaQuant
+//! observes when adaptive quantization meets uneven client progress).
+//! Instead each node builds its mixing row at mix time:
+//!
+//!   w_ij = c_ij · λ^{stale_j}     (neighbors)
+//!   w_ii = 1 − Σ_j w_ij           (self absorbs the remainder)
+//!
+//! where `c` is the live-graph Metropolis matrix and `stale_j` counts
+//! how many of *my* completed rounds ago neighbor j's last message
+//! arrived. Invariants (property-tested below, for arbitrary quorum
+//! arrival orders):
+//!
+//! * every row is stochastic: entries in [0, 1], row sum exactly
+//!   renormalized to 1 via the self-weight remainder;
+//! * with every neighbor fresh (stale = 0) the construction returns the
+//!   Metropolis row unchanged, so the implied global matrix is the
+//!   symmetric doubly stochastic `C` — the synchronous mixing recovered
+//!   as the fresh-everything special case.
+
+use crate::linalg::Matrix;
+
+/// Exponent cap: λ^64 underflows any meaningful weight long before the
+/// cap matters, and keeps `powi` in `i32` range for pathological
+/// staleness counts.
+const MAX_STALE_EXP: u64 = 64;
+
+/// Staleness sentinel meaning "never heard from this neighbor": its
+/// estimate column is still the zero vector, so it must carry weight 0
+/// regardless of λ (λ = 1.0 would otherwise average the zero vector in
+/// at full Metropolis weight and pull the node's params toward zero).
+pub const NEVER: u64 = u64::MAX;
+
+/// Build node `i`'s mixing row over `neighbors` (parallel to
+/// `staleness`): returns `(self_weight, neighbor_weights)` with
+/// `self_weight + Σ neighbor_weights == 1` (up to float rounding, with
+/// the self-weight clamped at 0). `c` must be row-stochastic with
+/// non-negative entries (Metropolis over the live graph); neighbors
+/// whose live weight is 0 (churned-away links) contribute nothing
+/// regardless of staleness.
+pub fn staleness_row(
+    c: &Matrix,
+    i: usize,
+    neighbors: &[usize],
+    staleness: &[u64],
+    lambda: f64,
+) -> (f64, Vec<f64>) {
+    assert_eq!(
+        neighbors.len(),
+        staleness.len(),
+        "one staleness per neighbor"
+    );
+    let mut w = Vec::with_capacity(neighbors.len());
+    let mut sum = 0.0f64;
+    for (idx, &j) in neighbors.iter().enumerate() {
+        let decay = if staleness[idx] == NEVER {
+            0.0
+        } else if staleness[idx] == 0 {
+            1.0
+        } else {
+            lambda.powi(staleness[idx].min(MAX_STALE_EXP) as i32)
+        };
+        let wij = c[(i, j)] * decay;
+        w.push(wij);
+        sum += wij;
+    }
+    ((1.0 - sum).max(0.0), w)
+}
+
+/// Assemble the full n×n mixing matrix implied by per-row staleness
+/// (`staleness[i][idx]` aligned with `adj[i]`). Test/diagnostic helper —
+/// the engine itself only ever materializes single rows.
+pub fn staleness_matrix(
+    c: &Matrix,
+    adj: &[Vec<usize>],
+    staleness: &[Vec<u64>],
+    lambda: f64,
+) -> Matrix {
+    let n = adj.len();
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        let (self_w, w) =
+            staleness_row(c, i, &adj[i], &staleness[i], lambda);
+        m.set(i, i, self_w);
+        for (idx, &j) in adj[i].iter().enumerate() {
+            m.set(i, j, w[idx]);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::topology::Topology;
+    use crate::util::proptest::check;
+
+    fn row_sums(m: &Matrix, n: usize) -> Vec<f64> {
+        (0..n).map(|i| (0..n).map(|j| m[(i, j)]).sum()).collect()
+    }
+
+    #[test]
+    fn fresh_rows_recover_metropolis() {
+        let topo = Topology::build(&TopologyKind::Torus, 16, 0);
+        let stale: Vec<Vec<u64>> =
+            topo.adj.iter().map(|a| vec![0; a.len()]).collect();
+        let m = staleness_matrix(&topo.c, &topo.adj, &stale, 0.5);
+        assert!(m.max_abs_diff(&topo.c) < 1e-12, "fresh != Metropolis");
+        assert!(m.is_doubly_stochastic(1e-9));
+        assert!(m.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn lambda_one_ignores_staleness() {
+        let topo = Topology::build(&TopologyKind::Ring, 8, 0);
+        let stale: Vec<Vec<u64>> =
+            topo.adj.iter().map(|a| vec![7; a.len()]).collect();
+        let m = staleness_matrix(&topo.c, &topo.adj, &stale, 1.0);
+        assert!(m.max_abs_diff(&topo.c) < 1e-12);
+    }
+
+    #[test]
+    fn never_heard_carries_zero_weight_even_without_decay() {
+        // λ = 1.0 disables staleness decay, but a neighbor that never
+        // delivered must still be excluded — its estimate is the zero
+        // vector, not a stale model
+        let topo = Topology::build(&TopologyKind::Ring, 6, 0);
+        let stale = vec![NEVER; topo.adj[0].len()];
+        let (self_w, w) =
+            staleness_row(&topo.c, 0, &topo.adj[0], &stale, 1.0);
+        assert!(w.iter().all(|&x| x == 0.0), "NEVER must zero weights");
+        assert!((self_w - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_neighbors_lose_weight_to_self() {
+        let topo = Topology::build(&TopologyKind::Ring, 6, 0);
+        let fresh = vec![0u64; topo.adj[0].len()];
+        let stale = vec![3u64; topo.adj[0].len()];
+        let (self_f, w_f) =
+            staleness_row(&topo.c, 0, &topo.adj[0], &fresh, 0.5);
+        let (self_s, w_s) =
+            staleness_row(&topo.c, 0, &topo.adj[0], &stale, 0.5);
+        assert!(self_s > self_f, "self weight must absorb decayed mass");
+        for (a, b) in w_s.iter().zip(&w_f) {
+            assert!(a < b, "stale neighbor weight must shrink");
+        }
+    }
+
+    /// Satellite property: the staleness-weighted mixing matrix stays
+    /// row-stochastic (and doubly stochastic when all weights are
+    /// fresh) for *arbitrary quorum arrival orders* — modeled by
+    /// drawing, per node, a random arrival round for each neighbor and
+    /// deriving staleness from it, over random graphs and λ.
+    #[test]
+    fn prop_row_stochastic_for_arbitrary_arrival_orders() {
+        check("staleness rows stay stochastic", 60, |g| {
+            let n = g.usize_in(2..24);
+            let p = g.f64_in(0.05..1.0);
+            let topo = Topology::build(
+                &TopologyKind::Random { p },
+                n,
+                g.seed,
+            );
+            let lambda = g.f64_in(0.05..1.0);
+            // arbitrary arrival order: each node has completed some
+            // number of rounds, and each neighbor's last message landed
+            // at an arbitrary earlier round (or never: huge staleness)
+            let stale: Vec<Vec<u64>> = topo
+                .adj
+                .iter()
+                .map(|a| {
+                    (0..a.len())
+                        .map(|_| {
+                            if g.usize_in(0..8) == 0 {
+                                NEVER // some neighbors never delivered
+                            } else {
+                                g.usize_in(0..200) as u64
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let m =
+                staleness_matrix(&topo.c, &topo.adj, &stale, lambda);
+            for (i, s) in row_sums(&m, n).iter().enumerate() {
+                assert!(
+                    (s - 1.0).abs() < 1e-9,
+                    "row {i} sums to {s}"
+                );
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    let v = m[(i, j)];
+                    assert!(
+                        (0.0..=1.0 + 1e-12).contains(&v),
+                        "entry ({i},{j}) = {v} out of range"
+                    );
+                }
+            }
+            // all-fresh rows of the same graph are doubly stochastic
+            let fresh: Vec<Vec<u64>> =
+                topo.adj.iter().map(|a| vec![0; a.len()]).collect();
+            let mf =
+                staleness_matrix(&topo.c, &topo.adj, &fresh, lambda);
+            assert!(mf.is_doubly_stochastic(1e-9));
+        });
+    }
+}

@@ -5,8 +5,8 @@ pub mod schema;
 
 pub use json::Json;
 pub use schema::{
-    BackendKind, ConfigError, DatasetKind, ExperimentConfig, LrSchedule,
-    Parallelism, QuantizerKind, TopologyKind,
+    BackendKind, ConfigError, DatasetKind, EngineMode, ExperimentConfig,
+    LrSchedule, Parallelism, QuantizerKind, TopologyKind,
 };
 
 use std::path::Path;

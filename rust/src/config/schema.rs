@@ -332,6 +332,39 @@ impl Parallelism {
     }
 }
 
+/// Which gossip engine executes a simulated run: the synchronous
+/// round-barrier matrix engine ([`crate::dfl::DflEngine`]) or the
+/// asynchronous event-driven engine
+/// ([`crate::agossip::AsyncGossipEngine`], nodes proceed on per-node
+/// quorum wakeups — no global barrier).
+///
+/// JSON / CLI forms: `"sync"` (default) or `"async"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    #[default]
+    Sync,
+    Async,
+}
+
+impl EngineMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Sync => "sync",
+            EngineMode::Async => "async",
+        }
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self, ConfigError> {
+        match text {
+            "sync" => Ok(EngineMode::Sync),
+            "async" => Ok(EngineMode::Async),
+            other => Err(bad(format!(
+                "mode must be 'sync' or 'async', got '{other}'"
+            ))),
+        }
+    }
+}
+
 /// Learning-rate schedule. The paper evaluates fixed η and a variable η_k
 /// decaying 20% every 10 iterations (Fig. 8).
 #[derive(Clone, Debug, PartialEq)]
@@ -409,6 +442,12 @@ pub struct ExperimentConfig {
     /// `Some` enables `DflEngine::run_simulated` / `lmdfl train
     /// --simulate` virtual-time runs. See [`crate::simnet`].
     pub network: Option<crate::simnet::NetworkConfig>,
+    /// which engine executes simulated runs (`sync` default / `async`)
+    pub mode: EngineMode,
+    /// `async:` section — quorum policy, staleness weighting, and timer
+    /// knobs of the asynchronous engine. `None` = defaults. Only
+    /// consulted when `mode == async`. See [`crate::agossip`].
+    pub agossip: Option<crate::agossip::AsyncConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -430,6 +469,8 @@ impl Default for ExperimentConfig {
             eval_every: 1,
             parallelism: Parallelism::Auto,
             network: None,
+            mode: EngineMode::Sync,
+            agossip: None,
         }
     }
 }
@@ -478,6 +519,9 @@ impl ExperimentConfig {
         if let Some(net) = &self.network {
             net.validate()?;
         }
+        if let Some(a) = &self.agossip {
+            a.validate()?;
+        }
         Ok(())
     }
 
@@ -501,6 +545,12 @@ impl ExperimentConfig {
         ];
         if let Some(net) = &self.network {
             pairs.push(("network", net.to_json()));
+        }
+        if self.mode != EngineMode::Sync {
+            pairs.push(("mode", Json::str(self.mode.name())));
+        }
+        if let Some(a) = &self.agossip {
+            pairs.push(("async", a.to_json()));
         }
         Json::obj(pairs)
     }
@@ -546,6 +596,16 @@ impl ExperimentConfig {
             network: match j.get("network") {
                 Some(nj) => {
                     Some(crate::simnet::NetworkConfig::from_json(nj)?)
+                }
+                None => None,
+            },
+            mode: match j.get_str("mode") {
+                Some(m) => EngineMode::parse_str(m)?,
+                None => EngineMode::Sync,
+            },
+            agossip: match j.get("async") {
+                Some(aj) => {
+                    Some(crate::agossip::AsyncConfig::from_json(aj)?)
                 }
                 None => None,
             },
@@ -665,6 +725,42 @@ mod tests {
         // invalid network fields are rejected at the config level
         assert!(ExperimentConfig::parse(
             r#"{"name": "n", "network": {"drop_prob": 7.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mode_and_async_section_roundtrip() {
+        // absent -> sync, no async section
+        let cfg = ExperimentConfig::parse(r#"{"name": "m"}"#).unwrap();
+        assert_eq!(cfg.mode, EngineMode::Sync);
+        assert!(cfg.agossip.is_none());
+        // async mode with a quorum policy
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "m", "mode": "async",
+                "async": {"wait_for": "quorum", "quorum": 3,
+                          "staleness_lambda": 0.7,
+                          "quorum_timeout_s": 2.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, EngineMode::Async);
+        let a = cfg.agossip.clone().unwrap();
+        assert_eq!(
+            a.wait_for,
+            crate::agossip::WaitPolicy::Quorum { k: 3 }
+        );
+        assert_eq!(a.staleness_lambda, 0.7);
+        // full roundtrip through to_json
+        let text = cfg.to_json().to_pretty();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back, cfg);
+        // invalid forms rejected
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "m", "mode": "banana"}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "m", "async": {"staleness_lambda": 0.0}}"#
         )
         .is_err());
     }

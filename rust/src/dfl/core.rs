@@ -1,0 +1,315 @@
+//! Shared per-node round-executor core.
+//!
+//! The synchronous matrix engine ([`super::DflEngine`]) and the
+//! asynchronous event-driven engine
+//! ([`crate::agossip::AsyncGossipEngine`]) execute the same per-node
+//! work — τ local-SGD steps over a non-IID shard, the damped quantized
+//! differential of Eq. 22, the doubly-adaptive level update — they only
+//! differ in *when* that work runs (global round barrier vs per-node
+//! quorum wakeups). [`NodeCore`] owns everything one node needs for
+//! those phases, including all preallocated scratch, so both engines
+//! share one implementation and the per-round hot path allocates
+//! nothing after warm-up in either mode.
+//!
+//! Determinism: [`NodeCore::build_fleet`] derives the per-node rng
+//! streams with the exact split tags the matrix engine always used
+//! (sampler = `split(i)`, node = `split(0x1000 + i)`), so extracting
+//! the core changed no byte of the synchronous trajectories.
+
+use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::data::{BatchSampler, Dataset};
+use crate::dfl::backend::LocalUpdate;
+use crate::quant::adaptive::AdaptiveLevels;
+use crate::quant::{build_quantizer, QuantizedVector, Quantizer};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+/// Measured cost/quality of one quantized differential message.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaStats {
+    /// paper bits (Eq. 12) of the message
+    pub paper_bits: u64,
+    /// measured wire bytes (codec framing included) — what a simnet
+    /// fabric puts on the links
+    pub wire_bytes: u64,
+    /// measured relative distortion ω̂
+    pub distortion: f64,
+}
+
+/// One node's learning state plus all per-round scratch buffers.
+pub struct NodeCore {
+    /// x^(i): params after mixing
+    pub params: Vec<f32>,
+    /// x̂^(i): the node's broadcast estimate (error-feedback reference)
+    pub hat: Vec<f32>,
+    pub sampler: BatchSampler,
+    pub quantizer: Box<dyn Quantizer>,
+    pub adaptive: Option<AdaptiveLevels>,
+    pub rng: Rng,
+    // ---- preallocated scratch (rounds allocate nothing after warm-up) --
+    /// delta scratch: x − x̂
+    pub diff: Vec<f32>,
+    /// decode scratch: dequantized (damped) delta
+    pub dq: Vec<f32>,
+    /// reusable quantized-message buffer
+    pub msg: QuantizedVector,
+    /// mini-batch index / feature / label scratch
+    batch_idx: Vec<usize>,
+    batch_x: Vec<f32>,
+    batch_y: Vec<u32>,
+}
+
+impl NodeCore {
+    /// Build the per-node fleet for `cfg`: non-IID partition, per-node
+    /// rng streams, identical initial params at every node (paper
+    /// §VI-A3). `rng` must be the engine rng *after* the `0xBEEF`
+    /// init-params split.
+    pub fn build_fleet(
+        cfg: &ExperimentConfig,
+        dataset: &Dataset,
+        param_count: usize,
+        init: &[f32],
+        rng: &mut Rng,
+    ) -> Vec<NodeCore> {
+        let parts = crate::data::partition::partition_noniid(
+            &dataset.train_y,
+            cfg.nodes,
+            cfg.noniid_fraction,
+            cfg.seed,
+        );
+        let mut nodes = Vec::with_capacity(cfg.nodes);
+        for (i, part) in parts.into_iter().enumerate() {
+            let adaptive = match &cfg.quantizer {
+                QuantizerKind::DoublyAdaptive { s1, s_max, .. } => {
+                    Some(AdaptiveLevels::new(*s1, *s_max))
+                }
+                _ => None,
+            };
+            nodes.push(NodeCore {
+                params: init.to_vec(),
+                hat: vec![0.0; param_count],
+                sampler: BatchSampler::new(part, rng.split(i as u64)),
+                quantizer: build_quantizer(&cfg.quantizer),
+                adaptive,
+                rng: rng.split(0x1000 + i as u64),
+                diff: vec![0.0; param_count],
+                dq: vec![0.0; param_count],
+                msg: QuantizedVector::empty(),
+                batch_idx: Vec::new(),
+                batch_x: Vec::new(),
+                batch_y: Vec::new(),
+            });
+        }
+        nodes
+    }
+
+    /// Run `tau` local SGD steps (Eq. 18) on this node's shard; returns
+    /// the mean batch loss across the steps.
+    pub fn local_steps(
+        &mut self,
+        backend: &mut dyn LocalUpdate,
+        dataset: &Dataset,
+        tau: usize,
+        batch: usize,
+        lr: f32,
+    ) -> anyhow::Result<f64> {
+        let mut local_loss = 0.0f64;
+        for _ in 0..tau {
+            self.sampler.next_batch_into(batch, &mut self.batch_idx);
+            dataset.gather_batch_into(
+                &self.batch_idx,
+                &mut self.batch_x,
+                &mut self.batch_y,
+            );
+            local_loss += backend.step(
+                &mut self.params,
+                &self.batch_x,
+                &self.batch_y,
+                lr,
+            )?;
+        }
+        Ok(local_loss / tau.max(1) as f64)
+    }
+
+    /// Doubly-adaptive level update (Alg. 3 step 8), keyed to whatever
+    /// loss sequence the owning engine observes — the global round in
+    /// the synchronous engine, the node's own local step count in the
+    /// asynchronous one.
+    pub fn observe_local_loss(&mut self, mean_loss: f64) {
+        if let Some(ad) = self.adaptive.as_mut() {
+            let s = ad.update(mean_loss);
+            self.quantizer.set_levels(s);
+        }
+    }
+
+    /// Quantized differential broadcast (Eq. 22 one step):
+    /// `q = Q(x − x̂); x̂ += q`. The damped dequantized delta is left in
+    /// `self.dq` and the wire message in `self.msg` for the caller to
+    /// ship; returns the message stats.
+    pub fn quantize_delta(&mut self) -> DeltaStats {
+        crate::quant::kernels::sub_into(
+            &mut self.diff,
+            &self.params,
+            &self.hat,
+        );
+        let omega = crate::quant::quantize_damped_into(
+            self.quantizer.as_mut(),
+            &self.diff,
+            &mut self.rng,
+            &mut self.dq,
+            &mut self.msg,
+        );
+        let stats = DeltaStats {
+            paper_bits: self.msg.paper_bits(),
+            wire_bytes: self.msg.wire_bits() / 8,
+            distortion: omega,
+        };
+        crate::quant::kernels::add_assign(&mut self.hat, &self.dq);
+        stats
+    }
+}
+
+/// Average model u = Σ params / n over an iterator of parameter slices.
+pub fn average_params<'a, I>(params: I, param_count: usize) -> Vec<f32>
+where
+    I: Iterator<Item = &'a [f32]>,
+{
+    let mut u = vec![0.0f32; param_count];
+    let mut n = 0usize;
+    for p in params {
+        for (a, &x) in u.iter_mut().zip(p) {
+            *a += x;
+        }
+        n += 1;
+    }
+    let inv = 1.0 / n.max(1) as f32;
+    u.iter_mut().for_each(|x| *x *= inv);
+    u
+}
+
+/// Evaluate `u` on `x`/`y` sharded across the worker pool: one fixed
+/// contiguous chunk per *backend* (NOT per worker), and a sequential
+/// index-order reduction of (Σ chunk-loss × chunk-rows, Σ correct) — so
+/// the result is bit-identical for any `parallelism` setting. Shared by
+/// both engines' global evaluations.
+pub fn evaluate_sharded(
+    pool: &WorkerPool,
+    backends: &mut [Box<dyn LocalUpdate>],
+    feat: usize,
+    u: &[f32],
+    x: &[f32],
+    y: &[u32],
+) -> anyhow::Result<(f64, usize)> {
+    let n = backends.len();
+    let (base, rem) = (y.len() / n, y.len() % n);
+    let mut bounds = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let take = base + usize::from(i < rem);
+        bounds.push((start, start + take));
+        start += take;
+    }
+    let mut outs: Vec<(f64, usize)> = vec![(0.0, 0); n];
+    let b = &bounds;
+    pool.run2(&mut outs, backends, |i, out, backend| {
+        let (s, e) = b[i];
+        if s < e {
+            *out = backend.evaluate(u, &x[s * feat..e * feat], &y[s..e])?;
+        }
+        Ok(())
+    })?;
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for (i, (l, c)) in outs.iter().enumerate() {
+        let (s, e) = bounds[i];
+        loss_sum += l * (e - s) as f64;
+        correct += c;
+    }
+    Ok((loss_sum, correct))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetKind, ExperimentConfig, QuantizerKind};
+    use crate::dfl::backend::RustMlpBackend;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 3;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 120,
+            test: 40,
+            dim: 6,
+            classes: 3,
+        };
+        cfg.quantizer = QuantizerKind::LloydMax { s: 8, iters: 4 };
+        cfg
+    }
+
+    fn fleet(cfg: &ExperimentConfig) -> (Vec<NodeCore>, Dataset, usize) {
+        let dataset = Dataset::build(&cfg.dataset, cfg.seed);
+        let backend = RustMlpBackend::new(dataset.feat_dim, &[8], 3);
+        let pc = backend.param_count();
+        let mut rng = Rng::new(cfg.seed);
+        let init = backend.init_params(&mut rng.split(0xBEEF));
+        let nodes =
+            NodeCore::build_fleet(cfg, &dataset, pc, &init, &mut rng);
+        (nodes, dataset, pc)
+    }
+
+    #[test]
+    fn fleet_starts_identical_and_hat_zero() {
+        let cfg = tiny_cfg();
+        let (nodes, _, pc) = fleet(&cfg);
+        assert_eq!(nodes.len(), 3);
+        for node in &nodes {
+            assert_eq!(node.params, nodes[0].params);
+            assert_eq!(node.hat, vec![0.0; pc]);
+        }
+    }
+
+    #[test]
+    fn quantize_delta_tracks_params() {
+        let cfg = tiny_cfg();
+        let (mut nodes, _, _) = fleet(&cfg);
+        let node = &mut nodes[0];
+        let st = node.quantize_delta();
+        assert!(st.paper_bits > 0);
+        assert!(st.wire_bytes > 0);
+        assert!(st.distortion >= 0.0 && st.distortion.is_finite());
+        // estimate moved toward params: repeated deltas contract ‖x − x̂‖
+        let gap = |n: &NodeCore| -> f64 {
+            n.params
+                .iter()
+                .zip(&n.hat)
+                .map(|(&p, &h)| (p as f64 - h as f64).abs())
+                .fold(0.0, f64::max)
+        };
+        let g1 = gap(node);
+        for _ in 0..6 {
+            node.quantize_delta();
+        }
+        let g2 = gap(node);
+        assert!(g2 < g1, "estimate did not contract: {g1} -> {g2}");
+    }
+
+    #[test]
+    fn local_steps_return_finite_mean_loss() {
+        let cfg = tiny_cfg();
+        let (mut nodes, dataset, _) = fleet(&cfg);
+        let mut backend = RustMlpBackend::new(dataset.feat_dim, &[8], 3);
+        let loss = nodes[0]
+            .local_steps(&mut backend, &dataset, 3, 16, 0.05)
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn average_params_averages() {
+        let a = vec![1.0f32, 3.0];
+        let b = vec![3.0f32, 5.0];
+        let u = average_params([a.as_slice(), b.as_slice()].into_iter(), 2);
+        assert_eq!(u, vec![2.0, 4.0]);
+    }
+}

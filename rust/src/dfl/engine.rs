@@ -52,12 +52,12 @@
 //! allocate nothing after warm-up. `rust/tests/engine_parallel.rs`
 //! enforces this.
 
-use crate::config::{ExperimentConfig, QuantizerKind};
-use crate::data::{BatchSampler, Dataset};
+use crate::config::ExperimentConfig;
+use crate::data::Dataset;
 use crate::dfl::backend::LocalUpdate;
+use crate::dfl::core::{self, NodeCore};
 use crate::metrics::{RoundRecord, RunLog};
-use crate::quant::adaptive::AdaptiveLevels;
-use crate::quant::{build_quantizer, QuantizedVector, Quantizer};
+use crate::quant::Quantizer;
 use crate::topology::Topology;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
@@ -80,27 +80,10 @@ struct NodeRound {
     distortion: f64,
 }
 
-/// Per-node state, including all per-round scratch buffers.
+/// Per-node state: the shared [`NodeCore`] (learning state + scratch,
+/// also used by the async engine) plus this engine's per-round outputs.
 struct NodeState {
-    /// x_k^(i): params after mixing (start of round)
-    params: Vec<f32>,
-    /// x̂^(i): globally consistent estimate column (error-feedback ref)
-    hat: Vec<f32>,
-    sampler: BatchSampler,
-    quantizer: Box<dyn Quantizer>,
-    adaptive: Option<AdaptiveLevels>,
-    rng: Rng,
-    // ---- preallocated scratch (rounds allocate nothing after warm-up) --
-    /// delta scratch: x − x̂
-    diff: Vec<f32>,
-    /// decode scratch: dequantized (damped) delta
-    dq: Vec<f32>,
-    /// reusable quantized-message buffers
-    msg: QuantizedVector,
-    /// mini-batch index / feature / label scratch
-    batch_idx: Vec<usize>,
-    batch_x: Vec<f32>,
-    batch_y: Vec<u32>,
+    core: NodeCore,
     /// per-round outputs for the sequential reduction
     out: NodeRound,
 }
@@ -175,36 +158,16 @@ impl DflEngine {
         let mut rng = Rng::new(cfg.seed);
         // paper: identical initial params at every node
         let init = backends[0].init_params(&mut rng.split(0xBEEF));
-        let parts = crate::data::partition::partition_noniid(
-            &dataset.train_y,
-            n,
-            cfg.noniid_fraction,
-            cfg.seed,
-        );
-        let mut nodes = Vec::with_capacity(n);
-        for (i, part) in parts.into_iter().enumerate() {
-            let adaptive = match &cfg.quantizer {
-                QuantizerKind::DoublyAdaptive { s1, s_max, .. } => {
-                    Some(AdaptiveLevels::new(*s1, *s_max))
-                }
-                _ => None,
-            };
-            nodes.push(NodeState {
-                params: init.clone(),
-                hat: vec![0.0; param_count],
-                sampler: BatchSampler::new(part, rng.split(i as u64)),
-                quantizer: build_quantizer(&cfg.quantizer),
-                adaptive,
-                rng: rng.split(0x1000 + i as u64),
-                diff: vec![0.0; param_count],
-                dq: vec![0.0; param_count],
-                msg: QuantizedVector::empty(),
-                batch_idx: Vec::new(),
-                batch_x: Vec::new(),
-                batch_y: Vec::new(),
-                out: NodeRound::default(),
-            });
-        }
+        let nodes: Vec<NodeState> = NodeCore::build_fleet(
+            &cfg,
+            &dataset,
+            param_count,
+            &init,
+            &mut rng,
+        )
+        .into_iter()
+        .map(|core| NodeState { core, out: NodeRound::default() })
+        .collect();
         let pool = WorkerPool::from_parallelism(cfg.parallelism, n);
         Ok(DflEngine {
             cfg,
@@ -233,21 +196,15 @@ impl DflEngine {
 
     /// Average model u_k = X_k · 1/N.
     pub fn average_model(&self) -> Vec<f32> {
-        let n = self.nodes.len();
-        let mut u = vec![0.0f32; self.param_count];
-        for node in &self.nodes {
-            for (a, &p) in u.iter_mut().zip(&node.params) {
-                *a += p;
-            }
-        }
-        let inv = 1.0 / n as f32;
-        u.iter_mut().for_each(|x| *x *= inv);
-        u
+        core::average_params(
+            self.nodes.iter().map(|n| n.core.params.as_slice()),
+            self.param_count,
+        )
     }
 
     /// Node i's current parameters.
     pub fn node_params(&self, i: usize) -> &[f32] {
-        &self.nodes[i].params
+        &self.nodes[i].core.params
     }
 
     /// Max pairwise L∞ disagreement across node params (consensus gap).
@@ -255,53 +212,11 @@ impl DflEngine {
         let u = self.average_model();
         let mut gap = 0.0f64;
         for node in &self.nodes {
-            for (&p, &m) in node.params.iter().zip(&u) {
+            for (&p, &m) in node.core.params.iter().zip(&u) {
                 gap = gap.max((p as f64 - m as f64).abs());
             }
         }
         gap
-    }
-
-    /// Evaluate `u` on `x`/`y` sharded across the worker pool: one fixed
-    /// contiguous chunk per *node* (NOT per worker), one backend per
-    /// chunk, and a sequential node-order reduction of (Σ chunk-loss ×
-    /// chunk-rows, Σ correct) — so the result is bit-identical for any
-    /// `parallelism` setting.
-    fn evaluate_sharded(
-        pool: &WorkerPool,
-        backends: &mut [Box<dyn LocalUpdate>],
-        feat: usize,
-        u: &[f32],
-        x: &[f32],
-        y: &[u32],
-    ) -> anyhow::Result<(f64, usize)> {
-        let n = backends.len();
-        let (base, rem) = (y.len() / n, y.len() % n);
-        let mut bounds = Vec::with_capacity(n);
-        let mut start = 0usize;
-        for i in 0..n {
-            let take = base + usize::from(i < rem);
-            bounds.push((start, start + take));
-            start += take;
-        }
-        let mut outs: Vec<(f64, usize)> = vec![(0.0, 0); n];
-        let b = &bounds;
-        pool.run2(&mut outs, backends, |i, out, backend| {
-            let (s, e) = b[i];
-            if s < e {
-                *out =
-                    backend.evaluate(u, &x[s * feat..e * feat], &y[s..e])?;
-            }
-            Ok(())
-        })?;
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0usize;
-        for (i, (l, c)) in outs.iter().enumerate() {
-            let (s, e) = bounds[i];
-            loss_sum += l * (e - s) as f64;
-            correct += c;
-        }
-        Ok((loss_sum, correct))
     }
 
     /// Evaluate the averaged model: (global train loss, test accuracy).
@@ -314,7 +229,9 @@ impl DflEngine {
         let feat = self.dataset.feat_dim;
         let train_n = self.dataset.train_n().min(self.opts.eval_train_cap);
         // the eval prefix is contiguous, so shards are plain row slices
-        let (loss_sum, _) = Self::evaluate_sharded(
+        // (core::evaluate_sharded: one chunk per node, node-order
+        // reduction — bit-identical for any `parallelism` setting)
+        let (loss_sum, _) = core::evaluate_sharded(
             &self.pool,
             &mut self.backends,
             feat,
@@ -329,7 +246,7 @@ impl DflEngine {
         };
         let test_n = self.dataset.test_n().min(self.opts.eval_test_cap);
         let acc = if test_n > 0 {
-            let (_, correct) = Self::evaluate_sharded(
+            let (_, correct) = core::evaluate_sharded(
                 &self.pool,
                 &mut self.backends,
                 feat,
@@ -366,71 +283,32 @@ impl DflEngine {
                 // step A: mixing-delta message (Eq. 22 first term)
                 // q2 = Q(x_k − x̂);  x̂ += q2  →  x̂ = X̂_k
                 let dropped = drop_prob > 0.0
-                    && node.rng.uniform() < drop_prob;
+                    && node.core.rng.uniform() < drop_prob;
                 if !dropped {
-                    crate::quant::kernels::sub_into(
-                        &mut node.diff,
-                        &node.params,
-                        &node.hat,
-                    );
-                    crate::quant::quantize_damped_into(
-                        node.quantizer.as_mut(),
-                        &node.diff,
-                        &mut node.rng,
-                        &mut node.dq,
-                        &mut node.msg,
-                    );
-                    node.out.q2_bits = node.msg.paper_bits();
-                    node.out.q2_wire_bytes = node.msg.wire_bits() / 8;
-                    crate::quant::kernels::add_assign(
-                        &mut node.hat,
-                        &node.dq,
-                    );
+                    let st = node.core.quantize_delta();
+                    node.out.q2_bits = st.paper_bits;
+                    node.out.q2_wire_bytes = st.wire_bytes;
                 }
                 // (dropped: receivers keep the stale estimate)
 
                 // step B: τ local SGD steps (Eq. 18)
-                let mut local_loss = 0.0f64;
-                for _ in 0..tau {
-                    node.sampler
-                        .next_batch_into(batch, &mut node.batch_idx);
-                    dataset.gather_batch_into(
-                        &node.batch_idx,
-                        &mut node.batch_x,
-                        &mut node.batch_y,
-                    );
-                    local_loss += backend.step(
-                        &mut node.params,
-                        &node.batch_x,
-                        &node.batch_y,
-                        lr,
-                    )?;
-                }
+                let local_loss = node.core.local_steps(
+                    backend.as_mut(),
+                    dataset,
+                    tau,
+                    batch,
+                    lr,
+                )?;
 
                 // step C: doubly-adaptive level update (Alg. 3 step 8)
-                if let Some(ad) = node.adaptive.as_mut() {
-                    let s = ad.update(local_loss / tau as f64);
-                    node.quantizer.set_levels(s);
-                }
+                node.core.observe_local_loss(local_loss);
 
                 // step D: local-update delta q1 (Alg. 2 step 8)
                 // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
-                crate::quant::kernels::sub_into(
-                    &mut node.diff,
-                    &node.params,
-                    &node.hat,
-                );
-                let omega = crate::quant::quantize_damped_into(
-                    node.quantizer.as_mut(),
-                    &node.diff,
-                    &mut node.rng,
-                    &mut node.dq,
-                    &mut node.msg,
-                );
-                node.out.q1_bits = node.msg.paper_bits();
-                node.out.q1_wire_bytes = node.msg.wire_bits() / 8;
-                node.out.distortion = omega;
-                crate::quant::kernels::add_assign(&mut node.hat, &node.dq);
+                let st = node.core.quantize_delta();
+                node.out.q1_bits = st.paper_bits;
+                node.out.q1_wire_bytes = st.wire_bytes;
+                node.out.distortion = st.distortion;
                 Ok(())
             },
         )?;
@@ -444,7 +322,7 @@ impl DflEngine {
             q1_bits_paper += node.out.q1_bits;
             q2_bits_paper += node.out.q2_bits;
             distortion_sum += node.out.distortion;
-            levels_now += node.quantizer.levels();
+            levels_now += node.core.quantizer.levels();
         }
         levels_now /= n;
 
@@ -464,7 +342,7 @@ impl DflEngine {
                 if w == 0.0 {
                     continue;
                 }
-                crate::quant::kernels::axpy(out, w, &nodes[j].hat);
+                crate::quant::kernels::axpy(out, w, &nodes[j].core.hat);
             }
             Ok(())
         })?;
@@ -472,9 +350,9 @@ impl DflEngine {
         let mix_buf = &self.mix_buf;
         self.pool.run(&mut self.nodes, |i, node| {
             crate::quant::kernels::add_delta(
-                &mut node.params,
+                &mut node.core.params,
                 &mix_buf[i],
-                &node.hat,
+                &node.core.hat,
             );
             Ok(())
         })?;
@@ -590,7 +468,7 @@ impl DflEngine {
     /// schedules, e.g. the Fig. 4 descending ablation).
     pub fn set_all_levels(&mut self, s: usize) {
         for node in &mut self.nodes {
-            node.quantizer.set_levels(s);
+            node.core.quantizer.set_levels(s);
         }
     }
 
@@ -601,7 +479,7 @@ impl DflEngine {
         mut make: impl FnMut() -> Box<dyn Quantizer>,
     ) {
         for node in &mut self.nodes {
-            node.quantizer = make();
+            node.core.quantizer = make();
         }
     }
 }
@@ -637,6 +515,8 @@ mod tests {
             eval_every: 1,
             parallelism: Parallelism::Auto,
             network: None,
+            mode: Default::default(),
+            agossip: None,
         }
     }
 

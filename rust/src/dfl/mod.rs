@@ -6,10 +6,12 @@
 //! * [`Trainer`] — config-to-run convenience wrapper
 
 pub mod backend;
+pub mod core;
 pub mod engine;
 pub mod net;
 
 pub use backend::{LocalUpdate, RustMlpBackend};
+pub use core::NodeCore;
 pub use engine::{DflEngine, EngineOptions};
 pub use net::{run_threaded, NetOptions};
 
@@ -72,13 +74,21 @@ impl Trainer {
         self.engine.run()
     }
 
-    /// Run on a simnet fabric: builds the topology, the fabric (from
-    /// the config's `network:` section), and the engine, then drives
-    /// the virtual-time rounds. Errors when the config has no
-    /// `network:` section.
+    /// Run on a simnet fabric. `mode: sync` (default) builds the
+    /// topology, the fabric (from the config's `network:` section,
+    /// required), and the matrix engine, then drives the round-barrier
+    /// virtual-time rounds. `mode: async` hands the whole run to the
+    /// asynchronous event-driven engine ([`crate::agossip`]; the
+    /// `network:` section defaults to the ideal fabric when absent)
+    /// and returns its merged loss-vs-virtual-time log.
     pub fn run_simulated(
         cfg: &ExperimentConfig,
     ) -> anyhow::Result<RunLog> {
+        if cfg.mode == crate::config::EngineMode::Async {
+            let log =
+                crate::agossip::AsyncGossipEngine::new(cfg)?.run()?;
+            return Ok(log.merged);
+        }
         let net = cfg.network.clone().ok_or_else(|| {
             anyhow::anyhow!("config has no network: section to simulate")
         })?;

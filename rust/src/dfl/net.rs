@@ -505,6 +505,8 @@ mod tests {
             eval_every: 1,
             parallelism: crate::config::Parallelism::Auto,
             network: None,
+            mode: Default::default(),
+            agossip: None,
         }
     }
 

@@ -9,11 +9,22 @@
 //! and the doubly-adaptive schedule. Expected shape: the coarse/adaptive
 //! quantizers buy wall-clock, not just bits — message serialization
 //! makes the 8-bit baselines pay for every extra level.
+//!
+//! The `async-torus-16` preset holds the quantizer fixed (LM-DFL) and
+//! varies the *engine* instead: the synchronous round barrier vs the
+//! asynchronous event-driven engine ([`crate::agossip`]) on a
+//! straggler-heavy torus (25% straggler probability, 8× slowdown).
+//! Expected shape: the sync engine pays the slowest node's straggle
+//! every round (P ≈ 1 − 0.75¹⁶ ≈ 99% of rounds stall at the barrier),
+//! while async nodes proceed on a neighborhood quorum — same
+//! quantizer, same per-message byte budget, less virtual time to the
+//! same loss.
 
 use super::{Curve, Scale};
+use crate::agossip::{AsyncConfig, WaitPolicy};
 use crate::config::{
-    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind,
-    TopologyKind,
+    BackendKind, DatasetKind, EngineMode, ExperimentConfig, LrSchedule,
+    QuantizerKind, TopologyKind,
 };
 use crate::metrics::{fnum, Table};
 use crate::simnet::{ComputeModel, LinkModel, NetworkConfig};
@@ -25,8 +36,31 @@ pub fn preset(
 ) -> anyhow::Result<(ExperimentConfig, NetworkConfig)> {
     match name {
         "torus-16" => Ok((torus16_config(scale), torus16_network())),
+        "async-torus-16" => {
+            Ok((async_torus16_config(scale), async_torus16_network()))
+        }
         other => anyhow::bail!(
-            "unknown fig-time preset '{other}' (have: torus-16)"
+            "unknown fig-time preset '{other}' \
+             (have: torus-16, async-torus-16)"
+        ),
+    }
+}
+
+/// Run an already-built preset: quantizer curves for `torus-16`,
+/// engine (sync vs async) curves for `async-torus-16`. Takes the
+/// `(cfg, net)` pair [`preset`] returned so CLI-level tweaks to either
+/// are honored by the run.
+pub fn run_preset(
+    name: &str,
+    cfg: ExperimentConfig,
+    net: NetworkConfig,
+) -> anyhow::Result<Vec<Curve>> {
+    match name {
+        "async-torus-16" => run_sync_vs_async(cfg, net),
+        "torus-16" => run(cfg, net),
+        other => anyhow::bail!(
+            "unknown fig-time preset '{other}' \
+             (have: torus-16, async-torus-16)"
         ),
     }
 }
@@ -54,6 +88,8 @@ pub fn torus16_config(scale: Scale) -> ExperimentConfig {
         eval_every: 1,
         parallelism: crate::config::Parallelism::Auto,
         network: None, // filled by the driver per curve
+        mode: EngineMode::Sync,
+        agossip: None,
     }
 }
 
@@ -75,6 +111,58 @@ pub fn torus16_network() -> NetworkConfig {
         },
         churn: Default::default(),
     }
+}
+
+/// 16-node torus config for the sync-vs-async comparison (engine mode
+/// is filled per curve; the quantizer is held fixed at LM-DFL).
+pub fn async_torus16_config(scale: Scale) -> ExperimentConfig {
+    let mut cfg = torus16_config(scale);
+    cfg.name = "fig-time-async-torus-16".into();
+    cfg
+}
+
+/// Straggler-heavy fabric for the async preset: the same
+/// bandwidth-constrained heterogeneous torus, but every node straggles
+/// 25% of its rounds at 8× slowdown — the regime where the global
+/// barrier wastes the most virtual time.
+pub fn async_torus16_network() -> NetworkConfig {
+    let mut net = torus16_network();
+    net.compute.straggler_prob = 0.25;
+    net.compute.straggler_slowdown = 8.0;
+    net
+}
+
+/// The asynchronous engine settings of the `async-torus-16` preset.
+pub fn async_torus16_policy() -> AsyncConfig {
+    AsyncConfig {
+        wait_for: WaitPolicy::Quorum { k: 2 },
+        staleness_lambda: 0.5,
+        quorum_timeout_s: 0.5,
+    }
+}
+
+/// The two engine curves of the async preset: identical quantizer,
+/// identical fabric seed (same links, same straggler draws feeding the
+/// compute models), only the execution model differs.
+pub fn run_sync_vs_async(
+    base: ExperimentConfig,
+    net: NetworkConfig,
+) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, mode) in [
+        ("sync LM-DFL", EngineMode::Sync),
+        ("async LM-DFL", EngineMode::Async),
+    ] {
+        let mut cfg = base.clone();
+        cfg.name = label.to_string();
+        cfg.network = Some(net.clone());
+        cfg.mode = mode;
+        if mode == EngineMode::Async {
+            cfg.agossip = Some(async_torus16_policy());
+        }
+        curves.push(run_simulated_labeled(cfg, label)?);
+    }
+    Ok(curves)
 }
 
 /// The three quantizer curves the time comparison plots.
@@ -195,7 +283,54 @@ mod tests {
     #[test]
     fn preset_lookup() {
         assert!(preset("torus-16", Scale::Quick).is_ok());
+        assert!(preset("async-torus-16", Scale::Quick).is_ok());
         assert!(preset("nope", Scale::Quick).is_err());
+        let (cfg, net) = preset("torus-16", Scale::Quick).unwrap();
+        assert!(run_preset("nope", cfg, net).is_err());
+    }
+
+    #[test]
+    fn async_beats_sync_to_target_loss_under_stragglers() {
+        // tiny version of the async-torus-16 acceptance scenario: same
+        // quantizer and per-message byte budget, straggler-heavy torus
+        // — the async engine must reach the preset's target loss in
+        // less virtual time than the synchronous round barrier
+        let mut cfg = async_torus16_config(Scale::Quick);
+        cfg.nodes = 8;
+        cfg.rounds = 10;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 240,
+            test: 80,
+            dim: 10,
+            classes: 4,
+        };
+        let curves =
+            run_sync_vs_async(cfg, async_torus16_network()).unwrap();
+        assert_eq!(curves.len(), 2);
+        let sync = &curves[0].log;
+        let asyn = &curves[1].log;
+        // the preset's target: just above the worse of the two final
+        // losses, so both curves reach it
+        let target = sync
+            .last_loss()
+            .unwrap()
+            .max(asyn.last_loss().unwrap())
+            * 1.1;
+        let t_sync = sync.virtual_secs_to_loss(target).unwrap();
+        let t_async = asyn.virtual_secs_to_loss(target).unwrap();
+        assert!(
+            t_async < t_sync,
+            "async {t_async}s !< sync {t_sync}s to loss {target}"
+        );
+        // both engines actually learned
+        assert!(
+            sync.last_loss().unwrap()
+                < sync.records.first().unwrap().loss
+        );
+        assert!(
+            asyn.last_loss().unwrap()
+                < asyn.records.first().unwrap().loss
+        );
     }
 
     #[test]

@@ -76,6 +76,8 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         eval_every: 1,
         parallelism: crate::config::Parallelism::Auto,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

@@ -52,6 +52,21 @@
 //! bandwidth-constrained torus. Configure via the `network:` config
 //! section or the `--net-*` CLI flags.
 //!
+//! ## Asynchronous gossip (agossip)
+//!
+//! [`agossip`] removes the global round barrier: each node is a state
+//! machine driven directly by simnet events — it trains as soon as its
+//! own compute finishes, broadcasts one damped quantized differential
+//! per local round, and mixes as soon as a configurable neighborhood
+//! quorum (`wait_for: all | quorum | staleness`, plus a per-node
+//! quorum timer) of fresh neighbor messages has arrived, using
+//! staleness-weighted Metropolis mixing rows (row-stochastic for every
+//! arrival order). Same quantizer stack, same determinism contract
+//! (byte-identical event digests per seed). Enable with `mode:
+//! "async"` / `lmdfl train --mode async`; `lmdfl fig-time --preset
+//! async-torus-16` compares sync vs async under a straggler-heavy
+//! torus.
+//!
 //! ## Bench reports
 //!
 //! Bench targets print a criterion-like text table and, when
@@ -68,6 +83,7 @@
 //! back in; everything else (matrix engine, threaded runtime, quantizers,
 //! figure drivers) is pure Rust.
 
+pub mod agossip;
 pub mod bench;
 pub mod cli;
 pub mod config;

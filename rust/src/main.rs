@@ -14,8 +14,11 @@
 
 use std::path::Path;
 
+use lmdfl::agossip::WaitPolicy;
 use lmdfl::cli::Args;
-use lmdfl::config::{ExperimentConfig, QuantizerKind, TopologyKind};
+use lmdfl::config::{
+    EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
+};
 use lmdfl::experiments::{self, Scale};
 use lmdfl::metrics::{fnum, Table};
 
@@ -35,12 +38,17 @@ commands:
                         --straggler-slowdown F --churn-interval N
                         --churn-link-fail P --churn-link-heal P
                         --churn-node-leave P --churn-node-return P
+             engine mode (async event-driven gossip, see agossip):
+                        --mode sync|async
+                        --async-wait-for all|quorum|staleness
+                        --async-quorum K --async-staleness N
+                        --async-lambda F --async-timeout-s F
   table1     [--d N]... [--s N]... [--trials N]
   fig4       [--full]
   fig6       --dataset mnist|cifar [--full]
   fig7       [--full]
   fig8       --dataset mnist|cifar [--variable-lr] [--full]
-  fig-time   --preset torus-16 [--target-loss F] [--full]
+  fig-time   --preset torus-16|async-torus-16 [--target-loss F] [--full]
   topo       --kind full|ring|disconnected|star|torus|random --nodes N
   quant      --d N --s N
   artifacts  [--dir artifacts]
@@ -203,6 +211,83 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
             args.get_f64("churn-node-return", net.churn.node_return_prob)?;
         cfg.network = Some(net);
     }
+    // engine mode + async (agossip) flags
+    if let Some(m) = args.get("mode") {
+        cfg.mode = EngineMode::parse_str(m)?;
+    }
+    let async_keys = [
+        "async-wait-for",
+        "async-quorum",
+        "async-staleness",
+        "async-lambda",
+        "async-timeout-s",
+    ];
+    if async_keys.iter().any(|k| args.get(k).is_some()) {
+        let mut a = cfg.agossip.clone().unwrap_or_default();
+        // count defaults come from the config's current policy, so a
+        // redundant --async-wait-for never resets a configured k/τ
+        let cur_k = match a.wait_for {
+            WaitPolicy::Quorum { k } => k,
+            _ => 2,
+        };
+        let cur_tau = match a.wait_for {
+            WaitPolicy::Staleness { tau } => tau,
+            _ => 2,
+        };
+        match args.get("async-wait-for") {
+            Some("all") => {
+                if args.get("async-quorum").is_some()
+                    || args.get("async-staleness").is_some()
+                {
+                    anyhow::bail!(
+                        "--async-wait-for all takes no count flag"
+                    );
+                }
+                a.wait_for = WaitPolicy::All;
+            }
+            Some("quorum") => {
+                anyhow::ensure!(
+                    args.get("async-staleness").is_none(),
+                    "--async-staleness contradicts --async-wait-for \
+                     quorum"
+                );
+                a.wait_for = WaitPolicy::Quorum {
+                    k: args.get_usize("async-quorum", cur_k)?,
+                };
+            }
+            Some("staleness") => {
+                anyhow::ensure!(
+                    args.get("async-quorum").is_none(),
+                    "--async-quorum contradicts --async-wait-for \
+                     staleness"
+                );
+                a.wait_for = WaitPolicy::Staleness {
+                    tau: args.get_usize("async-staleness", cur_tau)?,
+                };
+            }
+            Some(other) => {
+                anyhow::bail!("unknown --async-wait-for '{other}'")
+            }
+            None => {
+                // a bare count flag selects the matching policy;
+                // quorum wins a conflict, same as the JSON parser
+                if args.get("async-quorum").is_some() {
+                    a.wait_for = WaitPolicy::Quorum {
+                        k: args.get_usize("async-quorum", cur_k)?,
+                    };
+                } else if args.get("async-staleness").is_some() {
+                    a.wait_for = WaitPolicy::Staleness {
+                        tau: args.get_usize("async-staleness", cur_tau)?,
+                    };
+                }
+            }
+        }
+        a.staleness_lambda =
+            args.get_f64("async-lambda", a.staleness_lambda)?;
+        a.quorum_timeout_s =
+            args.get_f64("async-timeout-s", a.quorum_timeout_s)?;
+        cfg.agossip = Some(a);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -210,11 +295,19 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
     println!("config:\n{}", cfg.to_json().to_pretty());
-    let simulate = args.has_flag("simulate") || cfg.network.is_some();
+    let simulate = args.has_flag("simulate")
+        || cfg.network.is_some()
+        || cfg.mode == EngineMode::Async;
     if args.has_flag("threaded") && args.has_flag("simulate") {
         anyhow::bail!(
             "--threaded and --simulate are mutually exclusive: the \
              threaded runtime runs on real OS threads (no virtual clock)"
+        );
+    }
+    if args.has_flag("threaded") && cfg.mode == EngineMode::Async {
+        anyhow::bail!(
+            "--threaded runs the synchronous protocol on real OS \
+             threads; async mode needs the simulated engine"
         );
     }
     let log = if args.has_flag("threaded") {
@@ -301,7 +394,8 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
         net.link.bandwidth_bps / 1e6,
         net.compute.straggler_prob,
     );
-    let curves = experiments::fig_time::run(cfg, net)?;
+    let curves =
+        experiments::fig_time::run_preset(preset_name, cfg, net)?;
     println!(
         "{}",
         experiments::fig_time::render_loss_vs_time(&curves)

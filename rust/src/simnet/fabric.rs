@@ -1,4 +1,5 @@
-//! The fabric: a virtual-time model of one DFL deployment.
+//! The fabric: a virtual-time model of one DFL deployment under the
+//! *synchronous* round barrier.
 //!
 //! [`Fabric::simulate_round`] replays one communication round of the
 //! gossip protocol on the event queue: at round start every node
@@ -11,6 +12,11 @@
 //! produces *when* each round happens, which is exactly the decomposition
 //! the paper's time-progression axis assumes (bits → seconds), extended
 //! to heterogeneous links, stragglers, and churn.
+//!
+//! The live link/compute/churn state lives in the shared
+//! [`Substrate`] so the asynchronous engine
+//! ([`crate::agossip::AsyncGossipEngine`]) can drive the exact same
+//! deployment model from its own event loop, without the round barrier.
 //!
 //! Loss semantics: the fabric's per-link drop coins shape the timeline
 //! (a lost message still occupies its link — the sender transmitted it —
@@ -27,15 +33,10 @@
 //! `q2_bytes`/`q1_bytes` means "nothing transmitted at all" (offline
 //! sender semantics at the caller's discretion).
 
-use std::collections::BTreeMap;
-
-use super::churn::ChurnState;
 use super::clock::{ns_to_secs, EventQueue, VirtualTime};
-use super::compute::NodeCompute;
-use super::link::Link;
+use super::substrate::{fold_event, Substrate, DIGEST_OFFSET};
 use super::NetworkConfig;
 use crate::topology::Topology;
-use crate::util::rng::Rng;
 
 /// Timing record of one simulated round.
 #[derive(Clone, Copy, Debug, Default)]
@@ -62,17 +63,9 @@ enum Ev {
 
 /// A deployment's communication fabric in virtual time.
 pub struct Fabric {
-    cfg: NetworkConfig,
-    /// per-directed-link live state, keyed (from, to) over the base graph
-    links: BTreeMap<(usize, usize), Link>,
-    /// current adjacency (changes under churn)
-    adj: Vec<Vec<usize>>,
-    /// nodes currently offline (empty without churn)
-    offline: Vec<bool>,
-    compute: Vec<NodeCompute>,
-    churn: Option<ChurnState>,
+    /// shared link/compute/churn state (see [`Substrate`])
+    sub: Substrate,
     queue: EventQueue<Ev>,
-    rng: Rng,
     /// FNV-1a hash over the popped (time, kind, node) stream — the
     /// deterministic-replay fingerprint the simnet tests compare
     digest: u64,
@@ -81,49 +74,15 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    /// Assemble the fabric for `topo` with per-link models drawn from
-    /// the config (a dedicated rng stream per concern keeps the build
-    /// deterministic and independent of call order).
+    /// Assemble the fabric for `topo` (see [`Substrate::new`] for the
+    /// deterministic build contract).
     pub fn new(cfg: &NetworkConfig, topo: &Topology, seed: u64) -> Fabric {
-        let mut root = Rng::new(seed ^ 0x51A7_ABBE);
-        let mut build_rng = root.split(1);
-        let n = topo.n;
-        let mut links = BTreeMap::new();
-        // BTreeMap iteration and sorted insertion keep per-link draws in
-        // (from, to) order regardless of adjacency-list layout
-        let mut edges: Vec<(usize, usize)> = Vec::new();
-        for (i, nbrs) in topo.adj.iter().enumerate() {
-            for &j in nbrs {
-                edges.push((i, j));
-            }
-        }
-        edges.sort_unstable();
-        for (i, j) in edges {
-            let mut model = cfg.link.clone();
-            if cfg.link_hetero_spread > 0.0 {
-                let factor =
-                    1.0 + cfg.link_hetero_spread * build_rng.uniform();
-                model.bandwidth_bps /= factor;
-            }
-            links.insert((i, j), Link::new(model));
-        }
-        let compute =
-            NodeCompute::fleet(&cfg.compute, n, &mut root.split(2));
-        let churn = if cfg.churn.enabled() {
-            Some(ChurnState::new(cfg.churn.clone(), topo, root.split(3)))
-        } else {
-            None
-        };
+        let sub = Substrate::new(cfg, topo, seed);
+        let n = sub.n();
         Fabric {
-            cfg: cfg.clone(),
-            links,
-            adj: topo.adj.clone(),
-            offline: vec![false; n],
-            compute,
-            churn,
+            sub,
             queue: EventQueue::new(),
-            rng: root.split(4),
-            digest: 0xcbf2_9ce4_8422_2325, // FNV-1a offset basis
+            digest: DIGEST_OFFSET,
             node_done: vec![0; n],
         }
     }
@@ -131,7 +90,7 @@ impl Fabric {
     /// Loss probability the engine's broadcast-level fault injection
     /// should inherit (the old `drop_prob` knob, subsumed).
     pub fn link_drop_prob(&self) -> f64 {
-        self.cfg.link.drop_prob
+        self.sub.link_drop_prob()
     }
 
     /// Lifetime count of processed simulation events.
@@ -153,24 +112,7 @@ impl Fabric {
     /// changed, returns the rebuilt topology (Metropolis weights, fresh
     /// ζ) the engine must mix with from now on.
     pub fn pre_round(&mut self, k: usize) -> Option<Topology> {
-        let churn = self.churn.as_mut()?;
-        let topo = churn.pre_round(k)?;
-        self.adj = topo.adj.clone();
-        for (&(i, j), link) in self.links.iter_mut() {
-            link.up = churn.link_up(i, j);
-        }
-        for (i, off) in self.offline.iter_mut().enumerate() {
-            *off = churn.offline().contains(&i);
-        }
-        Some(topo)
-    }
-
-    #[inline]
-    fn fold_digest(&mut self, t: VirtualTime, kind: u64, node: u64) {
-        const PRIME: u64 = 0x100_0000_01b3;
-        for x in [t, kind, node] {
-            self.digest = (self.digest ^ x).wrapping_mul(PRIME);
-        }
+        self.sub.pre_round(k)
     }
 
     /// Simulate round `k`'s timeline. `q2_bytes[i]` / `q1_bytes[i]` are
@@ -183,7 +125,7 @@ impl Fabric {
         q2_bytes: &[u64],
         q1_bytes: &[u64],
     ) -> RoundTiming {
-        let n = self.adj.len();
+        let n = self.node_done.len();
         assert_eq!(q2_bytes.len(), n, "one q2 size per node");
         assert_eq!(q1_bytes.len(), n, "one q1 size per node");
         let t0 = self.queue.now();
@@ -193,17 +135,13 @@ impl Fabric {
 
         // round start: q2 broadcasts depart and local compute begins
         for i in 0..n {
-            if self.offline[i] {
+            if self.sub.is_offline(i) {
                 continue;
             }
             if q2_bytes[i] > 0 {
                 lost += self.broadcast(i, t0, q2_bytes[i], 0);
             }
-            let (dur, straggled) = self.compute[i].local_update_ns(
-                &self.cfg.compute,
-                tau,
-                &mut self.rng,
-            );
+            let (dur, straggled) = self.sub.local_update_ns(i, tau);
             stragglers += usize::from(straggled);
             self.queue.schedule(t0 + dur, Ev::ComputeDone { node: i });
         }
@@ -212,14 +150,19 @@ impl Fabric {
         while let Some((t, ev)) = self.queue.pop() {
             match ev {
                 Ev::ComputeDone { node } => {
-                    self.fold_digest(t, 1, node as u64);
+                    fold_event(&mut self.digest, t, 1, node as u64);
                     self.node_done[node] = self.node_done[node].max(t);
                     if q1_bytes[node] > 0 {
                         lost += self.broadcast(node, t, q1_bytes[node], 1);
                     }
                 }
                 Ev::Arrive { to, phase } => {
-                    self.fold_digest(t, 2 + phase as u64, to as u64);
+                    fold_event(
+                        &mut self.digest,
+                        t,
+                        2 + phase as u64,
+                        to as u64,
+                    );
                     self.node_done[to] = self.node_done[to].max(t);
                 }
             }
@@ -233,13 +176,13 @@ impl Fabric {
             .unwrap_or(t0)
             .max(t0);
         let online: usize =
-            self.offline.iter().filter(|&&off| !off).count();
+            (0..n).filter(|&i| !self.sub.is_offline(i)).count();
         let wait_ns: u64 = self
             .node_done
             .iter()
-            .zip(self.offline.iter())
-            .filter(|(_, &off)| !off)
-            .map(|(&d, _)| round_end - d)
+            .enumerate()
+            .filter(|(i, _)| !self.sub.is_offline(*i))
+            .map(|(_, &d)| round_end - d)
             .sum();
         self.queue.rebase(round_end);
         RoundTiming {
@@ -268,19 +211,13 @@ impl Fabric {
         let mut lost = 0u64;
         // adjacency lists are neighbor-sorted per Topology::build, so the
         // rng draw order is deterministic
-        for ni in 0..self.adj[i].len() {
-            let j = self.adj[i][ni];
-            if self.offline[j] {
-                continue;
-            }
-            let Some(link) = self.links.get_mut(&(i, j)) else {
-                continue; // churn added no links, only removes: skip
+        for ni in 0..self.sub.neighbors(i).len() {
+            let j = self.sub.neighbors(i)[ni];
+            let Some((arrive, dropped)) =
+                self.sub.transmit_on(i, j, ready, bytes)
+            else {
+                continue; // no link / link down / receiver offline
             };
-            if !link.up {
-                continue;
-            }
-            let (arrive, dropped) =
-                link.transmit(ready, bytes, &mut self.rng);
             if dropped {
                 lost += 1;
             } else {

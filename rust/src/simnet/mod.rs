@@ -13,29 +13,35 @@
 //!   transient stragglers;
 //! * [`churn`] — nodes leave/return and links fail/heal, rebuilding the
 //!   Metropolis confusion matrix (and ζ) on the live subgraph;
-//! * [`fabric`] — ties them together: one [`Fabric`] per run, one
-//!   [`fabric::RoundTiming`] per simulated round.
+//! * [`substrate`] — the shared live state (links, compute fleet,
+//!   offline set, churn, rng) every virtual-clock engine drives;
+//! * [`fabric`] — ties them together for the synchronous round barrier:
+//!   one [`Fabric`] per run, one [`fabric::RoundTiming`] per round.
 //!
 //! Entry points: [`crate::dfl::DflEngine::run_simulated`] wraps the
 //! matrix engine's rounds in a fabric (filling the
-//! `virtual_secs` / `straggler_wait_secs` metrics columns), and the
-//! `fig-time` CLI / `experiments::fig_time` driver reproduces the
-//! paper's loss-vs-time comparison on a bandwidth-constrained torus.
-//! Everything is a pure function of (seed, config): two identical runs
-//! produce byte-identical logs and event digests
-//! (`rust/tests/simnet_determinism.rs`).
+//! `virtual_secs` / `straggler_wait_secs` metrics columns), the
+//! asynchronous event-driven engine ([`crate::agossip`]) drives a
+//! [`Substrate`] from its own per-node state machines (no round
+//! barrier), and the `fig-time` CLI / `experiments::fig_time` driver
+//! reproduces the paper's loss-vs-time comparison on a
+//! bandwidth-constrained torus. Everything is a pure function of
+//! (seed, config): two identical runs produce byte-identical logs and
+//! event digests (`rust/tests/simnet_determinism.rs`).
 
 pub mod churn;
 pub mod clock;
 pub mod compute;
 pub mod fabric;
 pub mod link;
+pub mod substrate;
 
 pub use churn::{ChurnConfig, ChurnState};
 pub use clock::{ns_to_secs, secs_to_ns, EventQueue, VirtualTime};
 pub use compute::{ComputeModel, NodeCompute};
 pub use fabric::{Fabric, RoundTiming};
 pub use link::{Link, LinkModel};
+pub use substrate::Substrate;
 
 use crate::config::json::Json;
 use crate::config::ConfigError;

@@ -1,0 +1,182 @@
+//! The fabric substrate: per-link / per-node / churn state shared by
+//! every engine that runs on the simnet virtual clock.
+//!
+//! [`Fabric`](super::Fabric) (the synchronous round-barrier replay) and
+//! the asynchronous event-driven engine
+//! ([`crate::agossip::AsyncGossipEngine`]) need exactly the same live
+//! state — directed [`Link`]s with serialization, heterogeneous
+//! [`NodeCompute`] models, the offline set, and the churn process — but
+//! drive completely different event loops over it. The substrate owns
+//! that state plus the single rng stream the two consumers draw from, so
+//! both engines inherit the same determinism contract: state transitions
+//! and rng draws are a pure function of the (deterministic) order in
+//! which the owning engine calls in.
+//!
+//! Construction is bit-compatible with the pre-extraction `Fabric::new`:
+//! the same seed and config produce the same per-link bandwidth draws,
+//! compute fleet, and churn trajectory, so the synchronous replay
+//! digests recorded by `rust/tests/simnet_determinism.rs` are unchanged.
+
+use std::collections::BTreeMap;
+
+use super::churn::ChurnState;
+use super::clock::VirtualTime;
+use super::compute::NodeCompute;
+use super::link::Link;
+use super::NetworkConfig;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// FNV-1a offset basis — the shared seed of every event-stream digest.
+pub const DIGEST_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold one popped event `(time, kind, node)` into an FNV-1a digest.
+/// Both the synchronous fabric and the async engine fingerprint their
+/// event streams with this exact fold, so "byte-identical event digest"
+/// means the same thing for every engine on the virtual clock.
+#[inline]
+pub fn fold_event(digest: &mut u64, t: VirtualTime, kind: u64, node: u64) {
+    const PRIME: u64 = 0x100_0000_01b3;
+    for x in [t, kind, node] {
+        *digest = (*digest ^ x).wrapping_mul(PRIME);
+    }
+}
+
+/// Live deployment state under an engine-owned event loop.
+pub struct Substrate {
+    cfg: NetworkConfig,
+    /// per-directed-link live state, keyed (from, to) over the base graph
+    links: BTreeMap<(usize, usize), Link>,
+    /// current adjacency (changes under churn)
+    adj: Vec<Vec<usize>>,
+    /// nodes currently offline (empty without churn)
+    offline: Vec<bool>,
+    compute: Vec<NodeCompute>,
+    churn: Option<ChurnState>,
+    rng: Rng,
+}
+
+impl Substrate {
+    /// Assemble the substrate for `topo` with per-link models drawn from
+    /// the config (a dedicated rng stream per concern keeps the build
+    /// deterministic and independent of call order).
+    pub fn new(cfg: &NetworkConfig, topo: &Topology, seed: u64) -> Substrate {
+        let mut root = Rng::new(seed ^ 0x51A7_ABBE);
+        let mut build_rng = root.split(1);
+        let n = topo.n;
+        let mut links = BTreeMap::new();
+        // BTreeMap iteration and sorted insertion keep per-link draws in
+        // (from, to) order regardless of adjacency-list layout
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for (i, nbrs) in topo.adj.iter().enumerate() {
+            for &j in nbrs {
+                edges.push((i, j));
+            }
+        }
+        edges.sort_unstable();
+        for (i, j) in edges {
+            let mut model = cfg.link.clone();
+            if cfg.link_hetero_spread > 0.0 {
+                let factor =
+                    1.0 + cfg.link_hetero_spread * build_rng.uniform();
+                model.bandwidth_bps /= factor;
+            }
+            links.insert((i, j), Link::new(model));
+        }
+        let compute =
+            NodeCompute::fleet(&cfg.compute, n, &mut root.split(2));
+        let churn = if cfg.churn.enabled() {
+            Some(ChurnState::new(cfg.churn.clone(), topo, root.split(3)))
+        } else {
+            None
+        };
+        Substrate {
+            cfg: cfg.clone(),
+            links,
+            adj: topo.adj.clone(),
+            offline: vec![false; n],
+            compute,
+            churn,
+            rng: root.split(4),
+        }
+    }
+
+    /// Node count.
+    pub fn n(&self) -> usize {
+        self.offline.len()
+    }
+
+    /// Loss probability the engine's broadcast-level fault injection
+    /// should inherit (the old `drop_prob` knob, subsumed).
+    pub fn link_drop_prob(&self) -> f64 {
+        self.cfg.link.drop_prob
+    }
+
+    /// Current (churned) neighbors of node `i`.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Whether churn currently has node `i` offline.
+    pub fn is_offline(&self, i: usize) -> bool {
+        self.offline[i]
+    }
+
+    /// Whether the directed link i→j exists and currently carries
+    /// traffic (false for never-built links and churn-failed ones).
+    pub fn link_up(&self, i: usize, j: usize) -> bool {
+        self.links.get(&(i, j)).is_some_and(|l| l.up)
+    }
+
+    /// Run the churn process before epoch `k`; when the live graph
+    /// changed, returns the rebuilt topology (Metropolis weights, fresh
+    /// ζ) the owning engine must mix with from now on.
+    pub fn pre_round(&mut self, k: usize) -> Option<Topology> {
+        let churn = self.churn.as_mut()?;
+        let topo = churn.pre_round(k)?;
+        self.adj = topo.adj.clone();
+        for (&(i, j), link) in self.links.iter_mut() {
+            link.up = churn.link_up(i, j);
+        }
+        for (i, off) in self.offline.iter_mut().enumerate() {
+            *off = churn.offline().contains(&i);
+        }
+        Some(topo)
+    }
+
+    /// Queue `bytes` on the directed link i→j starting no earlier than
+    /// `ready`. Returns `None` when nothing was transmitted at all (no
+    /// such link, link down, or receiver offline — no rng consumed), or
+    /// `Some((arrival, dropped))`; a dropped message still occupied the
+    /// link (the sender transmitted it) but lands nowhere.
+    pub fn transmit_on(
+        &mut self,
+        i: usize,
+        j: usize,
+        ready: VirtualTime,
+        bytes: u64,
+    ) -> Option<(VirtualTime, bool)> {
+        if self.offline[j] {
+            return None;
+        }
+        let link = self.links.get_mut(&(i, j))?;
+        if !link.up {
+            return None;
+        }
+        Some(link.transmit(ready, bytes, &mut self.rng))
+    }
+
+    /// Virtual duration of node `i`'s τ local steps this round; returns
+    /// the duration and whether the node straggled.
+    pub fn local_update_ns(
+        &mut self,
+        i: usize,
+        tau: usize,
+    ) -> (VirtualTime, bool) {
+        self.compute[i].local_update_ns(
+            &self.cfg.compute,
+            tau,
+            &mut self.rng,
+        )
+    }
+}

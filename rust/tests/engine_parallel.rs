@@ -44,6 +44,8 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         eval_every: 1,
         parallelism,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

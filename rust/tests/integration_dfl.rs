@@ -31,6 +31,8 @@ fn blob_cfg() -> ExperimentConfig {
         eval_every: 1,
         parallelism: lmdfl::config::Parallelism::Auto,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     }
 }
 

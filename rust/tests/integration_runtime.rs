@@ -226,6 +226,8 @@ fn dfl_training_on_hlo_backend_converges() {
         eval_every: 1,
         parallelism: Parallelism::Auto,
         network: None,
+        mode: Default::default(),
+        agossip: None,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);

@@ -4,8 +4,9 @@
 //! all the way down to the serialized log. Plus the churn invariant:
 //! every rebuilt confusion matrix stays symmetric doubly stochastic.
 
+use lmdfl::agossip::{AsyncConfig, AsyncGossipEngine, AsyncRunLog, WaitPolicy};
 use lmdfl::config::{
-    DatasetKind, ExperimentConfig, QuantizerKind, TopologyKind,
+    DatasetKind, EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
 };
 use lmdfl::metrics::RunLog;
 use lmdfl::simnet::{
@@ -138,6 +139,85 @@ fn virtual_clock_is_monotone_under_churn_and_drops() {
             prev = r.virtual_secs;
         }
     }
+}
+
+/// Async-engine variant of the harsh config: same fabric, same seed,
+/// event-driven execution with a tight quorum timer so forced mixes
+/// and stale-timer events exercise the whole state machine.
+fn async_sim_cfg(churn: bool) -> ExperimentConfig {
+    let mut cfg = sim_cfg(QuantizerKind::LloydMax { s: 8, iters: 6 });
+    cfg.mode = EngineMode::Async;
+    cfg.agossip = Some(AsyncConfig {
+        wait_for: WaitPolicy::Quorum { k: 2 },
+        staleness_lambda: 0.5,
+        quorum_timeout_s: 0.2,
+    });
+    if !churn {
+        cfg.network.as_mut().unwrap().churn = Default::default();
+    }
+    cfg
+}
+
+fn run_async_once(cfg: &ExperimentConfig) -> AsyncRunLog {
+    AsyncGossipEngine::new(cfg).unwrap().run().unwrap()
+}
+
+fn assert_async_replay_identical(cfg: &ExperimentConfig) {
+    let mut a = run_async_once(cfg);
+    let mut b = run_async_once(cfg);
+    // identical event order and count
+    assert_eq!(a.event_digest, b.event_digest, "event order diverged");
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.messages_lost, b.messages_lost);
+    assert_eq!(a.forced_mixes, b.forced_mixes);
+    // per-node logs bit-identical (NodeRecord: PartialEq over f64 — a
+    // replay must reproduce every field exactly)
+    assert_eq!(a.nodes, b.nodes, "node records diverged");
+    // merged logs byte-identical once the one deliberately
+    // nondeterministic column (real wall-clock) is zeroed
+    for r in a
+        .merged
+        .records
+        .iter_mut()
+        .chain(b.merged.records.iter_mut())
+    {
+        r.wall_secs = 0.0;
+    }
+    assert_eq!(a.merged.records.len(), b.merged.records.len());
+    for (x, y) in a.merged.records.iter().zip(&b.merged.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        assert_eq!(x.virtual_secs.to_bits(), y.virtual_secs.to_bits());
+        assert_eq!(
+            x.straggler_wait_secs.to_bits(),
+            y.straggler_wait_secs.to_bits()
+        );
+        assert_eq!(x.bits_per_link, y.bits_per_link);
+        assert_eq!(x.levels, y.levels);
+    }
+    assert_eq!(a.merged.to_csv(), b.merged.to_csv());
+}
+
+#[test]
+fn async_replay_is_byte_identical() {
+    assert_async_replay_identical(&async_sim_cfg(false));
+}
+
+#[test]
+fn async_replay_is_byte_identical_under_churn() {
+    assert_async_replay_identical(&async_sim_cfg(true));
+}
+
+#[test]
+fn async_different_seeds_produce_different_timelines() {
+    let cfg_a = async_sim_cfg(false);
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.seed = 24;
+    let a = run_async_once(&cfg_a);
+    let b = run_async_once(&cfg_b);
+    assert_ne!(
+        a.event_digest, b.event_digest,
+        "seeds should change the event order"
+    );
 }
 
 #[test]
