@@ -80,9 +80,11 @@ impl Args {
             .ok_or_else(|| ArgError(format!("missing required --{name}")))
     }
 
-    pub fn get_usize(&self, name: &str, default: usize)
-        -> Result<usize, ArgError>
-    {
+    pub fn get_usize(
+        &self,
+        name: &str,
+        default: usize,
+    ) -> Result<usize, ArgError> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| {

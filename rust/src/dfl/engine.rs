@@ -532,8 +532,8 @@ mod tests {
                 )) as Box<dyn LocalUpdate>
             })
             .collect();
-        DflEngine::new(cfg, topo, data, backends,
-                       EngineOptions::default()).unwrap()
+        DflEngine::new(cfg, topo, data, backends, EngineOptions::default())
+            .unwrap()
     }
 
     #[test]
@@ -628,10 +628,12 @@ mod tests {
             assert!(r.distortion.is_finite());
             assert!(r.distortion >= 0.0);
             // Theorem 2 bound with slack: d/(12 s^2)
-            let bound =
-                e.param_count() as f64 / (12.0 * 256.0);
-            assert!(r.distortion <= bound * 2.0 + 0.05,
-                "distortion {} above bound {bound}", r.distortion);
+            let bound = e.param_count() as f64 / (12.0 * 256.0);
+            assert!(
+                r.distortion <= bound * 2.0 + 0.05,
+                "distortion {} above bound {bound}",
+                r.distortion
+            );
         }
     }
 
