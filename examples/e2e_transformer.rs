@@ -121,6 +121,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut log = RunLog::new("e2e_transformer");
     let mut cum_bits = 0u64;
+    let mut cum_wire = 0u64;
     let mut diff = vec![0.0f32; p];
     let mut dq = vec![0.0f32; p];
     let mut q1_all: Vec<Vec<f32>> = vec![vec![0.0; p]; nodes];
@@ -128,16 +129,20 @@ fn main() -> anyhow::Result<()> {
     for k in 0..rounds {
         let t0 = std::time::Instant::now();
         let mut round_bits = 0u64;
+        let mut round_wire = 0u64;
         let mut round_dist = 0.0f64;
 
         // ---- Eq. 22 (estimate-referenced): x̂ += γ·Q(x_k − x̂) ----------
-        for node in node_v.iter_mut() {
+        for (i, node) in node_v.iter_mut().enumerate() {
             for j in 0..p {
                 diff[j] = node.params[j] - node.hat[j];
             }
             let (msg, _) = lmdfl::quant::quantize_damped(
                 &mut node.quantizer, &diff, &mut node.rng, &mut dq);
             round_bits += msg.paper_bits();
+            // matrix-engine convention: encoded size × out-degree
+            round_wire +=
+                msg.wire_message_bytes() * topo.adj[i].len() as u64;
             for j in 0..p {
                 node.hat[j] += dq[j];
             }
@@ -183,6 +188,8 @@ fn main() -> anyhow::Result<()> {
                 &mut node.quantizer, &diff, &mut node.rng,
                 &mut q1_all[i]);
             round_bits += msg.paper_bits();
+            round_wire +=
+                msg.wire_message_bytes() * topo.adj[i].len() as u64;
             round_dist += omega;
             for j in 0..p {
                 node.hat[j] += q1_all[i][j];
@@ -228,6 +235,7 @@ fn main() -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("{e:?}"))?[0] as f64;
 
         cum_bits += round_bits / nodes as u64;
+        cum_wire += round_wire;
         let rec = RoundRecord {
             round: k + 1,
             loss: eval_loss,
@@ -239,6 +247,7 @@ fn main() -> anyhow::Result<()> {
             wall_secs: t0.elapsed().as_secs_f64(),
             virtual_secs: 0.0,
             straggler_wait_secs: 0.0,
+            wire_bytes: cum_wire,
         };
         println!(
             "round {:3}  eval-loss {:.4}  local-loss {:.4}  \

@@ -32,6 +32,7 @@ fn base_config() -> ExperimentConfig {
         parallelism: lmdfl::config::Parallelism::Auto,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     }
 }

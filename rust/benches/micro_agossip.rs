@@ -64,6 +64,7 @@ fn cfg(nodes: usize, mode: EngineMode) -> ExperimentConfig {
         parallelism: Parallelism::Off,
         network: Some(network()),
         mode,
+        encoding: Default::default(),
         agossip: Some(AsyncConfig {
             wait_for: WaitPolicy::Quorum { k: 2 },
             staleness_lambda: 0.5,

@@ -35,6 +35,7 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         parallelism: lmdfl::config::Parallelism::Auto,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     }
 }

@@ -7,7 +7,7 @@
 use lmdfl::bench::{black_box, Bencher};
 use lmdfl::quant::kernels;
 use lmdfl::quant::{
-    build_quantizer, codec, AlqQuantizer, LloydMaxQuantizer,
+    build_quantizer, codec, wire, AlqQuantizer, LloydMaxQuantizer,
     NaturalQuantizer, QsgdQuantizer, Quantizer,
 };
 use lmdfl::util::rng::Rng;
@@ -54,6 +54,32 @@ fn main() {
         let bytes = codec::encode(&msg);
         b.run_elems(&format!("codec decode d={d}"), d as u64, || {
             black_box(codec::decode(&bytes, |_| unreachable!()).unwrap());
+        });
+
+        // the versioned transport frame the engines actually broadcast
+        let header = wire::WireHeader::new(
+            wire::QuantTag::LloydMax,
+            0,
+            1,
+            7,
+            msg.s(),
+        );
+        let mut wire_buf: Vec<u8> = Vec::new();
+        b.run_elems(&format!("wire encode d={d}"), d as u64, || {
+            wire_buf = wire::encode_with_buf(
+                &header,
+                &msg,
+                std::mem::take(&mut wire_buf),
+            );
+            black_box(&wire_buf);
+        });
+        let wire_bytes = wire::encode(&header, &msg);
+        let mut wire_cache = wire::ImpliedCache::new();
+        let mut wire_out = lmdfl::quant::QuantizedVector::empty();
+        b.run_elems(&format!("wire decode d={d}"), d as u64, || {
+            wire::decode_into(&wire_bytes, &mut wire_cache, &mut wire_out)
+                .unwrap();
+            black_box(&wire_out);
         });
         let mut buf = vec![0.0f32; d];
         b.run_elems(&format!("dequantize_into d={d}"), d as u64, || {

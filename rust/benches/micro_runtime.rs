@@ -40,6 +40,7 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         parallelism,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     }
 }

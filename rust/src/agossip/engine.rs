@@ -56,11 +56,12 @@
 
 use std::sync::Arc;
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, WireEncoding};
 use crate::data::Dataset;
 use crate::dfl::backend::LocalUpdate;
 use crate::dfl::core::{self, NodeCore};
 use crate::metrics::{RoundRecord, RunLog};
+use crate::quant::wire;
 use crate::simnet::clock::{
     ns_to_secs, secs_to_ns, EventQueue, VirtualTime,
 };
@@ -91,6 +92,9 @@ pub struct NodeRecord {
     pub stale_mean: f64,
     /// whether the quorum timer forced this mix
     pub forced: bool,
+    /// measured wire bytes of this round's broadcast message (the
+    /// encoded [`crate::quant::wire`] frame)
+    pub wire_bytes: u64,
 }
 
 /// Everything an asynchronous run produces.
@@ -111,6 +115,24 @@ pub struct AsyncRunLog {
     pub forced_mixes: u64,
     /// straggling local-update draws
     pub stragglers: u64,
+    /// Σ measured bytes over all broadcasts (one encoded message each)
+    pub wire_bytes: u64,
+    /// Σ measured bytes over every transmitted link copy, counted at
+    /// the engine's transmit call sites
+    pub link_bytes: u64,
+    /// the substrate's independent per-copy byte meter — must equal
+    /// `link_bytes` exactly (asserted by the torus-16 preset tests)
+    pub fabric_link_bytes: u64,
+}
+
+/// What a broadcast physically carries (see
+/// [`crate::config::WireEncoding`]): the matrix-form damped delta, or
+/// the encoded wire frame receivers must decode. One `Arc` per
+/// broadcast either way; peers clone handles, not payloads.
+#[derive(Clone)]
+enum Payload {
+    Delta(Arc<[f32]>),
+    Wire(Arc<[u8]>),
 }
 
 /// Simulation events. Stale generations/epochs are ignored on pop.
@@ -121,7 +143,7 @@ enum AEv {
         from: usize,
         /// sender's completed-round count when the message departed
         round: usize,
-        delta: Arc<[f32]>,
+        payload: Payload,
     },
     QuorumTimeout { node: usize, epoch: u64 },
     /// Zero-delay quorum re-check (a neighbor finished, or churn
@@ -168,6 +190,8 @@ struct AsyncNode {
     pending_loss: f64,
     /// ω̂ of the last broadcast message
     last_distortion: f64,
+    /// measured wire bytes of the last broadcast message
+    last_wire_bytes: u64,
     /// base-graph one-hop neighbors, sorted (fixed for the run; churn
     /// gates traffic at the link layer and zeroes Metropolis weights)
     nbrs: Vec<usize>,
@@ -208,6 +232,10 @@ pub struct AsyncGossipEngine {
     /// Σ paper bits over all broadcast messages (each directed link
     /// carries one copy, so /n is the mean per-link cost)
     bits_acc: u64,
+    /// Σ measured wire bytes over all broadcasts (one message each)
+    wire_acc: u64,
+    /// Σ measured wire bytes over every transmitted link copy
+    link_bytes: u64,
     /// next global-round watermark to evaluate
     eval_round: usize,
     total_mixes: u64,
@@ -266,6 +294,7 @@ impl AsyncGossipEngine {
                     wait_start: 0,
                     pending_loss: f64::NAN,
                     last_distortion: 0.0,
+                    last_wire_bytes: 0,
                     nbr_hat: vec![vec![0.0; param_count]; deg],
                     fresh: vec![false; deg],
                     heard: vec![false; deg],
@@ -295,6 +324,8 @@ impl AsyncGossipEngine {
             merged: RunLog::new(&cfg.name),
             node_records: Vec::new(),
             bits_acc: 0,
+            wire_acc: 0,
+            link_bytes: 0,
             eval_round: 0,
             total_mixes: 0,
             churn_epochs: 0,
@@ -324,9 +355,9 @@ impl AsyncGossipEngine {
                     fold_event(&mut self.digest, t, 1, node as u64);
                     self.on_compute_done(node, gen, t)?;
                 }
-                AEv::Arrive { to, from, round, delta } => {
+                AEv::Arrive { to, from, round, payload } => {
                     fold_event(&mut self.digest, t, 2, to as u64);
-                    self.on_arrive(to, from, round, &delta, t)?;
+                    self.on_arrive(to, from, round, &payload, t)?;
                 }
                 AEv::QuorumTimeout { node, epoch } => {
                     fold_event(&mut self.digest, t, 3, node as u64);
@@ -355,6 +386,9 @@ impl AsyncGossipEngine {
             messages_lost: self.messages_lost,
             forced_mixes: self.forced_mixes,
             stragglers: self.stragglers,
+            wire_bytes: self.wire_acc,
+            link_bytes: self.link_bytes,
+            fabric_link_bytes: self.sub.bytes_on_wire(),
         })
     }
 
@@ -403,7 +437,7 @@ impl AsyncGossipEngine {
             return Ok(());
         }
         let lr = self.cfg.lr.at(self.nodes[i].round) as f32;
-        let (delta, wire_bytes, paper_bits, round) = {
+        let (payload, wire_bytes, paper_bits, round) = {
             let node = &mut self.nodes[i];
             let backend = self.backends[i].as_mut();
             let loss = node.core.local_steps(
@@ -415,29 +449,55 @@ impl AsyncGossipEngine {
             )?;
             node.pending_loss = loss;
             node.core.observe_local_loss(loss);
-            let st = node.core.quantize_delta();
+            // one shared dispatch point with the sync engine (round
+            // key = the node's LOCAL round here, phase always 0)
+            let st = node.core.broadcast_delta(
+                self.cfg.encoding,
+                node.round as u32,
+                0,
+                i as u32,
+            )?;
+            // in-flight copy either way: receivers reconstruct this
+            // exact broadcast, keeping their estimate column equal to
+            // the sender's x̂ (absent drops). The bitstream path ships
+            // the encoded wire frame itself; the sender's own estimate
+            // already advanced from a decode of those same bytes
+            let payload = match self.cfg.encoding {
+                WireEncoding::Matrix => {
+                    Payload::Delta(Arc::from(&node.core.dq[..]))
+                }
+                WireEncoding::Bitstream => {
+                    Payload::Wire(Arc::from(node.core.enc.as_slice()))
+                }
+            };
             node.last_distortion = st.distortion;
-            // in-flight copy: receivers apply this exact delta, keeping
-            // their estimate column equal to the sender's x̂ (absent
-            // drops)
-            let delta: Arc<[f32]> = Arc::from(&node.core.dq[..]);
-            (delta, st.wire_bytes, st.paper_bits, node.round)
+            node.last_wire_bytes = st.wire_bytes;
+            (payload, st.wire_bytes, st.paper_bits, node.round)
         };
         self.bits_acc += paper_bits;
+        self.wire_acc += wire_bytes;
         for idx in 0..self.nodes[i].nbrs.len() {
             let j = self.nodes[i].nbrs[idx];
             match self.sub.transmit_on(i, j, t, wire_bytes) {
                 None => {} // no link / link down / receiver offline
-                Some((_, true)) => self.messages_lost += 1,
-                Some((arrive, false)) => self.queue.schedule(
-                    arrive,
-                    AEv::Arrive {
-                        to: j,
-                        from: i,
-                        round,
-                        delta: Arc::clone(&delta),
-                    },
-                ),
+                Some((_, true)) => {
+                    // transmitted then lost in flight: the copy still
+                    // occupied the link, so it still counts
+                    self.messages_lost += 1;
+                    self.link_bytes += wire_bytes;
+                }
+                Some((arrive, false)) => {
+                    self.link_bytes += wire_bytes;
+                    self.queue.schedule(
+                        arrive,
+                        AEv::Arrive {
+                            to: j,
+                            from: i,
+                            round,
+                            payload: payload.clone(),
+                        },
+                    );
+                }
             }
         }
         {
@@ -450,13 +510,15 @@ impl AsyncGossipEngine {
 
     /// A quantized delta from `from` lands at `to`: apply it to the
     /// receiver's estimate column (durable mailbox — applied even while
-    /// the receiver is offline) and re-check the quorum.
+    /// the receiver is offline) and re-check the quorum. Wire payloads
+    /// are reconstructed exclusively from the received bytes; malformed
+    /// frames or headers contradicting the link metadata are errors.
     fn on_arrive(
         &mut self,
         to: usize,
         from: usize,
         round: usize,
-        delta: &Arc<[f32]>,
+        payload: &Payload,
         t: VirtualTime,
     ) -> anyhow::Result<()> {
         {
@@ -465,10 +527,37 @@ impl AsyncGossipEngine {
             else {
                 return Ok(());
             };
-            crate::quant::kernels::add_assign(
-                &mut node.nbr_hat[idx],
-                delta,
-            );
+            match payload {
+                Payload::Delta(delta) => {
+                    crate::quant::kernels::add_assign(
+                        &mut node.nbr_hat[idx],
+                        delta,
+                    );
+                }
+                Payload::Wire(bytes) => {
+                    let h = wire::decode_into(
+                        bytes,
+                        &mut node.core.implied,
+                        &mut node.core.dec,
+                    )
+                    .map_err(|e| {
+                        anyhow::anyhow!(
+                            "node {to}: bad wire message from {from}: {e}"
+                        )
+                    })?;
+                    anyhow::ensure!(
+                        h.sender as usize == from
+                            && h.round as usize == round,
+                        "wire header (sender {}, round {}) contradicts \
+                         the event (from {from}, round {round})",
+                        h.sender,
+                        h.round
+                    );
+                    node.core
+                        .dec
+                        .dequantize_accumulate_into(&mut node.nbr_hat[idx]);
+                }
+            }
             node.heard[idx] = true;
             // the message carries the sender's actual round count, so
             // drops never let the Staleness policy's view of a neighbor
@@ -641,6 +730,7 @@ impl AsyncGossipEngine {
                     0.0
                 },
                 forced,
+                wire_bytes: node.last_wire_bytes,
             });
             node.round += 1;
             node.epoch += 1;
@@ -820,6 +910,9 @@ impl AsyncGossipEngine {
                 } else {
                     0.0
                 },
+                // measured per-copy bytes on links at this watermark:
+                // the substrate meter, same truth run_simulated reports
+                wire_bytes: self.sub.bytes_on_wire(),
             });
             self.eval_round += 1;
         }
@@ -872,6 +965,7 @@ mod tests {
     use crate::agossip::WaitPolicy;
     use crate::config::{
         BackendKind, DatasetKind, EngineMode, QuantizerKind, TopologyKind,
+        WireEncoding,
     };
     use crate::simnet::{ComputeModel, LinkModel, NetworkConfig};
 
@@ -1021,6 +1115,50 @@ mod tests {
         // the schedule starts at s1 and only ascends; by the first
         // watermark the mean is at least s1
         assert!(log.merged.records.first().unwrap().levels >= 4);
+    }
+
+    #[test]
+    fn matrix_and_bitstream_encodings_bit_identical_async() {
+        // in-module smoke for the async half of the encoding parity
+        // contract (the full harsh-network version lives in
+        // rust/tests/simnet_determinism.rs)
+        let mut cfg =
+            async_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.rounds = 6;
+        cfg.encoding = WireEncoding::Matrix;
+        let m = run(&cfg);
+        cfg.encoding = WireEncoding::Bitstream;
+        let b = run(&cfg);
+        assert_eq!(m.event_digest, b.event_digest);
+        assert_eq!(m.events, b.events);
+        assert_eq!(m.nodes, b.nodes);
+        assert_eq!(m.wire_bytes, b.wire_bytes);
+        assert_eq!(m.link_bytes, b.link_bytes);
+        for (x, y) in m.merged.records.iter().zip(&b.merged.records) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.wire_bytes, y.wire_bytes);
+        }
+    }
+
+    #[test]
+    fn wire_byte_meters_agree() {
+        let cfg = async_cfg(QuantizerKind::Qsgd { s: 16 });
+        let log = run(&cfg);
+        // engine-side per-copy count == the substrate's independent
+        // meter, byte for byte
+        assert_eq!(log.link_bytes, log.fabric_link_bytes);
+        assert!(log.wire_bytes > 0);
+        // without churn every broadcast yields exactly one mix record
+        let per_record: u64 =
+            log.nodes.iter().map(|r| r.wire_bytes).sum();
+        assert_eq!(per_record, log.wire_bytes);
+        // merged rows carry the cumulative fabric meter
+        let mut prev = 0u64;
+        for r in &log.merged.records {
+            assert!(r.wire_bytes >= prev);
+            prev = r.wire_bytes;
+        }
+        assert!(prev <= log.fabric_link_bytes);
     }
 
     #[test]

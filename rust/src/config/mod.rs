@@ -6,7 +6,7 @@ pub mod schema;
 pub use json::Json;
 pub use schema::{
     BackendKind, ConfigError, DatasetKind, EngineMode, ExperimentConfig,
-    LrSchedule, Parallelism, QuantizerKind, TopologyKind,
+    LrSchedule, Parallelism, QuantizerKind, TopologyKind, WireEncoding,
 };
 
 use std::path::Path;

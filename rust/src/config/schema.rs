@@ -332,6 +332,44 @@ impl Parallelism {
     }
 }
 
+/// What the gossip engines actually transmit per broadcast: the packed
+/// [`crate::quant::wire`] bitstream (neighbors reconstruct exclusively
+/// from the encoded bytes, and byte accounting is the measured encoded
+/// length) or the legacy matrix form (dequantized deltas applied
+/// directly, with byte accounting from the same exact size formula).
+/// The two paths produce bit-identical models for every quantizer —
+/// enforced by `rust/tests/simnet_determinism.rs` — so this is purely a
+/// transport/verification knob.
+///
+/// JSON / CLI forms: `"bitstream"` (default) or `"matrix"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireEncoding {
+    /// legacy in-memory exchange of dequantized deltas
+    Matrix,
+    /// encode/decode the versioned wire frame per broadcast
+    #[default]
+    Bitstream,
+}
+
+impl WireEncoding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireEncoding::Matrix => "matrix",
+            WireEncoding::Bitstream => "bitstream",
+        }
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self, ConfigError> {
+        match text {
+            "matrix" => Ok(WireEncoding::Matrix),
+            "bitstream" => Ok(WireEncoding::Bitstream),
+            other => Err(bad(format!(
+                "encoding must be 'matrix' or 'bitstream', got '{other}'"
+            ))),
+        }
+    }
+}
+
 /// Which gossip engine executes a simulated run: the synchronous
 /// round-barrier matrix engine ([`crate::dfl::DflEngine`]) or the
 /// asynchronous event-driven engine
@@ -444,6 +482,8 @@ pub struct ExperimentConfig {
     pub network: Option<crate::simnet::NetworkConfig>,
     /// which engine executes simulated runs (`sync` default / `async`)
     pub mode: EngineMode,
+    /// what broadcasts physically carry (`bitstream` default / `matrix`)
+    pub encoding: WireEncoding,
     /// `async:` section — quorum policy, staleness weighting, and timer
     /// knobs of the asynchronous engine. `None` = defaults. Only
     /// consulted when `mode == async`. See [`crate::agossip`].
@@ -470,6 +510,7 @@ impl Default for ExperimentConfig {
             parallelism: Parallelism::Auto,
             network: None,
             mode: EngineMode::Sync,
+            encoding: WireEncoding::Bitstream,
             agossip: None,
         }
     }
@@ -549,6 +590,9 @@ impl ExperimentConfig {
         if self.mode != EngineMode::Sync {
             pairs.push(("mode", Json::str(self.mode.name())));
         }
+        if self.encoding != WireEncoding::default() {
+            pairs.push(("encoding", Json::str(self.encoding.name())));
+        }
         if let Some(a) = &self.agossip {
             pairs.push(("async", a.to_json()));
         }
@@ -602,6 +646,10 @@ impl ExperimentConfig {
             mode: match j.get_str("mode") {
                 Some(m) => EngineMode::parse_str(m)?,
                 None => EngineMode::Sync,
+            },
+            encoding: match j.get_str("encoding") {
+                Some(e) => WireEncoding::parse_str(e)?,
+                None => WireEncoding::default(),
             },
             agossip: match j.get("async") {
                 Some(aj) => {
@@ -761,6 +809,35 @@ mod tests {
         .is_err());
         assert!(ExperimentConfig::parse(
             r#"{"name": "m", "async": {"staleness_lambda": 0.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn encoding_forms_parse_and_roundtrip() {
+        // absent -> bitstream (the default transport)
+        let cfg = ExperimentConfig::parse(r#"{"name": "e"}"#).unwrap();
+        assert_eq!(cfg.encoding, WireEncoding::Bitstream);
+        // explicit forms
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "e", "encoding": "matrix"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.encoding, WireEncoding::Matrix);
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "e", "encoding": "bitstream"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.encoding, WireEncoding::Bitstream);
+        // non-default form survives a to_json roundtrip
+        let mut cfg = ExperimentConfig::default();
+        cfg.encoding = WireEncoding::Matrix;
+        let back =
+            ExperimentConfig::parse(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(back, cfg);
+        // unknown form rejected
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "e", "encoding": "telepathy"}"#
         )
         .is_err());
     }

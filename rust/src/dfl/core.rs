@@ -16,10 +16,11 @@
 //! (sampler = `split(i)`, node = `split(0x1000 + i)`), so extracting
 //! the core changed no byte of the synchronous trajectories.
 
-use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::config::{ExperimentConfig, QuantizerKind, WireEncoding};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::quant::adaptive::AdaptiveLevels;
+use crate::quant::wire::{self, QuantTag, WireHeader};
 use crate::quant::{build_quantizer, QuantizedVector, Quantizer};
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
@@ -29,8 +30,10 @@ use crate::util::rng::Rng;
 pub struct DeltaStats {
     /// paper bits (Eq. 12) of the message
     pub paper_bits: u64,
-    /// measured wire bytes (codec framing included) — what a simnet
-    /// fabric puts on the links
+    /// wire bytes of the encoded [`crate::quant::wire`] message (header
+    /// + codec framing) — what a simnet fabric puts on the links. The
+    /// bitstream path measures the actual encoded buffer; the matrix
+    /// path uses the exact size formula (the two are asserted equal)
     pub wire_bytes: u64,
     /// measured relative distortion ω̂
     pub distortion: f64,
@@ -46,6 +49,8 @@ pub struct NodeCore {
     pub quantizer: Box<dyn Quantizer>,
     pub adaptive: Option<AdaptiveLevels>,
     pub rng: Rng,
+    /// configured quantizer family (the wire message's [`QuantTag`])
+    pub kind: QuantizerKind,
     // ---- preallocated scratch (rounds allocate nothing after warm-up) --
     /// delta scratch: x − x̂
     pub diff: Vec<f32>,
@@ -53,6 +58,12 @@ pub struct NodeCore {
     pub dq: Vec<f32>,
     /// reusable quantized-message buffer
     pub msg: QuantizedVector,
+    /// encoded wire-message scratch (`encoding: bitstream` broadcasts)
+    pub enc: Vec<u8>,
+    /// wire-decode scratch: the message reconstructed from `enc`
+    pub dec: QuantizedVector,
+    /// receive-side implied-level-table cache
+    pub implied: wire::ImpliedCache,
     /// mini-batch index / feature / label scratch
     batch_idx: Vec<usize>,
     batch_x: Vec<f32>,
@@ -92,9 +103,13 @@ impl NodeCore {
                 quantizer: build_quantizer(&cfg.quantizer),
                 adaptive,
                 rng: rng.split(0x1000 + i as u64),
+                kind: cfg.quantizer.clone(),
                 diff: vec![0.0; param_count],
                 dq: vec![0.0; param_count],
                 msg: QuantizedVector::empty(),
+                enc: Vec::new(),
+                dec: QuantizedVector::empty(),
+                implied: wire::ImpliedCache::new(),
                 batch_idx: Vec::new(),
                 batch_x: Vec::new(),
                 batch_y: Vec::new(),
@@ -142,30 +157,128 @@ impl NodeCore {
         }
     }
 
-    /// Quantized differential broadcast (Eq. 22 one step):
-    /// `q = Q(x − x̂); x̂ += q`. The damped dequantized delta is left in
-    /// `self.dq` and the wire message in `self.msg` for the caller to
-    /// ship; returns the message stats.
-    pub fn quantize_delta(&mut self) -> DeltaStats {
+    /// Quantize the differential without touching the estimate: fills
+    /// `self.msg` (the wire message) and `self.dq` (the damped delta,
+    /// bit-identical to what a receiver reconstructs from the bytes);
+    /// returns ω̂.
+    fn prepare_delta(&mut self) -> f64 {
         crate::quant::kernels::sub_into(
             &mut self.diff,
             &self.params,
             &self.hat,
         );
-        let omega = crate::quant::quantize_damped_into(
+        crate::quant::quantize_damped_into(
             self.quantizer.as_mut(),
             &self.diff,
             &mut self.rng,
             &mut self.dq,
             &mut self.msg,
-        );
+        )
+    }
+
+    /// Quantized differential broadcast (Eq. 22 one step):
+    /// `q = Q(x − x̂); x̂ += q`, exchanged in matrix form. The damped
+    /// dequantized delta is left in `self.dq` and the message in
+    /// `self.msg` for the caller to ship; returns the message stats
+    /// (`wire_bytes` from the exact encoded-size formula).
+    pub fn quantize_delta(&mut self) -> DeltaStats {
+        let omega = self.prepare_delta();
         let stats = DeltaStats {
             paper_bits: self.msg.paper_bits(),
-            wire_bytes: self.msg.wire_bits() / 8,
+            wire_bytes: self.msg.wire_message_bytes(),
             distortion: omega,
         };
         crate::quant::kernels::add_assign(&mut self.hat, &self.dq);
         stats
+    }
+
+    /// Bitstream variant of [`quantize_delta`](Self::quantize_delta):
+    /// encodes the message into the versioned wire frame (left in
+    /// `self.enc` for the caller to ship), then advances the estimate
+    /// exclusively from the *decoded bytes* — the exact reconstruction
+    /// every receiver of the broadcast performs. `wire_bytes` is the
+    /// measured encoded length.
+    pub fn quantize_delta_wire(
+        &mut self,
+        round: u32,
+        phase: u8,
+        sender: u32,
+    ) -> anyhow::Result<DeltaStats> {
+        let omega = self.prepare_delta();
+        // tag the frame with the ACTIVE quantizer — set_all_quantizers
+        // (extension baselines) may have swapped it away from the
+        // configured kind, and an implied-table message under a wrong
+        // tag would reconstruct the wrong level table (or refuse to)
+        let tag = match QuantTag::from_name(self.quantizer.name()) {
+            Some(t) => t,
+            None => {
+                // unknown custom quantizer: fine when the table is
+                // shipped (the tag is then only a label), but an
+                // implied table under a borrowed tag would silently
+                // rebuild the WRONG levels at every receiver — refuse
+                anyhow::ensure!(
+                    !self.msg.implied_table,
+                    "quantizer '{}' has no wire tag but produced an \
+                     implied-table message: receivers could not \
+                     rebuild its levels",
+                    self.quantizer.name()
+                );
+                QuantTag::from_kind(&self.kind)
+            }
+        };
+        let header = WireHeader::new(
+            tag,
+            phase,
+            sender,
+            round,
+            self.msg.s(),
+        );
+        self.enc = wire::encode_with_buf(
+            &header,
+            &self.msg,
+            std::mem::take(&mut self.enc),
+        );
+        debug_assert_eq!(
+            self.enc.len() as u64,
+            self.msg.wire_message_bytes(),
+            "encoded length disagrees with the size formula"
+        );
+        let stats = DeltaStats {
+            paper_bits: self.msg.paper_bits(),
+            wire_bytes: self.enc.len() as u64,
+            distortion: omega,
+        };
+        let back =
+            wire::decode_into(&self.enc, &mut self.implied, &mut self.dec)
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "node {sender}: own broadcast failed to decode: {e}"
+                    )
+                })?;
+        debug_assert_eq!(back, header);
+        debug_assert_eq!(self.dec, self.msg, "wire roundtrip drifted");
+        self.dec.dequantize_accumulate_into(&mut self.hat);
+        Ok(stats)
+    }
+
+    /// One broadcast under the configured transport — the single
+    /// dispatch point both engines share, so the matrix/bitstream
+    /// round-and-phase keying can never diverge between them. The
+    /// matrix delta stays in `self.dq`, the encoded frame (bitstream
+    /// only) in `self.enc`.
+    pub fn broadcast_delta(
+        &mut self,
+        encoding: WireEncoding,
+        round: u32,
+        phase: u8,
+        sender: u32,
+    ) -> anyhow::Result<DeltaStats> {
+        match encoding {
+            WireEncoding::Matrix => Ok(self.quantize_delta()),
+            WireEncoding::Bitstream => {
+                self.quantize_delta_wire(round, phase, sender)
+            }
+        }
     }
 }
 
@@ -292,6 +405,27 @@ mod tests {
         }
         let g2 = gap(node);
         assert!(g2 < g1, "estimate did not contract: {g1} -> {g2}");
+    }
+
+    #[test]
+    fn wire_and_matrix_delta_paths_match_bitwise() {
+        // the encoding parity contract at its root: advancing the
+        // estimate from decoded wire bytes is bit-identical to the
+        // matrix form, and both report the same wire size
+        let cfg = tiny_cfg();
+        let (mut a, _, _) = fleet(&cfg);
+        let (mut b, _, _) = fleet(&cfg);
+        for step in 0..5u32 {
+            let sa = a[0].quantize_delta();
+            let sb = b[0].quantize_delta_wire(step, 0, 0).unwrap();
+            assert_eq!(sa.paper_bits, sb.paper_bits);
+            assert_eq!(sa.wire_bytes, sb.wire_bytes);
+            assert_eq!(sa.distortion.to_bits(), sb.distortion.to_bits());
+            for (x, y) in a[0].hat.iter().zip(&b[0].hat) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert!(sb.wire_bytes >= wire::MIN_ENCODED_BYTES as u64);
+        }
     }
 
     #[test]

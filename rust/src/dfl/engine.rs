@@ -80,6 +80,22 @@ struct NodeRound {
     distortion: f64,
 }
 
+impl NodeRound {
+    /// Wire size q2 actually occupied on the links: an engine-level
+    /// dropped broadcast was still *transmitted* (receivers lost it),
+    /// so the same-dimension q1 size stands in (off by one adaptive
+    /// level step at most, since step C runs between them). The single
+    /// definition both the byte-accounting reduction and the fabric
+    /// charging use — they must never diverge.
+    fn effective_q2_wire_bytes(&self) -> u64 {
+        if self.q2_wire_bytes > 0 {
+            self.q2_wire_bytes
+        } else {
+            self.q1_wire_bytes
+        }
+    }
+}
+
 /// Per-node state: the shared [`NodeCore`] (learning state + scratch,
 /// also used by the async engine) plus this engine's per-round outputs.
 struct NodeState {
@@ -128,6 +144,10 @@ pub struct DflEngine {
     /// scratch: per-node wire bytes handed to the simnet fabric
     q2_wire: Vec<u64>,
     q1_wire: Vec<u64>,
+    /// exact per-node cumulative wire bytes (one encoded message per
+    /// broadcast; engine-dropped q2 broadcasts count their substituted
+    /// size, matching what the fabric is charged)
+    node_wire: Vec<u64>,
 }
 
 impl DflEngine {
@@ -182,7 +202,15 @@ impl DflEngine {
             mix_buf: vec![vec![0.0; param_count]; n],
             q2_wire: Vec::with_capacity(n),
             q1_wire: Vec::with_capacity(n),
+            node_wire: vec![0; n],
         })
+    }
+
+    /// Exact cumulative wire bytes each node has broadcast so far (one
+    /// encoded message per broadcast — multiply by the out-degree for
+    /// link-level totals).
+    pub fn node_wire_bytes(&self) -> &[u64] {
+        &self.node_wire
     }
 
     pub fn param_count(&self) -> usize {
@@ -274,10 +302,12 @@ impl DflEngine {
         // Each node touches only its own state; workers process contiguous
         // node ranges in index order (see module docs).
         let dataset = &self.dataset;
+        let encoding = self.cfg.encoding;
+        let round_key = k as u32;
         self.pool.run2(
             &mut self.nodes,
             &mut self.backends,
-            |_, node, backend| {
+            |i, node, backend| {
                 node.out = NodeRound::default();
 
                 // step A: mixing-delta message (Eq. 22 first term)
@@ -285,7 +315,9 @@ impl DflEngine {
                 let dropped = drop_prob > 0.0
                     && node.core.rng.uniform() < drop_prob;
                 if !dropped {
-                    let st = node.core.quantize_delta();
+                    let st = node.core.broadcast_delta(
+                        encoding, round_key, 0, i as u32,
+                    )?;
                     node.out.q2_bits = st.paper_bits;
                     node.out.q2_wire_bytes = st.wire_bytes;
                 }
@@ -305,7 +337,9 @@ impl DflEngine {
 
                 // step D: local-update delta q1 (Alg. 2 step 8)
                 // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
-                let st = node.core.quantize_delta();
+                let st = node.core.broadcast_delta(
+                    encoding, round_key, 2, i as u32,
+                )?;
                 node.out.q1_bits = st.paper_bits;
                 node.out.q1_wire_bytes = st.wire_bytes;
                 node.out.distortion = st.distortion;
@@ -318,11 +352,21 @@ impl DflEngine {
         let mut q2_bits_paper = 0u64;
         let mut distortion_sum = 0.0f64;
         let mut levels_now = 0usize;
-        for node in &self.nodes {
-            q1_bits_paper += node.out.q1_bits;
-            q2_bits_paper += node.out.q2_bits;
-            distortion_sum += node.out.distortion;
-            levels_now += node.core.quantizer.levels();
+        // measured wire bytes this round, counted per transmitted link
+        // copy (size × out-degree); an engine-dropped q2 broadcast was
+        // still transmitted, so it counts at the substituted q1 size —
+        // the same convention run_simulated charges the fabric with
+        let mut wire_link_bytes = 0u64;
+        for i in 0..n {
+            let out = self.nodes[i].out;
+            q1_bits_paper += out.q1_bits;
+            q2_bits_paper += out.q2_bits;
+            distortion_sum += out.distortion;
+            levels_now += self.nodes[i].core.quantizer.levels();
+            let q2_eff = out.effective_q2_wire_bytes();
+            self.node_wire[i] += q2_eff + out.q1_wire_bytes;
+            wire_link_bytes += (q2_eff + out.q1_wire_bytes)
+                * self.topology.adj[i].len() as u64;
         }
         levels_now /= n;
 
@@ -378,6 +422,7 @@ impl DflEngine {
             wall_secs: timer.elapsed_secs(),
             virtual_secs: 0.0,
             straggler_wait_secs: 0.0,
+            wire_bytes: wire_link_bytes, // cumulative handled by caller
         })
     }
 
@@ -419,6 +464,7 @@ impl DflEngine {
     ) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(&self.cfg.name);
         let mut cum_bits = 0u64;
+        let mut cum_wire = 0u64;
         for k in 0..self.cfg.rounds {
             if let Some(f) = fabric.as_deref_mut() {
                 if let Some(topo) = f.pre_round(k) {
@@ -430,19 +476,10 @@ impl DflEngine {
                 self.q2_wire.clear();
                 self.q1_wire.clear();
                 for node in &self.nodes {
-                    let q1 = node.out.q1_wire_bytes;
-                    // an engine-level dropped broadcast was still
-                    // *transmitted* (receivers lost it), so it occupies
-                    // the links; the same-dimension q1 wire size stands
-                    // in for the lost q2 (off by one adaptive level
-                    // step at most, since step C runs between them)
-                    let q2 = if node.out.q2_wire_bytes > 0 {
-                        node.out.q2_wire_bytes
-                    } else {
-                        q1
-                    };
-                    self.q2_wire.push(q2);
-                    self.q1_wire.push(q1);
+                    // same substitution as the reduction above — see
+                    // NodeRound::effective_q2_wire_bytes
+                    self.q2_wire.push(node.out.effective_q2_wire_bytes());
+                    self.q1_wire.push(node.out.q1_wire_bytes);
                 }
                 let timing = f.simulate_round(
                     self.cfg.tau,
@@ -451,6 +488,13 @@ impl DflEngine {
                 );
                 rec.virtual_secs = timing.virtual_secs;
                 rec.straggler_wait_secs = timing.straggler_wait_secs;
+                // the fabric's own byte meter is the accounting truth
+                // under churn (down links / offline receivers carry
+                // nothing; the engine-side estimate can't see that)
+                rec.wire_bytes = f.bytes_on_wire();
+            } else {
+                cum_wire += rec.wire_bytes;
+                rec.wire_bytes = cum_wire;
             }
             cum_bits += rec.bits_per_link;
             rec.bits_per_link = cum_bits;
@@ -516,6 +560,7 @@ mod tests {
             parallelism: Parallelism::Auto,
             network: None,
             mode: Default::default(),
+            encoding: Default::default(),
             agossip: None,
         }
     }
@@ -573,9 +618,40 @@ mod tests {
             build_engine(small_cfg(QuantizerKind::Qsgd { s: 16 }));
         let log = e.run().unwrap();
         let mut prev = 0;
+        let mut prev_wire = 0;
         for r in &log.records {
             assert!(r.bits_per_link > prev);
             prev = r.bits_per_link;
+            assert!(r.wire_bytes > prev_wire);
+            prev_wire = r.wire_bytes;
+        }
+        // per-node counters add up to the per-link total: ring degree 2
+        let per_node: u64 = e.node_wire_bytes().iter().sum();
+        assert_eq!(log.records.last().unwrap().wire_bytes, per_node * 2);
+    }
+
+    #[test]
+    fn matrix_and_bitstream_encodings_bit_identical() {
+        // the fast in-module smoke for the encoding parity contract;
+        // the full sync/async × every-quantizer matrix lives in
+        // rust/tests/simnet_determinism.rs
+        for quant in [
+            QuantizerKind::LloydMax { s: 8, iters: 5 },
+            QuantizerKind::Qsgd { s: 4 },
+        ] {
+            let mut cfg = small_cfg(quant);
+            cfg.encoding = crate::config::WireEncoding::Matrix;
+            let m = build_engine(cfg.clone()).run().unwrap();
+            cfg.encoding = crate::config::WireEncoding::Bitstream;
+            let b = build_engine(cfg).run().unwrap();
+            assert_eq!(m.records.len(), b.records.len());
+            for (x, y) in m.records.iter().zip(&b.records) {
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+                assert_eq!(x.distortion.to_bits(), y.distortion.to_bits());
+                assert_eq!(x.bits_per_link, y.bits_per_link);
+                assert_eq!(x.wire_bytes, y.wire_bytes);
+                assert_eq!(x.levels, y.levels);
+            }
         }
     }
 
@@ -669,6 +745,30 @@ mod tests {
             assert_eq!(a.bits_per_link, b.bits_per_link);
             assert_eq!(a.levels, b.levels);
         }
+    }
+
+    #[test]
+    fn swapped_quantizers_ship_wire_frames() {
+        // set_all_quantizers installs baselines the config enum does
+        // not know; under encoding: bitstream the frames must carry
+        // the ACTIVE quantizer's tag (an implied-table message under
+        // the configured kind's tag would refuse to self-decode)
+        let mut cfg = small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.rounds = 3;
+        // full precision: implied table, tag must say "full"
+        let mut e = build_engine(cfg.clone());
+        e.set_all_quantizers(|| {
+            Box::new(crate::quant::FullPrecision::new())
+        });
+        let log = e.run().unwrap();
+        assert!(log.last_loss().unwrap().is_finite());
+        // terngrad: a shipped-table extension baseline (new wire tag)
+        let mut e = build_engine(cfg);
+        e.set_all_quantizers(|| {
+            Box::new(crate::quant::TernGradQuantizer::new())
+        });
+        let log = e.run().unwrap();
+        assert!(log.last_loss().unwrap().is_finite());
     }
 
     #[test]

@@ -34,11 +34,8 @@ use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::adaptive::AdaptiveLevels;
-use crate::quant::codec;
-use crate::quant::{
-    build_quantizer, FullPrecision, NaturalQuantizer, QsgdQuantizer,
-    Quantizer,
-};
+use crate::quant::wire;
+use crate::quant::{build_quantizer, Quantizer};
 use crate::simnet::LinkModel;
 use crate::topology::Topology;
 use crate::util::rng::Rng;
@@ -90,17 +87,6 @@ impl NetOptions {
     /// setup (the old `drop_prob` field).
     pub fn lossy(drop_prob: f64) -> Self {
         NetOptions { link: LinkModel::lossy(drop_prob), eval_every: 1 }
-    }
-}
-
-/// Reconstruct the implied level table for table-less quantizer kinds.
-fn implied_levels(kind: &QuantizerKind, s: usize) -> Vec<f32> {
-    match kind {
-        QuantizerKind::Qsgd { .. } => QsgdQuantizer::level_table(s),
-        QuantizerKind::Natural { .. } => NaturalQuantizer::level_table(s),
-        QuantizerKind::Full => FullPrecision::level_table(s),
-        // adaptive quantizers always ship their table
-        _ => Vec::new(),
     }
 }
 
@@ -218,6 +204,7 @@ pub fn run_threaded(
                         } => Some(AdaptiveLevels::new(*s1, *s_max)),
                         _ => None,
                     };
+                    let tag = wire::QuantTag::from_kind(&kind);
                     let mut mailbox = Mailbox::new(my_rx);
                     let mut params = init.clone();
                     // own + per-neighbor estimates x̂
@@ -233,8 +220,7 @@ pub fn run_threaded(
                     let mut msg_out = crate::quant::QuantizedVector::empty();
                     let mut msg_in = crate::quant::QuantizedVector::empty();
                     let mut enc_buf: Vec<u8> = Vec::new();
-                    let mut implied_cache: HashMap<usize, Vec<f32>> =
-                        HashMap::new();
+                    let mut implied_cache = wire::ImpliedCache::new();
                     let tombstone: Arc<[u8]> =
                         Arc::from(Vec::new().into_boxed_slice());
                     let mut batch_idx: Vec<usize> = Vec::new();
@@ -264,7 +250,13 @@ pub fn run_threaded(
                                 quantizer.as_mut(), &diff, rng, &mut dq,
                                 &mut msg_out);
                             let q = &msg_out;
-                            enc_buf = codec::encode_with_buf(
+                            // the versioned wire frame: header (round /
+                            // sender / tag / bit-width) + codec body
+                            enc_buf = wire::encode_with_buf(
+                                &wire::WireHeader::new(
+                                    tag, phase, i as u32, k as u32,
+                                    q.s(),
+                                ),
                                 q,
                                 std::mem::take(&mut enc_buf),
                             );
@@ -302,18 +294,22 @@ pub fn run_threaded(
                                 if bytes.is_empty() {
                                     continue; // dropped: stale estimate
                                 }
-                                codec::decode_into(
+                                let h = wire::decode_into(
                                     &bytes,
-                                    |s, table: &mut Vec<f32>| {
-                                        let t = implied_cache
-                                            .entry(s)
-                                            .or_insert_with(|| {
-                                                implied_levels(&kind, s)
-                                            });
-                                        table.extend_from_slice(t);
-                                    },
+                                    &mut implied_cache,
                                     &mut msg_in,
                                 )?;
+                                anyhow::ensure!(
+                                    h.sender as usize == from
+                                        && h.round as usize == k
+                                        && h.phase == phase,
+                                    "wire header (sender {}, round {}, \
+                                     phase {}) contradicts mailbox key \
+                                     ({from}, {k}, {phase})",
+                                    h.sender,
+                                    h.round,
+                                    h.phase
+                                );
                                 msg_in
                                     .dequantize_accumulate_into(&mut hat[ni]);
                             }
@@ -402,6 +398,7 @@ pub fn run_threaded(
         // ---- coordinator: aggregate reports, evaluate ------------------
         let mut log = RunLog::new(&cfg.name);
         let mut cum_bits = 0u64;
+        let mut cum_wire_bytes = 0u64;
         let links = topology.directed_links().max(1) as u64;
         let mut per_round: HashMap<usize, Vec<NodeReport>> = HashMap::new();
         let mut done_rounds = 0usize;
@@ -453,6 +450,7 @@ pub fn run_threaded(
                 };
                 // per-directed-link average of measured wire bits
                 cum_bits += wire / links;
+                cum_wire_bytes += wire / 8;
                 log.push(RoundRecord {
                     round: k + 1,
                     loss,
@@ -464,6 +462,7 @@ pub fn run_threaded(
                     wall_secs: 0.0,
                     virtual_secs: 0.0,
                     straggler_wait_secs: 0.0,
+                    wire_bytes: cum_wire_bytes,
                 });
                 done_rounds += 1;
             }
@@ -506,6 +505,7 @@ mod tests {
             parallelism: crate::config::Parallelism::Auto,
             network: None,
             mode: Default::default(),
+            encoding: Default::default(),
             agossip: None,
         }
     }
@@ -537,10 +537,25 @@ mod tests {
         let c = cfg(QuantizerKind::Qsgd { s: 16 });
         let log = run(&c, NetOptions::default());
         let mut prev = 0;
+        let mut prev_wire = 0;
         for r in &log.records {
             assert!(r.bits_per_link > prev);
             prev = r.bits_per_link;
+            assert!(r.wire_bytes > prev_wire);
+            prev_wire = r.wire_bytes;
         }
+        // every per-copy payload is a whole wire frame: the per-round
+        // total is divisible by the per-message length (fixed s ⇒ one
+        // size), and a ring ships 2 messages × 2 links × n per round
+        let d = {
+            let m = crate::models::MlpModel::new(&[8, 16, 3]);
+            m.param_count()
+        };
+        let msg = crate::quant::wire::encoded_len(d, 16, true) as u64;
+        assert_eq!(
+            log.records.first().unwrap().wire_bytes,
+            msg * 2 * 2 * c.nodes as u64
+        );
     }
 
     #[test]

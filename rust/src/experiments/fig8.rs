@@ -106,6 +106,31 @@ pub fn render_bits_per_element(curves: &[Curve]) -> String {
     out
 }
 
+/// Measured-transport summary: paper-accounting bits per link beside
+/// the exact bytes of the encoded wire messages each curve broadcast
+/// (header + level table + packed sign/index payload — what the fabric
+/// actually carried).
+pub fn render_wire_totals(curves: &[Curve]) -> String {
+    let mut t = Table::new(&[
+        "curve",
+        "paper bits/link",
+        "measured wire bytes",
+    ]);
+    for c in curves {
+        let wire = c.log.records.last().map_or(0, |r| r.wire_bytes);
+        t.row(vec![
+            c.label.clone(),
+            c.log.total_bits().to_string(),
+            wire.to_string(),
+        ]);
+    }
+    let mut out = String::from(
+        "summary: paper bit accounting vs measured wire bytes\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
 /// Communication-efficiency summary: bits needed to reach a target loss.
 pub fn bits_to_target(curves: &[Curve], target: f64) -> String {
     let mut t = Table::new(&["curve", "target loss", "bits per link"]);

@@ -89,6 +89,7 @@ pub fn torus16_config(scale: Scale) -> ExperimentConfig {
         parallelism: crate::config::Parallelism::Auto,
         network: None, // filled by the driver per curve
         mode: EngineMode::Sync,
+        encoding: Default::default(),
         agossip: None,
     }
 }
@@ -232,20 +233,29 @@ pub fn render_loss_vs_time(curves: &[Curve]) -> String {
     out
 }
 
-/// Summary: virtual seconds (and straggler wait share) to a target loss.
+/// Summary: virtual seconds (and straggler wait share) to a target
+/// loss, plus the MEASURED bytes the fabric had carried by that same
+/// record (the sum of encoded wire-message lengths over every
+/// transmitted link copy up to the round the target was reached).
 pub fn time_to_target(curves: &[Curve], target: f64) -> String {
     let mut t = Table::new(&[
         "curve",
         "target loss",
         "virtual secs",
         "mean straggler wait",
+        "wire MB",
     ]);
     for c in curves {
-        let secs = c
-            .log
-            .virtual_secs_to_loss(target)
-            .map(|s| format!("{s:.2}"))
+        // secs and bytes come from the SAME record — the first one at
+        // or below the target — so the byte column answers "what did
+        // reaching the target cost", not "what did the whole run cost"
+        let hit = c.log.record_at_loss(target);
+        let secs = hit
+            .map(|r| format!("{:.2}", r.virtual_secs))
             .unwrap_or_else(|| "not reached".into());
+        let wire = hit
+            .map(|r| format!("{:.3}", r.wire_bytes as f64 / 1e6))
+            .unwrap_or_else(|| "-".into());
         let wait = c
             .log
             .records
@@ -258,6 +268,7 @@ pub fn time_to_target(curves: &[Curve], target: f64) -> String {
             fnum(target),
             secs,
             format!("{wait:.3}s"),
+            wire,
         ]);
     }
     t.render()
@@ -331,6 +342,77 @@ mod tests {
             asyn.last_loss().unwrap()
                 < asyn.records.first().unwrap().loss
         );
+    }
+
+    #[test]
+    fn torus16_bitstream_byte_accounting_is_exact() {
+        // acceptance: with encoding: bitstream, simnet byte accounting
+        // equals the sum of encoded WireMessage lengths exactly
+        let (mut cfg, net) = preset("torus-16", Scale::Quick).unwrap();
+        cfg.rounds = 4;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 320,
+            test: 80,
+            dim: 8,
+            classes: 4,
+        };
+        cfg.network = Some(net.clone());
+        assert_eq!(
+            cfg.encoding,
+            crate::config::WireEncoding::Bitstream
+        );
+        let topo = crate::topology::Topology::build(
+            &cfg.topology,
+            cfg.nodes,
+            cfg.seed,
+        );
+        let mut fabric =
+            crate::simnet::Fabric::new(&net, &topo, cfg.seed);
+        let mut trainer = crate::dfl::Trainer::build(&cfg).unwrap();
+        let log =
+            trainer.engine_mut().run_simulated(&mut fabric).unwrap();
+        // the 16-node torus is 4-regular and this preset has no churn,
+        // drops or offline nodes: every broadcast went out on exactly
+        // 4 links, so the fabric's independent byte meter must equal
+        // 4 × the engine's summed encoded message lengths, byte for byte
+        let sent: u64 =
+            trainer.engine().node_wire_bytes().iter().sum();
+        assert!(sent > 0);
+        assert_eq!(fabric.bytes_on_wire(), sent * 4);
+        assert_eq!(
+            log.records.last().unwrap().wire_bytes,
+            fabric.bytes_on_wire()
+        );
+    }
+
+    #[test]
+    fn async_torus16_bitstream_byte_accounting_is_exact() {
+        // the async half of the acceptance criterion, on the async
+        // preset's straggler-heavy fabric
+        let (mut cfg, net) =
+            preset("async-torus-16", Scale::Quick).unwrap();
+        cfg.rounds = 4;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 320,
+            test: 80,
+            dim: 8,
+            classes: 4,
+        };
+        cfg.network = Some(net);
+        cfg.mode = EngineMode::Async;
+        cfg.agossip = Some(async_torus16_policy());
+        let log = crate::agossip::AsyncGossipEngine::new(&cfg)
+            .unwrap()
+            .run()
+            .unwrap();
+        // engine-side per-copy count == the substrate's meter
+        assert_eq!(log.link_bytes, log.fabric_link_bytes);
+        // every broadcast produced one node record carrying its size
+        let sent: u64 = log.nodes.iter().map(|r| r.wire_bytes).sum();
+        assert!(sent > 0);
+        assert_eq!(sent, log.wire_bytes);
+        // 4-regular torus, no churn/offline: 4 copies per broadcast
+        assert_eq!(log.link_bytes, log.wire_bytes * 4);
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         parallelism: crate::config::Parallelism::Auto,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     }
 }

@@ -24,6 +24,9 @@ pub struct DistortionRow {
     pub s: usize,
     pub measured: f64,
     pub bound: f64,
+    /// measured bytes of one encoded wire message at (d, s) — the real
+    /// transport cost next to the paper's C_s bit accounting
+    pub wire_bytes: u64,
 }
 
 /// Generate a test vector of the named distribution.
@@ -75,11 +78,27 @@ pub fn measure(
     ];
     let mut rows = Vec::new();
     for (q, bound_fn) in quantizers.iter_mut() {
+        let tag = crate::quant::wire::QuantTag::from_name(q.name())
+            .expect("table quantizers all have wire tags");
         let mut acc = 0.0;
         let mut bound = 0.0;
+        let mut wire_bytes = 0u64;
         for t in 0..trials {
             let v = test_vector(dist, d, &mut rng.split(t as u64));
             let msg = q.quantize(&v, &mut rng);
+            if t + 1 == trials {
+                // measure the encoded transport frame, not a formula
+                // (once per row — the size depends only on (d, s))
+                let header = crate::quant::wire::WireHeader::new(
+                    tag,
+                    0,
+                    0,
+                    t as u32,
+                    msg.s(),
+                );
+                wire_bytes = crate::quant::wire::encode(&header, &msg)
+                    .len() as u64;
+            }
             let dq = msg.dequantize();
             acc += normalized_distortion(&v, &dq);
             bound = bound_fn(&msg.levels);
@@ -97,6 +116,7 @@ pub fn measure(
             s,
             measured: acc / trials as f64,
             bound,
+            wire_bytes,
         });
     }
     rows
@@ -106,6 +126,7 @@ pub fn measure(
 pub fn render(rows: &[DistortionRow]) -> String {
     let mut t = Table::new(&[
         "quantizer", "distribution", "d", "s", "measured", "paper bound",
+        "wire bytes",
     ]);
     for r in rows {
         t.row(vec![
@@ -115,6 +136,7 @@ pub fn render(rows: &[DistortionRow]) -> String {
             r.s.to_string(),
             fnum(r.measured),
             fnum(r.bound),
+            r.wire_bytes.to_string(),
         ]);
     }
     t.render()
@@ -159,6 +181,26 @@ mod tests {
                 r.bound
             );
         }
+    }
+
+    #[test]
+    fn wire_bytes_measured_per_quantizer() {
+        let rows = measure(500, 8, "gaussian", 1, 2);
+        let get = |name: &str| {
+            rows.iter()
+                .find(|r| r.quantizer == name)
+                .unwrap()
+                .wire_bytes
+        };
+        // QSGD implies its grid: the measured frame matches the exact
+        // size formula for an implied-table message
+        assert_eq!(
+            get("QSGD"),
+            crate::quant::wire::encoded_len(500, 8, true) as u64
+        );
+        // table-shipping quantizers pay for their adapted levels
+        assert!(get("LM-DFL") > get("QSGD"));
+        assert!(get("ALQ") > get("QSGD"));
     }
 
     #[test]

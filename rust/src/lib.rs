@@ -67,6 +67,20 @@
 //! async-torus-16` compares sync vs async under a straggler-heavy
 //! torus.
 //!
+//! ## The wire format ([`quant::wire`])
+//!
+//! Every broadcast — matrix engine, async engine, threaded runtime —
+//! is a versioned wire message: a 12-byte header (version, quantizer
+//! tag, phase, index bit-width, sender, round) followed by the packed
+//! sign/index codec body. With `encoding: "bitstream"` (the default)
+//! engines transmit the encoded bytes and reconstruct estimates
+//! exclusively by decoding them, and every byte-accounting figure is
+//! the measured encoded length (fabric meters count one copy per
+//! transmitted link); `encoding: "matrix"` keeps the legacy
+//! in-memory exchange, bit-identical by contract. The byte stream is
+//! pinned by golden fixtures (`rust/tests/wire_conformance.rs`);
+//! format changes must bump `WIRE_VERSION` and re-bless them.
+//!
 //! ## Bench reports
 //!
 //! Bench targets print a criterion-like text table and, when

@@ -18,6 +18,7 @@ use lmdfl::agossip::WaitPolicy;
 use lmdfl::cli::Args;
 use lmdfl::config::{
     EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
+    WireEncoding,
 };
 use lmdfl::experiments::{self, Scale};
 use lmdfl::metrics::{fnum, Table};
@@ -38,6 +39,8 @@ commands:
                         --straggler-slowdown F --churn-interval N
                         --churn-link-fail P --churn-link-heal P
                         --churn-node-leave P --churn-node-return P
+             broadcast transport (quant::wire; parity-tested paths):
+                        --encoding bitstream|matrix   (default bitstream)
              engine mode (async event-driven gossip, see agossip):
                         --mode sync|async
                         --async-wait-for all|quorum|staleness
@@ -211,6 +214,11 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
             args.get_f64("churn-node-return", net.churn.node_return_prob)?;
         cfg.network = Some(net);
     }
+    // broadcast transport: real codec bitstreams (default) or the
+    // legacy matrix exchange (bit-identical models either way)
+    if let Some(e) = args.get("encoding") {
+        cfg.encoding = WireEncoding::parse_str(e)?;
+    }
     // engine mode + async (agossip) flags
     if let Some(m) = args.get("mode") {
         cfg.mode = EngineMode::parse_str(m)?;
@@ -310,6 +318,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
              threads; async mode needs the simulated engine"
         );
     }
+    if args.has_flag("threaded") && cfg.encoding == WireEncoding::Matrix {
+        anyhow::bail!(
+            "--encoding matrix applies to the simulated engines only: \
+             the threaded runtime always ships encoded wire frames"
+        );
+    }
     let log = if args.has_flag("threaded") {
         if cfg.network.is_some() {
             eprintln!(
@@ -354,10 +368,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     println!(
-        "final: loss={} acc={} bits/link={} time@{}Mbps={:.1}ms",
+        "final: loss={} acc={} bits/link={} wire-bytes={} \
+         time@{}Mbps={:.1}ms",
         fnum(log.last_loss().unwrap_or(f64::NAN)),
         fnum(log.final_accuracy().unwrap_or(f64::NAN)),
         log.total_bits(),
+        log.records.last().map_or(0, |r| r.wire_bytes),
         cfg.link_bps / 1e6,
         log.total_bits() as f64 / cfg.link_bps * 1e3,
     );
@@ -432,6 +448,7 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
     let curves = experiments::fig4::run_mnist(scale_of(args))?;
     println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
     println!("{}", experiments::fig8::render_bits_per_element(&curves));
+    println!("{}", experiments::fig8::render_wire_totals(&curves));
     Ok(())
 }
 
@@ -463,6 +480,7 @@ fn cmd_fig8(args: &Args) -> anyhow::Result<()> {
     };
     println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
     println!("{}", experiments::fig8::render_bits_per_element(&curves));
+    println!("{}", experiments::fig8::render_wire_totals(&curves));
     Ok(())
 }
 

@@ -33,6 +33,12 @@ pub struct RoundRecord {
     /// mean virtual seconds nodes idled at this round's straggler
     /// barrier (simnet runs only)
     pub straggler_wait_secs: f64,
+    /// cumulative MEASURED wire bytes — the exact encoded
+    /// [`crate::quant::wire`] message lengths. Simulated runs count
+    /// every transmitted link copy (the fabric's byte meter); plain
+    /// matrix runs count per-broadcast size × out-degree; the threaded
+    /// runtime counts the bytes each node actually sent per link
+    pub wire_bytes: u64,
 }
 
 /// A full run: config echo + round series.
@@ -81,36 +87,37 @@ impl RunLog {
         self.records.iter().map(|r| r.virtual_secs).collect()
     }
 
+    /// The first record at or below the target loss — the single
+    /// definition of "reached the target" every to-target accessor and
+    /// report shares.
+    pub fn record_at_loss(&self, target: f64) -> Option<&RoundRecord> {
+        self.records.iter().find(|r| r.loss <= target)
+    }
+
     /// Virtual seconds needed to reach the target loss (simnet runs).
     pub fn virtual_secs_to_loss(&self, target: f64) -> Option<f64> {
-        self.records
-            .iter()
-            .find(|r| r.loss <= target)
-            .map(|r| r.virtual_secs)
+        self.record_at_loss(target).map(|r| r.virtual_secs)
     }
 
     /// First round index at which loss <= target (communication-efficiency
     /// comparisons: "bits to reach targeted training loss").
     pub fn rounds_to_loss(&self, target: f64) -> Option<usize> {
-        self.records.iter().find(|r| r.loss <= target).map(|r| r.round)
+        self.record_at_loss(target).map(|r| r.round)
     }
 
     /// Bits on one link needed to reach the target loss.
     pub fn bits_to_loss(&self, target: f64) -> Option<u64> {
-        self.records
-            .iter()
-            .find(|r| r.loss <= target)
-            .map(|r| r.bits_per_link)
+        self.record_at_loss(target).map(|r| r.bits_per_link)
     }
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,loss,accuracy,bits_per_link,distortion,levels,lr,\
-             wall_secs,virtual_secs,straggler_wait_secs\n",
+             wall_secs,virtual_secs,straggler_wait_secs,wire_bytes\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.loss,
                 r.accuracy,
@@ -120,7 +127,8 @@ impl RunLog {
                 r.lr,
                 r.wall_secs,
                 r.virtual_secs,
-                r.straggler_wait_secs
+                r.straggler_wait_secs,
+                r.wire_bytes
             ));
         }
         out
@@ -154,6 +162,10 @@ impl RunLog {
                                 (
                                     "straggler_wait_secs",
                                     Json::num(r.straggler_wait_secs),
+                                ),
+                                (
+                                    "wire_bytes",
+                                    Json::num(r.wire_bytes as f64),
                                 ),
                             ])
                         })
@@ -253,7 +265,20 @@ mod tests {
             wall_secs: 0.1,
             virtual_secs: round as f64 * 2.0,
             straggler_wait_secs: 0.0,
+            wire_bytes: bits / 8 * 10,
         }
+    }
+
+    #[test]
+    fn wire_bytes_serialized_in_csv_and_json() {
+        let mut log = RunLog::new("w");
+        log.push(rec(1, 2.0, 800));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert!(csv.lines().next().unwrap().ends_with("wire_bytes"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",1000"));
+        let j = log.to_json().to_string();
+        assert!(j.contains("\"wire_bytes\""), "{j}");
     }
 
     #[test]

@@ -230,6 +230,11 @@ impl<'a> BitReader<'a> {
         Ok(())
     }
 
+    /// Unread bits left in the stream (staged + unconsumed bytes).
+    pub fn bits_remaining(&self) -> u64 {
+        (self.buf.len() - self.pos) as u64 * 8 + self.nacc as u64
+    }
+
     pub fn read_u8(&mut self) -> Result<u8, CodecError> {
         Ok(self.read_bits(8)? as u8)
     }
@@ -273,6 +278,15 @@ pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
         out,
         encoded_bits(qv.dim(), qv.s(), qv.implied_table),
     );
+    encode_body(&mut w, qv);
+    w.into_bytes()
+}
+
+/// Write the self-describing message body (d, s, flags, norm, optional
+/// level table, sign bits, index bits) into `w`. Shared by the bare
+/// [`encode`] framing and the versioned transport frames of
+/// [`crate::quant::wire`], so the two formats cannot drift.
+pub fn encode_body(w: &mut BitWriter, qv: &QuantizedVector) {
     w.write_u32(qv.dim() as u32);
     w.write_u16(qv.s() as u16);
     w.write_u8(if qv.implied_table { 0 } else { 1 });
@@ -285,7 +299,6 @@ pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
     // signs and indices are the bulk of the stream: word-at-a-time
     w.write_bools(&qv.negative);
     w.write_packed(&qv.indices, ceil_log2(qv.s()));
-    w.into_bytes()
 }
 
 /// Decode. `implied_levels` supplies the level table when the flag says it
@@ -310,10 +323,20 @@ pub fn decode(
 /// may be partially overwritten — discard it.
 pub fn decode_into(
     bytes: &[u8],
-    mut fill_implied: impl FnMut(usize, &mut Vec<f32>),
+    fill_implied: impl FnMut(usize, &mut Vec<f32>),
     out: &mut QuantizedVector,
 ) -> Result<(), CodecError> {
     let mut r = BitReader::new(bytes);
+    decode_body(&mut r, fill_implied, out)
+}
+
+/// Parse the message body (see [`encode_body`]) from `r`'s current
+/// position. On error `out` may be partially overwritten — discard it.
+pub fn decode_body(
+    r: &mut BitReader<'_>,
+    mut fill_implied: impl FnMut(usize, &mut Vec<f32>),
+    out: &mut QuantizedVector,
+) -> Result<(), CodecError> {
     let d = r.read_u32()? as usize;
     let s = r.read_u16()? as usize;
     if s == 0 {
@@ -321,6 +344,17 @@ pub fn decode_into(
     }
     let has_table = r.read_u8()? == 1;
     out.norm = r.read_f32()?;
+    // bound the claimed payload BEFORE any d-sized reservation: a
+    // corrupt/hostile d (u32, up to ~4e9) must fail here, not drive a
+    // multi-gigabyte allocation on its way to "out of bits"
+    let table_bits = if has_table { 32 * s as u64 } else { 0 };
+    let need = table_bits + d as u64 * (1 + ceil_log2(s) as u64);
+    if need > r.bits_remaining() {
+        return Err(CodecError(format!(
+            "body claims {need} payload bits, only {} remain",
+            r.bits_remaining()
+        )));
+    }
     out.levels.clear();
     if has_table {
         out.levels.reserve(s);
@@ -533,6 +567,21 @@ mod tests {
         assert!(
             decode(truncated, |s| QsgdQuantizer::level_table(s)).is_err()
         );
+    }
+
+    #[test]
+    fn hostile_dimension_rejected_without_allocation() {
+        // a tiny buffer whose d field claims ~4 billion elements must
+        // be rejected by the payload bound, not by an OOM on the way
+        // to "out of bits"
+        let mut w = BitWriter::new();
+        w.write_u32(u32::MAX); // d
+        w.write_u16(4); // s
+        w.write_u8(0); // implied table
+        w.write_f32(1.0); // norm
+        let bytes = w.into_bytes();
+        let err = decode(&bytes, |s| vec![0.0; s]).unwrap_err();
+        assert!(err.to_string().contains("payload bits"), "{err}");
     }
 
     #[test]

@@ -123,13 +123,6 @@ pub fn add_delta(dst: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
-/// `xs_i *= c` (damping by γ*).
-pub fn scale_in_place(xs: &mut [f32], c: f32) {
-    for x in xs.iter_mut() {
-        *x *= c;
-    }
-}
-
 // ---------------------------------------------------------------------------
 // dequantize / dequantize-accumulate
 // ---------------------------------------------------------------------------
@@ -1098,11 +1091,8 @@ mod tests {
         }
         let mut out = vec![0.0f32; 100];
         scaled_into(&mut out, 2.5, &b);
-        let mut xs = b.clone();
-        scale_in_place(&mut xs, 2.5);
         for i in 0..100 {
             assert_eq!(out[i].to_bits(), (2.5 * b[i]).to_bits());
-            assert_eq!(xs[i].to_bits(), (b[i] * 2.5).to_bits());
         }
     }
 

@@ -19,6 +19,7 @@ pub mod natural;
 pub mod qsgd;
 pub mod terngrad;
 pub mod topk;
+pub mod wire;
 
 pub use adaptive::AdaptiveLevels;
 pub use alq::AlqQuantizer;
@@ -123,9 +124,11 @@ impl QuantizedVector {
         bits::c_s(self.dim(), self.s())
     }
 
-    /// Exact bits of the wire encoding (header + optional table included).
-    pub fn wire_bits(&self) -> u64 {
-        codec::encoded_bits(self.dim(), self.s(), self.implied_table)
+    /// Exact bytes of the versioned transport message ([`wire`]) that
+    /// carries this vector — the engines' byte-accounting truth. (For
+    /// the bare codec body size use [`codec::encoded_bits`] directly.)
+    pub fn wire_message_bytes(&self) -> u64 {
+        wire::message_len(self) as u64
     }
 }
 
@@ -221,7 +224,13 @@ pub fn quantize_damped_into(
     let gamma = (1.0 / (1.0 + omega)) as f32;
     if gamma < 0.999 {
         msg.norm *= gamma;
-        kernels::scale_in_place(dq, gamma);
+        // re-derive the damped delta from the damped MESSAGE (not by
+        // scaling dq in place): f32 products don't reassociate, and dq
+        // must be bit-identical to what a receiver reconstructs from
+        // the wire bytes — the matrix engines apply dq while the
+        // bitstream/threaded paths apply the decoded message, and the
+        // encoding parity contract says those trajectories match
+        msg.dequantize_into(dq);
     }
     omega
 }

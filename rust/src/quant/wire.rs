@@ -1,0 +1,417 @@
+//! The versioned transport frame both gossip engines put on the wire.
+//!
+//! A [`WireMessage`](self) is a fixed 12-byte header followed by the
+//! self-describing codec body of [`super::codec`] (the packed sign/index
+//! bitstream of one [`QuantizedVector`]). The header carries everything
+//! a receiver needs to route and reconstruct the payload without
+//! out-of-band context — the protocol round key, the sender, the
+//! quantizer tag (from which implied level tables are regenerated), and
+//! the payload's index bit-width:
+//!
+//! ```text
+//! u8   version    wire format version (WIRE_VERSION = 1)
+//! u8   tag        quantizer tag (QuantTag)
+//! u8   phase      protocol phase (sync: 0 = q2 mixing delta,
+//!                 2 = q1 local-update delta; async: 0)
+//! u8   idx_bits   payload index bit-width ⌈log₂ s⌉ (validated)
+//! u32  sender     sending node id (little-endian)
+//! u32  round      global round (sync) / sender local round (async)
+//! -- codec body (quant::codec::encode_body) --
+//! u32  d; u16 s; u8 flags; f32 norm; [f32; s] table (if shipped);
+//! d sign bits; d·idx_bits index bits; zero padding to a whole byte
+//! ```
+//!
+//! Versioning rule: any change to the header layout or the body format
+//! bumps [`WIRE_VERSION`]; decoders reject unknown versions with an
+//! error (never a panic), and the golden fixtures of
+//! `rust/tests/wire_conformance.rs` pin the byte stream of the current
+//! version so drift cannot land silently.
+//!
+//! Decoding is total: truncated buffers, unknown versions/tags,
+//! inconsistent bit-widths, out-of-range indices, and trailing garbage
+//! all return [`CodecError`]. A full-zero delta still encodes to a
+//! header + body ([`MIN_ENCODED_BYTES`] is the floor), which is what
+//! lets the simnet fabric distinguish "offline sender" (zero bytes)
+//! from "legitimately empty message".
+
+use std::collections::HashMap;
+
+use super::codec::{self, BitReader, BitWriter, CodecError};
+use super::QuantizedVector;
+use crate::config::QuantizerKind;
+use crate::quant::bits::{ceil_log2, stream_bytes};
+use crate::quant::{FullPrecision, NaturalQuantizer, QsgdQuantizer};
+
+/// Current wire format version (see the module docs for the rule).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 12;
+
+/// Fixed header size in bits.
+pub const HEADER_BITS: u64 = 8 * HEADER_BYTES as u64;
+
+/// Smallest possible encoded message: header + the body of a d = 0,
+/// s = 1, implied-table vector. Every live broadcast is at least this
+/// long — the simnet fabric's "0 bytes = nothing transmitted" sentinel
+/// can never collide with a real message.
+pub const MIN_ENCODED_BYTES: usize = HEADER_BYTES + 11;
+
+/// Wire tag identifying the quantizer family that produced a message.
+/// Fixed-grid families imply their level table (receivers regenerate it
+/// from s); adaptive families — including the TernGrad / top-k
+/// extension baselines installed via
+/// [`crate::dfl::DflEngine::set_all_quantizers`] — ship the table in
+/// the body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum QuantTag {
+    Full = 0,
+    Qsgd = 1,
+    Natural = 2,
+    Alq = 3,
+    LloydMax = 4,
+    DoublyAdaptive = 5,
+    TernGrad = 6,
+    TopK = 7,
+}
+
+impl QuantTag {
+    /// The tag of a configured quantizer kind.
+    pub fn from_kind(kind: &QuantizerKind) -> QuantTag {
+        match kind {
+            QuantizerKind::Full => QuantTag::Full,
+            QuantizerKind::Qsgd { .. } => QuantTag::Qsgd,
+            QuantizerKind::Natural { .. } => QuantTag::Natural,
+            QuantizerKind::Alq { .. } => QuantTag::Alq,
+            QuantizerKind::LloydMax { .. } => QuantTag::LloydMax,
+            QuantizerKind::DoublyAdaptive { .. } => {
+                QuantTag::DoublyAdaptive
+            }
+        }
+    }
+
+    /// Parse a wire byte; unknown tags are a decode error, not a panic.
+    pub fn from_u8(v: u8) -> Result<QuantTag, CodecError> {
+        Ok(match v {
+            0 => QuantTag::Full,
+            1 => QuantTag::Qsgd,
+            2 => QuantTag::Natural,
+            3 => QuantTag::Alq,
+            4 => QuantTag::LloydMax,
+            5 => QuantTag::DoublyAdaptive,
+            6 => QuantTag::TernGrad,
+            7 => QuantTag::TopK,
+            other => {
+                return Err(CodecError(format!(
+                    "unknown quantizer tag {other}"
+                )))
+            }
+        })
+    }
+
+    /// Tag from a [`crate::quant::Quantizer::name`] string — how the
+    /// encode path labels frames from the ACTIVE quantizer, which
+    /// [`crate::dfl::DflEngine::set_all_quantizers`] may have swapped
+    /// away from the configured kind.
+    pub fn from_name(name: &str) -> Option<QuantTag> {
+        Some(match name {
+            "full" => QuantTag::Full,
+            "qsgd" => QuantTag::Qsgd,
+            "natural" => QuantTag::Natural,
+            "alq" => QuantTag::Alq,
+            "lloyd_max" => QuantTag::LloydMax,
+            "doubly_adaptive" => QuantTag::DoublyAdaptive,
+            "terngrad" => QuantTag::TernGrad,
+            "topk" => QuantTag::TopK,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantTag::Full => "full",
+            QuantTag::Qsgd => "qsgd",
+            QuantTag::Natural => "natural",
+            QuantTag::Alq => "alq",
+            QuantTag::LloydMax => "lloyd_max",
+            QuantTag::DoublyAdaptive => "doubly_adaptive",
+            QuantTag::TernGrad => "terngrad",
+            QuantTag::TopK => "topk",
+        }
+    }
+
+    /// Regenerate the implied level table for tag + s, or `None` for
+    /// families that always ship their (data-adapted) table.
+    pub fn implied_levels(self, s: usize) -> Option<Vec<f32>> {
+        match self {
+            QuantTag::Full => Some(FullPrecision::level_table(s)),
+            QuantTag::Qsgd => Some(QsgdQuantizer::level_table(s)),
+            QuantTag::Natural => Some(NaturalQuantizer::level_table(s)),
+            QuantTag::Alq
+            | QuantTag::LloydMax
+            | QuantTag::DoublyAdaptive
+            | QuantTag::TernGrad
+            | QuantTag::TopK => None,
+        }
+    }
+}
+
+/// The fixed-size message header (see the module docs for the layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireHeader {
+    pub version: u8,
+    pub tag: QuantTag,
+    pub phase: u8,
+    /// payload index bit-width ⌈log₂ s⌉ (validated against the body)
+    pub idx_bits: u8,
+    pub sender: u32,
+    /// global round (sync engines) / sender local round (async)
+    pub round: u32,
+}
+
+impl WireHeader {
+    /// Header for the current version, with `idx_bits` derived from the
+    /// payload's level count.
+    pub fn new(
+        tag: QuantTag,
+        phase: u8,
+        sender: u32,
+        round: u32,
+        s: usize,
+    ) -> WireHeader {
+        WireHeader {
+            version: WIRE_VERSION,
+            tag,
+            phase,
+            idx_bits: ceil_log2(s) as u8,
+            sender,
+            round,
+        }
+    }
+}
+
+/// Receive-side cache of regenerated implied level tables, keyed by
+/// (tag, s) — one per receiver, so repeated messages from fixed-grid
+/// quantizers never re-materialize the table.
+#[derive(Debug, Default)]
+pub struct ImpliedCache {
+    map: HashMap<(u8, usize), Vec<f32>>,
+}
+
+impl ImpliedCache {
+    pub fn new() -> ImpliedCache {
+        ImpliedCache { map: HashMap::new() }
+    }
+
+    /// Append the implied table for (tag, s) to `out`; false when the
+    /// tag never implies a table (a malformed message).
+    fn fill(&mut self, tag: QuantTag, s: usize, out: &mut Vec<f32>) -> bool {
+        use std::collections::hash_map::Entry;
+        let table = match self.map.entry((tag as u8, s)) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(e) => match tag.implied_levels(s) {
+                Some(t) => e.insert(t),
+                None => return false,
+            },
+        };
+        out.extend_from_slice(table);
+        true
+    }
+}
+
+/// Exact encoded size in bits of a message for (d, s, implied_table).
+pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
+    HEADER_BITS + codec::encoded_bits(d, s, implied_table)
+}
+
+/// Exact encoded size in bytes.
+pub fn encoded_len(d: usize, s: usize, implied_table: bool) -> usize {
+    HEADER_BYTES + stream_bytes(codec::encoded_bits(d, s, implied_table))
+}
+
+/// Exact encoded size in bytes of the message carrying `qv`.
+pub fn message_len(qv: &QuantizedVector) -> usize {
+    encoded_len(qv.dim(), qv.s(), qv.implied_table)
+}
+
+/// Encode one message to fresh bytes.
+pub fn encode(h: &WireHeader, qv: &QuantizedVector) -> Vec<u8> {
+    encode_with_buf(h, qv, Vec::new())
+}
+
+/// Zero-alloc [`encode`]: reuse `buf` as the backing storage (grown at
+/// most once, to the exact message size).
+pub fn encode_with_buf(
+    h: &WireHeader,
+    qv: &QuantizedVector,
+    buf: Vec<u8>,
+) -> Vec<u8> {
+    debug_assert_eq!(h.version, WIRE_VERSION);
+    debug_assert_eq!(h.idx_bits as u32, ceil_log2(qv.s()));
+    let mut w = BitWriter::with_capacity_bits(
+        buf,
+        encoded_bits(qv.dim(), qv.s(), qv.implied_table),
+    );
+    w.write_u8(h.version);
+    w.write_u8(h.tag as u8);
+    w.write_u8(h.phase);
+    w.write_u8(h.idx_bits);
+    w.write_u32(h.sender);
+    w.write_u32(h.round);
+    codec::encode_body(&mut w, qv);
+    w.into_bytes()
+}
+
+/// Decode one message into `out`, regenerating implied level tables via
+/// `cache`, and return the validated header. Every malformed input —
+/// truncation, unknown version/tag, bit-width mismatch, length mismatch
+/// — is a [`CodecError`]; decoding never panics. On error `out` may be
+/// partially overwritten — discard it.
+pub fn decode_into(
+    bytes: &[u8],
+    cache: &mut ImpliedCache,
+    out: &mut QuantizedVector,
+) -> Result<WireHeader, CodecError> {
+    let mut r = BitReader::new(bytes);
+    let version = r.read_u8()?;
+    if version != WIRE_VERSION {
+        return Err(CodecError(format!(
+            "unsupported wire version {version} (expected {WIRE_VERSION})"
+        )));
+    }
+    let tag = QuantTag::from_u8(r.read_u8()?)?;
+    let phase = r.read_u8()?;
+    let idx_bits = r.read_u8()?;
+    let sender = r.read_u32()?;
+    let round = r.read_u32()?;
+    let mut bad_tag = false;
+    let body = codec::decode_body(
+        &mut r,
+        |s, table: &mut Vec<f32>| {
+            if !cache.fill(tag, s, table) {
+                bad_tag = true;
+            }
+        },
+        out,
+    );
+    if bad_tag {
+        return Err(CodecError(format!(
+            "quantizer '{}' never implies a level table",
+            tag.name()
+        )));
+    }
+    body?;
+    if idx_bits as u32 != ceil_log2(out.s()) {
+        return Err(CodecError(format!(
+            "header idx_bits {idx_bits} != ceil_log2({}) = {}",
+            out.s(),
+            ceil_log2(out.s())
+        )));
+    }
+    let want = encoded_len(out.dim(), out.s(), out.implied_table);
+    if bytes.len() != want {
+        return Err(CodecError(format!(
+            "message is {} bytes, format says {want}",
+            bytes.len()
+        )));
+    }
+    Ok(WireHeader { version, tag, phase, idx_bits, sender, round })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{LloydMaxQuantizer, Quantizer};
+    use crate::util::rng::Rng;
+
+    fn sample_msg() -> QuantizedVector {
+        let mut q = LloydMaxQuantizer::new(8, 6);
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> =
+            (0..97).map(|i| (i as f32 * 0.31).sin()).collect();
+        q.quantize(&v, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_preserves_header_and_message() {
+        let qv = sample_msg();
+        let h = WireHeader::new(QuantTag::LloydMax, 2, 7, 41, qv.s());
+        let bytes = encode(&h, &qv);
+        assert_eq!(bytes.len(), message_len(&qv));
+        assert_eq!(bytes.len() as u64 * 8, encoded_bits(97, 8, false));
+        let mut cache = ImpliedCache::new();
+        let mut out = QuantizedVector::empty();
+        let back = decode_into(&bytes, &mut cache, &mut out).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(out, qv);
+    }
+
+    #[test]
+    fn implied_table_regenerated_from_tag() {
+        let mut q = crate::quant::QsgdQuantizer::new(16);
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..50).map(|i| (i as f32).cos()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        assert!(qv.implied_table);
+        let h = WireHeader::new(QuantTag::Qsgd, 0, 1, 2, qv.s());
+        let bytes = encode(&h, &qv);
+        let mut cache = ImpliedCache::new();
+        let mut out = QuantizedVector::empty();
+        decode_into(&bytes, &mut cache, &mut out).unwrap();
+        assert_eq!(out, qv);
+        // second decode hits the cache (same result)
+        let mut again = QuantizedVector::empty();
+        decode_into(&bytes, &mut cache, &mut again).unwrap();
+        assert_eq!(again, qv);
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        let qv = sample_msg();
+        let h = WireHeader::new(QuantTag::LloydMax, 0, 0, 0, qv.s());
+        let bytes = encode(&h, &qv);
+        let mut cache = ImpliedCache::new();
+        let mut out = QuantizedVector::empty();
+        // every truncation of the valid message fails cleanly
+        for cut in [0, 1, HEADER_BYTES - 1, HEADER_BYTES, bytes.len() - 1]
+        {
+            assert!(
+                decode_into(&bytes[..cut], &mut cache, &mut out).is_err(),
+                "truncation to {cut} bytes decoded"
+            );
+        }
+        // trailing garbage is rejected (exact-length contract)
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_into(&long, &mut cache, &mut out).is_err());
+        // unknown version / tag / bit-width are rejected
+        let mut bad = bytes.clone();
+        bad[0] = 99;
+        assert!(decode_into(&bad, &mut cache, &mut out).is_err());
+        let mut bad = bytes.clone();
+        bad[1] = 250;
+        assert!(decode_into(&bad, &mut cache, &mut out).is_err());
+        let mut bad = bytes.clone();
+        bad[3] ^= 0x1;
+        assert!(decode_into(&bad, &mut cache, &mut out).is_err());
+        // a shipped-table tag on an implied-table body is malformed
+        let mut q = crate::quant::QsgdQuantizer::new(16);
+        let mut rng = Rng::new(9);
+        let iv: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let iqv = q.quantize(&iv, &mut rng);
+        let ih = WireHeader::new(QuantTag::LloydMax, 0, 0, 0, iqv.s());
+        let ibytes = encode(&ih, &iqv);
+        let err = decode_into(&ibytes, &mut cache, &mut out).unwrap_err();
+        assert!(err.to_string().contains("never implies"), "{err}");
+    }
+
+    #[test]
+    fn min_encoded_bytes_is_the_true_floor() {
+        // the degenerate d = 0, s = 1, implied-table message is the
+        // shortest encodable frame
+        assert_eq!(encoded_len(0, 1, true), MIN_ENCODED_BYTES);
+        assert!(encoded_len(1, 1, true) >= MIN_ENCODED_BYTES);
+        assert!(encoded_len(0, 2, false) > MIN_ENCODED_BYTES);
+    }
+}

@@ -29,9 +29,17 @@
 //! coins at the same rate. An engine-dropped broadcast is still charged
 //! to the links (run_simulated substitutes the same-sized q1 message),
 //! so lossier networks never get *faster* timelines. The threaded
-//! runtime (`dfl::net`) drops per link for real. A zero entry in
-//! `q2_bytes`/`q1_bytes` means "nothing transmitted at all" (offline
-//! sender semantics at the caller's discretion).
+//! runtime (`dfl::net`) drops per link for real.
+//!
+//! Byte semantics: a zero entry in `q2_bytes`/`q1_bytes` means "nothing
+//! was put on the wire at all" — an offline or engine-suppressed
+//! sender. It can NEVER mean "an empty quantized message": the wire
+//! format always ships a header, so a legitimately empty (full-zero)
+//! delta still encodes to at least
+//! [`crate::quant::wire::MIN_ENCODED_BYTES`] and still occupies its
+//! links. [`Fabric::simulate_round`] asserts that distinction so a
+//! caller passing sub-header "sizes" fails loudly instead of silently
+//! skewing the timeline.
 
 use super::clock::{ns_to_secs, EventQueue, VirtualTime};
 use super::substrate::{fold_event, Substrate, DIGEST_OFFSET};
@@ -103,6 +111,13 @@ impl Fabric {
         self.digest
     }
 
+    /// Lifetime bytes put on links (every transmitted copy, dropped
+    /// in-flight included) — the fabric-side byte meter that must equal
+    /// the sum of the engines' encoded wire-message lengths.
+    pub fn bytes_on_wire(&self) -> u64 {
+        self.sub.bytes_on_wire()
+    }
+
     /// Current virtual time in seconds.
     pub fn virtual_secs(&self) -> f64 {
         ns_to_secs(self.queue.now())
@@ -116,9 +131,11 @@ impl Fabric {
     }
 
     /// Simulate round `k`'s timeline. `q2_bytes[i]` / `q1_bytes[i]` are
-    /// node i's wire bytes for the two broadcast messages this round
-    /// (0 = that broadcast was suppressed). Advances the virtual clock
-    /// to the round barrier and returns the timing record.
+    /// node i's wire bytes for the two broadcast messages this round.
+    /// 0 = that broadcast never went on the wire (offline / suppressed
+    /// sender); a real message — even a full-zero delta — is at least a
+    /// wire header long (asserted; see the module docs). Advances the
+    /// virtual clock to the round barrier and returns the timing record.
     pub fn simulate_round(
         &mut self,
         tau: usize,
@@ -128,6 +145,15 @@ impl Fabric {
         let n = self.node_done.len();
         assert_eq!(q2_bytes.len(), n, "one q2 size per node");
         assert_eq!(q1_bytes.len(), n, "one q1 size per node");
+        let floor = crate::quant::wire::MIN_ENCODED_BYTES as u64;
+        for &b in q2_bytes.iter().chain(q1_bytes) {
+            assert!(
+                b == 0 || b >= floor,
+                "{b}-byte message is below the {floor}-byte wire \
+                 minimum: 0 means 'nothing transmitted', an empty \
+                 quantized message still ships a header"
+            );
+        }
         let t0 = self.queue.now();
         let mut lost = 0u64;
         let mut stragglers = 0usize;
@@ -353,6 +379,48 @@ mod tests {
         // only compute events: round = the 1 ms local step
         assert!((t.round_secs - 1e-3).abs() < 1e-9, "{}", t.round_secs);
         assert_eq!(f.events_processed(), 4);
+    }
+
+    #[test]
+    fn zero_delta_messages_still_occupy_links() {
+        // offline (0 bytes) vs "legitimately empty quantized message":
+        // a full-zero delta encodes to a header-sized frame and must
+        // pay link serialization, unlike a suppressed broadcast
+        let hdr = crate::quant::wire::MIN_ENCODED_BYTES as u64;
+        let mut live_fab = fabric(1e4, 4);
+        let live = vec![hdr; 4];
+        let live_t = live_fab.simulate_round(1, &live, &live);
+        let mut silent_fab = fabric(1e4, 4);
+        let silent = vec![0u64; 4];
+        let silent_t = silent_fab.simulate_round(1, &silent, &silent);
+        assert!(
+            live_t.round_secs > silent_t.round_secs,
+            "header-only messages cost no time: {} !> {}",
+            live_t.round_secs,
+            silent_t.round_secs
+        );
+        assert!(live_fab.bytes_on_wire() > 0);
+        assert_eq!(silent_fab.bytes_on_wire(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "wire minimum")]
+    fn sub_header_sizes_are_rejected() {
+        // nothing between 0 (offline) and a full header is encodable
+        let mut f = fabric(1e6, 4);
+        let bogus = vec![5u64; 4];
+        let _ = f.simulate_round(1, &bogus, &bogus);
+    }
+
+    #[test]
+    fn byte_meter_counts_every_transmitted_copy() {
+        // ring of 4: 2 out-links per node, 2 broadcasts per node/round
+        let mut f = fabric(1e8, 4);
+        let sizes = vec![1000u64; 4];
+        let _ = f.simulate_round(2, &sizes, &sizes);
+        assert_eq!(f.bytes_on_wire(), 1000 * 2 * 2 * 4);
+        let _ = f.simulate_round(2, &sizes, &sizes);
+        assert_eq!(f.bytes_on_wire(), 2 * 1000 * 2 * 2 * 4);
     }
 
     #[test]

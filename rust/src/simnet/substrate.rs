@@ -54,6 +54,11 @@ pub struct Substrate {
     compute: Vec<NodeCompute>,
     churn: Option<ChurnState>,
     rng: Rng,
+    /// lifetime bytes put on links (every transmitted copy, dropped
+    /// in-flight included — the sender still occupied the link). This
+    /// is the fabric-side byte-accounting truth the engines' measured
+    /// wire sizes are cross-checked against.
+    bytes_tx: u64,
 }
 
 impl Substrate {
@@ -98,7 +103,13 @@ impl Substrate {
             compute,
             churn,
             rng: root.split(4),
+            bytes_tx: 0,
         }
+    }
+
+    /// Lifetime bytes transmitted on links (see the field docs).
+    pub fn bytes_on_wire(&self) -> u64 {
+        self.bytes_tx
     }
 
     /// Node count.
@@ -163,6 +174,7 @@ impl Substrate {
         if !link.up {
             return None;
         }
+        self.bytes_tx += bytes;
         Some(link.transmit(ready, bytes, &mut self.rng))
     }
 

@@ -188,6 +188,74 @@ mod tests {
     }
 
     #[test]
+    fn prop_wire_message_roundtrips_and_never_panics() {
+        // ISSUE 5 satellite: arbitrary level counts across every index
+        // bit-width the u16 level-count field supports (1..=16; the
+        // raw packer layer is exercised to 24 bits by the test above),
+        // empty/degenerate payloads, and truncated or corrupted
+        // buffers, which must ERROR — decoding is total, no panics
+        use crate::quant::wire::{
+            self, ImpliedCache, QuantTag, WireHeader,
+        };
+        use crate::quant::QuantizedVector;
+        check("wire message total decoding", 60, |g| {
+            let idx_bits = g.usize_in(1..17) as u32;
+            let lo = (1usize << (idx_bits - 1)) + 1;
+            let hi = (1usize << idx_bits).min(65535);
+            let s = if idx_bits == 1 {
+                2
+            } else {
+                g.usize_in(lo..hi + 1)
+            };
+            // degenerate payloads on purpose: d = 0 and zero norms
+            let d = g.usize_in(0..60);
+            let norm =
+                if g.bool() { 0.0 } else { g.f32_in(0.0..10.0) };
+            let negative: Vec<bool> = (0..d).map(|_| g.bool()).collect();
+            let indices: Vec<u32> =
+                (0..d).map(|_| g.rng().below(s) as u32).collect();
+            let levels: Vec<f32> =
+                (0..s).map(|_| g.f32_in(0.0..1.0)).collect();
+            let qv = QuantizedVector {
+                norm,
+                negative,
+                indices,
+                levels,
+                implied_table: false,
+            };
+            let h = WireHeader::new(
+                QuantTag::LloydMax,
+                g.rng().below(4) as u8,
+                g.rng().below(1 << 20) as u32,
+                g.rng().below(1 << 20) as u32,
+                s,
+            );
+            let bytes = wire::encode(&h, &qv);
+            assert_eq!(bytes.len(), wire::message_len(&qv));
+            let mut cache = ImpliedCache::new();
+            let mut out = QuantizedVector::empty();
+            let back =
+                wire::decode_into(&bytes, &mut cache, &mut out).unwrap();
+            assert_eq!(back, h);
+            assert_eq!(out, qv);
+            // any strict prefix fails cleanly
+            let cut = g.usize_in(0..bytes.len());
+            assert!(
+                wire::decode_into(&bytes[..cut], &mut cache, &mut out)
+                    .is_err(),
+                "decoded a {cut}-byte prefix of {}",
+                bytes.len()
+            );
+            // arbitrary corruption never panics (it may error or decode
+            // to some other valid message; both are acceptable)
+            let mut corrupt = bytes.clone();
+            let pos = g.usize_in(0..corrupt.len());
+            corrupt[pos] ^= 0xFF;
+            let _ = wire::decode_into(&corrupt, &mut cache, &mut out);
+        });
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let mut out1 = Vec::new();
         let mut out2 = Vec::new();

@@ -45,6 +45,7 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         parallelism,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     }
 }

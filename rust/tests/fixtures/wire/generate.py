@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Independent reference implementation of the lmdfl wire format (v1).
+
+Generates the golden hex fixtures consumed by
+rust/tests/wire_conformance.rs from the format SPEC (see
+rust/src/quant/wire.rs module docs), deliberately NOT by calling the
+Rust encoder: the checked-in bytes therefore cross-check the Rust
+implementation against a second, spec-derived one.
+
+The in-repo blessing path (`LMDFL_BLESS=1 cargo test --test
+wire_conformance`) rewrites the fixtures from the Rust encoder instead;
+after an INTENTIONAL format change (which must bump WIRE_VERSION), run
+that and update this script to match the new spec.
+
+Layout (little-endian bit order within bytes, LSB first):
+  u8 version; u8 tag; u8 phase; u8 idx_bits; u32 sender; u32 round;
+  u32 d; u16 s; u8 flags(1 = table shipped); f32 norm;
+  [f32 * s] level table (only if shipped);
+  d sign bits; d * idx_bits index bits; zero padding to a whole byte.
+"""
+
+import struct
+from pathlib import Path
+
+
+def ceil_log2(s: int) -> int:
+    return 0 if s <= 1 else (s - 1).bit_length()
+
+
+class BitWriter:
+    def __init__(self) -> None:
+        self.bits: list[int] = []
+
+    def write_bits(self, value: int, n: int) -> None:
+        for k in range(n):
+            self.bits.append((value >> k) & 1)
+
+    def write_u8(self, v: int) -> None:
+        self.write_bits(v, 8)
+
+    def write_u16(self, v: int) -> None:
+        self.write_bits(v, 16)
+
+    def write_u32(self, v: int) -> None:
+        self.write_bits(v, 32)
+
+    def write_f32(self, v: float) -> None:
+        (u,) = struct.unpack("<I", struct.pack("<f", v))
+        self.write_u32(u)
+
+    def to_bytes(self) -> bytes:
+        out = bytearray()
+        for i in range(0, len(self.bits), 8):
+            byte = 0
+            for j, bit in enumerate(self.bits[i : i + 8]):
+                byte |= bit << j
+            out.append(byte)
+        return bytes(out)
+
+
+def encode(fix: dict) -> bytes:
+    w = BitWriter()
+    s = fix["s"]
+    w.write_u8(1)  # WIRE_VERSION
+    w.write_u8(fix["tag"])
+    w.write_u8(fix["phase"])
+    w.write_u8(ceil_log2(s))
+    w.write_u32(fix["sender"])
+    w.write_u32(fix["round"])
+    w.write_u32(len(fix["indices"]))
+    w.write_u16(s)
+    shipped = fix["levels"] is not None
+    w.write_u8(1 if shipped else 0)
+    w.write_f32(fix["norm"])
+    if shipped:
+        for level in fix["levels"]:
+            w.write_f32(level)
+    for sign in fix["signs"]:
+        w.write_bits(1 if sign else 0, 1)
+    nbits = ceil_log2(s)
+    for idx in fix["indices"]:
+        w.write_bits(idx, nbits)
+    return w.to_bytes()
+
+
+# Keep these definitions in lockstep with fixtures() in
+# rust/tests/wire_conformance.rs (all floats exactly representable).
+FIXTURES = [
+    dict(
+        name="qsgd_s16", tag=1, phase=0, sender=3, round=7,
+        norm=1.5, s=16, levels=None,
+        signs=[i % 2 == 1 for i in range(11)],
+        indices=[(i * 3 + 1) % 16 for i in range(11)],
+    ),
+    dict(
+        name="natural_s8", tag=2, phase=0, sender=0, round=0,
+        norm=2.0, s=8, levels=None,
+        signs=[False, True, True, False, False],
+        indices=[0, 7, 3, 5, 1],
+    ),
+    dict(
+        name="full_s16384", tag=0, phase=2, sender=15, round=255,
+        norm=0.5, s=16384, levels=None,
+        signs=[True, False, True],
+        indices=[0, 16383, 8192],
+    ),
+    dict(
+        name="lloyd_max_s4", tag=4, phase=2, sender=1, round=9,
+        norm=3.25, s=4, levels=[0.0, 0.25, 0.5, 1.0],
+        signs=[i % 3 == 0 for i in range(13)],
+        indices=[(i + 1) % 4 for i in range(13)],
+    ),
+    dict(
+        name="alq_s6", tag=3, phase=0, sender=2, round=3,
+        norm=4.0, s=6, levels=[0.0, 0.125, 0.25, 0.375, 0.5, 0.75],
+        signs=[False, False, True, True, False, True, False],
+        indices=[5, 0, 4, 1, 3, 2, 5],
+    ),
+    dict(
+        name="doubly_adaptive_s4", tag=5, phase=0, sender=4, round=12,
+        norm=0.75, s=4, levels=[0.0, 0.25, 0.5, 0.875],
+        signs=[i % 4 == 2 for i in range(9)],
+        indices=[i % 4 for i in range(9)],
+    ),
+    dict(
+        name="empty_delta", tag=4, phase=0, sender=6, round=1,
+        norm=0.0, s=2, levels=[0.25, 0.75],
+        signs=[], indices=[],
+    ),
+]
+
+
+def main() -> None:
+    here = Path(__file__).parent
+    for fix in FIXTURES:
+        data = encode(fix)
+        # sanity: exact size formula from the spec
+        body_bits = 88
+        if fix["levels"] is not None:
+            body_bits += 32 * fix["s"]
+        d = len(fix["indices"])
+        body_bits += d + d * ceil_log2(fix["s"])
+        want = 12 + (body_bits + 7) // 8
+        assert len(data) == want, (fix["name"], len(data), want)
+        path = here / f"{fix['name']}.hex"
+        path.write_text(data.hex() + "\n")
+        print(f"{fix['name']}: {len(data)} bytes -> {path.name}")
+
+
+if __name__ == "__main__":
+    main()

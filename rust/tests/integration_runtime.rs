@@ -227,6 +227,7 @@ fn dfl_training_on_hlo_backend_converges() {
         parallelism: Parallelism::Auto,
         network: None,
         mode: Default::default(),
+        encoding: Default::default(),
         agossip: None,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();

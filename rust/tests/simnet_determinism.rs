@@ -7,6 +7,7 @@
 use lmdfl::agossip::{AsyncConfig, AsyncGossipEngine, AsyncRunLog, WaitPolicy};
 use lmdfl::config::{
     DatasetKind, EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
+    WireEncoding,
 };
 use lmdfl::metrics::RunLog;
 use lmdfl::simnet::{
@@ -218,6 +219,97 @@ fn async_different_seeds_produce_different_timelines() {
         a.event_digest, b.event_digest,
         "seeds should change the event order"
     );
+}
+
+/// Every configurable quantizer family, for the encoding-parity matrix.
+fn all_quantizers() -> [QuantizerKind; 6] {
+    [
+        QuantizerKind::Full,
+        QuantizerKind::Qsgd { s: 8 },
+        QuantizerKind::Natural { s: 8 },
+        QuantizerKind::Alq { s: 8 },
+        QuantizerKind::LloydMax { s: 8, iters: 6 },
+        QuantizerKind::DoublyAdaptive { s1: 4, iters: 6, s_max: 64 },
+    ]
+}
+
+/// `encoding: matrix` vs `encoding: bitstream` must produce
+/// byte-identical RunLogs for every quantizer under the harsh network
+/// (drops, jitter, stragglers, churn): models, byte accounting, and
+/// virtual timelines all — only the transport representation differs.
+#[test]
+fn sync_matrix_and_bitstream_runlogs_byte_identical() {
+    for quant in all_quantizers() {
+        let name = format!("{quant:?}");
+        let mut cfg = sim_cfg(quant);
+        cfg.rounds = 6;
+        cfg.encoding = WireEncoding::Matrix;
+        let (mut log_m, digest_m, _) = run_once(&cfg);
+        cfg.encoding = WireEncoding::Bitstream;
+        let (mut log_b, digest_b, _) = run_once(&cfg);
+        assert_eq!(digest_m, digest_b, "{name}: event order diverged");
+        for r in log_m
+            .records
+            .iter_mut()
+            .chain(log_b.records.iter_mut())
+        {
+            r.wall_secs = 0.0; // the one deliberately real-time column
+        }
+        assert_eq!(log_m.to_csv(), log_b.to_csv(), "{name}");
+        assert_eq!(
+            log_m.to_json().to_pretty(),
+            log_b.to_json().to_pretty(),
+            "{name}"
+        );
+    }
+}
+
+/// The async half of the same contract, per quantizer (no churn) plus
+/// the harsh churn configuration.
+#[test]
+fn async_matrix_and_bitstream_runlogs_byte_identical() {
+    let mut cfgs: Vec<(String, ExperimentConfig)> = all_quantizers()
+        .into_iter()
+        .map(|q| {
+            let name = format!("{q:?}");
+            let mut cfg = sim_cfg(q);
+            cfg.rounds = 5;
+            cfg.mode = EngineMode::Async;
+            cfg.agossip = Some(AsyncConfig {
+                wait_for: WaitPolicy::Quorum { k: 2 },
+                staleness_lambda: 0.5,
+                quorum_timeout_s: 0.2,
+            });
+            cfg.network.as_mut().unwrap().churn = Default::default();
+            (name, cfg)
+        })
+        .collect();
+    let mut churny = async_sim_cfg(true);
+    churny.rounds = 6;
+    cfgs.push(("churn".into(), churny));
+    for (name, base) in cfgs {
+        let mut cfg = base;
+        cfg.encoding = WireEncoding::Matrix;
+        let mut m = run_async_once(&cfg);
+        cfg.encoding = WireEncoding::Bitstream;
+        let mut b = run_async_once(&cfg);
+        assert_eq!(
+            m.event_digest, b.event_digest,
+            "{name}: event order diverged"
+        );
+        assert_eq!(m.nodes, b.nodes, "{name}: node records diverged");
+        assert_eq!(m.wire_bytes, b.wire_bytes, "{name}");
+        assert_eq!(m.link_bytes, b.link_bytes, "{name}");
+        for r in m
+            .merged
+            .records
+            .iter_mut()
+            .chain(b.merged.records.iter_mut())
+        {
+            r.wall_secs = 0.0;
+        }
+        assert_eq!(m.merged.to_csv(), b.merged.to_csv(), "{name}");
+    }
 }
 
 #[test]
