@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example doubly_adaptive [-- --full] [--cifar]
 
-use lmdfl::experiments::{fig4, fig8, Scale};
+use lmdfl::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();

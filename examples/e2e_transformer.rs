@@ -13,13 +13,7 @@
 //!   make artifacts && cargo run --release --example e2e_transformer
 //!   (flags: --rounds N --nodes N --tau N --s N --lr F)
 
-use lmdfl::cli::Args;
-use lmdfl::metrics::{fnum, RoundRecord, RunLog};
-use lmdfl::quant::LloydMaxQuantizer;
-use lmdfl::runtime::{literal_f32, literal_i32, HloExecutor, Manifest};
-use lmdfl::topology::Topology;
-use lmdfl::util::rng::Rng;
-use lmdfl::xla;
+use lmdfl::prelude::*;
 
 /// Deterministic pseudo-text corpus: sampled words with punctuation —
 /// structured enough that a byte LM's loss falls quickly.
@@ -61,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let s = args.get_usize("s", 32)?;
     let lr = args.get_f64("lr", 0.25)? as f32;
 
-    let dir = lmdfl::runtime::artifacts_dir();
+    let dir = artifacts_dir();
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
@@ -88,8 +82,7 @@ fn main() -> anyhow::Result<()> {
     let corpus = synth_corpus(200_000, 99);
     let shard_len = corpus.len() / nodes;
 
-    let topo =
-        Topology::build(&lmdfl::config::TopologyKind::Ring, nodes, 0);
+    let topo = Topology::build(&TopologyKind::Ring, nodes, 0);
     println!(
         "topology: ring, zeta = {:.4}; LM-DFL s = {s}, tau = {tau}, lr = {lr}",
         topo.zeta
@@ -137,7 +130,7 @@ fn main() -> anyhow::Result<()> {
             for j in 0..p {
                 diff[j] = node.params[j] - node.hat[j];
             }
-            let (msg, _) = lmdfl::quant::quantize_damped(
+            let (msg, _) = quantize_damped(
                 &mut node.quantizer, &diff, &mut node.rng, &mut dq);
             round_bits += msg.paper_bits();
             // matrix-engine convention: encoded size × out-degree
@@ -184,7 +177,7 @@ fn main() -> anyhow::Result<()> {
             for j in 0..p {
                 diff[j] = node.params[j] - node.hat[j];
             }
-            let (msg, omega) = lmdfl::quant::quantize_damped(
+            let (msg, omega) = quantize_damped(
                 &mut node.quantizer, &diff, &mut node.rng,
                 &mut q1_all[i]);
             round_bits += msg.paper_bits();

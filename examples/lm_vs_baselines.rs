@@ -4,7 +4,7 @@
 //!
 //!   cargo run --release --example lm_vs_baselines [-- --full] [--cifar]
 
-use lmdfl::experiments::{fig6, Scale};
+use lmdfl::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();

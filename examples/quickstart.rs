@@ -6,12 +6,7 @@
 //! If `make artifacts` has been run, the same training is repeated on the
 //! AOT-compiled HLO backend (PJRT) to show the production path.
 
-use lmdfl::config::{
-    BackendKind, DatasetKind, ExperimentConfig, LrSchedule, QuantizerKind,
-    TopologyKind,
-};
-use lmdfl::dfl::Trainer;
-use lmdfl::metrics::fnum;
+use lmdfl::prelude::*;
 
 fn base_config() -> ExperimentConfig {
     ExperimentConfig {
@@ -29,11 +24,12 @@ fn base_config() -> ExperimentConfig {
         noniid_fraction: 0.5,
         link_bps: 100e6,
         eval_every: 1,
-        parallelism: lmdfl::config::Parallelism::Auto,
+        parallelism: Parallelism::Auto,
         network: None,
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 
@@ -61,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // production path: same algorithm, local updates on the AOT HLO model
-    if lmdfl::runtime::artifacts_available() {
+    if artifacts_available() {
         println!("\n== LM-DFL on the PJRT HLO backend (mlp_mnist) ==");
         let mut cfg = base_config();
         cfg.name = "quickstart-hlo".into();
@@ -78,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn report(log: &lmdfl::metrics::RunLog) {
+fn report(log: &RunLog) {
     let first = log.records.first().unwrap();
     let last = log.records.last().unwrap();
     println!(

@@ -4,9 +4,7 @@
 //!
 //!   cargo run --release --example topology_sweep [-- --full]
 
-use lmdfl::config::TopologyKind;
-use lmdfl::experiments::{fig7, run_labeled, Scale};
-use lmdfl::topology::Topology;
+use lmdfl::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -20,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     for (label, zeta) in fig7::zetas(10) {
         println!(
             "  {label:<24} zeta = {zeta:.4}  alpha = {:.3}",
-            lmdfl::linalg::eigen::alpha_of_zeta(zeta)
+            alpha_of_zeta(zeta)
         );
     }
 
@@ -39,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // extension: richer topology sweep (beyond the paper's three)
     println!("\n===== extension: star / torus / random topologies =====");
-    let base = lmdfl::experiments::paper_base_config(scale);
+    let base = paper_base_config(scale);
     for kind in [
         TopologyKind::Star,
         TopologyKind::Torus,

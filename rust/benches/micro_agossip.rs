@@ -70,6 +70,7 @@ fn cfg(nodes: usize, mode: EngineMode) -> ExperimentConfig {
             staleness_lambda: 0.5,
             quorum_timeout_s: 0.5,
         }),
+        transport: None,
     }
 }
 

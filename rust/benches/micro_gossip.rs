@@ -37,6 +37,7 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

@@ -42,6 +42,7 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

@@ -545,14 +545,13 @@ impl AsyncGossipEngine {
                             "node {to}: bad wire message from {from}: {e}"
                         )
                     })?;
-                    anyhow::ensure!(
-                        h.sender as usize == from
-                            && h.round as usize == round,
-                        "wire header (sender {}, round {}) contradicts \
-                         the event (from {from}, round {round})",
-                        h.sender,
-                        h.round
-                    );
+                    // typed decode-total error on a header/event
+                    // mismatch (the phase check is vacuous here: the
+                    // header's own phase is passed through)
+                    wire::validate_frame(&h, from, round as u32, h.phase)
+                        .map_err(|e| {
+                            anyhow::anyhow!("node {to}: {e}")
+                        })?;
                     node.core
                         .dec
                         .dequantize_accumulate_into(&mut node.nbr_hat[idx]);

@@ -488,6 +488,10 @@ pub struct ExperimentConfig {
     /// knobs of the asynchronous engine. `None` = defaults. Only
     /// consulted when `mode == async`. See [`crate::agossip`].
     pub agossip: Option<crate::agossip::AsyncConfig>,
+    /// `transport:` section — which [`crate::net::Delivery`] backend
+    /// the threaded runtime uses (`channel` default / `tcp`) and the
+    /// TCP endpoint parameters. `None` = in-process channels.
+    pub transport: Option<crate::net::TransportConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -512,6 +516,7 @@ impl Default for ExperimentConfig {
             mode: EngineMode::Sync,
             encoding: WireEncoding::Bitstream,
             agossip: None,
+            transport: None,
         }
     }
 }
@@ -563,6 +568,9 @@ impl ExperimentConfig {
         if let Some(a) = &self.agossip {
             a.validate()?;
         }
+        if let Some(t) = &self.transport {
+            t.validate(self.nodes)?;
+        }
         Ok(())
     }
 
@@ -595,6 +603,9 @@ impl ExperimentConfig {
         }
         if let Some(a) = &self.agossip {
             pairs.push(("async", a.to_json()));
+        }
+        if let Some(t) = &self.transport {
+            pairs.push(("transport", t.to_json()));
         }
         Json::obj(pairs)
     }
@@ -657,6 +668,12 @@ impl ExperimentConfig {
                 }
                 None => None,
             },
+            transport: match j.get("transport") {
+                Some(tj) => {
+                    Some(crate::net::TransportConfig::from_json(tj)?)
+                }
+                None => None,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -691,6 +708,7 @@ mod tests {
         cfg.lr = LrSchedule::paper_variable(0.002);
         cfg.backend = BackendKind::Hlo { artifact: "mlp_mnist".into() };
         cfg.parallelism = Parallelism::Fixed(3);
+        cfg.transport = Some(crate::net::TransportConfig::tcp_default());
         let text = cfg.to_json().to_pretty();
         let back = ExperimentConfig::parse(&text).unwrap();
         assert_eq!(back, cfg);

@@ -63,7 +63,7 @@ impl RustMlpBackend {
         RustMlpBackend { model, grad, scratch: MlpScratch::default() }
     }
 
-    pub fn model(&self) -> &MlpModel {
+    pub(crate) fn model(&self) -> &MlpModel {
         &self.model
     }
 }

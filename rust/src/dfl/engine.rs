@@ -131,7 +131,7 @@ impl Default for EngineOptions {
 pub struct DflEngine {
     pub cfg: ExperimentConfig,
     pub topology: Topology,
-    pub dataset: Dataset,
+    pub(crate) dataset: Dataset,
     nodes: Vec<NodeState>,
     backends: Vec<Box<dyn LocalUpdate>>,
     param_count: usize,
@@ -152,8 +152,9 @@ pub struct DflEngine {
 
 impl DflEngine {
     /// Assemble an engine from parts (the [`crate::dfl::Trainer`] builder
-    /// is the friendlier entry point).
-    pub fn new(
+    /// is the public entry point — [`Dataset`] is not part of the
+    /// supported API surface).
+    pub(crate) fn new(
         cfg: ExperimentConfig,
         topology: Topology,
         dataset: Dataset,
@@ -562,6 +563,7 @@ mod tests {
             mode: Default::default(),
             encoding: Default::default(),
             agossip: None,
+            transport: None,
         }
     }
 

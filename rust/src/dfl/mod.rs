@@ -6,14 +6,14 @@
 //! * [`Trainer`] — config-to-run convenience wrapper
 
 pub mod backend;
-pub mod core;
+pub(crate) mod core;
 pub mod engine;
 pub mod net;
 
 pub use backend::{LocalUpdate, RustMlpBackend};
-pub use core::NodeCore;
+pub(crate) use core::NodeCore;
 pub use engine::{DflEngine, EngineOptions};
-pub use net::{run_threaded, NetOptions};
+pub use net::{run_node_process, NetOptions};
 
 use std::sync::Arc;
 
@@ -23,7 +23,7 @@ use crate::metrics::RunLog;
 use crate::topology::Topology;
 
 /// Build one backend instance per the config.
-pub fn build_backend(
+pub(crate) fn build_backend(
     cfg: &ExperimentConfig,
     dataset: &Dataset,
 ) -> anyhow::Result<Box<dyn LocalUpdate>> {

@@ -1,10 +1,17 @@
-//! Threaded message-passing DFL runtime.
+//! Message-passing DFL runtime over pluggable transports.
 //!
-//! Where [`super::engine::DflEngine`] simulates the gossip in matrix form,
-//! this runtime runs one OS thread per node exchanging *encoded bitstreams*
-//! (quant::codec) over channels — the wire bytes are measured, per-link
-//! faults drop real messages, and each node maintains its own per-neighbor
-//! estimate state (no shared memory between nodes beyond the channels).
+//! Where [`super::engine::DflEngine`] simulates the gossip in matrix
+//! form, this runtime runs real nodes exchanging *encoded bitstreams*
+//! (quant::codec) through the [`crate::net::Delivery`] abstraction —
+//! the wire bytes are measured by the transport, per-link faults drop
+//! real messages, and each node maintains its own per-neighbor
+//! estimate state (no shared memory between nodes beyond the
+//! transport). The same gossip loop ([`run_node`]) drives:
+//!
+//! * `run_threaded` — one OS thread per node over an in-process
+//!   channel mesh (or in-process TCP sockets for parity testing),
+//! * [`run_node_process`] — one OS *process* per node over localhost
+//!   TCP (`lmdfl node --rank R`), rank 0 doubling as the coordinator.
 //!
 //! Protocol per round k (Algorithm 2 with estimate-referenced deltas —
 //! see dfl::engine for the deviation note):
@@ -13,64 +20,213 @@
 //!   phase 2: broadcast  q1 = Q(x_{k,τ} − x̂_self) → everyone x̂ += q1
 //!   phase 3: x_{k+1} = Σ_j c_ji x̂_j               (neighbors ∪ self)
 //!
-//! Messages are tagged (round, phase) and buffered, so fast neighbors may
-//! run ahead one round without corrupting a slow receiver.
+//! Messages are tagged (round, phase) and buffered by the
+//! [`crate::net::Mailbox`], so fast neighbors may run ahead one round
+//! without corrupting a slow receiver. A header that contradicts its
+//! envelope key is a typed [`CodecError`] (the decode-total contract),
+//! never a panic.
 //!
 //! # Zero-alloc message path
 //!
-//! After warm-up a node thread allocates one `Arc<[u8]>` per *broadcast*
-//! (shared by every peer — the old path cloned the byte vector per
-//! peer): the encode scratch buffer, the decode-side message buffer, the
-//! implied-level-table cache, and the batch index/feature/label buffers
-//! are all reused across rounds, and the mailbox stash only moves `Arc`
-//! handles around.
+//! After warm-up a node allocates one `Arc<[u8]>` per *broadcast*
+//! (shared by every peer): the encode scratch buffer, the decode-side
+//! message buffer, the implied-level-table cache, and the batch
+//! index/feature/label buffers are all reused across rounds, and the
+//! mailbox stash only moves `Arc` handles around.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::config::{ExperimentConfig, QuantizerKind};
+use crate::config::{ExperimentConfig, LrSchedule, QuantizerKind};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
+use crate::error::LmdflError;
 use crate::metrics::{RoundRecord, RunLog};
+use crate::net::{
+    channel_mesh, connect_retry, Delivery, FaultDelivery, Frame, Mailbox,
+    TcpDelivery, TcpOptions, TransportConfig, TransportKind,
+};
 use crate::quant::adaptive::AdaptiveLevels;
+use crate::quant::codec::CodecError;
 use crate::quant::wire;
 use crate::quant::{build_quantizer, Quantizer};
 use crate::simnet::LinkModel;
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
-/// A tagged wire message. The payload is shared across every receiver of
-/// the broadcast; an empty payload is the drop tombstone.
-struct WireMsg {
-    from: usize,
-    round: usize,
-    phase: u8,
-    bytes: Arc<[u8]>,
-}
+/// Max wait for one expected frame before declaring the peer dead.
+const MAILBOX_DEADLINE: Duration = Duration::from_secs(120);
 
-/// Per-round report a node thread sends to the coordinator.
+/// Reserved phase tag of report-plane frames (multi-process runs).
+/// Gossip phases are 0..4, so reports can never collide with them.
+const REPORT_PHASE: u8 = 0xFE;
+
+/// Per-round report a node sends to the coordinator.
 struct NodeReport {
+    node: usize,
     round: usize,
     wire_bits: u64,
-    /// paper-accounting bits (Eq. 12) — kept alongside the measured wire
-    /// bits for the overhead cross-check in integration tests
-    #[allow(dead_code)]
+    /// paper-accounting bits (Eq. 12) — kept alongside the measured
+    /// wire bits for the overhead cross-check in integration tests
     paper_bits: u64,
     levels: usize,
-    #[allow(dead_code)]
     local_loss: f64,
-    /// params snapshot (only when the coordinator asked for an eval round)
+    /// params snapshot (only on eval rounds)
     params: Option<Vec<f32>>,
+}
+
+/// Fixed-size head of an encoded report (everything but the params).
+const REPORT_HEAD: usize = 37;
+
+/// Serialize a report for the TCP report plane (LE fields, optional
+/// params block behind a presence flag).
+fn encode_report(r: &NodeReport) -> Vec<u8> {
+    let extra = r.params.as_ref().map_or(0, |p| 4 + p.len() * 4);
+    let mut out = Vec::with_capacity(REPORT_HEAD + extra);
+    out.extend_from_slice(&(r.node as u32).to_le_bytes());
+    out.extend_from_slice(&(r.round as u32).to_le_bytes());
+    out.extend_from_slice(&r.wire_bits.to_le_bytes());
+    out.extend_from_slice(&r.paper_bits.to_le_bytes());
+    out.extend_from_slice(&(r.levels as u32).to_le_bytes());
+    out.extend_from_slice(&r.local_loss.to_le_bytes());
+    match &r.params {
+        None => out.push(0),
+        Some(p) => {
+            out.push(1);
+            out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            for &x in p {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Total decoder for report frames — hostile bytes are a typed
+/// [`CodecError`], never a panic.
+fn decode_report(bytes: &[u8]) -> Result<NodeReport, CodecError> {
+    let trunc = |need: usize, have: usize| CodecError::Truncated {
+        need_bits: need as u64 * 8,
+        have_bits: have as u64 * 8,
+    };
+    if bytes.len() < REPORT_HEAD {
+        return Err(trunc(REPORT_HEAD, bytes.len()));
+    }
+    let u32_at = |o: usize| {
+        u32::from_le_bytes(bytes[o..o + 4].try_into().expect("4 bytes"))
+    };
+    let u64_at = |o: usize| {
+        u64::from_le_bytes(bytes[o..o + 8].try_into().expect("8 bytes"))
+    };
+    let params = match bytes[REPORT_HEAD - 1] {
+        0 => {
+            if bytes.len() != REPORT_HEAD {
+                return Err(CodecError::Malformed(format!(
+                    "{} trailing bytes after a no-params report",
+                    bytes.len() - REPORT_HEAD
+                )));
+            }
+            None
+        }
+        1 => {
+            if bytes.len() < REPORT_HEAD + 4 {
+                return Err(trunc(REPORT_HEAD + 4, bytes.len()));
+            }
+            let len = u32_at(REPORT_HEAD) as usize;
+            let need = REPORT_HEAD + 4 + len * 4;
+            if bytes.len() < need {
+                return Err(trunc(need, bytes.len()));
+            }
+            if bytes.len() > need {
+                return Err(CodecError::Malformed(format!(
+                    "{} trailing bytes after the params block",
+                    bytes.len() - need
+                )));
+            }
+            let mut p = Vec::with_capacity(len);
+            for c in bytes[REPORT_HEAD + 4..].chunks_exact(4) {
+                p.push(f32::from_le_bytes(
+                    c.try_into().expect("4 bytes"),
+                ));
+            }
+            Some(p)
+        }
+        f => {
+            return Err(CodecError::Malformed(format!(
+                "bad report params flag {f}"
+            )))
+        }
+    };
+    Ok(NodeReport {
+        node: u32_at(0) as usize,
+        round: u32_at(4) as usize,
+        wire_bits: u64_at(8),
+        paper_bits: u64_at(16),
+        levels: u32_at(24) as usize,
+        local_loss: f64::from_le_bytes(
+            bytes[28..36].try_into().expect("8 bytes"),
+        ),
+        params,
+    })
+}
+
+/// Where a node's per-round reports go: an in-process channel
+/// (threaded runs, and rank 0 of a multi-process run) or the TCP
+/// report plane (remote ranks).
+trait ReportSink {
+    fn report(&mut self, r: NodeReport) -> anyhow::Result<()>;
+}
+
+struct ChannelSink(Sender<anyhow::Result<NodeReport>>);
+
+impl ReportSink for ChannelSink {
+    fn report(&mut self, r: NodeReport) -> anyhow::Result<()> {
+        // a coordinator that already exited is not the node's error
+        let _ = self.0.send(Ok(r));
+        Ok(())
+    }
+}
+
+struct TcpReportSink {
+    stream: TcpStream,
+}
+
+impl TcpReportSink {
+    /// Dial rank 0's report plane (port `base_port + nodes`).
+    fn connect(
+        opts: &TcpOptions,
+        nodes: usize,
+    ) -> Result<TcpReportSink, LmdflError> {
+        let port = opts.port_of(nodes)?;
+        Ok(TcpReportSink { stream: connect_retry(opts, port)? })
+    }
+}
+
+impl ReportSink for TcpReportSink {
+    fn report(&mut self, r: NodeReport) -> anyhow::Result<()> {
+        let payload = encode_report(&r);
+        wire::write_frame(
+            &mut self.stream,
+            r.node as u32,
+            r.round as u32,
+            REPORT_PHASE,
+            &payload,
+        )?;
+        Ok(())
+    }
 }
 
 /// Options for the threaded runtime.
 #[derive(Clone, Debug)]
 pub struct NetOptions {
     /// per-directed-link transmission model. The old `drop_prob` knob is
-    /// `link.drop_prob` now; latency/bandwidth/jitter are carried for
-    /// simnet-configured runs (they shape the virtual-time axis, not the
-    /// OS thread scheduling).
+    /// `link.drop_prob` now; latency/jitter are applied in real time by
+    /// the [`FaultDelivery`] wrapper (bandwidth shaping stays the
+    /// virtual clock's job).
     pub link: LinkModel,
     /// evaluate (collect params) every this many rounds
     pub eval_every: usize,
@@ -90,54 +246,360 @@ impl NetOptions {
     }
 }
 
-/// Buffered receiver: returns the message for (from, round, phase),
-/// stashing any out-of-order arrivals. Payloads are shared `Arc`s, so
-/// stashing moves a handle, never the bytes.
-struct Mailbox {
-    rx: Receiver<WireMsg>,
-    stash: HashMap<(usize, usize, u8), VecDeque<Arc<[u8]>>>,
-}
-
-impl Mailbox {
-    fn new(rx: Receiver<WireMsg>) -> Self {
-        Mailbox { rx, stash: HashMap::new() }
-    }
-
-    fn recv(
-        &mut self,
-        from: usize,
-        round: usize,
-        phase: u8,
-    ) -> anyhow::Result<Arc<[u8]>> {
-        let key = (from, round, phase);
-        loop {
-            if let Some(q) = self.stash.get_mut(&key) {
-                if let Some(bytes) = q.pop_front() {
-                    return Ok(bytes);
-                }
-            }
-            let msg = self
-                .rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("peer channel closed"))?;
-            let mkey = (msg.from, msg.round, msg.phase);
-            if mkey == key {
-                return Ok(msg.bytes);
-            }
-            self.stash.entry(mkey).or_default().push_back(msg.bytes);
-        }
-    }
-}
-
-/// Backend factory: called once per node *inside that node's thread* (the
-/// PJRT types are not `Send`, so backends cannot cross threads).
-pub type BackendFactory<'a> =
+/// Backend factory: called once per node *inside that node's thread*
+/// (the PJRT types are not `Send`, so backends cannot cross threads).
+pub(crate) type BackendFactory<'a> =
     &'a (dyn Fn(usize) -> anyhow::Result<Box<dyn LocalUpdate>> + Sync);
 
-/// Run a full DFL training with one thread per node. Returns a [`RunLog`]
-/// whose bits_per_link are MEASURED wire bits (cumulative, averaged over
-/// directed links).
-pub fn run_threaded(
+/// Everything one node needs to run its gossip loop, independent of
+/// how its frames move or where its reports go.
+struct NodeCtx<'a> {
+    node: usize,
+    neighbors: Vec<usize>,
+    /// mixing weight c_ji per neighbor (column of the Metropolis C)
+    weights: Vec<f32>,
+    self_weight: f32,
+    /// this node's sample indices (non-IID partition)
+    part: Vec<usize>,
+    dataset: &'a Dataset,
+    /// shared initial params (identical on every node)
+    init: &'a [f32],
+    kind: QuantizerKind,
+    rounds: usize,
+    tau: usize,
+    batch: usize,
+    lr: LrSchedule,
+    /// the experiment seed; the node derives its own streams from it
+    seed: u64,
+    eval_every: usize,
+}
+
+fn node_ctx<'a>(
+    cfg: &ExperimentConfig,
+    topology: &Topology,
+    dataset: &'a Dataset,
+    init: &'a [f32],
+    part: Vec<usize>,
+    node: usize,
+) -> NodeCtx<'a> {
+    let neighbors: Vec<usize> = topology.neighbors(node).to_vec();
+    let weights: Vec<f32> = neighbors
+        .iter()
+        .map(|&j| topology.c[(j, node)] as f32)
+        .collect();
+    NodeCtx {
+        node,
+        neighbors,
+        weights,
+        self_weight: topology.c[(node, node)] as f32,
+        part,
+        dataset,
+        init,
+        kind: cfg.quantizer.clone(),
+        rounds: cfg.rounds,
+        tau: cfg.tau,
+        batch: cfg.batch_size,
+        lr: cfg.lr.clone(),
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+    }
+}
+
+/// One node's full gossip loop — the protocol, with byte movement
+/// behind `mailbox` and reporting behind `sink`.
+fn run_node(
+    ctx: NodeCtx<'_>,
+    backend: &mut dyn LocalUpdate,
+    mailbox: &mut Mailbox,
+    sink: &mut dyn ReportSink,
+) -> anyhow::Result<()> {
+    let NodeCtx {
+        node: i,
+        neighbors,
+        weights,
+        self_weight,
+        part,
+        dataset,
+        init,
+        kind,
+        rounds,
+        tau,
+        batch,
+        lr,
+        seed,
+        eval_every,
+    } = ctx;
+    let param_count = init.len();
+    let mut rng = Rng::new(seed ^ (0xA000 + i as u64));
+    let mut sampler = BatchSampler::new(part, rng.split(1));
+    let mut quantizer = build_quantizer(&kind);
+    let mut adaptive = match &kind {
+        QuantizerKind::DoublyAdaptive { s1, s_max, .. } => {
+            Some(AdaptiveLevels::new(*s1, *s_max))
+        }
+        _ => None,
+    };
+    let tag = wire::QuantTag::from_kind(&kind);
+    let mut params = init.to_vec();
+    // own + per-neighbor estimates x̂
+    let mut hat_self = vec![0.0f32; param_count];
+    let mut hat: Vec<Vec<f32>> =
+        vec![vec![0.0f32; param_count]; neighbors.len()];
+    let mut dq = vec![0.0f32; param_count];
+    let mut diff = vec![0.0f32; param_count];
+    let mut mix = vec![0.0f32; param_count];
+    // reusable message buffers (zero-alloc path): encode scratch,
+    // decode target, implied-table cache, and mini-batch scratch
+    let mut msg_out = crate::quant::QuantizedVector::empty();
+    let mut msg_in = crate::quant::QuantizedVector::empty();
+    let mut enc_buf: Vec<u8> = Vec::new();
+    let mut implied_cache = wire::ImpliedCache::new();
+    let mut batch_idx: Vec<usize> = Vec::new();
+    let mut batch_x: Vec<f32> = Vec::new();
+    let mut batch_y: Vec<u32> = Vec::new();
+
+    for k in 0..rounds {
+        let bytes_before = mailbox.wire_bytes();
+        let mut paper_bits = 0u64;
+
+        // one broadcast phase: q = Q(target − x̂_self), everyone
+        // (incl. self) applies x̂ += q
+        let mut broadcast = |phase: u8,
+                             params: &[f32],
+                             hat_self: &mut [f32],
+                             hat: &mut [Vec<f32>],
+                             quantizer: &mut Box<dyn Quantizer>,
+                             rng: &mut Rng,
+                             mailbox: &mut Mailbox,
+                             paper_bits: &mut u64|
+         -> anyhow::Result<()> {
+            crate::quant::kernels::sub_into(&mut diff, params, hat_self);
+            crate::quant::quantize_damped_into(
+                quantizer.as_mut(), &diff, rng, &mut dq, &mut msg_out);
+            let q = &msg_out;
+            // the versioned wire frame: header (round / sender / tag /
+            // bit-width) + codec body
+            enc_buf = wire::encode_with_buf(
+                &wire::WireHeader::new(
+                    tag, phase, i as u32, k as u32, q.s(),
+                ),
+                q,
+                std::mem::take(&mut enc_buf),
+            );
+            // one shared allocation per broadcast; the transport moves
+            // Arc handles, not the bytes
+            let bytes: Arc<[u8]> = Arc::from(enc_buf.as_slice());
+            for &j in &neighbors {
+                *paper_bits += q.paper_bits();
+                mailbox.send(
+                    j,
+                    Frame::new(i, k as u32, phase, Arc::clone(&bytes)),
+                )?;
+            }
+            // re-dequantize from the (damped) wire message fused with
+            // the estimate update, so sender and receivers apply
+            // byte-identical deltas
+            q.dequantize_accumulate_into(hat_self);
+            for (ni, &from) in neighbors.iter().enumerate() {
+                let bytes = mailbox.recv(
+                    from, k as u32, phase, MAILBOX_DEADLINE,
+                )?;
+                if bytes.is_empty() {
+                    continue; // dropped: stale estimate
+                }
+                let h = wire::decode_into(
+                    &bytes,
+                    &mut implied_cache,
+                    &mut msg_in,
+                )?;
+                // a header contradicting the envelope key is a typed
+                // decode error, not a panic
+                wire::validate_frame(&h, from, k as u32, phase)?;
+                msg_in.dequantize_accumulate_into(&mut hat[ni]);
+            }
+            Ok(())
+        };
+
+        // ---- phase 0: mixing-delta broadcast ----------
+        broadcast(
+            0, &params, &mut hat_self, &mut hat, &mut quantizer,
+            &mut rng, mailbox, &mut paper_bits,
+        )?;
+
+        // ---- phase 1: τ local updates -----------------
+        let lr_k = lr.at(k) as f32;
+        let mut local_loss = 0.0f64;
+        for _ in 0..tau {
+            sampler.next_batch_into(batch, &mut batch_idx);
+            dataset.gather_batch_into(
+                &batch_idx, &mut batch_x, &mut batch_y,
+            );
+            local_loss +=
+                backend.step(&mut params, &batch_x, &batch_y, lr_k)?;
+        }
+        local_loss /= tau as f64;
+        if let Some(ad) = adaptive.as_mut() {
+            let s = ad.update(local_loss);
+            quantizer.set_levels(s);
+        }
+
+        // ---- phase 2: local-update-delta broadcast ----
+        broadcast(
+            2, &params, &mut hat_self, &mut hat, &mut quantizer,
+            &mut rng, mailbox, &mut paper_bits,
+        )?;
+
+        // ---- phase 3: mixing ---------------------------
+        // x += Σ c_ji x̂_j − x̂_self (consensus correction on true
+        // params; = X̂C when estimates are exact)
+        crate::quant::kernels::scaled_into(
+            &mut mix, self_weight, &hat_self,
+        );
+        for (ni, _) in neighbors.iter().enumerate() {
+            crate::quant::kernels::axpy(&mut mix, weights[ni], &hat[ni]);
+        }
+        crate::quant::kernels::add_delta(&mut params, &mix, &hat_self);
+
+        // ---- report -----------------------------------
+        // measured wire bits = the transport meter's delta this round
+        // (payload bytes of every frame offered to the link)
+        let wire_bits = (mailbox.wire_bytes() - bytes_before) * 8;
+        let snapshot = if k % eval_every == 0 {
+            Some(params.clone())
+        } else {
+            None
+        };
+        sink.report(NodeReport {
+            node: i,
+            round: k,
+            wire_bits,
+            paper_bits,
+            levels: quantizer.levels(),
+            local_loss,
+            params: snapshot,
+        })?;
+    }
+    Ok(())
+}
+
+/// Aggregate per-node round reports into the [`RunLog`]: average the
+/// eval snapshots (sorted by node so float summation order is
+/// identical on every transport), evaluate, accumulate wire bits.
+#[allow(clippy::too_many_arguments)]
+fn coordinate(
+    name: &str,
+    n: usize,
+    rounds: usize,
+    lr: &LrSchedule,
+    links: u64,
+    param_count: usize,
+    dataset: &Dataset,
+    eval_backend: &mut dyn LocalUpdate,
+    report_rx: Receiver<anyhow::Result<NodeReport>>,
+) -> anyhow::Result<RunLog> {
+    let mut log = RunLog::new(name);
+    let mut cum_bits = 0u64;
+    let mut cum_wire_bytes = 0u64;
+    let mut per_round: HashMap<usize, Vec<NodeReport>> = HashMap::new();
+    let mut done_rounds = 0usize;
+    while done_rounds < rounds {
+        let report = match report_rx.recv_timeout(MAILBOX_DEADLINE) {
+            Ok(r) => r?,
+            Err(RecvTimeoutError::Timeout) => {
+                anyhow::bail!(
+                    "timed out waiting for node reports \
+                     ({done_rounds}/{rounds} rounds complete)"
+                )
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("all nodes exited early")
+            }
+        };
+        let k = report.round;
+        let entry = per_round.entry(k).or_default();
+        entry.push(report);
+        if entry.len() == n {
+            let mut reports = per_round.remove(&k).unwrap();
+            // deterministic float-summation order across transports
+            reports.sort_by_key(|r| r.node);
+            let wire: u64 = reports.iter().map(|r| r.wire_bits).sum();
+            let levels =
+                reports.iter().map(|r| r.levels).sum::<usize>() / n;
+            let lr_k = lr.at(k);
+            let (loss, acc) = if reports
+                .iter()
+                .all(|r| r.params.is_some())
+            {
+                let mut avg = vec![0.0f32; param_count];
+                for r in &reports {
+                    for (a, &p) in
+                        avg.iter_mut().zip(r.params.as_ref().unwrap())
+                    {
+                        *a += p;
+                    }
+                }
+                avg.iter_mut().for_each(|x| *x /= n as f32);
+                let cap = dataset.train_n().min(2048);
+                let idx: Vec<usize> = (0..cap).collect();
+                let (x, y) = dataset.gather_batch(&idx);
+                let (l, _) = eval_backend.evaluate(&avg, &x, &y)?;
+                let tcap = dataset.test_n().min(2048);
+                let acc = if tcap > 0 {
+                    let tx = &dataset.test_x[..tcap * dataset.feat_dim];
+                    let ty = &dataset.test_y[..tcap];
+                    let (_, c) = eval_backend.evaluate(&avg, tx, ty)?;
+                    c as f64 / tcap as f64
+                } else {
+                    f64::NAN
+                };
+                (l, acc)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            // per-directed-link average of measured wire bits
+            cum_bits += wire / links;
+            cum_wire_bytes += wire / 8;
+            log.push(RoundRecord {
+                round: k + 1,
+                loss,
+                accuracy: acc,
+                bits_per_link: cum_bits,
+                distortion: f64::NAN,
+                levels,
+                lr: lr_k,
+                wall_secs: 0.0,
+                virtual_secs: 0.0,
+                straggler_wait_secs: 0.0,
+                wire_bytes: cum_wire_bytes,
+            });
+            done_rounds += 1;
+        }
+    }
+    log.records.sort_by_key(|r| r.round);
+    Ok(log)
+}
+
+/// Build one fault-wrapped (when the link is non-ideal) endpoint.
+fn wrap_link(
+    endpoint: Box<dyn Delivery>,
+    link: &LinkModel,
+    seed: u64,
+    node: usize,
+) -> Box<dyn Delivery> {
+    if *link == LinkModel::ideal() {
+        return endpoint;
+    }
+    // separate rng stream so the node's quantization draws stay
+    // byte-identical to a lossless run
+    let rng = Rng::new(seed ^ (0xFA57 + node as u64));
+    Box::new(FaultDelivery::new(endpoint, link.clone(), rng))
+}
+
+/// Run a full DFL training with one thread per node. Returns a
+/// [`RunLog`] whose bits_per_link are MEASURED wire bits (cumulative,
+/// averaged over directed links). The transport comes from the
+/// config's `transport:` section (default: in-process channels).
+pub(crate) fn run_threaded(
     cfg: &ExperimentConfig,
     topology: &Topology,
     dataset: Arc<Dataset>,
@@ -145,8 +607,8 @@ pub fn run_threaded(
     opts: NetOptions,
 ) -> anyhow::Result<RunLog> {
     let n = cfg.nodes;
-    // probe instance: shared init params + param_count (coordinator reuses
-    // it for evaluation)
+    // probe instance: shared init params + param_count (coordinator
+    // reuses it for evaluation)
     let mut eval_backend = factory(n)?;
     let param_count = eval_backend.param_count();
     let mut seed_rng = Rng::new(cfg.seed);
@@ -154,238 +616,41 @@ pub fn run_threaded(
     let parts = crate::data::partition::partition_noniid(
         &dataset.train_y, n, cfg.noniid_fraction, cfg.seed);
 
-    // channels: one receiver per node; senders cloned per incoming edge
-    let mut txs: Vec<Sender<WireMsg>> = Vec::with_capacity(n);
-    let mut rxs: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = channel::<WireMsg>();
-        txs.push(tx);
-        rxs.push(Some(rx));
-    }
+    let transport = cfg.transport.clone().unwrap_or_default();
+    let endpoints: Vec<Box<dyn Delivery>> = match transport.kind {
+        TransportKind::Channel => channel_mesh(n)
+            .into_iter()
+            .map(|d| Box::new(d) as Box<dyn Delivery>)
+            .collect(),
+        TransportKind::Tcp => {
+            let mut v: Vec<Box<dyn Delivery>> = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(Box::new(TcpDelivery::bind(
+                    i,
+                    transport.tcp.clone(),
+                )?));
+            }
+            v
+        }
+    };
+
     let (report_tx, report_rx) = channel::<anyhow::Result<NodeReport>>();
-
-    let kind = cfg.quantizer.clone();
-    let rounds = cfg.rounds;
-    let tau = cfg.tau;
-    let batch = cfg.batch_size;
-    let lr = cfg.lr.clone();
-
     let result: anyhow::Result<RunLog> = std::thread::scope(|scope| {
-        for i in 0..n {
-            let my_rx = rxs[i].take().unwrap();
-            let neighbors: Vec<usize> = topology.neighbors(i).to_vec();
-            let peer_tx: Vec<Sender<WireMsg>> =
-                neighbors.iter().map(|&j| txs[j].clone()).collect();
-            let weights: Vec<f32> = neighbors
-                .iter()
-                .map(|&j| topology.c[(j, i)] as f32)
-                .collect();
-            let self_weight = topology.c[(i, i)] as f32;
-            let dataset = Arc::clone(&dataset);
-            let part = parts[i].clone();
-            let init = init.clone();
-            let kind = kind.clone();
+        for (i, endpoint) in endpoints.into_iter().enumerate() {
+            let endpoint = wrap_link(endpoint, &opts.link, cfg.seed, i);
+            let mut ctx = node_ctx(
+                cfg, topology, &dataset, &init, parts[i].clone(), i,
+            );
+            ctx.eval_every = opts.eval_every;
             let report_tx = report_tx.clone();
-            let lr = lr.clone();
-            let link = opts.link.clone();
-            let eval_every = opts.eval_every;
-            let node_seed = cfg.seed ^ (0xA000 + i as u64);
-
             scope.spawn(move || {
+                let mut mailbox = Mailbox::new(endpoint);
                 let run = || -> anyhow::Result<()> {
                     let mut backend = factory(i)?;
-                    let mut rng = Rng::new(node_seed);
-                    let mut sampler =
-                        BatchSampler::new(part, rng.split(1));
-                    let mut quantizer = build_quantizer(&kind);
-                    let mut adaptive = match &kind {
-                        QuantizerKind::DoublyAdaptive {
-                            s1, s_max, ..
-                        } => Some(AdaptiveLevels::new(*s1, *s_max)),
-                        _ => None,
-                    };
-                    let tag = wire::QuantTag::from_kind(&kind);
-                    let mut mailbox = Mailbox::new(my_rx);
-                    let mut params = init.clone();
-                    // own + per-neighbor estimates x̂
-                    let mut hat_self = vec![0.0f32; param_count];
-                    let mut hat: Vec<Vec<f32>> =
-                        vec![vec![0.0f32; param_count]; neighbors.len()];
-                    let mut dq = vec![0.0f32; param_count];
-                    let mut diff = vec![0.0f32; param_count];
-                    let mut mix = vec![0.0f32; param_count];
-                    // reusable message buffers (zero-alloc path): encode
-                    // scratch, decode target, implied-table cache,
-                    // mini-batch scratch, and the shared drop tombstone
-                    let mut msg_out = crate::quant::QuantizedVector::empty();
-                    let mut msg_in = crate::quant::QuantizedVector::empty();
-                    let mut enc_buf: Vec<u8> = Vec::new();
-                    let mut implied_cache = wire::ImpliedCache::new();
-                    let tombstone: Arc<[u8]> =
-                        Arc::from(Vec::new().into_boxed_slice());
-                    let mut batch_idx: Vec<usize> = Vec::new();
-                    let mut batch_x: Vec<f32> = Vec::new();
-                    let mut batch_y: Vec<u32> = Vec::new();
-
-                    for k in 0..rounds {
-                        let mut wire_bits = 0u64;
-                        let mut paper_bits = 0u64;
-
-                        // one broadcast phase: q = Q(target − x̂_self),
-                        // everyone (incl. self) applies x̂ += q
-                        let mut broadcast = |phase: u8,
-                                             params: &[f32],
-                                             hat_self: &mut [f32],
-                                             hat: &mut [Vec<f32>],
-                                             quantizer: &mut Box<dyn Quantizer>,
-                                             rng: &mut Rng,
-                                             mailbox: &mut Mailbox,
-                                             wire_bits: &mut u64,
-                                             paper_bits: &mut u64|
-                         -> anyhow::Result<()> {
-                            crate::quant::kernels::sub_into(
-                                &mut diff, params, hat_self,
-                            );
-                            crate::quant::quantize_damped_into(
-                                quantizer.as_mut(), &diff, rng, &mut dq,
-                                &mut msg_out);
-                            let q = &msg_out;
-                            // the versioned wire frame: header (round /
-                            // sender / tag / bit-width) + codec body
-                            enc_buf = wire::encode_with_buf(
-                                &wire::WireHeader::new(
-                                    tag, phase, i as u32, k as u32,
-                                    q.s(),
-                                ),
-                                q,
-                                std::mem::take(&mut enc_buf),
-                            );
-                            // one shared allocation per broadcast; peers
-                            // clone the Arc handle, not the bytes
-                            let bytes: Arc<[u8]> =
-                                Arc::from(enc_buf.as_slice());
-                            for tx in &peer_tx {
-                                let dropped = link.dropped(rng);
-                                *wire_bits += bytes.len() as u64 * 8;
-                                *paper_bits += q.paper_bits();
-                                // tombstone (empty payload) on drop so
-                                // receivers don't deadlock
-                                let payload = if dropped {
-                                    Arc::clone(&tombstone)
-                                } else {
-                                    Arc::clone(&bytes)
-                                };
-                                let _ = tx.send(WireMsg {
-                                    from: i,
-                                    round: k,
-                                    phase,
-                                    bytes: payload,
-                                });
-                            }
-                            // re-dequantize from the (damped) wire
-                            // message fused with the estimate update, so
-                            // sender and receivers apply byte-identical
-                            // deltas
-                            q.dequantize_accumulate_into(hat_self);
-                            for (ni, &from) in
-                                neighbors.iter().enumerate()
-                            {
-                                let bytes = mailbox.recv(from, k, phase)?;
-                                if bytes.is_empty() {
-                                    continue; // dropped: stale estimate
-                                }
-                                let h = wire::decode_into(
-                                    &bytes,
-                                    &mut implied_cache,
-                                    &mut msg_in,
-                                )?;
-                                anyhow::ensure!(
-                                    h.sender as usize == from
-                                        && h.round as usize == k
-                                        && h.phase == phase,
-                                    "wire header (sender {}, round {}, \
-                                     phase {}) contradicts mailbox key \
-                                     ({from}, {k}, {phase})",
-                                    h.sender,
-                                    h.round,
-                                    h.phase
-                                );
-                                msg_in
-                                    .dequantize_accumulate_into(&mut hat[ni]);
-                            }
-                            Ok(())
-                        };
-
-                        // ---- phase 0: mixing-delta broadcast ----------
-                        broadcast(
-                            0, &params, &mut hat_self, &mut hat,
-                            &mut quantizer, &mut rng, &mut mailbox,
-                            &mut wire_bits, &mut paper_bits,
-                        )?;
-
-                        // ---- phase 1: τ local updates -----------------
-                        let lr_k = lr.at(k) as f32;
-                        let mut local_loss = 0.0f64;
-                        for _ in 0..tau {
-                            sampler.next_batch_into(batch, &mut batch_idx);
-                            dataset.gather_batch_into(
-                                &batch_idx,
-                                &mut batch_x,
-                                &mut batch_y,
-                            );
-                            local_loss += backend.step(
-                                &mut params,
-                                &batch_x,
-                                &batch_y,
-                                lr_k,
-                            )?;
-                        }
-                        local_loss /= tau as f64;
-                        if let Some(ad) = adaptive.as_mut() {
-                            let s = ad.update(local_loss);
-                            quantizer.set_levels(s);
-                        }
-
-                        // ---- phase 2: local-update-delta broadcast ----
-                        broadcast(
-                            2, &params, &mut hat_self, &mut hat,
-                            &mut quantizer, &mut rng, &mut mailbox,
-                            &mut wire_bits, &mut paper_bits,
-                        )?;
-
-                        // ---- phase 3: mixing ---------------------------
-                        // x += Σ c_ji x̂_j − x̂_self (consensus correction
-                        // on true params; = X̂C when estimates are exact)
-                        crate::quant::kernels::scaled_into(
-                            &mut mix, self_weight, &hat_self,
-                        );
-                        for (ni, _) in neighbors.iter().enumerate() {
-                            crate::quant::kernels::axpy(
-                                &mut mix, weights[ni], &hat[ni],
-                            );
-                        }
-                        crate::quant::kernels::add_delta(
-                            &mut params, &mix, &hat_self,
-                        );
-
-                        // ---- report -----------------------------------
-                        let snapshot = if k % eval_every == 0 {
-                            Some(params.clone())
-                        } else {
-                            None
-                        };
-                        report_tx
-                            .send(Ok(NodeReport {
-                                round: k,
-                                wire_bits,
-                                paper_bits,
-                                levels: quantizer.levels(),
-                                local_loss,
-                                params: snapshot,
-                            }))
-                            .ok();
-                    }
-                    Ok(())
+                    let mut sink = ChannelSink(report_tx.clone());
+                    run_node(
+                        ctx, backend.as_mut(), &mut mailbox, &mut sink,
+                    )
                 };
                 if let Err(e) = run() {
                     let _ = report_tx.send(Err(e));
@@ -393,84 +658,195 @@ pub fn run_threaded(
             });
         }
         drop(report_tx);
-        drop(txs);
 
-        // ---- coordinator: aggregate reports, evaluate ------------------
-        let mut log = RunLog::new(&cfg.name);
-        let mut cum_bits = 0u64;
-        let mut cum_wire_bytes = 0u64;
         let links = topology.directed_links().max(1) as u64;
-        let mut per_round: HashMap<usize, Vec<NodeReport>> = HashMap::new();
-        let mut done_rounds = 0usize;
-        while done_rounds < rounds {
-            let report = report_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("all nodes exited early"))??;
-            let k = report.round;
-            let entry = per_round.entry(k).or_default();
-            entry.push(report);
-            if entry.len() == n {
-                let reports = per_round.remove(&k).unwrap();
-                let wire: u64 =
-                    reports.iter().map(|r| r.wire_bits).sum();
-                let levels = reports.iter().map(|r| r.levels).sum::<usize>()
-                    / n;
-                let lr_k = lr.at(k);
-                let (loss, acc) = if reports
-                    .iter()
-                    .all(|r| r.params.is_some())
-                {
-                    let mut avg = vec![0.0f32; param_count];
-                    for r in &reports {
-                        for (a, &p) in
-                            avg.iter_mut().zip(r.params.as_ref().unwrap())
-                        {
-                            *a += p;
-                        }
-                    }
-                    avg.iter_mut().for_each(|x| *x /= n as f32);
-                    let cap = dataset.train_n().min(2048);
-                    let idx: Vec<usize> = (0..cap).collect();
-                    let (x, y) = dataset.gather_batch(&idx);
-                    let (l, _) = eval_backend.evaluate(&avg, &x, &y)?;
-                    let tcap = dataset.test_n().min(2048);
-                    let acc = if tcap > 0 {
-                        let tx = &dataset.test_x
-                            [..tcap * dataset.feat_dim];
-                        let ty = &dataset.test_y[..tcap];
-                        let (_, c) =
-                            eval_backend.evaluate(&avg, tx, ty)?;
-                        c as f64 / tcap as f64
-                    } else {
-                        f64::NAN
-                    };
-                    (l, acc)
-                } else {
-                    (f64::NAN, f64::NAN)
-                };
-                // per-directed-link average of measured wire bits
-                cum_bits += wire / links;
-                cum_wire_bytes += wire / 8;
-                log.push(RoundRecord {
-                    round: k + 1,
-                    loss,
-                    accuracy: acc,
-                    bits_per_link: cum_bits,
-                    distortion: f64::NAN,
-                    levels,
-                    lr: lr_k,
-                    wall_secs: 0.0,
-                    virtual_secs: 0.0,
-                    straggler_wait_secs: 0.0,
-                    wire_bytes: cum_wire_bytes,
-                });
-                done_rounds += 1;
-            }
-        }
-        log.records.sort_by_key(|r| r.round);
-        Ok(log)
+        coordinate(
+            &cfg.name,
+            n,
+            cfg.rounds,
+            &cfg.lr,
+            links,
+            param_count,
+            &dataset,
+            eval_backend.as_mut(),
+            report_rx,
+        )
     });
     result
+}
+
+fn report_accept_loop(
+    listener: TcpListener,
+    tx: Sender<anyhow::Result<NodeReport>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let reader_tx = tx.clone();
+                let _ = std::thread::Builder::new()
+                    .name("lmdfl-report".to_string())
+                    .spawn(move || report_read_loop(stream, reader_tx));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn report_read_loop(
+    mut stream: TcpStream,
+    tx: Sender<anyhow::Result<NodeReport>>,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(env)) if env.phase == REPORT_PHASE => {
+                let msg = decode_report(&env.payload).map_err(|e| {
+                    anyhow::anyhow!("report decode failed: {e}")
+                });
+                let failed = msg.is_err();
+                if tx.send(msg).is_err() || failed {
+                    return;
+                }
+            }
+            Ok(Some(env)) => {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "unexpected phase {} frame on the report plane",
+                    env.phase
+                )));
+                return;
+            }
+            // clean EOF (rank finished) or a poisoned stream — the
+            // coordinator's report deadline catches a silent death
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
+/// Run one node of a multi-process TCP training (`lmdfl node --rank
+/// R`). Every rank builds the identical topology / dataset / init
+/// (same seed), binds its gossip listener, and runs the same
+/// [`run_node`] loop as the threaded runtime. Rank 0 additionally
+/// hosts the report plane and the coordinator and returns
+/// `Some(RunLog)`; other ranks stream their reports to rank 0 and
+/// return `None`.
+pub fn run_node_process(
+    cfg: &ExperimentConfig,
+    rank: usize,
+) -> anyhow::Result<Option<RunLog>> {
+    cfg.validate()?;
+    let n = cfg.nodes;
+    anyhow::ensure!(
+        rank < n,
+        "--rank {rank} out of range: config has {n} nodes"
+    );
+    let transport = cfg
+        .transport
+        .clone()
+        .unwrap_or_else(TransportConfig::tcp_default);
+    anyhow::ensure!(
+        transport.kind == TransportKind::Tcp,
+        "multi-process runs require transport kind 'tcp' \
+         (got '{}')",
+        transport.kind.name()
+    );
+    transport.validate(n)?;
+
+    // identical derivations on every rank — this is what makes the
+    // multi-process run reproduce the threaded trajectory exactly
+    let topology = Topology::build(&cfg.topology, n, cfg.seed);
+    let dataset = Arc::new(Dataset::build(&cfg.dataset, cfg.seed));
+    let mut eval_backend = crate::dfl::build_backend(cfg, &dataset)?;
+    let param_count = eval_backend.param_count();
+    let mut seed_rng = Rng::new(cfg.seed);
+    let init = eval_backend.init_params(&mut seed_rng.split(0xBEEF));
+    let parts = crate::data::partition::partition_noniid(
+        &dataset.train_y, n, cfg.noniid_fraction, cfg.seed);
+
+    let link = cfg
+        .network
+        .as_ref()
+        .map(|net| net.link.clone())
+        .unwrap_or_else(LinkModel::ideal);
+    let endpoint: Box<dyn Delivery> =
+        Box::new(TcpDelivery::bind(rank, transport.tcp.clone())?);
+    let endpoint = wrap_link(endpoint, &link, cfg.seed, rank);
+    let mut mailbox = Mailbox::new(endpoint);
+    let ctx = node_ctx(
+        cfg, &topology, &dataset, &init, parts[rank].clone(), rank,
+    );
+
+    if rank != 0 {
+        let mut backend = crate::dfl::build_backend(cfg, &dataset)?;
+        let mut sink = TcpReportSink::connect(&transport.tcp, n)?;
+        run_node(ctx, backend.as_mut(), &mut mailbox, &mut sink)?;
+        return Ok(None);
+    }
+
+    // rank 0: host the report plane, run node 0 on a thread, and
+    // coordinate on this one
+    let report_port = transport.tcp.port_of(n)?;
+    let addr = format!("{}:{report_port}", transport.tcp.host);
+    let listener = TcpListener::bind(&addr).map_err(|e| {
+        LmdflError::transport(
+            None,
+            format!("could not bind report plane {addr}: {e}"),
+        )
+    })?;
+    listener
+        .set_nonblocking(true)
+        .map_err(LmdflError::from)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (report_tx, report_rx) = channel::<anyhow::Result<NodeReport>>();
+    let links = topology.directed_links().max(1) as u64;
+
+    let result = std::thread::scope(|scope| {
+        {
+            let flag = Arc::clone(&shutdown);
+            let tx = report_tx.clone();
+            scope.spawn(move || report_accept_loop(listener, tx, flag));
+        }
+        {
+            let tx = report_tx.clone();
+            let dataset = Arc::clone(&dataset);
+            let mut mailbox = mailbox;
+            scope.spawn(move || {
+                // backends are not Send (PJRT), so node 0's is built
+                // inside its own thread, like every other node's
+                let run = || -> anyhow::Result<()> {
+                    let mut backend =
+                        crate::dfl::build_backend(cfg, &dataset)?;
+                    let mut sink = ChannelSink(tx.clone());
+                    run_node(
+                        ctx, backend.as_mut(), &mut mailbox, &mut sink,
+                    )
+                };
+                if let Err(e) = run() {
+                    let _ = tx.send(Err(e));
+                }
+            });
+        }
+        drop(report_tx);
+        let out = coordinate(
+            &cfg.name,
+            n,
+            cfg.rounds,
+            &cfg.lr,
+            links,
+            param_count,
+            &dataset,
+            eval_backend.as_mut(),
+            report_rx,
+        );
+        shutdown.store(true, Ordering::Relaxed);
+        out
+    })?;
+    Ok(Some(result))
 }
 
 #[cfg(test)]
@@ -507,6 +883,7 @@ mod tests {
             mode: Default::default(),
             encoding: Default::default(),
             agossip: None,
+            transport: None,
         }
     }
 
@@ -570,7 +947,8 @@ mod tests {
 
     #[test]
     fn matches_matrix_engine_bits_order() {
-        // threaded wire bits ≈ paper C_s bits + small header/table overhead
+        // threaded wire bits ≈ paper C_s bits + small header/table
+        // overhead
         let c = cfg(QuantizerKind::Qsgd { s: 16 });
         let log = run(&c, NetOptions::default());
         let d = {
@@ -584,7 +962,57 @@ mod tests {
         let ratio = measured as f64 / total_paper as f64;
         assert!(
             (0.9..1.2).contains(&ratio),
-            "wire/paper ratio {ratio} (measured {measured}, paper {total_paper})"
+            "wire/paper ratio {ratio} \
+             (measured {measured}, paper {total_paper})"
         );
+    }
+
+    #[test]
+    fn report_codec_roundtrips_and_rejects_garbage() {
+        let r = NodeReport {
+            node: 3,
+            round: 17,
+            wire_bits: 99_000,
+            paper_bits: 88_000,
+            levels: 16,
+            local_loss: 0.625,
+            params: Some(vec![1.0, -2.5, 0.0]),
+        };
+        let bytes = encode_report(&r);
+        let back = decode_report(&bytes).unwrap();
+        assert_eq!(back.node, 3);
+        assert_eq!(back.round, 17);
+        assert_eq!(back.wire_bits, 99_000);
+        assert_eq!(back.paper_bits, 88_000);
+        assert_eq!(back.levels, 16);
+        assert_eq!(back.local_loss, 0.625);
+        assert_eq!(back.params.as_deref(), Some(&[1.0, -2.5, 0.0][..]));
+
+        let none = NodeReport { params: None, ..r };
+        let nb = encode_report(&none);
+        assert_eq!(nb.len(), REPORT_HEAD);
+        assert!(decode_report(&nb).unwrap().params.is_none());
+
+        // truncation, trailing garbage, and a bad flag are all typed
+        assert!(matches!(
+            decode_report(&bytes[..10]),
+            Err(CodecError::Truncated { .. })
+        ));
+        assert!(matches!(
+            decode_report(&bytes[..bytes.len() - 1]),
+            Err(CodecError::Truncated { .. })
+        ));
+        let mut trailing = nb.clone();
+        trailing.push(0xFF);
+        assert!(matches!(
+            decode_report(&trailing),
+            Err(CodecError::Malformed(_))
+        ));
+        let mut bad_flag = nb;
+        bad_flag[REPORT_HEAD - 1] = 7;
+        assert!(matches!(
+            decode_report(&bad_flag),
+            Err(CodecError::Malformed(_))
+        ));
     }
 }

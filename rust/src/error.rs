@@ -1,0 +1,135 @@
+//! The crate-wide error type of the public API surface.
+//!
+//! Every fallible operation the prelude exposes either returns
+//! [`LmdflError`] directly (the transport layer) or an `anyhow::Result`
+//! whose root cause is one of its variants (the runners, which chain
+//! many subsystems). The variants are *typed*: callers can match on
+//! truncation vs version-mismatch vs OS io instead of grepping message
+//! strings, and [`std::error::Error::source`] chains to the concrete
+//! inner error for diagnostics.
+//!
+//! The per-module error types ([`ConfigError`], [`CodecError`]) stay —
+//! they carry the structured detail — but at API boundaries they travel
+//! inside an `LmdflError`, which the vendored `anyhow`'s blanket
+//! `From<E: std::error::Error>` lifts through `?` without ceremony.
+
+use std::fmt;
+
+use crate::config::ConfigError;
+use crate::quant::codec::CodecError;
+
+/// Unified error of the `lmdfl` public API.
+#[derive(Debug)]
+pub enum LmdflError {
+    /// Configuration parsing or validation failed.
+    Config(ConfigError),
+    /// A wire frame failed to decode. Match on the inner
+    /// [`CodecError`] to distinguish [`CodecError::Truncated`] from
+    /// [`CodecError::Version`] from structural corruption.
+    Codec(CodecError),
+    /// An OS-level I/O operation failed (sockets, files).
+    Io(std::io::Error),
+    /// A transport-level failure that is not a raw OS error: a peer
+    /// unreachable after the retry budget, a closed endpoint, or a
+    /// violated delivery contract.
+    Transport {
+        /// The peer involved, when the failure is per-link.
+        peer: Option<usize>,
+        detail: String,
+    },
+}
+
+impl LmdflError {
+    /// Build a [`LmdflError::Transport`] error.
+    pub fn transport(
+        peer: impl Into<Option<usize>>,
+        detail: impl Into<String>,
+    ) -> LmdflError {
+        LmdflError::Transport { peer: peer.into(), detail: detail.into() }
+    }
+}
+
+impl fmt::Display for LmdflError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LmdflError::Config(e) => write!(f, "{e}"),
+            LmdflError::Codec(e) => write!(f, "{e}"),
+            LmdflError::Io(e) => write!(f, "io error: {e}"),
+            LmdflError::Transport { peer: Some(p), detail } => {
+                write!(f, "transport error (peer {p}): {detail}")
+            }
+            LmdflError::Transport { peer: None, detail } => {
+                write!(f, "transport error: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LmdflError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LmdflError::Config(e) => Some(e),
+            LmdflError::Codec(e) => Some(e),
+            LmdflError::Io(e) => Some(e),
+            LmdflError::Transport { .. } => None,
+        }
+    }
+}
+
+impl From<ConfigError> for LmdflError {
+    fn from(e: ConfigError) -> LmdflError {
+        LmdflError::Config(e)
+    }
+}
+
+impl From<CodecError> for LmdflError {
+    fn from(e: CodecError) -> LmdflError {
+        LmdflError::Codec(e)
+    }
+}
+
+impl From<std::io::Error> for LmdflError {
+    fn from(e: std::io::Error) -> LmdflError {
+        LmdflError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::error::Error as _;
+
+    #[test]
+    fn variants_are_matchable_and_chained() {
+        let io: LmdflError =
+            std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(matches!(io, LmdflError::Io(_)));
+        assert!(io.source().is_some());
+
+        let codec: LmdflError =
+            CodecError::Version { got: 9, want: 1 }.into();
+        match &codec {
+            LmdflError::Codec(CodecError::Version { got, want }) => {
+                assert_eq!((*got, *want), (9, 1));
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+
+        let cfg: LmdflError = ConfigError("nodes must be > 0".into()).into();
+        assert!(cfg.to_string().contains("config error"));
+
+        let t = LmdflError::transport(3, "peer unreachable");
+        assert!(t.to_string().contains("peer 3"));
+        assert!(t.source().is_none());
+    }
+
+    #[test]
+    fn lifts_into_anyhow_via_question_mark() {
+        fn inner() -> anyhow::Result<()> {
+            Err(LmdflError::transport(None, "closed endpoint"))?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("closed endpoint"));
+    }
+}

@@ -91,6 +91,7 @@ pub fn torus16_config(scale: Scale) -> ExperimentConfig {
         mode: EngineMode::Sync,
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

@@ -79,6 +79,7 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

@@ -15,13 +15,15 @@
 //!
 //! Quick start (see `examples/quickstart.rs`):
 //! ```no_run
-//! use lmdfl::config::ExperimentConfig;
-//! use lmdfl::dfl::Trainer;
+//! use lmdfl::prelude::*;
 //!
 //! let cfg = ExperimentConfig::default();
 //! let log = Trainer::build(&cfg).unwrap().run().unwrap();
 //! println!("final loss = {:?}", log.last_loss());
 //! ```
+//!
+//! The supported public surface is curated in [`prelude`]; everything
+//! else is implementation detail that may change between releases.
 //!
 //! ## Parallel round execution
 //!
@@ -67,6 +69,19 @@
 //! async-torus-16` compares sync vs async under a straggler-heavy
 //! torus.
 //!
+//! ## Pluggable transports ([`net`])
+//!
+//! The threaded runtime's byte movement sits behind the
+//! [`net::Delivery`] trait: in-process channels (default), real
+//! localhost TCP sockets (`transport: {"kind": "tcp"}` or `lmdfl node
+//! --rank R` for one process per node), and a fault-injecting wrapper
+//! that applies a simnet [`simnet::LinkModel`]'s drop/latency/jitter
+//! to any inner transport in real time. All transports share one byte
+//! accounting contract: measured `wire_bytes` equals the sum of
+//! encoded `WireMessage` lengths. Errors at this boundary are the
+//! typed [`error::LmdflError`] (truncation vs version-mismatch vs io),
+//! never strings or panics.
+//!
 //! ## The wire format ([`quant::wire`])
 //!
 //! Every broadcast — matrix engine, async engine, threaded runtime —
@@ -101,12 +116,15 @@ pub mod agossip;
 pub mod bench;
 pub mod cli;
 pub mod config;
-pub mod data;
+pub(crate) mod data;
 pub mod dfl;
+pub mod error;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
-pub mod models;
+pub(crate) mod models;
+pub mod net;
+pub mod prelude;
 pub mod quant;
 pub mod runtime;
 pub mod simnet;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      run a DFL training from a JSON config (or inline flags)
+//!   node       run ONE node of a multi-process TCP training (by rank)
 //!   table1     regenerate Table I (distortion comparison)
 //!   fig4       regenerate Fig. 4 (adaptive vs fixed s)
 //!   fig6       regenerate Fig. 6 (--dataset mnist|cifar)
@@ -13,15 +14,10 @@
 //!   artifacts  list AOT artifacts from the manifest
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
-use lmdfl::agossip::WaitPolicy;
-use lmdfl::cli::Args;
-use lmdfl::config::{
-    EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
-    WireEncoding,
-};
-use lmdfl::experiments::{self, Scale};
-use lmdfl::metrics::{fnum, Table};
+use lmdfl::prelude::*;
 
 const USAGE: &str = "\
 lmdfl <command> [options]
@@ -46,6 +42,14 @@ commands:
                         --async-wait-for all|quorum|staleness
                         --async-quorum K --async-staleness N
                         --async-lambda F --async-timeout-s F
+             delivery transport (threaded runtime; see net):
+                        --transport channel|tcp --tcp-host H
+                        --tcp-base-port P --tcp-connect-timeout-s F
+                        --tcp-backoff-s F
+  node       --rank R + the train config flags: one OS process per
+             node over real TCP sockets (node i listens on
+             base_port+i). Launch every rank; rank 0 runs the
+             report plane and prints the summary [--csv out.csv]
   table1     [--d N]... [--s N]... [--trials N]
   fig4       [--full]
   fig6       --dataset mnist|cifar [--full]
@@ -80,6 +84,10 @@ fn scale_of(args: &Args) -> Scale {
 fn run(args: &Args) -> anyhow::Result<()> {
     match args.command.as_deref() {
         Some("train") => cmd_train(args),
+        Some("node") => cmd_node(args),
+        // hidden: TCP echo peer used by the transport conformance
+        // suite's kill-and-resume case
+        Some("net-echo") => cmd_net_echo(args),
         Some("table1") => cmd_table1(args),
         Some("fig4") => cmd_fig4(args),
         Some("fig6") => cmd_fig6(args),
@@ -97,9 +105,21 @@ fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
-    if let Some(path) = args.get("config") {
-        return Ok(lmdfl::config::load_config(Path::new(path))?);
-    }
+    // a --config file is the base; the sectioned flags further down
+    // (transport, network, encoding, mode, async) still layer on top,
+    // so one file re-runs over a different fabric without editing it
+    let mut cfg = if let Some(path) = args.get("config") {
+        load_config(Path::new(path))?
+    } else {
+        inline_config(args)?
+    };
+    apply_section_flags(args, &mut cfg)?;
+    Ok(cfg)
+}
+
+/// Build an [`ExperimentConfig`] purely from inline CLI flags (no
+/// `--config` file given).
+fn inline_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = ExperimentConfig::default();
     cfg.name = args.get_or("name", "cli").to_string();
     cfg.nodes = args.get_usize("nodes", cfg.nodes)?;
@@ -107,7 +127,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     cfg.tau = args.get_usize("tau", cfg.tau)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.batch_size = args.get_usize("batch", cfg.batch_size)?;
-    cfg.lr = lmdfl::config::LrSchedule::fixed(
+    cfg.lr = LrSchedule::fixed(
         args.get_f64("lr", cfg.lr.base)?);
     let s = args.get_usize("s", 16)?;
     if let Some(q) = args.get("quantizer") {
@@ -127,15 +147,15 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(d) = args.get("dataset") {
         cfg.dataset = match d {
-            "synth_mnist" | "mnist" => lmdfl::config::DatasetKind::SynthMnist {
+            "synth_mnist" | "mnist" => DatasetKind::SynthMnist {
                 train: args.get_usize("train", 2000)?,
                 test: args.get_usize("test", 500)?,
             },
-            "synth_cifar" | "cifar" => lmdfl::config::DatasetKind::SynthCifar {
+            "synth_cifar" | "cifar" => DatasetKind::SynthCifar {
                 train: args.get_usize("train", 2000)?,
                 test: args.get_usize("test", 500)?,
             },
-            "blobs" => lmdfl::config::DatasetKind::Blobs {
+            "blobs" => DatasetKind::Blobs {
                 train: args.get_usize("train", 2000)?,
                 test: args.get_usize("test", 500)?,
                 dim: args.get_usize("dim", 32)?,
@@ -158,12 +178,52 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
         };
     }
     if let Some(a) = args.get("hlo") {
-        cfg.backend = lmdfl::config::BackendKind::Hlo {
+        cfg.backend = BackendKind::Hlo {
             artifact: a.to_string(),
         };
     }
     if let Some(p) = args.get("parallelism") {
-        cfg.parallelism = lmdfl::config::Parallelism::parse_str(p)?;
+        cfg.parallelism = Parallelism::parse_str(p)?;
+    }
+    Ok(cfg)
+}
+
+/// Apply the sectioned flags — transport, network (simnet), encoding,
+/// mode and async — over `cfg`, whichever source built it.
+fn apply_section_flags(
+    args: &Args,
+    cfg: &mut ExperimentConfig,
+) -> anyhow::Result<()> {
+    // delivery transport: which net::Delivery the threaded runtime
+    // uses; any flag present materializes a `transport:` section
+    let tcp_keys = [
+        "tcp-host",
+        "tcp-base-port",
+        "tcp-connect-timeout-s",
+        "tcp-backoff-s",
+    ];
+    if args.get("transport").is_some()
+        || tcp_keys.iter().any(|k| args.get(k).is_some())
+    {
+        let mut t = cfg.transport.clone().unwrap_or_default();
+        if let Some(k) = args.get("transport") {
+            t.kind = TransportKind::parse_str(k)?;
+        }
+        if let Some(h) = args.get("tcp-host") {
+            t.tcp.host = h.to_string();
+        }
+        let bp =
+            args.get_usize("tcp-base-port", t.tcp.base_port as usize)?;
+        anyhow::ensure!(
+            (1..=65535).contains(&bp),
+            "--tcp-base-port {bp} outside 1..=65535"
+        );
+        t.tcp.base_port = bp as u16;
+        t.tcp.connect_timeout_s = args
+            .get_f64("tcp-connect-timeout-s", t.tcp.connect_timeout_s)?;
+        t.tcp.retry_backoff_s =
+            args.get_f64("tcp-backoff-s", t.tcp.retry_backoff_s)?;
+        cfg.transport = Some(t);
     }
     // network (simnet) flags: any of them present materializes a
     // `network:` section (over the config file's, when both are given)
@@ -297,7 +357,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
         cfg.agossip = Some(a);
     }
     cfg.validate()?;
-    Ok(cfg)
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -306,6 +366,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let simulate = args.has_flag("simulate")
         || cfg.network.is_some()
         || cfg.mode == EngineMode::Async;
+    let tcp = cfg
+        .transport
+        .as_ref()
+        .is_some_and(|t| t.kind == TransportKind::Tcp);
+    if tcp && (args.has_flag("simulate") || !args.has_flag("threaded")) {
+        anyhow::bail!(
+            "transport tcp moves real bytes over sockets: it needs the \
+             threaded runtime (add --threaded, drop --simulate), or \
+             launch one process per node with `lmdfl node --rank R`"
+        );
+    }
     if args.has_flag("threaded") && args.has_flag("simulate") {
         anyhow::bail!(
             "--threaded and --simulate are mutually exclusive: the \
@@ -336,21 +407,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             .network
             .as_ref()
             .map(|n| n.link.clone())
-            .unwrap_or_else(lmdfl::simnet::LinkModel::ideal);
+            .unwrap_or_else(LinkModel::ideal);
         // legacy knob: --drop-prob still works (now a LinkModel field)
         link.drop_prob = args.get_f64("drop-prob", link.drop_prob)?;
-        lmdfl::dfl::Trainer::run_threaded(
+        Trainer::run_threaded(
             &cfg,
-            lmdfl::dfl::NetOptions { link, eval_every: cfg.eval_every },
+            NetOptions { link, eval_every: cfg.eval_every },
         )?
     } else if simulate {
         let mut sim_cfg = cfg.clone();
         if sim_cfg.network.is_none() {
             sim_cfg.network = Some(Default::default());
         }
-        lmdfl::dfl::Trainer::run_simulated(&sim_cfg)?
+        Trainer::run_simulated(&sim_cfg)?
     } else {
-        lmdfl::dfl::Trainer::build(&cfg)?.run()?
+        Trainer::build(&cfg)?.run()?
     };
     let mut t = Table::new(&[
         "round", "loss", "acc", "bits/link", "s_k", "virt_s",
@@ -397,11 +468,91 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_node(args: &Args) -> anyhow::Result<()> {
+    args.require("rank")?;
+    let rank = args.get_usize("rank", 0)?;
+    let mut cfg = config_from_args(args)?;
+    // `node` is the multi-process entry point: the transport is TCP by
+    // definition (the config may still tune host/ports/timeouts)
+    let mut t = cfg
+        .transport
+        .clone()
+        .unwrap_or_else(TransportConfig::tcp_default);
+    t.kind = TransportKind::Tcp;
+    cfg.transport = Some(t.clone());
+    cfg.validate()?;
+    eprintln!(
+        "node {rank}/{}: listening on {}:{}",
+        cfg.nodes,
+        t.tcp.host,
+        t.tcp.base_port as usize + rank,
+    );
+    if let Some(log) = run_node_process(&cfg, rank)? {
+        println!(
+            "final: loss={} acc={} bits/link={} wire-bytes={}",
+            fnum(log.last_loss().unwrap_or(f64::NAN)),
+            fnum(log.final_accuracy().unwrap_or(f64::NAN)),
+            log.total_bits(),
+            log.records.last().map_or(0, |r| r.wire_bytes),
+        );
+        if let Some(csv) = args.get("csv") {
+            log.write_csv(Path::new(csv))?;
+            println!("wrote {csv}");
+        }
+    }
+    Ok(())
+}
+
+/// Phase tag a `net-echo` peer announces itself with (outside the
+/// protocol's 0..=3 range and the report plane's 0xFE).
+const HELLO_PHASE: u8 = 0xFD;
+
+/// Hidden helper for the transport conformance suite: bind a
+/// [`TcpDelivery`] at `--rank`, send a hello frame to `--peer`, then
+/// echo `--count` frames back to their sender. Killing and respawning
+/// this process exercises the transport's reconnect path.
+fn cmd_net_echo(args: &Args) -> anyhow::Result<()> {
+    args.require("rank")?;
+    let rank = args.get_usize("rank", 0)?;
+    let peer = args.get_usize("peer", 0)?;
+    let count = args.get_usize("count", 5)?;
+    let mut opts = TcpOptions::default();
+    if let Some(h) = args.get("host") {
+        opts.host = h.to_string();
+    }
+    let bp = args.get_usize("base-port", opts.base_port as usize)?;
+    anyhow::ensure!(
+        (1..=65535).contains(&bp),
+        "--base-port {bp} outside 1..=65535"
+    );
+    opts.base_port = bp as u16;
+    let mut d = TcpDelivery::bind(rank, opts)?;
+    d.send(
+        peer,
+        Frame::new(rank, 0, HELLO_PHASE, Arc::from(&[0xAA][..])),
+    )?;
+    let mut echoed = 0usize;
+    while echoed < count {
+        match d.recv(Duration::from_secs(30))? {
+            Some(f) if f.phase == HELLO_PHASE => continue,
+            Some(f) => {
+                d.send(
+                    f.from,
+                    Frame::new(rank, f.round, f.phase, f.bytes),
+                )?;
+                echoed += 1;
+            }
+            None => anyhow::bail!("net-echo: no frame within 30s"),
+        }
+    }
+    Ok(())
+}
+
 fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
     let scale = scale_of(args);
     let preset_name = args.get_or("preset", "torus-16");
     let (cfg, net) =
-        experiments::fig_time::preset(preset_name, scale)?;
+        fig_time::preset(preset_name, scale)?;
     println!(
         "fig-time preset {preset_name}: {} nodes, {} topology, \
          {:.1} Mbps links, straggler p={}",
@@ -411,10 +562,10 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
         net.compute.straggler_prob,
     );
     let curves =
-        experiments::fig_time::run_preset(preset_name, cfg, net)?;
+        fig_time::run_preset(preset_name, cfg, net)?;
     println!(
         "{}",
-        experiments::fig_time::render_loss_vs_time(&curves)
+        fig_time::render_loss_vs_time(&curves)
     );
     let default_target = curves
         .iter()
@@ -424,7 +575,7 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
     let target = args.get_f64("target-loss", default_target)?;
     println!(
         "{}",
-        experiments::fig_time::time_to_target(&curves, target)
+        fig_time::time_to_target(&curves, target)
     );
     Ok(())
 }
@@ -435,39 +586,39 @@ fn cmd_table1(args: &Args) -> anyhow::Result<()> {
     for d in [1000usize, 10_000, 100_000] {
         for s in [4usize, 16, 64, 256] {
             for dist in ["gaussian", "laplace", "gradient"] {
-                rows.extend(experiments::table1::measure(
+                rows.extend(table1::measure(
                     d, s, dist, trials, 42));
             }
         }
     }
-    println!("{}", experiments::table1::render(&rows));
+    println!("{}", table1::render(&rows));
     Ok(())
 }
 
 fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
-    let curves = experiments::fig4::run_mnist(scale_of(args))?;
-    println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
-    println!("{}", experiments::fig8::render_bits_per_element(&curves));
-    println!("{}", experiments::fig8::render_wire_totals(&curves));
+    let curves = fig4::run_mnist(scale_of(args))?;
+    println!("{}", fig8::render_loss_vs_bits(&curves));
+    println!("{}", fig8::render_bits_per_element(&curves));
+    println!("{}", fig8::render_wire_totals(&curves));
     Ok(())
 }
 
 fn cmd_fig6(args: &Args) -> anyhow::Result<()> {
     let scale = scale_of(args);
     let curves = match args.get_or("dataset", "mnist") {
-        "cifar" => experiments::fig6::run_cifar(scale)?,
-        _ => experiments::fig6::run_mnist(scale)?,
+        "cifar" => fig6::run_cifar(scale)?,
+        _ => fig6::run_mnist(scale)?,
     };
-    println!("{}", experiments::fig6::render_panels(&curves, 100e6));
+    println!("{}", fig6::render_panels(&curves, 100e6));
     Ok(())
 }
 
 fn cmd_fig7(args: &Args) -> anyhow::Result<()> {
-    for (label, zeta) in experiments::fig7::zetas(10) {
+    for (label, zeta) in fig7::zetas(10) {
         println!("{label}: zeta = {zeta:.4}");
     }
-    let curves = experiments::fig7::run(scale_of(args))?;
-    println!("{}", experiments::fig7::render(&curves));
+    let curves = fig7::run(scale_of(args))?;
+    println!("{}", fig7::render(&curves));
     Ok(())
 }
 
@@ -475,12 +626,12 @@ fn cmd_fig8(args: &Args) -> anyhow::Result<()> {
     let scale = scale_of(args);
     let var = args.has_flag("variable-lr");
     let curves = match args.get_or("dataset", "mnist") {
-        "cifar" => experiments::fig8::run_cifar(scale, var)?,
-        _ => experiments::fig8::run_mnist(scale, var)?,
+        "cifar" => fig8::run_cifar(scale, var)?,
+        _ => fig8::run_mnist(scale, var)?,
     };
-    println!("{}", experiments::fig8::render_loss_vs_bits(&curves));
-    println!("{}", experiments::fig8::render_bits_per_element(&curves));
-    println!("{}", experiments::fig8::render_wire_totals(&curves));
+    println!("{}", fig8::render_loss_vs_bits(&curves));
+    println!("{}", fig8::render_bits_per_element(&curves));
+    println!("{}", fig8::render_wire_totals(&curves));
     Ok(())
 }
 
@@ -495,7 +646,7 @@ fn cmd_topo(args: &Args) -> anyhow::Result<()> {
         "random" => TopologyKind::Random { p: args.get_f64("p", 0.4)? },
         other => anyhow::bail!("unknown topology '{other}'"),
     };
-    let t = lmdfl::topology::Topology::build(
+    let t = Topology::build(
         &kind, n, args.get_u64("seed", 0)?);
     println!(
         "topology: {} n={} zeta={:.6} alpha={:.4} connected={}",
@@ -524,16 +675,16 @@ fn cmd_quant(args: &Args) -> anyhow::Result<()> {
         "natural bound", "LM bound",
     ]);
     for s in [2usize, 4, 16, 50, 64, 100, 256, 1024, 16384] {
-        let cs = lmdfl::quant::bits::c_s(d, s);
-        let full = lmdfl::quant::bits::full_precision_bits(d);
+        let cs = bits::c_s(d, s);
+        let full = bits::full_precision_bits(d);
         t.row(vec![
             s.to_string(),
-            lmdfl::quant::bits::bits_per_element(s).to_string(),
+            bits::bits_per_element(s).to_string(),
             cs.to_string(),
             format!("{:.1}x", full as f64 / cs as f64),
-            fnum(lmdfl::quant::distortion::qsgd_bound(d, s)),
-            fnum(lmdfl::quant::distortion::natural_bound(d, s)),
-            fnum(lmdfl::quant::distortion::lm_bound(d, s)),
+            fnum(distortion::qsgd_bound(d, s)),
+            fnum(distortion::natural_bound(d, s)),
+            fnum(distortion::lm_bound(d, s)),
         ]);
     }
     println!("d = {d}");
@@ -545,8 +696,8 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
     let dir = args
         .get("dir")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(lmdfl::runtime::artifacts_dir);
-    let m = lmdfl::runtime::Manifest::load(&dir)?;
+        .unwrap_or_else(artifacts_dir);
+    let m = Manifest::load(&dir)?;
     let mut t = Table::new(&["artifact", "kind", "params", "batch", "file"]);
     for (name, a) in &m.artifacts {
         t.row(vec![

@@ -1,0 +1,262 @@
+//! Fault injection over any transport: a [`Delivery`] wrapper applying
+//! a simnet [`LinkModel`]'s drop probability and latency/jitter in real
+//! time.
+//!
+//! Drops happen on the send side: the payload is replaced by an
+//! empty-bytes tombstone with the envelope key intact, so receivers
+//! never deadlock on a slot that will never arrive and the byte meter
+//! still counts the full payload (a lost message occupied the link —
+//! the same accounting the simnet fabric uses). Latency and jitter are
+//! applied on the receive side by holding arrived frames in a min-heap
+//! until their due time.
+//!
+//! Two deliberate divergences from the simnet clock: bandwidth shaping
+//! is *not* applied (serialization delay on localhost is what it is —
+//! modeling it is the virtual clock's job), and jitter reordering
+//! depends on real OS timing, so lossy/jittery wall-clock runs are not
+//! bit-reproducible the way virtual-clock runs are. The drop pattern
+//! *is* deterministic for a given rng seed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+use crate::error::LmdflError;
+use crate::simnet::LinkModel;
+use crate::util::rng::Rng;
+
+use super::{Delivery, Frame};
+
+/// A frame held until its jittered delivery time. Ordered by (due,
+/// arrival sequence) so equal due-times keep arrival order.
+struct Held {
+    due: Instant,
+    seq: u64,
+    frame: Frame,
+}
+
+impl PartialEq for Held {
+    fn eq(&self, other: &Held) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+
+impl Eq for Held {}
+
+impl PartialOrd for Held {
+    fn partial_cmp(&self, other: &Held) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Held {
+    fn cmp(&self, other: &Held) -> std::cmp::Ordering {
+        (self.due, self.seq).cmp(&(other.due, other.seq))
+    }
+}
+
+/// The fault-injecting wrapper. Compose it around any inner transport:
+/// `FaultDelivery::new(Box::new(inner), link, rng)`.
+pub struct FaultDelivery {
+    inner: Box<dyn Delivery>,
+    link: LinkModel,
+    rng: Rng,
+    held: BinaryHeap<Reverse<Held>>,
+    seq: u64,
+    sent: u64,
+}
+
+impl FaultDelivery {
+    pub fn new(
+        inner: Box<dyn Delivery>,
+        link: LinkModel,
+        rng: Rng,
+    ) -> FaultDelivery {
+        FaultDelivery {
+            inner,
+            link,
+            rng,
+            held: BinaryHeap::new(),
+            seq: 0,
+            sent: 0,
+        }
+    }
+
+    fn delayed(&self) -> bool {
+        self.link.latency_s > 0.0 || self.link.jitter_s > 0.0
+    }
+
+    fn hold(&mut self, frame: Frame) {
+        let mut secs = self.link.latency_s;
+        if self.link.jitter_s > 0.0 {
+            secs += self.rng.uniform() * self.link.jitter_s;
+        }
+        self.held.push(Reverse(Held {
+            due: Instant::now() + Duration::from_secs_f64(secs),
+            seq: self.seq,
+            frame,
+        }));
+        self.seq += 1;
+    }
+}
+
+impl Delivery for FaultDelivery {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), LmdflError> {
+        // the wrapper's meter is the authoritative one: full payload
+        // bytes, dropped or not (the link was occupied either way);
+        // the inner transport's own meter sees only what survives
+        self.sent += frame.bytes.len() as u64;
+        if self.link.dropped(&mut self.rng) {
+            let t = Frame::tombstone(frame.from, frame.round, frame.phase);
+            self.inner.send(to, t)
+        } else {
+            self.inner.send(to, frame)
+        }
+    }
+
+    fn recv(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Frame>, LmdflError> {
+        if !self.delayed() {
+            return self.inner.recv(timeout);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            // earliest held frame that is already due wins
+            if let Some(Reverse(head)) = self.held.peek() {
+                if head.due <= now {
+                    let Reverse(h) =
+                        self.held.pop().expect("peeked head");
+                    return Ok(Some(h.frame));
+                }
+            }
+            // wait for new arrivals until the head is due (or the
+            // caller's deadline, whichever is sooner)
+            let until = match self.held.peek() {
+                Some(Reverse(head)) => head.due.min(deadline),
+                None => deadline,
+            };
+            if until <= now {
+                if self.held.is_empty() {
+                    return Ok(None); // caller's timeout, nothing held
+                }
+                continue; // head became due while computing
+            }
+            if let Some(f) = self.inner.recv(until - now)? {
+                self.hold(f);
+            } else if self
+                .held
+                .peek()
+                .map(|Reverse(h)| h.due > deadline)
+                .unwrap_or(true)
+            {
+                // inner timed out and nothing matures before the
+                // caller's deadline
+                return Ok(None);
+            }
+        }
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.sent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{channel_mesh, Frame};
+    use std::sync::Arc;
+
+    fn frame(from: usize, round: u32, len: usize) -> Frame {
+        Frame::new(from, round, 0, Arc::from(vec![0x5A; len]))
+    }
+
+    #[test]
+    fn drop_prob_one_tombstones_everything_but_meters_fully() {
+        let mut mesh = channel_mesh(2);
+        let receiver = mesh.pop().unwrap();
+        let sender = mesh.pop().unwrap();
+        let mut lossy = FaultDelivery::new(
+            Box::new(sender),
+            LinkModel::lossy(1.0),
+            Rng::new(7),
+        );
+        for k in 0..4 {
+            lossy.send(1, frame(0, k, 25)).unwrap();
+        }
+        // outer meter counts every payload in full
+        assert_eq!(lossy.wire_bytes(), 100);
+        let mut rx = receiver;
+        for k in 0..4 {
+            let f = rx.recv(Duration::from_secs(1)).unwrap().unwrap();
+            assert!(f.is_tombstone());
+            assert_eq!((f.from, f.round), (0, k));
+        }
+    }
+
+    #[test]
+    fn lossless_link_passes_frames_through_unchanged() {
+        let mut mesh = channel_mesh(2);
+        let receiver = mesh.pop().unwrap();
+        let sender = mesh.pop().unwrap();
+        let mut ideal = FaultDelivery::new(
+            Box::new(sender),
+            LinkModel::ideal(),
+            Rng::new(7),
+        );
+        ideal.send(1, frame(0, 3, 9)).unwrap();
+        let mut wrapped_rx = FaultDelivery::new(
+            Box::new(receiver),
+            LinkModel::ideal(),
+            Rng::new(8),
+        );
+        let f = wrapped_rx
+            .recv(Duration::from_secs(1))
+            .unwrap()
+            .unwrap();
+        assert_eq!((f.from, f.round, f.bytes.len()), (0, 3, 9));
+        assert_eq!(ideal.wire_bytes(), 9);
+    }
+
+    #[test]
+    fn latency_holds_then_delivers_all() {
+        let mut mesh = channel_mesh(2);
+        let receiver = mesh.pop().unwrap();
+        let mut sender = mesh.pop().unwrap();
+        for k in 0..3 {
+            sender.send(1, frame(0, k, 5)).unwrap();
+        }
+        let link = LinkModel {
+            latency_s: 0.02,
+            jitter_s: 0.02,
+            ..LinkModel::ideal()
+        };
+        let mut delayed = FaultDelivery::new(
+            Box::new(receiver),
+            link,
+            Rng::new(42),
+        );
+        let t0 = Instant::now();
+        let mut rounds: Vec<u32> = Vec::new();
+        for _ in 0..3 {
+            let f = delayed
+                .recv(Duration::from_secs(2))
+                .unwrap()
+                .unwrap();
+            rounds.push(f.round);
+        }
+        // everything arrives (possibly reordered by jitter), and not
+        // before the base latency elapsed
+        rounds.sort_unstable();
+        assert_eq!(rounds, vec![0, 1, 2]);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // an exhausted queue times out cleanly
+        assert!(delayed
+            .recv(Duration::from_millis(10))
+            .unwrap()
+            .is_none());
+    }
+}

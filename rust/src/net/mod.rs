@@ -1,0 +1,431 @@
+//! Pluggable delivery transports: how encoded wire frames physically
+//! move between gossip nodes.
+//!
+//! The gossip core ([`crate::dfl::net`]) speaks only to the [`Delivery`]
+//! trait — send one addressed [`Frame`], drain arrivals, report the
+//! measured byte meter — so the protocol logic is identical whether the
+//! bytes cross an in-process channel, a localhost TCP socket, or a
+//! fault-injecting wrapper (the pheromessage idiom: gossip logic over a
+//! swappable delivery layer). Implementations:
+//!
+//! * [`ChannelDelivery`] — the in-process mpsc mesh the threaded
+//!   runtime has always used, now as one impl instead of a bespoke
+//!   engine fork ([`channel_mesh`] builds a full n-node mesh).
+//! * [`TcpDelivery`] — multi-process transport framing wire bytes over
+//!   TCP sockets ([`crate::quant::wire::write_frame`] envelopes) with
+//!   per-peer lazy connect, reconnect, and exponential backoff.
+//! * [`FaultDelivery`] — wraps any inner transport with a simnet
+//!   [`LinkModel`](crate::simnet::LinkModel)'s drop/latency/jitter in
+//!   real time.
+//!
+//! # Byte accounting contract
+//!
+//! `wire_bytes()` meters the *payload* length of every frame offered to
+//! `send`, including frames a fault wrapper later drops (a lost message
+//! still occupied the link) and excluding envelope overhead — so the
+//! meter equals the sum of encoded `WireMessage` lengths exactly, the
+//! same contract the simnet fabric asserts.
+//!
+//! Select a transport via the `transport:` config section
+//! ([`TransportConfig`]) or `lmdfl train --threaded --transport
+//! channel|tcp`; `lmdfl node --rank R` launches one node of a
+//! multi-process TCP run.
+
+mod fault;
+mod tcp;
+
+pub use fault::FaultDelivery;
+pub use tcp::{connect_retry, TcpDelivery, TcpOptions};
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::json::Json;
+use crate::config::ConfigError;
+use crate::error::LmdflError;
+
+/// One addressed transport frame: the envelope key (sender, protocol
+/// round, phase) plus the encoded `WireMessage` payload. An empty
+/// payload is the drop tombstone — receivers must get *something* for
+/// every broadcast slot or they would block forever, so fault wrappers
+/// replace dropped payloads with an empty one, envelope intact.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub from: usize,
+    pub round: u32,
+    pub phase: u8,
+    /// shared across every receiver of a broadcast (one allocation)
+    pub bytes: Arc<[u8]>,
+}
+
+impl Frame {
+    pub fn new(
+        from: usize,
+        round: u32,
+        phase: u8,
+        bytes: Arc<[u8]>,
+    ) -> Frame {
+        Frame { from, round, phase, bytes }
+    }
+
+    /// The empty-payload drop marker for this envelope key.
+    pub fn tombstone(from: usize, round: u32, phase: u8) -> Frame {
+        Frame { from, round, phase, bytes: Arc::from(&[][..]) }
+    }
+
+    pub fn is_tombstone(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+/// How frames move between nodes. Contract:
+///
+/// * `send` queues one frame toward node `to` and returns without
+///   waiting for delivery. Delivery is reliable and per-link FIFO
+///   unless a fault wrapper injects loss or jitter reordering.
+/// * `recv` blocks up to `timeout` for the next arrival from *any*
+///   sender; `Ok(None)` means nothing arrived in time.
+/// * `wire_bytes` is the cumulative payload-byte meter over every frame
+///   offered to `send` (see the module docs for the exact contract).
+pub trait Delivery: Send {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), LmdflError>;
+
+    fn recv(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Frame>, LmdflError>;
+
+    fn wire_bytes(&self) -> u64;
+}
+
+/// In-process transport: one mpsc receiver per node, sender handles
+/// cloned per peer. This is the threaded runtime's original channel
+/// fabric behind the [`Delivery`] trait.
+pub struct ChannelDelivery {
+    peers: Vec<Sender<Frame>>,
+    rx: Receiver<Frame>,
+    sent: u64,
+}
+
+/// Build the full n-node channel mesh; element `i` is node `i`'s
+/// endpoint. Every endpoint holds a sender to every node (including
+/// itself, which also keeps its own receiver connected while the node
+/// lives).
+pub fn channel_mesh(n: usize) -> Vec<ChannelDelivery> {
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Frame>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .map(|rx| ChannelDelivery { peers: txs.clone(), rx, sent: 0 })
+        .collect()
+}
+
+impl Delivery for ChannelDelivery {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), LmdflError> {
+        self.sent += frame.bytes.len() as u64;
+        let tx = self.peers.get(to).ok_or_else(|| {
+            LmdflError::transport(
+                to,
+                format!("unknown peer {to} ({} in mesh)", self.peers.len()),
+            )
+        })?;
+        // best-effort enqueue: a peer that already exited (its receiver
+        // dropped) simply stops hearing us — the original runtime's
+        // semantics; the failure surfaces at *its* neighbors' recv
+        // deadlines, not at every sender
+        let _ = tx.send(frame);
+        Ok(())
+    }
+
+    fn recv(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Frame>, LmdflError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // unreachable while this endpoint lives (it holds its own
+            // sender), but total anyway
+            Err(RecvTimeoutError::Disconnected) => Err(
+                LmdflError::transport(None, "all peer endpoints closed"),
+            ),
+        }
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.sent
+    }
+}
+
+/// Buffered matcher over any [`Delivery`]: returns the frame for a
+/// specific (from, round, phase) key, stashing out-of-order arrivals.
+/// Payloads are shared `Arc`s, so stashing moves a handle, never the
+/// bytes. This is what lets fast neighbors run ahead a round without
+/// corrupting a slow receiver — on any transport.
+pub struct Mailbox {
+    delivery: Box<dyn Delivery>,
+    stash: HashMap<(usize, u32, u8), VecDeque<Arc<[u8]>>>,
+}
+
+impl Mailbox {
+    pub fn new(delivery: Box<dyn Delivery>) -> Mailbox {
+        Mailbox { delivery, stash: HashMap::new() }
+    }
+
+    /// Send passthrough to the underlying transport.
+    pub fn send(
+        &mut self,
+        to: usize,
+        frame: Frame,
+    ) -> Result<(), LmdflError> {
+        self.delivery.send(to, frame)
+    }
+
+    /// The underlying transport's payload byte meter.
+    pub fn wire_bytes(&self) -> u64 {
+        self.delivery.wire_bytes()
+    }
+
+    /// Block until the frame keyed (from, round, phase) arrives,
+    /// stashing everything else; `deadline` bounds the total wait (a
+    /// dead peer becomes a typed transport error, not a hang).
+    pub fn recv(
+        &mut self,
+        from: usize,
+        round: u32,
+        phase: u8,
+        deadline: Duration,
+    ) -> Result<Arc<[u8]>, LmdflError> {
+        let key = (from, round, phase);
+        let until = Instant::now() + deadline;
+        loop {
+            if let Some(q) = self.stash.get_mut(&key) {
+                if let Some(bytes) = q.pop_front() {
+                    return Ok(bytes);
+                }
+            }
+            let now = Instant::now();
+            if now >= until {
+                return Err(LmdflError::transport(
+                    from,
+                    format!(
+                        "timed out waiting for frame (round {round}, \
+                         phase {phase})"
+                    ),
+                ));
+            }
+            if let Some(f) = self.delivery.recv(until - now)? {
+                let k = (f.from, f.round, f.phase);
+                if k == key {
+                    return Ok(f.bytes);
+                }
+                self.stash.entry(k).or_default().push_back(f.bytes);
+            }
+        }
+    }
+}
+
+/// Which [`Delivery`] implementation a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// in-process mpsc mesh (one OS thread per node)
+    #[default]
+    Channel,
+    /// TCP sockets — one process per node via `lmdfl node --rank R`,
+    /// or bound in-process for parity testing
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self, ConfigError> {
+        match text {
+            "channel" => Ok(TransportKind::Channel),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(ConfigError(format!(
+                "transport.kind must be 'channel' or 'tcp', got '{other}'"
+            ))),
+        }
+    }
+}
+
+/// The `transport:` config section: which delivery backend the threaded
+/// runtime uses, plus the TCP endpoint parameters (ignored for
+/// `channel`). Node `i` listens on `base_port + i`; a multi-process
+/// run's report/eval plane listens on `base_port + nodes`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    pub tcp: TcpOptions,
+}
+
+impl TransportConfig {
+    /// TCP transport with default endpoint options.
+    pub fn tcp_default() -> TransportConfig {
+        TransportConfig {
+            kind: TransportKind::Tcp,
+            tcp: TcpOptions::default(),
+        }
+    }
+
+    pub fn validate(&self, nodes: usize) -> Result<(), ConfigError> {
+        let t = &self.tcp;
+        if t.host.is_empty() {
+            return Err(ConfigError("transport.host is empty".into()));
+        }
+        // node ports plus the report plane must fit in the port space
+        if t.base_port as usize + nodes + 1 > 65535 {
+            return Err(ConfigError(format!(
+                "transport.base_port {} + {nodes} nodes + report port \
+                 exceeds 65535",
+                t.base_port
+            )));
+        }
+        if !(t.connect_timeout_s > 0.0 && t.connect_timeout_s.is_finite())
+        {
+            return Err(ConfigError(
+                "transport.connect_timeout_s must be finite and > 0"
+                    .into(),
+            ));
+        }
+        if !(t.retry_backoff_s > 0.0 && t.retry_backoff_s.is_finite()) {
+            return Err(ConfigError(
+                "transport.retry_backoff_s must be finite and > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("host", Json::str(&self.tcp.host)),
+            ("base_port", Json::num(self.tcp.base_port as f64)),
+            (
+                "connect_timeout_s",
+                Json::num(self.tcp.connect_timeout_s),
+            ),
+            ("retry_backoff_s", Json::num(self.tcp.retry_backoff_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let d = TcpOptions::default();
+        let kind = match j.get_str("kind") {
+            Some(k) => TransportKind::parse_str(k)?,
+            None => TransportKind::default(),
+        };
+        let base_port = match j.get_usize("base_port") {
+            Some(p) if (1..=65535).contains(&p) => p as u16,
+            Some(p) => {
+                return Err(ConfigError(format!(
+                    "transport.base_port {p} outside 1..=65535"
+                )))
+            }
+            None => d.base_port,
+        };
+        Ok(TransportConfig {
+            kind,
+            tcp: TcpOptions {
+                host: j
+                    .get_str("host")
+                    .unwrap_or(&d.host)
+                    .to_string(),
+                base_port,
+                connect_timeout_s: j
+                    .get_f64("connect_timeout_s")
+                    .unwrap_or(d.connect_timeout_s),
+                retry_backoff_s: j
+                    .get_f64("retry_backoff_s")
+                    .unwrap_or(d.retry_backoff_s),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(from: usize, round: u32, phase: u8, byte: u8) -> Frame {
+        Frame::new(from, round, phase, Arc::from(vec![byte; 4]))
+    }
+
+    #[test]
+    fn channel_mesh_routes_and_meters() {
+        let mut mesh = channel_mesh(3);
+        let mut n2 = mesh.pop().unwrap();
+        let mut n1 = mesh.pop().unwrap();
+        let mut n0 = mesh.pop().unwrap();
+        n0.send(1, frame(0, 0, 0, 7)).unwrap();
+        n0.send(2, frame(0, 0, 0, 7)).unwrap();
+        n2.send(1, frame(2, 0, 2, 9)).unwrap();
+        assert_eq!(n0.wire_bytes(), 8);
+        assert_eq!(n2.wire_bytes(), 4);
+        let a = n1.recv(Duration::from_secs(1)).unwrap().unwrap();
+        let b = n1.recv(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!((a.from, b.from), (0, 2));
+        assert!(n1
+            .recv(Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        // unknown peer is a typed transport error
+        assert!(matches!(
+            n0.send(9, frame(0, 0, 0, 1)),
+            Err(LmdflError::Transport { peer: Some(9), .. })
+        ));
+    }
+
+    #[test]
+    fn mailbox_stashes_out_of_order_arrivals() {
+        let mut mesh = channel_mesh(2);
+        let mut sender = mesh.pop().unwrap();
+        let receiver = mesh.pop().unwrap();
+        // arrive out of order: round 1 before round 0
+        sender.send(0, frame(1, 1, 0, 11)).unwrap();
+        sender.send(0, frame(1, 0, 0, 10)).unwrap();
+        let mut mb = Mailbox::new(Box::new(receiver));
+        let r0 = mb.recv(1, 0, 0, Duration::from_secs(1)).unwrap();
+        assert_eq!(r0[0], 10);
+        let r1 = mb.recv(1, 1, 0, Duration::from_secs(1)).unwrap();
+        assert_eq!(r1[0], 11);
+        // a missing frame times out with a typed error, not a hang
+        let err = mb
+            .recv(1, 2, 0, Duration::from_millis(10))
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            LmdflError::Transport { peer: Some(1), .. }
+        ));
+    }
+
+    #[test]
+    fn transport_config_json_roundtrip_and_validation() {
+        let cfg = TransportConfig::tcp_default();
+        let back =
+            TransportConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(cfg.validate(16).is_ok());
+        // port-space overflow rejected
+        let mut high = cfg.clone();
+        high.tcp.base_port = 65530;
+        assert!(high.validate(16).is_err());
+        // bad kinds / ports rejected
+        assert!(TransportKind::parse_str("carrier-pigeon").is_err());
+        let j = Json::parse(r#"{"kind": "tcp", "base_port": 0}"#)
+            .unwrap();
+        assert!(TransportConfig::from_json(&j).is_err());
+    }
+}

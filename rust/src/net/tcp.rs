@@ -1,0 +1,376 @@
+//! Multi-process TCP transport: `WireMessage` frames over localhost
+//! sockets.
+//!
+//! Node `i` listens on `base_port + i`; an accept loop hands each
+//! inbound connection to a blocking reader thread that parses
+//! length-prefixed envelopes ([`crate::quant::wire::read_frame`]) and
+//! funnels frames into one mpsc queue. Outbound connections open
+//! lazily on first send and reconnect with exponential backoff inside
+//! a per-send deadline, so a peer process that restarts (the
+//! kill-one-and-resume case) is transparently re-dialed — undelivered
+//! frames from the dead connection are retried whole, because `send`
+//! never reports success until `write_frame` returned.
+//!
+//! Localhost and trusted-LAN use only: there is no auth or encryption,
+//! and the frame parser's hostile-length caps are the only input
+//! validation.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::error::LmdflError;
+use crate::quant::wire;
+
+use super::{Delivery, Frame};
+
+/// TCP endpoint parameters (the `transport:` config section's fields).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TcpOptions {
+    /// interface the listeners bind and peers are dialed on
+    pub host: String,
+    /// node `i` listens on `base_port + i`
+    pub base_port: u16,
+    /// total budget for reaching a peer — initial dial at startup and
+    /// each send's reconnect loop both give up after this long
+    pub connect_timeout_s: f64,
+    /// initial retry sleep; doubles per attempt, capped at 1 s
+    pub retry_backoff_s: f64,
+}
+
+impl Default for TcpOptions {
+    fn default() -> TcpOptions {
+        TcpOptions {
+            host: "127.0.0.1".to_string(),
+            base_port: 7600,
+            connect_timeout_s: 10.0,
+            retry_backoff_s: 0.05,
+        }
+    }
+}
+
+impl TcpOptions {
+    /// The port node `node` listens on.
+    pub fn port_of(&self, node: usize) -> Result<u16, LmdflError> {
+        let p = self.base_port as usize + node;
+        if p > 65535 {
+            return Err(LmdflError::transport(
+                node,
+                format!("port {p} for node {node} exceeds 65535"),
+            ));
+        }
+        Ok(p as u16)
+    }
+
+    fn backoff_base(&self) -> Duration {
+        Duration::from_secs_f64(self.retry_backoff_s.max(1e-3))
+    }
+
+    fn connect_budget(&self) -> Duration {
+        Duration::from_secs_f64(self.connect_timeout_s.max(1e-3))
+    }
+}
+
+/// Dial `host:port`, retrying with exponential backoff until the
+/// options' connect budget runs out. Used for gossip links and for the
+/// report plane of a multi-process run.
+pub fn connect_retry(
+    opts: &TcpOptions,
+    port: u16,
+) -> Result<TcpStream, LmdflError> {
+    let deadline = Instant::now() + opts.connect_budget();
+    let mut backoff = opts.backoff_base();
+    let addr = format!("{}:{port}", opts.host);
+    loop {
+        // short per-attempt timeout so a dead peer doesn't eat the
+        // whole budget in one OS-level connect
+        let per_try = Duration::from_millis(250)
+            .min(deadline.saturating_duration_since(Instant::now()));
+        let attempt = std::net::ToSocketAddrs::to_socket_addrs(&*addr)
+            .map_err(LmdflError::from)
+            .and_then(|mut it| {
+                it.next().ok_or_else(|| {
+                    LmdflError::transport(
+                        None,
+                        format!("address {addr} resolved to nothing"),
+                    )
+                })
+            })
+            .and_then(|sock| {
+                TcpStream::connect_timeout(&sock, per_try.max(
+                    Duration::from_millis(1),
+                ))
+                .map_err(LmdflError::from)
+            });
+        match attempt {
+            Ok(stream) => {
+                // small frames on a latency-sensitive protocol: never
+                // let Nagle batch them
+                let _ = stream.set_nodelay(true);
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(LmdflError::transport(
+                        None,
+                        format!(
+                            "could not connect to {addr} within \
+                             {:.1}s: {e}",
+                            opts.connect_timeout_s
+                        ),
+                    ));
+                }
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+}
+
+/// The socket transport. One instance per node process (or per node
+/// thread when bound in-process for parity testing).
+pub struct TcpDelivery {
+    node: usize,
+    opts: TcpOptions,
+    rx: Receiver<Frame>,
+    /// keeps `rx` connected even while no reader thread holds a clone
+    _tx_keepalive: Sender<Frame>,
+    shutdown: Arc<AtomicBool>,
+    /// lazily dialed outbound connections, one per peer
+    outs: HashMap<usize, TcpStream>,
+    sent: u64,
+}
+
+impl TcpDelivery {
+    /// Bind this node's listener and start the accept loop. Fails fast
+    /// if the port is taken (a stale run or a rank collision).
+    pub fn bind(
+        node: usize,
+        opts: TcpOptions,
+    ) -> Result<TcpDelivery, LmdflError> {
+        let port = opts.port_of(node)?;
+        let addr = format!("{}:{port}", opts.host);
+        let listener = TcpListener::bind(&addr).map_err(|e| {
+            LmdflError::transport(
+                node,
+                format!("could not bind {addr}: {e}"),
+            )
+        })?;
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = channel::<Frame>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept_tx = tx.clone();
+        thread::Builder::new()
+            .name(format!("lmdfl-accept-{node}"))
+            .spawn(move || accept_loop(listener, accept_tx, flag))
+            .map_err(LmdflError::from)?;
+        Ok(TcpDelivery {
+            node,
+            opts,
+            rx,
+            _tx_keepalive: tx,
+            shutdown,
+            outs: HashMap::new(),
+            sent: 0,
+        })
+    }
+
+    /// The dial options this endpoint was built with.
+    pub fn options(&self) -> &TcpOptions {
+        &self.opts
+    }
+
+    fn connect_to(&self, to: usize) -> Result<TcpStream, LmdflError> {
+        let port = self.opts.port_of(to)?;
+        connect_retry(&self.opts, port).map_err(|e| match e {
+            LmdflError::Transport { detail, .. } => {
+                LmdflError::transport(to, detail)
+            }
+            other => other,
+        })
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<Frame>,
+    shutdown: Arc<AtomicBool>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // the reader blocks; only the accept loop polls
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let reader_tx = tx.clone();
+                let _ = thread::Builder::new()
+                    .name("lmdfl-read".to_string())
+                    .spawn(move || read_loop(stream, reader_tx));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn read_loop(mut stream: TcpStream, tx: Sender<Frame>) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some(env)) => {
+                let frame = Frame {
+                    from: env.from as usize,
+                    round: env.round,
+                    phase: env.phase,
+                    bytes: env.payload.into(),
+                };
+                if tx.send(frame).is_err() {
+                    return; // endpoint dropped — stop reading
+                }
+            }
+            // clean EOF (peer closed) or a poisoned stream: either way
+            // this connection is done; the peer re-dials if it has more
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
+impl Delivery for TcpDelivery {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), LmdflError> {
+        // meter at entry — the byte-accounting contract counts every
+        // payload offered to the link
+        self.sent += frame.bytes.len() as u64;
+        let deadline = Instant::now() + self.opts.connect_budget();
+        let mut backoff = self.opts.backoff_base();
+        loop {
+            if !self.outs.contains_key(&to) {
+                let stream = self.connect_to(to)?;
+                self.outs.insert(to, stream);
+            }
+            let stream = self.outs.get_mut(&to).expect("just inserted");
+            let wrote = wire::write_frame(
+                stream,
+                self.node as u32,
+                frame.round,
+                frame.phase,
+                &frame.bytes,
+            );
+            match wrote {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    // broken pipe / reset: drop the connection and
+                    // retry the whole frame on a fresh dial
+                    self.outs.remove(&to);
+                    if Instant::now() + backoff >= deadline {
+                        return Err(LmdflError::transport(
+                            to,
+                            format!("send failed after retries: {e}"),
+                        ));
+                    }
+                    thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+    }
+
+    fn recv(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Option<Frame>, LmdflError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // unreachable while _tx_keepalive lives, but total anyway
+            Err(RecvTimeoutError::Disconnected) => Err(
+                LmdflError::transport(self.node, "receive queue closed"),
+            ),
+        }
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.sent
+    }
+}
+
+impl Drop for TcpDelivery {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for (_, stream) in self.outs.drain() {
+            let _ = stream.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(base_port: u16) -> TcpOptions {
+        TcpOptions {
+            base_port,
+            connect_timeout_s: 5.0,
+            retry_backoff_s: 0.01,
+            ..TcpOptions::default()
+        }
+    }
+
+    #[test]
+    fn frames_cross_a_socket_pair() {
+        let o = opts(17910);
+        let mut a = TcpDelivery::bind(0, o.clone()).unwrap();
+        let mut b = TcpDelivery::bind(1, o).unwrap();
+        let payload: Arc<[u8]> = Arc::from(vec![0xAB; 37]);
+        a.send(1, Frame::new(0, 3, 2, Arc::clone(&payload))).unwrap();
+        a.send(1, Frame::tombstone(0, 4, 0)).unwrap();
+        let f1 = b.recv(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!((f1.from, f1.round, f1.phase), (0, 3, 2));
+        assert_eq!(&f1.bytes[..], &payload[..]);
+        let f2 = b.recv(Duration::from_secs(5)).unwrap().unwrap();
+        assert!(f2.is_tombstone());
+        assert_eq!(f2.round, 4);
+        // meter counts payload bytes only (tombstone adds zero)
+        assert_eq!(a.wire_bytes(), 37);
+        assert_eq!(b.wire_bytes(), 0);
+        // reply crosses the reverse direction on its own connection
+        b.send(0, Frame::new(1, 3, 2, Arc::from(vec![1u8, 2])))
+            .unwrap();
+        let back = a.recv(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(back.from, 1);
+        assert_eq!(&back.bytes[..], &[1, 2]);
+    }
+
+    #[test]
+    fn unreachable_peer_is_a_typed_error() {
+        let mut o = opts(17920);
+        o.connect_timeout_s = 0.2;
+        let mut a = TcpDelivery::bind(0, o).unwrap();
+        let err = a
+            .send(7, Frame::tombstone(0, 0, 0))
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            LmdflError::Transport { peer: Some(7), .. }
+        ));
+        // the meter still counted the attempt's payload (0 here) and
+        // the endpoint stays usable
+        assert_eq!(a.wire_bytes(), 0);
+    }
+
+    #[test]
+    fn port_of_overflow_rejected() {
+        let mut o = opts(65530);
+        o.connect_timeout_s = 0.1;
+        assert!(o.port_of(5).is_ok());
+        assert!(o.port_of(6).is_err());
+    }
+}

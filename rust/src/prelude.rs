@@ -1,0 +1,51 @@
+//! The curated public surface of the crate.
+//!
+//! `use lmdfl::prelude::*;` brings in every type the examples, the CLI
+//! and downstream experiment drivers are expected to touch: config
+//! schema, the [`Trainer`] entry point, the transport layer
+//! ([`Delivery`] and its implementations), quantizers, wire codec
+//! types, metrics, the figure drivers, and the typed error
+//! ([`LmdflError`]). Anything *not* re-exported here is an
+//! implementation detail that may change between releases.
+
+pub use crate::agossip::{AsyncConfig, WaitPolicy};
+pub use crate::cli::Args;
+pub use crate::config::{
+    load_config, BackendKind, ConfigError, DatasetKind, EngineMode,
+    ExperimentConfig, LrSchedule, Parallelism, QuantizerKind,
+    TopologyKind, WireEncoding,
+};
+pub use crate::dfl::{
+    run_node_process, DflEngine, EngineOptions, LocalUpdate,
+    NetOptions, RustMlpBackend, Trainer,
+};
+pub use crate::error::LmdflError;
+pub use crate::linalg::eigen::alpha_of_zeta;
+pub use crate::experiments::{
+    fig4, fig6, fig7, fig8, fig_time, paper_base_config,
+    paper_cifar_config, run_labeled, table1, Curve, Scale,
+};
+pub use crate::metrics::{fnum, RoundRecord, RunLog, Table};
+pub use crate::net::{
+    channel_mesh, connect_retry, ChannelDelivery, Delivery,
+    FaultDelivery, Frame, Mailbox, TcpDelivery, TcpOptions,
+    TransportConfig, TransportKind,
+};
+pub use crate::quant::codec::CodecError;
+pub use crate::quant::wire::{
+    Envelope, QuantTag, WireHeader, WIRE_VERSION,
+};
+pub use crate::quant::{
+    bits, build_quantizer, distortion, quantize_damped, AdaptiveLevels,
+    AlqQuantizer, FullPrecision, LloydMaxQuantizer, NaturalQuantizer,
+    QsgdQuantizer, QuantizedVector, Quantizer, TernGradQuantizer,
+    TopKQuantizer,
+};
+pub use crate::runtime::{
+    artifacts_available, artifacts_dir, literal_f32, literal_i32,
+    HloBackend, HloExecutor, Manifest,
+};
+pub use crate::simnet::{LinkModel, NetworkConfig};
+pub use crate::topology::Topology;
+pub use crate::util::rng::Rng;
+pub use crate::xla;

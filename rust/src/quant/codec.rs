@@ -19,12 +19,41 @@ use super::QuantizedVector;
 use crate::quant::bits::{ceil_log2, stream_bytes};
 use crate::quant::kernels;
 
-#[derive(Debug)]
-pub struct CodecError(pub String);
+/// Total-decode failure. Decoding never panics on hostile bytes; every
+/// malformed input maps to one of these variants, so callers (and the
+/// [`crate::error::LmdflError::Codec`] wrapper) can match on truncation
+/// vs version-mismatch vs structural corruption instead of parsing
+/// message strings.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The stream ended before the format was satisfied, or the body
+    /// claims more payload than the buffer holds. `have_bits` is 0 when
+    /// the short side is an unbounded byte stream.
+    Truncated { need_bits: u64, have_bits: u64 },
+    /// The wire version byte is unknown to this decoder.
+    Version { got: u8, want: u8 },
+    /// Any other structural violation: unknown tag, inconsistent
+    /// bit-width, bad length, out-of-range index.
+    Malformed(String),
+}
 
 impl std::fmt::Display for CodecError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "codec error: {}", self.0)
+        match self {
+            CodecError::Truncated { need_bits, have_bits } => write!(
+                f,
+                "codec error: truncated stream (needs {need_bits} more \
+                 bits, {have_bits} available)"
+            ),
+            CodecError::Version { got, want } => write!(
+                f,
+                "codec error: unsupported wire version {got} \
+                 (expected {want})"
+            ),
+            CodecError::Malformed(msg) => {
+                write!(f, "codec error: {msg}")
+            }
+        }
     }
 }
 
@@ -179,7 +208,10 @@ impl<'a> BitReader<'a> {
         debug_assert!(nbits <= 56);
         while self.nacc < nbits {
             if self.pos >= self.buf.len() {
-                return Err(CodecError("out of bits".into()));
+                return Err(CodecError::Truncated {
+                    need_bits: nbits as u64,
+                    have_bits: self.nacc as u64,
+                });
             }
             self.acc |= (self.buf[self.pos] as u64) << self.nacc;
             self.pos += 1;
@@ -205,7 +237,10 @@ impl<'a> BitReader<'a> {
         let (pos, acc, nacc) = kernels::unpack_bools(
             self.buf, self.pos, self.acc, self.nacc, d, out,
         )
-        .map_err(|_| CodecError("out of bits".into()))?;
+        .map_err(|_| CodecError::Truncated {
+            need_bits: d as u64,
+            have_bits: self.bits_remaining(),
+        })?;
         self.pos = pos;
         self.acc = acc;
         self.nacc = nacc;
@@ -223,7 +258,10 @@ impl<'a> BitReader<'a> {
         let (pos, acc, nacc) = kernels::unpack_values(
             self.buf, self.pos, self.acc, self.nacc, nbits, d, out,
         )
-        .map_err(|_| CodecError("out of bits".into()))?;
+        .map_err(|_| CodecError::Truncated {
+            need_bits: d as u64 * nbits as u64,
+            have_bits: self.bits_remaining(),
+        })?;
         self.pos = pos;
         self.acc = acc;
         self.nacc = nacc;
@@ -340,7 +378,7 @@ pub fn decode_body(
     let d = r.read_u32()? as usize;
     let s = r.read_u16()? as usize;
     if s == 0 {
-        return Err(CodecError("s must be >= 1".into()));
+        return Err(CodecError::Malformed("s must be >= 1".into()));
     }
     let has_table = r.read_u8()? == 1;
     out.norm = r.read_f32()?;
@@ -350,10 +388,10 @@ pub fn decode_body(
     let table_bits = if has_table { 32 * s as u64 } else { 0 };
     let need = table_bits + d as u64 * (1 + ceil_log2(s) as u64);
     if need > r.bits_remaining() {
-        return Err(CodecError(format!(
-            "body claims {need} payload bits, only {} remain",
-            r.bits_remaining()
-        )));
+        return Err(CodecError::Truncated {
+            need_bits: need,
+            have_bits: r.bits_remaining(),
+        });
     }
     out.levels.clear();
     if has_table {
@@ -364,7 +402,7 @@ pub fn decode_body(
     } else {
         fill_implied(s, &mut out.levels);
         if out.levels.len() != s {
-            return Err(CodecError(format!(
+            return Err(CodecError::Malformed(format!(
                 "implied table has {} levels, message says {s}",
                 out.levels.len()
             )));
@@ -378,7 +416,9 @@ pub fn decode_body(
     // range-check after the bulk unpack (one vectorizable scan instead
     // of a branch per element)
     if let Some(&i) = out.indices.iter().find(|&&i| i as usize >= s) {
-        return Err(CodecError(format!("index {i} out of range s={s}")));
+        return Err(CodecError::Malformed(format!(
+            "index {i} out of range s={s}"
+        )));
     }
     out.implied_table = !has_table;
     Ok(())
@@ -581,7 +621,10 @@ mod tests {
         w.write_f32(1.0); // norm
         let bytes = w.into_bytes();
         let err = decode(&bytes, |s| vec![0.0; s]).unwrap_err();
-        assert!(err.to_string().contains("payload bits"), "{err}");
+        assert!(
+            matches!(err, CodecError::Truncated { .. }),
+            "expected Truncated, got {err}"
+        );
     }
 
     #[test]

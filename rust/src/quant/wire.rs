@@ -103,7 +103,7 @@ impl QuantTag {
             6 => QuantTag::TernGrad,
             7 => QuantTag::TopK,
             other => {
-                return Err(CodecError(format!(
+                return Err(CodecError::Malformed(format!(
                     "unknown quantizer tag {other}"
                 )))
             }
@@ -276,9 +276,10 @@ pub fn decode_into(
     let mut r = BitReader::new(bytes);
     let version = r.read_u8()?;
     if version != WIRE_VERSION {
-        return Err(CodecError(format!(
-            "unsupported wire version {version} (expected {WIRE_VERSION})"
-        )));
+        return Err(CodecError::Version {
+            got: version,
+            want: WIRE_VERSION,
+        });
     }
     let tag = QuantTag::from_u8(r.read_u8()?)?;
     let phase = r.read_u8()?;
@@ -296,14 +297,14 @@ pub fn decode_into(
         out,
     );
     if bad_tag {
-        return Err(CodecError(format!(
+        return Err(CodecError::Malformed(format!(
             "quantizer '{}' never implies a level table",
             tag.name()
         )));
     }
     body?;
     if idx_bits as u32 != ceil_log2(out.s()) {
-        return Err(CodecError(format!(
+        return Err(CodecError::Malformed(format!(
             "header idx_bits {idx_bits} != ceil_log2({}) = {}",
             out.s(),
             ceil_log2(out.s())
@@ -311,12 +312,167 @@ pub fn decode_into(
     }
     let want = encoded_len(out.dim(), out.s(), out.implied_table);
     if bytes.len() != want {
-        return Err(CodecError(format!(
+        return Err(CodecError::Malformed(format!(
             "message is {} bytes, format says {want}",
             bytes.len()
         )));
     }
     Ok(WireHeader { version, tag, phase, idx_bits, sender, round })
+}
+
+/// Cross-validate a decoded header against the transport envelope that
+/// carried it. The gossip engines route on the envelope key (sender,
+/// round, phase); a message whose *decoded* header contradicts its
+/// envelope is corrupt or forged and must fail as a total decode error
+/// (never a panic) — same contract as [`decode_into`].
+pub fn validate_frame(
+    h: &WireHeader,
+    sender: usize,
+    round: u32,
+    phase: u8,
+) -> Result<(), CodecError> {
+    if h.sender as usize != sender || h.round != round || h.phase != phase
+    {
+        return Err(CodecError::Malformed(format!(
+            "wire header (sender {}, round {}, phase {}) contradicts \
+             envelope key ({sender}, {round}, {phase})",
+            h.sender, h.round, h.phase
+        )));
+    }
+    Ok(())
+}
+
+// ---- transport envelope (byte-stream framing) --------------------------
+//
+// Stream transports (net::TcpDelivery) cannot rely on datagram
+// boundaries, so each frame travels in a length-prefixed envelope:
+//
+// ```text
+// u32  len     little-endian; bytes after this field (9 + payload)
+// u32  from    sending node id
+// u32  round   protocol round key
+// u8   phase   protocol phase (or a transport-private control tag)
+// [u8] payload encoded WireMessage (empty = drop tombstone / control)
+// ```
+//
+// The envelope is pure framing: payload bytes are the exact encoded
+// WireMessage, so byte meters that count payload lengths still equal
+// the sum of encoded message lengths (the simnet accounting contract).
+
+/// Envelope overhead per frame in bytes (len + from + round + phase).
+pub const ENVELOPE_BYTES: usize = 13;
+
+/// Hostile-length bound: a frame claiming a larger payload is rejected
+/// before any allocation (same defense as the codec's payload bound).
+pub const MAX_FRAME_PAYLOAD_BYTES: usize = 1 << 28;
+
+/// One parsed transport envelope.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Envelope {
+    pub from: u32,
+    pub round: u32,
+    pub phase: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Write one length-prefixed frame to a byte stream.
+pub fn write_frame(
+    w: &mut impl std::io::Write,
+    from: u32,
+    round: u32,
+    phase: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    let mut head = [0u8; ENVELOPE_BYTES];
+    head[0..4].copy_from_slice(&((payload.len() + 9) as u32).to_le_bytes());
+    head[4..8].copy_from_slice(&from.to_le_bytes());
+    head[8..12].copy_from_slice(&round.to_le_bytes());
+    head[12] = phase;
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Fill `buf` from `r`; `Ok(false)` when the stream was already at EOF
+/// (no byte read), `UnexpectedEof` when it ended mid-buffer.
+fn read_full_or_eof(
+    r: &mut impl std::io::Read,
+    buf: &mut [u8],
+) -> std::io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(std::io::Error::from(
+                    std::io::ErrorKind::UnexpectedEof,
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-prefixed frame from a byte stream. `Ok(None)` means
+/// the stream closed cleanly at a frame boundary; a stream that ends
+/// mid-frame is [`CodecError::Truncated`], a hostile or undersized
+/// length field is [`CodecError::Malformed`], and any other I/O failure
+/// surfaces as [`LmdflError::Io`](crate::error::LmdflError::Io).
+pub fn read_frame(
+    r: &mut impl std::io::Read,
+) -> Result<Option<Envelope>, crate::error::LmdflError> {
+    use crate::error::LmdflError;
+    let mut len4 = [0u8; 4];
+    match read_full_or_eof(r, &mut len4) {
+        Ok(false) => return Ok(None),
+        Ok(true) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(LmdflError::Codec(CodecError::Truncated {
+                need_bits: 32,
+                have_bits: 0,
+            }))
+        }
+        Err(e) => return Err(LmdflError::Io(e)),
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len < 9 {
+        return Err(LmdflError::Codec(CodecError::Malformed(format!(
+            "envelope length {len} below the 9-byte frame meta"
+        ))));
+    }
+    if len - 9 > MAX_FRAME_PAYLOAD_BYTES {
+        return Err(LmdflError::Codec(CodecError::Malformed(format!(
+            "envelope claims a {} byte payload (cap {})",
+            len - 9,
+            MAX_FRAME_PAYLOAD_BYTES
+        ))));
+    }
+    let mut rest = vec![0u8; len];
+    if !read_full_or_eof(r, &mut rest)
+        .map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => {
+                LmdflError::Codec(CodecError::Truncated {
+                    need_bits: len as u64 * 8,
+                    have_bits: 0,
+                })
+            }
+            _ => LmdflError::Io(e),
+        })?
+    {
+        // EOF exactly between the length field and the frame meta
+        return Err(LmdflError::Codec(CodecError::Truncated {
+            need_bits: len as u64 * 8,
+            have_bits: 0,
+        }));
+    }
+    let from = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+    let round = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+    let phase = rest[8];
+    let payload = rest.split_off(9);
+    Ok(Some(Envelope { from, round, phase, payload }))
 }
 
 #[cfg(test)]
@@ -404,6 +560,104 @@ mod tests {
         let ibytes = encode(&ih, &iqv);
         let err = decode_into(&ibytes, &mut cache, &mut out).unwrap_err();
         assert!(err.to_string().contains("never implies"), "{err}");
+    }
+
+    #[test]
+    fn decode_errors_are_typed() {
+        let qv = sample_msg();
+        let h = WireHeader::new(QuantTag::LloydMax, 0, 0, 0, qv.s());
+        let bytes = encode(&h, &qv);
+        let mut cache = ImpliedCache::new();
+        let mut out = QuantizedVector::empty();
+        // truncation → Truncated
+        let err = decode_into(&bytes[..5], &mut cache, &mut out)
+            .unwrap_err();
+        assert!(matches!(err, CodecError::Truncated { .. }), "{err}");
+        // version bump → Version carrying both bytes
+        let mut bad = bytes.clone();
+        bad[0] = 99;
+        let err = decode_into(&bad, &mut cache, &mut out).unwrap_err();
+        assert_eq!(
+            err,
+            CodecError::Version { got: 99, want: WIRE_VERSION }
+        );
+        // structural corruption → Malformed
+        let mut bad = bytes.clone();
+        bad[1] = 250;
+        let err = decode_into(&bad, &mut cache, &mut out).unwrap_err();
+        assert!(matches!(err, CodecError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn validate_frame_matches_envelope_key() {
+        let h = WireHeader::new(QuantTag::Qsgd, 2, 7, 41, 16);
+        assert!(validate_frame(&h, 7, 41, 2).is_ok());
+        for (s, r, p) in [(6, 41, 2), (7, 40, 2), (7, 41, 0)] {
+            let err = validate_frame(&h, s, r, p).unwrap_err();
+            assert!(matches!(err, CodecError::Malformed(_)), "{err}");
+            assert!(err.to_string().contains("contradicts"), "{err}");
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip_over_a_stream() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, 3, 9, 2, b"abc").unwrap();
+        write_frame(&mut stream, 1, 10, 0, b"").unwrap();
+        assert_eq!(stream.len(), 2 * ENVELOPE_BYTES + 3);
+        let mut r = std::io::Cursor::new(stream);
+        let a = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(
+            a,
+            Envelope {
+                from: 3,
+                round: 9,
+                phase: 2,
+                payload: b"abc".to_vec()
+            }
+        );
+        let b = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(b.payload, Vec::<u8>::new());
+        // clean EOF at a frame boundary
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn envelope_rejects_truncation_and_hostile_lengths() {
+        use crate::error::LmdflError;
+        let mut stream = Vec::new();
+        write_frame(&mut stream, 3, 9, 2, b"abcdef").unwrap();
+        // mid-frame cut → Truncated (both inside the length field and
+        // inside the body)
+        for cut in [2, ENVELOPE_BYTES - 1, stream.len() - 1] {
+            let mut r = std::io::Cursor::new(&stream[..cut]);
+            let err = read_frame(&mut r).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    LmdflError::Codec(CodecError::Truncated { .. })
+                ),
+                "cut {cut}: {err}"
+            );
+        }
+        // undersized length field → Malformed
+        let mut bad = stream.clone();
+        bad[0..4].copy_from_slice(&3u32.to_le_bytes());
+        let err =
+            read_frame(&mut std::io::Cursor::new(bad)).unwrap_err();
+        assert!(
+            matches!(err, LmdflError::Codec(CodecError::Malformed(_))),
+            "{err}"
+        );
+        // hostile length → Malformed before any allocation
+        let mut bad = stream.clone();
+        bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err =
+            read_frame(&mut std::io::Cursor::new(bad)).unwrap_err();
+        assert!(
+            matches!(err, LmdflError::Codec(CodecError::Malformed(_))),
+            "{err}"
+        );
     }
 
     #[test]

@@ -47,6 +47,7 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

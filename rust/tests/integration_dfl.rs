@@ -34,6 +34,7 @@ fn blob_cfg() -> ExperimentConfig {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     }
 }
 

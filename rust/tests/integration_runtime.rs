@@ -229,6 +229,7 @@ fn dfl_training_on_hlo_backend_converges() {
         mode: Default::default(),
         encoding: Default::default(),
         agossip: None,
+        transport: None,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);

@@ -1,0 +1,469 @@
+//! Transport conformance suite: every [`Delivery`] implementation —
+//! in-process channels, localhost TCP sockets, and the fault-injecting
+//! wrapper — must move the same golden wire bytes, meter them
+//! identically (measured `wire_bytes` == sum of encoded message
+//! lengths), surface faults as typed errors, and drive the gossip
+//! runtime to the *same* loss trajectory for the same seed.
+//!
+//! The multi-process cases spawn the `lmdfl` binary (`node` /
+//! `net-echo` subcommands) and skip gracefully when it is not built,
+//! like `integration_cli.rs`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lmdfl::prelude::*;
+
+// ---- shared helpers ---------------------------------------------------
+
+/// Phase tag `lmdfl net-echo` announces itself with (kept in lockstep
+/// with the constant in `src/main.rs`).
+const HELLO_PHASE: u8 = 0xFD;
+
+fn lmdfl_bin() -> Option<PathBuf> {
+    // cargo puts test binaries next to the main binary
+    let mut path = std::env::current_exe().ok()?;
+    path.pop(); // test binary name
+    if path.ends_with("deps") {
+        path.pop();
+    }
+    let bin = path.join("lmdfl");
+    bin.exists().then_some(bin)
+}
+
+macro_rules! require_bin {
+    () => {
+        match lmdfl_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: lmdfl binary not built");
+                return;
+            }
+        }
+    };
+}
+
+/// Kills leftover child processes if a test panics mid-run.
+struct KillOnDrop(Vec<Child>);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn from_hex(text: &str) -> Vec<u8> {
+    let t = text.trim();
+    (0..t.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&t[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// The golden wire bitstreams pinned by `wire_conformance.rs` — the
+/// exact payloads a real run broadcasts, name-sorted for determinism.
+fn fixture_payloads() -> Vec<Vec<u8>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/wire");
+    let mut names: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "hex"))
+        .collect();
+    names.sort();
+    assert!(!names.is_empty(), "no wire fixtures under {dir:?}");
+    names
+        .iter()
+        .map(|p| from_hex(&std::fs::read_to_string(p).unwrap()))
+        .collect()
+}
+
+fn tcp_opts(base_port: u16) -> TcpOptions {
+    TcpOptions {
+        base_port,
+        connect_timeout_s: 10.0,
+        retry_backoff_s: 0.01,
+        ..TcpOptions::default()
+    }
+}
+
+/// Send every fixture payload 0 → 1 and assert bytes, envelope keys
+/// and the meter contract on the sending endpoint.
+fn check_pair(
+    tx: &mut dyn Delivery,
+    rx: &mut dyn Delivery,
+    payloads: &[Vec<u8>],
+) {
+    let mut total = 0u64;
+    for (i, p) in payloads.iter().enumerate() {
+        let f = Frame::new(
+            0,
+            i as u32,
+            (i % 4) as u8,
+            Arc::from(p.as_slice()),
+        );
+        tx.send(1, f).unwrap();
+        total += p.len() as u64;
+    }
+    // THE contract: measured wire bytes == sum of encoded lengths
+    assert_eq!(tx.wire_bytes(), total);
+    for (i, p) in payloads.iter().enumerate() {
+        let f = rx
+            .recv(Duration::from_secs(10))
+            .unwrap()
+            .expect("frame arrives");
+        assert_eq!(
+            (f.from, f.round, f.phase),
+            (0, i as u32, (i % 4) as u8)
+        );
+        assert_eq!(&f.bytes[..], p.as_slice(), "payload {i} corrupted");
+    }
+}
+
+// ---- golden bytes through each transport ------------------------------
+
+#[test]
+fn golden_payloads_cross_channel_transport() {
+    let payloads = fixture_payloads();
+    let mut mesh = channel_mesh(2);
+    let mut rx = mesh.pop().unwrap();
+    let mut tx = mesh.pop().unwrap();
+    check_pair(&mut tx, &mut rx, &payloads);
+}
+
+#[test]
+fn golden_payloads_cross_tcp_transport() {
+    let payloads = fixture_payloads();
+    let o = tcp_opts(18100);
+    let mut tx = TcpDelivery::bind(0, o.clone()).unwrap();
+    let mut rx = TcpDelivery::bind(1, o).unwrap();
+    check_pair(&mut tx, &mut rx, &payloads);
+}
+
+#[test]
+fn golden_payloads_cross_fault_wrapped_transport() {
+    let payloads = fixture_payloads();
+    let mut mesh = channel_mesh(2);
+    let mut rx = FaultDelivery::new(
+        Box::new(mesh.pop().unwrap()),
+        LinkModel::ideal(),
+        Rng::new(2),
+    );
+    let mut tx = FaultDelivery::new(
+        Box::new(mesh.pop().unwrap()),
+        LinkModel::ideal(),
+        Rng::new(1),
+    );
+    check_pair(&mut tx, &mut rx, &payloads);
+}
+
+// ---- fault cases ------------------------------------------------------
+
+#[test]
+fn full_loss_over_tcp_tombstones_frames_but_meters_payloads() {
+    let payloads = fixture_payloads();
+    let o = tcp_opts(18150);
+    let mut tx = FaultDelivery::new(
+        Box::new(TcpDelivery::bind(0, o.clone()).unwrap()),
+        LinkModel::lossy(1.0),
+        Rng::new(5),
+    );
+    let mut rx = TcpDelivery::bind(1, o).unwrap();
+    let mut total = 0u64;
+    for (i, p) in payloads.iter().enumerate() {
+        tx.send(1, Frame::new(0, i as u32, 2, Arc::from(p.as_slice())))
+            .unwrap();
+        total += p.len() as u64;
+    }
+    // a lost message still occupied the link: the outer meter counts
+    // the full payload even though only tombstones cross the socket
+    assert_eq!(tx.wire_bytes(), total);
+    for i in 0..payloads.len() {
+        let f = rx
+            .recv(Duration::from_secs(10))
+            .unwrap()
+            .expect("tombstone arrives");
+        assert!(f.is_tombstone(), "frame {i} not dropped");
+        assert_eq!((f.from, f.round, f.phase), (0, i as u32, 2));
+    }
+}
+
+#[test]
+fn jitter_reorders_but_mailbox_reassembles_by_key() {
+    let rounds = 10u32;
+    let mut mesh = channel_mesh(2);
+    let inner_rx = mesh.pop().unwrap();
+    let mut tx = mesh.pop().unwrap();
+    for k in 0..rounds {
+        let payload = vec![k as u8; 3];
+        tx.send(1, Frame::new(0, k, 0, Arc::from(payload.as_slice())))
+            .unwrap();
+    }
+    let link = LinkModel {
+        latency_s: 0.005,
+        jitter_s: 0.02,
+        ..LinkModel::ideal()
+    };
+    let delayed = FaultDelivery::new(Box::new(inner_rx), link, Rng::new(9));
+    let mut mb = Mailbox::new(Box::new(delayed));
+    // the wrapper delivers in jittered (= shuffled) real-time order;
+    // the mailbox still hands each round's frame out by key, in order
+    for k in 0..rounds {
+        let bytes = mb.recv(0, k, 0, Duration::from_secs(5)).unwrap();
+        assert_eq!(&bytes[..], &[k as u8; 3], "round {k}");
+    }
+}
+
+#[test]
+fn transport_faults_are_typed_errors() {
+    // channel: unknown peer
+    let mut mesh = channel_mesh(2);
+    let mut tx = mesh.pop().unwrap();
+    assert!(matches!(
+        tx.send(9, Frame::tombstone(1, 0, 0)),
+        Err(LmdflError::Transport { peer: Some(9), .. })
+    ));
+    // tcp: unreachable peer, bounded by the connect budget
+    let mut o = tcp_opts(18170);
+    o.connect_timeout_s = 0.2;
+    let mut t = TcpDelivery::bind(0, o).unwrap();
+    assert!(matches!(
+        t.send(3, Frame::tombstone(0, 0, 0)),
+        Err(LmdflError::Transport { peer: Some(3), .. })
+    ));
+    // mailbox: a frame that never arrives is a deadline error, and the
+    // error chain stays matchable (never a panic, never a bare string)
+    let mut mb = Mailbox::new(Box::new(mesh.pop().unwrap()));
+    let err = mb.recv(1, 7, 0, Duration::from_millis(20)).unwrap_err();
+    assert!(matches!(
+        err,
+        LmdflError::Transport { peer: Some(1), .. }
+    ));
+}
+
+// ---- trajectory parity ------------------------------------------------
+
+fn parity_cfg(name: &str, nodes: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        seed: 11,
+        nodes,
+        tau: 2,
+        rounds: 4,
+        batch_size: 16,
+        lr: LrSchedule::fixed(0.1),
+        topology: TopologyKind::Ring,
+        quantizer: QuantizerKind::LloydMax { s: 16, iters: 8 },
+        dataset: DatasetKind::Blobs {
+            train: 200,
+            test: 60,
+            dim: 8,
+            classes: 3,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![16] },
+        noniid_fraction: 0.5,
+        link_bps: 100e6,
+        eval_every: 1,
+        parallelism: Parallelism::Off,
+        network: None,
+        mode: Default::default(),
+        encoding: Default::default(),
+        agossip: None,
+        transport: None,
+    }
+}
+
+/// Same seed, same config, different transport: the threaded runtime's
+/// trajectory (loss, accuracy, measured bits, levels) must be
+/// byte-identical whether frames cross channels or real TCP sockets.
+#[test]
+fn tcp_threaded_run_matches_channel_run_exactly() {
+    let cfg = parity_cfg("parity", 4);
+    let channel_log =
+        Trainer::run_threaded(&cfg, NetOptions::default()).unwrap();
+    let mut tcp_cfg = cfg.clone();
+    tcp_cfg.transport = Some(TransportConfig {
+        kind: TransportKind::Tcp,
+        tcp: tcp_opts(18200),
+    });
+    let tcp_log =
+        Trainer::run_threaded(&tcp_cfg, NetOptions::default()).unwrap();
+    assert_eq!(channel_log.to_csv(), tcp_log.to_csv());
+}
+
+/// The headline acceptance case: a 16-process torus-16 run over real
+/// localhost TCP reproduces the in-process threaded trajectory for the
+/// same seed, byte-for-byte at the CSV level.
+#[test]
+fn multiprocess_torus16_matches_inprocess_run() {
+    let bin = require_bin!();
+    let mut cfg = parity_cfg("mp-torus16", 16);
+    cfg.topology = TopologyKind::Torus;
+    cfg.rounds = 3;
+    cfg.tau = 1;
+    cfg.dataset = DatasetKind::Blobs {
+        train: 320,
+        test: 80,
+        dim: 8,
+        classes: 4,
+    };
+    let mut mp_cfg = cfg.clone();
+    mp_cfg.transport = Some(TransportConfig {
+        kind: TransportKind::Tcp,
+        tcp: TcpOptions {
+            connect_timeout_s: 30.0,
+            ..tcp_opts(18300)
+        },
+    });
+
+    let dir = std::env::temp_dir().join("lmdfl_transport_conformance");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("mp_torus16.json");
+    std::fs::write(&cfg_path, mp_cfg.to_json().to_pretty()).unwrap();
+    let csv_path = dir.join("mp_torus16.csv");
+    let _ = std::fs::remove_file(&csv_path);
+
+    let mut guard = KillOnDrop(Vec::new());
+    for rank in 1..mp_cfg.nodes {
+        let child = Command::new(&bin)
+            .args([
+                "node",
+                "--rank",
+                &rank.to_string(),
+                "--config",
+                cfg_path.to_str().unwrap(),
+            ])
+            .stdout(Stdio::null())
+            .spawn()
+            .unwrap();
+        guard.0.push(child);
+    }
+    let rank0 = Command::new(&bin)
+        .args([
+            "node",
+            "--rank",
+            "0",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--csv",
+            csv_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        rank0.status.success(),
+        "rank 0 failed:\n{}",
+        String::from_utf8_lossy(&rank0.stderr)
+    );
+    for mut c in std::mem::take(&mut guard.0) {
+        assert!(c.wait().unwrap().success());
+    }
+
+    let mp_csv = std::fs::read_to_string(&csv_path).unwrap();
+    let in_process =
+        Trainer::run_threaded(&cfg, NetOptions::default()).unwrap();
+    assert_eq!(
+        mp_csv,
+        in_process.to_csv(),
+        "multi-process TCP trajectory diverged from in-process run"
+    );
+}
+
+// ---- peer death and resume --------------------------------------------
+
+fn spawn_echo(bin: &Path, base_port: u16, count: usize) -> Child {
+    Command::new(bin)
+        .args([
+            "net-echo",
+            "--rank",
+            "1",
+            "--peer",
+            "0",
+            "--base-port",
+            &base_port.to_string(),
+            "--count",
+            &count.to_string(),
+        ])
+        .stdout(Stdio::null())
+        .spawn()
+        .unwrap()
+}
+
+fn wait_hello(d: &mut TcpDelivery) {
+    for _ in 0..60 {
+        if let Some(f) = d.recv(Duration::from_secs(1)).unwrap() {
+            if f.phase == HELLO_PHASE && f.from == 1 {
+                return;
+            }
+        }
+    }
+    panic!("echo peer never said hello");
+}
+
+/// Collect `n` echoed rounds, ignoring hello frames.
+fn collect_echoes(d: &mut TcpDelivery, n: usize) -> Vec<u32> {
+    let mut rounds = Vec::new();
+    while rounds.len() < n {
+        let f = d
+            .recv(Duration::from_secs(15))
+            .unwrap()
+            .expect("echo arrives");
+        if f.phase != HELLO_PHASE {
+            rounds.push(f.round);
+        }
+    }
+    rounds.sort_unstable();
+    rounds
+}
+
+/// Kill one process mid-run, restart it on the same rank/port, and the
+/// surviving endpoint transparently re-dials: no frame of the second
+/// batch is lost and the meter still counts exactly the payload bytes.
+#[test]
+fn tcp_survives_peer_kill_and_restart() {
+    let bin = require_bin!();
+    let base = 18400u16;
+    let mut o = tcp_opts(base);
+    o.connect_timeout_s = 15.0;
+    let mut d = TcpDelivery::bind(0, o).unwrap();
+
+    let mut guard = KillOnDrop(vec![spawn_echo(&bin, base, 1000)]);
+    wait_hello(&mut d);
+    for k in 0..5u32 {
+        d.send(1, Frame::new(0, k, 1, Arc::from(vec![k as u8; 8])))
+            .unwrap();
+    }
+    assert_eq!(collect_echoes(&mut d, 5), vec![0, 1, 2, 3, 4]);
+
+    // kill the peer mid-life (it wanted 1000 echoes) and restart it on
+    // the SAME rank and port
+    let mut first = guard.0.pop().unwrap();
+    first.kill().unwrap();
+    first.wait().unwrap();
+    guard.0.push(spawn_echo(&bin, base, 5));
+    wait_hello(&mut d);
+
+    // probe sends absorb the stale half-open connection: a write on a
+    // dead socket can succeed locally before the reset arrives, so the
+    // sacrificial (0-byte, ignored-phase) frames take that loss and
+    // force the re-dial before real payloads flow
+    for _ in 0..2 {
+        let _ = d.send(1, Frame::tombstone(0, 99, HELLO_PHASE));
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    for k in 10..15u32 {
+        d.send(1, Frame::new(0, k, 1, Arc::from(vec![k as u8; 8])))
+            .unwrap();
+    }
+    assert_eq!(collect_echoes(&mut d, 5), vec![10, 11, 12, 13, 14]);
+    // 10 real frames × 8 payload bytes; tombstone probes meter zero
+    assert_eq!(d.wire_bytes(), 80);
+    let mut second = guard.0.pop().unwrap();
+    assert!(second.wait().unwrap().success());
+}
