@@ -71,6 +71,7 @@ fn cfg(nodes: usize, mode: EngineMode) -> ExperimentConfig {
             quorum_timeout_s: 0.5,
         }),
         transport: None,
+        observe: None,
     }
 }
 

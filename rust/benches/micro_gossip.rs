@@ -38,6 +38,7 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

@@ -43,6 +43,7 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

@@ -413,6 +413,9 @@ impl AsyncGossipEngine {
         self.stragglers += u64::from(straggled);
         self.queue
             .schedule(now + dur, AEv::ComputeDone { node: i, gen });
+        // the interval is fully known at schedule time, so the virtual
+        // span can be recorded here (observation only, after the draw)
+        crate::obs::vspan("compute", i, now, now + dur);
         Ok(())
     }
 
@@ -485,6 +488,7 @@ impl AsyncGossipEngine {
                     // occupied the link, so it still counts
                     self.messages_lost += 1;
                     self.link_bytes += wire_bytes;
+                    crate::obs::counter("sim_messages_lost", "total", 1);
                 }
                 Some((arrive, false)) => {
                     self.link_bytes += wire_bytes;
@@ -736,9 +740,14 @@ impl AsyncGossipEngine {
             node.timer_armed = false;
             node.fresh.iter_mut().for_each(|f| *f = false);
             self.quorum_wait_ns += t - node.wait_start;
+            crate::obs::vspan("wait", i, node.wait_start, t);
+            crate::obs::hist("quorum_fill_ns", t - node.wait_start);
         }
         self.total_mixes += 1;
         self.forced_mixes += u64::from(forced);
+        if forced {
+            crate::obs::counter("forced_mix", "total", 1);
+        }
         // next round, or done — decided BEFORE churn/eval so nested
         // wakeups never see this node in a stale Waiting phase
         if self.nodes[i].round < self.cfg.rounds {

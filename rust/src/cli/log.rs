@@ -1,0 +1,77 @@
+//! Leveled stdout logger for the CLI and experiment drivers.
+//!
+//! One process-global level, three tiers: `--quiet`/`-q` silences the
+//! drivers' progress output (tables, banners, per-round prints),
+//! the default level keeps today's output exactly, and `-v`/
+//! `--verbose` adds diagnostics (resolved config sections, trace sink
+//! paths). Machine-consumed outputs (CSV files, bench JSON) never go
+//! through here, so quiet runs still produce their artifacts.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const QUIET: u8 = 0;
+pub const INFO: u8 = 1;
+pub const VERBOSE: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level.min(VERBOSE), Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Resolve `--quiet | -q | -v | --verbose` from parsed args (quiet
+/// wins when both are given).
+pub fn set_from_args(args: &super::Args) {
+    if args.has_flag("quiet") || args.has_flag("q") {
+        set_level(QUIET);
+    } else if args.has_flag("verbose") || args.has_flag("v") {
+        set_level(VERBOSE);
+    } else {
+        set_level(INFO);
+    }
+}
+
+/// Driver progress output (default level; suppressed by `--quiet`).
+pub fn info(msg: impl std::fmt::Display) {
+    if level() >= INFO {
+        println!("{msg}");
+    }
+}
+
+/// Diagnostics only shown with `-v` / `--verbose`.
+pub fn verbose(msg: impl std::fmt::Display) {
+    if level() >= VERBOSE {
+        println!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn levels_resolve_from_flags() {
+        // NOTE: the level is process-global; this test sets and
+        // restores it around each assertion to stay order-independent
+        let prev = level();
+        set_from_args(&parse("train --quiet"));
+        assert_eq!(level(), QUIET);
+        set_from_args(&parse("train -v"));
+        assert_eq!(level(), VERBOSE);
+        set_from_args(&parse("train"));
+        assert_eq!(level(), INFO);
+        // quiet beats verbose
+        set_from_args(&parse("train -v -q"));
+        assert_eq!(level(), QUIET);
+        set_level(prev);
+    }
+}

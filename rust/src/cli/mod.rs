@@ -1,7 +1,11 @@
 //! Hand-rolled CLI argument parser (no `clap` offline).
 //!
-//! Supports `command [--key value] [--flag] [positional...]`, typed
-//! accessors with defaults, required options, and auto-generated usage.
+//! Supports `command [--key value] [--flag] [-x] [positional...]`,
+//! typed accessors with defaults, required options, and auto-generated
+//! usage. [`log`] is the leveled stdout logger the experiment drivers
+//! print through (`--quiet` / `-v`).
+
+pub mod log;
 
 use std::collections::BTreeMap;
 
@@ -16,6 +20,14 @@ impl std::fmt::Display for ArgError {
 
 impl std::error::Error for ArgError {}
 
+/// `-v`-style token: one dash then a letter (`-0.5` is a value).
+fn is_short_flag(t: &str) -> bool {
+    !t.starts_with("--")
+        && t.len() >= 2
+        && t.starts_with('-')
+        && t.as_bytes()[1].is_ascii_alphabetic()
+}
+
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -28,19 +40,27 @@ pub struct Args {
 
 impl Args {
     /// Parse tokens. `--key value` and `--key=value` are options; a `--key`
-    /// followed by another `--...` (or end) is a boolean flag. The first
-    /// positional token becomes the subcommand.
+    /// followed by another `--...` (or end) is a boolean flag. A single
+    /// dash followed by a letter (`-v`) is a short boolean flag (stored
+    /// without the dash); `-0.5`-style tokens stay ordinary values. The
+    /// first positional token becomes the subcommand.
     pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
         let mut out = Args::default();
         let toks: Vec<String> = tokens.into_iter().collect();
         let mut i = 0;
         while i < toks.len() {
             let t = &toks[i];
+            if is_short_flag(t) {
+                out.flags.push(t[1..].to_string());
+                i += 1;
+                continue;
+            }
             if let Some(stripped) = t.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if i + 1 < toks.len()
                     && !toks[i + 1].starts_with("--")
+                    && !is_short_flag(&toks[i + 1])
                 {
                     out.options
                         .insert(stripped.to_string(), toks[i + 1].clone());
@@ -156,5 +176,22 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.command, None);
         assert!(a.has_flag("help"));
+    }
+
+    #[test]
+    fn short_flags_parse_and_negative_values_do_not() {
+        let a = parse("train -v --config cfg.json");
+        assert!(a.has_flag("v"));
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("cfg.json"));
+        // a short flag right after an option name does not become its
+        // value; the option degrades to a flag instead
+        let a = parse("train --threaded -v");
+        assert!(a.has_flag("threaded"));
+        assert!(a.has_flag("v"));
+        // negative numbers still work as option values
+        let a = parse("x --bias -0.5 -q");
+        assert_eq!(a.get_f64("bias", 0.0).unwrap(), -0.5);
+        assert!(a.has_flag("q"));
     }
 }

@@ -492,6 +492,11 @@ pub struct ExperimentConfig {
     /// the threaded runtime uses (`channel` default / `tcp`) and the
     /// TCP endpoint parameters. `None` = in-process channels.
     pub transport: Option<crate::net::TransportConfig>,
+    /// `observe:` section — tracing/telemetry sinks (JSONL trace and
+    /// Chrome `trace_event` paths). `None` = tracing disabled; see
+    /// [`crate::obs`]. Never affects simulated results: traced runs
+    /// are byte-identical to untraced ones.
+    pub observe: Option<crate::obs::ObserveConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -517,6 +522,7 @@ impl Default for ExperimentConfig {
             encoding: WireEncoding::Bitstream,
             agossip: None,
             transport: None,
+            observe: None,
         }
     }
 }
@@ -571,6 +577,9 @@ impl ExperimentConfig {
         if let Some(t) = &self.transport {
             t.validate(self.nodes)?;
         }
+        if let Some(o) = &self.observe {
+            o.validate()?;
+        }
         Ok(())
     }
 
@@ -606,6 +615,9 @@ impl ExperimentConfig {
         }
         if let Some(t) = &self.transport {
             pairs.push(("transport", t.to_json()));
+        }
+        if let Some(o) = &self.observe {
+            pairs.push(("observe", o.to_json()));
         }
         Json::obj(pairs)
     }
@@ -674,6 +686,12 @@ impl ExperimentConfig {
                 }
                 None => None,
             },
+            observe: match j.get("observe") {
+                Some(oj) => {
+                    Some(crate::obs::ObserveConfig::from_json(oj)?)
+                }
+                None => None,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -709,9 +727,36 @@ mod tests {
         cfg.backend = BackendKind::Hlo { artifact: "mlp_mnist".into() };
         cfg.parallelism = Parallelism::Fixed(3);
         cfg.transport = Some(crate::net::TransportConfig::tcp_default());
+        cfg.observe = Some(crate::obs::ObserveConfig {
+            trace_path: Some("/tmp/run.jsonl".into()),
+            chrome_path: None,
+        });
         let text = cfg.to_json().to_pretty();
         let back = ExperimentConfig::parse(&text).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn observe_section_forms() {
+        // absent -> None (tracing disabled)
+        let cfg = ExperimentConfig::parse(r#"{"name": "o"}"#).unwrap();
+        assert!(cfg.observe.is_none());
+        // a sink enables it
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "o",
+                "observe": {"trace_path": "/tmp/o.jsonl"}}"#,
+        )
+        .unwrap();
+        let o = cfg.observe.clone().unwrap();
+        assert_eq!(o.trace_path.as_deref(), Some("/tmp/o.jsonl"));
+        assert!(o.chrome_path.is_none());
+        let text = cfg.to_json().to_pretty();
+        assert_eq!(ExperimentConfig::parse(&text).unwrap(), cfg);
+        // an empty observe section is rejected
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "o", "observe": {}}"#
+        )
+        .is_err());
     }
 
     #[test]

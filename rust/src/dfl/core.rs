@@ -273,12 +273,19 @@ impl NodeCore {
         phase: u8,
         sender: u32,
     ) -> anyhow::Result<DeltaStats> {
-        match encoding {
-            WireEncoding::Matrix => Ok(self.quantize_delta()),
+        let _span = crate::obs::span("quantize");
+        let stats = match encoding {
+            WireEncoding::Matrix => self.quantize_delta(),
             WireEncoding::Bitstream => {
-                self.quantize_delta_wire(round, phase, sender)
+                self.quantize_delta_wire(round, phase, sender)?
             }
-        }
+        };
+        crate::obs::counter(
+            "encoded_bytes",
+            self.quantizer.name(),
+            stats.wire_bytes,
+        );
+        Ok(stats)
     }
 }
 

@@ -254,6 +254,7 @@ impl DflEngine {
     /// "parallel eval path"); the node-order reduction keeps the result
     /// bit-identical across `parallelism` settings.
     pub fn evaluate_global(&mut self) -> anyhow::Result<(f64, f64)> {
+        let _span = crate::obs::span("eval");
         let u = self.average_model();
         let feat = self.dataset.feat_dim;
         let train_n = self.dataset.train_n().min(self.opts.eval_train_cap);
@@ -292,6 +293,7 @@ impl DflEngine {
 
     /// Run one full communication round `k` (0-based); returns the record.
     pub fn round(&mut self, k: usize) -> anyhow::Result<RoundRecord> {
+        let _round_span = crate::obs::span("round");
         let timer = Timer::start();
         let n = self.nodes.len();
         let lr = self.cfg.lr.at(k) as f32;
@@ -325,6 +327,7 @@ impl DflEngine {
                 // (dropped: receivers keep the stale estimate)
 
                 // step B: τ local SGD steps (Eq. 18)
+                let train_span = crate::obs::span("train");
                 let local_loss = node.core.local_steps(
                     backend.as_mut(),
                     dataset,
@@ -332,6 +335,7 @@ impl DflEngine {
                     batch,
                     lr,
                 )?;
+                drop(train_span);
 
                 // step C: doubly-adaptive level update (Alg. 3 step 8)
                 node.core.observe_local_loss(local_loss);
@@ -378,6 +382,7 @@ impl DflEngine {
         // true local params so residual estimate error (coarse/damped
         // quantizers) never erases local SGD progress (CHOCO-SGD [21]).
         // Phase 1: accumulate mix_i = Σ_j c_ji x̂_j (reads frozen hats).
+        let mix_span = crate::obs::span("mix");
         let c = &self.topology.c;
         let nodes = &self.nodes;
         self.pool.run(&mut self.mix_buf, |i, out| {
@@ -401,6 +406,7 @@ impl DflEngine {
             );
             Ok(())
         })?;
+        drop(mix_span);
 
         // ---- metrics -----------------------------------------------------
         // Per-link bits: each directed link carried q1 + q2 this round.
@@ -564,6 +570,7 @@ mod tests {
             encoding: Default::default(),
             agossip: None,
             transport: None,
+            observe: None,
         }
     }
 

@@ -359,6 +359,7 @@ fn run_node(
     let mut batch_y: Vec<u32> = Vec::new();
 
     for k in 0..rounds {
+        let _round_span = crate::obs::span("round");
         let bytes_before = mailbox.wire_bytes();
         let mut paper_bits = 0u64;
 
@@ -373,6 +374,7 @@ fn run_node(
                              mailbox: &mut Mailbox,
                              paper_bits: &mut u64|
          -> anyhow::Result<()> {
+            let enc_span = crate::obs::span("encode");
             crate::quant::kernels::sub_into(&mut diff, params, hat_self);
             crate::quant::quantize_damped_into(
                 quantizer.as_mut(), &diff, rng, &mut dq, &mut msg_out);
@@ -386,9 +388,16 @@ fn run_node(
                 q,
                 std::mem::take(&mut enc_buf),
             );
+            drop(enc_span);
             // one shared allocation per broadcast; the transport moves
             // Arc handles, not the bytes
             let bytes: Arc<[u8]> = Arc::from(enc_buf.as_slice());
+            crate::obs::counter(
+                "encoded_bytes",
+                quantizer.name(),
+                bytes.len() as u64,
+            );
+            let send_span = crate::obs::span("send");
             for &j in &neighbors {
                 *paper_bits += q.paper_bits();
                 mailbox.send(
@@ -396,10 +405,12 @@ fn run_node(
                     Frame::new(i, k as u32, phase, Arc::clone(&bytes)),
                 )?;
             }
+            drop(send_span);
             // re-dequantize from the (damped) wire message fused with
             // the estimate update, so sender and receivers apply
             // byte-identical deltas
             q.dequantize_accumulate_into(hat_self);
+            let recv_span = crate::obs::span("recv");
             for (ni, &from) in neighbors.iter().enumerate() {
                 let bytes = mailbox.recv(
                     from, k as u32, phase, MAILBOX_DEADLINE,
@@ -407,6 +418,7 @@ fn run_node(
                 if bytes.is_empty() {
                     continue; // dropped: stale estimate
                 }
+                let decode_span = crate::obs::span("decode");
                 let h = wire::decode_into(
                     &bytes,
                     &mut implied_cache,
@@ -416,7 +428,9 @@ fn run_node(
                 // decode error, not a panic
                 wire::validate_frame(&h, from, k as u32, phase)?;
                 msg_in.dequantize_accumulate_into(&mut hat[ni]);
+                drop(decode_span);
             }
+            drop(recv_span);
             Ok(())
         };
 
@@ -427,6 +441,7 @@ fn run_node(
         )?;
 
         // ---- phase 1: τ local updates -----------------
+        let train_span = crate::obs::span("train");
         let lr_k = lr.at(k) as f32;
         let mut local_loss = 0.0f64;
         for _ in 0..tau {
@@ -438,6 +453,7 @@ fn run_node(
                 backend.step(&mut params, &batch_x, &batch_y, lr_k)?;
         }
         local_loss /= tau as f64;
+        drop(train_span);
         if let Some(ad) = adaptive.as_mut() {
             let s = ad.update(local_loss);
             quantizer.set_levels(s);
@@ -452,6 +468,7 @@ fn run_node(
         // ---- phase 3: mixing ---------------------------
         // x += Σ c_ji x̂_j − x̂_self (consensus correction on true
         // params; = X̂C when estimates are exact)
+        let mix_span = crate::obs::span("mix");
         crate::quant::kernels::scaled_into(
             &mut mix, self_weight, &hat_self,
         );
@@ -459,6 +476,7 @@ fn run_node(
             crate::quant::kernels::axpy(&mut mix, weights[ni], &hat[ni]);
         }
         crate::quant::kernels::add_delta(&mut params, &mix, &hat_self);
+        drop(mix_span);
 
         // ---- report -----------------------------------
         // measured wire bits = the transport meter's delta this round
@@ -884,6 +902,7 @@ mod tests {
             encoding: Default::default(),
             agossip: None,
             transport: None,
+            observe: None,
         }
     }
 

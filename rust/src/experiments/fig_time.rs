@@ -92,6 +92,7 @@ pub fn torus16_config(scale: Scale) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

@@ -80,6 +80,7 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

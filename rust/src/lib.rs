@@ -96,6 +96,19 @@
 //! pinned by golden fixtures (`rust/tests/wire_conformance.rs`);
 //! format changes must bump `WIRE_VERSION` and re-bless them.
 //!
+//! ## Observability ([`obs`])
+//!
+//! An in-tree, zero-dependency tracing and telemetry layer: scoped
+//! wall spans, virtual-clock spans, monotonic counters, and log2
+//! histograms across every layer (engine round phases, agossip state
+//! transitions, simnet event dispatch, every transport at frame
+//! granularity). Off by default — one relaxed atomic load per probe —
+//! and enabled with the `observe:` config section or `--trace-out` /
+//! `--chrome-out`; sinks are a JSONL trace (schema `lmdfl-trace-v1`,
+//! summarized by `lmdfl trace`) and a Chrome `trace_event` file for
+//! `about:tracing` / Perfetto. Tracing never perturbs the determinism
+//! contract: traced simnet runs produce byte-identical event digests.
+//!
 //! ## Bench reports
 //!
 //! Bench targets print a criterion-like text table and, when
@@ -124,6 +137,7 @@ pub mod linalg;
 pub mod metrics;
 pub(crate) mod models;
 pub mod net;
+pub mod obs;
 pub mod prelude;
 pub mod quant;
 pub mod runtime;

@@ -12,11 +12,17 @@
 //!   topo       inspect a topology (confusion matrix, ζ, α)
 //!   quant      inspect quantizer bit costs and distortion bounds
 //!   artifacts  list AOT artifacts from the manifest
+//!   trace      validate / summarize a JSONL trace (obs subsystem)
+//!
+//! Global flags: `--quiet`/`-q` and `-v`/`--verbose` set the stdout
+//! log level; `--trace-out` / `--chrome-out` enable the tracing layer
+//! for any command (see [`lmdfl::obs`]).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
+use lmdfl::cli::log;
 use lmdfl::prelude::*;
 
 const USAGE: &str = "\
@@ -59,6 +65,16 @@ commands:
   topo       --kind full|ring|disconnected|star|torus|random --nodes N
   quant      --d N --s N
   artifacts  [--dir artifacts]
+  trace      <trace.jsonl> [--check] [--chrome-out out.trace.json]
+             validate (--check) or summarize a recorded trace; rank 0
+             of a `node` run merges per-rank traces into the base path
+
+global flags (any command):
+  --quiet | -q     suppress progress output (artifacts still written)
+  -v | --verbose   extra diagnostics (resolved sinks, merge reports)
+  --trace-out t.jsonl --chrome-out t.trace.json
+                   record a trace of the run (schema lmdfl-trace-v1;
+                   chrome file opens in about:tracing / Perfetto)
 ";
 
 fn main() {
@@ -82,7 +98,21 @@ fn scale_of(args: &Args) -> Scale {
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
-    match args.command.as_deref() {
+    log::set_from_args(args);
+    // trace sinks: `train` reads them from the merged config section
+    // (so a --config file can enable tracing too), `node` starts one
+    // recorder per rank, and `trace` only *reads* traces; every other
+    // command records the whole invocation as rank 0
+    let generic_trace = !matches!(
+        args.command.as_deref(),
+        Some("train") | Some("node") | Some("trace")
+    );
+    if generic_trace {
+        if let Some(o) = observe_from_flags(args) {
+            obs::start(&o, 0);
+        }
+    }
+    let res = match args.command.as_deref() {
         Some("train") => cmd_train(args),
         Some("node") => cmd_node(args),
         // hidden: TCP echo peer used by the transport conformance
@@ -97,11 +127,66 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("topo") => cmd_topo(args),
         Some("quant") => cmd_quant(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("trace") => cmd_trace(args),
         _ => {
             print!("{USAGE}");
             Ok(())
         }
+    };
+    // flush sinks even when the command failed — a partial trace is
+    // exactly what you want for debugging the failure
+    if obs::active() {
+        match obs::stop() {
+            Ok(paths) => {
+                for p in paths {
+                    log::verbose(format!("wrote trace sink {p}"));
+                }
+            }
+            Err(e) => eprintln!("warning: trace flush failed: {e:#}"),
+        }
     }
+    res
+}
+
+/// The `--trace-out` / `--chrome-out` sinks, when either is present.
+fn observe_from_flags(args: &Args) -> Option<ObserveConfig> {
+    let o = ObserveConfig {
+        trace_path: args.get("trace-out").map(str::to_string),
+        chrome_path: args.get("chrome-out").map(str::to_string),
+    };
+    o.enabled().then_some(o)
+}
+
+/// `lmdfl trace`: validate (`--check`) or summarize a JSONL trace,
+/// optionally re-rendering it as a Chrome trace (`--chrome-out`).
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("in"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: lmdfl trace <file.jsonl> [--check]")
+        })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let tf = obs::export::parse_trace(&text)?;
+    if args.has_flag("check") {
+        // machine-consumed (CI greps it): bypass the log level
+        println!("{}", obs::summary::check(&tf)?);
+        return Ok(());
+    }
+    if let Some(out) = args.get("chrome-out") {
+        std::fs::write(
+            out,
+            obs::export::chrome_trace(&obs::export::chrome_spans(
+                &tf.spans,
+            )),
+        )?;
+        log::info(format!("wrote {out}"));
+    }
+    print!("{}", obs::summary::summarize(&tf));
+    Ok(())
 }
 
 fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
@@ -356,13 +441,28 @@ fn apply_section_flags(
             args.get_f64("async-timeout-s", a.quorum_timeout_s)?;
         cfg.agossip = Some(a);
     }
+    // trace sinks: either flag materializes an `observe:` section,
+    // each overriding only its own path in the config file's section
+    if let Some(o) = observe_from_flags(args) {
+        let mut cur = cfg.observe.clone().unwrap_or_default();
+        if o.trace_path.is_some() {
+            cur.trace_path = o.trace_path;
+        }
+        if o.chrome_path.is_some() {
+            cur.chrome_path = o.chrome_path;
+        }
+        cfg.observe = Some(cur);
+    }
     cfg.validate()?;
     Ok(())
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
-    println!("config:\n{}", cfg.to_json().to_pretty());
+    if let Some(o) = &cfg.observe {
+        obs::start(o, 0);
+    }
+    log::info(format!("config:\n{}", cfg.to_json().to_pretty()));
     let simulate = args.has_flag("simulate")
         || cfg.network.is_some()
         || cfg.mode == EngineMode::Async;
@@ -437,8 +537,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             format!("{:.3}", r.virtual_secs),
         ]);
     }
-    println!("{}", t.render());
-    println!(
+    log::info(t.render());
+    log::info(format!(
         "final: loss={} acc={} bits/link={} wire-bytes={} \
          time@{}Mbps={:.1}ms",
         fnum(log.last_loss().unwrap_or(f64::NAN)),
@@ -447,10 +547,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         log.records.last().map_or(0, |r| r.wire_bytes),
         cfg.link_bps / 1e6,
         log.total_bits() as f64 / cfg.link_bps * 1e3,
-    );
+    ));
     if let Some(last) = log.records.last() {
         if last.virtual_secs > 0.0 {
-            println!(
+            log::info(format!(
                 "simnet: virtual time {:.3}s, mean straggler wait {:.4}s",
                 last.virtual_secs,
                 log.records
@@ -458,12 +558,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                     .map(|r| r.straggler_wait_secs)
                     .sum::<f64>()
                     / log.records.len() as f64,
-            );
+            ));
         }
     }
     if let Some(csv) = args.get("csv") {
         log.write_csv(Path::new(csv))?;
-        println!("wrote {csv}");
+        log::info(format!("wrote {csv}"));
     }
     Ok(())
 }
@@ -487,17 +587,74 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         t.tcp.host,
         t.tcp.base_port as usize + rank,
     );
-    if let Some(log) = run_node_process(&cfg, rank)? {
-        println!(
+    // every rank records into its own sink files (rank_path suffixes);
+    // rank 0's report plane merges the JSONL traces once all ranks'
+    // end footers land
+    let observe = cfg.observe.clone();
+    if let Some(o) = &observe {
+        let per_rank = ObserveConfig {
+            trace_path: o
+                .trace_path
+                .as_deref()
+                .map(|p| obs::export::rank_path(p, rank)),
+            chrome_path: o
+                .chrome_path
+                .as_deref()
+                .map(|p| obs::export::rank_path(p, rank)),
+        };
+        obs::start(&per_rank, rank);
+    }
+    let run_res = run_node_process(&cfg, rank);
+    // flush this rank's trace before inspecting the result: a partial
+    // trace of a failed run is still wanted, and the merge below needs
+    // rank 0's own file complete
+    if obs::active() {
+        match obs::stop() {
+            Ok(paths) => {
+                for p in paths {
+                    log::verbose(format!("wrote trace sink {p}"));
+                }
+            }
+            Err(e) => eprintln!("warning: trace flush failed: {e:#}"),
+        }
+    }
+    if let Some(log) = run_res? {
+        log::info(format!(
             "final: loss={} acc={} bits/link={} wire-bytes={}",
             fnum(log.last_loss().unwrap_or(f64::NAN)),
             fnum(log.final_accuracy().unwrap_or(f64::NAN)),
             log.total_bits(),
             log.records.last().map_or(0, |r| r.wire_bytes),
-        );
+        ));
         if let Some(csv) = args.get("csv") {
             log.write_csv(Path::new(csv))?;
-            println!("wrote {csv}");
+            log::info(format!("wrote {csv}"));
+        }
+    }
+    if rank == 0 {
+        if let Some(base) =
+            observe.as_ref().and_then(|o| o.trace_path.as_deref())
+        {
+            let msg = obs::export::merge_ranks(
+                base,
+                cfg.nodes,
+                Duration::from_secs(10),
+            )?;
+            log::info(msg);
+            if let Some(cp) = observe
+                .as_ref()
+                .and_then(|o| o.chrome_path.as_deref())
+            {
+                let text = std::fs::read_to_string(base)?;
+                let tf = obs::export::parse_trace(&text)?;
+                std::fs::write(
+                    cp,
+                    obs::export::chrome_trace(
+                        &obs::export::chrome_spans(&tf.spans),
+                    ),
+                )?;
+                log::info(format!("wrote merged chrome trace {cp}"));
+            }
         }
     }
     Ok(())
@@ -553,30 +710,24 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
     let preset_name = args.get_or("preset", "torus-16");
     let (cfg, net) =
         fig_time::preset(preset_name, scale)?;
-    println!(
+    log::info(format!(
         "fig-time preset {preset_name}: {} nodes, {} topology, \
          {:.1} Mbps links, straggler p={}",
         cfg.nodes,
         cfg.topology.name(),
         net.link.bandwidth_bps / 1e6,
         net.compute.straggler_prob,
-    );
+    ));
     let curves =
         fig_time::run_preset(preset_name, cfg, net)?;
-    println!(
-        "{}",
-        fig_time::render_loss_vs_time(&curves)
-    );
+    log::info(fig_time::render_loss_vs_time(&curves));
     let default_target = curves
         .iter()
         .map(|c| c.log.last_loss().unwrap_or(f64::NAN))
         .fold(f64::MIN, f64::max)
         * 1.1;
     let target = args.get_f64("target-loss", default_target)?;
-    println!(
-        "{}",
-        fig_time::time_to_target(&curves, target)
-    );
+    log::info(fig_time::time_to_target(&curves, target));
     Ok(())
 }
 
@@ -591,15 +742,15 @@ fn cmd_table1(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
-    println!("{}", table1::render(&rows));
+    log::info(table1::render(&rows));
     Ok(())
 }
 
 fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
     let curves = fig4::run_mnist(scale_of(args))?;
-    println!("{}", fig8::render_loss_vs_bits(&curves));
-    println!("{}", fig8::render_bits_per_element(&curves));
-    println!("{}", fig8::render_wire_totals(&curves));
+    log::info(fig8::render_loss_vs_bits(&curves));
+    log::info(fig8::render_bits_per_element(&curves));
+    log::info(fig8::render_wire_totals(&curves));
     Ok(())
 }
 
@@ -609,16 +760,16 @@ fn cmd_fig6(args: &Args) -> anyhow::Result<()> {
         "cifar" => fig6::run_cifar(scale)?,
         _ => fig6::run_mnist(scale)?,
     };
-    println!("{}", fig6::render_panels(&curves, 100e6));
+    log::info(fig6::render_panels(&curves, 100e6));
     Ok(())
 }
 
 fn cmd_fig7(args: &Args) -> anyhow::Result<()> {
     for (label, zeta) in fig7::zetas(10) {
-        println!("{label}: zeta = {zeta:.4}");
+        log::info(format!("{label}: zeta = {zeta:.4}"));
     }
     let curves = fig7::run(scale_of(args))?;
-    println!("{}", fig7::render(&curves));
+    log::info(fig7::render(&curves));
     Ok(())
 }
 
@@ -629,9 +780,9 @@ fn cmd_fig8(args: &Args) -> anyhow::Result<()> {
         "cifar" => fig8::run_cifar(scale, var)?,
         _ => fig8::run_mnist(scale, var)?,
     };
-    println!("{}", fig8::render_loss_vs_bits(&curves));
-    println!("{}", fig8::render_bits_per_element(&curves));
-    println!("{}", fig8::render_wire_totals(&curves));
+    log::info(fig8::render_loss_vs_bits(&curves));
+    log::info(fig8::render_bits_per_element(&curves));
+    log::info(fig8::render_wire_totals(&curves));
     Ok(())
 }
 
@@ -648,21 +799,21 @@ fn cmd_topo(args: &Args) -> anyhow::Result<()> {
     };
     let t = Topology::build(
         &kind, n, args.get_u64("seed", 0)?);
-    println!(
+    log::info(format!(
         "topology: {} n={} zeta={:.6} alpha={:.4} connected={}",
         kind.name(),
         n,
         t.zeta,
         t.alpha(),
         t.is_connected()
-    );
-    println!("directed links: {}", t.directed_links());
+    ));
+    log::info(format!("directed links: {}", t.directed_links()));
     if n <= 12 {
-        println!("confusion matrix C:");
+        log::info("confusion matrix C:");
         for i in 0..n {
             let row: Vec<String> =
                 (0..n).map(|j| format!("{:.3}", t.c[(i, j)])).collect();
-            println!("  [{}]", row.join(" "));
+            log::info(format!("  [{}]", row.join(" ")));
         }
     }
     Ok(())
@@ -687,8 +838,8 @@ fn cmd_quant(args: &Args) -> anyhow::Result<()> {
             fnum(distortion::lm_bound(d, s)),
         ]);
     }
-    println!("d = {d}");
-    println!("{}", t.render());
+    log::info(format!("d = {d}"));
+    log::info(t.render());
     Ok(())
 }
 
@@ -708,6 +859,6 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
             a.file.file_name().unwrap().to_string_lossy().to_string(),
         ]);
     }
-    println!("{}", t.render());
+    log::info(t.render());
     Ok(())
 }

@@ -182,6 +182,105 @@ impl RunLog {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_csv().as_bytes())
     }
+
+    /// Parse a CSV produced by [`RunLog::to_csv`] back into records.
+    /// Strict: the header must match the writer's exactly and every
+    /// row needs all 11 columns. `NaN` cells (unevaluated accuracy)
+    /// parse back to NaN, so write→parse round-trips bit-exactly
+    /// (f64's `Display` prints the shortest exact representation).
+    pub fn from_csv(name: &str, text: &str) -> anyhow::Result<RunLog> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("").trim();
+        let expected = "round,loss,accuracy,bits_per_link,distortion,\
+                        levels,lr,wall_secs,virtual_secs,\
+                        straggler_wait_secs,wire_bytes";
+        anyhow::ensure!(
+            header == expected,
+            "RunLog CSV: unexpected header '{header}'"
+        );
+        let mut log = RunLog::new(name);
+        for (i, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let row = i + 2; // 1-based, after the header
+            let cells: Vec<&str> = line.split(',').collect();
+            anyhow::ensure!(
+                cells.len() == 11,
+                "RunLog CSV row {row}: {} fields, expected 11",
+                cells.len()
+            );
+            let f = |k: usize| -> anyhow::Result<f64> {
+                cells[k].parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "RunLog CSV row {row}: bad number '{}'",
+                        cells[k]
+                    )
+                })
+            };
+            let u = |k: usize| -> anyhow::Result<u64> {
+                cells[k].parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "RunLog CSV row {row}: bad integer '{}'",
+                        cells[k]
+                    )
+                })
+            };
+            log.push(RoundRecord {
+                round: u(0)? as usize,
+                loss: f(1)?,
+                accuracy: f(2)?,
+                bits_per_link: u(3)?,
+                distortion: f(4)?,
+                levels: u(5)? as usize,
+                lr: f(6)?,
+                wall_secs: f(7)?,
+                virtual_secs: f(8)?,
+                straggler_wait_secs: f(9)?,
+                wire_bytes: u(10)?,
+            });
+        }
+        Ok(log)
+    }
+
+    /// Parse the [`RunLog::to_json`] document back. JSON has no NaN:
+    /// the writer emits non-finite numbers as `null`, which reads
+    /// back as NaN here (absent float fields do the same).
+    pub fn from_json(j: &Json) -> anyhow::Result<RunLog> {
+        let name = j
+            .get_str("name")
+            .ok_or_else(|| anyhow::anyhow!("RunLog JSON: no name"))?;
+        let recs = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| {
+                anyhow::anyhow!("RunLog JSON: no records array")
+            })?;
+        let mut log = RunLog::new(name);
+        for (i, r) in recs.iter().enumerate() {
+            let f = |k: &str| r.get_f64(k).unwrap_or(f64::NAN);
+            let u = |k: &str| -> anyhow::Result<u64> {
+                r.get_f64(k).map(|v| v as u64).ok_or_else(|| {
+                    anyhow::anyhow!("RunLog JSON record {i}: no {k}")
+                })
+            };
+            log.push(RoundRecord {
+                round: u("round")? as usize,
+                loss: f("loss"),
+                accuracy: f("accuracy"),
+                bits_per_link: u("bits_per_link")?,
+                distortion: f("distortion"),
+                levels: u("levels")? as usize,
+                lr: f("lr"),
+                wall_secs: f("wall_secs"),
+                virtual_secs: f("virtual_secs"),
+                straggler_wait_secs: f("straggler_wait_secs"),
+                wire_bytes: u("wire_bytes")?,
+            });
+        }
+        Ok(log)
+    }
 }
 
 /// Console table printer for the figure benches — fixed-width columns so
@@ -332,6 +431,87 @@ mod tests {
             parsed.get("records").unwrap().as_arr().unwrap().len(),
             1
         );
+    }
+
+    /// Bitwise record equality: `PartialEq` can't compare the NaN
+    /// accuracy of unevaluated rounds, `to_bits` can.
+    fn same(a: &RoundRecord, b: &RoundRecord) -> bool {
+        let fe = |x: f64, y: f64| x.to_bits() == y.to_bits();
+        a.round == b.round
+            && fe(a.loss, b.loss)
+            && fe(a.accuracy, b.accuracy)
+            && a.bits_per_link == b.bits_per_link
+            && fe(a.distortion, b.distortion)
+            && a.levels == b.levels
+            && fe(a.lr, b.lr)
+            && fe(a.wall_secs, b.wall_secs)
+            && fe(a.virtual_secs, b.virtual_secs)
+            && fe(a.straggler_wait_secs, b.straggler_wait_secs)
+            && a.wire_bytes == b.wire_bytes
+    }
+
+    /// Sample with awkward values: a NaN-accuracy row (not evaluated),
+    /// a subnormal-ish loss, and a large wire_bytes count.
+    fn awkward_log() -> RunLog {
+        let mut log = RunLog::new("rt");
+        log.push(rec(1, 2.0, 800));
+        let mut r = rec(2, 1.25e-7, 1600);
+        r.accuracy = 0.875;
+        r.straggler_wait_secs = 0.001953125;
+        r.wire_bytes = 123_456_789_012;
+        log.push(r);
+        log
+    }
+
+    #[test]
+    fn csv_roundtrips_records_including_nan_and_wire_bytes() {
+        let log = awkward_log();
+        let back = RunLog::from_csv("rt", &log.to_csv()).unwrap();
+        assert_eq!(back.name, "rt");
+        assert_eq!(back.records.len(), log.records.len());
+        for (a, b) in log.records.iter().zip(&back.records) {
+            assert!(same(a, b), "CSV round-trip changed {a:?} -> {b:?}");
+        }
+        assert!(back.records[0].accuracy.is_nan());
+        assert_eq!(back.records[1].wire_bytes, 123_456_789_012);
+    }
+
+    #[test]
+    fn csv_parser_rejects_malformed_input() {
+        assert!(RunLog::from_csv("x", "").is_err());
+        assert!(RunLog::from_csv("x", "round,loss\n1,2\n").is_err());
+        let good = awkward_log().to_csv();
+        let header = good.lines().next().unwrap();
+        // a row with a missing column
+        let bad = format!("{header}\n1,2.0,NaN,800\n");
+        assert!(RunLog::from_csv("x", &bad).is_err());
+        // a row with a non-numeric cell
+        let bad = format!(
+            "{header}\n1,2.0,NaN,800,0.01,16,0.05,0.1,2,0,oops\n"
+        );
+        assert!(RunLog::from_csv("x", &bad).is_err());
+    }
+
+    #[test]
+    fn json_roundtrips_records_including_nan_and_wire_bytes() {
+        let log = awkward_log();
+        // through the actual serialized text, not just the Json tree:
+        // NaN is emitted as null and must come back as NaN
+        let text = log.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = RunLog::from_json(&parsed).unwrap();
+        assert_eq!(back.name, log.name);
+        assert_eq!(back.records.len(), log.records.len());
+        for (a, b) in log.records.iter().zip(&back.records) {
+            assert!(
+                same(a, b),
+                "JSON round-trip changed {a:?} -> {b:?}"
+            );
+        }
+        assert!(back.records[0].accuracy.is_nan());
+        assert_eq!(back.records[1].wire_bytes, 123_456_789_012);
+        // structural errors are reported, not defaulted
+        assert!(RunLog::from_json(&Json::obj(vec![])).is_err());
     }
 
     #[test]

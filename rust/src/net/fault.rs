@@ -107,6 +107,7 @@ impl Delivery for FaultDelivery {
         // the inner transport's own meter sees only what survives
         self.sent += frame.bytes.len() as u64;
         if self.link.dropped(&mut self.rng) {
+            crate::obs::counter("fault_drop", "total", 1);
             let t = Frame::tombstone(frame.from, frame.round, frame.phase);
             self.inner.send(to, t)
         } else {

@@ -129,6 +129,10 @@ pub fn channel_mesh(n: usize) -> Vec<ChannelDelivery> {
 impl Delivery for ChannelDelivery {
     fn send(&mut self, to: usize, frame: Frame) -> Result<(), LmdflError> {
         self.sent += frame.bytes.len() as u64;
+        crate::obs::counter("frame_send", "channel", 1);
+        if frame.is_tombstone() {
+            crate::obs::counter("frame_tombstone", "channel", 1);
+        }
         let tx = self.peers.get(to).ok_or_else(|| {
             LmdflError::transport(
                 to,
@@ -148,7 +152,10 @@ impl Delivery for ChannelDelivery {
         timeout: Duration,
     ) -> Result<Option<Frame>, LmdflError> {
         match self.rx.recv_timeout(timeout) {
-            Ok(f) => Ok(Some(f)),
+            Ok(f) => {
+                crate::obs::counter("frame_recv", "channel", 1);
+                Ok(Some(f))
+            }
             Err(RecvTimeoutError::Timeout) => Ok(None),
             // unreachable while this endpoint lives (it holds its own
             // sender), but total anyway

@@ -249,6 +249,10 @@ impl Delivery for TcpDelivery {
         // meter at entry — the byte-accounting contract counts every
         // payload offered to the link
         self.sent += frame.bytes.len() as u64;
+        crate::obs::counter("frame_send", "tcp", 1);
+        if frame.is_tombstone() {
+            crate::obs::counter("frame_tombstone", "tcp", 1);
+        }
         let deadline = Instant::now() + self.opts.connect_budget();
         let mut backoff = self.opts.backoff_base();
         loop {
@@ -270,6 +274,17 @@ impl Delivery for TcpDelivery {
                     // broken pipe / reset: drop the connection and
                     // retry the whole frame on a fresh dial
                     self.outs.remove(&to);
+                    if crate::obs::active() {
+                        crate::obs::counter(
+                            "tcp_reconnect",
+                            &to.to_string(),
+                            1,
+                        );
+                        crate::obs::hist(
+                            "tcp_backoff_ns",
+                            backoff.as_nanos() as u64,
+                        );
+                    }
                     if Instant::now() + backoff >= deadline {
                         return Err(LmdflError::transport(
                             to,
@@ -288,7 +303,10 @@ impl Delivery for TcpDelivery {
         timeout: Duration,
     ) -> Result<Option<Frame>, LmdflError> {
         match self.rx.recv_timeout(timeout) {
-            Ok(f) => Ok(Some(f)),
+            Ok(f) => {
+                crate::obs::counter("frame_recv", "tcp", 1);
+                Ok(Some(f))
+            }
             Err(RecvTimeoutError::Timeout) => Ok(None),
             // unreachable while _tx_keepalive lives, but total anyway
             Err(RecvTimeoutError::Disconnected) => Err(

@@ -1,0 +1,579 @@
+//! Trace sinks: the JSONL format (schema `lmdfl-trace-v1`), its
+//! parser, per-rank merge, and the Chrome `trace_event` exporter.
+//!
+//! ## JSONL schema (`lmdfl-trace-v1`)
+//!
+//! One JSON object per line; the first line is the `meta` record and
+//! the last is the `end` footer (its presence marks a complete write —
+//! the multi-process merge polls for it). Every record carries the
+//! writing process's `rank`:
+//!
+//! ```text
+//! {"type":"meta","schema":"lmdfl-trace-v1","rank":0}
+//! {"type":"span","rank":0,"name":"round","clock":"wall",
+//!  "tid":0,"ts_ns":1200,"dur_ns":88000}
+//! {"type":"ctr","rank":0,"name":"frame_send","key":"0->1","value":12}
+//! {"type":"hist","rank":0,"name":"tcp_backoff_ns","count":3,
+//!  "sum":900,"buckets":[0,1,2]}
+//! {"type":"end","rank":0}
+//! ```
+//!
+//! Readers must reject unknown `type`s and a mismatched `schema` —
+//! additions bump [`TRACE_SCHEMA`](super::TRACE_SCHEMA).
+//!
+//! ## Chrome export
+//!
+//! [`chrome_trace`] emits `about:tracing` / Perfetto duration events:
+//! wall spans on pid `2*rank`, virtual spans on pid `2*rank + 1` with
+//! one tid lane per node, `ts` in microseconds. Overlapping same-lane
+//! spans are legal input: each span's end is clamped to its stack
+//! parent's end, which keeps the B/E stream balanced and its
+//! timestamps non-decreasing for *arbitrary* span sets (property-
+//! tested in `util::proptest`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+
+use super::trace::{Hist, Recorder, SpanRec};
+use crate::config::json::Json;
+
+/// One counter line re-read from a trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CtrRec {
+    pub rank: usize,
+    pub name: String,
+    pub key: String,
+    pub value: u64,
+}
+
+/// One histogram line re-read from a trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistRec {
+    pub rank: usize,
+    pub name: String,
+    pub hist: Hist,
+}
+
+/// A parsed trace file (possibly merged across ranks).
+#[derive(Clone, Debug, Default)]
+pub struct TraceFile {
+    pub schema: String,
+    pub spans: Vec<SpanRec>,
+    pub counters: Vec<CtrRec>,
+    pub hists: Vec<HistRec>,
+    pub ranks: BTreeSet<usize>,
+    /// an `end` footer was present (complete write)
+    pub complete: bool,
+    pub lines: usize,
+}
+
+/// Flush a recorder to every configured sink; returns paths written.
+pub(crate) fn write(rec: &Recorder) -> anyhow::Result<Vec<String>> {
+    let mut written = Vec::new();
+    if let Some(p) = &rec.trace_path {
+        write_jsonl(rec, p)
+            .map_err(|e| anyhow::anyhow!("writing trace {p}: {e}"))?;
+        written.push(p.clone());
+    }
+    if let Some(p) = &rec.chrome_path {
+        let text = chrome_trace(&chrome_spans(&rec.spans));
+        std::fs::write(p, text)
+            .map_err(|e| anyhow::anyhow!("writing chrome {p}: {e}"))?;
+        written.push(p.clone());
+    }
+    Ok(written)
+}
+
+fn write_jsonl(rec: &Recorder, path: &str) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{}", meta_line(rec.rank).to_string())?;
+    for s in &rec.spans {
+        writeln!(w, "{}", span_line(s).to_string())?;
+    }
+    for ((name, key), value) in &rec.counters {
+        let j = Json::obj(vec![
+            ("type", Json::str("ctr")),
+            ("rank", Json::num(rec.rank as f64)),
+            ("name", Json::str(name)),
+            ("key", Json::str(key)),
+            ("value", Json::num(*value as f64)),
+        ]);
+        writeln!(w, "{}", j.to_string())?;
+    }
+    for (name, h) in &rec.hists {
+        let j = Json::obj(vec![
+            ("type", Json::str("hist")),
+            ("rank", Json::num(rec.rank as f64)),
+            ("name", Json::str(name)),
+            ("count", Json::num(h.count as f64)),
+            ("sum", Json::num(h.sum as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    h.buckets
+                        .iter()
+                        .map(|&n| Json::num(n as f64))
+                        .collect(),
+                ),
+            ),
+        ]);
+        writeln!(w, "{}", j.to_string())?;
+    }
+    writeln!(w, "{}", end_line(rec.rank).to_string())?;
+    w.flush()
+}
+
+fn meta_line(rank: usize) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("meta")),
+        ("schema", Json::str(super::TRACE_SCHEMA)),
+        ("rank", Json::num(rank as f64)),
+    ])
+}
+
+fn end_line(rank: usize) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("end")),
+        ("rank", Json::num(rank as f64)),
+    ])
+}
+
+fn span_line(s: &SpanRec) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("span")),
+        ("rank", Json::num(s.rank as f64)),
+        ("name", Json::str(&s.name)),
+        (
+            "clock",
+            Json::str(if s.virt { "virtual" } else { "wall" }),
+        ),
+        ("tid", Json::num(s.tid as f64)),
+        ("ts_ns", Json::num(s.ts_ns as f64)),
+        ("dur_ns", Json::num(s.dur_ns as f64)),
+    ])
+}
+
+/// Parse a JSONL trace (strict: unknown line types and a missing or
+/// mismatched schema are errors; the first line must be `meta`).
+pub fn parse_trace(text: &str) -> anyhow::Result<TraceFile> {
+    let mut tf = TraceFile::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let n = i + 1;
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {n}: {e}"))?;
+        let typ = j
+            .get_str("type")
+            .ok_or_else(|| anyhow::anyhow!("trace line {n}: no type"))?;
+        let rank = j.get_usize("rank").unwrap_or(0);
+        if typ != "meta" && tf.schema.is_empty() {
+            anyhow::bail!("trace line {n}: file must start with meta");
+        }
+        match typ {
+            "meta" => {
+                let schema = j.get_str("schema").ok_or_else(|| {
+                    anyhow::anyhow!("trace line {n}: meta without schema")
+                })?;
+                if tf.schema.is_empty() {
+                    tf.schema = schema.to_string();
+                } else if tf.schema != schema {
+                    anyhow::bail!(
+                        "trace line {n}: mixed schemas \
+                         '{}' and '{schema}'",
+                        tf.schema
+                    );
+                }
+            }
+            "span" => {
+                let get = |k: &str| {
+                    j.get_f64(k).ok_or_else(|| {
+                        anyhow::anyhow!("trace line {n}: span missing {k}")
+                    })
+                };
+                tf.ranks.insert(rank);
+                tf.spans.push(SpanRec {
+                    rank,
+                    name: j
+                        .get_str("name")
+                        .unwrap_or_default()
+                        .to_string(),
+                    virt: j.get_str("clock") == Some("virtual"),
+                    tid: get("tid")? as u32,
+                    ts_ns: get("ts_ns")? as u64,
+                    dur_ns: get("dur_ns")? as u64,
+                });
+            }
+            "ctr" => {
+                tf.ranks.insert(rank);
+                tf.counters.push(CtrRec {
+                    rank,
+                    name: j
+                        .get_str("name")
+                        .unwrap_or_default()
+                        .to_string(),
+                    key: j.get_str("key").unwrap_or_default().to_string(),
+                    value: j.get_f64("value").unwrap_or(0.0) as u64,
+                });
+            }
+            "hist" => {
+                tf.ranks.insert(rank);
+                let buckets = j
+                    .get("buckets")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|v| v.as_f64().unwrap_or(0.0) as u64)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                tf.hists.push(HistRec {
+                    rank,
+                    name: j
+                        .get_str("name")
+                        .unwrap_or_default()
+                        .to_string(),
+                    hist: Hist {
+                        count: j.get_f64("count").unwrap_or(0.0) as u64,
+                        sum: j.get_f64("sum").unwrap_or(0.0) as u64,
+                        buckets,
+                    },
+                });
+            }
+            "end" => tf.complete = true,
+            other => anyhow::bail!(
+                "trace line {n}: unknown record type '{other}' \
+                 (schema {})",
+                super::TRACE_SCHEMA
+            ),
+        }
+        tf.lines += 1;
+    }
+    if tf.schema.is_empty() {
+        anyhow::bail!("empty trace: no meta line");
+    }
+    Ok(tf)
+}
+
+/// The per-rank trace path of a multi-process run: rank `r` writes
+/// `<stem>.rank<r>.jsonl` and rank 0 merges them into the base path.
+pub fn rank_path(base: &str, rank: usize) -> String {
+    match base.strip_suffix(".jsonl") {
+        Some(stem) => format!("{stem}.rank{rank}.jsonl"),
+        None => format!("{base}.rank{rank}"),
+    }
+}
+
+fn file_complete(path: &str) -> bool {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return false;
+    };
+    let Some(last) = text.lines().rev().find(|l| !l.trim().is_empty())
+    else {
+        return false;
+    };
+    matches!(Json::parse(last), Ok(j) if j.get_str("type") == Some("end"))
+}
+
+/// Merge the per-rank trace files of an `nodes`-process run into
+/// `base`, polling up to `wait` for stragglers' end footers. Per-rank
+/// meta/end lines are dropped (every record already carries its rank)
+/// and a fresh meta/end pair frames the merged file. Returns a human
+/// summary; missing ranks are merged best-effort and reported.
+pub fn merge_ranks(
+    base: &str,
+    nodes: usize,
+    wait: std::time::Duration,
+) -> anyhow::Result<String> {
+    let deadline = std::time::Instant::now() + wait;
+    let paths: Vec<String> =
+        (0..nodes).map(|r| rank_path(base, r)).collect();
+    while paths.iter().any(|p| !file_complete(p))
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let f = std::fs::File::create(base)
+        .map_err(|e| anyhow::anyhow!("creating {base}: {e}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{}", meta_line(0).to_string())?;
+    let mut merged = 0usize;
+    for p in &paths {
+        let Ok(text) = std::fs::read_to_string(p) else { continue };
+        merged += 1;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(j) = Json::parse(line) else { continue };
+            match j.get_str("type") {
+                Some("meta") | Some("end") => {}
+                _ => writeln!(w, "{line}")?,
+            }
+        }
+    }
+    writeln!(w, "{}", end_line(0).to_string())?;
+    w.flush()?;
+    Ok(format!("merged {merged}/{nodes} rank traces into {base}"))
+}
+
+// ---- Chrome trace_event export -----------------------------------------
+
+/// A span on one Chrome lane (`pid`, `tid`), nanosecond interval.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChromeSpan {
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl ChromeSpan {
+    fn end(&self) -> u64 {
+        self.ts_ns.saturating_add(self.dur_ns)
+    }
+}
+
+/// One emitted duration event (`ph: B` or `ph: E`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChromeEvent {
+    pub begin: bool,
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+    pub ts_ns: u64,
+}
+
+/// Map recorded spans onto Chrome lanes: wall clock on pid `2*rank`
+/// (tid = recording thread), virtual clock on pid `2*rank + 1`
+/// (tid = node id).
+pub fn chrome_spans(spans: &[SpanRec]) -> Vec<ChromeSpan> {
+    spans
+        .iter()
+        .map(|s| ChromeSpan {
+            pid: (s.rank as u32) * 2 + u32::from(s.virt),
+            tid: s.tid,
+            name: s.name.clone(),
+            ts_ns: s.ts_ns,
+            dur_ns: s.dur_ns,
+        })
+        .collect()
+}
+
+/// Lower spans to a balanced `B`/`E` event stream, per (pid, tid)
+/// lane. Chrome's duration events are strictly stack-shaped; spans
+/// that only partially overlap a same-lane predecessor are clamped to
+/// their stack parent's end, so for *arbitrary* input the stream keeps
+/// both exporter invariants: per-lane timestamps never decrease, and
+/// every `B` has exactly one matching `E`.
+pub fn chrome_events(spans: &[ChromeSpan]) -> Vec<ChromeEvent> {
+    let mut lanes: BTreeMap<(u32, u32), Vec<&ChromeSpan>> =
+        BTreeMap::new();
+    for s in spans {
+        lanes.entry((s.pid, s.tid)).or_default().push(s);
+    }
+    let mut out = Vec::with_capacity(spans.len() * 2);
+    for ((pid, tid), mut lane) in lanes {
+        // by start; longer span first on ties so it becomes the parent
+        lane.sort_by_key(|s| (s.ts_ns, std::cmp::Reverse(s.end())));
+        let mut stack: Vec<(String, u64)> = Vec::new();
+        let pop = |stack: &mut Vec<(String, u64)>,
+                       out: &mut Vec<ChromeEvent>| {
+            let (name, end) = stack.pop().expect("non-empty stack");
+            out.push(ChromeEvent {
+                begin: false,
+                pid,
+                tid,
+                name,
+                ts_ns: end,
+            });
+        };
+        for s in lane {
+            while matches!(stack.last(), Some((_, end)) if *end <= s.ts_ns)
+            {
+                pop(&mut stack, &mut out);
+            }
+            // clamp to the parent: stack ends stay nested (the top is
+            // the minimum), which is what makes pops non-decreasing
+            let mut end = s.end();
+            if let Some((_, parent_end)) = stack.last() {
+                end = end.min(*parent_end);
+            }
+            out.push(ChromeEvent {
+                begin: true,
+                pid,
+                tid,
+                name: s.name.clone(),
+                ts_ns: s.ts_ns,
+            });
+            stack.push((s.name.clone(), end));
+        }
+        while !stack.is_empty() {
+            pop(&mut stack, &mut out);
+        }
+    }
+    out
+}
+
+/// Render spans as a Chrome `trace_event` JSON document (`ts` in
+/// microseconds, as the format requires).
+pub fn chrome_trace(spans: &[ChromeSpan]) -> String {
+    let events: Vec<Json> = chrome_events(spans)
+        .into_iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("ph", Json::str(if e.begin { "B" } else { "E" })),
+                ("pid", Json::num(e.pid as f64)),
+                ("tid", Json::num(e.tid as f64)),
+                ("name", Json::str(&e.name)),
+                ("cat", Json::str("lmdfl")),
+                ("ts", Json::num(e.ts_ns as f64 / 1e3)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cs(tid: u32, ts: u64, dur: u64, name: &str) -> ChromeSpan {
+        ChromeSpan {
+            pid: 0,
+            tid,
+            name: name.to_string(),
+            ts_ns: ts,
+            dur_ns: dur,
+        }
+    }
+
+    #[test]
+    fn nested_spans_emit_stack_shaped_events() {
+        let spans =
+            vec![cs(1, 0, 100, "outer"), cs(1, 10, 20, "inner")];
+        let ev = chrome_events(&spans);
+        let shape: Vec<(bool, &str, u64)> = ev
+            .iter()
+            .map(|e| (e.begin, e.name.as_str(), e.ts_ns))
+            .collect();
+        assert_eq!(
+            shape,
+            vec![
+                (true, "outer", 0),
+                (true, "inner", 10),
+                (false, "inner", 30),
+                (false, "outer", 100),
+            ]
+        );
+    }
+
+    #[test]
+    fn partial_overlap_is_clamped_not_unbalanced() {
+        // a=[0,10), b=[5,15): naive emission would close a at 10 AFTER
+        // closing b at 15 — decreasing timestamps; the exporter clamps
+        // b to its parent's end instead
+        let spans = vec![cs(0, 0, 10, "a"), cs(0, 5, 10, "b")];
+        let ev = chrome_events(&spans);
+        let mut last = 0;
+        let mut depth = 0i64;
+        for e in &ev {
+            assert!(e.ts_ns >= last, "ts decreased");
+            last = e.ts_ns;
+            depth += if e.begin { 1 } else { -1 };
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0);
+        assert_eq!(ev.len(), 4);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let spans = vec![cs(0, 0, 1000, "x"), cs(1, 500, 800, "y")];
+        let doc = Json::parse(&chrome_trace(&spans)).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get_str("ph"), Some("B"));
+        // ns -> µs
+        assert_eq!(events[0].get_f64("ts"), Some(0.0));
+        assert!(events
+            .iter()
+            .any(|e| e.get_f64("ts") == Some(0.5)));
+    }
+
+    #[test]
+    fn parse_rejects_bad_traces() {
+        // no meta
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace(
+            "{\"type\":\"span\",\"rank\":0,\"name\":\"x\",\
+             \"clock\":\"wall\",\"tid\":0,\"ts_ns\":0,\"dur_ns\":1}"
+        )
+        .is_err());
+        // unknown type
+        let text = format!(
+            "{}\n{{\"type\":\"wat\"}}\n",
+            "{\"type\":\"meta\",\"schema\":\"lmdfl-trace-v1\",\
+             \"rank\":0}"
+        );
+        assert!(parse_trace(&text).is_err());
+        // minimal complete file parses
+        let ok = "{\"type\":\"meta\",\"schema\":\"lmdfl-trace-v1\",\
+                  \"rank\":0}\n{\"type\":\"end\",\"rank\":0}\n";
+        let tf = parse_trace(ok).unwrap();
+        assert!(tf.complete);
+        assert_eq!(tf.lines, 2);
+    }
+
+    #[test]
+    fn rank_paths_and_merge() {
+        assert_eq!(
+            rank_path("/tmp/t.jsonl", 2),
+            "/tmp/t.rank2.jsonl"
+        );
+        assert_eq!(rank_path("/tmp/t", 2), "/tmp/t.rank2");
+        let dir = std::env::temp_dir();
+        let base = dir
+            .join(format!("lmdfl_merge_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        for r in 0..2usize {
+            let mut body = format!(
+                "{{\"type\":\"meta\",\
+                 \"schema\":\"lmdfl-trace-v1\",\"rank\":{r}}}\n"
+            );
+            body.push_str(&format!(
+                "{{\"type\":\"ctr\",\"rank\":{r},\
+                 \"name\":\"n\",\"key\":\"k\",\"value\":{r}}}\n\
+                 {{\"type\":\"end\",\"rank\":{r}}}\n"
+            ));
+            std::fs::write(rank_path(&base, r), body).unwrap();
+        }
+        let msg = merge_ranks(
+            &base,
+            2,
+            std::time::Duration::from_secs(2),
+        )
+        .unwrap();
+        assert!(msg.contains("2/2"));
+        let tf =
+            parse_trace(&std::fs::read_to_string(&base).unwrap())
+                .unwrap();
+        assert!(tf.complete);
+        assert_eq!(tf.counters.len(), 2);
+        assert_eq!(tf.ranks.len(), 2);
+        for r in 0..2usize {
+            let _ = std::fs::remove_file(rank_path(&base, r));
+        }
+        let _ = std::fs::remove_file(&base);
+    }
+}

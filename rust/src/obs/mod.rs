@@ -1,0 +1,319 @@
+//! Zero-dependency tracing & telemetry across engines, fabric, and
+//! transports (trace schema `lmdfl-trace-v1`).
+//!
+//! One process-global handle, off by default and compiled down to a
+//! single relaxed atomic load per probe when disabled. Enable it via
+//! the `observe:` config section (`trace_path` / `chrome_path`) or the
+//! `--trace-out` / `--chrome-out` CLI flags; every layer is already
+//! instrumented:
+//!
+//! * **scoped wall spans** ([`span`]) — engine round phases (`round`,
+//!   `train`, `quantize`, `mix`, `eval`) and the multi-process node
+//!   runtime;
+//! * **virtual spans** ([`vspan`]) — simnet/agossip state machines,
+//!   timestamped in virtual nanoseconds with one lane per node;
+//! * **counters** ([`counter`]) — per-link send/recv/drop/tombstone
+//!   frames, TCP reconnects, forced mixes, encoded bytes by quantizer
+//!   tag;
+//! * **histograms** ([`hist`]) — TCP backoff waits, quorum fill
+//!   latencies, straggler waits (log2 buckets, see
+//!   [`trace::Hist`]).
+//!
+//! Everything is buffered in memory and written at [`stop`]: a JSONL
+//! sink (one typed record per line, parseable by
+//! [`export::parse_trace`] and summarized by `lmdfl trace`) and/or a
+//! Chrome `trace_event` JSON that opens directly in `about:tracing` or
+//! [Perfetto](https://ui.perfetto.dev).
+//!
+//! Recording only observes engine state — no rng draws, no event
+//! reordering, no wall-clock feeding simulated quantities — so traced
+//! simnet runs produce byte-identical event digests and RunLogs
+//! (enforced by `rust/tests/simnet_determinism.rs`).
+
+pub mod export;
+pub mod summary;
+pub mod trace;
+
+pub use trace::{Hist, SpanRec};
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::json::Json;
+use crate::config::ConfigError;
+use trace::Recorder;
+
+/// Schema identifier written into (and required from) every trace
+/// file. Any change to line types or required fields must bump this.
+pub const TRACE_SCHEMA: &str = "lmdfl-trace-v1";
+
+/// The `observe:` config section: where to write traces. At least one
+/// sink must be set for the section to be meaningful.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ObserveConfig {
+    /// JSONL trace sink (schema [`TRACE_SCHEMA`])
+    pub trace_path: Option<String>,
+    /// Chrome `trace_event` export (about:tracing / Perfetto)
+    pub chrome_path: Option<String>,
+}
+
+impl ObserveConfig {
+    pub fn enabled(&self) -> bool {
+        self.trace_path.is_some() || self.chrome_path.is_some()
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !self.enabled() {
+            return Err(ConfigError(
+                "observe: needs trace_path and/or chrome_path".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if let Some(p) = &self.trace_path {
+            pairs.push(("trace_path", Json::str(p)));
+        }
+        if let Some(p) = &self.chrome_path {
+            pairs.push(("chrome_path", Json::str(p)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        Ok(ObserveConfig {
+            trace_path: j.get_str("trace_path").map(str::to_string),
+            chrome_path: j.get_str("chrome_path").map(str::to_string),
+        })
+    }
+}
+
+// The global handle: a fast-path flag + the mutex-held buffer. Probes
+// check ACTIVE first (one relaxed load when tracing is off — well
+// inside every bench-smoke gate) and only then take the short lock.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static RECORDER: Mutex<Option<Recorder>> = Mutex::new(None);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static TID: std::cell::Cell<u32> =
+        const { std::cell::Cell::new(u32::MAX) };
+}
+
+/// Stable small id for the calling thread (allocated on first use).
+fn tid() -> u32 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != u32::MAX {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+fn recorder() -> std::sync::MutexGuard<'static, Option<Recorder>> {
+    // a panic inside a probe must not poison tracing for the process
+    RECORDER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Is tracing enabled? One relaxed atomic load — safe to call on any
+/// hot path; guard `format!`-built keys behind it.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Install a fresh recorder and start tracing. `rank` stamps every
+/// record (0 for single-process runs).
+pub fn start(cfg: &ObserveConfig, rank: usize) {
+    let mut rec = recorder();
+    *rec = Some(Recorder::new(cfg, rank));
+    drop(rec);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Stop tracing and flush every configured sink. Returns the paths
+/// written; no-op (empty) if tracing was never started.
+pub fn stop() -> anyhow::Result<Vec<String>> {
+    ACTIVE.store(false, Ordering::SeqCst);
+    let rec = recorder().take();
+    match rec {
+        Some(r) => export::write(&r),
+        None => Ok(Vec::new()),
+    }
+}
+
+/// Scoped wall-clock span: records `name` with the elapsed time on
+/// drop. Free when tracing is disabled (no `Instant::now` call).
+pub struct Span {
+    name: &'static str,
+    started: Option<Instant>,
+}
+
+#[must_use = "a span records on drop; bind it to a local"]
+pub fn span(name: &'static str) -> Span {
+    let started = active().then(Instant::now);
+    Span { name, started }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(started) = self.started else { return };
+        let dur_ns = started.elapsed().as_nanos() as u64;
+        let t = tid();
+        if let Some(rec) = recorder().as_mut() {
+            rec.wall_span(self.name, t, started, dur_ns);
+        }
+    }
+}
+
+/// Record a span on the *virtual* clock (simnet nanoseconds), one
+/// Chrome lane per node. The interval is known to the caller — simnet
+/// schedules completions ahead of time — so there is no guard object.
+pub fn vspan(name: &'static str, node: usize, start_ns: u64, end_ns: u64) {
+    if !active() {
+        return;
+    }
+    if let Some(rec) = recorder().as_mut() {
+        rec.virt_span(name, node as u32, start_ns, end_ns);
+    }
+}
+
+/// Bump the monotonic counter `name[key]` by `n`.
+pub fn counter(name: &'static str, key: &str, n: u64) {
+    if !active() {
+        return;
+    }
+    if let Some(rec) = recorder().as_mut() {
+        rec.counter(name, key, n);
+    }
+}
+
+/// Record one value into the log2-bucket histogram `name`.
+pub fn hist(name: &'static str, v: u64) {
+    if !active() {
+        return;
+    }
+    if let Some(rec) = recorder().as_mut() {
+        rec.hist(name, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the handle is process-global: serialize the tests that own it
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("lmdfl_obs_{}_{name}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn disabled_probes_are_noops() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!active());
+        let s = span("obs-noop");
+        drop(s);
+        vspan("obs-noop", 0, 0, 10);
+        counter("obs-noop", "k", 1);
+        hist("obs-noop", 7);
+        assert!(recorder().is_none());
+        // stop without start writes nothing
+        assert!(stop().unwrap().is_empty());
+    }
+
+    #[test]
+    fn start_record_stop_roundtrips_through_jsonl() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let path = tmp("roundtrip.jsonl");
+        let cfg = ObserveConfig {
+            trace_path: Some(path.clone()),
+            chrome_path: None,
+        };
+        cfg.validate().unwrap();
+        start(&cfg, 3);
+        {
+            let _s = span("obs-test-wall-span");
+        }
+        vspan("obs-test-virt-span", 5, 1_000, 4_000);
+        counter("obs-test-ctr", "0->1", 2);
+        counter("obs-test-ctr", "0->1", 3);
+        hist("obs-test-hist", 4096);
+        let written = stop().unwrap();
+        assert_eq!(written, vec![path.clone()]);
+        assert!(!active());
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tf = export::parse_trace(&text).unwrap();
+        assert_eq!(tf.schema, TRACE_SCHEMA);
+        assert!(tf.complete);
+        assert!(tf.ranks.contains(&3));
+        // other concurrently-running tests may also have recorded;
+        // assert on the uniquely-named records only
+        let wall = tf
+            .spans
+            .iter()
+            .find(|s| s.name == "obs-test-wall-span")
+            .unwrap();
+        assert!(!wall.virt);
+        assert_eq!(wall.rank, 3);
+        let virt = tf
+            .spans
+            .iter()
+            .find(|s| s.name == "obs-test-virt-span")
+            .unwrap();
+        assert!(virt.virt);
+        assert_eq!(virt.tid, 5);
+        assert_eq!(virt.ts_ns, 1_000);
+        assert_eq!(virt.dur_ns, 3_000);
+        let ctr = tf
+            .counters
+            .iter()
+            .find(|c| c.name == "obs-test-ctr")
+            .unwrap();
+        assert_eq!(ctr.key, "0->1");
+        assert_eq!(ctr.value, 5);
+        let h = tf
+            .hists
+            .iter()
+            .find(|h| h.name == "obs-test-hist")
+            .unwrap();
+        assert_eq!(h.count, 1);
+        assert_eq!(h.sum, 4096);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn observe_config_json_forms() {
+        let oc = ObserveConfig {
+            trace_path: Some("/tmp/t.jsonl".into()),
+            chrome_path: Some("/tmp/t.trace.json".into()),
+        };
+        let back =
+            ObserveConfig::from_json(&oc.to_json()).unwrap();
+        assert_eq!(back, oc);
+        // empty section is rejected
+        assert!(ObserveConfig::default().validate().is_err());
+        // one-sink forms are fine and omit the absent key
+        let one = ObserveConfig {
+            trace_path: Some("x".into()),
+            chrome_path: None,
+        };
+        one.validate().unwrap();
+        assert!(!one.to_json().to_string().contains("chrome_path"));
+        assert_eq!(
+            ObserveConfig::from_json(&one.to_json()).unwrap(),
+            one
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! `lmdfl trace`: schema validation and a human summary of a trace
+//! file — top spans by total time, counter tables (per-link bytes,
+//! drops, reconnects), and histogram digests — rendered with the
+//! existing [`crate::metrics::Table`].
+
+use std::collections::BTreeMap;
+
+use super::export::TraceFile;
+use super::trace::Hist;
+use crate::metrics::Table;
+
+/// Validate a parsed trace against the current schema: version match,
+/// complete end footer, and at least one record. Returns a one-line
+/// OK summary (CI prints it).
+pub fn check(tf: &TraceFile) -> anyhow::Result<String> {
+    if tf.schema != super::TRACE_SCHEMA {
+        anyhow::bail!(
+            "trace schema '{}' != expected '{}'",
+            tf.schema,
+            super::TRACE_SCHEMA
+        );
+    }
+    if !tf.complete {
+        anyhow::bail!("trace has no end footer (truncated write?)");
+    }
+    if tf.spans.is_empty() && tf.counters.is_empty() {
+        anyhow::bail!("trace carries no spans and no counters");
+    }
+    Ok(format!(
+        "trace OK: schema {}, {} lines, {} spans, {} counters, \
+         {} histograms, {} rank(s)",
+        tf.schema,
+        tf.lines,
+        tf.spans.len(),
+        tf.counters.len(),
+        tf.hists.len(),
+        tf.ranks.len().max(1),
+    ))
+}
+
+/// Render the full human summary of a parsed trace.
+pub fn summarize(tf: &TraceFile) -> String {
+    let mut out = format!(
+        "trace: schema {}, {} spans, {} counters, {} histograms, \
+         ranks {:?}{}\n",
+        tf.schema,
+        tf.spans.len(),
+        tf.counters.len(),
+        tf.hists.len(),
+        tf.ranks.iter().collect::<Vec<_>>(),
+        if tf.complete { "" } else { " [INCOMPLETE]" },
+    );
+    if !tf.spans.is_empty() {
+        out.push_str("\ntop spans by total time\n");
+        out.push_str(&span_table(tf));
+    }
+    if !tf.counters.is_empty() {
+        out.push_str("\ncounters\n");
+        out.push_str(&counter_table(tf));
+    }
+    if !tf.hists.is_empty() {
+        out.push_str("\nhistograms\n");
+        out.push_str(&hist_table(tf));
+    }
+    out
+}
+
+/// Spans aggregated by (name, clock), top 12 by total duration.
+fn span_table(tf: &TraceFile) -> String {
+    let mut agg: BTreeMap<(String, bool), (u64, u64)> = BTreeMap::new();
+    for s in &tf.spans {
+        let e = agg
+            .entry((s.name.clone(), s.virt))
+            .or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.saturating_add(s.dur_ns);
+    }
+    let mut rows: Vec<_> = agg.into_iter().collect();
+    rows.sort_by_key(|(_, (_, total))| std::cmp::Reverse(*total));
+    let mut t =
+        Table::new(&["span", "clock", "count", "total ms", "mean µs"]);
+    for ((name, virt), (count, total)) in rows.into_iter().take(12) {
+        t.row(vec![
+            name,
+            if virt { "virtual" } else { "wall" }.into(),
+            format!("{count}"),
+            format!("{:.3}", total as f64 / 1e6),
+            format!("{:.1}", total as f64 / 1e3 / count as f64),
+        ]);
+    }
+    t.render()
+}
+
+/// Per-name totals plus the largest per-rank/per-key rows (per-link
+/// byte and drop tables live here).
+fn counter_table(tf: &TraceFile) -> String {
+    let mut totals: BTreeMap<&str, u64> = BTreeMap::new();
+    for c in &tf.counters {
+        *totals.entry(c.name.as_str()).or_insert(0) += c.value;
+    }
+    let mut t = Table::new(&["counter", "rank", "key", "value"]);
+    for (name, total) in &totals {
+        t.row(vec![
+            name.to_string(),
+            "all".into(),
+            "(total)".into(),
+            format!("{total}"),
+        ]);
+    }
+    let mut rows: Vec<_> = tf.counters.iter().collect();
+    rows.sort_by(|a, b| {
+        (&a.name, std::cmp::Reverse(a.value), a.rank, &a.key).cmp(&(
+            &b.name,
+            std::cmp::Reverse(b.value),
+            b.rank,
+            &b.key,
+        ))
+    });
+    let cap = 40usize;
+    for c in rows.iter().take(cap) {
+        t.row(vec![
+            c.name.clone(),
+            format!("{}", c.rank),
+            c.key.clone(),
+            format!("{}", c.value),
+        ]);
+    }
+    let mut out = t.render();
+    if rows.len() > cap {
+        out.push_str(&format!(
+            "(+{} more counter rows)\n",
+            rows.len() - cap
+        ));
+    }
+    out
+}
+
+/// Histograms merged across ranks: count, mean, and p50/p99 bucket
+/// upper edges (values are nanoseconds by convention).
+fn hist_table(tf: &TraceFile) -> String {
+    let mut agg: BTreeMap<&str, Hist> = BTreeMap::new();
+    for h in &tf.hists {
+        agg.entry(h.name.as_str())
+            .or_default()
+            .absorb(&h.hist);
+    }
+    let mut t = Table::new(&[
+        "histogram",
+        "count",
+        "mean µs",
+        "p50 ≤ µs",
+        "p99 ≤ µs",
+    ]);
+    for (name, h) in agg {
+        t.row(vec![
+            name.to_string(),
+            format!("{}", h.count),
+            format!("{:.1}", h.mean() / 1e3),
+            format!("{:.1}", h.quantile_edge(0.5) as f64 / 1e3),
+            format!("{:.1}", h.quantile_edge(0.99) as f64 / 1e3),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::{CtrRec, HistRec};
+    use crate::obs::SpanRec;
+
+    fn sample() -> TraceFile {
+        let mut h = Hist::default();
+        h.record(1_000);
+        h.record(2_000);
+        TraceFile {
+            schema: crate::obs::TRACE_SCHEMA.to_string(),
+            spans: vec![SpanRec {
+                rank: 0,
+                name: "round".into(),
+                virt: false,
+                tid: 0,
+                ts_ns: 0,
+                dur_ns: 2_000_000,
+            }],
+            counters: vec![
+                CtrRec {
+                    rank: 0,
+                    name: "frame_send".into(),
+                    key: "0->1".into(),
+                    value: 7,
+                },
+                CtrRec {
+                    rank: 1,
+                    name: "frame_send".into(),
+                    key: "1->0".into(),
+                    value: 5,
+                },
+            ],
+            hists: vec![HistRec {
+                rank: 0,
+                name: "tcp_backoff_ns".into(),
+                hist: h,
+            }],
+            ranks: [0usize, 1].into_iter().collect(),
+            complete: true,
+            lines: 6,
+        }
+    }
+
+    #[test]
+    fn check_accepts_good_and_rejects_bad() {
+        let tf = sample();
+        assert!(check(&tf).unwrap().contains("trace OK"));
+        let mut bad = tf.clone();
+        bad.schema = "lmdfl-trace-v0".into();
+        assert!(check(&bad).is_err());
+        let mut bad = tf.clone();
+        bad.complete = false;
+        assert!(check(&bad).is_err());
+        let mut bad = tf;
+        bad.spans.clear();
+        bad.counters.clear();
+        assert!(check(&bad).is_err());
+    }
+
+    #[test]
+    fn summary_carries_all_sections() {
+        let s = summarize(&sample());
+        assert!(s.contains("top spans"));
+        assert!(s.contains("round"));
+        assert!(s.contains("frame_send"));
+        assert!(s.contains("(total)"));
+        assert!(s.contains("12")); // 7 + 5 total
+        assert!(s.contains("tcp_backoff_ns"));
+    }
+}

@@ -1,0 +1,209 @@
+//! In-memory telemetry recorder: spans, counters, histograms.
+//!
+//! The [`Recorder`] is the single buffer behind the global handle in
+//! [`crate::obs`]: instrumentation pushes records under a short mutex
+//! hold and nothing touches the filesystem until [`crate::obs::stop`]
+//! flushes the whole buffer through [`crate::obs::export`]. Tracing
+//! never does io on the hot path and never reads the wall clock into
+//! any simulated quantity — recording only *observes* engine state, so
+//! the simnet determinism contract (byte-identical event digests and
+//! RunLogs) holds with tracing on or off.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::ObserveConfig;
+
+/// One recorded span.
+///
+/// Two clock domains share the record: wall spans (`virt == false`)
+/// carry nanoseconds since the recorder started and a recording-thread
+/// id; virtual spans (`virt == true`) carry simnet virtual nanoseconds
+/// and use the *node* id as the thread id, so Chrome/Perfetto renders
+/// one lane per node on the virtual timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRec {
+    pub rank: usize,
+    pub name: String,
+    /// false = wall clock, true = simnet virtual clock
+    pub virt: bool,
+    /// recording thread (wall) or node id (virtual)
+    pub tid: u32,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Fixed-bucket log2 histogram: bucket `i` counts values `v` with
+/// `floor(log2(v)) == i` (`v == 0` lands in bucket 0), so nanosecond
+/// latencies from 1 ns to ~584 years fit in 64 buckets with no
+/// configuration.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl Hist {
+    pub fn record(&mut self, v: u64) {
+        let b = if v == 0 {
+            0
+        } else {
+            63 - v.leading_zeros() as usize
+        };
+        if self.buckets.len() <= b {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper edge (2^(i+1)) of the bucket holding the p-quantile, in
+    /// the recorded unit — an upper bound, exact to a factor of 2.
+    pub fn quantile_edge(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target.max(1) {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        1u64 << self.buckets.len().min(63)
+    }
+
+    /// Merge another histogram into this one (bucket-wise).
+    pub fn absorb(&mut self, other: &Hist) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, &n) in other.buckets.iter().enumerate() {
+            self.buckets[b] += n;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+/// The buffer every instrumentation call appends to.
+pub(crate) struct Recorder {
+    pub rank: usize,
+    pub start: Instant,
+    pub trace_path: Option<String>,
+    pub chrome_path: Option<String>,
+    pub spans: Vec<SpanRec>,
+    pub counters: BTreeMap<(String, String), u64>,
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl Recorder {
+    pub fn new(cfg: &ObserveConfig, rank: usize) -> Self {
+        Recorder {
+            rank,
+            start: Instant::now(),
+            trace_path: cfg.trace_path.clone(),
+            chrome_path: cfg.chrome_path.clone(),
+            spans: Vec::new(),
+            counters: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        }
+    }
+
+    pub fn wall_span(
+        &mut self,
+        name: &str,
+        tid: u32,
+        started: Instant,
+        dur_ns: u64,
+    ) {
+        // saturates to 0 if `started` raced the recorder installation
+        let ts_ns = started.duration_since(self.start).as_nanos() as u64;
+        self.spans.push(SpanRec {
+            rank: self.rank,
+            name: name.to_string(),
+            virt: false,
+            tid,
+            ts_ns,
+            dur_ns,
+        });
+    }
+
+    pub fn virt_span(
+        &mut self,
+        name: &str,
+        node: u32,
+        start_ns: u64,
+        end_ns: u64,
+    ) {
+        self.spans.push(SpanRec {
+            rank: self.rank,
+            name: name.to_string(),
+            virt: true,
+            tid: node,
+            ts_ns: start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+        });
+    }
+
+    pub fn counter(&mut self, name: &str, key: &str, n: u64) {
+        *self
+            .counters
+            .entry((name.to_string(), key.to_string()))
+            .or_insert(0) += n;
+    }
+
+    pub fn hist(&mut self, name: &str, v: u64) {
+        self.hists.entry(name.to_string()).or_default().record(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_are_log2() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1024] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 8);
+        assert_eq!(h.sum, 1049);
+        // 0,1 -> b0; 2,3 -> b1; 4,7 -> b2; 8 -> b3; 1024 -> b10
+        assert_eq!(h.buckets[0], 2);
+        assert_eq!(h.buckets[1], 2);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.buckets[3], 1);
+        assert_eq!(h.buckets[10], 1);
+        assert!((h.mean() - 1049.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_quantiles_and_absorb() {
+        let mut a = Hist::default();
+        for _ in 0..99 {
+            a.record(100); // bucket 6 (64..128)
+        }
+        a.record(1 << 20); // one big outlier
+        assert_eq!(a.quantile_edge(0.5), 128);
+        assert_eq!(a.quantile_edge(0.99), 128);
+        assert_eq!(a.quantile_edge(1.0), 1 << 21);
+        let mut b = Hist::default();
+        b.record(100);
+        b.absorb(&a);
+        assert_eq!(b.count, 101);
+        assert_eq!(b.buckets[6], 100);
+    }
+}

@@ -31,6 +31,7 @@ pub use crate::net::{
     FaultDelivery, Frame, Mailbox, TcpDelivery, TcpOptions,
     TransportConfig, TransportKind,
 };
+pub use crate::obs::{self, ObserveConfig, TRACE_SCHEMA};
 pub use crate::quant::codec::CodecError;
 pub use crate::quant::wire::{
     Envelope, QuantTag, WireHeader, WIRE_VERSION,

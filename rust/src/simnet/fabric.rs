@@ -170,6 +170,9 @@ impl Fabric {
             let (dur, straggled) = self.sub.local_update_ns(i, tau);
             stragglers += usize::from(straggled);
             self.queue.schedule(t0 + dur, Ev::ComputeDone { node: i });
+            // the completion is scheduled ahead of time, so the whole
+            // virtual compute interval is known right here
+            crate::obs::vspan("compute", i, t0, t0 + dur);
         }
 
         // drain the queue: compute-done events trigger the q1 broadcast
@@ -211,6 +214,23 @@ impl Fabric {
             .map(|(_, &d)| round_end - d)
             .sum();
         self.queue.rebase(round_end);
+        if crate::obs::active() {
+            for (i, &d) in self.node_done.iter().enumerate() {
+                if !self.sub.is_offline(i) {
+                    crate::obs::hist(
+                        "straggler_wait_ns",
+                        round_end - d,
+                    );
+                }
+            }
+            if lost > 0 {
+                crate::obs::counter(
+                    "sim_messages_lost",
+                    "total",
+                    lost,
+                );
+            }
+        }
         RoundTiming {
             round_secs: ns_to_secs(round_end - t0),
             virtual_secs: ns_to_secs(round_end),

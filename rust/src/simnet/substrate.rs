@@ -175,7 +175,18 @@ impl Substrate {
             return None;
         }
         self.bytes_tx += bytes;
-        Some(link.transmit(ready, bytes, &mut self.rng))
+        let out = link.transmit(ready, bytes, &mut self.rng);
+        // observation only — the transmit above already drew its rng,
+        // so tracing can never perturb the event stream
+        if crate::obs::active() {
+            let key = format!("{i}->{j}");
+            crate::obs::counter("link_send", &key, 1);
+            crate::obs::counter("link_bytes", &key, bytes);
+            if out.1 {
+                crate::obs::counter("link_drop", &key, 1);
+            }
+        }
+        Some(out)
     }
 
     /// Virtual duration of node `i`'s τ local steps this round; returns

@@ -256,6 +256,66 @@ mod tests {
     }
 
     #[test]
+    fn prop_chrome_exporter_emits_balanced_monotone_streams() {
+        // PR 7 satellite: for ARBITRARY span sets — overlapping,
+        // nested, zero-length, duplicate-named — the Chrome exporter
+        // must keep both trace_event invariants on every (pid, tid)
+        // lane: timestamps never decrease, and every B has exactly one
+        // matching E closing the innermost open span
+        use crate::config::json::Json;
+        use crate::obs::export::{
+            chrome_events, chrome_trace, ChromeSpan,
+        };
+        use std::collections::HashMap;
+        check("chrome exporter invariants", 120, |g| {
+            let n = g.usize_in(0..40);
+            let spans: Vec<ChromeSpan> = (0..n)
+                .map(|k| ChromeSpan {
+                    pid: g.usize_in(0..3) as u32,
+                    tid: g.usize_in(0..4) as u32,
+                    name: format!("s{}", k % 5),
+                    ts_ns: g.usize_in(0..10_000) as u64,
+                    dur_ns: g.usize_in(0..5_000) as u64,
+                })
+                .collect();
+            let ev = chrome_events(&spans);
+            assert_eq!(ev.len(), 2 * n, "one B and one E per span");
+            let mut last: HashMap<(u32, u32), u64> = HashMap::new();
+            let mut stacks: HashMap<(u32, u32), Vec<String>> =
+                HashMap::new();
+            for e in &ev {
+                let lane = (e.pid, e.tid);
+                let prev = last.entry(lane).or_insert(0);
+                assert!(
+                    e.ts_ns >= *prev,
+                    "lane {lane:?}: ts decreased {prev} -> {}",
+                    e.ts_ns
+                );
+                *prev = e.ts_ns;
+                let stack = stacks.entry(lane).or_default();
+                if e.begin {
+                    stack.push(e.name.clone());
+                } else {
+                    let open = stack.pop().expect("E without open B");
+                    assert_eq!(open, e.name, "E must close innermost B");
+                }
+            }
+            for (lane, stack) in stacks {
+                assert!(
+                    stack.is_empty(),
+                    "lane {lane:?}: {} unclosed spans",
+                    stack.len()
+                );
+            }
+            // the rendered document is valid JSON with 2n events
+            let doc = Json::parse(&chrome_trace(&spans)).unwrap();
+            let events =
+                doc.get("traceEvents").unwrap().as_arr().unwrap();
+            assert_eq!(events.len(), 2 * n);
+        });
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let mut out1 = Vec::new();
         let mut out2 = Vec::new();

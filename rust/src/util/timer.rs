@@ -21,7 +21,10 @@ impl Timer {
     }
 
     pub fn elapsed_ns(&self) -> f64 {
-        self.elapsed_secs() * 1e9
+        // NOT elapsed_secs() * 1e9: the f64 seconds round-trip loses
+        // nanosecond resolution once runs last minutes (2^52 ns ~ 52
+        // days, but the secs path already rounds at microseconds)
+        self.start.elapsed().as_nanos() as f64
     }
 }
 
@@ -50,5 +53,27 @@ mod tests {
         let (v, secs) = timed(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn elapsed_ns_keeps_nanosecond_resolution() {
+        // regression: the old implementation computed
+        // elapsed_secs() * 1e9, so a ~1 µs interval came back rounded
+        // through an f64 of *seconds*; integer nanoseconds from
+        // Instant::elapsed().as_nanos() must agree with the secs view
+        // at microsecond scale and be exact at nanosecond scale
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_micros(500));
+        let ns = t.elapsed_ns();
+        let secs = t.elapsed_secs();
+        assert!(ns >= 500_000.0, "slept 500µs but measured {ns}ns");
+        // an f64 holds integers exactly to 2^53: any ns count a test
+        // can reach converts without rounding, so the value must be a
+        // whole number of nanoseconds
+        assert_eq!(ns.fract(), 0.0);
+        // the two clocks agree (ns was measured first, so it is the
+        // smaller of the two)
+        assert!(secs * 1e9 >= ns);
+        assert!(secs * 1e9 - ns < 50_000_000.0, "clocks diverged");
     }
 }

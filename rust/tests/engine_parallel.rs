@@ -48,6 +48,7 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

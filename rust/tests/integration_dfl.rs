@@ -35,6 +35,7 @@ fn blob_cfg() -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 

@@ -230,6 +230,7 @@ fn dfl_training_on_hlo_backend_converges() {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);

@@ -312,6 +312,117 @@ fn async_matrix_and_bitstream_runlogs_byte_identical() {
     }
 }
 
+/// PR 7 acceptance: tracing is observation-only. A traced run of each
+/// torus-16 preset — sync round-barrier and async event-driven — must
+/// reproduce the untraced event digest and a bit-identical RunLog, and
+/// the written trace must parse as a complete `lmdfl-trace-v1` file.
+#[test]
+fn traced_replay_is_byte_identical_to_untraced() {
+    use lmdfl::experiments::fig_time;
+    use lmdfl::experiments::Scale;
+    use lmdfl::obs;
+
+    let tmp = |name: &str| {
+        std::env::temp_dir()
+            .join(format!("lmdfl_traced_{}_{name}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    };
+    let shrink = |cfg: &mut ExperimentConfig| {
+        cfg.rounds = 4;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 240,
+            test: 80,
+            dim: 8,
+            classes: 3,
+        };
+    };
+    let trace_to = |path: &str| {
+        obs::start(
+            &obs::ObserveConfig {
+                trace_path: Some(path.to_string()),
+                chrome_path: None,
+            },
+            0,
+        );
+    };
+    let read_trace = |path: &str| {
+        let text = std::fs::read_to_string(path).unwrap();
+        obs::export::parse_trace(&text).unwrap()
+    };
+
+    // ---- sync preset on the round-barrier fabric --------------------
+    let (mut cfg, net) =
+        fig_time::preset("torus-16", Scale::Quick).unwrap();
+    shrink(&mut cfg);
+    cfg.network = Some(net);
+    let (mut plain, digest_plain, events_plain) = run_once(&cfg);
+    let path = tmp("sync.jsonl");
+    trace_to(&path);
+    let (mut traced, digest_traced, events_traced) = run_once(&cfg);
+    let written = obs::stop().unwrap();
+    assert_eq!(written, vec![path.clone()]);
+    assert_eq!(
+        digest_plain, digest_traced,
+        "tracing changed the sync event order"
+    );
+    assert_eq!(events_plain, events_traced);
+    for r in plain.records.iter_mut().chain(traced.records.iter_mut()) {
+        r.wall_secs = 0.0; // the one deliberately real-time column
+    }
+    assert_eq!(
+        plain.to_csv(),
+        traced.to_csv(),
+        "tracing changed the sync RunLog"
+    );
+    let tf = read_trace(&path);
+    assert!(tf.complete, "sync trace missing its end footer");
+    assert!(!tf.spans.is_empty(), "sync trace recorded no spans");
+    obs::summary::check(&tf).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    // ---- async preset on the event-driven engine --------------------
+    let (mut acfg, anet) =
+        fig_time::preset("async-torus-16", Scale::Quick).unwrap();
+    shrink(&mut acfg);
+    acfg.network = Some(anet);
+    acfg.mode = EngineMode::Async;
+    acfg.agossip = Some(fig_time::async_torus16_policy());
+    let mut aplain = run_async_once(&acfg);
+    let apath = tmp("async.jsonl");
+    trace_to(&apath);
+    let mut atraced = run_async_once(&acfg);
+    let awritten = obs::stop().unwrap();
+    assert_eq!(awritten, vec![apath.clone()]);
+    assert_eq!(
+        aplain.event_digest, atraced.event_digest,
+        "tracing changed the async event order"
+    );
+    assert_eq!(aplain.events, atraced.events);
+    assert_eq!(aplain.nodes, atraced.nodes, "node records diverged");
+    for r in aplain
+        .merged
+        .records
+        .iter_mut()
+        .chain(atraced.merged.records.iter_mut())
+    {
+        r.wall_secs = 0.0;
+    }
+    assert_eq!(
+        aplain.merged.to_csv(),
+        atraced.merged.to_csv(),
+        "tracing changed the async RunLog"
+    );
+    let atf = read_trace(&apath);
+    assert!(atf.complete, "async trace missing its end footer");
+    assert!(
+        atf.spans.iter().any(|s| s.virt),
+        "async trace has no virtual spans"
+    );
+    obs::summary::check(&atf).unwrap();
+    let _ = std::fs::remove_file(&apath);
+}
+
 #[test]
 fn churn_rebuilds_stay_symmetric_doubly_stochastic() {
     let base = Topology::build(&TopologyKind::Torus, 16, 7);

@@ -275,6 +275,7 @@ fn parity_cfg(name: &str, nodes: usize) -> ExperimentConfig {
         encoding: Default::default(),
         agossip: None,
         transport: None,
+        observe: None,
     }
 }
 
