@@ -3,11 +3,14 @@
 //!
 //! Measures (a) end-to-end async engine runs (events/s over the full
 //! state-machine loop: local steps, quantize, broadcast, quorum, mix)
-//! at 8/16/32 nodes on a straggler-heavy torus, and (b) the virtual
+//! at 8/16/32 nodes on a straggler-heavy torus, (b) the virtual
 //! time each engine needs to reach a shared target loss — the headline
 //! number of the `async-torus-16` preset, reported here per fleet
-//! size. Reports into the shared `BENCH_*.json` pipeline; CI's
-//! bench-smoke job checks the artifact.
+//! size — and (c) the PR 8 scale rows: full async runs at 1024/4096
+//! nodes (random 4-regular) and 10k nodes (torus) with node records
+//! streamed to a sink. Reports into the shared `BENCH_*.json`
+//! pipeline (including peak RSS); CI's bench-smoke job gates the
+//! scale rows' events/s and the process memory ceiling.
 //!
 //!   cargo bench --bench micro_agossip
 //!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
@@ -19,6 +22,7 @@ use lmdfl::config::{
     BackendKind, DatasetKind, EngineMode, ExperimentConfig, LrSchedule,
     Parallelism, QuantizerKind, TopologyKind,
 };
+use lmdfl::experiments::{fig_time, Scale};
 use lmdfl::simnet::{ComputeModel, LinkModel, NetworkConfig};
 
 fn network() -> NetworkConfig {
@@ -131,5 +135,39 @@ fn main() {
         );
     }
 
+    // large-fleet scale rows: the async engine end-to-end on the PR 8
+    // preset shapes (tiny model, sparse eval, streamed node records so
+    // resident memory stays at the fleet's working set). CI's
+    // bench-smoke job gates these rows at ≥1M events/s and checks the
+    // report's peak RSS.
+    for &(nodes, name) in &[
+        (1024usize, "random-regular-1024"),
+        (4096, "random-regular-4096"),
+        (10_000, "torus-10k"),
+    ] {
+        let mut scfg =
+            fig_time::scale_config(name, nodes, true, Scale::Quick);
+        scfg.rounds = 2;
+        scfg.network = Some(fig_time::scale_network());
+        let events_per_run = {
+            let mut probe = AsyncGossipEngine::new(&scfg).unwrap();
+            probe.stream_node_records(Box::new(std::io::sink()));
+            probe.run().unwrap().events
+        };
+        b.run_elems(
+            &format!("agossip scale n={nodes} {name}"),
+            events_per_run,
+            || {
+                let mut eng = AsyncGossipEngine::new(&scfg).unwrap();
+                eng.stream_node_records(Box::new(std::io::sink()));
+                black_box(eng.run().unwrap().events);
+            },
+        );
+        println!("n={nodes} {name}: {events_per_run} events/run");
+    }
+
+    if let Some(rss) = lmdfl::bench::peak_rss_bytes() {
+        println!("peak rss: {:.1} MiB", rss as f64 / (1 << 20) as f64);
+    }
     b.finish("micro_agossip");
 }

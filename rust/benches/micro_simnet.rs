@@ -1,11 +1,13 @@
 //! Micro-bench: simnet event throughput.
 //!
 //! Measures (a) the raw event-queue schedule/pop rate and (b) full
-//! fabric rounds (links + compute + stragglers) at 16 and 64 nodes on a
-//! torus — the events-per-second figure every future scaling PR (async
-//! gossip, sharded fleets) budgets against. Reports into the shared
-//! `BENCH_*.json` pipeline; CI's bench-smoke job fails if the simnet
-//! section goes missing.
+//! fabric rounds (links + compute + stragglers) at 16/64 nodes on a
+//! torus plus the large scale fleets — 1024 and 4096 nodes on random
+//! 4-regular graphs and 10k nodes on the 100×100 torus — the
+//! events-per-second figures the scale presets gate on. Reports into
+//! the shared `BENCH_*.json` pipeline (including peak RSS); CI's
+//! bench-smoke job fails if a fabric row drops below 1M events/s or
+//! the process breaches its memory ceiling.
 //!
 //!   cargo bench --bench micro_simnet
 //!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
@@ -56,9 +58,19 @@ fn main() {
     });
 
     // full fabric rounds: events/iteration is measured once, then used
-    // as the throughput denominator for the timed runs
-    for &nodes in &[16usize, 64] {
-        let topo = Topology::build(&TopologyKind::Torus, nodes, 0);
+    // as the throughput denominator for the timed runs. The large
+    // fleets (1024 / 4096 random-regular, 10k torus) are the PR 8
+    // scale gates: CI's bench-smoke job requires ≥1M events/s on these
+    // rows and a bounded peak RSS in the JSON report.
+    let sizes: &[(usize, TopologyKind, &str)] = &[
+        (16, TopologyKind::Torus, "torus"),
+        (64, TopologyKind::Torus, "torus"),
+        (1024, TopologyKind::RandomRegular { k: 4 }, "random-regular"),
+        (4096, TopologyKind::RandomRegular { k: 4 }, "random-regular"),
+        (10_000, TopologyKind::Torus, "torus"),
+    ];
+    for &(nodes, ref kind, label) in sizes {
+        let topo = Topology::build(kind, nodes, 0);
         let net = network();
         let bytes = vec![4096u64; nodes];
 
@@ -71,7 +83,7 @@ fn main() {
 
         let mut fabric = Fabric::new(&net, &topo, 1);
         b.run_elems(
-            &format!("fabric round n={nodes} torus"),
+            &format!("fabric round n={nodes} {label}"),
             events_per_round,
             || {
                 black_box(fabric.simulate_round(4, &bytes, &bytes));
@@ -83,5 +95,8 @@ fn main() {
         );
     }
 
+    if let Some(rss) = lmdfl::bench::peak_rss_bytes() {
+        println!("peak rss: {:.1} MiB", rss as f64 / (1 << 20) as f64);
+    }
     b.finish("micro_simnet");
 }

@@ -54,13 +54,15 @@
 //! buffers are all preallocated in [`NodeCore`] / the per-neighbor
 //! estimate columns.
 
+use std::io::Write;
 use std::sync::Arc;
 
+use crate::config::json::Json;
 use crate::config::{ExperimentConfig, WireEncoding};
 use crate::data::Dataset;
 use crate::dfl::backend::LocalUpdate;
 use crate::dfl::core::{self, NodeCore};
-use crate::metrics::{RoundRecord, RunLog};
+use crate::metrics::{JsonlStream, RoundRecord, RunLog};
 use crate::quant::wire;
 use crate::simnet::clock::{
     ns_to_secs, secs_to_ns, EventQueue, VirtualTime,
@@ -95,6 +97,29 @@ pub struct NodeRecord {
     /// measured wire bytes of this round's broadcast message (the
     /// encoded [`crate::quant::wire`] frame)
     pub wire_bytes: u64,
+}
+
+impl NodeRecord {
+    /// One JSONL document — the streaming form of this record (see
+    /// [`AsyncGossipEngine::stream_node_records`]). Non-finite values
+    /// (a node that never evaluated has `local_loss = NaN`) serialize
+    /// as `null`, matching [`RunLog::to_json`]'s convention.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::num(self.node as f64)),
+            ("round", Json::num(self.round as f64)),
+            ("virtual_secs", Json::num(self.virtual_secs)),
+            ("local_loss", Json::num(self.local_loss)),
+            ("levels", Json::num(self.levels as f64)),
+            (
+                "fresh_neighbors",
+                Json::num(self.fresh_neighbors as f64),
+            ),
+            ("stale_mean", Json::num(self.stale_mean)),
+            ("forced", Json::Bool(self.forced)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+        ])
+    }
 }
 
 /// Everything an asynchronous run produces.
@@ -229,6 +254,9 @@ pub struct AsyncGossipEngine {
     timer: Timer,
     merged: RunLog,
     node_records: Vec<NodeRecord>,
+    /// when set, per-node records stream here as JSONL instead of
+    /// accumulating in `node_records` (the 10k-node memory model)
+    node_sink: Option<JsonlStream<Box<dyn Write>>>,
     /// Σ paper bits over all broadcast messages (each directed link
     /// carries one copy, so /n is the mean per-link cost)
     bits_acc: u64,
@@ -323,6 +351,7 @@ impl AsyncGossipEngine {
             timer: Timer::start(),
             merged: RunLog::new(&cfg.name),
             node_records: Vec::new(),
+            node_sink: None,
             bits_acc: 0,
             wire_acc: 0,
             link_bytes: 0,
@@ -336,6 +365,17 @@ impl AsyncGossipEngine {
             timeout_ns,
             mix_scratch: vec![0.0; param_count],
         })
+    }
+
+    /// Stream per-node records to `w` as JSONL — one
+    /// [`NodeRecord::to_json`] document per completed local round, in
+    /// the same mix order the buffered path uses — instead of
+    /// accumulating them in [`AsyncRunLog::nodes`] (which then stays
+    /// empty). A 10k-node run completes O(rounds · n) local rounds;
+    /// streaming them keeps resident memory at the fleet's working
+    /// set instead of the run's history.
+    pub fn stream_node_records(&mut self, w: Box<dyn Write>) {
+        self.node_sink = Some(JsonlStream::new(w));
     }
 
     /// Drive every node through `cfg.rounds` local rounds and drain the
@@ -377,6 +417,9 @@ impl AsyncGossipEngine {
         // flush any remaining watermark records at the final clock
         let t_end = self.queue.now();
         self.maybe_eval(t_end)?;
+        if let Some(sink) = self.node_sink.take() {
+            sink.finish()?;
+        }
         let events = self.queue.processed();
         Ok(AsyncRunLog {
             merged: self.merged,
@@ -679,7 +722,7 @@ impl AsyncGossipEngine {
                 stale.push(s);
             }
             let (self_w, w) = weights::staleness_row(
-                &self.topology.c,
+                &self.topology.sparse,
                 i,
                 &node.nbrs,
                 &stale,
@@ -720,7 +763,7 @@ impl AsyncGossipEngine {
                 &node.core.hat,
             );
             let deg = node.nbrs.len();
-            self.node_records.push(NodeRecord {
+            let rec = NodeRecord {
                 node: i,
                 round: node.round + 1,
                 virtual_secs: ns_to_secs(t),
@@ -734,7 +777,12 @@ impl AsyncGossipEngine {
                 },
                 forced,
                 wire_bytes: node.last_wire_bytes,
-            });
+            };
+            if let Some(sink) = self.node_sink.as_mut() {
+                sink.push(&rec.to_json())?;
+            } else {
+                self.node_records.push(rec);
+            }
             node.round += 1;
             node.epoch += 1;
             node.timer_armed = false;

@@ -22,8 +22,12 @@
 //!   Metropolis row unchanged, so the implied global matrix is the
 //!   symmetric doubly stochastic `C` — the synchronous mixing recovered
 //!   as the fresh-everything special case.
+//!
+//! Weights are read from the O(degree) [`SparseTopology`] rows — at 10k
+//! nodes there is no dense C to index into.
 
 use crate::linalg::Matrix;
+use crate::topology::SparseTopology;
 
 /// Exponent cap: λ^64 underflows any meaningful weight long before the
 /// cap matters, and keeps `powi` in `i32` range for pathological
@@ -44,7 +48,7 @@ pub const NEVER: u64 = u64::MAX;
 /// whose live weight is 0 (churned-away links) contribute nothing
 /// regardless of staleness.
 pub fn staleness_row(
-    c: &Matrix,
+    c: &SparseTopology,
     i: usize,
     neighbors: &[usize],
     staleness: &[u64],
@@ -65,7 +69,7 @@ pub fn staleness_row(
         } else {
             lambda.powi(staleness[idx].min(MAX_STALE_EXP) as i32)
         };
-        let wij = c[(i, j)] * decay;
+        let wij = c.weight(i, j) * decay;
         w.push(wij);
         sum += wij;
     }
@@ -76,7 +80,7 @@ pub fn staleness_row(
 /// (`staleness[i][idx]` aligned with `adj[i]`). Test/diagnostic helper —
 /// the engine itself only ever materializes single rows.
 pub fn staleness_matrix(
-    c: &Matrix,
+    c: &SparseTopology,
     adj: &[Vec<usize>],
     staleness: &[Vec<u64>],
     lambda: f64,
@@ -110,8 +114,11 @@ mod tests {
         let topo = Topology::build(&TopologyKind::Torus, 16, 0);
         let stale: Vec<Vec<u64>> =
             topo.adj.iter().map(|a| vec![0; a.len()]).collect();
-        let m = staleness_matrix(&topo.c, &topo.adj, &stale, 0.5);
-        assert!(m.max_abs_diff(&topo.c) < 1e-12, "fresh != Metropolis");
+        let m = staleness_matrix(&topo.sparse, &topo.adj, &stale, 0.5);
+        assert!(
+            m.max_abs_diff(topo.dense()) < 1e-12,
+            "fresh != Metropolis"
+        );
         assert!(m.is_doubly_stochastic(1e-9));
         assert!(m.is_symmetric(1e-12));
     }
@@ -121,8 +128,8 @@ mod tests {
         let topo = Topology::build(&TopologyKind::Ring, 8, 0);
         let stale: Vec<Vec<u64>> =
             topo.adj.iter().map(|a| vec![7; a.len()]).collect();
-        let m = staleness_matrix(&topo.c, &topo.adj, &stale, 1.0);
-        assert!(m.max_abs_diff(&topo.c) < 1e-12);
+        let m = staleness_matrix(&topo.sparse, &topo.adj, &stale, 1.0);
+        assert!(m.max_abs_diff(topo.dense()) < 1e-12);
     }
 
     #[test]
@@ -133,7 +140,7 @@ mod tests {
         let topo = Topology::build(&TopologyKind::Ring, 6, 0);
         let stale = vec![NEVER; topo.adj[0].len()];
         let (self_w, w) =
-            staleness_row(&topo.c, 0, &topo.adj[0], &stale, 1.0);
+            staleness_row(&topo.sparse, 0, &topo.adj[0], &stale, 1.0);
         assert!(w.iter().all(|&x| x == 0.0), "NEVER must zero weights");
         assert!((self_w - 1.0).abs() < 1e-12);
     }
@@ -144,9 +151,9 @@ mod tests {
         let fresh = vec![0u64; topo.adj[0].len()];
         let stale = vec![3u64; topo.adj[0].len()];
         let (self_f, w_f) =
-            staleness_row(&topo.c, 0, &topo.adj[0], &fresh, 0.5);
+            staleness_row(&topo.sparse, 0, &topo.adj[0], &fresh, 0.5);
         let (self_s, w_s) =
-            staleness_row(&topo.c, 0, &topo.adj[0], &stale, 0.5);
+            staleness_row(&topo.sparse, 0, &topo.adj[0], &stale, 0.5);
         assert!(self_s > self_f, "self weight must absorb decayed mass");
         for (a, b) in w_s.iter().zip(&w_f) {
             assert!(a < b, "stale neighbor weight must shrink");
@@ -188,7 +195,7 @@ mod tests {
                 })
                 .collect();
             let m =
-                staleness_matrix(&topo.c, &topo.adj, &stale, lambda);
+                staleness_matrix(&topo.sparse, &topo.adj, &stale, lambda);
             for (i, s) in row_sums(&m, n).iter().enumerate() {
                 assert!(
                     (s - 1.0).abs() < 1e-9,
@@ -208,7 +215,7 @@ mod tests {
             let fresh: Vec<Vec<u64>> =
                 topo.adj.iter().map(|a| vec![0; a.len()]).collect();
             let mf =
-                staleness_matrix(&topo.c, &topo.adj, &fresh, lambda);
+                staleness_matrix(&topo.sparse, &topo.adj, &fresh, lambda);
             assert!(mf.is_doubly_stochastic(1e-9));
         });
     }

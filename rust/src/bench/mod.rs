@@ -16,6 +16,7 @@
 //! {
 //!   "schema": "lmdfl-bench-v1",
 //!   "bench": "micro_runtime",
+//!   "peak_rss_bytes": 123456789,
 //!   "results": [
 //!     {"name": "...", "mean_s": 1e-3, "std_s": 1e-5, "min_s": 9e-4,
 //!      "p50_s": 1e-3, "p95_s": 1.2e-3, "samples": 20,
@@ -23,6 +24,10 @@
 //!   ]
 //! }
 //! ```
+//!
+//! `peak_rss_bytes` is the process high-water mark
+//! ([`peak_rss_bytes`]); it is omitted on platforms without
+//! `/proc/self/status`.
 //!
 //! Environment knobs: `LMDFL_BENCH_QUICK=1` shrinks the measurement budget
 //! (CI smoke), `LMDFL_BENCH_JSON=<dir>` enables the JSON artifact.
@@ -234,16 +239,22 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Full machine-readable report for a named bench target.
+    /// Full machine-readable report for a named bench target. Includes
+    /// the process's peak RSS (bytes) when the platform exposes it, so
+    /// CI can gate memory alongside throughput.
     pub fn to_json(&self, bench: &str) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("schema", Json::str("lmdfl-bench-v1")),
             ("bench", Json::str(bench)),
-            (
-                "results",
-                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
-            ),
-        ])
+        ];
+        if let Some(rss) = peak_rss_bytes() {
+            pairs.push(("peak_rss_bytes", Json::num(rss as f64)));
+        }
+        pairs.push((
+            "results",
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        ));
+        Json::obj(pairs)
     }
 
     /// Write `BENCH_<bench>.json` into `dir` (created if missing).
@@ -273,6 +284,24 @@ impl Bencher {
             Err(e) => eprintln!("bench json write failed: {e}"),
         }
     }
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where the kernel doesn't expose it.
+/// A high-water mark, not an instantaneous figure: it covers everything
+/// the process touched since start, which is exactly what the scale
+/// benches gate — a 10k-node run must stay under its memory ceiling at
+/// its *worst* moment.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 =
+                rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
 }
 
 /// Opaque value sink to stop the optimizer deleting benchmarked work.
@@ -347,6 +376,24 @@ mod tests {
         // serialized form parses back
         let text = j.to_pretty();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn peak_rss_is_positive_where_supported() {
+        if let Some(rss) = peak_rss_bytes() {
+            // any live process has touched at least a page
+            assert!(rss >= 4096, "implausible peak RSS {rss}");
+            let b = Bencher {
+                measure_secs: 0.0,
+                warmup_secs: 0.0,
+                samples: 0,
+                results: Vec::new(),
+            };
+            // the high-water mark is monotone, so the report's figure
+            // can only be >= the earlier reading
+            let j = b.to_json("rss");
+            assert!(j.get_f64("peak_rss_bytes").unwrap() >= rss as f64);
+        }
     }
 
     #[test]

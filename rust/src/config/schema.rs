@@ -37,6 +37,10 @@ pub enum TopologyKind {
     Star,
     /// 2D torus grid (rows x cols = N) with Metropolis–Hastings weights.
     Torus,
+    /// Random k-regular graph (seeded pairing model) with
+    /// Metropolis–Hastings weights — the sparse constant-degree
+    /// topology the large-scale presets run on.
+    RandomRegular { k: usize },
 }
 
 impl TopologyKind {
@@ -48,6 +52,7 @@ impl TopologyKind {
             TopologyKind::Random { .. } => "random",
             TopologyKind::Star => "star",
             TopologyKind::Torus => "torus",
+            TopologyKind::RandomRegular { .. } => "random_regular",
         }
     }
 
@@ -56,6 +61,10 @@ impl TopologyKind {
             TopologyKind::Random { p } => Json::obj(vec![
                 ("kind", Json::str("random")),
                 ("p", Json::num(*p)),
+            ]),
+            TopologyKind::RandomRegular { k } => Json::obj(vec![
+                ("kind", Json::str("random_regular")),
+                ("k", Json::num(*k as f64)),
             ]),
             other => Json::obj(vec![("kind", Json::str(other.name()))]),
         }
@@ -73,6 +82,9 @@ impl TopologyKind {
             "torus" => TopologyKind::Torus,
             "random" => TopologyKind::Random {
                 p: j.get_f64("p").unwrap_or(0.4),
+            },
+            "random_regular" => TopologyKind::RandomRegular {
+                k: j.get_f64("k").unwrap_or(4.0) as usize,
             },
             other => return Err(bad(format!("unknown topology '{other}'"))),
         })
@@ -552,6 +564,17 @@ impl ExperimentConfig {
                 return Err(bad("topology.p must be in [0,1]"));
             }
         }
+        if let TopologyKind::RandomRegular { k } = self.topology {
+            if k < 2 {
+                return Err(bad("topology.k must be >= 2"));
+            }
+            if k >= self.nodes {
+                return Err(bad("topology.k must be < nodes"));
+            }
+            if (self.nodes * k) % 2 != 0 {
+                return Err(bad("topology requires nodes*k even"));
+            }
+        }
         match &self.quantizer {
             QuantizerKind::Qsgd { s }
             | QuantizerKind::Natural { s }
@@ -734,6 +757,27 @@ mod tests {
         let text = cfg.to_json().to_pretty();
         let back = ExperimentConfig::parse(&text).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn random_regular_roundtrip_and_validation() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 16;
+        cfg.topology = TopologyKind::RandomRegular { k: 4 };
+        cfg.validate().unwrap();
+        let text = cfg.to_json().to_pretty();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back.topology, cfg.topology);
+        // degree floor
+        cfg.topology = TopologyKind::RandomRegular { k: 1 };
+        assert!(cfg.validate().is_err());
+        // degree must leave at least one non-neighbor
+        cfg.topology = TopologyKind::RandomRegular { k: 16 };
+        assert!(cfg.validate().is_err());
+        // pairing model needs an even number of stubs
+        cfg.nodes = 5;
+        cfg.topology = TopologyKind::RandomRegular { k: 3 };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

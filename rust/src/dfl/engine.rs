@@ -29,9 +29,14 @@
 //! **persistent** worker pool sized by `cfg.parallelism`
 //! (`auto` / `off` / N) — the workers are spawned once per engine and
 //! parked between phases, so a round costs condvar hand-offs, not
-//! thread spawns. The per-element inner loops (delta, quantize,
-//! dequantize-apply, mixing) run as the batch kernels of
-//! [`crate::quant::kernels`]:
+//! thread spawns. Nodes are not dispatched individually: a
+//! [`crate::util::multiplex::NodeGroups`] partition multiplexes
+//! bounded contiguous node groups onto the workers (10k nodes ≈ 160
+//! groups, many per worker), and each node ships its per-round
+//! outputs to the reducer through the per-group
+//! [`crate::util::multiplex::GroupMailboxes`]. The per-element inner
+//! loops (delta, quantize, dequantize-apply, mixing) run as the batch
+//! kernels of [`crate::quant::kernels`]:
 //!
 //! 1. **per-node phase** — quantized mixing-delta broadcast (step A),
 //!    τ local-SGD steps (step B), the doubly-adaptive level update
@@ -59,6 +64,7 @@ use crate::dfl::core::{self, NodeCore};
 use crate::metrics::{RoundRecord, RunLog};
 use crate::quant::Quantizer;
 use crate::topology::Topology;
+use crate::util::multiplex::{Envelope, GroupMailboxes, NodeGroups};
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
@@ -96,14 +102,6 @@ impl NodeRound {
     }
 }
 
-/// Per-node state: the shared [`NodeCore`] (learning state + scratch,
-/// also used by the async engine) plus this engine's per-round outputs.
-struct NodeState {
-    core: NodeCore,
-    /// per-round outputs for the sequential reduction
-    out: NodeRound,
-}
-
 /// Options beyond [`ExperimentConfig`] (failure injection, eval subsample).
 #[derive(Clone, Debug)]
 pub struct EngineOptions {
@@ -132,13 +130,22 @@ pub struct DflEngine {
     pub cfg: ExperimentConfig,
     pub topology: Topology,
     pub(crate) dataset: Dataset,
-    nodes: Vec<NodeState>,
+    nodes: Vec<NodeCore>,
     backends: Vec<Box<dyn LocalUpdate>>,
     param_count: usize,
     opts: EngineOptions,
     rng: Rng,
     /// round executor sized by `cfg.parallelism`
     pool: WorkerPool,
+    /// node groups multiplexed over the pool: the dispatch unit of
+    /// every phase, bounded at [`crate::util::multiplex::GROUP_NODES`]
+    /// nodes each so 10k-node fleets don't mean 10k work items
+    groups: NodeGroups,
+    /// per-group shared mailboxes carrying each node's [`NodeRound`]
+    /// outputs to the sequential reduction
+    round_box: GroupMailboxes<NodeRound>,
+    /// scratch: envelopes drained from `round_box`, node order
+    round_in: Vec<Envelope<NodeRound>>,
     /// scratch: per-node mixing accumulators
     mix_buf: Vec<Vec<f32>>,
     /// scratch: per-node wire bytes handed to the simnet fabric
@@ -179,17 +186,16 @@ impl DflEngine {
         let mut rng = Rng::new(cfg.seed);
         // paper: identical initial params at every node
         let init = backends[0].init_params(&mut rng.split(0xBEEF));
-        let nodes: Vec<NodeState> = NodeCore::build_fleet(
+        let nodes: Vec<NodeCore> = NodeCore::build_fleet(
             &cfg,
             &dataset,
             param_count,
             &init,
             &mut rng,
-        )
-        .into_iter()
-        .map(|core| NodeState { core, out: NodeRound::default() })
-        .collect();
+        );
         let pool = WorkerPool::from_parallelism(cfg.parallelism, n);
+        let groups = NodeGroups::for_pool(n, pool.workers());
+        let round_box = GroupMailboxes::new(&groups);
         Ok(DflEngine {
             cfg,
             topology,
@@ -200,6 +206,9 @@ impl DflEngine {
             opts,
             rng,
             pool,
+            groups,
+            round_box,
+            round_in: Vec::with_capacity(n),
             mix_buf: vec![vec![0.0; param_count]; n],
             q2_wire: Vec::with_capacity(n),
             q1_wire: Vec::with_capacity(n),
@@ -226,14 +235,14 @@ impl DflEngine {
     /// Average model u_k = X_k · 1/N.
     pub fn average_model(&self) -> Vec<f32> {
         core::average_params(
-            self.nodes.iter().map(|n| n.core.params.as_slice()),
+            self.nodes.iter().map(|n| n.params.as_slice()),
             self.param_count,
         )
     }
 
     /// Node i's current parameters.
     pub fn node_params(&self, i: usize) -> &[f32] {
-        &self.nodes[i].core.params
+        &self.nodes[i].params
     }
 
     /// Max pairwise L∞ disagreement across node params (consensus gap).
@@ -241,7 +250,7 @@ impl DflEngine {
         let u = self.average_model();
         let mut gap = 0.0f64;
         for node in &self.nodes {
-            for (&p, &m) in node.core.params.iter().zip(&u) {
+            for (&p, &m) in node.params.iter().zip(&u) {
                 gap = gap.max((p as f64 - m as f64).abs());
             }
         }
@@ -307,28 +316,30 @@ impl DflEngine {
         let dataset = &self.dataset;
         let encoding = self.cfg.encoding;
         let round_key = k as u32;
-        self.pool.run2(
+        let round_box = &self.round_box;
+        self.groups.run2(
+            &self.pool,
             &mut self.nodes,
             &mut self.backends,
             |i, node, backend| {
-                node.out = NodeRound::default();
+                let mut out = NodeRound::default();
 
                 // step A: mixing-delta message (Eq. 22 first term)
                 // q2 = Q(x_k − x̂);  x̂ += q2  →  x̂ = X̂_k
-                let dropped = drop_prob > 0.0
-                    && node.core.rng.uniform() < drop_prob;
+                let dropped =
+                    drop_prob > 0.0 && node.rng.uniform() < drop_prob;
                 if !dropped {
-                    let st = node.core.broadcast_delta(
+                    let st = node.broadcast_delta(
                         encoding, round_key, 0, i as u32,
                     )?;
-                    node.out.q2_bits = st.paper_bits;
-                    node.out.q2_wire_bytes = st.wire_bytes;
+                    out.q2_bits = st.paper_bits;
+                    out.q2_wire_bytes = st.wire_bytes;
                 }
                 // (dropped: receivers keep the stale estimate)
 
                 // step B: τ local SGD steps (Eq. 18)
                 let train_span = crate::obs::span("train");
-                let local_loss = node.core.local_steps(
+                let local_loss = node.local_steps(
                     backend.as_mut(),
                     dataset,
                     tau,
@@ -338,21 +349,31 @@ impl DflEngine {
                 drop(train_span);
 
                 // step C: doubly-adaptive level update (Alg. 3 step 8)
-                node.core.observe_local_loss(local_loss);
+                node.observe_local_loss(local_loss);
 
                 // step D: local-update delta q1 (Alg. 2 step 8)
                 // q1 = Q(x_{k,τ} − x̂_k);  x̂ += q1  →  x̂ = X̂_{k,τ}
-                let st = node.core.broadcast_delta(
+                let st = node.broadcast_delta(
                     encoding, round_key, 2, i as u32,
                 )?;
-                node.out.q1_bits = st.paper_bits;
-                node.out.q1_wire_bytes = st.wire_bytes;
-                node.out.distortion = st.distortion;
+                out.q1_bits = st.paper_bits;
+                out.q1_wire_bytes = st.wire_bytes;
+                out.distortion = st.distortion;
+                // ship the round outputs to the reducer through the
+                // group mailbox (self-addressed: node i's record)
+                round_box.post_to(i, i, out);
                 Ok(())
             },
         )?;
 
         // ---- sequential reduction (node order, worker-count invariant) --
+        // Draining group boxes in index order yields envelopes in node
+        // order (each box sorts by (to, from)), so every accumulation
+        // below — the f64 distortion sum included — runs in exactly
+        // the order the per-node field scan used to.
+        self.round_in.clear();
+        self.round_box.drain_all(&mut self.round_in);
+        debug_assert_eq!(self.round_in.len(), n);
         let mut q1_bits_paper = 0u64;
         let mut q2_bits_paper = 0u64;
         let mut distortion_sum = 0.0f64;
@@ -362,16 +383,22 @@ impl DflEngine {
         // still transmitted, so it counts at the substituted q1 size —
         // the same convention run_simulated charges the fabric with
         let mut wire_link_bytes = 0u64;
-        for i in 0..n {
-            let out = self.nodes[i].out;
+        self.q2_wire.clear();
+        self.q1_wire.clear();
+        for env in &self.round_in {
+            let (i, out) = (env.to, env.msg);
+            debug_assert_eq!(i, self.q2_wire.len());
             q1_bits_paper += out.q1_bits;
             q2_bits_paper += out.q2_bits;
             distortion_sum += out.distortion;
-            levels_now += self.nodes[i].core.quantizer.levels();
+            levels_now += self.nodes[i].quantizer.levels();
             let q2_eff = out.effective_q2_wire_bytes();
             self.node_wire[i] += q2_eff + out.q1_wire_bytes;
             wire_link_bytes += (q2_eff + out.q1_wire_bytes)
                 * self.topology.adj[i].len() as u64;
+            // per-node wire sizes this round, kept for the fabric
+            self.q2_wire.push(q2_eff);
+            self.q1_wire.push(out.q1_wire_bytes);
         }
         levels_now /= n;
 
@@ -383,26 +410,50 @@ impl DflEngine {
         // quantizers) never erases local SGD progress (CHOCO-SGD [21]).
         // Phase 1: accumulate mix_i = Σ_j c_ji x̂_j (reads frozen hats).
         let mix_span = crate::obs::span("mix");
-        let c = &self.topology.c;
+        // O(degree) accumulation over the sparse row of C. The dense
+        // loop read column i in ascending j (self included at j == i);
+        // C is bitwise symmetric and the sparse row is sorted by
+        // column, so merging the self weight in at position i
+        // reproduces the exact f32 accumulation order.
+        let sp = &self.topology.sparse;
         let nodes = &self.nodes;
-        self.pool.run(&mut self.mix_buf, |i, out| {
+        self.groups.run(&self.pool, &mut self.mix_buf, |i, out| {
             out.iter_mut().for_each(|x| *x = 0.0);
-            for j in 0..n {
-                let w = c[(j, i)] as f32;
+            let self_w = sp.self_weight(i) as f32;
+            let mut self_done = false;
+            for &(j, w) in sp.row(i) {
+                if !self_done && j as usize > i {
+                    if self_w != 0.0 {
+                        crate::quant::kernels::axpy(
+                            out,
+                            self_w,
+                            &nodes[i].hat,
+                        );
+                    }
+                    self_done = true;
+                }
+                let w = w as f32;
                 if w == 0.0 {
                     continue;
                 }
-                crate::quant::kernels::axpy(out, w, &nodes[j].core.hat);
+                crate::quant::kernels::axpy(
+                    out,
+                    w,
+                    &nodes[j as usize].hat,
+                );
+            }
+            if !self_done && self_w != 0.0 {
+                crate::quant::kernels::axpy(out, self_w, &nodes[i].hat);
             }
             Ok(())
         })?;
         // Phase 2: apply the consensus correction.
         let mix_buf = &self.mix_buf;
-        self.pool.run(&mut self.nodes, |i, node| {
+        self.groups.run(&self.pool, &mut self.nodes, |i, node| {
             crate::quant::kernels::add_delta(
-                &mut node.core.params,
+                &mut node.params,
                 &mix_buf[i],
-                &node.core.hat,
+                &node.hat,
             );
             Ok(())
         })?;
@@ -463,13 +514,55 @@ impl DflEngine {
         result
     }
 
+    /// Run all configured rounds, streaming each finished
+    /// [`RoundRecord`] to `sink` instead of buffering the run — the
+    /// 10k-node memory model: what stays resident is the returned
+    /// [`crate::metrics::RunSummary`], not O(rounds) records. The
+    /// record sequence is identical to [`run`](Self::run) /
+    /// [`run_simulated`] (one shared round loop), so a
+    /// [`crate::metrics::CsvStream`] sink produces byte-identical CSV
+    /// to the buffered log's `to_csv` (`rust/tests/streaming_parity.rs`).
+    pub fn run_streamed(
+        &mut self,
+        fabric: Option<&mut crate::simnet::Fabric>,
+        sink: &mut dyn crate::metrics::RecordSink,
+    ) -> anyhow::Result<crate::metrics::RunSummary> {
+        let saved_drop_prob = self.opts.drop_prob;
+        if let Some(f) = fabric.as_ref() {
+            self.opts.drop_prob = f.link_drop_prob();
+        }
+        let mut summary = crate::metrics::RunSummary::default();
+        let result = self.run_inner(fabric, |rec| {
+            summary.observe(&rec);
+            sink.record(&rec)
+        });
+        self.opts.drop_prob = saved_drop_prob;
+        result?;
+        Ok(summary)
+    }
+
     /// Shared driver for [`run`](Self::run) / [`run_simulated`]: one
     /// round loop, one cumulative-bits convention.
     fn run_with(
         &mut self,
-        mut fabric: Option<&mut crate::simnet::Fabric>,
+        fabric: Option<&mut crate::simnet::Fabric>,
     ) -> anyhow::Result<RunLog> {
         let mut log = RunLog::new(&self.cfg.name);
+        self.run_inner(fabric, |rec| {
+            log.push(rec);
+            Ok(())
+        })?;
+        Ok(log)
+    }
+
+    /// The one round loop behind every run entry point: emits each
+    /// finished record through `emit` (buffered push or streaming
+    /// sink — same records either way).
+    fn run_inner(
+        &mut self,
+        mut fabric: Option<&mut crate::simnet::Fabric>,
+        mut emit: impl FnMut(RoundRecord) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
         let mut cum_bits = 0u64;
         let mut cum_wire = 0u64;
         for k in 0..self.cfg.rounds {
@@ -480,14 +573,9 @@ impl DflEngine {
             }
             let mut rec = self.round(k)?;
             if let Some(f) = fabric.as_deref_mut() {
-                self.q2_wire.clear();
-                self.q1_wire.clear();
-                for node in &self.nodes {
-                    // same substitution as the reduction above — see
-                    // NodeRound::effective_q2_wire_bytes
-                    self.q2_wire.push(node.out.effective_q2_wire_bytes());
-                    self.q1_wire.push(node.out.q1_wire_bytes);
-                }
+                // per-node wire sizes were filled by the round's
+                // reduction (same q2 substitution — see
+                // NodeRound::effective_q2_wire_bytes)
                 let timing = f.simulate_round(
                     self.cfg.tau,
                     &self.q2_wire,
@@ -505,9 +593,9 @@ impl DflEngine {
             }
             cum_bits += rec.bits_per_link;
             rec.bits_per_link = cum_bits;
-            log.push(rec);
+            emit(rec)?;
         }
-        Ok(log)
+        Ok(())
     }
 
     /// Access the engine rng (tests).
@@ -519,7 +607,7 @@ impl DflEngine {
     /// schedules, e.g. the Fig. 4 descending ablation).
     pub fn set_all_levels(&mut self, s: usize) {
         for node in &mut self.nodes {
-            node.core.quantizer.set_levels(s);
+            node.quantizer.set_levels(s);
         }
     }
 
@@ -530,7 +618,7 @@ impl DflEngine {
         mut make: impl FnMut() -> Box<dyn Quantizer>,
     ) {
         for node in &mut self.nodes {
-            node.core.quantizer = make();
+            node.quantizer = make();
         }
     }
 }

@@ -99,6 +99,41 @@ impl Trainer {
         trainer.engine.run_simulated(&mut fabric)
     }
 
+    /// Streamed variant of [`run`](Self::run) /
+    /// [`run_simulated`](Self::run_simulated): drives the same rounds
+    /// but hands each [`RoundRecord`](crate::metrics::RoundRecord) to
+    /// `sink` instead of buffering a [`RunLog`], so resident memory
+    /// stays O(fleet) instead of O(fleet + rounds) on large runs.
+    /// Simulates on a fabric when the config has a `network:` section,
+    /// otherwise runs the ideal engine. Sync engine only: async runs
+    /// stream per-node records instead (see
+    /// [`AsyncGossipEngine::stream_node_records`]).
+    ///
+    /// [`AsyncGossipEngine::stream_node_records`]:
+    ///     crate::agossip::AsyncGossipEngine::stream_node_records
+    pub fn run_streamed(
+        cfg: &ExperimentConfig,
+        sink: &mut dyn crate::metrics::RecordSink,
+    ) -> anyhow::Result<crate::metrics::RunSummary> {
+        anyhow::ensure!(
+            cfg.mode != crate::config::EngineMode::Async,
+            "streamed round records are a sync-engine feature; async \
+             runs stream per-node JSONL records via \
+             AsyncGossipEngine::stream_node_records"
+        );
+        let mut trainer = Self::build(cfg)?;
+        match cfg.network.clone() {
+            Some(net) => {
+                let topology =
+                    Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+                let mut fabric =
+                    crate::simnet::Fabric::new(&net, &topology, cfg.seed);
+                trainer.engine.run_streamed(Some(&mut fabric), sink)
+            }
+            None => trainer.engine.run_streamed(None, sink),
+        }
+    }
+
     /// Run on the threaded message-passing runtime instead.
     pub fn run_threaded(
         cfg: &ExperimentConfig,

@@ -283,15 +283,17 @@ fn node_ctx<'a>(
     node: usize,
 ) -> NodeCtx<'a> {
     let neighbors: Vec<usize> = topology.neighbors(node).to_vec();
+    // C is bitwise symmetric, so reading row `node` of the sparse form
+    // gives the same f32 weights the dense column lookup produced
     let weights: Vec<f32> = neighbors
         .iter()
-        .map(|&j| topology.c[(j, node)] as f32)
+        .map(|&j| topology.weight(node, j) as f32)
         .collect();
     NodeCtx {
         node,
         neighbors,
         weights,
-        self_weight: topology.c[(node, node)] as f32,
+        self_weight: topology.sparse.self_weight(node) as f32,
         part,
         dataset,
         init,

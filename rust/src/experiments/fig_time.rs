@@ -39,9 +39,24 @@ pub fn preset(
         "async-torus-16" => {
             Ok((async_torus16_config(scale), async_torus16_network()))
         }
+        "random-regular-4096" => Ok((
+            scale_config(name, 4096, false, scale),
+            scale_network(),
+        )),
+        "torus-10k" => {
+            Ok((scale_config(name, 10_000, false, scale), scale_network()))
+        }
+        "async-random-regular-4096" => Ok((
+            scale_config(name, 4096, true, scale),
+            scale_network(),
+        )),
+        "async-torus-10k" => {
+            Ok((scale_config(name, 10_000, true, scale), scale_network()))
+        }
         other => anyhow::bail!(
             "unknown fig-time preset '{other}' \
-             (have: torus-16, async-torus-16)"
+             (have: torus-16, async-torus-16, random-regular-4096, \
+             torus-10k, async-random-regular-4096, async-torus-10k)"
         ),
     }
 }
@@ -58,9 +73,14 @@ pub fn run_preset(
     match name {
         "async-torus-16" => run_sync_vs_async(cfg, net),
         "torus-16" => run(cfg, net),
+        "random-regular-4096"
+        | "torus-10k"
+        | "async-random-regular-4096"
+        | "async-torus-10k" => run_scale(cfg, net),
         other => anyhow::bail!(
             "unknown fig-time preset '{other}' \
-             (have: torus-16, async-torus-16)"
+             (have: torus-16, async-torus-16, random-regular-4096, \
+             torus-10k, async-random-regular-4096, async-torus-10k)"
         ),
     }
 }
@@ -142,6 +162,100 @@ pub fn async_torus16_policy() -> AsyncConfig {
         staleness_lambda: 0.5,
         quorum_timeout_s: 0.5,
     }
+}
+
+/// Large-fleet scale preset config: `nodes` machines on a sparse
+/// constant-degree graph (random 4-regular, or the 100×100 torus), a
+/// tiny model and dataset, and a sparse eval cadence — what these
+/// presets measure is the *fabric* (events per second, resident
+/// memory, mixing throughput), not learning quality.
+/// `rust/tests/simnet_determinism.rs` pins their event digests and the
+/// bench suite gates their throughput and peak RSS.
+pub fn scale_config(
+    name: &str,
+    nodes: usize,
+    async_mode: bool,
+    scale: Scale,
+) -> ExperimentConfig {
+    let (train_per_node, rounds) = match scale {
+        Scale::Quick => (2, 8),
+        Scale::Full => (8, 32),
+    };
+    ExperimentConfig {
+        name: format!("fig-time-{name}"),
+        seed: 29,
+        nodes,
+        tau: 2,
+        rounds,
+        batch_size: 8,
+        lr: LrSchedule::fixed(0.05),
+        topology: if name.contains("torus") {
+            TopologyKind::Torus
+        } else {
+            TopologyKind::RandomRegular { k: 4 }
+        },
+        quantizer: QuantizerKind::LloydMax { s: 8, iters: 4 },
+        dataset: DatasetKind::Blobs {
+            train: nodes * train_per_node,
+            test: (nodes / 8).max(64),
+            dim: 10,
+            classes: 4,
+        },
+        backend: BackendKind::RustMlp { hidden: vec![8] },
+        // uniform shards: at 1-2 samples per node the label-skewed
+        // split would leave most of a 10k fleet empty
+        noniid_fraction: 0.0,
+        link_bps: 1e8,
+        eval_every: 8,
+        parallelism: crate::config::Parallelism::Auto,
+        network: None, // filled by the driver
+        mode: if async_mode {
+            EngineMode::Async
+        } else {
+            EngineMode::Sync
+        },
+        encoding: Default::default(),
+        agossip: if async_mode {
+            Some(async_torus16_policy())
+        } else {
+            None
+        },
+        transport: None,
+        observe: None,
+    }
+}
+
+/// Fast, mildly heterogeneous fabric for the scale presets: event
+/// volume comes from the fleet size, so links are quick and stragglers
+/// rare — the regime where events-per-second is the binding metric.
+pub fn scale_network() -> NetworkConfig {
+    NetworkConfig {
+        link: LinkModel {
+            latency_s: 0.001,
+            bandwidth_bps: 1e8,
+            jitter_s: 1e-4,
+            drop_prob: 0.0,
+        },
+        link_hetero_spread: 0.2,
+        compute: ComputeModel {
+            base_step_s: 1e-3,
+            hetero_spread: 0.2,
+            straggler_prob: 0.05,
+            straggler_slowdown: 4.0,
+        },
+        churn: Default::default(),
+    }
+}
+
+/// Run a scale preset: one curve, the engine picked by the preset's
+/// `mode:` (the async variants carry their `agossip:` policy).
+pub fn run_scale(
+    mut cfg: ExperimentConfig,
+    net: NetworkConfig,
+) -> anyhow::Result<Vec<Curve>> {
+    cfg.network = Some(net);
+    let label = cfg.name.clone();
+    Ok(vec![run_simulated_labeled(cfg, &label)?])
 }
 
 /// The two engine curves of the async preset: identical quantizer,
@@ -300,6 +414,59 @@ mod tests {
         assert!(preset("nope", Scale::Quick).is_err());
         let (cfg, net) = preset("torus-16", Scale::Quick).unwrap();
         assert!(run_preset("nope", cfg, net).is_err());
+    }
+
+    #[test]
+    fn scale_presets_build() {
+        for name in [
+            "random-regular-4096",
+            "torus-10k",
+            "async-random-regular-4096",
+            "async-torus-10k",
+        ] {
+            let (cfg, _net) = preset(name, Scale::Quick).unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(
+                cfg.mode == EngineMode::Async,
+                name.starts_with("async-"),
+                "{name}: wrong engine mode"
+            );
+            assert_eq!(cfg.agossip.is_some(), name.starts_with("async-"));
+            if name.contains("torus") {
+                assert_eq!(cfg.nodes, 10_000);
+                assert!(matches!(cfg.topology, TopologyKind::Torus));
+            } else {
+                assert_eq!(cfg.nodes, 4096);
+                assert!(matches!(
+                    cfg.topology,
+                    TopologyKind::RandomRegular { k: 4 }
+                ));
+            }
+            // the fabric metric presets evaluate sparsely
+            assert!(cfg.eval_every > 1);
+        }
+    }
+
+    #[test]
+    fn shrunk_scale_preset_runs_both_engines() {
+        // the full fleets belong to the bench suite; smoke-shrink the
+        // preset to 64 nodes and drive both engine paths through
+        // run_preset's dispatch
+        for name in ["random-regular-4096", "async-random-regular-4096"]
+        {
+            let (mut cfg, net) = preset(name, Scale::Quick).unwrap();
+            cfg.nodes = 64;
+            cfg.rounds = 4;
+            cfg.dataset = DatasetKind::Blobs {
+                train: 128,
+                test: 64,
+                dim: 10,
+                classes: 4,
+            };
+            let curves = run_preset(name, cfg, net).unwrap();
+            assert_eq!(curves.len(), 1, "{name}");
+            assert_eq!(curves[0].log.records.len(), 4, "{name}");
+        }
     }
 
     #[test]

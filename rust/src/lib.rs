@@ -52,7 +52,12 @@
 //! can emit the paper's loss-vs-time series; `lmdfl fig-time --preset
 //! torus-16` compares LM-DFL / QSGD / doubly-adaptive on a
 //! bandwidth-constrained torus. Configure via the `network:` config
-//! section or the `--net-*` CLI flags.
+//! section or the `--net-*` CLI flags. The fabric scales to
+//! 10 000-node fleets: sparse O(degree) mixing state
+//! ([`topology::SparseTopology`], power-iteration ζ), multiplexed
+//! node groups over the worker pool, arena-recycled events, and
+//! streamed run output (`--stream-csv`, presets
+//! `random-regular-4096` / `torus-10k` and their `async-` variants).
 //!
 //! ## Asynchronous gossip (agossip)
 //!

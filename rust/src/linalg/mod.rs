@@ -5,8 +5,12 @@
 //! cyclic Jacobi eigensolver (`eigen`) to compute the second-largest
 //! absolute eigenvalue ζ of the (symmetric, doubly-stochastic) confusion
 //! matrix — the quantity the paper's convergence bounds are written in.
+//! At scale the dense eigensolver is replaced by deflated power
+//! iteration over sparse matvecs (`power`); the Jacobi path stays as
+//! the small-n bit-identity oracle.
 
 pub mod eigen;
+pub mod power;
 
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]

@@ -29,7 +29,10 @@ const USAGE: &str = "\
 lmdfl <command> [options]
 
 commands:
-  train      --config <file.json> [--threaded] [--simulate] [--csv out.csv]
+  train      --config <file.json> [--threaded] [--simulate]
+             [--csv out.csv] [--stream-csv out.csv]
+             (--stream-csv writes each round as it finishes instead of
+             buffering the run log — the large-fleet memory model)
              or inline: --nodes N --rounds K --tau T --quantizer q --s S
                         --dataset synth_mnist|synth_cifar|blobs --lr F
                         --parallelism auto|off|N   (matrix-engine workers)
@@ -61,8 +64,11 @@ commands:
   fig6       --dataset mnist|cifar [--full]
   fig7       [--full]
   fig8       --dataset mnist|cifar [--variable-lr] [--full]
-  fig-time   --preset torus-16|async-torus-16 [--target-loss F] [--full]
-  topo       --kind full|ring|disconnected|star|torus|random --nodes N
+  fig-time   --preset torus-16|async-torus-16|random-regular-4096|
+             async-random-regular-4096|torus-10k|async-torus-10k
+             [--target-loss F] [--full]
+  topo       --kind full|ring|disconnected|star|torus|random|
+             random_regular --nodes N [--p F] [--k N]
   quant      --d N --s N
   artifacts  [--dir artifacts]
   trace      <trace.jsonl> [--check] [--chrome-out out.trace.json]
@@ -495,6 +501,44 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
              the threaded runtime always ships encoded wire frames"
         );
     }
+    // --stream-csv: large-fleet path — write each round record to the
+    // file as it is produced instead of buffering a RunLog (same bytes
+    // as --csv; see rust/tests/streaming_parity.rs)
+    if let Some(path) = args.get("stream-csv") {
+        if args.has_flag("threaded") {
+            anyhow::bail!(
+                "--stream-csv streams the simulated/ideal engines; the \
+                 threaded runtime buffers its report plane (use --csv)"
+            );
+        }
+        if cfg.mode == EngineMode::Async {
+            anyhow::bail!(
+                "--stream-csv streams sync round records; async runs \
+                 buffer a merged log (use --csv)"
+            );
+        }
+        let mut sim_cfg = cfg.clone();
+        if simulate && sim_cfg.network.is_none() {
+            sim_cfg.network = Some(Default::default());
+        }
+        let file = std::fs::File::create(path)?;
+        let mut sink = lmdfl::metrics::CsvStream::new(
+            std::io::BufWriter::new(file),
+        )?;
+        let s = Trainer::run_streamed(&sim_cfg, &mut sink)?;
+        sink.finish()?;
+        log::info(format!(
+            "streamed {} rounds to {path}: loss={} acc={} \
+             bits/link={} wire-bytes={} virtual={:.3}s",
+            s.rounds,
+            fnum(s.last_loss),
+            fnum(s.final_accuracy),
+            s.total_bits,
+            s.wire_bytes,
+            s.virtual_secs,
+        ));
+        return Ok(());
+    }
     let log = if args.has_flag("threaded") {
         if cfg.network.is_some() {
             eprintln!(
@@ -795,6 +839,9 @@ fn cmd_topo(args: &Args) -> anyhow::Result<()> {
         "star" => TopologyKind::Star,
         "torus" => TopologyKind::Torus,
         "random" => TopologyKind::Random { p: args.get_f64("p", 0.4)? },
+        "random_regular" => TopologyKind::RandomRegular {
+            k: args.get_usize("k", 4)?,
+        },
         other => anyhow::bail!("unknown topology '{other}'"),
     };
     let t = Topology::build(
@@ -812,7 +859,9 @@ fn cmd_topo(args: &Args) -> anyhow::Result<()> {
         log::info("confusion matrix C:");
         for i in 0..n {
             let row: Vec<String> =
-                (0..n).map(|j| format!("{:.3}", t.c[(i, j)])).collect();
+                (0..n)
+                    .map(|j| format!("{:.3}", t.weight(i, j)))
+                    .collect();
             log::info(format!("  [{}]", row.join(" ")));
         }
     }

@@ -9,6 +9,13 @@ use std::path::Path;
 
 use crate::config::json::Json;
 
+pub mod stream;
+
+pub use stream::{
+    csv_row, CsvStream, JsonlStream, LogSink, RecordSink, RunSummary,
+    CSV_HEADER,
+};
+
 /// One communication round's measurements.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
@@ -110,26 +117,16 @@ impl RunLog {
         self.record_at_loss(target).map(|r| r.bits_per_link)
     }
 
+    /// Render the whole log as CSV. The streaming
+    /// [`CsvStream`](stream::CsvStream) writes the same bytes row by
+    /// row — both build on [`CSV_HEADER`] / [`csv_row`], so buffered
+    /// and streamed output are identical by construction.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "round,loss,accuracy,bits_per_link,distortion,levels,lr,\
-             wall_secs,virtual_secs,straggler_wait_secs,wire_bytes\n",
-        );
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
         for r in &self.records {
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{}\n",
-                r.round,
-                r.loss,
-                r.accuracy,
-                r.bits_per_link,
-                r.distortion,
-                r.levels,
-                r.lr,
-                r.wall_secs,
-                r.virtual_secs,
-                r.straggler_wait_secs,
-                r.wire_bytes
-            ));
+            out.push_str(&csv_row(r));
+            out.push('\n');
         }
         out
     }
@@ -191,11 +188,8 @@ impl RunLog {
     pub fn from_csv(name: &str, text: &str) -> anyhow::Result<RunLog> {
         let mut lines = text.lines();
         let header = lines.next().unwrap_or("").trim();
-        let expected = "round,loss,accuracy,bits_per_link,distortion,\
-                        levels,lr,wall_secs,virtual_secs,\
-                        straggler_wait_secs,wire_bytes";
         anyhow::ensure!(
-            header == expected,
+            header == CSV_HEADER,
             "RunLog CSV: unexpected header '{header}'"
         );
         let mut log = RunLog::new(name);

@@ -1,0 +1,243 @@
+//! Streaming run output: write records to a sink as they are produced
+//! instead of buffering the whole run.
+//!
+//! A 10k-node run holds per-round [`RoundRecord`]s (and, async, one
+//! [`NodeRecord`](crate::agossip::NodeRecord) per node per local
+//! round) — buffering all of it is O(rounds · n) memory for data the
+//! caller usually just writes to disk. [`CsvStream`] emits exactly the
+//! bytes [`RunLog::to_csv`](super::RunLog::to_csv) would have produced
+//! (both are built from [`CSV_HEADER`] / [`csv_row`], so parity is by
+//! construction and `rust/tests/streaming_parity.rs` enforces it), and
+//! [`JsonlStream`] appends one JSON document per line for per-node
+//! series. [`RunSummary`] is what a streamed run returns in place of
+//! the full log: the scalar facts drivers and benches actually read.
+
+use std::io::Write;
+
+use crate::config::json::Json;
+
+use super::RoundRecord;
+
+/// The one CSV header every writer emits and every parser requires.
+pub const CSV_HEADER: &str = "round,loss,accuracy,bits_per_link,\
+                              distortion,levels,lr,wall_secs,\
+                              virtual_secs,straggler_wait_secs,\
+                              wire_bytes";
+
+/// One CSV row (no trailing newline) — the single row format shared by
+/// the buffered writer and the streaming sink.
+pub fn csv_row(r: &RoundRecord) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{},{},{},{}",
+        r.round,
+        r.loss,
+        r.accuracy,
+        r.bits_per_link,
+        r.distortion,
+        r.levels,
+        r.lr,
+        r.wall_secs,
+        r.virtual_secs,
+        r.straggler_wait_secs,
+        r.wire_bytes
+    )
+}
+
+/// Where a streamed run's per-round records go.
+pub trait RecordSink {
+    fn record(&mut self, r: &RoundRecord) -> anyhow::Result<()>;
+}
+
+/// Stream records as CSV, byte-identical to the buffered
+/// [`RunLog::to_csv`](super::RunLog::to_csv) output for the same
+/// record sequence.
+pub struct CsvStream<W: Write> {
+    w: W,
+}
+
+impl<W: Write> CsvStream<W> {
+    /// Write the header immediately and stream rows from then on.
+    pub fn new(mut w: W) -> std::io::Result<Self> {
+        writeln!(w, "{CSV_HEADER}")?;
+        Ok(CsvStream { w })
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+
+    /// Flush and hand back the writer.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+impl<W: Write> RecordSink for CsvStream<W> {
+    fn record(&mut self, r: &RoundRecord) -> anyhow::Result<()> {
+        writeln!(self.w, "{}", csv_row(r))?;
+        Ok(())
+    }
+}
+
+/// Collect records into a [`RunLog`](super::RunLog) — the buffered
+/// sink, for call sites that want the streaming API shape without a
+/// file (tests, small runs).
+pub struct LogSink(pub super::RunLog);
+
+impl LogSink {
+    pub fn new(name: &str) -> Self {
+        LogSink(super::RunLog::new(name))
+    }
+}
+
+impl RecordSink for LogSink {
+    fn record(&mut self, r: &RoundRecord) -> anyhow::Result<()> {
+        self.0.push(r.clone());
+        Ok(())
+    }
+}
+
+/// Stream JSON documents one per line (JSONL) — the per-node record
+/// sink of the async engine.
+pub struct JsonlStream<W: Write> {
+    w: W,
+    lines: u64,
+}
+
+impl<W: Write> JsonlStream<W> {
+    pub fn new(w: W) -> Self {
+        JsonlStream { w, lines: 0 }
+    }
+
+    pub fn push(&mut self, doc: &Json) -> std::io::Result<()> {
+        writeln!(self.w, "{}", doc.to_string())?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Lines written so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    pub fn finish(mut self) -> std::io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// The scalar outcome of a streamed run — what remains in memory when
+/// records go straight to a sink.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    /// records emitted
+    pub rounds: usize,
+    /// loss of the last record
+    pub last_loss: f64,
+    /// last evaluated (non-NaN) accuracy
+    pub final_accuracy: f64,
+    /// cumulative per-link bits of the last record
+    pub total_bits: u64,
+    /// cumulative wire bytes of the last record
+    pub wire_bytes: u64,
+    /// virtual clock of the last record (simnet runs)
+    pub virtual_secs: f64,
+}
+
+impl RunSummary {
+    pub fn observe(&mut self, r: &RoundRecord) {
+        self.rounds += 1;
+        self.last_loss = r.loss;
+        if !r.accuracy.is_nan() {
+            self.final_accuracy = r.accuracy;
+        }
+        self.total_bits = r.bits_per_link;
+        self.wire_bytes = r.wire_bytes;
+        self.virtual_secs = r.virtual_secs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunLog;
+
+    fn rec(round: usize, loss: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss,
+            accuracy: if round % 2 == 0 { 0.5 } else { f64::NAN },
+            bits_per_link: round as u64 * 100,
+            distortion: 0.01,
+            levels: 16,
+            lr: 0.05,
+            wall_secs: 0.1,
+            virtual_secs: round as f64,
+            straggler_wait_secs: 0.0,
+            wire_bytes: round as u64 * 800,
+        }
+    }
+
+    #[test]
+    fn csv_stream_matches_buffered_writer_bytewise() {
+        let mut log = RunLog::new("s");
+        let mut sink = CsvStream::new(Vec::new()).unwrap();
+        for k in 1..=5 {
+            let r = rec(k, 2.0 / k as f64);
+            sink.record(&r).unwrap();
+            log.push(r);
+        }
+        let streamed = sink.finish().unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), log.to_csv());
+    }
+
+    #[test]
+    fn streamed_csv_parses_back() {
+        let mut sink = CsvStream::new(Vec::new()).unwrap();
+        let rows: Vec<RoundRecord> = (1..=3).map(|k| rec(k, 1.0)).collect();
+        for r in &rows {
+            sink.record(r).unwrap();
+        }
+        let text =
+            String::from_utf8(sink.finish().unwrap()).unwrap();
+        let back = RunLog::from_csv("s", &text).unwrap();
+        assert_eq!(back.records.len(), 3);
+        assert!(back.records[0].accuracy.is_nan());
+        assert_eq!(back.records[1].accuracy, 0.5);
+    }
+
+    #[test]
+    fn jsonl_stream_writes_one_doc_per_line() {
+        let mut s = JsonlStream::new(Vec::new());
+        s.push(&Json::obj(vec![("a", Json::num(1.0))])).unwrap();
+        s.push(&Json::obj(vec![("a", Json::num(2.0))])).unwrap();
+        assert_eq!(s.lines(), 2);
+        let text = String::from_utf8(s.finish().unwrap()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            Json::parse(line).unwrap();
+        }
+    }
+
+    #[test]
+    fn summary_tracks_last_and_final() {
+        let mut s = RunSummary::default();
+        for k in 1..=4 {
+            s.observe(&rec(k, 4.0 - k as f64));
+        }
+        assert_eq!(s.rounds, 4);
+        assert_eq!(s.last_loss, 0.0);
+        assert_eq!(s.final_accuracy, 0.5); // round 4 evaluated
+        assert_eq!(s.total_bits, 400);
+        assert_eq!(s.virtual_secs, 4.0);
+    }
+
+    #[test]
+    fn log_sink_collects() {
+        let mut s = LogSink::new("x");
+        s.record(&rec(1, 1.0)).unwrap();
+        assert_eq!(s.0.records.len(), 1);
+    }
+}

@@ -97,6 +97,15 @@ impl Hist {
     }
 }
 
+/// Most distinct keys a single counter name may hold; further keys
+/// collapse into [`OVERFLOW_KEY`]. Dynamic keys (per-node link
+/// counters) would otherwise grow with the deployment — at 10k nodes
+/// an uncapped per-link scheme held ~80k strings per counter name.
+pub const MAX_KEYS_PER_COUNTER: usize = 256;
+
+/// The bucket absorbing counter increments past the key cap.
+pub const OVERFLOW_KEY: &str = "other";
+
 /// The buffer every instrumentation call appends to.
 pub(crate) struct Recorder {
     pub rank: usize,
@@ -105,6 +114,9 @@ pub(crate) struct Recorder {
     pub chrome_path: Option<String>,
     pub spans: Vec<SpanRec>,
     pub counters: BTreeMap<(String, String), u64>,
+    /// distinct keys held per counter name (enforces the cap without
+    /// scanning the map)
+    key_counts: BTreeMap<String, usize>,
     pub hists: BTreeMap<String, Hist>,
 }
 
@@ -117,6 +129,7 @@ impl Recorder {
             chrome_path: cfg.chrome_path.clone(),
             spans: Vec::new(),
             counters: BTreeMap::new(),
+            key_counts: BTreeMap::new(),
             hists: BTreeMap::new(),
         }
     }
@@ -158,10 +171,25 @@ impl Recorder {
     }
 
     pub fn counter(&mut self, name: &str, key: &str, n: u64) {
-        *self
-            .counters
-            .entry((name.to_string(), key.to_string()))
-            .or_insert(0) += n;
+        if let Some(v) =
+            self.counters.get_mut(&(name.to_string(), key.to_string()))
+        {
+            *v += n;
+            return;
+        }
+        let held = self.key_counts.entry(name.to_string()).or_insert(0);
+        if *held >= MAX_KEYS_PER_COUNTER {
+            // cardinality cap: unseen keys collapse into one bucket so
+            // per-entity counters stay bounded at any deployment size
+            *self
+                .counters
+                .entry((name.to_string(), OVERFLOW_KEY.to_string()))
+                .or_insert(0) += n;
+            return;
+        }
+        *held += 1;
+        self.counters
+            .insert((name.to_string(), key.to_string()), n);
     }
 
     pub fn hist(&mut self, name: &str, v: u64) {
@@ -188,6 +216,44 @@ mod tests {
         assert_eq!(h.buckets[3], 1);
         assert_eq!(h.buckets[10], 1);
         assert!((h.mean() - 1049.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counter_key_cardinality_is_capped() {
+        let cfg = ObserveConfig {
+            trace_path: Some("unused".into()),
+            chrome_path: None,
+        };
+        let mut r = Recorder::new(&cfg, 0);
+        // 4x the cap of distinct keys, 1 each
+        for i in 0..MAX_KEYS_PER_COUNTER * 4 {
+            r.counter("link_send", &format!("{i}"), 1);
+        }
+        let held = r
+            .counters
+            .keys()
+            .filter(|(name, _)| name == "link_send")
+            .count();
+        assert_eq!(held, MAX_KEYS_PER_COUNTER + 1, "cap + other bucket");
+        let other = r.counters
+            [&("link_send".to_string(), OVERFLOW_KEY.to_string())];
+        assert_eq!(
+            other,
+            (MAX_KEYS_PER_COUNTER * 3) as u64,
+            "all overflow increments land in the other bucket"
+        );
+        // capped keys keep accumulating normally
+        r.counter("link_send", "0", 5);
+        assert_eq!(
+            r.counters[&("link_send".to_string(), "0".to_string())],
+            6
+        );
+        // the cap is per counter name, not global
+        r.counter("unrelated", "key", 1);
+        assert_eq!(
+            r.counters[&("unrelated".to_string(), "key".to_string())],
+            1
+        );
     }
 
     #[test]

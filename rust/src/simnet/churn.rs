@@ -15,7 +15,10 @@
 use std::collections::BTreeSet;
 
 use crate::linalg::eigen::second_largest_abs_eigenvalue;
-use crate::topology::{metropolis_weights, Topology};
+use crate::linalg::power::PowerBudget;
+use crate::topology::{
+    metropolis_weights, SparseTopology, Topology, DENSE_ORACLE_MAX,
+};
 use crate::util::rng::Rng;
 
 /// Churn process parameters. All probabilities are per churn epoch
@@ -77,6 +80,10 @@ pub struct ChurnState {
     failed_links: BTreeSet<(usize, usize)>,
     offline_nodes: BTreeSet<usize>,
     rng: Rng,
+    /// base-graph neighbors per node (for dirty-set expansion)
+    base_adj: Vec<Vec<usize>>,
+    /// last rebuilt live graph (large-n incremental path only)
+    live: Option<(Vec<Vec<usize>>, SparseTopology)>,
 }
 
 impl ChurnState {
@@ -98,6 +105,8 @@ impl ChurnState {
             failed_links: BTreeSet::new(),
             offline_nodes: BTreeSet::new(),
             rng,
+            base_adj: base.adj.clone(),
+            live: None,
         }
     }
 
@@ -123,6 +132,9 @@ impl ChurnState {
             return None;
         }
         let mut changed = false;
+        // nodes whose incident-edge liveness toggled this epoch — the
+        // seeds of the incremental dirty set
+        let mut touched = BTreeSet::new();
         // links first, then nodes — both in sorted order (determinism)
         for &edge in &self.base_edges {
             if self.failed_links.contains(&edge) {
@@ -131,40 +143,48 @@ impl ChurnState {
                 {
                     self.failed_links.remove(&edge);
                     changed = true;
+                    touched.insert(edge.0);
+                    touched.insert(edge.1);
                 }
             } else if self.cfg.link_fail_prob > 0.0
                 && self.rng.uniform() < self.cfg.link_fail_prob
             {
                 self.failed_links.insert(edge);
                 changed = true;
+                touched.insert(edge.0);
+                touched.insert(edge.1);
             }
         }
         for i in 0..self.n {
-            if self.offline_nodes.contains(&i) {
-                if self.cfg.node_return_prob > 0.0
+            let toggled = if self.offline_nodes.contains(&i) {
+                self.cfg.node_return_prob > 0.0
                     && self.rng.uniform() < self.cfg.node_return_prob
-                {
-                    self.offline_nodes.remove(&i);
-                    changed = true;
-                }
+                    && self.offline_nodes.remove(&i)
             } else if self.cfg.node_leave_prob > 0.0
                 && self.rng.uniform() < self.cfg.node_leave_prob
             {
-                self.offline_nodes.insert(i);
+                self.offline_nodes.insert(i)
+            } else {
+                false
+            };
+            if toggled {
                 changed = true;
+                // every incident base edge changes liveness
+                touched.insert(i);
+                for &j in &self.base_adj[i] {
+                    touched.insert(j);
+                }
             }
         }
         if changed {
-            Some(self.rebuild())
+            Some(self.rebuild_touched(&touched))
         } else {
             None
         }
     }
 
-    /// Build the live topology: surviving edges, Metropolis weights,
-    /// fresh ζ. Isolated / offline nodes keep self-weight 1, so C stays
-    /// symmetric doubly stochastic no matter what failed.
-    pub fn rebuild(&self) -> Topology {
+    /// Surviving-edge adjacency of the current fault state.
+    fn live_adj(&self) -> Vec<Vec<usize>> {
         let mut adj: Vec<Vec<usize>> = vec![Vec::new(); self.n];
         for &(i, j) in &self.base_edges {
             if self.link_up(i, j) {
@@ -172,9 +192,62 @@ impl ChurnState {
                 adj[j].push(i);
             }
         }
-        let c = metropolis_weights(&adj);
-        let zeta = second_largest_abs_eigenvalue(&c);
-        Topology { n: self.n, adj, c, zeta }
+        adj
+    }
+
+    /// Build the live topology: surviving edges, Metropolis weights,
+    /// fresh ζ. Isolated / offline nodes keep self-weight 1, so C stays
+    /// symmetric doubly stochastic no matter what failed.
+    ///
+    /// Small graphs (n ≤ [`DENSE_ORACLE_MAX`]) rebuild the dense matrix
+    /// from scratch — the historical path, byte-identical digests.
+    pub fn rebuild(&self) -> Topology {
+        let adj = self.live_adj();
+        if self.n <= DENSE_ORACLE_MAX {
+            let c = metropolis_weights(&adj);
+            let zeta = second_largest_abs_eigenvalue(&c);
+            let sparse = SparseTopology::from_dense(&c);
+            Topology { n: self.n, adj, sparse, c: Some(c), zeta }
+        } else {
+            let sparse = SparseTopology::metropolis(&adj);
+            let zeta = sparse.zeta_power(PowerBudget::Hot);
+            Topology { n: self.n, adj, sparse, c: None, zeta }
+        }
+    }
+
+    /// Incremental large-n rebuild: recompute only the Metropolis rows
+    /// whose weights can have changed — the touched nodes plus their
+    /// one-hop neighborhoods under the previous *and* the new live
+    /// graph (a degree change at a node moves the weights of every
+    /// incident edge, which moves its neighbors' diagonals too). Rows
+    /// are recomputed whole, so the result is exactly equal to a
+    /// from-scratch build (tested below); ζ comes from power iteration
+    /// either way.
+    fn rebuild_touched(&mut self, touched: &BTreeSet<usize>) -> Topology {
+        if self.n <= DENSE_ORACLE_MAX {
+            return self.rebuild();
+        }
+        let adj = self.live_adj();
+        let (sparse, zeta) = match self.live.take() {
+            Some((old_adj, mut sp)) => {
+                let mut dirty = BTreeSet::new();
+                for &t in touched {
+                    dirty.insert(t);
+                    dirty.extend(old_adj[t].iter().copied());
+                    dirty.extend(adj[t].iter().copied());
+                }
+                sp.rebuild_rows(&adj, dirty.into_iter());
+                let zeta = sp.zeta_power(PowerBudget::Hot);
+                (sp, zeta)
+            }
+            None => {
+                let sp = SparseTopology::metropolis(&adj);
+                let zeta = sp.zeta_power(PowerBudget::Hot);
+                (sp, zeta)
+            }
+        };
+        self.live = Some((adj.clone(), sparse.clone()));
+        Topology { n: self.n, adj, sparse, c: None, zeta }
     }
 }
 
@@ -211,9 +284,12 @@ mod tests {
         for k in 1..40 {
             if let Some(t) = st.pre_round(k) {
                 rebuilds += 1;
-                assert!(t.c.is_symmetric(1e-12), "round {k}: asymmetric");
                 assert!(
-                    t.c.is_doubly_stochastic(1e-9),
+                    t.dense().is_symmetric(1e-12),
+                    "round {k}: asymmetric"
+                );
+                assert!(
+                    t.dense().is_doubly_stochastic(1e-9),
                     "round {k}: not doubly stochastic"
                 );
                 assert!(t.zeta >= -1e-12 && t.zeta <= 1.0 + 1e-9);
@@ -260,8 +336,32 @@ mod tests {
         // everyone left: fully disconnected, C = I, zeta = 1
         assert!(t.adj.iter().all(|a| a.is_empty()));
         for i in 0..5 {
-            assert!((t.c[(i, i)] - 1.0).abs() < 1e-12);
+            assert!((t.weight(i, i) - 1.0).abs() < 1e-12);
         }
         assert!((t.zeta - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_rebuild_matches_from_scratch_at_scale() {
+        // n = 100 takes the sparse incremental path; every rebuilt
+        // topology must exactly equal a from-scratch Metropolis build
+        // of the same fault state (rows are recomputed whole, so this
+        // is equality, not approximation)
+        let base = Topology::build(&TopologyKind::Torus, 100, 5);
+        let mut st = ChurnState::new(churny(1), &base, Rng::new(11));
+        let mut rebuilds = 0;
+        for k in 1..20 {
+            if let Some(t) = st.pre_round(k) {
+                rebuilds += 1;
+                assert!(t.c.is_none(), "large churn rebuilt dense C");
+                let oracle = st.rebuild();
+                assert_eq!(
+                    t.sparse, oracle.sparse,
+                    "round {k}: incremental != full"
+                );
+                assert_eq!(t.zeta.to_bits(), oracle.zeta.to_bits());
+            }
+        }
+        assert!(rebuilds > 5, "churn too quiet: {rebuilds} rebuilds");
     }
 }

@@ -7,6 +7,14 @@
 //! queue. Payloads never participate in the ordering (no `Ord` bound),
 //! and virtual time is integral (nanoseconds), so two runs that schedule
 //! the same events produce byte-identical pop sequences on any platform.
+//!
+//! Allocation contract (the 10k-node scale-up): payloads live in a
+//! slab arena recycled through a free list, and the heap holds only
+//! small plain-data `(time, seq, slot)` entries. Once the maximum
+//! number of *concurrently pending* events has been seen, schedule/pop
+//! cycles allocate nothing — the heap keeps its capacity across pops
+//! and every slab slot is reused — so the steady-state event loop runs
+//! at arena speed regardless of how many million events pass through.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -29,37 +37,44 @@ pub fn ns_to_secs(ns: VirtualTime) -> f64 {
     ns as f64 / 1e9
 }
 
-/// One scheduled event. Heap entries compare on `(time, seq)` only.
-struct Entry<P> {
+/// One scheduled event: ordering key + arena slot of the payload.
+/// Heap entries compare on `(time, seq)` only.
+#[derive(Clone, Copy)]
+struct Entry {
     time: VirtualTime,
     seq: u64,
-    payload: P,
+    slot: u32,
 }
 
-impl<P> PartialEq for Entry<P> {
+impl PartialEq for Entry {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
 
-impl<P> Eq for Entry<P> {}
+impl Eq for Entry {}
 
-impl<P> PartialOrd for Entry<P> {
+impl PartialOrd for Entry {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl<P> Ord for Entry<P> {
+impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
         // reversed: BinaryHeap is a max-heap, we want earliest-first
         (other.time, other.seq).cmp(&(self.time, self.seq))
     }
 }
 
-/// Stable min-priority event queue with a monotonic virtual clock.
+/// Stable min-priority event queue with a monotonic virtual clock and
+/// arena-allocated payloads.
 pub struct EventQueue<P> {
-    heap: BinaryHeap<Entry<P>>,
+    heap: BinaryHeap<Entry>,
+    /// payload arena; `None` slots are parked on `free`
+    slab: Vec<Option<P>>,
+    /// recycled slab slots
+    free: Vec<u32>,
     next_seq: u64,
     now: VirtualTime,
     /// total events popped over the queue's lifetime (bench/report metric)
@@ -76,6 +91,21 @@ impl<P> EventQueue<P> {
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            next_seq: 0,
+            now: 0,
+            processed: 0,
+        }
+    }
+
+    /// Pre-size the arena and heap for `cap` concurrently pending
+    /// events so even the warm-up phase allocates nothing.
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            slab: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
             next_seq: 0,
             now: 0,
             processed: 0,
@@ -101,6 +131,12 @@ impl<P> EventQueue<P> {
         self.processed
     }
 
+    /// Number of payload slots the arena has ever grown to — the peak
+    /// concurrent-event watermark (steady state allocates no new ones).
+    pub fn arena_slots(&self) -> usize {
+        self.slab.len()
+    }
+
     /// Schedule `payload` at absolute virtual time `at`. Scheduling in
     /// the past is a logic error; the check is unconditional (not a
     /// `debug_assert`) so debug and release builds can never diverge on
@@ -109,7 +145,19 @@ impl<P> EventQueue<P> {
         assert!(at >= self.now, "event scheduled in the past");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Entry { time: at, seq, payload });
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(payload);
+                s
+            }
+            None => {
+                let s = self.slab.len();
+                assert!(s <= u32::MAX as usize, "event arena overflow");
+                self.slab.push(Some(payload));
+                s as u32
+            }
+        };
+        self.heap.push(Entry { time: at, seq, slot });
     }
 
     /// Schedule `payload` `delay` nanoseconds after the current time.
@@ -122,7 +170,11 @@ impl<P> EventQueue<P> {
         let e = self.heap.pop()?;
         self.now = e.time;
         self.processed += 1;
-        Some((e.time, e.payload))
+        let payload = self.slab[e.slot as usize]
+            .take()
+            .expect("arena slot empty on pop");
+        self.free.push(e.slot);
+        Some((e.time, payload))
     }
 
     /// Reset the clock to a new epoch without clearing statistics. Only
@@ -192,6 +244,56 @@ mod tests {
         q.rebase(1000);
         q.schedule_in(5, 1);
         assert_eq!(q.pop(), Some((1005, 1)));
+    }
+
+    #[test]
+    fn arena_stops_growing_at_peak_pending() {
+        // peak concurrency 8: after warm-up, a million schedule/pop
+        // cycles must not grow the arena — slots are recycled
+        let mut q = EventQueue::new();
+        let mut t = 0;
+        for _ in 0..8 {
+            t += 1;
+            q.schedule(t, t);
+        }
+        let peak = q.arena_slots();
+        assert_eq!(peak, 8);
+        for _ in 0..100_000 {
+            let (now, _) = q.pop().unwrap();
+            t = t.max(now) + 1;
+            q.schedule(t, t);
+            assert_eq!(q.arena_slots(), peak, "arena grew in steady state");
+        }
+        assert_eq!(q.len(), 8);
+    }
+
+    #[test]
+    fn arena_reuse_preserves_payloads_and_order() {
+        // interleave boxed payloads through recycled slots and check
+        // values are never crossed
+        let mut q = EventQueue::new();
+        for round in 0u64..50 {
+            for i in 0..4 {
+                q.schedule(round * 10 + i, Box::new(round * 10 + i));
+            }
+            for i in 0..4 {
+                let (time, v) = q.pop().unwrap();
+                assert_eq!(time, round * 10 + i);
+                assert_eq!(*v, time);
+            }
+        }
+        assert!(q.arena_slots() <= 4);
+    }
+
+    #[test]
+    fn with_capacity_preallocates() {
+        let mut q: EventQueue<u64> = EventQueue::with_capacity(16);
+        for i in 0..16 {
+            q.schedule(i, i);
+        }
+        assert_eq!(q.arena_slots(), 16);
+        while q.pop().is_some() {}
+        assert_eq!(q.processed(), 16);
     }
 
     #[test]

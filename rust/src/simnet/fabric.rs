@@ -460,7 +460,7 @@ mod tests {
         for k in 0..20 {
             if let Some(t) = f.pre_round(k) {
                 changes += 1;
-                assert!(t.c.is_doubly_stochastic(1e-9));
+                assert!(t.dense().is_doubly_stochastic(1e-9));
             }
             let _ = f.simulate_round(2, &bytes, &bytes);
         }

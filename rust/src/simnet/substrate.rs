@@ -177,9 +177,12 @@ impl Substrate {
         self.bytes_tx += bytes;
         let out = link.transmit(ready, bytes, &mut self.rng);
         // observation only — the transmit above already drew its rng,
-        // so tracing can never perturb the event stream
+        // so tracing can never perturb the event stream. Keys aggregate
+        // per *sender* node, not per directed link: at 10k nodes the
+        // per-link scheme minted ~80k strings per counter name; the
+        // recorder additionally caps distinct keys per name.
         if crate::obs::active() {
-            let key = format!("{i}->{j}");
+            let key = format!("{i}");
             crate::obs::counter("link_send", &key, 1);
             crate::obs::counter("link_bytes", &key, bytes);
             if out.1 {

@@ -9,20 +9,40 @@
 //! Irregular graphs get Metropolis–Hastings weights, the standard way to
 //! make a doubly-stochastic symmetric matrix from an arbitrary graph:
 //! `c_ij = 1/(1 + max(deg_i, deg_j))` for edges, diagonal = remainder.
+//!
+//! At scale the dense matrix disappears: every engine path reads mixing
+//! weights from the O(degree) [`SparseTopology`] rows, and the dense
+//! `Matrix` form survives only as a bit-identity oracle on small graphs
+//! (n ≤ [`DENSE_ORACLE_MAX`]), where it also feeds the Jacobi
+//! eigensolver. Larger graphs estimate ζ by deflated power iteration
+//! over the sparse matvec and never materialize C.
+
+pub mod sparse;
 
 use crate::config::TopologyKind;
 use crate::linalg::eigen::{alpha_of_zeta, second_largest_abs_eigenvalue};
+use crate::linalg::power::PowerBudget;
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
-/// A built topology: adjacency + confusion matrix + spectral info.
+pub use sparse::SparseTopology;
+
+/// Largest node count for which the dense confusion matrix (and the
+/// Jacobi ζ) is kept alongside the sparse rows. Below this, builds are
+/// byte-for-byte what they were before the sparse path existed; above
+/// it, only O(degree) state is materialized.
+pub const DENSE_ORACLE_MAX: usize = 64;
+
+/// A built topology: adjacency + confusion-matrix rows + spectral info.
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub n: usize,
     /// adjacency (excluding self-loops)
     pub adj: Vec<Vec<usize>>,
-    /// confusion matrix C (row-major, symmetric doubly stochastic)
-    pub c: Matrix,
+    /// sparse confusion rows — the mixing authority on every path
+    pub sparse: SparseTopology,
+    /// dense C oracle; `None` when n > [`DENSE_ORACLE_MAX`]
+    pub c: Option<Matrix>,
     /// ζ = max(|λ₂|, |λ_N|)
     pub zeta: f64,
 }
@@ -38,15 +58,48 @@ impl Topology {
             TopologyKind::Star => star_adj(n),
             TopologyKind::Torus => torus_adj(n),
             TopologyKind::Random { p } => random_adj(n, *p, seed),
+            TopologyKind::RandomRegular { k } => {
+                random_regular_adj(n, *k, seed)
+            }
         };
-        let c = match kind {
-            TopologyKind::Full => Matrix::consensus(n),
-            TopologyKind::Disconnected => Matrix::identity(n),
-            TopologyKind::Ring => ring_matrix(n),
-            _ => metropolis_weights(&adj),
+        let (c, sparse, zeta) = if n <= DENSE_ORACLE_MAX {
+            // oracle path: exactly the historical dense construction,
+            // with the sparse rows derived from it bitwise
+            let dense = match kind {
+                TopologyKind::Full => Matrix::consensus(n),
+                TopologyKind::Disconnected => Matrix::identity(n),
+                TopologyKind::Ring => ring_matrix(n),
+                _ => metropolis_weights(&adj),
+            };
+            let sparse = SparseTopology::from_dense(&dense);
+            let zeta = second_largest_abs_eigenvalue(&dense);
+            (Some(dense), sparse, zeta)
+        } else {
+            let sparse = match kind {
+                TopologyKind::Full => SparseTopology::consensus(n),
+                TopologyKind::Disconnected => SparseTopology::identity(n),
+                TopologyKind::Ring => SparseTopology::ring(n),
+                _ => SparseTopology::metropolis(&adj),
+            };
+            let zeta = sparse.zeta_power(PowerBudget::Hot);
+            (None, sparse, zeta)
         };
-        let zeta = second_largest_abs_eigenvalue(&c);
-        Topology { n, adj, c, zeta }
+        Topology { n, adj, sparse, c, zeta }
+    }
+
+    /// c_ij read through the sparse rows (identical bits to the dense
+    /// oracle where one exists).
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.sparse.weight(i, j)
+    }
+
+    /// The dense oracle matrix; panics above [`DENSE_ORACLE_MAX`].
+    /// Small-n analysis/test code only — engines must read `sparse`.
+    pub fn dense(&self) -> &Matrix {
+        self.c
+            .as_ref()
+            .expect("dense C oracle not kept above DENSE_ORACLE_MAX")
     }
 
     /// Neighbors of node i (excluding i itself).
@@ -67,23 +120,7 @@ impl Topology {
     /// Whether the graph is connected (BFS). Disconnected topologies can
     /// never reach consensus; the engine warns on them.
     pub fn is_connected(&self) -> bool {
-        if self.n == 0 {
-            return true;
-        }
-        let mut seen = vec![false; self.n];
-        let mut stack = vec![0usize];
-        seen[0] = true;
-        let mut count = 1;
-        while let Some(i) = stack.pop() {
-            for &j in &self.adj[i] {
-                if !seen[j] {
-                    seen[j] = true;
-                    count += 1;
-                    stack.push(j);
-                }
-            }
-        }
-        count == self.n
+        adj_is_connected(&self.adj)
     }
 }
 
@@ -141,6 +178,79 @@ fn torus_adj(n: usize) -> Vec<Vec<usize>> {
         }
     }
     adj
+}
+
+/// Seeded random k-regular graph by the pairing (configuration) model:
+/// shuffle n·k stubs, pair them off, reject attempts that produce
+/// self-loops, parallel edges, or a disconnected graph. Rejection keeps
+/// the construction simple and exactly uniform over simple pairings;
+/// for the k we use (k ≪ n) an attempt succeeds with probability
+/// ≈ e^{-(k²-1)/4}, so the attempt cap is never approached in practice.
+/// Deterministic in `(n, k, seed)`.
+pub fn random_regular_adj(
+    n: usize,
+    k: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(k >= 1, "random-regular degree must be >= 1");
+    assert!(k < n, "random-regular degree must be < n (got k={k}, n={n})");
+    assert!(
+        (n * k) % 2 == 0,
+        "random-regular requires n*k even (got n={n}, k={k})"
+    );
+    let mut rng = Rng::new(seed ^ 0x4E67_5265_6775_6C61);
+    for _ in 0..10_000 {
+        if let Some(adj) = regular_pairing_attempt(n, k, &mut rng) {
+            if adj_is_connected(&adj) {
+                return adj;
+            }
+        }
+    }
+    panic!("no connected simple {k}-regular graph found on {n} nodes");
+}
+
+/// One configuration-model attempt: None on a self-loop or repeated
+/// edge (the caller redraws).
+fn regular_pairing_attempt(
+    n: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> Option<Vec<Vec<usize>>> {
+    let mut stubs: Vec<u32> = (0..n * k).map(|s| (s / k) as u32).collect();
+    rng.shuffle(&mut stubs);
+    let mut adj = vec![Vec::with_capacity(k); n];
+    let mut seen = std::collections::BTreeSet::new();
+    for pair in stubs.chunks_exact(2) {
+        let (u, v) = (pair[0], pair[1]);
+        if u == v || !seen.insert((u.min(v), u.max(v))) {
+            return None;
+        }
+        adj[u as usize].push(v as usize);
+        adj[v as usize].push(u as usize);
+    }
+    Some(adj)
+}
+
+/// BFS connectivity over a raw adjacency (pre-`Topology` form).
+fn adj_is_connected(adj: &[Vec<usize>]) -> bool {
+    let n = adj.len();
+    if n == 0 {
+        return true;
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(i) = stack.pop() {
+        for &j in &adj[i] {
+            if !seen[j] {
+                seen[j] = true;
+                count += 1;
+                stack.push(j);
+            }
+        }
+    }
+    count == n
 }
 
 fn random_adj(n: usize, p: f64, seed: u64) -> Vec<Vec<usize>> {
@@ -211,6 +321,10 @@ pub fn metropolis_weights(adj: &[Vec<usize>]) -> Matrix {
 /// matrix with identity: C(λ) = λ·C_ring + (1-λ)·I has
 /// ζ(λ) = λ·ζ_ring + (1-λ). Used to reproduce the paper's ζ = 0.87 setup.
 pub fn ring_with_zeta(n: usize, target_zeta: f64) -> Topology {
+    assert!(
+        n <= DENSE_ORACLE_MAX,
+        "ring_with_zeta is a small-n analysis helper (n <= {DENSE_ORACLE_MAX})"
+    );
     let base = Topology::build(&TopologyKind::Ring, n, 0);
     let zr = base.zeta;
     if target_zeta <= zr || zr >= 1.0 {
@@ -220,13 +334,16 @@ pub fn ring_with_zeta(n: usize, target_zeta: f64) -> Topology {
     let lambda = (1.0 - target_zeta) / (1.0 - zr);
     let mut c = Matrix::zeros(n, n);
     let eye = Matrix::identity(n);
+    let base_c = base.dense();
     for i in 0..n {
         for j in 0..n {
-            c[(i, j)] = lambda * base.c[(i, j)] + (1.0 - lambda) * eye[(i, j)];
+            c[(i, j)] =
+                lambda * base_c[(i, j)] + (1.0 - lambda) * eye[(i, j)];
         }
     }
     let zeta = second_largest_abs_eigenvalue(&c);
-    Topology { n, adj: base.adj, c, zeta }
+    let sparse = SparseTopology::from_dense(&c);
+    Topology { n, adj: base.adj, sparse, c: Some(c), zeta }
 }
 
 #[cfg(test)]
@@ -250,15 +367,112 @@ mod tests {
             for n in [1, 2, 3, 4, 10, 17] {
                 let t = Topology::build(&kind, n, 7);
                 assert!(
-                    t.c.is_doubly_stochastic(1e-9),
+                    t.dense().is_doubly_stochastic(1e-9),
                     "{kind:?} n={n} not doubly stochastic"
                 );
                 assert!(
-                    t.c.is_symmetric(1e-9),
+                    t.dense().is_symmetric(1e-9),
                     "{kind:?} n={n} not symmetric"
                 );
             }
         }
+    }
+
+    #[test]
+    fn sparse_rows_bitwise_equal_dense_oracle() {
+        for kind in kinds() {
+            let t = Topology::build(&kind, 17, 7);
+            let d = t.dense();
+            for i in 0..t.n {
+                for j in 0..t.n {
+                    assert_eq!(
+                        t.weight(i, j).to_bits(),
+                        d[(i, j)].to_bits(),
+                        "{kind:?} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_builds_are_sparse_only() {
+        for kind in [
+            TopologyKind::Torus,
+            TopologyKind::Ring,
+            TopologyKind::RandomRegular { k: 4 },
+        ] {
+            let t = Topology::build(&kind, 100, 3);
+            assert!(t.c.is_none(), "{kind:?} kept a dense matrix");
+            assert!(
+                t.sparse.to_dense().is_doubly_stochastic(1e-9),
+                "{kind:?} sparse rows not doubly stochastic"
+            );
+            assert!(
+                t.zeta > 0.0 && t.zeta < 1.0,
+                "{kind:?} zeta={}",
+                t.zeta
+            );
+        }
+    }
+
+    #[test]
+    fn dense_oracle_threshold_is_exact() {
+        let at = Topology::build(&TopologyKind::Torus, DENSE_ORACLE_MAX, 0);
+        assert!(at.c.is_some());
+        let above =
+            Topology::build(&TopologyKind::Torus, DENSE_ORACLE_MAX + 1, 0);
+        assert!(above.c.is_none());
+    }
+
+    #[test]
+    fn power_zeta_close_to_jacobi_at_threshold_boundary() {
+        // same graph both ways: n = 64 gets Jacobi, but the sparse rows
+        // are identical, so power iteration must land on the same zeta
+        let t = Topology::build(&TopologyKind::Torus, 64, 0);
+        let pz = t.sparse.zeta_power(PowerBudget::Oracle);
+        assert!(
+            (pz - t.zeta).abs() < 1e-6,
+            "power {pz} vs jacobi {}",
+            t.zeta
+        );
+    }
+
+    #[test]
+    fn random_regular_degree_symmetry_no_self_loops() {
+        for (n, k) in [(10, 3), (16, 4), (90, 4)] {
+            let adj = random_regular_adj(n, k, 42);
+            for i in 0..n {
+                assert_eq!(adj[i].len(), k, "n={n} k={k} node {i}");
+                assert!(!adj[i].contains(&i), "self-loop at {i}");
+                let mut sorted = adj[i].clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), k, "parallel edge at {i}");
+                for &j in &adj[i] {
+                    assert!(adj[j].contains(&i), "asym edge {i}-{j}");
+                }
+            }
+            assert!(adj_is_connected(&adj), "n={n} k={k} disconnected");
+        }
+    }
+
+    #[test]
+    fn random_regular_deterministic_and_seed_sensitive() {
+        let a = random_regular_adj(32, 4, 7);
+        let b = random_regular_adj(32, 4, 7);
+        assert_eq!(a, b);
+        let c = random_regular_adj(32, 4, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_regular_builds_as_topology() {
+        let t =
+            Topology::build(&TopologyKind::RandomRegular { k: 4 }, 16, 9);
+        assert!(t.dense().is_doubly_stochastic(1e-9));
+        assert!(t.is_connected());
+        assert_eq!(t.directed_links(), 16 * 4);
     }
 
     #[test]
@@ -326,7 +540,7 @@ mod tests {
     fn ring_with_zeta_hits_target() {
         let t = ring_with_zeta(10, 0.95);
         assert!((t.zeta - 0.95).abs() < 1e-6, "zeta={}", t.zeta);
-        assert!(t.c.is_doubly_stochastic(1e-9));
+        assert!(t.dense().is_doubly_stochastic(1e-9));
     }
 
     #[test]
@@ -349,7 +563,7 @@ mod tests {
         let mut spread_prev = f64::INFINITY;
         let mut cur = x.clone();
         for _ in 0..50 {
-            cur = cur.matmul(&t.c);
+            cur = cur.matmul(t.dense());
             let spread: f64 = (0..10)
                 .map(|j| (cur[(0, j)] - mean).abs())
                 .fold(0.0, f64::max);

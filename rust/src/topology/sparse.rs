@@ -1,0 +1,353 @@
+//! Sparse O(degree) confusion-matrix rows — the at-scale mixing state.
+//!
+//! A dense n×n `Matrix` for C is 800 MB at n = 10 000; the engines only
+//! ever read *rows* of C restricted to a node's neighborhood (mixing,
+//! staleness weighting, threaded-runtime weight tables), so this type
+//! stores exactly that: one sorted `(col, weight)` row per node plus
+//! the diagonal. It is THE mixing authority on every path — the dense
+//! matrix survives only as a small-n bit-identity oracle on
+//! [`crate::topology::Topology`].
+//!
+//! Bit-identity contract with the dense path (property-tested in
+//! `util/proptest.rs` and relied on by the simnet digest tests):
+//!
+//! * [`SparseTopology::metropolis`] computes each edge weight with the
+//!   same single expression as `metropolis_weights` and subtracts the
+//!   diagonal remainder **in adjacency-list order** — the exact f64
+//!   accumulation order of the dense builder — before sorting the
+//!   stored row by column.
+//! * [`SparseTopology::from_dense`] copies dense entries bitwise, so a
+//!   small-n `Topology` carries identical weights in both forms.
+//! * Row iteration is by ascending column, which matches the dense
+//!   mixing loop's ascending-j traversal once the diagonal is merged
+//!   at position i (see `DflEngine::round`).
+//!
+//! Churn rebuilds are incremental: only rows whose weights can have
+//! changed (touched nodes and their one-hop neighborhoods) are
+//! recomputed ([`SparseTopology::rebuild_rows`]); ζ is re-estimated by
+//! deflated power iteration over the sparse matvec
+//! ([`SparseTopology::zeta_power`]) instead of dense Jacobi.
+
+use crate::linalg::power::{power_iteration_zeta, PowerBudget};
+use crate::linalg::Matrix;
+
+/// Per-node confusion-matrix rows: sorted neighbor `(col, weight)`
+/// pairs + the diagonal. Memory is O(nodes + edges).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTopology {
+    n: usize,
+    /// off-diagonal row entries, sorted by column, zero weights omitted
+    rows: Vec<Vec<(u32, f64)>>,
+    /// diagonal (self) weight per node
+    self_w: Vec<f64>,
+}
+
+impl SparseTopology {
+    /// Metropolis–Hastings rows for an arbitrary graph. Identical f64
+    /// results to the dense `metropolis_weights`: same per-edge weight
+    /// expression, same adjacency-order diagonal subtraction.
+    pub fn metropolis(adj: &[Vec<usize>]) -> SparseTopology {
+        let n = adj.len();
+        let mut rows = Vec::with_capacity(n);
+        let mut self_w = Vec::with_capacity(n);
+        for i in 0..n {
+            let (row, diag) = metropolis_row(adj, i);
+            rows.push(row);
+            self_w.push(diag);
+        }
+        SparseTopology { n, rows, self_w }
+    }
+
+    /// Uniform ring averaging over {left, self, right} — the sparse
+    /// form of the dense `ring_matrix` (same weights bitwise).
+    pub fn ring(n: usize) -> SparseTopology {
+        let mut rows = vec![Vec::new(); n];
+        let mut self_w = vec![1.0; n];
+        if n == 2 {
+            rows[0].push((1, 0.5));
+            rows[1].push((0, 0.5));
+            self_w[0] = 0.5;
+            self_w[1] = 0.5;
+        } else if n >= 3 {
+            let w = 1.0 / 3.0;
+            for (i, row) in rows.iter_mut().enumerate() {
+                let prev = (i + n - 1) % n;
+                let next = (i + 1) % n;
+                row.push((prev.min(next) as u32, w));
+                row.push((prev.max(next) as u32, w));
+                self_w[i] = w;
+            }
+        }
+        SparseTopology { n, rows, self_w }
+    }
+
+    /// C = I — the disconnected network.
+    pub fn identity(n: usize) -> SparseTopology {
+        SparseTopology {
+            n,
+            rows: vec![Vec::new(); n],
+            self_w: vec![1.0; n],
+        }
+    }
+
+    /// C = J = 11ᵀ/n — fully mixed. O(n²) entries by nature; only the
+    /// small-n `full` topology uses it.
+    pub fn consensus(n: usize) -> SparseTopology {
+        let w = 1.0 / n as f64;
+        let rows = (0..n)
+            .map(|i| {
+                (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| (j as u32, w))
+                    .collect()
+            })
+            .collect();
+        SparseTopology { n, rows, self_w: vec![w; n] }
+    }
+
+    /// Bitwise import of a dense confusion matrix (nonzero off-diagonal
+    /// entries + diagonal). The small-n oracle path builds the dense
+    /// matrix first and derives its sparse twin through this.
+    pub fn from_dense(c: &Matrix) -> SparseTopology {
+        assert_eq!(c.rows, c.cols, "confusion matrix must be square");
+        let n = c.rows;
+        let mut rows = Vec::with_capacity(n);
+        let mut self_w = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = Vec::new();
+            for (j, &w) in c.row(i).iter().enumerate() {
+                if j != i && w != 0.0 {
+                    row.push((j as u32, w));
+                }
+            }
+            rows.push(row);
+            self_w.push(c[(i, i)]);
+        }
+        SparseTopology { n, rows, self_w }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Off-diagonal row of node i: `(col, weight)` sorted by column.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(u32, f64)] {
+        &self.rows[i]
+    }
+
+    /// Diagonal (self) weight of node i.
+    #[inline]
+    pub fn self_weight(&self, i: usize) -> f64 {
+        self.self_w[i]
+    }
+
+    /// c_ij (0.0 when i and j are not neighbors).
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        if i == j {
+            return self.self_w[i];
+        }
+        match self.rows[i].binary_search_by_key(&(j as u32), |&(c, _)| c)
+        {
+            Ok(k) => self.rows[i][k].1,
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Stored off-diagonal entries (== directed links with nonzero
+    /// weight).
+    pub fn stored_entries(&self) -> usize {
+        self.rows.iter().map(Vec::len).sum()
+    }
+
+    /// Recompute only the given rows against an updated adjacency.
+    /// Callers must pass every node whose weights can have changed: a
+    /// toggled edge or node changes degrees at its endpoints, which
+    /// changes the incident weights of every *neighbor* too — so the
+    /// dirty set is the touched nodes plus their one-hop neighborhoods
+    /// under both the old and the new adjacency (see
+    /// `simnet::churn`). Incremental-vs-full equivalence is tested
+    /// below.
+    pub fn rebuild_rows<I>(&mut self, adj: &[Vec<usize>], dirty: I)
+    where
+        I: IntoIterator<Item = usize>,
+    {
+        assert_eq!(adj.len(), self.n, "adjacency size changed");
+        for i in dirty {
+            let (row, diag) = metropolis_row(adj, i);
+            self.rows[i] = row;
+            self.self_w[i] = diag;
+        }
+    }
+
+    /// ζ = max(|λ₂|, |λ_N|) by deflated power iteration over the
+    /// sparse matvec — O(edges) per iteration, no dense matrix.
+    pub fn zeta_power(&self, budget: PowerBudget) -> f64 {
+        power_iteration_zeta(self.n, budget, |x, y| {
+            for i in 0..self.n {
+                let mut acc = self.self_w[i] * x[i];
+                for &(j, w) in &self.rows[i] {
+                    acc += w * x[j as usize];
+                }
+                y[i] = acc;
+            }
+        })
+    }
+
+    /// Render as a dense matrix (tests / small-n display only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut c = Matrix::zeros(self.n, self.n);
+        for i in 0..self.n {
+            c[(i, i)] = self.self_w[i];
+            for &(j, w) in &self.rows[i] {
+                c[(i, j as usize)] = w;
+            }
+        }
+        c
+    }
+}
+
+/// One Metropolis row: the same arithmetic, in the same order, as one
+/// iteration of the dense `metropolis_weights` loop. Returns the
+/// sorted `(col, weight)` row and the diagonal remainder.
+fn metropolis_row(
+    adj: &[Vec<usize>],
+    i: usize,
+) -> (Vec<(u32, f64)>, f64) {
+    let deg_i = adj[i].len();
+    let mut diag = 1.0;
+    let mut row = Vec::with_capacity(deg_i);
+    for &j in &adj[i] {
+        let w = 1.0 / (1 + deg_i.max(adj[j].len())) as f64;
+        row.push((j as u32, w));
+        diag -= w;
+    }
+    row.sort_unstable_by_key(|&(c, _)| c);
+    (row, diag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::metropolis_weights;
+
+    fn path3() -> Vec<Vec<usize>> {
+        vec![vec![1], vec![0, 2], vec![1]]
+    }
+
+    #[test]
+    fn metropolis_rows_bit_identical_to_dense() {
+        // unsorted adjacency on purpose: the torus builder pushes
+        // down/up/right/left, not ascending — edges 0-1, 0-2, 0-3,
+        // 1-2, 2-3 with mixed degrees
+        let adj = vec![
+            vec![3, 1, 2],
+            vec![0, 2],
+            vec![1, 3, 0],
+            vec![2, 0],
+        ];
+        let dense = metropolis_weights(&adj);
+        let sp = SparseTopology::metropolis(&adj);
+        for i in 0..adj.len() {
+            assert_eq!(
+                sp.self_weight(i).to_bits(),
+                dense[(i, i)].to_bits(),
+                "diag {i}"
+            );
+            for j in 0..adj.len() {
+                assert_eq!(
+                    sp.weight(i, j).to_bits(),
+                    dense[(i, j)].to_bits(),
+                    "entry ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_sorted_by_column() {
+        let adj = vec![vec![2, 1], vec![0, 2], vec![1, 0]];
+        let sp = SparseTopology::metropolis(&adj);
+        for i in 0..3 {
+            let cols: Vec<u32> =
+                sp.row(i).iter().map(|&(c, _)| c).collect();
+            let mut sorted = cols.clone();
+            sorted.sort_unstable();
+            assert_eq!(cols, sorted, "row {i} unsorted");
+        }
+    }
+
+    #[test]
+    fn from_dense_roundtrips_bitwise() {
+        let dense = metropolis_weights(&path3());
+        let sp = SparseTopology::from_dense(&dense);
+        let back = sp.to_dense();
+        for (a, b) in dense.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn weight_lookup_is_symmetric_and_sparse() {
+        let sp = SparseTopology::metropolis(&path3());
+        assert_eq!(sp.weight(0, 1).to_bits(), sp.weight(1, 0).to_bits());
+        assert_eq!(sp.weight(0, 2), 0.0, "non-edge must read 0");
+        assert_eq!(sp.stored_entries(), 4);
+    }
+
+    #[test]
+    fn special_forms_match_their_dense_twins() {
+        for n in [1usize, 2, 3, 4, 10] {
+            let ring = SparseTopology::ring(n);
+            let dense_ring = crate::topology::Topology::build(
+                &crate::config::TopologyKind::Ring,
+                n,
+                0,
+            );
+            let d = dense_ring.c.as_ref().unwrap();
+            assert!(
+                ring.to_dense().max_abs_diff(d) == 0.0,
+                "ring n={n}"
+            );
+            let id = SparseTopology::identity(n);
+            assert_eq!(
+                id.to_dense().max_abs_diff(&Matrix::identity(n)),
+                0.0
+            );
+            let j = SparseTopology::consensus(n);
+            assert_eq!(
+                j.to_dense().max_abs_diff(&Matrix::consensus(n)),
+                0.0
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_rebuild_equals_full_rebuild() {
+        // start from a 4-cycle, remove edge 1-2, rebuild only the
+        // touched neighborhoods — must equal a from-scratch build
+        let mut adj = vec![vec![1, 3], vec![0, 2], vec![1, 3], vec![2, 0]];
+        let mut sp = SparseTopology::metropolis(&adj);
+        adj[1].retain(|&j| j != 2);
+        adj[2].retain(|&j| j != 1);
+        // dirty: endpoints {1,2} + their old/new neighborhoods
+        sp.rebuild_rows(&adj, [0, 1, 2, 3]);
+        let full = SparseTopology::metropolis(&adj);
+        assert_eq!(sp, full);
+    }
+
+    #[test]
+    fn zeta_power_matches_jacobi_on_small_graphs() {
+        use crate::linalg::eigen::second_largest_abs_eigenvalue;
+        for (name, adj) in [
+            ("path3", path3()),
+            ("square", vec![vec![1, 3], vec![0, 2], vec![1, 3], vec![2, 0]]),
+        ] {
+            let sp = SparseTopology::metropolis(&adj);
+            let z = sp.zeta_power(PowerBudget::Oracle);
+            let dense = metropolis_weights(&adj);
+            let jac = second_largest_abs_eigenvalue(&dense);
+            assert!((z - jac).abs() < 1e-9, "{name}: {z} vs {jac}");
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Utility substrates: PRNG, statistics, property-test harness, timing,
-//! and the scoped-thread worker pool behind the parallel round executor.
+//! the persistent worker pool behind the parallel round executor, and
+//! the node-group multiplexer that scales it to 10k-node fleets.
 
+pub mod multiplex;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,541 @@
+//! Node-group multiplexing: many logical nodes per persistent pool
+//! worker, with envelope-addressed shared mailboxes.
+//!
+//! At 10k nodes, "one execution unit per node" stops being a sensible
+//! model — 10k OS threads don't fit, and even 10k pool work items make
+//! the dispatch bookkeeping O(n). [`NodeGroups`] partitions the node
+//! index space into contiguous bounded groups and dispatches *groups*
+//! as the work items of a [`WorkerPool`] job: more groups than workers
+//! means each persistent worker services several groups per phase
+//! (multiplexing), while nodes inside a group always run in ascending
+//! index order on a single thread. Both properties preserve the
+//! engines' bit-identity contract — per-node work is independent, the
+//! order within a group is fixed, and cross-node reductions stay
+//! sequential in node order (see [`crate::util::pool`] module docs).
+//!
+//! [`GroupMailboxes`] is the companion delivery structure: one shared
+//! mailbox per *group* (not per node), addressed by [`Envelope`]s.
+//! Posting locks only the destination node's group box; draining a
+//! group sorts its envelopes by `(to, from)`, so a consumer that
+//! drains groups in index order observes one canonical global order
+//! no matter which worker posted first. The sync engine routes every
+//! node's per-round outputs through these boxes
+//! ([`crate::dfl::DflEngine`]), so 10k node state machines cost
+//! O(groups) queues, not O(n).
+
+use std::sync::Mutex;
+
+use super::pool::WorkerPool;
+
+/// Target nodes per group for engine-sized deployments: small enough
+/// that groups balance across workers, large enough that per-group
+/// dispatch overhead is negligible against per-node work.
+pub const GROUP_NODES: usize = 64;
+
+/// Raw slice base pointer smuggled into the per-group closure (the
+/// [`crate::util::pool`] `SendSlice` pattern).
+struct SendPtr<T>(*mut T);
+
+// SAFETY: workers only ever form &mut sub-slices over *disjoint*
+// group ranges (each group slot is processed by exactly one worker
+// per job); `T: Send` on the entry points keeps cross-thread access
+// legal.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// One dispatchable group: its node range plus an error stash the
+/// driver resolves in group (= node) order after the job.
+struct GroupSlot {
+    start: usize,
+    end: usize,
+    err: Option<anyhow::Error>,
+}
+
+/// A contiguous partition of `0..n` into bounded node groups, usable
+/// as the dispatch unit of a [`WorkerPool`] job.
+pub struct NodeGroups {
+    n: usize,
+    /// even-partition shape: the first `rem` groups hold `base + 1`
+    /// nodes, the rest `base` (same rule as the pool's chunk sizes)
+    base: usize,
+    rem: usize,
+    /// reusable dispatch slots, one per group
+    slots: Vec<GroupSlot>,
+}
+
+impl NodeGroups {
+    /// Partition `n` nodes into exactly `groups` near-equal contiguous
+    /// groups (clamped to `1..=max(n, 1)`).
+    pub fn new(n: usize, groups: usize) -> Self {
+        let groups = groups.clamp(1, n.max(1));
+        let base = n / groups;
+        let rem = n % groups;
+        let mut slots = Vec::with_capacity(groups);
+        let mut start = 0usize;
+        for g in 0..groups {
+            let take = base + usize::from(g < rem);
+            slots.push(GroupSlot { start, end: start + take, err: None });
+            start += take;
+        }
+        debug_assert_eq!(start, n);
+        NodeGroups { n, base, rem, slots }
+    }
+
+    /// Partition by a target group size (`ceil(n / size)` groups).
+    pub fn with_group_size(n: usize, size: usize) -> Self {
+        Self::new(n, n.div_ceil(size.max(1)))
+    }
+
+    /// Engine sizing: group size bounded by [`GROUP_NODES`], but never
+    /// fewer groups than the pool has workers (small fleets keep full
+    /// parallelism; large fleets multiplex many groups per worker).
+    pub fn for_pool(n: usize, workers: usize) -> Self {
+        Self::new(n, n.div_ceil(GROUP_NODES).max(workers.min(n)))
+    }
+
+    /// Node count covered by the partition.
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of groups.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Node range `[start, end)` of group `g`.
+    pub fn bounds(&self, g: usize) -> (usize, usize) {
+        (self.slots[g].start, self.slots[g].end)
+    }
+
+    /// Group holding `node` (O(1) from the even-partition shape).
+    pub fn group_of(&self, node: usize) -> usize {
+        assert!(node < self.n, "node {node} out of range {}", self.n);
+        let cut = (self.base + 1) * self.rem;
+        if node < cut {
+            node / (self.base + 1)
+        } else {
+            self.rem + (node - cut) / self.base
+        }
+    }
+
+    /// Run `f(index, &mut items[index])` for every node, groups
+    /// dispatched across the pool (see module docs for the
+    /// determinism contract).
+    pub fn run<T, F>(
+        &mut self,
+        pool: &WorkerPool,
+        items: &mut [T],
+        f: F,
+    ) -> anyhow::Result<()>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) -> anyhow::Result<()> + Sync,
+    {
+        // zero-sized companion slice (never allocates), mirroring
+        // WorkerPool::run
+        let mut unit: Vec<()> = vec![(); items.len()];
+        self.run2(pool, items, &mut unit, |i, item, _| f(i, item))
+    }
+
+    /// As [`run`](NodeGroups::run) over two equally partitioned
+    /// slices: `f(index, &mut a[index], &mut b[index])`.
+    pub fn run2<A, B, F>(
+        &mut self,
+        pool: &WorkerPool,
+        a: &mut [A],
+        b: &mut [B],
+        f: F,
+    ) -> anyhow::Result<()>
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut A, &mut B) -> anyhow::Result<()> + Sync,
+    {
+        assert_eq!(a.len(), self.n, "slice must cover every node");
+        assert_eq!(b.len(), self.n, "slice must cover every node");
+        if pool.is_sequential() || self.slots.len() <= 1 {
+            for (i, (ai, bi)) in a.iter_mut().zip(b.iter_mut()).enumerate()
+            {
+                f(i, ai, bi)?;
+            }
+            return Ok(());
+        }
+        let a_ptr = SendPtr(a.as_mut_ptr());
+        let b_ptr = SendPtr(b.as_mut_ptr());
+        let fr = &f;
+        pool.run(&mut self.slots, |_, slot| {
+            slot.err = None;
+            let (s, e) = (slot.start, slot.end);
+            // SAFETY: group node ranges are disjoint and each slot is
+            // handed to exactly one worker per job, so these &mut
+            // sub-slices never alias
+            let ca = unsafe {
+                std::slice::from_raw_parts_mut(a_ptr.0.add(s), e - s)
+            };
+            let cb = unsafe {
+                std::slice::from_raw_parts_mut(b_ptr.0.add(s), e - s)
+            };
+            for (off, (ai, bi)) in
+                ca.iter_mut().zip(cb.iter_mut()).enumerate()
+            {
+                if let Err(err) = fr(s + off, ai, bi) {
+                    // first error stops this group; the driver below
+                    // reports the earliest group's error, matching the
+                    // pool's chunk-order semantics at group granularity
+                    slot.err = Some(err);
+                    return Ok(());
+                }
+            }
+            Ok(())
+        })?;
+        for slot in &mut self.slots {
+            if let Some(err) = slot.err.take() {
+                return Err(err);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for NodeGroups {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NodeGroups")
+            .field("nodes", &self.n)
+            .field("groups", &self.slots.len())
+            .finish()
+    }
+}
+
+/// One addressed message between nodes (or node → reducer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Envelope<M> {
+    pub to: usize,
+    pub from: usize,
+    pub msg: M,
+}
+
+/// Envelope-addressed shared mailboxes, one per node *group*.
+///
+/// `post` routes by the destination node's group and takes that one
+/// box's lock; `drain_group` empties a box (capacity retained) and
+/// sorts the drained tail by `(to, from)`. Draining groups `0..len`
+/// in order therefore yields every envelope in one canonical global
+/// `(to, from)` order regardless of posting thread interleaving —
+/// the determinism contract consumers rely on. Envelopes that share
+/// `(to, from)` keep their posting order (stable sort).
+pub struct GroupMailboxes<M> {
+    /// node→group routing (the owning partition's shape)
+    n: usize,
+    base: usize,
+    rem: usize,
+    boxes: Vec<Mutex<Vec<Envelope<M>>>>,
+}
+
+impl<M> GroupMailboxes<M> {
+    /// One empty mailbox per group of `groups`.
+    pub fn new(groups: &NodeGroups) -> Self {
+        GroupMailboxes {
+            n: groups.n,
+            base: groups.base,
+            rem: groups.rem,
+            boxes: (0..groups.len()).map(|_| Mutex::new(Vec::new()))
+                .collect(),
+        }
+    }
+
+    /// Number of group mailboxes.
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    fn group_of(&self, node: usize) -> usize {
+        assert!(node < self.n, "node {node} out of range {}", self.n);
+        let cut = (self.base + 1) * self.rem;
+        if node < cut {
+            node / (self.base + 1)
+        } else {
+            self.rem + (node - cut) / self.base
+        }
+    }
+
+    /// Post into the destination node's group box.
+    pub fn post(&self, env: Envelope<M>) {
+        let g = self.group_of(env.to);
+        self.boxes[g].lock().unwrap().push(env);
+    }
+
+    /// Convenience form of [`post`](GroupMailboxes::post).
+    pub fn post_to(&self, to: usize, from: usize, msg: M) {
+        self.post(Envelope { to, from, msg });
+    }
+
+    /// Total envelopes currently queued (tests / diagnostics).
+    pub fn pending(&self) -> usize {
+        self.boxes.iter().map(|b| b.lock().unwrap().len()).sum()
+    }
+
+    /// Move group `g`'s envelopes onto the end of `out` (the box keeps
+    /// its capacity), then sort the appended tail by `(to, from)`.
+    pub fn drain_group(&self, g: usize, out: &mut Vec<Envelope<M>>) {
+        let start = out.len();
+        {
+            let mut bx = self.boxes[g].lock().unwrap();
+            out.append(&mut bx);
+        }
+        out[start..].sort_by_key(|e| (e.to, e.from));
+    }
+
+    /// Drain every group in index order (the canonical global order).
+    pub fn drain_all(&self, out: &mut Vec<Envelope<M>>) {
+        for g in 0..self.boxes.len() {
+            self.drain_group(g, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_everything_contiguously() {
+        for n in [0usize, 1, 2, 7, 64, 65, 1000] {
+            for groups in [1usize, 2, 3, 8, 200] {
+                let ng = NodeGroups::new(n, groups);
+                assert!(ng.len() >= 1);
+                assert!(ng.len() <= n.max(1));
+                let mut next = 0usize;
+                for g in 0..ng.len() {
+                    let (s, e) = ng.bounds(g);
+                    assert_eq!(s, next, "gap at group {g} (n={n})");
+                    assert!(e >= s);
+                    next = e;
+                }
+                assert_eq!(next, n, "partition must cover 0..{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_sizes_are_balanced_and_bounded() {
+        let ng = NodeGroups::with_group_size(1000, 64);
+        assert_eq!(ng.len(), 16); // ceil(1000/64)
+        for g in 0..ng.len() {
+            let (s, e) = ng.bounds(g);
+            assert!(e - s <= 64, "group {g} exceeds the size bound");
+        }
+        // balanced within one node
+        let sizes: Vec<usize> =
+            (0..ng.len()).map(|g| ng.bounds(g).1 - ng.bounds(g).0).collect();
+        let mx = sizes.iter().max().unwrap();
+        let mn = sizes.iter().min().unwrap();
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn for_pool_multiplexes_large_and_spreads_small() {
+        // large fleet: many more groups than workers (multiplexing),
+        // group size bounded
+        let big = NodeGroups::for_pool(10_000, 8);
+        assert!(big.len() >= 10_000 / GROUP_NODES);
+        for g in 0..big.len() {
+            let (s, e) = big.bounds(g);
+            assert!(e - s <= GROUP_NODES);
+        }
+        // small fleet: one group per worker, full parallelism
+        let small = NodeGroups::for_pool(16, 8);
+        assert_eq!(small.len(), 8);
+        // tiny fleet: clamped to n
+        assert_eq!(NodeGroups::for_pool(3, 8).len(), 3);
+    }
+
+    #[test]
+    fn group_of_matches_bounds() {
+        for (n, groups) in [(10, 3), (64, 8), (1000, 17), (7, 7)] {
+            let ng = NodeGroups::new(n, groups);
+            for g in 0..ng.len() {
+                let (s, e) = ng.bounds(g);
+                for node in s..e {
+                    assert_eq!(ng.group_of(node), g, "n={n} node={node}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_visits_every_node_once_any_worker_count() {
+        for workers in [1usize, 2, 3, 7] {
+            let pool = WorkerPool::new(workers);
+            let mut ng = NodeGroups::new(23, 9);
+            let mut items: Vec<usize> = vec![0; 23];
+            ng.run(&pool, &mut items, |i, slot| {
+                *slot += i + 1;
+                Ok(())
+            })
+            .unwrap();
+            for (i, &v) in items.iter().enumerate() {
+                assert_eq!(v, i + 1, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn run2_keeps_slices_aligned() {
+        let pool = WorkerPool::new(4);
+        let mut ng = NodeGroups::new(17, 6);
+        let mut a: Vec<usize> = (0..17).collect();
+        let mut b: Vec<usize> = vec![0; 17];
+        ng.run2(&pool, &mut a, &mut b, |i, ai, bi| {
+            assert_eq!(*ai, i);
+            *bi = *ai * 2;
+            Ok(())
+        })
+        .unwrap();
+        for (i, &v) in b.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+
+    #[test]
+    fn more_groups_than_workers_all_run() {
+        // 32 groups over 3 workers: every group executes (multiplexed)
+        let pool = WorkerPool::new(3);
+        let mut ng = NodeGroups::new(256, 32);
+        assert_eq!(ng.len(), 32);
+        let count = AtomicUsize::new(0);
+        let mut items = vec![(); 256];
+        ng.run(&pool, &mut items, |_, _| {
+            count.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 256);
+    }
+
+    #[test]
+    fn earliest_group_error_wins() {
+        let pool = WorkerPool::new(4);
+        let mut ng = NodeGroups::new(16, 8);
+        let mut items = vec![0u8; 16];
+        let err = ng
+            .run(&pool, &mut items, |i, _| {
+                if i >= 3 {
+                    anyhow::bail!("failed at {i}");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        // groups of 2: group 1 fails first at node 3; later groups
+        // also fail but group order must report the earliest
+        assert_eq!(err.to_string(), "failed at 3");
+    }
+
+    #[test]
+    fn sequential_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let mut ng = NodeGroups::new(8, 4);
+        let mut items = vec![0usize; 8];
+        ng.run(&pool, &mut items, |i, slot| {
+            *slot = i;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(items, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn mailboxes_route_by_destination_group() {
+        let ng = NodeGroups::new(100, 10);
+        let mb: GroupMailboxes<u64> = GroupMailboxes::new(&ng);
+        assert_eq!(mb.len(), 10);
+        mb.post_to(5, 99, 500);
+        mb.post_to(95, 0, 9500);
+        assert_eq!(mb.pending(), 2);
+        let mut out = Vec::new();
+        mb.drain_group(ng.group_of(5), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], Envelope { to: 5, from: 99, msg: 500 });
+        out.clear();
+        mb.drain_group(ng.group_of(95), &mut out);
+        assert_eq!(out[0].msg, 9500);
+        assert_eq!(mb.pending(), 0);
+    }
+
+    #[test]
+    fn drain_order_is_canonical_regardless_of_post_order() {
+        let ng = NodeGroups::new(12, 3);
+        let mb: GroupMailboxes<&'static str> = GroupMailboxes::new(&ng);
+        // post in a scrambled order, from scrambled senders
+        mb.post_to(11, 3, "k");
+        mb.post_to(0, 9, "b");
+        mb.post_to(7, 1, "f");
+        mb.post_to(0, 2, "a");
+        mb.post_to(7, 4, "g");
+        mb.post_to(3, 0, "c");
+        let mut out = Vec::new();
+        mb.drain_all(&mut out);
+        let keys: Vec<(usize, usize)> =
+            out.iter().map(|e| (e.to, e.from)).collect();
+        assert_eq!(
+            keys,
+            vec![(0, 2), (0, 9), (3, 0), (7, 1), (7, 4), (11, 3)],
+            "global (to, from) order"
+        );
+        let msgs: Vec<&str> = out.iter().map(|e| e.msg).collect();
+        assert_eq!(msgs, vec!["a", "b", "c", "f", "g", "k"]);
+    }
+
+    #[test]
+    fn concurrent_posts_drain_deterministically() {
+        // many workers post through the group run; the drained order
+        // must be the canonical one for any worker count
+        let expect: Vec<(usize, usize)> =
+            (0..64).map(|i| (63 - i, i)).collect();
+        let mut orders = Vec::new();
+        for workers in [1usize, 3, 8] {
+            let pool = WorkerPool::new(workers);
+            let mut ng = NodeGroups::new(64, 16);
+            let mb: GroupMailboxes<usize> = GroupMailboxes::new(&ng);
+            let mut items = vec![(); 64];
+            ng.run(&pool, &mut items, |i, _| {
+                // cross-group traffic: node i writes to node 63−i
+                mb.post_to(63 - i, i, i * 10);
+                Ok(())
+            })
+            .unwrap();
+            let mut out = Vec::new();
+            mb.drain_all(&mut out);
+            let keys: Vec<(usize, usize)> =
+                out.iter().map(|e| (e.to, e.from)).collect();
+            let mut sorted = expect.clone();
+            sorted.sort_unstable();
+            assert_eq!(keys, sorted, "workers={workers}");
+            orders.push(out.iter().map(|e| e.msg).collect::<Vec<_>>());
+        }
+        assert!(orders.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn drain_retains_box_capacity() {
+        let ng = NodeGroups::new(8, 2);
+        let mb: GroupMailboxes<u32> = GroupMailboxes::new(&ng);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            for i in 0..8 {
+                mb.post_to(i, i, i as u32);
+            }
+            out.clear();
+            mb.drain_all(&mut out);
+            assert_eq!(out.len(), 8);
+        }
+    }
+}

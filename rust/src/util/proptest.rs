@@ -316,6 +316,84 @@ mod tests {
     }
 
     #[test]
+    fn prop_sparse_metropolis_is_bitwise_equal_to_dense_oracle() {
+        // PR 8 satellite: the direct sparse Metropolis constructor —
+        // the only builder above DENSE_ORACLE_MAX — must reproduce the
+        // dense construction BITWISE on arbitrary random graphs: same
+        // neighbor ordering, same f64 bits in every weight
+        use crate::config::TopologyKind;
+        use crate::topology::{
+            metropolis_weights, SparseTopology, Topology,
+        };
+        check("sparse metropolis == dense oracle", 60, |g| {
+            let n = g.usize_in(2..65);
+            let p = g.f64_in(0.05..0.9);
+            let seed = g.rng().next_u64();
+            let t = Topology::build(
+                &TopologyKind::Random { p },
+                n,
+                seed,
+            );
+            let direct = SparseTopology::metropolis(&t.adj);
+            let oracle = SparseTopology::from_dense(
+                &metropolis_weights(&t.adj),
+            );
+            assert_eq!(direct.n(), oracle.n());
+            for i in 0..n {
+                assert_eq!(
+                    direct.self_weight(i).to_bits(),
+                    oracle.self_weight(i).to_bits(),
+                    "node {i}: self weight bits differ"
+                );
+                let (dr, or) = (direct.row(i), oracle.row(i));
+                assert_eq!(dr.len(), or.len(), "row {i} length");
+                for (a, b) in dr.iter().zip(or) {
+                    assert_eq!(a.0, b.0, "row {i}: neighbor order");
+                    assert_eq!(
+                        a.1.to_bits(),
+                        b.1.to_bits(),
+                        "row {i}: weight bits for neighbor {}",
+                        a.0
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_power_zeta_matches_jacobi_within_1e6() {
+        // PR 8 satellite: deflated power iteration at the Oracle
+        // budget agrees with the dense Jacobi ζ within 1e-6 on
+        // arbitrary Metropolis graphs n ≤ 64 — including disconnected
+        // draws (ζ = 1) and near-degenerate spectra
+        use crate::config::TopologyKind;
+        use crate::linalg::eigen::second_largest_abs_eigenvalue;
+        use crate::linalg::power::PowerBudget;
+        use crate::topology::{
+            metropolis_weights, SparseTopology, Topology,
+        };
+        check("power zeta == jacobi", 40, |g| {
+            let n = g.usize_in(2..65);
+            let p = g.f64_in(0.05..0.9);
+            let seed = g.rng().next_u64();
+            let t = Topology::build(
+                &TopologyKind::Random { p },
+                n,
+                seed,
+            );
+            let sp = SparseTopology::metropolis(&t.adj);
+            let z_pow = sp.zeta_power(PowerBudget::Oracle);
+            let z_jac = second_largest_abs_eigenvalue(
+                &metropolis_weights(&t.adj),
+            );
+            assert!(
+                (z_pow - z_jac).abs() <= 1e-6,
+                "power {z_pow} vs jacobi {z_jac} (n={n}, p={p})"
+            );
+        });
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let mut out1 = Vec::new();
         let mut out2 = Vec::new();

@@ -423,6 +423,78 @@ fn traced_replay_is_byte_identical_to_untraced() {
     let _ = std::fs::remove_file(&apath);
 }
 
+// ---- large-fleet scale presets -------------------------------------
+//
+// PR 8 acceptance: the 4096-node random-regular and 10k-node torus
+// presets replay to byte-identical event digests and logs — at full
+// node count (the sparse state, group multiplexing, and arena queue
+// all engaged), with and without churn, on both engines. Rounds are
+// shrunk; throughput and RSS belong to the bench suite.
+
+fn scale_cfg(name: &str, churn: bool) -> ExperimentConfig {
+    let (mut cfg, mut net) = lmdfl::experiments::fig_time::preset(
+        name,
+        lmdfl::experiments::Scale::Quick,
+    )
+    .unwrap();
+    cfg.rounds = 2;
+    if churn {
+        net.churn = ChurnConfig {
+            interval_rounds: 1,
+            link_fail_prob: 0.1,
+            link_heal_prob: 0.5,
+            node_leave_prob: 0.02,
+            node_return_prob: 0.5,
+        };
+    }
+    cfg.network = Some(net);
+    cfg
+}
+
+fn assert_scale_sync_replay(name: &str) {
+    for churn in [false, true] {
+        let cfg = scale_cfg(name, churn);
+        let (mut a, digest_a, events_a) = run_once(&cfg);
+        let (mut b, digest_b, events_b) = run_once(&cfg);
+        assert_eq!(
+            digest_a, digest_b,
+            "{name} churn={churn}: event order diverged"
+        );
+        assert_eq!(events_a, events_b);
+        for r in a.records.iter_mut().chain(b.records.iter_mut()) {
+            r.wall_secs = 0.0;
+        }
+        assert_eq!(a.to_csv(), b.to_csv(), "{name} churn={churn}");
+    }
+}
+
+fn assert_scale_async_replay(name: &str) {
+    for churn in [false, true] {
+        let cfg = scale_cfg(name, churn);
+        assert_async_replay_identical(&cfg);
+    }
+}
+
+#[test]
+fn scale_preset_random_regular_4096_sync_replays_identically() {
+    assert_scale_sync_replay("random-regular-4096");
+}
+
+#[test]
+fn scale_preset_torus_10k_sync_replays_identically() {
+    assert_scale_sync_replay("torus-10k");
+}
+
+#[test]
+fn scale_preset_random_regular_4096_async_replays_identically() {
+    assert_scale_async_replay("async-random-regular-4096");
+}
+
+#[test]
+fn scale_preset_torus_10k_async_replays_identically() {
+    assert_scale_async_replay("async-torus-10k");
+}
+
 #[test]
 fn churn_rebuilds_stay_symmetric_doubly_stochastic() {
     let base = Topology::build(&TopologyKind::Torus, 16, 7);
@@ -439,11 +511,11 @@ fn churn_rebuilds_stay_symmetric_doubly_stochastic() {
         if let Some(t) = state.pre_round(k) {
             rebuilds += 1;
             assert!(
-                t.c.is_symmetric(1e-12),
+                t.dense().is_symmetric(1e-12),
                 "round {k}: C not symmetric"
             );
             assert!(
-                t.c.is_doubly_stochastic(1e-9),
+                t.dense().is_doubly_stochastic(1e-9),
                 "round {k}: C not doubly stochastic"
             );
             assert!(

@@ -1,0 +1,201 @@
+//! Streamed-vs-buffered run output parity: the streaming sinks must be
+//! drop-in replacements for the buffered logs — a `CsvStream` produces
+//! the exact bytes `RunLog::to_csv` would have, `RunLog::from_csv`
+//! round-trips the streamed file, the async JSONL stream carries the
+//! same documents `AsyncRunLog::nodes` would have buffered, and a
+//! streamed run leaves nothing resident that the sink already consumed.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use lmdfl::agossip::{AsyncConfig, AsyncGossipEngine, WaitPolicy};
+use lmdfl::config::{
+    DatasetKind, EngineMode, ExperimentConfig, LrSchedule, QuantizerKind,
+    TopologyKind,
+};
+use lmdfl::metrics::{
+    CsvStream, LogSink, RecordSink, RoundRecord, RunLog, CSV_HEADER,
+};
+use lmdfl::simnet::{ComputeModel, Fabric, LinkModel, NetworkConfig};
+use lmdfl::topology::Topology;
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "streaming-parity".into();
+    cfg.seed = 31;
+    cfg.nodes = 8;
+    cfg.tau = 2;
+    cfg.rounds = 6;
+    cfg.batch_size = 16;
+    cfg.lr = LrSchedule::fixed(0.05);
+    cfg.topology = TopologyKind::Torus;
+    cfg.quantizer = QuantizerKind::LloydMax { s: 8, iters: 6 };
+    cfg.dataset = DatasetKind::Blobs {
+        train: 240,
+        test: 80,
+        dim: 8,
+        classes: 3,
+    };
+    // sparse eval cadence: NaN accuracy rows must survive the
+    // stream → parse → re-serialize cycle too
+    cfg.eval_every = 2;
+    cfg
+}
+
+fn net() -> NetworkConfig {
+    NetworkConfig {
+        link: LinkModel {
+            latency_s: 0.002,
+            bandwidth_bps: 2e6,
+            jitter_s: 0.001,
+            drop_prob: 0.05,
+        },
+        link_hetero_spread: 0.4,
+        compute: ComputeModel {
+            base_step_s: 1e-3,
+            hetero_spread: 0.5,
+            straggler_prob: 0.1,
+            straggler_slowdown: 4.0,
+        },
+        churn: Default::default(),
+    }
+}
+
+/// Feed one run's records to two sinks at once: the byte comparison
+/// then covers the exact same record sequence, wall-clock column and
+/// all.
+struct Tee<'a>(&'a mut dyn RecordSink, &'a mut dyn RecordSink);
+
+impl RecordSink for Tee<'_> {
+    fn record(&mut self, r: &RoundRecord) -> anyhow::Result<()> {
+        self.0.record(r)?;
+        self.1.record(r)
+    }
+}
+
+#[test]
+fn streamed_csv_is_byte_identical_to_buffered_and_round_trips() {
+    let cfg = small_cfg();
+    let mut trainer = lmdfl::dfl::Trainer::build(&cfg).unwrap();
+    let mut csv = CsvStream::new(Vec::new()).unwrap();
+    let mut buf = LogSink::new(&cfg.name);
+    let summary = {
+        let mut tee = Tee(&mut csv, &mut buf);
+        trainer.engine_mut().run_streamed(None, &mut tee).unwrap()
+    };
+    let text = String::from_utf8(csv.finish().unwrap()).unwrap();
+    assert_eq!(
+        text,
+        buf.0.to_csv(),
+        "streamed bytes != buffered to_csv"
+    );
+    assert!(text.starts_with(CSV_HEADER));
+    // the streamed file parses back losslessly and re-serializes to
+    // the same bytes
+    let back = RunLog::from_csv(&cfg.name, &text).unwrap();
+    assert_eq!(back.records.len(), cfg.rounds);
+    assert_eq!(back.to_csv(), text);
+    // the summary carries the buffered log's scalar facts
+    let last = buf.0.records.last().unwrap();
+    assert_eq!(summary.rounds, cfg.rounds);
+    assert_eq!(summary.last_loss.to_bits(), last.loss.to_bits());
+    assert_eq!(summary.total_bits, last.bits_per_link);
+    assert_eq!(summary.wire_bytes, last.wire_bytes);
+}
+
+#[test]
+fn streamed_simulated_run_matches_buffered_replay() {
+    let mut cfg = small_cfg();
+    cfg.network = Some(net());
+    let netcfg = cfg.network.clone().unwrap();
+    let topo = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+
+    // buffered reference run
+    let mut fabric_a = Fabric::new(&netcfg, &topo, cfg.seed);
+    let mut t_a = lmdfl::dfl::Trainer::build(&cfg).unwrap();
+    let mut log =
+        t_a.engine_mut().run_simulated(&mut fabric_a).unwrap();
+
+    // streamed replay: same seed, same fabric, CSV straight to a sink
+    let mut fabric_b = Fabric::new(&netcfg, &topo, cfg.seed);
+    let mut t_b = lmdfl::dfl::Trainer::build(&cfg).unwrap();
+    let mut csv = CsvStream::new(Vec::new()).unwrap();
+    let summary = t_b
+        .engine_mut()
+        .run_streamed(Some(&mut fabric_b), &mut csv)
+        .unwrap();
+    assert_eq!(
+        fabric_a.event_digest(),
+        fabric_b.event_digest(),
+        "streaming changed the event order"
+    );
+    let text = String::from_utf8(csv.finish().unwrap()).unwrap();
+    let mut back = RunLog::from_csv(&cfg.name, &text).unwrap();
+    // wall_secs is the one deliberately real-time column
+    for r in log.records.iter_mut().chain(back.records.iter_mut()) {
+        r.wall_secs = 0.0;
+    }
+    assert_eq!(log.to_csv(), back.to_csv());
+    assert_eq!(
+        summary.virtual_secs.to_bits(),
+        log.records.last().unwrap().virtual_secs.to_bits()
+    );
+}
+
+/// A `Write` that keeps its bytes reachable after the engine consumed
+/// the boxed sink.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().write(b)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn async_node_records_stream_as_identical_jsonl() {
+    let mut cfg = small_cfg();
+    cfg.mode = EngineMode::Async;
+    cfg.agossip = Some(AsyncConfig {
+        wait_for: WaitPolicy::Quorum { k: 2 },
+        staleness_lambda: 0.5,
+        quorum_timeout_s: 0.2,
+    });
+    cfg.network = Some(net());
+
+    // buffered reference
+    let a = AsyncGossipEngine::new(&cfg).unwrap().run().unwrap();
+    assert!(!a.nodes.is_empty());
+
+    // streamed replay
+    let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let mut eng = AsyncGossipEngine::new(&cfg).unwrap();
+    eng.stream_node_records(Box::new(buf.clone()));
+    let b = eng.run().unwrap();
+    assert_eq!(
+        a.event_digest, b.event_digest,
+        "streaming changed the event order"
+    );
+    assert!(
+        b.nodes.is_empty(),
+        "streamed run still buffered node records"
+    );
+    let text =
+        String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    let expect: String = a
+        .nodes
+        .iter()
+        .map(|r| format!("{}\n", r.to_json().to_string()))
+        .collect();
+    assert_eq!(text, expect, "JSONL stream != buffered documents");
+    // merged logs agree on everything but real wall-clock
+    assert_eq!(a.merged.records.len(), b.merged.records.len());
+    for (x, y) in a.merged.records.iter().zip(&b.merged.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        assert_eq!(x.virtual_secs.to_bits(), y.virtual_secs.to_bits());
+    }
+}
