@@ -1,0 +1,110 @@
+//! Micro-bench: the `lmdfl analyse` hot loop — trace parsing and
+//! rank-merged aggregation throughput.
+//!
+//! A sweep's analyse pass reads every cell's JSONL trace through
+//! `obs::export::parse_trace` and rolls it up with `obs::aggregate`;
+//! on wide sweeps that is the dominant cost after the cells
+//! themselves. This bench records a realistic trace through the
+//! public probe API (spans, virtual spans, counters, histograms),
+//! then measures lines/s through the parser and records/s through
+//! each aggregation table. Reports into the shared `BENCH_*.json`
+//! pipeline (including peak RSS).
+//!
+//!   cargo bench --bench micro_obs
+//!   LMDFL_BENCH_QUICK=1 LMDFL_BENCH_JSON=bench-reports \
+//!       cargo bench --bench micro_obs   # CI smoke + JSON artifact
+
+use lmdfl::bench::{black_box, Bencher};
+use lmdfl::obs;
+
+/// Record `rounds` rounds' worth of probes into a JSONL trace file
+/// and hand back its text.
+fn recorded_trace(rounds: usize) -> String {
+    let dir = std::env::temp_dir().join(format!(
+        "lmdfl-micro-obs-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    obs::start(
+        &obs::ObserveConfig {
+            trace_path: Some(path.display().to_string()),
+            chrome_path: None,
+        },
+        0,
+    );
+    let keys: Vec<String> =
+        (0..8).map(|k| format!("0->{k}")).collect();
+    for round in 0..rounds {
+        {
+            let _g = obs::span("round");
+            let _inner = obs::span("mix");
+            black_box(round);
+        }
+        obs::vspan(
+            "virtual_round",
+            round % 16,
+            (round as u64) * 1_000,
+            (round as u64) * 1_000 + 750,
+        );
+        for key in &keys {
+            obs::counter("frame_send", key, 1);
+        }
+        obs::hist("wait_ns", ((round as u64) % 4096) + 1);
+    }
+    obs::stop().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    text
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("LMDFL_BENCH_QUICK").is_ok();
+    let rounds = if quick { 2_000 } else { 20_000 };
+    let text = recorded_trace(rounds);
+    let lines = text.lines().count();
+
+    b.run_elems(
+        &format!("parse_trace {lines} lines"),
+        lines,
+        || {
+            let tf = obs::export::parse_trace(&text).unwrap();
+            black_box(tf.lines);
+        },
+    );
+
+    let tf = obs::export::parse_trace(&text).unwrap();
+    b.run_elems(
+        &format!("aggregate spans ({} recs)", tf.spans.len()),
+        tf.spans.len(),
+        || {
+            let rows = obs::aggregate::spans(&tf);
+            black_box(rows.len());
+        },
+    );
+    b.run_elems(
+        &format!("aggregate counters ({} recs)", tf.counters.len()),
+        tf.counters.len(),
+        || {
+            let rows = obs::aggregate::counters(&tf);
+            black_box(rows.len());
+        },
+    );
+    b.run_elems(
+        &format!("aggregate hists ({} recs)", tf.hists.len()),
+        tf.hists.len(),
+        || {
+            let rows = obs::aggregate::hists(&tf);
+            black_box(rows.len());
+        },
+    );
+
+    if let Some(rss) = lmdfl::bench::peak_rss_bytes() {
+        println!(
+            "peak rss: {:.1} MiB",
+            rss as f64 / (1 << 20) as f64
+        );
+    }
+    b.finish("micro_obs");
+}

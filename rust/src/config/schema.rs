@@ -645,6 +645,19 @@ impl ExperimentConfig {
         Json::obj(pairs)
     }
 
+    /// The canonical identity of this experiment: [`Self::to_json`]
+    /// with the `observe:` section stripped. Tracing never affects
+    /// results (traced runs are byte-identical to untraced ones), so
+    /// two configs differing only in trace sink paths describe the
+    /// same experiment — sweep config hashing and resume keying build
+    /// on this form. Object keys are BTreeMap-sorted, so the compact
+    /// serialization is deterministic.
+    pub fn identity_json(&self) -> Json {
+        let mut stripped = self.clone();
+        stripped.observe = None;
+        stripped.to_json()
+    }
+
     pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
         let d = ExperimentConfig::default();
         let cfg = ExperimentConfig {
@@ -757,6 +770,22 @@ mod tests {
         let text = cfg.to_json().to_pretty();
         let back = ExperimentConfig::parse(&text).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn identity_json_ignores_observe_only() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "ident".into();
+        let bare = cfg.identity_json().to_string();
+        cfg.observe = Some(crate::obs::ObserveConfig {
+            trace_path: Some("/tmp/a/trace.jsonl".into()),
+            chrome_path: None,
+        });
+        assert_eq!(cfg.identity_json().to_string(), bare);
+        assert!(!bare.contains("observe"));
+        // anything else still changes the identity
+        cfg.seed = 99;
+        assert_ne!(cfg.identity_json().to_string(), bare);
     }
 
     #[test]

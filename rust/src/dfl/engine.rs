@@ -538,6 +538,7 @@ impl DflEngine {
         });
         self.opts.drop_prob = saved_drop_prob;
         result?;
+        summary.stamp_peak_rss();
         Ok(summary)
     }
 

@@ -149,6 +149,28 @@ impl Trainer {
         net::run_threaded(cfg, &topology, dataset, &factory, opts)
     }
 
+    /// Streamed variant of [`run_threaded`](Self::run_threaded): the
+    /// coordinator hands each finished round record to `sink` instead
+    /// of buffering a [`RunLog`] — same records, same order, O(fleet)
+    /// resident memory (the threaded report plane no longer buffers
+    /// the run).
+    pub fn run_threaded_streamed(
+        cfg: &ExperimentConfig,
+        opts: NetOptions,
+        sink: &mut dyn crate::metrics::RecordSink,
+    ) -> anyhow::Result<crate::metrics::RunSummary> {
+        cfg.validate()?;
+        let topology = Topology::build(&cfg.topology, cfg.nodes, cfg.seed);
+        let dataset = Arc::new(Dataset::build(&cfg.dataset, cfg.seed));
+        let cfg2 = cfg.clone();
+        let ds2 = Arc::clone(&dataset);
+        let factory =
+            move |_i: usize| build_backend(&cfg2, &ds2);
+        net::run_threaded_streamed(
+            cfg, &topology, dataset, &factory, opts, sink,
+        )
+    }
+
     /// Borrow the engine (examples/benches that drive rounds manually).
     pub fn engine_mut(&mut self) -> &mut DflEngine {
         &mut self.engine

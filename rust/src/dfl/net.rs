@@ -34,7 +34,7 @@
 //! index/feature/label buffers are all reused across rounds, and the
 //! mailbox stash only moves `Arc` handles around.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -45,7 +45,9 @@ use crate::config::{ExperimentConfig, LrSchedule, QuantizerKind};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::error::LmdflError;
-use crate::metrics::{RoundRecord, RunLog};
+use crate::metrics::{
+    LogSink, RecordSink, RoundRecord, RunLog, RunSummary,
+};
 use crate::net::{
     channel_mesh, connect_retry, Delivery, FaultDelivery, Frame, Mailbox,
     TcpDelivery, TcpOptions, TransportConfig, TransportKind,
@@ -502,12 +504,17 @@ fn run_node(
     Ok(())
 }
 
-/// Aggregate per-node round reports into the [`RunLog`]: average the
-/// eval snapshots (sorted by node so float summation order is
-/// identical on every transport), evaluate, accumulate wire bits.
+/// Aggregate per-node round reports into streamed round records:
+/// average the eval snapshots (sorted by node so float summation
+/// order is identical on every transport), evaluate, accumulate wire
+/// bits, and hand each finished [`RoundRecord`] to `sink` — nothing
+/// is buffered beyond rounds still waiting on a straggler's report.
+/// Records are emitted strictly in round order (a round may finish
+/// ahead of an earlier one on the TCP report plane), and cumulative
+/// bit accounting happens at emission so the running totals are in
+/// round order too.
 #[allow(clippy::too_many_arguments)]
 fn coordinate(
-    name: &str,
     n: usize,
     rounds: usize,
     lr: &LrSchedule,
@@ -516,11 +523,21 @@ fn coordinate(
     dataset: &Dataset,
     eval_backend: &mut dyn LocalUpdate,
     report_rx: Receiver<anyhow::Result<NodeReport>>,
-) -> anyhow::Result<RunLog> {
-    let mut log = RunLog::new(name);
+    sink: &mut dyn RecordSink,
+) -> anyhow::Result<RunSummary> {
+    let mut summary = RunSummary::default();
     let mut cum_bits = 0u64;
     let mut cum_wire_bytes = 0u64;
     let mut per_round: HashMap<usize, Vec<NodeReport>> = HashMap::new();
+    /// One finished round waiting for its turn in the emit order.
+    struct DoneRound {
+        wire: u64,
+        levels: usize,
+        loss: f64,
+        acc: f64,
+    }
+    let mut ready: BTreeMap<usize, DoneRound> = BTreeMap::new();
+    let mut next_emit = 0usize;
     let mut done_rounds = 0usize;
     while done_rounds < rounds {
         let report = match report_rx.recv_timeout(MAILBOX_DEADLINE) {
@@ -538,65 +555,71 @@ fn coordinate(
         let k = report.round;
         let entry = per_round.entry(k).or_default();
         entry.push(report);
-        if entry.len() == n {
-            let mut reports = per_round.remove(&k).unwrap();
-            // deterministic float-summation order across transports
-            reports.sort_by_key(|r| r.node);
-            let wire: u64 = reports.iter().map(|r| r.wire_bits).sum();
-            let levels =
-                reports.iter().map(|r| r.levels).sum::<usize>() / n;
-            let lr_k = lr.at(k);
-            let (loss, acc) = if reports
-                .iter()
-                .all(|r| r.params.is_some())
-            {
-                let mut avg = vec![0.0f32; param_count];
-                for r in &reports {
-                    for (a, &p) in
-                        avg.iter_mut().zip(r.params.as_ref().unwrap())
-                    {
-                        *a += p;
-                    }
+        if entry.len() < n {
+            continue;
+        }
+        let mut reports = per_round.remove(&k).unwrap();
+        // deterministic float-summation order across transports
+        reports.sort_by_key(|r| r.node);
+        let wire: u64 = reports.iter().map(|r| r.wire_bits).sum();
+        let levels =
+            reports.iter().map(|r| r.levels).sum::<usize>() / n;
+        let (loss, acc) = if reports
+            .iter()
+            .all(|r| r.params.is_some())
+        {
+            let mut avg = vec![0.0f32; param_count];
+            for r in &reports {
+                for (a, &p) in
+                    avg.iter_mut().zip(r.params.as_ref().unwrap())
+                {
+                    *a += p;
                 }
-                avg.iter_mut().for_each(|x| *x /= n as f32);
-                let cap = dataset.train_n().min(2048);
-                let idx: Vec<usize> = (0..cap).collect();
-                let (x, y) = dataset.gather_batch(&idx);
-                let (l, _) = eval_backend.evaluate(&avg, &x, &y)?;
-                let tcap = dataset.test_n().min(2048);
-                let acc = if tcap > 0 {
-                    let tx = &dataset.test_x[..tcap * dataset.feat_dim];
-                    let ty = &dataset.test_y[..tcap];
-                    let (_, c) = eval_backend.evaluate(&avg, tx, ty)?;
-                    c as f64 / tcap as f64
-                } else {
-                    f64::NAN
-                };
-                (l, acc)
+            }
+            avg.iter_mut().for_each(|x| *x /= n as f32);
+            let cap = dataset.train_n().min(2048);
+            let idx: Vec<usize> = (0..cap).collect();
+            let (x, y) = dataset.gather_batch(&idx);
+            let (l, _) = eval_backend.evaluate(&avg, &x, &y)?;
+            let tcap = dataset.test_n().min(2048);
+            let acc = if tcap > 0 {
+                let tx = &dataset.test_x[..tcap * dataset.feat_dim];
+                let ty = &dataset.test_y[..tcap];
+                let (_, c) = eval_backend.evaluate(&avg, tx, ty)?;
+                c as f64 / tcap as f64
             } else {
-                (f64::NAN, f64::NAN)
+                f64::NAN
             };
+            (l, acc)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        ready.insert(k, DoneRound { wire, levels, loss, acc });
+        done_rounds += 1;
+        while let Some(d) = ready.remove(&next_emit) {
             // per-directed-link average of measured wire bits
-            cum_bits += wire / links;
-            cum_wire_bytes += wire / 8;
-            log.push(RoundRecord {
-                round: k + 1,
-                loss,
-                accuracy: acc,
+            cum_bits += d.wire / links;
+            cum_wire_bytes += d.wire / 8;
+            let rec = RoundRecord {
+                round: next_emit + 1,
+                loss: d.loss,
+                accuracy: d.acc,
                 bits_per_link: cum_bits,
                 distortion: f64::NAN,
-                levels,
-                lr: lr_k,
+                levels: d.levels,
+                lr: lr.at(next_emit),
                 wall_secs: 0.0,
                 virtual_secs: 0.0,
                 straggler_wait_secs: 0.0,
                 wire_bytes: cum_wire_bytes,
-            });
-            done_rounds += 1;
+            };
+            sink.record(&rec)?;
+            summary.observe(&rec);
+            next_emit += 1;
         }
     }
-    log.records.sort_by_key(|r| r.round);
-    Ok(log)
+    summary.stamp_peak_rss();
+    Ok(summary)
 }
 
 /// Build one fault-wrapped (when the link is non-ideal) endpoint.
@@ -626,6 +649,26 @@ pub(crate) fn run_threaded(
     factory: BackendFactory<'_>,
     opts: NetOptions,
 ) -> anyhow::Result<RunLog> {
+    let mut sink = LogSink::new(&cfg.name);
+    run_threaded_streamed(
+        cfg, topology, dataset, factory, opts, &mut sink,
+    )?;
+    Ok(sink.0)
+}
+
+/// Streamed variant of [`run_threaded`]: the coordinator hands each
+/// finished round record to `sink` instead of buffering a [`RunLog`]
+/// — the threaded report plane no longer holds the whole run in
+/// memory (the ROADMAP scale residual this closes). Byte-for-byte the
+/// same records in the same order as the buffered wrapper.
+pub(crate) fn run_threaded_streamed(
+    cfg: &ExperimentConfig,
+    topology: &Topology,
+    dataset: Arc<Dataset>,
+    factory: BackendFactory<'_>,
+    opts: NetOptions,
+    sink: &mut dyn RecordSink,
+) -> anyhow::Result<RunSummary> {
     let n = cfg.nodes;
     // probe instance: shared init params + param_count (coordinator
     // reuses it for evaluation)
@@ -655,7 +698,7 @@ pub(crate) fn run_threaded(
     };
 
     let (report_tx, report_rx) = channel::<anyhow::Result<NodeReport>>();
-    let result: anyhow::Result<RunLog> = std::thread::scope(|scope| {
+    let result: anyhow::Result<RunSummary> = std::thread::scope(|scope| {
         for (i, endpoint) in endpoints.into_iter().enumerate() {
             let endpoint = wrap_link(endpoint, &opts.link, cfg.seed, i);
             let mut ctx = node_ctx(
@@ -681,7 +724,6 @@ pub(crate) fn run_threaded(
 
         let links = topology.directed_links().max(1) as u64;
         coordinate(
-            &cfg.name,
             n,
             cfg.rounds,
             &cfg.lr,
@@ -690,6 +732,7 @@ pub(crate) fn run_threaded(
             &dataset,
             eval_backend.as_mut(),
             report_rx,
+            sink,
         )
     });
     result
@@ -824,8 +867,9 @@ pub fn run_node_process(
     let shutdown = Arc::new(AtomicBool::new(false));
     let (report_tx, report_rx) = channel::<anyhow::Result<NodeReport>>();
     let links = topology.directed_links().max(1) as u64;
+    let mut sink = LogSink::new(&cfg.name);
 
-    let result = std::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         {
             let flag = Arc::clone(&shutdown);
             let tx = report_tx.clone();
@@ -853,7 +897,6 @@ pub fn run_node_process(
         }
         drop(report_tx);
         let out = coordinate(
-            &cfg.name,
             n,
             cfg.rounds,
             &cfg.lr,
@@ -862,11 +905,12 @@ pub fn run_node_process(
             &dataset,
             eval_backend.as_mut(),
             report_rx,
+            &mut sink,
         );
         shutdown.store(true, Ordering::Relaxed);
         out
     })?;
-    Ok(Some(result))
+    Ok(Some(sink.0))
 }
 
 #[cfg(test)]

@@ -322,6 +322,39 @@ pub fn run_simulated_labeled(
     Ok(Curve { label: label.to_string(), log })
 }
 
+/// Rebuild fig-time curves from a sweep's per-cell round CSVs
+/// instead of re-running anything: one curve per completed cell,
+/// labeled by cell id. Artifact paths in the manifest are relative
+/// to its directory.
+pub fn curves_from_sweep(
+    manifest: &std::path::Path,
+) -> anyhow::Result<Vec<Curve>> {
+    let m = crate::sweep::SweepManifest::load(manifest)?;
+    let dir = manifest
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."));
+    let mut curves = Vec::new();
+    for cell in &m.cells {
+        if !cell.ok() {
+            continue;
+        }
+        let path = dir.join(&cell.rounds_csv);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", path.display())
+        })?;
+        curves.push(Curve {
+            label: cell.id.clone(),
+            log: crate::metrics::RunLog::from_csv(&cell.id, &text)?,
+        });
+    }
+    anyhow::ensure!(
+        !curves.is_empty(),
+        "sweep manifest {} has no completed cells",
+        manifest.display()
+    );
+    Ok(curves)
+}
+
 /// Panel: training loss at cumulative virtual seconds, per curve.
 pub fn render_loss_vs_time(curves: &[Curve]) -> String {
     let rounds = curves

@@ -114,6 +114,24 @@
 //! `about:tracing` / Perfetto. Tracing never perturbs the determinism
 //! contract: traced simnet runs produce byte-identical event digests.
 //!
+//! ## Sweeps & analysis ([`sweep`])
+//!
+//! `lmdfl sweep` expands a grid (quantizer × topology × network
+//! regime × engine mode × seed repeats) over a base config and runs
+//! every cell through the existing `train` paths with tracing always
+//! on. Each cell runs as a subprocess in its own content-addressed
+//! directory (`cells/<config-hash>/`, FNV-1a over the config's
+//! identity JSON), sampled at a fixed cadence via `/proc` (CPU% and
+//! RSS to `resources.jsonl`, schema `lmdfl-resources-v1`); completed
+//! cells are skipped on re-run, so interrupted sweeps resume. One
+//! `manifest.json` (schema `lmdfl-sweep-v1`) records axes, per-cell
+//! outcomes, artifact paths and timings. `lmdfl analyse
+//! <manifest.json>` rolls every cell's trace up with
+//! [`obs::aggregate`] into four tidy CSVs (cells / spans / counters /
+//! histograms), and `lmdfl fig-time --from-sweep <manifest.json>`
+//! rebuilds the loss-vs-virtual-time tables straight from sweep
+//! artifacts without re-running anything.
+//!
 //! ## Bench reports
 //!
 //! Bench targets print a criterion-like text table and, when
@@ -147,6 +165,7 @@ pub mod prelude;
 pub mod quant;
 pub mod runtime;
 pub mod simnet;
+pub mod sweep;
 pub mod topology;
 pub mod util;
 pub mod xla;

@@ -9,6 +9,8 @@
 //!   fig7       regenerate Fig. 7 (topology sweep)
 //!   fig8       regenerate Fig. 8 (--variable-lr for panels b/e)
 //!   fig-time   loss vs virtual time on a simulated fabric (simnet)
+//!   sweep      run a grid of configs to one manifest (sweep module)
+//!   analyse    aggregate a sweep's traces into tidy CSVs
 //!   topo       inspect a topology (confusion matrix, ζ, α)
 //!   quant      inspect quantizer bit costs and distortion bounds
 //!   artifacts  list AOT artifacts from the manifest
@@ -67,6 +69,21 @@ commands:
   fig-time   --preset torus-16|async-torus-16|random-regular-4096|
              async-random-regular-4096|torus-10k|async-torus-10k
              [--target-loss F] [--full]
+             [--from-sweep manifest.json]  rebuild the tables from a
+             sweep's artifacts instead of re-running
+  sweep      run a grid of configs, one manifest + traced artifacts:
+             base config from --preset <fig-time preset> or the train
+             config flags, then axis lists (comma-separated):
+             [--quantizers q,..] [--topologies t,..]
+             [--nets base|ideal|torus16|straggler|scale,..]
+             [--modes sync,async] [--seeds N | --seed-list a,b,..]
+             [--out dir] [--slots N] [--no-resume] [--name label]
+             cells run as subprocesses with tracing on; CPU/RSS are
+             sampled to resources.jsonl; completed cells are skipped
+             on re-run (resume)
+  analyse    <sweep-out/manifest.json> [--out dir]
+             aggregate every cell's trace into tidy CSVs
+             (cells/spans/counters/hists; default out: <sweep>/analysis)
   topo       --kind full|ring|disconnected|star|torus|random|
              random_regular --nodes N [--p F] [--k N]
   quant      --d N --s N
@@ -130,6 +147,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("fig7") => cmd_fig7(args),
         Some("fig8") => cmd_fig8(args),
         Some("fig-time") => cmd_fig_time(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("analyse") | Some("analyze") => cmd_analyse(args),
         Some("topo") => cmd_topo(args),
         Some("quant") => cmd_quant(args),
         Some("artifacts") => cmd_artifacts(args),
@@ -505,37 +524,51 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // file as it is produced instead of buffering a RunLog (same bytes
     // as --csv; see rust/tests/streaming_parity.rs)
     if let Some(path) = args.get("stream-csv") {
-        if args.has_flag("threaded") {
-            anyhow::bail!(
-                "--stream-csv streams the simulated/ideal engines; the \
-                 threaded runtime buffers its report plane (use --csv)"
-            );
-        }
         if cfg.mode == EngineMode::Async {
             anyhow::bail!(
                 "--stream-csv streams sync round records; async runs \
                  buffer a merged log (use --csv)"
             );
         }
-        let mut sim_cfg = cfg.clone();
-        if simulate && sim_cfg.network.is_none() {
-            sim_cfg.network = Some(Default::default());
-        }
         let file = std::fs::File::create(path)?;
         let mut sink = lmdfl::metrics::CsvStream::new(
             std::io::BufWriter::new(file),
         )?;
-        let s = Trainer::run_streamed(&sim_cfg, &mut sink)?;
+        let s = if args.has_flag("threaded") {
+            // the threaded coordinator streams its report plane too
+            // (same records, same order as --csv; see
+            // rust/tests/streaming_parity.rs)
+            let mut link = cfg
+                .network
+                .as_ref()
+                .map(|n| n.link.clone())
+                .unwrap_or_else(LinkModel::ideal);
+            link.drop_prob = args.get_f64("drop-prob", link.drop_prob)?;
+            Trainer::run_threaded_streamed(
+                &cfg,
+                NetOptions { link, eval_every: cfg.eval_every },
+                &mut sink,
+            )?
+        } else {
+            let mut sim_cfg = cfg.clone();
+            if simulate && sim_cfg.network.is_none() {
+                sim_cfg.network = Some(Default::default());
+            }
+            Trainer::run_streamed(&sim_cfg, &mut sink)?
+        };
         sink.finish()?;
         log::info(format!(
             "streamed {} rounds to {path}: loss={} acc={} \
-             bits/link={} wire-bytes={} virtual={:.3}s",
+             bits/link={} wire-bytes={} virtual={:.3}s peak-rss={}",
             s.rounds,
             fnum(s.last_loss),
             fnum(s.final_accuracy),
             s.total_bits,
             s.wire_bytes,
             s.virtual_secs,
+            s.peak_rss_bytes
+                .map(|b| format!("{:.1}MiB", b as f64 / (1 << 20) as f64))
+                .unwrap_or_else(|| "n/a".into()),
         ));
         return Ok(());
     }
@@ -750,6 +783,25 @@ fn cmd_net_echo(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
+    // --from-sweep: rebuild the tables from a sweep's per-cell round
+    // CSVs (one curve per completed cell) — no training runs here
+    if let Some(manifest) = args.get("from-sweep") {
+        let curves =
+            fig_time::curves_from_sweep(Path::new(manifest))?;
+        log::info(format!(
+            "fig-time from sweep {manifest}: {} curve(s)",
+            curves.len()
+        ));
+        log::info(fig_time::render_loss_vs_time(&curves));
+        let default_target = curves
+            .iter()
+            .map(|c| c.log.last_loss().unwrap_or(f64::NAN))
+            .fold(f64::MIN, f64::max)
+            * 1.1;
+        let target = args.get_f64("target-loss", default_target)?;
+        log::info(fig_time::time_to_target(&curves, target));
+        return Ok(());
+    }
     let scale = scale_of(args);
     let preset_name = args.get_or("preset", "torus-16");
     let (cfg, net) =
@@ -772,6 +824,120 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
         * 1.1;
     let target = args.get_f64("target-loss", default_target)?;
     log::info(fig_time::time_to_target(&curves, target));
+    Ok(())
+}
+
+/// `lmdfl sweep`: expand a grid over a base config and run every
+/// cell to one manifest (see [`lmdfl::sweep`]).
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    // base config: a fig-time preset (with its fabric) or the plain
+    // train config flags / --config file
+    let mut cfg = if let Some(preset) = args.get("preset") {
+        let (mut cfg, net) =
+            fig_time::preset(preset, scale_of(args))?;
+        cfg.network = Some(net);
+        cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+        cfg
+    } else {
+        config_from_args(args)?
+    };
+    if let Some(name) = args.get("name") {
+        cfg.name = name.to_string();
+    }
+
+    let mut grid = Grid::from_base(&cfg);
+    if let Some(list) = args.get("quantizers") {
+        grid.set_quantizers(list)?;
+    }
+    if let Some(list) = args.get("topologies") {
+        grid.set_topologies(list)?;
+    }
+    if let Some(list) = args.get("nets") {
+        grid.set_nets(list)?;
+    }
+    if let Some(list) = args.get("modes") {
+        grid.set_modes(list)?;
+    }
+    if let Some(list) = args.get("seed-list") {
+        grid.set_seed_list(list)?;
+    } else {
+        let repeats = args.get_usize("seeds", 1)?;
+        grid.set_seed_repeats(cfg.seed, repeats);
+    }
+
+    let opts = SweepOptions {
+        out_dir: args.get_or("out", "sweep-out").into(),
+        slots: args.get_usize("slots", 0)?,
+        resume: !args.has_flag("no-resume"),
+        ..Default::default()
+    };
+    let manifest = sweep::run_sweep(&cfg, &grid, &opts)?;
+
+    let mut t = Table::new(&[
+        "cell", "status", "rounds", "loss", "virt_s", "wire MB",
+        "peak rss",
+    ]);
+    for c in &manifest.cells {
+        t.row(vec![
+            c.id.clone(),
+            if c.timing.cached {
+                format!("{} (cached)", c.status)
+            } else {
+                c.status.clone()
+            },
+            c.rounds.to_string(),
+            fnum(c.last_loss),
+            format!("{:.2}", c.virtual_secs),
+            format!("{:.3}", c.wire_bytes as f64 / 1e6),
+            format!(
+                "{:.1}MiB",
+                c.timing.peak_rss_bytes as f64 / (1 << 20) as f64
+            ),
+        ]);
+    }
+    log::info(t.render());
+    let ok = manifest.cells.iter().filter(|c| c.ok()).count();
+    log::info(format!(
+        "sweep {}: {}/{} cells ok -> {}",
+        manifest.name,
+        ok,
+        manifest.cells.len(),
+        opts.out_dir.join("manifest.json").display(),
+    ));
+    anyhow::ensure!(
+        ok == manifest.cells.len(),
+        "{} cell(s) failed",
+        manifest.cells.len() - ok
+    );
+    Ok(())
+}
+
+/// `lmdfl analyse <manifest.json>`: roll every cell's trace up into
+/// tidy CSVs (see [`lmdfl::sweep::analyse`]).
+fn cmd_analyse(args: &Args) -> anyhow::Result<()> {
+    let manifest = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("manifest"))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "usage: lmdfl analyse <sweep-out/manifest.json> \
+                 [--out dir]"
+            )
+        })?;
+    let manifest = Path::new(manifest);
+    let out = match args.get("out") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => manifest
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .join("analysis"),
+    };
+    for path in sweep::analyse::analyse(manifest, &out)? {
+        log::info(format!("wrote {}", path.display()));
+    }
     Ok(())
 }
 

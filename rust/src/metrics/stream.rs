@@ -143,6 +143,9 @@ pub struct RunSummary {
     pub wire_bytes: u64,
     /// virtual clock of the last record (simnet runs)
     pub virtual_secs: f64,
+    /// process peak RSS (`VmHWM`) when the run finished — the same
+    /// figure bench JSON and sweep manifests report. `None` off-Linux.
+    pub peak_rss_bytes: Option<u64>,
 }
 
 impl RunSummary {
@@ -155,6 +158,12 @@ impl RunSummary {
         self.total_bits = r.bits_per_link;
         self.wire_bytes = r.wire_bytes;
         self.virtual_secs = r.virtual_secs;
+    }
+
+    /// Stamp the current process peak RSS into the summary (called
+    /// once, when the run's records have all been emitted).
+    pub fn stamp_peak_rss(&mut self) {
+        self.peak_rss_bytes = crate::bench::peak_rss_bytes();
     }
 }
 

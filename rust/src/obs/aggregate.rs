@@ -1,0 +1,246 @@
+//! Rank-merged aggregation of parsed traces — the one set of rollups
+//! behind both the human `lmdfl trace` summary and the tidy CSVs of
+//! `lmdfl analyse`. Everything here is deterministic: aggregates come
+//! back in a fixed order for identical inputs, so CSVs built from them
+//! are byte-stable.
+
+use std::collections::BTreeMap;
+
+use super::export::TraceFile;
+use super::trace::Hist;
+
+/// All spans of one (name, clock) pair, merged across ranks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanAgg {
+    pub name: String,
+    /// false = wall clock, true = simnet virtual clock
+    pub virt: bool,
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+impl SpanAgg {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+
+    /// "wall" / "virtual" — the trace-schema clock label.
+    pub fn clock(&self) -> &'static str {
+        if self.virt {
+            "virtual"
+        } else {
+            "wall"
+        }
+    }
+}
+
+/// Spans aggregated by (name, clock), heaviest total first (ties break
+/// on name then clock, so the order is fully deterministic).
+pub fn spans(tf: &TraceFile) -> Vec<SpanAgg> {
+    let mut agg: BTreeMap<(String, bool), (u64, u64)> = BTreeMap::new();
+    for s in &tf.spans {
+        let e = agg.entry((s.name.clone(), s.virt)).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = e.1.saturating_add(s.dur_ns);
+    }
+    let mut rows: Vec<SpanAgg> = agg
+        .into_iter()
+        .map(|((name, virt), (count, total_ns))| SpanAgg {
+            name,
+            virt,
+            count,
+            total_ns,
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        (std::cmp::Reverse(a.total_ns), &a.name, a.virt)
+            .cmp(&(std::cmp::Reverse(b.total_ns), &b.name, b.virt))
+    });
+    rows
+}
+
+/// One counter's per-key value summed over every rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CtrAgg {
+    pub name: String,
+    pub key: String,
+    pub value: u64,
+}
+
+/// Counters summed across ranks by (name, key), in (name, key) order.
+pub fn counters(tf: &TraceFile) -> Vec<CtrAgg> {
+    let mut agg: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for c in &tf.counters {
+        *agg.entry((c.name.clone(), c.key.clone())).or_insert(0) +=
+            c.value;
+    }
+    agg.into_iter()
+        .map(|((name, key), value)| CtrAgg { name, key, value })
+        .collect()
+}
+
+/// Per-name counter totals (every rank, every key), in name order.
+pub fn counter_totals(tf: &TraceFile) -> Vec<(String, u64)> {
+    let mut totals: BTreeMap<String, u64> = BTreeMap::new();
+    for c in &tf.counters {
+        *totals.entry(c.name.clone()).or_insert(0) += c.value;
+    }
+    totals.into_iter().collect()
+}
+
+/// One histogram merged across every rank that recorded it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistAgg {
+    pub name: String,
+    pub hist: Hist,
+}
+
+impl HistAgg {
+    pub fn p50(&self) -> u64 {
+        self.hist.quantile_edge(0.5)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.hist.quantile_edge(0.9)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.hist.quantile_edge(0.99)
+    }
+}
+
+/// Histograms merged across ranks by name (bucket-wise absorb), in
+/// name order.
+pub fn hists(tf: &TraceFile) -> Vec<HistAgg> {
+    let mut agg: BTreeMap<String, Hist> = BTreeMap::new();
+    for h in &tf.hists {
+        agg.entry(h.name.clone()).or_default().absorb(&h.hist);
+    }
+    agg.into_iter()
+        .map(|(name, hist)| HistAgg { name, hist })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::{CtrRec, HistRec};
+    use crate::obs::SpanRec;
+
+    fn sample() -> TraceFile {
+        let mut h0 = Hist::default();
+        for _ in 0..9 {
+            h0.record(100); // bucket 6 (64..128)
+        }
+        let mut h1 = Hist::default();
+        h1.record(1 << 20);
+        TraceFile {
+            schema: crate::obs::TRACE_SCHEMA.to_string(),
+            spans: vec![
+                SpanRec {
+                    rank: 0,
+                    name: "round".into(),
+                    virt: false,
+                    tid: 0,
+                    ts_ns: 0,
+                    dur_ns: 1_000,
+                },
+                SpanRec {
+                    rank: 1,
+                    name: "round".into(),
+                    virt: false,
+                    tid: 0,
+                    ts_ns: 0,
+                    dur_ns: 3_000,
+                },
+                SpanRec {
+                    rank: 0,
+                    name: "mix".into(),
+                    virt: true,
+                    tid: 2,
+                    ts_ns: 0,
+                    dur_ns: 10_000,
+                },
+            ],
+            counters: vec![
+                CtrRec {
+                    rank: 0,
+                    name: "frame_send".into(),
+                    key: "0->1".into(),
+                    value: 7,
+                },
+                CtrRec {
+                    rank: 1,
+                    name: "frame_send".into(),
+                    key: "0->1".into(),
+                    value: 5,
+                },
+                CtrRec {
+                    rank: 1,
+                    name: "frame_send".into(),
+                    key: "1->0".into(),
+                    value: 2,
+                },
+            ],
+            hists: vec![
+                HistRec {
+                    rank: 0,
+                    name: "wait_ns".into(),
+                    hist: h0,
+                },
+                HistRec {
+                    rank: 1,
+                    name: "wait_ns".into(),
+                    hist: h1,
+                },
+            ],
+            ranks: [0usize, 1].into_iter().collect(),
+            complete: true,
+            lines: 10,
+        }
+    }
+
+    #[test]
+    fn spans_merge_ranks_and_sort_by_total() {
+        let rows = spans(&sample());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "mix");
+        assert!(rows[0].virt);
+        assert_eq!(rows[1].name, "round");
+        assert_eq!(rows[1].count, 2);
+        assert_eq!(rows[1].total_ns, 4_000);
+        assert!((rows[1].mean_ns() - 2_000.0).abs() < 1e-9);
+        assert_eq!(rows[0].clock(), "virtual");
+        assert_eq!(rows[1].clock(), "wall");
+    }
+
+    #[test]
+    fn counters_sum_across_ranks_per_key() {
+        let tf = sample();
+        let rows = counters(&tf);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].key, "0->1");
+        assert_eq!(rows[0].value, 12); // 7 + 5 across ranks
+        assert_eq!(rows[1].key, "1->0");
+        assert_eq!(rows[1].value, 2);
+        let totals = counter_totals(&tf);
+        assert_eq!(totals, vec![("frame_send".to_string(), 14)]);
+    }
+
+    #[test]
+    fn hists_absorb_across_ranks_with_quantiles() {
+        let rows = hists(&sample());
+        assert_eq!(rows.len(), 1);
+        let h = &rows[0];
+        assert_eq!(h.name, "wait_ns");
+        assert_eq!(h.hist.count, 10);
+        // 9 of 10 values in the 64..128 bucket, one outlier
+        assert_eq!(h.p50(), 128);
+        assert_eq!(h.p90(), 128);
+        assert_eq!(h.p99(), 1 << 21);
+    }
+}

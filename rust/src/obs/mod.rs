@@ -30,6 +30,7 @@
 //! simnet runs produce byte-identical event digests and RunLogs
 //! (enforced by `rust/tests/simnet_determinism.rs`).
 
+pub mod aggregate;
 pub mod export;
 pub mod summary;
 pub mod trace;

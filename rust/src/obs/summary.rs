@@ -1,12 +1,12 @@
 //! `lmdfl trace`: schema validation and a human summary of a trace
 //! file — top spans by total time, counter tables (per-link bytes,
 //! drops, reconnects), and histogram digests — rendered with the
-//! existing [`crate::metrics::Table`].
+//! existing [`crate::metrics::Table`]. All rollups come from
+//! [`super::aggregate`], the same code `lmdfl analyse` builds its
+//! sweep CSVs from, so the two views can never drift.
 
-use std::collections::BTreeMap;
-
+use super::aggregate;
 use super::export::TraceFile;
-use super::trace::Hist;
 use crate::metrics::Table;
 
 /// Validate a parsed trace against the current schema: version match,
@@ -55,11 +55,13 @@ pub fn summarize(tf: &TraceFile) -> String {
         out.push_str(&span_table(tf));
     }
     if !tf.counters.is_empty() {
-        out.push_str("\ncounters\n");
+        out.push_str("\ncounters (ranks merged)\n");
+        out.push_str(&aggregate_counter_table(tf));
+        out.push_str("\ncounters by rank\n");
         out.push_str(&counter_table(tf));
     }
     if !tf.hists.is_empty() {
-        out.push_str("\nhistograms\n");
+        out.push_str("\nhistograms (ranks merged)\n");
         out.push_str(&hist_table(tf));
     }
     out
@@ -67,46 +69,50 @@ pub fn summarize(tf: &TraceFile) -> String {
 
 /// Spans aggregated by (name, clock), top 12 by total duration.
 fn span_table(tf: &TraceFile) -> String {
-    let mut agg: BTreeMap<(String, bool), (u64, u64)> = BTreeMap::new();
-    for s in &tf.spans {
-        let e = agg
-            .entry((s.name.clone(), s.virt))
-            .or_insert((0, 0));
-        e.0 += 1;
-        e.1 = e.1.saturating_add(s.dur_ns);
-    }
-    let mut rows: Vec<_> = agg.into_iter().collect();
-    rows.sort_by_key(|(_, (_, total))| std::cmp::Reverse(*total));
     let mut t =
         Table::new(&["span", "clock", "count", "total ms", "mean µs"]);
-    for ((name, virt), (count, total)) in rows.into_iter().take(12) {
+    for a in aggregate::spans(tf).into_iter().take(12) {
         t.row(vec![
-            name,
-            if virt { "virtual" } else { "wall" }.into(),
-            format!("{count}"),
-            format!("{:.3}", total as f64 / 1e6),
-            format!("{:.1}", total as f64 / 1e3 / count as f64),
+            a.name.clone(),
+            a.clock().into(),
+            format!("{}", a.count),
+            format!("{:.3}", a.total_ns as f64 / 1e6),
+            format!("{:.1}", a.mean_ns() / 1e3),
         ]);
     }
     t.render()
 }
 
-/// Per-name totals plus the largest per-rank/per-key rows (per-link
-/// byte and drop tables live here).
-fn counter_table(tf: &TraceFile) -> String {
-    let mut totals: BTreeMap<&str, u64> = BTreeMap::new();
-    for c in &tf.counters {
-        *totals.entry(c.name.as_str()).or_insert(0) += c.value;
+/// Per-(name, key) values summed across every rank — the sweep-grade
+/// aggregate view — plus per-name totals.
+fn aggregate_counter_table(tf: &TraceFile) -> String {
+    let mut t = Table::new(&["counter", "key", "value"]);
+    for (name, total) in aggregate::counter_totals(tf) {
+        t.row(vec![name, "(total)".into(), format!("{total}")]);
     }
-    let mut t = Table::new(&["counter", "rank", "key", "value"]);
-    for (name, total) in &totals {
+    let rows = aggregate::counters(tf);
+    let cap = 40usize;
+    for c in rows.iter().take(cap) {
         t.row(vec![
-            name.to_string(),
-            "all".into(),
-            "(total)".into(),
-            format!("{total}"),
+            c.name.clone(),
+            c.key.clone(),
+            format!("{}", c.value),
         ]);
     }
+    let mut out = t.render();
+    if rows.len() > cap {
+        out.push_str(&format!(
+            "(+{} more aggregate rows)\n",
+            rows.len() - cap
+        ));
+    }
+    out
+}
+
+/// The largest per-rank/per-key rows (per-link byte and drop tables
+/// live here); totals live in the rank-merged table above.
+fn counter_table(tf: &TraceFile) -> String {
+    let mut t = Table::new(&["counter", "rank", "key", "value"]);
     let mut rows: Vec<_> = tf.counters.iter().collect();
     rows.sort_by(|a, b| {
         (&a.name, std::cmp::Reverse(a.value), a.rank, &a.key).cmp(&(
@@ -135,29 +141,25 @@ fn counter_table(tf: &TraceFile) -> String {
     out
 }
 
-/// Histograms merged across ranks: count, mean, and p50/p99 bucket
-/// upper edges (values are nanoseconds by convention).
+/// Histograms merged across ranks: count, mean, and p50/p90/p99
+/// bucket upper edges (values are nanoseconds by convention).
 fn hist_table(tf: &TraceFile) -> String {
-    let mut agg: BTreeMap<&str, Hist> = BTreeMap::new();
-    for h in &tf.hists {
-        agg.entry(h.name.as_str())
-            .or_default()
-            .absorb(&h.hist);
-    }
     let mut t = Table::new(&[
         "histogram",
         "count",
         "mean µs",
         "p50 ≤ µs",
+        "p90 ≤ µs",
         "p99 ≤ µs",
     ]);
-    for (name, h) in agg {
+    for a in aggregate::hists(tf) {
         t.row(vec![
-            name.to_string(),
-            format!("{}", h.count),
-            format!("{:.1}", h.mean() / 1e3),
-            format!("{:.1}", h.quantile_edge(0.5) as f64 / 1e3),
-            format!("{:.1}", h.quantile_edge(0.99) as f64 / 1e3),
+            a.name.clone(),
+            format!("{}", a.hist.count),
+            format!("{:.1}", a.hist.mean() / 1e3),
+            format!("{:.1}", a.p50() as f64 / 1e3),
+            format!("{:.1}", a.p90() as f64 / 1e3),
+            format!("{:.1}", a.p99() as f64 / 1e3),
         ]);
     }
     t.render()
@@ -167,7 +169,7 @@ fn hist_table(tf: &TraceFile) -> String {
 mod tests {
     use super::*;
     use crate::obs::export::{CtrRec, HistRec};
-    use crate::obs::SpanRec;
+    use crate::obs::{Hist, SpanRec};
 
     fn sample() -> TraceFile {
         let mut h = Hist::default();
@@ -229,9 +231,13 @@ mod tests {
         let s = summarize(&sample());
         assert!(s.contains("top spans"));
         assert!(s.contains("round"));
+        assert!(s.contains("counters (ranks merged)"));
+        assert!(s.contains("counters by rank"));
         assert!(s.contains("frame_send"));
         assert!(s.contains("(total)"));
         assert!(s.contains("12")); // 7 + 5 total
+        assert!(s.contains("histograms (ranks merged)"));
+        assert!(s.contains("p90"));
         assert!(s.contains("tcp_backoff_ns"));
     }
 }

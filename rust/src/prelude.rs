@@ -47,6 +47,10 @@ pub use crate::runtime::{
     HloBackend, HloExecutor, Manifest,
 };
 pub use crate::simnet::{LinkModel, NetworkConfig};
+pub use crate::sweep::{
+    self, CellResult, Grid, NetRegime, SweepManifest, SweepOptions,
+    SWEEP_SCHEMA,
+};
 pub use crate::topology::Topology;
 pub use crate::util::rng::Rng;
 pub use crate::xla;

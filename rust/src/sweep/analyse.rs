@@ -1,0 +1,213 @@
+//! Cross-run telemetry aggregation: sweep manifest in, tidy CSVs out.
+//!
+//! `lmdfl analyse <manifest.json>` loads every completed cell's trace
+//! through [`crate::obs::export::parse_trace`] and rolls it up with
+//! the same [`crate::obs::aggregate`] tables the `trace` summary
+//! prints, then writes four tidy (one observation per row) CSVs:
+//!
+//! * `cells.csv`    — one row per cell: axes, outcome, resources
+//! * `spans.csv`    — one row per (cell, span name, clock)
+//! * `counters.csv` — one row per (cell, counter, key)
+//! * `hists.csv`    — one row per (cell, histogram): count, mean,
+//!   p50/p90/p99 upper bucket edges
+//!
+//! Axis columns come from the manifest's ordered `axes` listing, so
+//! every sweep's `cells.csv` leads with the same
+//! `quantizer,topology,net,mode,seed` block regardless of which axes
+//! actually varied — downstream tooling can group on them blindly.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::obs::aggregate;
+use crate::obs::export::parse_trace;
+
+use super::{CellResult, SweepManifest};
+
+/// Axis names in the manifest's declared order.
+fn axis_names(m: &SweepManifest) -> Vec<String> {
+    m.axes
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|a| a.get_str("axis").map(str::to_string))
+        .collect()
+}
+
+/// One cell's value on one axis, rendered for CSV (seed is numeric
+/// in the manifest; everything else is a string).
+fn axis_value(cell: &CellResult, name: &str) -> String {
+    match cell.axes.get(name) {
+        Some(v) => match v.as_str() {
+            Some(s) => s.to_string(),
+            None => v.to_string(),
+        },
+        None => String::new(),
+    }
+}
+
+/// Aggregate `manifest` into the four tidy CSVs under `out_dir`
+/// (created if needed). Returns the written paths in a fixed order:
+/// cells, spans, counters, hists.
+pub fn analyse(
+    manifest_path: &Path,
+    out_dir: &Path,
+) -> anyhow::Result<Vec<PathBuf>> {
+    let m = SweepManifest::load(manifest_path)?;
+    let base = manifest_path
+        .parent()
+        .unwrap_or_else(|| Path::new("."));
+    let axes = axis_names(&m);
+
+    let mut cells_csv = String::from("cell,hash,");
+    for a in &axes {
+        let _ = write!(cells_csv, "{a},");
+    }
+    cells_csv.push_str(
+        "status,rounds,last_loss,final_accuracy,virtual_secs,\
+         wire_bytes,wall_secs,peak_rss_bytes,cpu_percent\n",
+    );
+    let mut spans_csv = String::from(
+        "cell,hash,span,clock,count,total_ns,mean_ns\n",
+    );
+    let mut counters_csv =
+        String::from("cell,hash,counter,key,value\n");
+    let mut hists_csv = String::from(
+        "cell,hash,histogram,count,mean,p50_le,p90_le,p99_le\n",
+    );
+
+    for cell in &m.cells {
+        let _ = write!(cells_csv, "{},{},", cell.id, cell.hash);
+        for a in &axes {
+            let _ = write!(cells_csv, "{},", axis_value(cell, a));
+        }
+        let _ = writeln!(
+            cells_csv,
+            "{},{},{},{},{},{},{},{},{}",
+            cell.status,
+            cell.rounds,
+            cell.last_loss,
+            cell.final_accuracy,
+            cell.virtual_secs,
+            cell.wire_bytes,
+            cell.timing.wall_secs,
+            cell.timing.peak_rss_bytes,
+            cell.timing.cpu_percent,
+        );
+        if !cell.ok() {
+            continue; // failed cells have no trace to aggregate
+        }
+        let trace_path = base.join(&cell.trace);
+        let text =
+            std::fs::read_to_string(&trace_path).map_err(|e| {
+                anyhow::anyhow!(
+                    "reading {}: {e}",
+                    trace_path.display()
+                )
+            })?;
+        let tf = parse_trace(&text)?;
+        for s in aggregate::spans(&tf) {
+            let _ = writeln!(
+                spans_csv,
+                "{},{},{},{},{},{},{}",
+                cell.id,
+                cell.hash,
+                s.name,
+                s.clock(),
+                s.count,
+                s.total_ns,
+                s.mean_ns(),
+            );
+        }
+        for c in aggregate::counters(&tf) {
+            let _ = writeln!(
+                counters_csv,
+                "{},{},{},{},{}",
+                cell.id, cell.hash, c.name, c.key, c.value,
+            );
+        }
+        for h in aggregate::hists(&tf) {
+            let _ = writeln!(
+                hists_csv,
+                "{},{},{},{},{},{},{},{}",
+                cell.id,
+                cell.hash,
+                h.name,
+                h.hist.count,
+                h.hist.mean(),
+                h.p50(),
+                h.p90(),
+                h.p99(),
+            );
+        }
+    }
+
+    std::fs::create_dir_all(out_dir).map_err(|e| {
+        anyhow::anyhow!("creating {}: {e}", out_dir.display())
+    })?;
+    let mut written = Vec::new();
+    for (file, text) in [
+        ("cells.csv", &cells_csv),
+        ("spans.csv", &spans_csv),
+        ("counters.csv", &counters_csv),
+        ("hists.csv", &hists_csv),
+    ] {
+        let path = out_dir.join(file);
+        std::fs::write(&path, text).map_err(|e| {
+            anyhow::anyhow!("writing {}: {e}", path.display())
+        })?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+    use crate::config::ExperimentConfig;
+    use crate::sweep::{CellTiming, Grid, SWEEP_SCHEMA};
+
+    #[test]
+    fn axis_columns_follow_manifest_order() {
+        let base = ExperimentConfig::default();
+        let grid = Grid::from_base(&base);
+        let m = SweepManifest {
+            schema: SWEEP_SCHEMA.to_string(),
+            name: "t".into(),
+            axes: grid.axes_json(),
+            base: base.identity_json(),
+            cells: Vec::new(),
+        };
+        assert_eq!(
+            axis_names(&m),
+            vec!["quantizer", "topology", "net", "mode", "seed"]
+        );
+    }
+
+    #[test]
+    fn axis_value_renders_strings_and_numbers() {
+        let cell = CellResult {
+            id: "x".into(),
+            hash: "0".into(),
+            axes: Json::obj(vec![
+                ("quantizer", Json::str("qsgd")),
+                ("seed", Json::num(7.0)),
+            ]),
+            status: "ok".into(),
+            dir: String::new(),
+            rounds_csv: String::new(),
+            trace: String::new(),
+            resources: String::new(),
+            rounds: 0,
+            last_loss: 0.0,
+            final_accuracy: 0.0,
+            virtual_secs: 0.0,
+            wire_bytes: 0,
+            timing: CellTiming::default(),
+        };
+        assert_eq!(axis_value(&cell, "quantizer"), "qsgd");
+        assert_eq!(axis_value(&cell, "seed"), "7");
+        assert_eq!(axis_value(&cell, "missing"), "");
+    }
+}

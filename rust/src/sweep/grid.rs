@@ -1,0 +1,430 @@
+//! Sweep grids: the cartesian product of experiment axes.
+//!
+//! A [`Grid`] holds one list of values per axis — quantizer, topology,
+//! network regime, engine mode, seed — in that fixed order. An axis
+//! not set explicitly holds exactly one value taken from the base
+//! config, so a fresh grid is the base experiment itself.
+//! [`Grid::cells`] expands the product row-major (the last axis, seed,
+//! varies fastest); [`Cell::apply_to`] stamps one cell onto the base
+//! config.
+
+use crate::config::json::Json;
+use crate::config::{
+    EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
+};
+use crate::experiments::fig_time;
+
+/// Which simnet fabric a sweep cell runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetRegime {
+    /// keep the base config's `network:` section (possibly none)
+    Base,
+    /// strip the section: the ideal instantaneous network
+    Ideal,
+    /// the bandwidth-constrained heterogeneous torus-16 fabric
+    Torus16,
+    /// the straggler-heavy fabric of the async-torus-16 preset
+    Straggler,
+    /// the fast, mildly heterogeneous large-fleet fabric
+    Scale,
+}
+
+impl NetRegime {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetRegime::Base => "base",
+            NetRegime::Ideal => "ideal",
+            NetRegime::Torus16 => "torus16",
+            NetRegime::Straggler => "straggler",
+            NetRegime::Scale => "scale",
+        }
+    }
+
+    pub fn parse_str(text: &str) -> anyhow::Result<Self> {
+        Ok(match text {
+            "base" => NetRegime::Base,
+            "ideal" => NetRegime::Ideal,
+            "torus16" => NetRegime::Torus16,
+            "straggler" => NetRegime::Straggler,
+            "scale" => NetRegime::Scale,
+            other => anyhow::bail!(
+                "unknown net regime '{other}' \
+                 (have: base, ideal, torus16, straggler, scale)"
+            ),
+        })
+    }
+
+    /// Materialize the regime over `cfg.network`.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        match self {
+            NetRegime::Base => {}
+            NetRegime::Ideal => cfg.network = None,
+            NetRegime::Torus16 => {
+                cfg.network = Some(fig_time::torus16_network());
+            }
+            NetRegime::Straggler => {
+                cfg.network = Some(fig_time::async_torus16_network());
+            }
+            NetRegime::Scale => {
+                cfg.network = Some(fig_time::scale_network());
+            }
+        }
+    }
+}
+
+/// Parse one quantizer axis value by name (the CLI's `lm` / `da`
+/// aliases included), with the crate's default parameters per kind.
+pub fn quantizer_from_name(
+    name: &str,
+) -> anyhow::Result<QuantizerKind> {
+    Ok(match name {
+        "full" => QuantizerKind::Full,
+        "qsgd" => QuantizerKind::Qsgd { s: 16 },
+        "natural" => QuantizerKind::Natural { s: 16 },
+        "alq" => QuantizerKind::Alq { s: 16 },
+        "lloyd_max" | "lm" => {
+            QuantizerKind::LloydMax { s: 16, iters: 12 }
+        }
+        "doubly_adaptive" | "da" => QuantizerKind::DoublyAdaptive {
+            s1: 4,
+            iters: 12,
+            s_max: 4096,
+        },
+        other => anyhow::bail!("unknown quantizer '{other}'"),
+    })
+}
+
+/// Parse one topology axis value by name (parameterized kinds get
+/// their CLI defaults: `random` p=0.4, `random_regular` k=4).
+pub fn topology_from_name(name: &str) -> anyhow::Result<TopologyKind> {
+    Ok(match name {
+        "full" => TopologyKind::Full,
+        "ring" => TopologyKind::Ring,
+        "disconnected" => TopologyKind::Disconnected,
+        "star" => TopologyKind::Star,
+        "torus" => TopologyKind::Torus,
+        "random" => TopologyKind::Random { p: 0.4 },
+        "random_regular" => TopologyKind::RandomRegular { k: 4 },
+        other => anyhow::bail!("unknown topology '{other}'"),
+    })
+}
+
+/// One expansion cell: a concrete value per axis.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub quantizer: QuantizerKind,
+    pub topology: TopologyKind,
+    pub net: NetRegime,
+    pub mode: EngineMode,
+    pub seed: u64,
+}
+
+impl Cell {
+    /// The stable human-readable cell id:
+    /// `quantizer/topology/net/mode/seed`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.quantizer.name(),
+            self.topology.name(),
+            self.net.name(),
+            self.mode.name(),
+            self.seed
+        )
+    }
+
+    /// The axis assignments of this cell (seed stays numeric).
+    pub fn axes_json(&self) -> Json {
+        Json::obj(vec![
+            ("quantizer", Json::str(self.quantizer.name())),
+            ("topology", Json::str(self.topology.name())),
+            ("net", Json::str(self.net.name())),
+            ("mode", Json::str(self.mode.name())),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    /// Stamp this cell onto a copy of the base config. The cell id
+    /// becomes the config name; async cells without an `async:`
+    /// section inherit the async-torus-16 preset policy so engine
+    /// mode is the only difference against their sync siblings.
+    pub fn apply_to(&self, base: &ExperimentConfig) -> ExperimentConfig {
+        let mut cfg = base.clone();
+        cfg.name = self.id();
+        cfg.quantizer = self.quantizer.clone();
+        cfg.topology = self.topology.clone();
+        cfg.mode = self.mode;
+        cfg.seed = self.seed;
+        self.net.apply(&mut cfg);
+        if cfg.mode == EngineMode::Async && cfg.agossip.is_none() {
+            cfg.agossip = Some(fig_time::async_torus16_policy());
+        }
+        cfg
+    }
+}
+
+/// The sweep's axis lists, in the fixed expansion order.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub quantizers: Vec<QuantizerKind>,
+    pub topologies: Vec<TopologyKind>,
+    pub nets: Vec<NetRegime>,
+    pub modes: Vec<EngineMode>,
+    pub seeds: Vec<u64>,
+}
+
+fn split(list: &str) -> impl Iterator<Item = &str> {
+    list.split(',').map(str::trim).filter(|s| !s.is_empty())
+}
+
+impl Grid {
+    /// A 1-cell grid: every axis pinned to the base config's value.
+    pub fn from_base(base: &ExperimentConfig) -> Grid {
+        Grid {
+            quantizers: vec![base.quantizer.clone()],
+            topologies: vec![base.topology.clone()],
+            nets: vec![NetRegime::Base],
+            modes: vec![base.mode],
+            seeds: vec![base.seed],
+        }
+    }
+
+    pub fn set_quantizers(&mut self, list: &str) -> anyhow::Result<()> {
+        self.quantizers = split(list)
+            .map(quantizer_from_name)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !self.quantizers.is_empty(),
+            "--quantizers list is empty"
+        );
+        Ok(())
+    }
+
+    pub fn set_topologies(&mut self, list: &str) -> anyhow::Result<()> {
+        self.topologies = split(list)
+            .map(topology_from_name)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !self.topologies.is_empty(),
+            "--topologies list is empty"
+        );
+        Ok(())
+    }
+
+    pub fn set_nets(&mut self, list: &str) -> anyhow::Result<()> {
+        self.nets = split(list)
+            .map(NetRegime::parse_str)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!self.nets.is_empty(), "--nets list is empty");
+        Ok(())
+    }
+
+    pub fn set_modes(&mut self, list: &str) -> anyhow::Result<()> {
+        self.modes = split(list)
+            .map(|m| EngineMode::parse_str(m).map_err(Into::into))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!self.modes.is_empty(), "--modes list is empty");
+        Ok(())
+    }
+
+    /// Seed repeats: `base, base+1, ..., base+repeats-1`.
+    pub fn set_seed_repeats(&mut self, base: u64, repeats: usize) {
+        self.seeds =
+            (0..repeats.max(1) as u64).map(|i| base + i).collect();
+    }
+
+    pub fn set_seed_list(&mut self, list: &str) -> anyhow::Result<()> {
+        self.seeds = split(list)
+            .map(|s| {
+                s.parse::<u64>().map_err(|_| {
+                    anyhow::anyhow!("bad seed '{s}' in --seed-list")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !self.seeds.is_empty(),
+            "--seed-list is empty"
+        );
+        Ok(())
+    }
+
+    /// Number of cells in the product.
+    pub fn len(&self) -> usize {
+        self.quantizers.len()
+            * self.topologies.len()
+            * self.nets.len()
+            * self.modes.len()
+            * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the product row-major: quantizer outermost, seed
+    /// innermost (the manifest's cell order).
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::with_capacity(self.len());
+        for q in &self.quantizers {
+            for t in &self.topologies {
+                for n in &self.nets {
+                    for m in &self.modes {
+                        for &s in &self.seeds {
+                            out.push(Cell {
+                                quantizer: q.clone(),
+                                topology: t.clone(),
+                                net: *n,
+                                mode: *m,
+                                seed: s,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The manifest's ordered axis listing. An array of per-axis
+    /// objects rather than one object: JSON objects here are
+    /// `BTreeMap`s and would alphabetize the declared axis order.
+    pub fn axes_json(&self) -> Json {
+        fn axis(name: &str, values: Vec<Json>) -> Json {
+            Json::obj(vec![
+                ("axis", Json::str(name)),
+                ("values", Json::Arr(values)),
+            ])
+        }
+        Json::Arr(vec![
+            axis(
+                "quantizer",
+                self.quantizers
+                    .iter()
+                    .map(|q| Json::str(q.name()))
+                    .collect(),
+            ),
+            axis(
+                "topology",
+                self.topologies
+                    .iter()
+                    .map(|t| Json::str(t.name()))
+                    .collect(),
+            ),
+            axis(
+                "net",
+                self.nets
+                    .iter()
+                    .map(|n| Json::str(n.name()))
+                    .collect(),
+            ),
+            axis(
+                "mode",
+                self.modes
+                    .iter()
+                    .map(|m| Json::str(m.name()))
+                    .collect(),
+            ),
+            axis(
+                "seed",
+                self.seeds
+                    .iter()
+                    .map(|&s| Json::num(s as f64))
+                    .collect(),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_grid_is_the_base_experiment() {
+        let base = ExperimentConfig::default();
+        let grid = Grid::from_base(&base);
+        assert_eq!(grid.len(), 1);
+        let cells = grid.cells();
+        let cfg = cells[0].apply_to(&base);
+        assert_eq!(cfg.quantizer, base.quantizer);
+        assert_eq!(cfg.topology, base.topology);
+        assert_eq!(cfg.seed, base.seed);
+        assert_eq!(cfg.name, "lloyd_max/ring/base/sync/0");
+    }
+
+    #[test]
+    fn expansion_is_row_major_with_seed_fastest() {
+        let base = ExperimentConfig::default();
+        let mut grid = Grid::from_base(&base);
+        grid.set_quantizers("lloyd_max,qsgd").unwrap();
+        grid.set_modes("sync,async").unwrap();
+        grid.set_seed_repeats(5, 2);
+        assert_eq!(grid.len(), 8);
+        let ids: Vec<String> =
+            grid.cells().iter().map(Cell::id).collect();
+        assert_eq!(ids[0], "lloyd_max/ring/base/sync/5");
+        assert_eq!(ids[1], "lloyd_max/ring/base/sync/6");
+        assert_eq!(ids[2], "lloyd_max/ring/base/async/5");
+        assert_eq!(ids[4], "lloyd_max/ring/base/sync/5".replace(
+            "lloyd_max", "qsgd"));
+        assert_eq!(ids[7], "qsgd/ring/base/async/6");
+    }
+
+    #[test]
+    fn async_cells_inherit_the_preset_policy() {
+        let base = ExperimentConfig::default();
+        assert!(base.agossip.is_none());
+        let mut grid = Grid::from_base(&base);
+        grid.set_modes("async").unwrap();
+        let cfg = grid.cells()[0].apply_to(&base);
+        assert_eq!(cfg.mode, EngineMode::Async);
+        assert!(cfg.agossip.is_some());
+    }
+
+    #[test]
+    fn net_regimes_materialize_fabrics() {
+        let mut base = ExperimentConfig::default();
+        base.network =
+            Some(crate::simnet::NetworkConfig::default());
+        let mut grid = Grid::from_base(&base);
+        grid.set_nets("ideal,torus16,straggler").unwrap();
+        let cells = grid.cells();
+        assert!(cells[0].apply_to(&base).network.is_none());
+        let torus = cells[1].apply_to(&base).network.unwrap();
+        assert_eq!(torus.link.bandwidth_bps, 2e6);
+        let strag = cells[2].apply_to(&base).network.unwrap();
+        assert_eq!(strag.compute.straggler_slowdown, 8.0);
+    }
+
+    #[test]
+    fn axes_json_preserves_declaration_order() {
+        let base = ExperimentConfig::default();
+        let mut grid = Grid::from_base(&base);
+        grid.set_quantizers("qsgd,lm").unwrap();
+        let axes = grid.axes_json();
+        let arr = axes.as_arr().unwrap();
+        let order: Vec<&str> = arr
+            .iter()
+            .filter_map(|a| a.get_str("axis"))
+            .collect();
+        assert_eq!(
+            order,
+            vec!["quantizer", "topology", "net", "mode", "seed"]
+        );
+        // list order inside an axis is preserved too (qsgd first)
+        let qs = arr[0].get("values").unwrap().as_arr().unwrap();
+        assert_eq!(qs[0].as_str(), Some("qsgd"));
+        assert_eq!(qs[1].as_str(), Some("lloyd_max"));
+    }
+
+    #[test]
+    fn bad_axis_values_are_rejected() {
+        let base = ExperimentConfig::default();
+        let mut grid = Grid::from_base(&base);
+        assert!(grid.set_quantizers("qsgd,telepathy").is_err());
+        assert!(grid.set_topologies("moebius").is_err());
+        assert!(grid.set_nets("underwater").is_err());
+        assert!(grid.set_modes("both").is_err());
+        assert!(grid.set_seed_list("1,two").is_err());
+    }
+}

@@ -1,0 +1,693 @@
+//! Sweep orchestration: grids of experiments, run to one manifest.
+//!
+//! `lmdfl sweep` expands a [`Grid`] (quantizer × topology × network
+//! regime × engine mode × seed) over a base config and runs every
+//! cell through the existing `train` paths, with `observe:` tracing
+//! always on. Each cell lives in `out/cells/<config-hash>/`:
+//!
+//! ```text
+//! out/
+//!   manifest.json            schema lmdfl-sweep-v1 (this module)
+//!   cells/<hash>/
+//!     config.json            the cell's full experiment config
+//!     rounds.csv             per-round records (CSV_HEADER schema)
+//!     trace.jsonl            lmdfl-trace-v1 spans/counters/hists
+//!     resources.jsonl        lmdfl-resources-v1 CPU/RSS samples
+//!     run.log                the cell's stdout+stderr
+//!     cell.json              the cell's manifest entry (resume unit)
+//! ```
+//!
+//! The hash is FNV-1a over [`ExperimentConfig::identity_json`] — the
+//! config minus its `observe:` section — so a cell's directory name
+//! is a pure function of what it computes, and re-running a sweep
+//! into the same `--out` skips every cell whose `cell.json` says it
+//! already completed with its artifacts intact (resume).
+//!
+//! Cells run as *subprocesses* of the `lmdfl` binary, not in-process
+//! threads: the obs recorder is process-global (one trace per
+//! process), and `/proc/<pid>` sampling ([`ProcessMonitor`]) needs a
+//! real pid whose RSS is the cell's alone. A bounded worker pool
+//! (`--slots`, default the machine's parallelism) keeps concurrent
+//! cells from thrashing each other's timings.
+
+pub mod analyse;
+pub mod grid;
+pub mod monitor;
+
+pub use grid::{Cell, Grid, NetRegime};
+pub use monitor::{ProcessMonitor, ResourceUsage};
+
+use std::collections::{BTreeSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::config::json::Json;
+use crate::config::ExperimentConfig;
+use crate::metrics::RunLog;
+use crate::obs::ObserveConfig;
+
+/// Schema identifier of `manifest.json`. Any change to the cell
+/// record or axis encoding must bump this.
+pub const SWEEP_SCHEMA: &str = "lmdfl-sweep-v1";
+
+/// FNV-1a (64-bit) over the config's identity JSON — the cell
+/// directory name. The `observe:` section is excluded
+/// ([`ExperimentConfig::identity_json`]), so turning tracing on or
+/// moving the sweep directory never invalidates completed cells.
+pub fn config_hash(cfg: &ExperimentConfig) -> String {
+    let text = cfg.identity_json().to_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The non-deterministic (timing) half of a cell's outcome, kept
+/// separate so manifests can be compared modulo timing
+/// ([`SweepManifest::determinism_key`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CellTiming {
+    /// child wall-clock, seconds
+    pub wall_secs: f64,
+    /// child peak RSS (`VmHWM` via `/proc`), bytes
+    pub peak_rss_bytes: u64,
+    /// mean child CPU utilization, percent of one core
+    pub cpu_percent: f64,
+    /// true when resume found the cell already complete
+    pub cached: bool,
+}
+
+impl CellTiming {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_secs", Json::num(self.wall_secs)),
+            (
+                "peak_rss_bytes",
+                Json::num(self.peak_rss_bytes as f64),
+            ),
+            ("cpu_percent", Json::num(self.cpu_percent)),
+            ("cached", Json::Bool(self.cached)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> CellTiming {
+        CellTiming {
+            wall_secs: j.get_f64("wall_secs").unwrap_or(0.0),
+            peak_rss_bytes: j
+                .get_f64("peak_rss_bytes")
+                .unwrap_or(0.0) as u64,
+            cpu_percent: j.get_f64("cpu_percent").unwrap_or(0.0),
+            cached: j
+                .get("cached")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        }
+    }
+}
+
+/// One cell's manifest entry: identity, outcome, artifact paths
+/// (relative to the manifest's directory), and timing.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// human-readable id: `quantizer/topology/net/mode/seed`
+    pub id: String,
+    /// [`config_hash`] of the cell's config (the directory name)
+    pub hash: String,
+    /// this cell's axis assignments ([`Cell::axes_json`])
+    pub axes: Json,
+    /// `"ok"` or `"failed"`
+    pub status: String,
+    /// cell directory, relative to the manifest
+    pub dir: String,
+    pub rounds_csv: String,
+    pub trace: String,
+    pub resources: String,
+    /// rounds recorded in `rounds.csv`
+    pub rounds: usize,
+    pub last_loss: f64,
+    pub final_accuracy: f64,
+    /// virtual clock of the last round (simnet cells)
+    pub virtual_secs: f64,
+    /// cumulative wire bytes of the last round
+    pub wire_bytes: u64,
+    pub timing: CellTiming,
+}
+
+impl CellResult {
+    pub fn ok(&self) -> bool {
+        self.status == "ok"
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("hash", Json::str(&self.hash)),
+            ("axes", self.axes.clone()),
+            ("status", Json::str(&self.status)),
+            ("dir", Json::str(&self.dir)),
+            ("rounds_csv", Json::str(&self.rounds_csv)),
+            ("trace", Json::str(&self.trace)),
+            ("resources", Json::str(&self.resources)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("last_loss", Json::num(self.last_loss)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("virtual_secs", Json::num(self.virtual_secs)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            ("timing", self.timing.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CellResult> {
+        let req = |key: &str| -> anyhow::Result<String> {
+            j.get_str(key).map(str::to_string).ok_or_else(|| {
+                anyhow::anyhow!("cell record missing '{key}'")
+            })
+        };
+        Ok(CellResult {
+            id: req("id")?,
+            hash: req("hash")?,
+            axes: j
+                .get("axes")
+                .cloned()
+                .unwrap_or(Json::obj(Vec::new())),
+            status: req("status")?,
+            dir: req("dir")?,
+            rounds_csv: req("rounds_csv")?,
+            trace: req("trace")?,
+            resources: req("resources")?,
+            rounds: j.get_usize("rounds").unwrap_or(0),
+            // Json::num(NaN) serializes to null, so a failed cell's
+            // losses read back as missing — keep them NaN
+            last_loss: j.get_f64("last_loss").unwrap_or(f64::NAN),
+            final_accuracy: j
+                .get_f64("final_accuracy")
+                .unwrap_or(f64::NAN),
+            virtual_secs: j.get_f64("virtual_secs").unwrap_or(0.0),
+            wire_bytes: j.get_f64("wire_bytes").unwrap_or(0.0) as u64,
+            timing: j
+                .get("timing")
+                .map(CellTiming::from_json)
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// The sweep's one output document: grid axes, base identity, and
+/// every cell's outcome, in grid expansion order.
+#[derive(Clone, Debug)]
+pub struct SweepManifest {
+    pub schema: String,
+    /// the base config's name
+    pub name: String,
+    /// ordered axis listing ([`Grid::axes_json`])
+    pub axes: Json,
+    /// the base config's identity JSON
+    pub base: Json,
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(&self.schema)),
+            ("name", Json::str(&self.name)),
+            ("axes", self.axes.clone()),
+            ("base", self.base.clone()),
+            (
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(CellResult::to_json)
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SweepManifest> {
+        let schema = j.get_str("schema").unwrap_or("");
+        anyhow::ensure!(
+            schema == SWEEP_SCHEMA,
+            "manifest schema '{schema}' != expected '{SWEEP_SCHEMA}'"
+        );
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(CellResult::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SweepManifest {
+            schema: schema.to_string(),
+            name: j.get_str("name").unwrap_or("sweep").to_string(),
+            axes: j
+                .get("axes")
+                .cloned()
+                .unwrap_or(Json::Arr(Vec::new())),
+            base: j
+                .get("base")
+                .cloned()
+                .unwrap_or(Json::obj(Vec::new())),
+            cells,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<SweepManifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", path.display())
+        })?;
+        let j = Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("parsing {}: {e}", path.display())
+        })?;
+        SweepManifest::from_json(&j)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty()).map_err(
+            |e| anyhow::anyhow!("writing {}: {e}", path.display()),
+        )
+    }
+
+    /// The manifest with every cell's timing zeroed, rendered
+    /// compactly — equal across runs of the same sweep
+    /// (`rust/tests/sweep_manifest.rs` pins this).
+    pub fn determinism_key(&self) -> String {
+        let mut m = self.clone();
+        for cell in &mut m.cells {
+            cell.timing = CellTiming::default();
+        }
+        m.to_json().to_string()
+    }
+}
+
+/// Knobs of [`run_sweep`].
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// sweep output directory (manifest + `cells/`)
+    pub out_dir: PathBuf,
+    /// concurrent cells; 0 = the machine's available parallelism
+    pub slots: usize,
+    /// skip cells whose `cell.json` says they completed
+    pub resume: bool,
+    /// resource sampling cadence
+    pub sample_every: Duration,
+    /// the `lmdfl` binary to spawn; `None` = `current_exe()`
+    pub binary: Option<PathBuf>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            out_dir: PathBuf::from("sweep-out"),
+            slots: 0,
+            resume: true,
+            sample_every: Duration::from_millis(50),
+            binary: None,
+        }
+    }
+}
+
+/// Expand `grid` over `base`, run every cell, write
+/// `out_dir/manifest.json`, and return the manifest. Failed cells
+/// are recorded with `status: "failed"` (the sweep keeps going); the
+/// caller decides whether partial success is an error.
+pub fn run_sweep(
+    base: &ExperimentConfig,
+    grid: &Grid,
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepManifest> {
+    let bin = match &opts.binary {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()?,
+    };
+    let cells_dir = opts.out_dir.join("cells");
+    std::fs::create_dir_all(&cells_dir).map_err(|e| {
+        anyhow::anyhow!("creating {}: {e}", cells_dir.display())
+    })?;
+
+    // prepare every cell up front: config, hash, uniqueness
+    let mut prepped = Vec::new();
+    let mut seen = BTreeSet::new();
+    for cell in grid.cells() {
+        let mut cfg = cell.apply_to(base);
+        let hash = config_hash(&cfg);
+        anyhow::ensure!(
+            seen.insert(hash.clone()),
+            "duplicate cell {} (hash {hash}): two grid points \
+             expand to the same config",
+            cell.id()
+        );
+        // tracing is always on in a sweep; the path is relative to
+        // the cell directory (the child's working directory)
+        cfg.observe = Some(ObserveConfig {
+            trace_path: Some("trace.jsonl".into()),
+            chrome_path: None,
+        });
+        prepped.push((cell, cfg, hash));
+    }
+
+    let slots = match opts.slots {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+    .min(prepped.len().max(1));
+    eprintln!(
+        "sweep '{}': {} cells, {} slot(s) -> {}",
+        base.name,
+        prepped.len(),
+        slots,
+        opts.out_dir.display()
+    );
+
+    let queue: Mutex<VecDeque<usize>> =
+        Mutex::new((0..prepped.len()).collect());
+    let results: Mutex<Vec<Option<CellResult>>> =
+        Mutex::new(vec![None; prepped.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..slots {
+            scope.spawn(|| loop {
+                let Some(idx) = queue.lock().unwrap().pop_front()
+                else {
+                    return;
+                };
+                let (cell, cfg, hash) = &prepped[idx];
+                let res =
+                    run_cell(&bin, &cells_dir, cell, cfg, hash, opts);
+                let result = match res {
+                    Ok(r) => {
+                        eprintln!(
+                            "sweep: {} {} ({:.1}s{})",
+                            r.id,
+                            r.status,
+                            r.timing.wall_secs,
+                            if r.timing.cached {
+                                ", cached"
+                            } else {
+                                ""
+                            }
+                        );
+                        r
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "sweep: cell {} failed: {e:#}",
+                            cell.id()
+                        );
+                        failed_cell(cell, hash)
+                    }
+                };
+                results.lock().unwrap()[idx] = Some(result);
+            });
+        }
+    });
+
+    let cells: Vec<CellResult> = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every queued cell produces a result"))
+        .collect();
+    let manifest = SweepManifest {
+        schema: SWEEP_SCHEMA.to_string(),
+        name: base.name.clone(),
+        axes: grid.axes_json(),
+        base: base.identity_json(),
+        cells,
+    };
+    manifest.save(&opts.out_dir.join("manifest.json"))?;
+    Ok(manifest)
+}
+
+/// The manifest entry of a cell that errored before producing
+/// artifacts.
+fn failed_cell(cell: &Cell, hash: &str) -> CellResult {
+    CellResult {
+        id: cell.id(),
+        hash: hash.to_string(),
+        axes: cell.axes_json(),
+        status: "failed".to_string(),
+        dir: format!("cells/{hash}"),
+        rounds_csv: format!("cells/{hash}/rounds.csv"),
+        trace: format!("cells/{hash}/trace.jsonl"),
+        resources: format!("cells/{hash}/resources.jsonl"),
+        rounds: 0,
+        last_loss: f64::NAN,
+        final_accuracy: f64::NAN,
+        virtual_secs: 0.0,
+        wire_bytes: 0,
+        timing: CellTiming::default(),
+    }
+}
+
+/// Run one cell: spawn `lmdfl train` in `cells/<hash>/`, sample its
+/// `/proc` entries until exit, then fold artifacts into a
+/// [`CellResult`] and persist it as `cell.json`.
+fn run_cell(
+    bin: &Path,
+    cells_dir: &Path,
+    cell: &Cell,
+    cfg: &ExperimentConfig,
+    hash: &str,
+    opts: &SweepOptions,
+) -> anyhow::Result<CellResult> {
+    let dir = cells_dir.join(hash);
+    let cell_json = dir.join("cell.json");
+    if opts.resume {
+        if let Some(mut done) = load_completed(&cell_json, hash) {
+            done.timing.cached = true;
+            return Ok(done);
+        }
+    }
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("config.json"),
+        cfg.to_json().to_pretty(),
+    )?;
+
+    // async runs buffer a merged log (--csv); sync runs stream
+    let stream_flag =
+        if cfg.mode == crate::config::EngineMode::Async {
+            "--csv"
+        } else {
+            "--stream-csv"
+        };
+    let log_file = std::fs::File::create(dir.join("run.log"))?;
+    let log_err = log_file.try_clone()?;
+    let mut child = Command::new(bin)
+        .current_dir(&dir)
+        .args([
+            "train",
+            "--config",
+            "config.json",
+            stream_flag,
+            "rounds.csv",
+            "--quiet",
+        ])
+        .stdin(Stdio::null())
+        .stdout(log_file)
+        .stderr(log_err)
+        .spawn()
+        .map_err(|e| {
+            anyhow::anyhow!("spawning {}: {e}", bin.display())
+        })?;
+
+    let mut mon =
+        ProcessMonitor::new(child.id(), &dir.join("resources.jsonl"))?;
+    let status = loop {
+        mon.sample();
+        match child.try_wait()? {
+            Some(status) => break status,
+            None => std::thread::sleep(opts.sample_every),
+        }
+    };
+    let usage = mon.finish();
+    anyhow::ensure!(
+        status.success(),
+        "cell {} exited with {status} (see {})",
+        cell.id(),
+        dir.join("run.log").display()
+    );
+
+    let csv = std::fs::read_to_string(dir.join("rounds.csv"))?;
+    let log = RunLog::from_csv(&cell.id(), &csv)?;
+    let last = log.records.last().ok_or_else(|| {
+        anyhow::anyhow!("cell {} produced no rounds", cell.id())
+    })?;
+    let trace_text =
+        std::fs::read_to_string(dir.join("trace.jsonl"))?;
+    let tf = crate::obs::export::parse_trace(&trace_text)?;
+    crate::obs::summary::check(&tf)?;
+
+    let rel = |file: &str| format!("cells/{hash}/{file}");
+    let result = CellResult {
+        id: cell.id(),
+        hash: hash.to_string(),
+        axes: cell.axes_json(),
+        status: "ok".to_string(),
+        dir: format!("cells/{hash}"),
+        rounds_csv: rel("rounds.csv"),
+        trace: rel("trace.jsonl"),
+        resources: rel("resources.jsonl"),
+        rounds: log.records.len(),
+        last_loss: log.last_loss().unwrap_or(f64::NAN),
+        final_accuracy: log.final_accuracy().unwrap_or(f64::NAN),
+        virtual_secs: last.virtual_secs,
+        wire_bytes: last.wire_bytes,
+        timing: CellTiming {
+            wall_secs: usage.wall_secs,
+            peak_rss_bytes: usage.peak_rss_bytes,
+            cpu_percent: usage.cpu_percent,
+            cached: false,
+        },
+    };
+    std::fs::write(&cell_json, result.to_json().to_pretty())?;
+    Ok(result)
+}
+
+/// A completed prior run of this cell, if its `cell.json` matches the
+/// hash, says `ok`, and all three artifacts still exist.
+fn load_completed(cell_json: &Path, hash: &str) -> Option<CellResult> {
+    let text = std::fs::read_to_string(cell_json).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let res = CellResult::from_json(&j).ok()?;
+    if res.hash != hash || !res.ok() {
+        return None;
+    }
+    let dir = cell_json.parent()?;
+    for artifact in ["rounds.csv", "trace.jsonl", "resources.jsonl"] {
+        if !dir.join(artifact).exists() {
+            return None;
+        }
+    }
+    Some(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantizerKind;
+
+    #[test]
+    fn config_hash_is_stable_and_observe_invariant() {
+        let cfg = ExperimentConfig::default();
+        let h1 = config_hash(&cfg);
+        let h2 = config_hash(&cfg);
+        assert_eq!(h1, h2);
+        assert_eq!(h1.len(), 16);
+
+        let mut traced = cfg.clone();
+        traced.observe = Some(ObserveConfig {
+            trace_path: Some("/tmp/elsewhere.jsonl".into()),
+            chrome_path: None,
+        });
+        assert_eq!(config_hash(&traced), h1);
+
+        let mut other = cfg.clone();
+        other.quantizer = QuantizerKind::Qsgd { s: 16 };
+        assert_ne!(config_hash(&other), h1);
+        let mut renamed = cfg.clone();
+        renamed.name = "something-else".into();
+        assert_ne!(config_hash(&renamed), h1);
+    }
+
+    fn sample_cell() -> CellResult {
+        CellResult {
+            id: "qsgd/ring/base/sync/7".into(),
+            hash: "00deadbeef001234".into(),
+            axes: Json::obj(vec![(
+                "quantizer",
+                Json::str("qsgd"),
+            )]),
+            status: "ok".into(),
+            dir: "cells/00deadbeef001234".into(),
+            rounds_csv: "cells/00deadbeef001234/rounds.csv".into(),
+            trace: "cells/00deadbeef001234/trace.jsonl".into(),
+            resources: "cells/00deadbeef001234/resources.jsonl"
+                .into(),
+            rounds: 12,
+            last_loss: 0.25,
+            final_accuracy: 0.875,
+            virtual_secs: 3.5,
+            wire_bytes: 123_456,
+            timing: CellTiming {
+                wall_secs: 1.25,
+                peak_rss_bytes: 7 << 20,
+                cpu_percent: 93.5,
+                cached: false,
+            },
+        }
+    }
+
+    #[test]
+    fn cell_result_roundtrips_through_json() {
+        let cell = sample_cell();
+        let back =
+            CellResult::from_json(&cell.to_json()).unwrap();
+        assert_eq!(back.id, cell.id);
+        assert_eq!(back.hash, cell.hash);
+        assert_eq!(back.status, cell.status);
+        assert_eq!(back.rounds, cell.rounds);
+        assert_eq!(back.last_loss, cell.last_loss);
+        assert_eq!(back.wire_bytes, cell.wire_bytes);
+        assert_eq!(back.timing, cell.timing);
+    }
+
+    #[test]
+    fn failed_cell_losses_roundtrip_as_nan() {
+        let mut cell = sample_cell();
+        cell.status = "failed".into();
+        cell.last_loss = f64::NAN;
+        cell.final_accuracy = f64::NAN;
+        let back =
+            CellResult::from_json(&cell.to_json()).unwrap();
+        assert!(back.last_loss.is_nan());
+        assert!(back.final_accuracy.is_nan());
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_key_ignores_timing() {
+        let base = ExperimentConfig::default();
+        let grid = Grid::from_base(&base);
+        let manifest = SweepManifest {
+            schema: SWEEP_SCHEMA.to_string(),
+            name: base.name.clone(),
+            axes: grid.axes_json(),
+            base: base.identity_json(),
+            cells: vec![sample_cell()],
+        };
+        let back =
+            SweepManifest::from_json(&manifest.to_json()).unwrap();
+        assert_eq!(back.cells.len(), 1);
+        assert_eq!(back.name, manifest.name);
+
+        let mut slower = manifest.clone();
+        slower.cells[0].timing.wall_secs = 99.0;
+        slower.cells[0].timing.peak_rss_bytes = 1 << 30;
+        assert_eq!(
+            slower.determinism_key(),
+            manifest.determinism_key()
+        );
+        let mut different = manifest.clone();
+        different.cells[0].last_loss = 0.5;
+        assert_ne!(
+            different.determinism_key(),
+            manifest.determinism_key()
+        );
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let j = Json::obj(vec![(
+            "schema",
+            Json::str("lmdfl-sweep-v0"),
+        )]);
+        assert!(SweepManifest::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Per-run resource monitoring via `/proc`.
+//!
+//! A [`ProcessMonitor`] samples one child process at a fixed cadence:
+//! resident set (`VmRSS`), peak resident set (`VmHWM`) and cumulative
+//! CPU time (`utime + stime` from `/proc/<pid>/stat`). Every sample is
+//! appended as one JSON line to a `resources.jsonl` file next to the
+//! run's trace, and [`ProcessMonitor::finish`] folds the series into a
+//! [`ResourceUsage`] summary (peak RSS, CPU seconds, mean CPU%). The
+//! sweep runner owns the sampling loop — it polls the child's exit
+//! status between samples, so monitoring costs no extra thread.
+//!
+//! Off-Linux (no `/proc`) the monitor degrades gracefully: samples
+//! read nothing, the summary reports zeros, and the JSONL holds only
+//! its header line.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// Kernel clock ticks per second for `utime`/`stime` (the universal
+/// Linux value; `sysconf(_SC_CLK_TCK)` without libc).
+const CLK_TCK: f64 = 100.0;
+
+/// Folded resource series of one monitored run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResourceUsage {
+    /// samples taken (0 when `/proc` was unavailable)
+    pub samples: u64,
+    /// max `VmHWM` observed, bytes
+    pub peak_rss_bytes: u64,
+    /// cumulative `utime + stime` at the last sample, seconds
+    pub cpu_secs: f64,
+    /// wall-clock monitor lifetime, seconds
+    pub wall_secs: f64,
+    /// mean utilization: `100 * cpu_secs / wall_secs`
+    pub cpu_percent: f64,
+}
+
+/// Samples one pid's `/proc` entries and streams them to JSONL.
+pub struct ProcessMonitor {
+    pid: u32,
+    started: Instant,
+    samples: u64,
+    peak_rss_bytes: u64,
+    cpu_secs: f64,
+    sink: BufWriter<File>,
+}
+
+impl ProcessMonitor {
+    /// Open the JSONL sink and write its header line
+    /// (`{"schema":"lmdfl-resources-v1","pid":N}`).
+    pub fn new(pid: u32, jsonl: &Path) -> anyhow::Result<Self> {
+        let file = File::create(jsonl).map_err(|e| {
+            anyhow::anyhow!("creating {}: {e}", jsonl.display())
+        })?;
+        let mut sink = BufWriter::new(file);
+        writeln!(
+            sink,
+            "{{\"schema\":\"lmdfl-resources-v1\",\"pid\":{pid}}}"
+        )?;
+        Ok(ProcessMonitor {
+            pid,
+            started: Instant::now(),
+            samples: 0,
+            peak_rss_bytes: 0,
+            cpu_secs: 0.0,
+            sink,
+        })
+    }
+
+    /// Take one sample. Returns `false` once the pid's `/proc` entry
+    /// is gone (process exited) — the caller's cue to stop sampling.
+    pub fn sample(&mut self) -> bool {
+        let Some((rss, hwm)) = read_status(self.pid) else {
+            return false;
+        };
+        let cpu = read_cpu_secs(self.pid).unwrap_or(self.cpu_secs);
+        self.peak_rss_bytes = self.peak_rss_bytes.max(hwm);
+        self.cpu_secs = self.cpu_secs.max(cpu);
+        self.samples += 1;
+        let t = self.started.elapsed().as_secs_f64();
+        let _ = writeln!(
+            self.sink,
+            "{{\"t_secs\":{t},\"rss_bytes\":{rss},\
+             \"vm_hwm_bytes\":{hwm},\"cpu_secs\":{cpu}}}"
+        );
+        true
+    }
+
+    /// Flush the JSONL and fold the series into a summary.
+    pub fn finish(mut self) -> ResourceUsage {
+        let _ = self.sink.flush();
+        let wall = self.started.elapsed().as_secs_f64();
+        ResourceUsage {
+            samples: self.samples,
+            peak_rss_bytes: self.peak_rss_bytes,
+            cpu_secs: self.cpu_secs,
+            wall_secs: wall,
+            cpu_percent: if wall > 0.0 {
+                100.0 * self.cpu_secs / wall
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// `VmRSS` and `VmHWM` from `/proc/<pid>/status`, in bytes.
+fn read_status(pid: u32) -> Option<(u64, u64)> {
+    let text =
+        std::fs::read_to_string(format!("/proc/{pid}/status")).ok()?;
+    let kb = |l: &str| -> Option<u64> {
+        l.split_whitespace().nth(1).and_then(|v| v.parse().ok())
+    };
+    let mut rss = 0u64;
+    let mut hwm = 0u64;
+    for line in text.lines() {
+        if line.starts_with("VmRSS:") {
+            rss = kb(line)? * 1024;
+        } else if line.starts_with("VmHWM:") {
+            hwm = kb(line)? * 1024;
+        }
+    }
+    Some((rss, hwm))
+}
+
+/// Cumulative `utime + stime` from `/proc/<pid>/stat`, in seconds.
+/// The comm field may contain spaces, so tokens count from the last
+/// `)`: utime and stime are fields 14 and 15 of the stat line, i.e.
+/// whitespace tokens 11 and 12 after the closing paren.
+fn read_cpu_secs(pid: u32) -> Option<f64> {
+    let text =
+        std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    let rest = &text[text.rfind(')')? + 1..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some((utime + stime) as f64 / CLK_TCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::Json;
+
+    #[test]
+    fn monitors_own_process_and_streams_jsonl() {
+        if !Path::new("/proc/self/status").exists() {
+            return; // no procfs on this platform
+        }
+        let dir = std::env::temp_dir().join(format!(
+            "lmdfl-monitor-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let jsonl = dir.join("resources.jsonl");
+        let mut mon =
+            ProcessMonitor::new(std::process::id(), &jsonl).unwrap();
+        // burn a little CPU between samples so cpu_secs can move
+        let mut acc = 0u64;
+        for round in 0..3 {
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_mul(31).wrapping_add(i ^ round);
+            }
+            assert!(mon.sample());
+        }
+        assert!(acc != 42); // keep the loop alive
+        let usage = mon.finish();
+        assert_eq!(usage.samples, 3);
+        assert!(usage.peak_rss_bytes > 0);
+        assert!(usage.wall_secs > 0.0);
+
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4); // header + 3 samples
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(
+            header.get_str("schema"),
+            Some("lmdfl-resources-v1")
+        );
+        for line in &lines[1..] {
+            let doc = Json::parse(line).unwrap();
+            assert!(doc.get_f64("rss_bytes").unwrap() > 0.0);
+            assert!(doc.get_f64("t_secs").unwrap() >= 0.0);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_pid_reports_gone() {
+        // pid 0 never has a /proc entry visible this way
+        assert!(read_status(0).is_none());
+    }
+}

@@ -142,6 +142,41 @@ fn streamed_simulated_run_matches_buffered_replay() {
     );
 }
 
+#[test]
+fn threaded_run_streams_records_in_order() {
+    let cfg = small_cfg();
+    let mut csv = CsvStream::new(Vec::new()).unwrap();
+    let mut buf = LogSink::new(&cfg.name);
+    let summary = {
+        let mut tee = Tee(&mut csv, &mut buf);
+        lmdfl::dfl::Trainer::run_threaded_streamed(
+            &cfg,
+            lmdfl::dfl::NetOptions::default(),
+            &mut tee,
+        )
+        .unwrap()
+    };
+    let text = String::from_utf8(csv.finish().unwrap()).unwrap();
+    assert_eq!(
+        text,
+        buf.0.to_csv(),
+        "threaded streamed bytes != buffered to_csv"
+    );
+    assert_eq!(buf.0.records.len(), cfg.rounds);
+    // the coordinator must emit rounds strictly in order even though
+    // worker threads finish out of order
+    for (k, r) in buf.0.records.iter().enumerate() {
+        assert_eq!(r.round, k + 1, "record {k} out of order");
+        // threaded runs report no wall/virtual clocks per record
+        assert_eq!(r.wall_secs, 0.0);
+    }
+    assert_eq!(summary.rounds, cfg.rounds);
+    let last = buf.0.records.last().unwrap();
+    assert_eq!(summary.last_loss.to_bits(), last.loss.to_bits());
+    assert_eq!(summary.wire_bytes, last.wire_bytes);
+    assert!(summary.peak_rss_bytes.is_none_or(|b| b > 0));
+}
+
 /// A `Write` that keeps its bytes reachable after the engine consumed
 /// the boxed sink.
 #[derive(Clone)]

@@ -1,0 +1,262 @@
+//! Sweep harness contract: manifests are deterministic modulo timing,
+//! config hashes are pinned by a golden fixture, resume skips
+//! completed cells, traced sweep cells match equivalent standalone
+//! runs, and `analyse` emits the tidy CSVs downstream tooling greps.
+//!
+//! Every sweep here runs real `lmdfl train` subprocesses, so the
+//! tests skip (like `integration_cli.rs`) when the binary isn't
+//! built — `cargo test` after `cargo build` exercises everything.
+
+use std::path::{Path, PathBuf};
+
+use lmdfl::config::{DatasetKind, ExperimentConfig, QuantizerKind};
+use lmdfl::metrics::{CsvStream, RunLog};
+use lmdfl::prelude::{Grid, SweepOptions, SWEEP_SCHEMA};
+use lmdfl::sweep;
+
+fn lmdfl_bin() -> Option<PathBuf> {
+    // cargo puts test binaries next to the main binary
+    let mut path = std::env::current_exe().ok()?;
+    path.pop(); // test binary name
+    if path.ends_with("deps") {
+        path.pop();
+    }
+    let bin = path.join("lmdfl");
+    bin.exists().then_some(bin)
+}
+
+macro_rules! require_bin {
+    () => {
+        match lmdfl_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: lmdfl binary not built");
+                return;
+            }
+        }
+    };
+}
+
+/// Tiny ideal-network sync base: fast enough to run several times
+/// per test binary.
+fn tiny_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "sweep-test".into();
+    cfg.seed = 17;
+    cfg.nodes = 4;
+    cfg.tau = 1;
+    cfg.rounds = 3;
+    cfg.batch_size = 8;
+    cfg.dataset = DatasetKind::Blobs {
+        train: 80,
+        test: 40,
+        dim: 6,
+        classes: 3,
+    };
+    cfg.quantizer = QuantizerKind::LloydMax { s: 8, iters: 4 };
+    cfg
+}
+
+fn tiny_grid(base: &ExperimentConfig) -> Grid {
+    let mut grid = Grid::from_base(base);
+    grid.set_quantizers("lloyd_max,qsgd").unwrap();
+    grid
+}
+
+fn opts(bin: &Path, out: &Path) -> SweepOptions {
+    SweepOptions {
+        out_dir: out.to_path_buf(),
+        slots: 2,
+        binary: Some(bin.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("lmdfl-sweep-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn manifests_are_deterministic_modulo_timing() {
+    let bin = require_bin!();
+    let base = tiny_base();
+    let grid = tiny_grid(&base);
+    let (d1, d2) = (temp_dir("det-a"), temp_dir("det-b"));
+    let m1 = sweep::run_sweep(&base, &grid, &opts(&bin, &d1)).unwrap();
+    let m2 = sweep::run_sweep(&base, &grid, &opts(&bin, &d2)).unwrap();
+    assert_eq!(m1.cells.len(), 2);
+    assert!(m1.cells.iter().all(|c| c.ok()), "{m1:?}");
+    assert_eq!(
+        m1.determinism_key(),
+        m2.determinism_key(),
+        "same sweep, different manifests (beyond timing)"
+    );
+    // the saved manifest loads back to the same key
+    let loaded =
+        sweep::SweepManifest::load(&d1.join("manifest.json")).unwrap();
+    assert_eq!(loaded.schema, SWEEP_SCHEMA);
+    assert_eq!(loaded.determinism_key(), m1.determinism_key());
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d2).ok();
+}
+
+/// The golden config-hash fixture: cells/<hash> directory names are
+/// part of the resume contract, so an accidental change to the
+/// identity JSON (or the hash) must fail loudly. The fixture
+/// self-blesses on first run (or with LMDFL_BLESS=1) and is compared
+/// verbatim afterwards.
+#[test]
+fn config_hash_matches_golden_fixture() {
+    let fixture = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/sweep_config_hash.txt");
+    let base = tiny_base();
+    let lines: String = tiny_grid(&base)
+        .cells()
+        .iter()
+        .map(|cell| {
+            let cfg = cell.apply_to(&base);
+            format!("{} {}\n", sweep::config_hash(&cfg), cell.id())
+        })
+        .collect();
+    // observe: must never reach the hash (trace paths differ per dir)
+    let mut traced = base.clone();
+    traced.observe = Some(lmdfl::obs::ObserveConfig {
+        trace_path: Some("anywhere.jsonl".into()),
+        chrome_path: None,
+    });
+    assert_eq!(
+        sweep::config_hash(&traced),
+        sweep::config_hash(&base)
+    );
+    let bless = std::env::var("LMDFL_BLESS").is_ok();
+    if bless || !fixture.exists() {
+        std::fs::create_dir_all(fixture.parent().unwrap()).unwrap();
+        std::fs::write(&fixture, &lines).unwrap();
+        eprintln!("blessed {}", fixture.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&fixture).unwrap();
+    assert_eq!(
+        lines,
+        want,
+        "config hashes changed; if intentional, re-bless with \
+         LMDFL_BLESS=1"
+    );
+}
+
+#[test]
+fn resume_skips_completed_cells() {
+    let bin = require_bin!();
+    let base = tiny_base();
+    let grid = tiny_grid(&base);
+    let dir = temp_dir("resume");
+    let o = opts(&bin, &dir);
+    let first = sweep::run_sweep(&base, &grid, &o).unwrap();
+    assert!(first.cells.iter().all(|c| !c.timing.cached));
+    let second = sweep::run_sweep(&base, &grid, &o).unwrap();
+    assert!(
+        second.cells.iter().all(|c| c.timing.cached),
+        "resume re-ran completed cells: {second:?}"
+    );
+    assert_eq!(
+        first.determinism_key(),
+        second.determinism_key(),
+        "resume changed the manifest (beyond timing)"
+    );
+    // a missing artifact invalidates just that cell
+    let victim = &second.cells[0];
+    std::fs::remove_file(dir.join(&victim.trace)).unwrap();
+    let third = sweep::run_sweep(&base, &grid, &o).unwrap();
+    assert!(!third.cells[0].timing.cached, "gone trace, still cached");
+    assert!(third.cells[1].timing.cached);
+    assert_eq!(third.determinism_key(), first.determinism_key());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_cells_match_equivalent_standalone_runs() {
+    let bin = require_bin!();
+    let base = tiny_base();
+    let grid = tiny_grid(&base);
+    let dir = temp_dir("parity");
+    let m = sweep::run_sweep(&base, &grid, &opts(&bin, &dir)).unwrap();
+    // zero the one real-time column on both sides before comparing
+    let normalize = |name: &str, text: &str| -> String {
+        let mut log = RunLog::from_csv(name, text).unwrap();
+        for r in &mut log.records {
+            r.wall_secs = 0.0;
+        }
+        log.to_csv()
+    };
+    for (cell, result) in grid.cells().iter().zip(&m.cells) {
+        assert!(result.ok());
+        let cfg = cell.apply_to(&base);
+        let mut sink = CsvStream::new(Vec::new()).unwrap();
+        lmdfl::dfl::Trainer::run_streamed(&cfg, &mut sink).unwrap();
+        let standalone =
+            String::from_utf8(sink.finish().unwrap()).unwrap();
+        let from_sweep = std::fs::read_to_string(
+            dir.join(&result.rounds_csv),
+        )
+        .unwrap();
+        assert_eq!(
+            normalize(&result.id, &from_sweep),
+            normalize(&result.id, &standalone),
+            "cell {} diverged from its standalone run",
+            result.id
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn analyse_emits_tidy_csvs_and_fig_time_consumes_them() {
+    let bin = require_bin!();
+    let base = tiny_base();
+    let grid = tiny_grid(&base);
+    let dir = temp_dir("analyse");
+    let m = sweep::run_sweep(&base, &grid, &opts(&bin, &dir)).unwrap();
+    let manifest_path = dir.join("manifest.json");
+    let out = dir.join("analysis");
+    let written =
+        sweep::analyse::analyse(&manifest_path, &out).unwrap();
+    assert_eq!(written.len(), 4);
+
+    let cells = std::fs::read_to_string(out.join("cells.csv")).unwrap();
+    let rows: Vec<&str> = cells.lines().collect();
+    assert_eq!(rows.len(), 1 + m.cells.len());
+    assert!(
+        rows[0].starts_with(
+            "cell,hash,quantizer,topology,net,mode,seed,status"
+        ),
+        "{}",
+        rows[0]
+    );
+    for cell in &m.cells {
+        assert!(cells.contains(&cell.hash), "missing {}", cell.id);
+    }
+    let spans = std::fs::read_to_string(out.join("spans.csv")).unwrap();
+    assert!(
+        spans.lines().count() > 1,
+        "no span aggregates: {spans}"
+    );
+    let hists = std::fs::read_to_string(out.join("hists.csv")).unwrap();
+    assert!(hists.starts_with(
+        "cell,hash,histogram,count,mean,p50_le,p90_le,p99_le"
+    ));
+
+    // fig-time --from-sweep consumes the same manifest
+    let curves = lmdfl::experiments::fig_time::curves_from_sweep(
+        &manifest_path,
+    )
+    .unwrap();
+    assert_eq!(curves.len(), m.cells.len());
+    for (curve, cell) in curves.iter().zip(&m.cells) {
+        assert_eq!(curve.label, cell.id);
+        assert_eq!(curve.log.records.len(), cell.rounds);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
