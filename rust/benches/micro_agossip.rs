@@ -76,6 +76,8 @@ fn cfg(nodes: usize, mode: EngineMode) -> ExperimentConfig {
         }),
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

@@ -39,6 +39,8 @@ fn cfg(nodes: usize, hidden: usize, quant: QuantizerKind) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

@@ -88,6 +88,54 @@ fn main() {
         });
     }
 
+    // ---- sparse wire bodies (WIRE_VERSION 2) ---------------------------
+    // top-k keeps 1% of coordinates: the frame is ~k entries, not d, so
+    // throughput is measured per input element to keep rows comparable
+    println!("--- sparse wire codec (top-k keep=1%) ---");
+    for &d in &[100_000usize, 1_000_000] {
+        let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut topk = lmdfl::quant::TopKQuantizer::new(0.01);
+        let msg = topk.quantize(&v, &mut rng);
+        assert!(
+            codec::sparse_nnz(&msg).is_some(),
+            "top-k message should take the sparse body"
+        );
+        let header = wire::WireHeader::new(
+            wire::QuantTag::TopK,
+            0,
+            1,
+            7,
+            msg.s(),
+        );
+        let mut sparse_buf: Vec<u8> = Vec::new();
+        b.run_elems(&format!("wire encode sparse d={d}"), d as u64, || {
+            sparse_buf = wire::encode_with_buf(
+                &header,
+                &msg,
+                std::mem::take(&mut sparse_buf),
+            );
+            black_box(&sparse_buf);
+        });
+        let sparse_bytes = wire::encode(&header, &msg);
+        println!(
+            "    sparse frame: {} bytes (dense form would be {})",
+            sparse_bytes.len(),
+            wire::HEADER_BYTES
+                + lmdfl::quant::bits::stream_bytes(codec::encoded_bits(
+                    d,
+                    msg.s(),
+                    false,
+                )),
+        );
+        let mut cache = wire::ImpliedCache::new();
+        let mut out = lmdfl::quant::QuantizedVector::empty();
+        b.run_elems(&format!("wire decode sparse d={d}"), d as u64, || {
+            wire::decode_into(&sparse_bytes, &mut cache, &mut out)
+                .unwrap();
+            black_box(&out);
+        });
+    }
+
     // level-count sensitivity of the LM fit
     println!("--- lloyd-max fit cost vs s (d = 100k) ---");
     let v: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();

@@ -44,6 +44,8 @@ fn cfg(nodes: usize, parallelism: Parallelism) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

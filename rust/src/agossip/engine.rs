@@ -740,22 +740,46 @@ impl AsyncGossipEngine {
             // correction on the true params, so stale estimate error
             // can never erase local SGD progress (same rationale as the
             // synchronous engine's Eq. 21 form)
+            let mixing = self.cfg.mixing;
             let scratch = &mut self.mix_scratch;
             let node = &mut self.nodes[i];
-            crate::quant::kernels::scaled_into(
-                scratch,
-                self_w as f32,
-                &node.core.hat,
-            );
-            for (idx, &wj) in w.iter().enumerate() {
-                if wj == 0.0 {
-                    continue;
-                }
-                crate::quant::kernels::axpy(
+            if mixing.is_plain() {
+                crate::quant::kernels::scaled_into(
                     scratch,
-                    wj as f32,
-                    &node.nbr_hat[idx],
+                    self_w as f32,
+                    &node.core.hat,
                 );
+                for (idx, &wj) in w.iter().enumerate() {
+                    if wj == 0.0 {
+                        continue;
+                    }
+                    crate::quant::kernels::axpy(
+                        scratch,
+                        wj as f32,
+                        &node.nbr_hat[idx],
+                    );
+                }
+            } else {
+                // robust row over the staleness-weighted live columns
+                // (zero-weight neighbors — never heard, or churned out
+                // of the Metropolis row — are not candidates)
+                let mut nbrs: Vec<(&[f32], f64)> =
+                    Vec::with_capacity(w.len());
+                for (idx, &wj) in w.iter().enumerate() {
+                    if wj != 0.0 {
+                        nbrs.push((node.nbr_hat[idx].as_slice(), wj));
+                    }
+                }
+                let drops = crate::topology::robust_mix_into(
+                    scratch,
+                    &node.core.hat,
+                    self_w,
+                    &nbrs,
+                    &mixing,
+                );
+                if drops > 0 {
+                    crate::obs::counter("trimmed_drops", "async", drops);
+                }
             }
             crate::quant::kernels::add_delta(
                 &mut node.core.params,
@@ -1215,6 +1239,47 @@ mod tests {
             prev = r.wire_bytes;
         }
         assert!(prev <= log.fabric_link_bytes);
+    }
+
+    #[test]
+    fn robust_mixing_async_completes_and_replays() {
+        for mixing in [
+            crate::config::MixingKind::Trimmed { f: 1 },
+            crate::config::MixingKind::Median,
+        ] {
+            let mut cfg =
+                async_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+            cfg.rounds = 5;
+            cfg.mixing = mixing;
+            let a = run(&cfg);
+            let b = run(&cfg);
+            assert_eq!(
+                a.nodes.len(),
+                cfg.nodes * cfg.rounds,
+                "{mixing:?} stalled"
+            );
+            assert_eq!(a.event_digest, b.event_digest, "{mixing:?}");
+            assert_eq!(a.nodes, b.nodes, "{mixing:?} not replayable");
+        }
+    }
+
+    #[test]
+    fn attacked_async_run_replays_bitwise() {
+        let mut cfg =
+            async_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.rounds = 5;
+        cfg.attack = Some(crate::config::AttackConfig {
+            kind: crate::config::AttackKind::Random,
+            f: 2,
+        });
+        cfg.mixing = crate::config::MixingKind::Trimmed { f: 1 };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.event_digest, b.event_digest);
+        assert_eq!(a.nodes, b.nodes);
+        for (x, y) in a.merged.records.iter().zip(&b.merged.records) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
     }
 
     #[test]

@@ -5,8 +5,9 @@ pub mod schema;
 
 pub use json::Json;
 pub use schema::{
-    BackendKind, ConfigError, DatasetKind, EngineMode, ExperimentConfig,
-    LrSchedule, Parallelism, QuantizerKind, TopologyKind, WireEncoding,
+    AttackConfig, AttackKind, BackendKind, ConfigError, DatasetKind,
+    EngineMode, ExperimentConfig, LrSchedule, MixingKind, Parallelism,
+    QuantizerKind, TopologyKind, WireEncoding,
 };
 
 use std::path::Path;

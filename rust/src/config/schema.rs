@@ -107,6 +107,12 @@ pub enum QuantizerKind {
     LloydMax { s: usize, iters: usize },
     /// Doubly-adaptive: Lloyd-Max levels + ascending level count (Eq. 37).
     DoublyAdaptive { s1: usize, iters: usize, s_max: usize },
+    /// TernGrad ternary stochastic quantization [11] (extension
+    /// baseline; ships the sparse wire body when it is smaller).
+    TernGrad,
+    /// Top-k sparsification [12]: keep this fraction of coordinates at
+    /// full precision (ships the sparse wire body).
+    TopK { keep: f64 },
 }
 
 impl QuantizerKind {
@@ -118,6 +124,8 @@ impl QuantizerKind {
             QuantizerKind::Alq { .. } => "alq",
             QuantizerKind::LloydMax { .. } => "lloyd_max",
             QuantizerKind::DoublyAdaptive { .. } => "doubly_adaptive",
+            QuantizerKind::TernGrad => "terngrad",
+            QuantizerKind::TopK { .. } => "topk",
         }
     }
 
@@ -138,6 +146,10 @@ impl QuantizerKind {
                 pairs.push(("s1", Json::num(*s1 as f64)));
                 pairs.push(("iters", Json::num(*iters as f64)));
                 pairs.push(("s_max", Json::num(*s_max as f64)));
+            }
+            QuantizerKind::TernGrad => {}
+            QuantizerKind::TopK { keep } => {
+                pairs.push(("keep", Json::num(*keep)));
             }
         }
         Json::obj(pairs)
@@ -161,6 +173,10 @@ impl QuantizerKind {
                 s1: j.get_usize("s1").unwrap_or(4),
                 iters: j.get_usize("iters").unwrap_or(12),
                 s_max: j.get_usize("s_max").unwrap_or(4096),
+            },
+            "terngrad" => QuantizerKind::TernGrad,
+            "topk" => QuantizerKind::TopK {
+                keep: j.get_f64("keep").unwrap_or(0.1),
             },
             other => return Err(bad(format!("unknown quantizer '{other}'"))),
         })
@@ -415,6 +431,182 @@ impl EngineMode {
     }
 }
 
+/// How the gossip engines aggregate neighbor estimates in the mixing
+/// step. `Metropolis` is the paper's doubly-stochastic confusion-matrix
+/// row; the robust variants defend the same row against Byzantine
+/// neighbors coordinate-wise (see [`crate::topology::robust`]).
+/// `Trimmed { f: 0 }` dispatches to the plain Metropolis path, so the
+/// two are bit-identical at f = 0.
+///
+/// JSON / CLI forms: `"metropolis"` (default), `"trimmed(f)"` (also
+/// accepted as `{"kind": "trimmed", "f": n}`), `"median"`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MixingKind {
+    /// plain Metropolis–Hastings weighted averaging (the paper's C)
+    #[default]
+    Metropolis,
+    /// drop the `f` largest and `f` smallest neighbor values per
+    /// coordinate, rescale the surviving neighbor weights
+    Trimmed { f: usize },
+    /// coordinate-wise median over self + live neighbor estimates
+    Median,
+}
+
+impl MixingKind {
+    /// `true` when this kind runs the plain Metropolis code path
+    /// (including the `trimmed(0)` degenerate form — the bit-identity
+    /// guarantee at f = 0).
+    pub fn is_plain(&self) -> bool {
+        matches!(
+            self,
+            MixingKind::Metropolis | MixingKind::Trimmed { f: 0 }
+        )
+    }
+
+    /// Canonical display / sweep-axis name (`trimmed(f)` keeps f).
+    pub fn label(&self) -> String {
+        match self {
+            MixingKind::Metropolis => "metropolis".into(),
+            MixingKind::Trimmed { f } => format!("trimmed({f})"),
+            MixingKind::Median => "median".into(),
+        }
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self, ConfigError> {
+        match text {
+            "metropolis" => return Ok(MixingKind::Metropolis),
+            "median" => return Ok(MixingKind::Median),
+            _ => {}
+        }
+        if let Some(inner) = text
+            .strip_prefix("trimmed(")
+            .and_then(|r| r.strip_suffix(')'))
+        {
+            if let Ok(f) = inner.trim().parse::<usize>() {
+                return Ok(MixingKind::Trimmed { f });
+            }
+        }
+        Err(bad(format!(
+            "mixing must be 'metropolis', 'trimmed(f)' or 'median', \
+             got '{text}'"
+        )))
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            MixingKind::Trimmed { f } => Json::obj(vec![
+                ("kind", Json::str("trimmed")),
+                ("f", Json::num(*f as f64)),
+            ]),
+            MixingKind::Metropolis => Json::str("metropolis"),
+            MixingKind::Median => Json::str("median"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        if let Some(s) = j.as_str() {
+            return Self::parse_str(s);
+        }
+        match j.get_str("kind") {
+            Some("trimmed") => Ok(MixingKind::Trimmed {
+                f: j.get_usize("f").unwrap_or(1),
+            }),
+            Some(other) => Self::parse_str(other),
+            None => Err(bad("mixing.kind missing")),
+        }
+    }
+}
+
+/// Byzantine sender behaviors for the `attack:` section. The corruption
+/// is injected into the outgoing delta at the wire-encode boundary
+/// ([`crate::dfl::core::NodeCore`]), *before* quantization, so every
+/// engine, encoding, and transport faces the identical adversary and
+/// the attacker stays wire-consistent (its own estimate x̂ tracks the
+/// corrupted stream it broadcasts).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttackKind {
+    /// broadcast −δ instead of δ (estimate error doubles per message)
+    SignFlip,
+    /// broadcast `factor`·δ (scaled-gradient attack)
+    Scale { factor: f64 },
+    /// broadcast a seeded random vector at the honest delta's scale
+    Random,
+}
+
+impl AttackKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::SignFlip => "sign_flip",
+            AttackKind::Scale { .. } => "scale",
+            AttackKind::Random => "random",
+        }
+    }
+}
+
+/// `attack:` config section — which Byzantine behavior the first `f`
+/// node ids run. Deterministic by construction: roles are a pure
+/// function of the config, and the random-message attacker draws from
+/// its own dedicated rng split, so attacked runs replay byte-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackConfig {
+    pub kind: AttackKind,
+    /// number of Byzantine nodes (ids `0..f`)
+    pub f: usize,
+}
+
+impl AttackConfig {
+    /// The Byzantine behavior node `i` runs, if any.
+    pub fn role(&self, node: usize) -> Option<&AttackKind> {
+        (node < self.f).then_some(&self.kind)
+    }
+
+    pub fn validate(&self, nodes: usize) -> Result<(), ConfigError> {
+        if self.f > nodes {
+            return Err(bad(format!(
+                "attack.f = {} exceeds the {nodes}-node fleet",
+                self.f
+            )));
+        }
+        if let AttackKind::Scale { factor } = self.kind {
+            if !factor.is_finite() {
+                return Err(bad("attack.factor must be finite"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::str(self.kind.name())),
+            ("f", Json::num(self.f as f64)),
+        ];
+        if let AttackKind::Scale { factor } = self.kind {
+            pairs.push(("factor", Json::num(factor)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, ConfigError> {
+        let kind = match j
+            .get_str("kind")
+            .ok_or_else(|| bad("attack.kind missing"))?
+        {
+            "sign_flip" => AttackKind::SignFlip,
+            "scale" => AttackKind::Scale {
+                factor: j.get_f64("factor").unwrap_or(-4.0),
+            },
+            "random" => AttackKind::Random,
+            other => {
+                return Err(bad(format!(
+                    "attack.kind must be 'sign_flip', 'scale' or \
+                     'random', got '{other}'"
+                )))
+            }
+        };
+        Ok(AttackConfig { kind, f: j.get_usize("f").unwrap_or(1) })
+    }
+}
+
 /// Learning-rate schedule. The paper evaluates fixed η and a variable η_k
 /// decaying 20% every 10 iterations (Fig. 8).
 #[derive(Clone, Debug, PartialEq)]
@@ -509,6 +701,12 @@ pub struct ExperimentConfig {
     /// [`crate::obs`]. Never affects simulated results: traced runs
     /// are byte-identical to untraced ones.
     pub observe: Option<crate::obs::ObserveConfig>,
+    /// `attack:` section — Byzantine sender behaviors for the first
+    /// `f` node ids. `None` = every node honest.
+    pub attack: Option<AttackConfig>,
+    /// mixing-step aggregation (`metropolis` default, or the robust
+    /// `trimmed(f)` / `median` variants)
+    pub mixing: MixingKind,
 }
 
 impl Default for ExperimentConfig {
@@ -535,6 +733,8 @@ impl Default for ExperimentConfig {
             agossip: None,
             transport: None,
             observe: None,
+            attack: None,
+            mixing: MixingKind::Metropolis,
         }
     }
 }
@@ -589,7 +789,15 @@ impl ExperimentConfig {
                     return Err(bad("need 2 <= s1 <= s_max"));
                 }
             }
-            QuantizerKind::Full => {}
+            QuantizerKind::Full | QuantizerKind::TernGrad => {}
+            QuantizerKind::TopK { keep } => {
+                if !(*keep > 0.0 && *keep <= 1.0) {
+                    return Err(bad("quantizer.keep must be in (0,1]"));
+                }
+            }
+        }
+        if let Some(a) = &self.attack {
+            a.validate(self.nodes)?;
         }
         if let Some(net) = &self.network {
             net.validate()?;
@@ -641,6 +849,12 @@ impl ExperimentConfig {
         }
         if let Some(o) = &self.observe {
             pairs.push(("observe", o.to_json()));
+        }
+        if let Some(a) = &self.attack {
+            pairs.push(("attack", a.to_json()));
+        }
+        if self.mixing != MixingKind::default() {
+            pairs.push(("mixing", self.mixing.to_json()));
         }
         Json::obj(pairs)
     }
@@ -727,6 +941,14 @@ impl ExperimentConfig {
                     Some(crate::obs::ObserveConfig::from_json(oj)?)
                 }
                 None => None,
+            },
+            attack: match j.get("attack") {
+                Some(aj) => Some(AttackConfig::from_json(aj)?),
+                None => None,
+            },
+            mixing: match j.get("mixing") {
+                Some(mj) => MixingKind::from_json(mj)?,
+                None => MixingKind::default(),
             },
         };
         cfg.validate()?;
@@ -976,6 +1198,100 @@ mod tests {
             r#"{"name": "e", "encoding": "telepathy"}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn attack_section_forms() {
+        // absent -> None (honest fleet)
+        let cfg = ExperimentConfig::parse(r#"{"name": "a"}"#).unwrap();
+        assert!(cfg.attack.is_none());
+        // sign-flip roles hit exactly the first f node ids
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "a", "nodes": 8,
+                "attack": {"kind": "sign_flip", "f": 2}}"#,
+        )
+        .unwrap();
+        let a = cfg.attack.clone().unwrap();
+        assert_eq!(a.role(0), Some(&AttackKind::SignFlip));
+        assert_eq!(a.role(1), Some(&AttackKind::SignFlip));
+        assert_eq!(a.role(2), None);
+        let text = cfg.to_json().to_pretty();
+        assert_eq!(ExperimentConfig::parse(&text).unwrap(), cfg);
+        // scale keeps its factor through the roundtrip
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "a", "nodes": 8,
+                "attack": {"kind": "scale", "f": 1, "factor": -4.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.attack.as_ref().unwrap().kind,
+            AttackKind::Scale { factor: -4.0 }
+        );
+        let text = cfg.to_json().to_pretty();
+        assert_eq!(ExperimentConfig::parse(&text).unwrap(), cfg);
+        // f > nodes and unknown kinds are rejected
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "a", "nodes": 4,
+                "attack": {"kind": "random", "f": 5}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"name": "a", "attack": {"kind": "eclipse", "f": 1}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mixing_forms_parse_and_roundtrip() {
+        // absent -> metropolis (the paper's C)
+        let cfg = ExperimentConfig::parse(r#"{"name": "x"}"#).unwrap();
+        assert_eq!(cfg.mixing, MixingKind::Metropolis);
+        // string and object forms
+        assert_eq!(
+            MixingKind::parse_str("trimmed(2)").unwrap(),
+            MixingKind::Trimmed { f: 2 }
+        );
+        assert_eq!(
+            MixingKind::parse_str("median").unwrap(),
+            MixingKind::Median
+        );
+        assert!(MixingKind::parse_str("trimmed(x)").is_err());
+        assert!(MixingKind::parse_str("mean").is_err());
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "x", "mixing": "trimmed(2)"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mixing, MixingKind::Trimmed { f: 2 });
+        let text = cfg.to_json().to_pretty();
+        assert_eq!(ExperimentConfig::parse(&text).unwrap(), cfg);
+        let cfg = ExperimentConfig::parse(
+            r#"{"name": "x", "mixing": {"kind": "trimmed", "f": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mixing, MixingKind::Trimmed { f: 3 });
+        // trimmed(0) is the plain path; labels are stable
+        assert!(MixingKind::Trimmed { f: 0 }.is_plain());
+        assert!(!MixingKind::Trimmed { f: 1 }.is_plain());
+        assert_eq!(MixingKind::Trimmed { f: 2 }.label(), "trimmed(2)");
+    }
+
+    #[test]
+    fn sparsifier_kinds_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.quantizer = QuantizerKind::TopK { keep: 0.25 };
+        cfg.validate().unwrap();
+        let back =
+            ExperimentConfig::parse(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(back.quantizer, cfg.quantizer);
+        cfg.quantizer = QuantizerKind::TernGrad;
+        let back =
+            ExperimentConfig::parse(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(back.quantizer, QuantizerKind::TernGrad);
+        // keep outside (0,1] is rejected
+        cfg.quantizer = QuantizerKind::TopK { keep: 0.0 };
+        assert!(cfg.validate().is_err());
+        cfg.quantizer = QuantizerKind::TopK { keep: 1.5 };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

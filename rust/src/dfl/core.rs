@@ -16,7 +16,9 @@
 //! (sampler = `split(i)`, node = `split(0x1000 + i)`), so extracting
 //! the core changed no byte of the synchronous trajectories.
 
-use crate::config::{ExperimentConfig, QuantizerKind, WireEncoding};
+use crate::config::{
+    AttackKind, ExperimentConfig, QuantizerKind, WireEncoding,
+};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::quant::adaptive::AdaptiveLevels;
@@ -51,6 +53,9 @@ pub struct NodeCore {
     pub rng: Rng,
     /// configured quantizer family (the wire message's [`QuantTag`])
     pub kind: QuantizerKind,
+    /// Byzantine role: `Some` makes this node corrupt every outgoing
+    /// differential (see [`apply_attack`]); honest nodes carry `None`
+    pub attack: Option<AttackKind>,
     // ---- preallocated scratch (rounds allocate nothing after warm-up) --
     /// delta scratch: x − x̂
     pub diff: Vec<f32>,
@@ -104,6 +109,11 @@ impl NodeCore {
                 adaptive,
                 rng: rng.split(0x1000 + i as u64),
                 kind: cfg.quantizer.clone(),
+                attack: cfg
+                    .attack
+                    .as_ref()
+                    .and_then(|a| a.role(i))
+                    .cloned(),
                 diff: vec![0.0; param_count],
                 dq: vec![0.0; param_count],
                 msg: QuantizedVector::empty(),
@@ -167,6 +177,9 @@ impl NodeCore {
             &self.params,
             &self.hat,
         );
+        if let Some(kind) = &self.attack {
+            apply_attack(kind, &mut self.diff, &mut self.rng);
+        }
         crate::quant::quantize_damped_into(
             self.quantizer.as_mut(),
             &self.diff,
@@ -289,6 +302,50 @@ impl NodeCore {
     }
 }
 
+/// Corrupt an outgoing differential in place — the Byzantine injection
+/// point shared by every runtime (sync matrix, async gossip, threaded
+/// sockets). The attack runs BEFORE quantization, so the attacker's own
+/// estimate tracks its corrupted stream: the wire bytes, the matrix
+/// delta, and the attacker's x̂ all agree, which preserves the
+/// matrix/bitstream parity and determinism contracts under attack.
+///
+/// Each call bumps the `byzantine_msgs` observability counter keyed by
+/// the attack name.
+pub(crate) fn apply_attack(
+    kind: &AttackKind,
+    diff: &mut [f32],
+    rng: &mut Rng,
+) {
+    match kind {
+        AttackKind::SignFlip => {
+            for x in diff.iter_mut() {
+                *x = -*x;
+            }
+        }
+        AttackKind::Scale { factor } => {
+            let f = *factor as f32;
+            for x in diff.iter_mut() {
+                *x *= f;
+            }
+        }
+        AttackKind::Random => {
+            // uniform noise matched to the honest message's energy:
+            // E‖u‖² = ‖diff‖² when each coord ~ U[-√3·norm/√d, √3·norm/√d);
+            // drawn from the node rng so attacked runs stay replayable
+            let norm = crate::util::stats::l2_norm(diff) as f32;
+            let scale = if diff.is_empty() {
+                0.0
+            } else {
+                norm * (3.0f32 / diff.len() as f32).sqrt()
+            };
+            for x in diff.iter_mut() {
+                *x = (rng.uniform_f32() * 2.0 - 1.0) * scale;
+            }
+        }
+    }
+    crate::obs::counter("byzantine_msgs", kind.name(), 1);
+}
+
 /// Average model u = Σ params / n over an iterator of parameter slices.
 pub fn average_params<'a, I>(params: I, param_count: usize) -> Vec<f32>
 where
@@ -351,7 +408,9 @@ pub fn evaluate_sharded(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{DatasetKind, ExperimentConfig, QuantizerKind};
+    use crate::config::{
+        AttackConfig, DatasetKind, ExperimentConfig, QuantizerKind,
+    };
     use crate::dfl::backend::RustMlpBackend;
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -432,6 +491,46 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
             assert!(sb.wire_bytes >= wire::MIN_ENCODED_BYTES as u64);
+        }
+    }
+
+    #[test]
+    fn sign_flip_attacker_negates_its_differential() {
+        let mut cfg = tiny_cfg();
+        cfg.attack = Some(AttackConfig {
+            kind: AttackKind::SignFlip,
+            f: 1,
+        });
+        let (mut bad, _, _) = fleet(&cfg);
+        let (mut good, _, _) = fleet(&tiny_cfg());
+        assert!(bad[0].attack.is_some(), "node 0 should be Byzantine");
+        assert!(bad[1].attack.is_none(), "node 1 should be honest");
+        bad[0].quantize_delta();
+        good[0].quantize_delta();
+        // sign flipping before the sign-magnitude decomposition negates
+        // the quantized message exactly: same norm, same magnitudes,
+        // flipped signs — so the attacker's estimate is the mirror of
+        // the honest one
+        for (a, b) in bad[0].hat.iter().zip(&good[0].hat) {
+            assert_eq!(*a, -*b);
+        }
+    }
+
+    #[test]
+    fn random_attacker_matches_honest_energy_and_replays() {
+        let mut cfg = tiny_cfg();
+        cfg.attack = Some(AttackConfig {
+            kind: AttackKind::Random,
+            f: 1,
+        });
+        let (mut a, _, _) = fleet(&cfg);
+        let (mut b, _, _) = fleet(&cfg);
+        let sa = a[0].quantize_delta();
+        let sb = b[0].quantize_delta();
+        // deterministic: same seed+config replays the attack bitwise
+        assert_eq!(sa.distortion.to_bits(), sb.distortion.to_bits());
+        for (x, y) in a[0].hat.iter().zip(&b[0].hat) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

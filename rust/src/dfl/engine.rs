@@ -57,7 +57,7 @@
 //! allocate nothing after warm-up. `rust/tests/engine_parallel.rs`
 //! enforces this.
 
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, MixingKind};
 use crate::data::Dataset;
 use crate::dfl::backend::LocalUpdate;
 use crate::dfl::core::{self, NodeCore};
@@ -155,6 +155,10 @@ pub struct DflEngine {
     /// broadcast; engine-dropped q2 broadcasts count their substituted
     /// size, matching what the fabric is charged)
     node_wire: Vec<u64>,
+    /// nodes whose params feed the evaluated average model; `None`
+    /// means all of them. Adversarial experiments evaluate the honest
+    /// subset — a Byzantine node's own params are its to poison.
+    eval_nodes: Option<Vec<usize>>,
 }
 
 impl DflEngine {
@@ -213,6 +217,7 @@ impl DflEngine {
             q2_wire: Vec::with_capacity(n),
             q1_wire: Vec::with_capacity(n),
             node_wire: vec![0; n],
+            eval_nodes: None,
         })
     }
 
@@ -240,6 +245,32 @@ impl DflEngine {
         )
     }
 
+    /// Restrict [`evaluate_global`](Self::evaluate_global) to the
+    /// average over `nodes` (e.g. the honest subset under a Byzantine
+    /// attack); `None` restores the full-fleet average.
+    pub fn set_eval_nodes(&mut self, nodes: Option<Vec<usize>>) {
+        if let Some(list) = &nodes {
+            assert!(
+                !list.is_empty()
+                    && list.iter().all(|&i| i < self.nodes.len()),
+                "eval subset must be non-empty node ids"
+            );
+        }
+        self.eval_nodes = nodes;
+    }
+
+    /// The model the global evaluation scores: the full-fleet average,
+    /// or the [`set_eval_nodes`](Self::set_eval_nodes) subset average.
+    fn eval_model(&self) -> Vec<f32> {
+        match &self.eval_nodes {
+            None => self.average_model(),
+            Some(ids) => core::average_params(
+                ids.iter().map(|&i| self.nodes[i].params.as_slice()),
+                self.param_count,
+            ),
+        }
+    }
+
     /// Node i's current parameters.
     pub fn node_params(&self, i: usize) -> &[f32] {
         &self.nodes[i].params
@@ -264,7 +295,7 @@ impl DflEngine {
     /// bit-identical across `parallelism` settings.
     pub fn evaluate_global(&mut self) -> anyhow::Result<(f64, f64)> {
         let _span = crate::obs::span("eval");
-        let u = self.average_model();
+        let u = self.eval_model();
         let feat = self.dataset.feat_dim;
         let train_n = self.dataset.train_n().min(self.opts.eval_train_cap);
         // the eval prefix is contiguous, so shards are plain row slices
@@ -417,36 +448,80 @@ impl DflEngine {
         // reproduces the exact f32 accumulation order.
         let sp = &self.topology.sparse;
         let nodes = &self.nodes;
-        self.groups.run(&self.pool, &mut self.mix_buf, |i, out| {
-            out.iter_mut().for_each(|x| *x = 0.0);
-            let self_w = sp.self_weight(i) as f32;
-            let mut self_done = false;
-            for &(j, w) in sp.row(i) {
-                if !self_done && j as usize > i {
-                    if self_w != 0.0 {
-                        crate::quant::kernels::axpy(
-                            out,
-                            self_w,
-                            &nodes[i].hat,
-                        );
+        let mixing = self.cfg.mixing;
+        if mixing.is_plain() {
+            self.groups.run(&self.pool, &mut self.mix_buf, |i, out| {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                let self_w = sp.self_weight(i) as f32;
+                let mut self_done = false;
+                for &(j, w) in sp.row(i) {
+                    if !self_done && j as usize > i {
+                        if self_w != 0.0 {
+                            crate::quant::kernels::axpy(
+                                out,
+                                self_w,
+                                &nodes[i].hat,
+                            );
+                        }
+                        self_done = true;
                     }
-                    self_done = true;
+                    let w = w as f32;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    crate::quant::kernels::axpy(
+                        out,
+                        w,
+                        &nodes[j as usize].hat,
+                    );
                 }
-                let w = w as f32;
-                if w == 0.0 {
-                    continue;
+                if !self_done && self_w != 0.0 {
+                    crate::quant::kernels::axpy(
+                        out,
+                        self_w,
+                        &nodes[i].hat,
+                    );
                 }
-                crate::quant::kernels::axpy(
+                Ok(())
+            })?;
+        } else {
+            // robust row: gather live-neighbor estimate columns and
+            // let the shared helper trim / median them per coordinate
+            // (topology::robust — same rule every runtime applies)
+            self.groups.run(&self.pool, &mut self.mix_buf, |i, out| {
+                let row = sp.row(i);
+                let mut nbrs: Vec<(&[f32], f64)> =
+                    Vec::with_capacity(row.len());
+                for &(j, w) in row {
+                    if w != 0.0 {
+                        nbrs.push((nodes[j as usize].hat.as_slice(), w));
+                    }
+                }
+                crate::topology::robust_mix_into(
                     out,
-                    w,
-                    &nodes[j as usize].hat,
+                    &nodes[i].hat,
+                    sp.self_weight(i),
+                    &nbrs,
+                    &mixing,
                 );
+                Ok(())
+            })?;
+            if let MixingKind::Trimmed { f } = mixing {
+                // deterministic per-round drop count: min(2f, live
+                // degree) neighbor contributions discarded per node
+                let drops: u64 = (0..n)
+                    .map(|i| {
+                        let deg = sp
+                            .row(i)
+                            .iter()
+                            .filter(|&&(_, w)| w != 0.0)
+                            .count();
+                        (2 * f).min(deg) as u64
+                    })
+                    .sum();
+                crate::obs::counter("trimmed_drops", "sync", drops);
             }
-            if !self_done && self_w != 0.0 {
-                crate::quant::kernels::axpy(out, self_w, &nodes[i].hat);
-            }
-            Ok(())
-        })?;
+        }
         // Phase 2: apply the consensus correction.
         let mix_buf = &self.mix_buf;
         self.groups.run(&self.pool, &mut self.nodes, |i, node| {
@@ -660,6 +735,8 @@ mod tests {
             agossip: None,
             transport: None,
             observe: None,
+            attack: None,
+            mixing: Default::default(),
         }
     }
 
@@ -867,6 +944,65 @@ mod tests {
         });
         let log = e.run().unwrap();
         assert!(log.last_loss().unwrap().is_finite());
+    }
+
+    #[test]
+    fn trimmed_zero_mixing_is_bit_identical_to_metropolis() {
+        // the f = 0 degenerate form must route through the plain axpy
+        // path — same bits, not just same values
+        let mut cfg = small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.mixing = crate::config::MixingKind::Metropolis;
+        let a = build_engine(cfg.clone()).run().unwrap();
+        cfg.mixing = crate::config::MixingKind::Trimmed { f: 0 };
+        let b = build_engine(cfg).run().unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.distortion.to_bits(), y.distortion.to_bits());
+            assert_eq!(x.wire_bytes, y.wire_bytes);
+        }
+    }
+
+    #[test]
+    fn robust_mixing_rules_still_learn_unattacked() {
+        for mixing in [
+            crate::config::MixingKind::Trimmed { f: 1 },
+            crate::config::MixingKind::Median,
+        ] {
+            let mut cfg =
+                small_cfg(QuantizerKind::LloydMax { s: 16, iters: 8 });
+            cfg.topology = TopologyKind::Full;
+            cfg.mixing = mixing;
+            let log = build_engine(cfg).run().unwrap();
+            let first = log.records.first().unwrap().loss;
+            let last = log.records.last().unwrap().loss;
+            assert!(last < first, "{mixing:?}: loss {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn honest_subset_eval_differs_under_attack() {
+        let mut cfg = small_cfg(QuantizerKind::LloydMax { s: 8, iters: 5 });
+        cfg.rounds = 4;
+        cfg.attack = Some(crate::config::AttackConfig {
+            kind: crate::config::AttackKind::SignFlip,
+            f: 1,
+        });
+        let mut e = build_engine(cfg);
+        for k in 0..4 {
+            e.round(k).unwrap();
+        }
+        let (all_loss, _) = e.evaluate_global().unwrap();
+        e.set_eval_nodes(Some(vec![1, 2, 3]));
+        let (honest_loss, _) = e.evaluate_global().unwrap();
+        assert!(all_loss.is_finite() && honest_loss.is_finite());
+        assert_ne!(
+            all_loss.to_bits(),
+            honest_loss.to_bits(),
+            "subset eval should change the scored model"
+        );
+        e.set_eval_nodes(None);
+        let (back, _) = e.evaluate_global().unwrap();
+        assert_eq!(back.to_bits(), all_loss.to_bits());
     }
 
     #[test]

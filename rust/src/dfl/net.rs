@@ -41,7 +41,9 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::config::{ExperimentConfig, LrSchedule, QuantizerKind};
+use crate::config::{
+    AttackKind, ExperimentConfig, LrSchedule, MixingKind, QuantizerKind,
+};
 use crate::data::{BatchSampler, Dataset};
 use crate::dfl::backend::LocalUpdate;
 use crate::error::LmdflError;
@@ -274,6 +276,11 @@ struct NodeCtx<'a> {
     /// the experiment seed; the node derives its own streams from it
     seed: u64,
     eval_every: usize,
+    /// this node's Byzantine role, if any (corrupts its own
+    /// differential before quantization, exactly like the matrix
+    /// engines' `NodeCore` path)
+    attack: Option<AttackKind>,
+    mixing: MixingKind,
 }
 
 fn node_ctx<'a>(
@@ -306,6 +313,8 @@ fn node_ctx<'a>(
         lr: cfg.lr.clone(),
         seed: cfg.seed,
         eval_every: cfg.eval_every,
+        attack: cfg.attack.as_ref().and_then(|a| a.role(node)).cloned(),
+        mixing: cfg.mixing,
     }
 }
 
@@ -332,6 +341,8 @@ fn run_node(
         lr,
         seed,
         eval_every,
+        attack,
+        mixing,
     } = ctx;
     let param_count = init.len();
     let mut rng = Rng::new(seed ^ (0xA000 + i as u64));
@@ -380,6 +391,9 @@ fn run_node(
          -> anyhow::Result<()> {
             let enc_span = crate::obs::span("encode");
             crate::quant::kernels::sub_into(&mut diff, params, hat_self);
+            if let Some(kind) = &attack {
+                super::core::apply_attack(kind, &mut diff, rng);
+            }
             crate::quant::quantize_damped_into(
                 quantizer.as_mut(), &diff, rng, &mut dq, &mut msg_out);
             let q = &msg_out;
@@ -473,11 +487,31 @@ fn run_node(
         // x += Σ c_ji x̂_j − x̂_self (consensus correction on true
         // params; = X̂C when estimates are exact)
         let mix_span = crate::obs::span("mix");
-        crate::quant::kernels::scaled_into(
-            &mut mix, self_weight, &hat_self,
-        );
-        for (ni, _) in neighbors.iter().enumerate() {
-            crate::quant::kernels::axpy(&mut mix, weights[ni], &hat[ni]);
+        if mixing.is_plain() {
+            crate::quant::kernels::scaled_into(
+                &mut mix, self_weight, &hat_self,
+            );
+            for (ni, _) in neighbors.iter().enumerate() {
+                crate::quant::kernels::axpy(
+                    &mut mix, weights[ni], &hat[ni],
+                );
+            }
+        } else {
+            let nbrs: Vec<(&[f32], f64)> = neighbors
+                .iter()
+                .enumerate()
+                .map(|(ni, _)| (hat[ni].as_slice(), weights[ni] as f64))
+                .collect();
+            let drops = crate::topology::robust_mix_into(
+                &mut mix,
+                &hat_self,
+                self_weight as f64,
+                &nbrs,
+                &mixing,
+            );
+            if drops > 0 {
+                crate::obs::counter("trimmed_drops", "net", drops);
+            }
         }
         crate::quant::kernels::add_delta(&mut params, &mix, &hat_self);
         drop(mix_span);
@@ -949,6 +983,8 @@ mod tests {
             agossip: None,
             transport: None,
             observe: None,
+            attack: None,
+            mixing: Default::default(),
         }
     }
 
@@ -1030,6 +1066,43 @@ mod tests {
             "wire/paper ratio {ratio} \
              (measured {measured}, paper {total_paper})"
         );
+    }
+
+    #[test]
+    fn trimmed_zero_matches_metropolis_bitwise_over_threads() {
+        // trimmed(0) must route through the historical axpy path, so a
+        // threaded run is bit-identical to plain Metropolis mixing
+        let c = cfg(QuantizerKind::LloydMax { s: 16, iters: 6 });
+        let mut t0 = c.clone();
+        t0.mixing = crate::config::MixingKind::Trimmed { f: 0 };
+        let a = run(&c, NetOptions::default());
+        let b = run(&t0, NetOptions::default());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.wire_bytes, rb.wire_bytes);
+        }
+    }
+
+    #[test]
+    fn attacked_threaded_run_stays_finite_under_robust_mixing() {
+        // a sign-flipping minority on the socket-free transport: the
+        // trimmed rule keeps every honest trajectory finite
+        let mut c = cfg(QuantizerKind::LloydMax { s: 16, iters: 6 });
+        c.attack = Some(crate::config::AttackConfig {
+            kind: AttackKind::SignFlip,
+            f: 1,
+        });
+        c.mixing = crate::config::MixingKind::Trimmed { f: 1 };
+        let log = run(&c, NetOptions::default());
+        assert_eq!(log.records.len(), 8);
+        for r in &log.records {
+            assert!(r.loss.is_finite(), "round {} diverged", r.round);
+        }
+        // same adversary, same seed: the run replays bit-identically
+        let again = run(&c, NetOptions::default());
+        for (ra, rb) in log.records.iter().zip(&again.records) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+        }
     }
 
     #[test]

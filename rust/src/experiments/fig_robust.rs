@@ -1,0 +1,270 @@
+//! fig-robust: honest training loss vs *measured wire bytes* under a
+//! Byzantine minority — the adversarial companion to `fig-time`.
+//!
+//! The preset trains the `fig-time` torus-16 fleet (bitstream wire,
+//! 2 Mbps heterogeneous links) with the first `f = 2` nodes running the
+//! sign-flip attack: each broadcasts `Q(−(x − x̂))`, the exact negation
+//! of its honest differential, so the corruption is energy-matched and
+//! invisible to any magnitude filter. Three curves differ only in the
+//! mixing rule: plain Metropolis, trimmed-Metropolis, and coordinate
+//! median. Loss is evaluated on the HONEST nodes' average (an attacker
+//! parks its parameters wherever it likes; averaging them in would
+//! grade the defender on the adversary's weights).
+//!
+//! Expected shape: plain Metropolis keeps folding the flipped
+//! differentials into every honest estimate and stalls well above the
+//! robust curves; the trimmed and median rules discard the
+//! coordinate-wise extremes and keep descending at the same wire-byte
+//! budget.
+
+use super::{Curve, Scale};
+use crate::config::{
+    AttackConfig, AttackKind, ExperimentConfig, MixingKind,
+};
+use crate::metrics::{fnum, Table};
+use crate::simnet::NetworkConfig;
+
+/// Number of Byzantine nodes in the preset (nodes `0..BYZANTINE_F`).
+pub const BYZANTINE_F: usize = 2;
+
+/// The preset's training config: the fig-time torus-16 setup with an
+/// `f = 2` sign-flip minority (mixing is filled per curve).
+pub fn robust_config(scale: Scale) -> ExperimentConfig {
+    let mut cfg = super::fig_time::torus16_config(scale);
+    cfg.name = "fig-robust-torus-16".into();
+    cfg.attack = Some(AttackConfig {
+        kind: AttackKind::SignFlip,
+        f: BYZANTINE_F,
+    });
+    cfg
+}
+
+/// The preset's fabric: identical to the fig-time torus-16 fabric, so
+/// the byte axis is comparable across the two figures.
+pub fn robust_network() -> NetworkConfig {
+    super::fig_time::torus16_network()
+}
+
+/// The three mixing-rule curves the robustness comparison plots.
+///
+/// The trim parameter is the per-NEIGHBORHOOD tolerance, not the
+/// global `f`: attackers 0 and 1 share no honest neighbor on the 4×4
+/// torus, so every honest row sees at most one Byzantine column and
+/// `trimmed(1)` suffices (while `trimmed(2)` would over-trim the
+/// degree-4 rows down to self-only, discarding mixing entirely).
+pub fn curve_set() -> Vec<(&'static str, MixingKind)> {
+    vec![
+        ("plain metropolis", MixingKind::Metropolis),
+        ("trimmed metropolis", MixingKind::Trimmed { f: 1 }),
+        ("coordinate median", MixingKind::Median),
+    ]
+}
+
+/// The honest node ids of a config (everything past the attacked
+/// prefix; the whole fleet when no `attack:` section is present).
+pub fn honest_nodes(cfg: &ExperimentConfig) -> Vec<usize> {
+    let f = cfg.attack.as_ref().map_or(0, |a| a.f);
+    (f..cfg.nodes).collect()
+}
+
+/// Run one attacked config on its own identically-seeded fabric,
+/// evaluating loss on the honest subset only.
+pub fn run_attacked_labeled(
+    cfg: ExperimentConfig,
+    net: &NetworkConfig,
+    label: &str,
+) -> anyhow::Result<Curve> {
+    let topo = crate::topology::Topology::build(
+        &cfg.topology,
+        cfg.nodes,
+        cfg.seed,
+    );
+    let mut fabric = crate::simnet::Fabric::new(net, &topo, cfg.seed);
+    let mut trainer = crate::dfl::Trainer::build(&cfg)?;
+    trainer
+        .engine_mut()
+        .set_eval_nodes(Some(honest_nodes(&cfg)));
+    let log = trainer.engine_mut().run_simulated(&mut fabric)?;
+    Ok(Curve { label: label.to_string(), log })
+}
+
+/// Run every mixing curve of the preset: same fleet, same adversary,
+/// same fabric seed — only the aggregation rule differs.
+pub fn run(
+    base: ExperimentConfig,
+    net: NetworkConfig,
+) -> anyhow::Result<Vec<Curve>> {
+    let mut curves = Vec::new();
+    for (label, mixing) in curve_set() {
+        let mut cfg = base.clone();
+        cfg.name = label.to_string();
+        cfg.mixing = mixing;
+        curves.push(run_attacked_labeled(cfg, &net, label)?);
+    }
+    Ok(curves)
+}
+
+/// Panel: honest training loss at cumulative measured wire MB, per
+/// mixing rule.
+pub fn render_loss_vs_bytes(curves: &[Curve]) -> String {
+    let rounds = curves
+        .iter()
+        .map(|c| c.log.records.len())
+        .min()
+        .unwrap_or(0);
+    let stride = (rounds / 12).max(1);
+    let mut headers: Vec<String> = vec!["iter".into()];
+    headers.extend(curves.iter().map(|c| c.label.clone()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for k in (0..rounds).step_by(stride) {
+        let mut row = vec![format!("{}", k + 1)];
+        row.extend(curves.iter().map(|c| {
+            let r = &c.log.records[k];
+            format!(
+                "{}@{:.3}MB",
+                fnum(r.loss),
+                r.wire_bytes as f64 / 1e6
+            )
+        }));
+        t.row(row);
+    }
+    let mut out = String::from(
+        "panel: honest training loss @ cumulative wire MB \
+         (f=2 sign-flip)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Summary: measured wire MB each mixing rule had spent when its
+/// honest loss first reached `target` (the robustness analogue of
+/// fig-time's time-to-target table).
+pub fn bytes_to_target(curves: &[Curve], target: f64) -> String {
+    let mut t = Table::new(&[
+        "mixing rule",
+        "target loss",
+        "wire MB",
+        "final loss",
+    ]);
+    for c in curves {
+        let hit = c.log.record_at_loss(target);
+        let wire = hit
+            .map(|r| format!("{:.3}", r.wire_bytes as f64 / 1e6))
+            .unwrap_or_else(|| "not reached".into());
+        t.row(vec![
+            c.label.clone(),
+            fnum(target),
+            wire,
+            fnum(c.log.last_loss().unwrap_or(f64::NAN)),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    /// Shrunk preset: the full torus-16 geometry and adversary, tiny
+    /// data so the three curves run in CI time.
+    fn tiny() -> (ExperimentConfig, NetworkConfig) {
+        let mut cfg = robust_config(Scale::Quick);
+        cfg.rounds = 12;
+        cfg.dataset = DatasetKind::Blobs {
+            train: 480,
+            test: 120,
+            dim: 10,
+            classes: 4,
+        };
+        (cfg, robust_network())
+    }
+
+    #[test]
+    fn preset_config_is_valid_and_attacked() {
+        let cfg = robust_config(Scale::Quick);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.nodes, 16);
+        let atk = cfg.attack.as_ref().unwrap();
+        assert_eq!(atk.f, BYZANTINE_F);
+        assert_eq!(atk.kind, AttackKind::SignFlip);
+        assert_eq!(honest_nodes(&cfg), (2..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn robust_mixing_beats_plain_under_sign_flip() {
+        // the acceptance scenario: f=2 sign-flip on the torus-16
+        // preset. The trimmed rule must reach a loss the plain
+        // Metropolis row never touches at any point of its run.
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        assert_eq!(curves.len(), 3);
+        let plain = &curves[0].log;
+        let trimmed = &curves[1].log;
+        // both runs stayed finite
+        for c in &curves {
+            for r in &c.log.records {
+                assert!(r.loss.is_finite(), "{} diverged", c.label);
+            }
+        }
+        // the trimmed curve actually learned
+        let t_first = trimmed.records.first().unwrap().loss;
+        let t_last = trimmed.last_loss().unwrap();
+        assert!(t_last < t_first, "trimmed: {t_first} -> {t_last}");
+        // target: just above the trimmed rule's final honest loss —
+        // trimmed reaches it by construction, plain must not at ANY
+        // round of an equally long run
+        let target = t_last * 1.05;
+        assert!(trimmed.record_at_loss(target).is_some());
+        let plain_best = plain
+            .records
+            .iter()
+            .map(|r| r.loss)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            plain.record_at_loss(target).is_none(),
+            "plain metropolis reached {target} (best {plain_best}) \
+             despite the sign-flip minority"
+        );
+    }
+
+    #[test]
+    fn median_survives_the_attack_too() {
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        let median = &curves[2].log;
+        let first = median.records.first().unwrap().loss;
+        let last = median.last_loss().unwrap();
+        assert!(last.is_finite() && last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn curves_share_the_byte_axis() {
+        // same quantizer, same fleet, same fabric: every curve ships
+        // the same measured bytes per round, so the byte axis aligns
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        let base: Vec<u64> = curves[0]
+            .log
+            .records
+            .iter()
+            .map(|r| r.wire_bytes)
+            .collect();
+        for c in &curves[1..] {
+            let bytes: Vec<u64> =
+                c.log.records.iter().map(|r| r.wire_bytes).collect();
+            assert_eq!(base, bytes, "{} bytes diverged", c.label);
+        }
+    }
+
+    #[test]
+    fn renders_nonempty() {
+        let (cfg, net) = tiny();
+        let curves = run(cfg, net).unwrap();
+        assert!(render_loss_vs_bytes(&curves).contains("panel:"));
+        assert!(
+            bytes_to_target(&curves, 1.0).contains("mixing rule")
+        );
+    }
+}

@@ -113,6 +113,8 @@ pub fn torus16_config(scale: Scale) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 
@@ -222,6 +224,8 @@ pub fn scale_config(
         },
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

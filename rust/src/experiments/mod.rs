@@ -9,6 +9,7 @@ pub mod fig4;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod fig_robust;
 pub mod fig_time;
 pub mod table1;
 
@@ -81,6 +82,8 @@ pub fn paper_base_config(scale: Scale) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

@@ -57,6 +57,11 @@ commands:
                         --transport channel|tcp --tcp-host H
                         --tcp-base-port P --tcp-connect-timeout-s F
                         --tcp-backoff-s F
+             adversarial scenario (Byzantine senders + robust mixing):
+                        --attack none|sign_flip|scale|random
+                        --attack-f N   (nodes 0..N are Byzantine)
+                        --attack-factor F   (scale attack multiplier)
+                        --mixing metropolis|trimmed(f)|median
   node       --rank R + the train config flags: one OS process per
              node over real TCP sockets (node i listens on
              base_port+i). Launch every rank; rank 0 runs the
@@ -71,12 +76,17 @@ commands:
              [--target-loss F] [--full]
              [--from-sweep manifest.json]  rebuild the tables from a
              sweep's artifacts instead of re-running
+  fig-robust [--target-loss F] [--full]  honest loss vs measured wire
+             bytes under an f=2 sign-flip minority on the torus-16
+             fabric: plain vs trimmed vs median mixing
   sweep      run a grid of configs, one manifest + traced artifacts:
              base config from --preset <fig-time preset> or the train
              config flags, then axis lists (comma-separated):
              [--quantizers q,..] [--topologies t,..]
              [--nets base|ideal|torus16|straggler|scale,..]
-             [--modes sync,async] [--seeds N | --seed-list a,b,..]
+             [--modes sync,async]
+             [--attacks none|sign_flip|scale|random,..]
+             [--seeds N | --seed-list a,b,..]
              [--out dir] [--slots N] [--no-resume] [--name label]
              cells run as subprocesses with tracing on; CPU/RSS are
              sampled to resources.jsonl; completed cells are skipped
@@ -147,6 +157,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("fig7") => cmd_fig7(args),
         Some("fig8") => cmd_fig8(args),
         Some("fig-time") => cmd_fig_time(args),
+        Some("fig-robust") => cmd_fig_robust(args),
         Some("sweep") => cmd_sweep(args),
         Some("analyse") | Some("analyze") => cmd_analyse(args),
         Some("topo") => cmd_topo(args),
@@ -247,6 +258,10 @@ fn inline_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
             "natural" => QuantizerKind::Natural { s },
             "alq" => QuantizerKind::Alq { s },
             "lloyd_max" | "lm" => QuantizerKind::LloydMax { s, iters: 12 },
+            "terngrad" => QuantizerKind::TernGrad,
+            "topk" => QuantizerKind::TopK {
+                keep: args.get_f64("keep", 0.1)?,
+            },
             "doubly_adaptive" | "da" => QuantizerKind::DoublyAdaptive {
                 s1: args.get_usize("s1", 4)?,
                 iters: 12,
@@ -465,6 +480,49 @@ fn apply_section_flags(
         a.quorum_timeout_s =
             args.get_f64("async-timeout-s", a.quorum_timeout_s)?;
         cfg.agossip = Some(a);
+    }
+    // adversarial scenario: Byzantine roles (`attack:` section) and
+    // the mixing rule defending against them
+    if args.get("attack").is_some()
+        || args.get("attack-f").is_some()
+        || args.get("attack-factor").is_some()
+    {
+        let base = cfg.attack.clone();
+        let cur_factor = match base.as_ref().map(|a| &a.kind) {
+            Some(AttackKind::Scale { factor }) => *factor,
+            _ => -4.0,
+        };
+        let kind = match args.get("attack") {
+            Some("none") => None,
+            Some("sign_flip") => Some(AttackKind::SignFlip),
+            Some("scale") => Some(AttackKind::Scale {
+                factor: args.get_f64("attack-factor", cur_factor)?,
+            }),
+            Some("random") => Some(AttackKind::Random),
+            Some(other) => anyhow::bail!(
+                "--attack must be none, sign_flip, scale or random, \
+                 got '{other}'"
+            ),
+            None => base.as_ref().map(|a| a.kind.clone()),
+        };
+        match kind {
+            Some(kind) => {
+                let f = args
+                    .get_usize("attack-f", base.map_or(1, |a| a.f))?;
+                cfg.attack = Some(AttackConfig { kind, f });
+            }
+            None => {
+                anyhow::ensure!(
+                    args.get("attack").is_some(),
+                    "--attack-f / --attack-factor need --attack (or an \
+                     attack: section in the config file)"
+                );
+                cfg.attack = None;
+            }
+        }
+    }
+    if let Some(m) = args.get("mixing") {
+        cfg.mixing = MixingKind::parse_str(m)?;
     }
     // trace sinks: either flag materializes an `observe:` section,
     // each overriding only its own path in the config file's section
@@ -827,6 +885,36 @@ fn cmd_fig_time(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `lmdfl fig-robust`: honest loss vs measured wire bytes under an
+/// f=2 sign-flip minority, one curve per mixing rule.
+fn cmd_fig_robust(args: &Args) -> anyhow::Result<()> {
+    let scale = scale_of(args);
+    let cfg = fig_robust::robust_config(scale);
+    let net = fig_robust::robust_network();
+    let atk = cfg.attack.as_ref().expect("preset is attacked");
+    log::info(format!(
+        "fig-robust: {} nodes, {} topology, {} attack f={}, \
+         {:.1} Mbps links",
+        cfg.nodes,
+        cfg.topology.name(),
+        atk.kind.name(),
+        atk.f,
+        net.link.bandwidth_bps / 1e6,
+    ));
+    let curves = fig_robust::run(cfg, net)?;
+    log::info(fig_robust::render_loss_vs_bytes(&curves));
+    // default target: just above the best robust curve's final honest
+    // loss, so the table shows what the plain row failed to reach
+    let default_target = curves[1..]
+        .iter()
+        .map(|c| c.log.last_loss().unwrap_or(f64::NAN))
+        .fold(f64::MIN, f64::max)
+        * 1.05;
+    let target = args.get_f64("target-loss", default_target)?;
+    log::info(fig_robust::bytes_to_target(&curves, target));
+    Ok(())
+}
+
 /// `lmdfl sweep`: expand a grid over a base config and run every
 /// cell to one manifest (see [`lmdfl::sweep`]).
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
@@ -838,6 +926,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         cfg.network = Some(net);
         cfg.rounds = args.get_usize("rounds", cfg.rounds)?;
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        // section flags (--mixing, --attack, --encoding, net knobs, …)
+        // refine the preset base just like a --config base
+        apply_section_flags(args, &mut cfg)?;
         cfg
     } else {
         config_from_args(args)?
@@ -858,6 +949,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(list) = args.get("modes") {
         grid.set_modes(list)?;
+    }
+    if let Some(list) = args.get("attacks") {
+        grid.set_attacks(list)?;
     }
     if let Some(list) = args.get("seed-list") {
         grid.set_seed_list(list)?;

@@ -14,7 +14,10 @@
 //!   timestamped in virtual nanoseconds with one lane per node;
 //! * **counters** ([`counter`]) — per-link send/recv/drop/tombstone
 //!   frames, TCP reconnects, forced mixes, encoded bytes by quantizer
-//!   tag;
+//!   tag; adversarial scenarios add `byzantine_msgs` (corrupted
+//!   broadcasts, keyed by attack name — `sign_flip`, `scale`,
+//!   `random`) and `trimmed_drops` (neighbor contributions discarded
+//!   by robust mixing, keyed by runtime — `sync`, `async`, `net`);
 //! * **histograms** ([`hist`]) — TCP backoff waits, quorum fill
 //!   latencies, straggler waits (log2 buckets, see
 //!   [`trace::Hist`]).

@@ -11,9 +11,9 @@
 pub use crate::agossip::{AsyncConfig, WaitPolicy};
 pub use crate::cli::Args;
 pub use crate::config::{
-    load_config, BackendKind, ConfigError, DatasetKind, EngineMode,
-    ExperimentConfig, LrSchedule, Parallelism, QuantizerKind,
-    TopologyKind, WireEncoding,
+    load_config, AttackConfig, AttackKind, BackendKind, ConfigError,
+    DatasetKind, EngineMode, ExperimentConfig, LrSchedule, MixingKind,
+    Parallelism, QuantizerKind, TopologyKind, WireEncoding,
 };
 pub use crate::dfl::{
     run_node_process, DflEngine, EngineOptions, LocalUpdate,
@@ -22,7 +22,7 @@ pub use crate::dfl::{
 pub use crate::error::LmdflError;
 pub use crate::linalg::eigen::alpha_of_zeta;
 pub use crate::experiments::{
-    fig4, fig6, fig7, fig8, fig_time, paper_base_config,
+    fig4, fig6, fig7, fig8, fig_robust, fig_time, paper_base_config,
     paper_cifar_config, run_labeled, table1, Curve, Scale,
 };
 pub use crate::metrics::{fnum, RoundRecord, RunLog, Table};
@@ -48,8 +48,8 @@ pub use crate::runtime::{
 };
 pub use crate::simnet::{LinkModel, NetworkConfig};
 pub use crate::sweep::{
-    self, CellResult, Grid, NetRegime, SweepManifest, SweepOptions,
-    SWEEP_SCHEMA,
+    self, AttackRegime, CellResult, Grid, NetRegime, SweepManifest,
+    SweepOptions, SWEEP_SCHEMA,
 };
 pub use crate::topology::Topology;
 pub use crate::util::rng::Rng;

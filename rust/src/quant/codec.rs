@@ -8,12 +8,31 @@
 //! u32  d                 element count
 //! u16  s                 level count
 //! u8   flags             bit0: table present (1) or implied (0)
+//!                        bit1: sparse body (1) or dense (0)
 //! f32  norm
 //! [f32; s]               level table   (only if table present)
+//! -- dense body (flags bit1 = 0) --
 //! d bits                 signs (1 = negative)
 //! d * ceil_log2(s) bits  level indices
+//! -- sparse body (flags bit1 = 1) --
+//! u32  k                 listed (index != 0) element count
+//! k entries, each:       position (ceil_log2(d) bits, strictly
+//!                        increasing), sign (1 bit), level index
+//!                        (ceil_log2(s) bits, never 0)
+//! -- either body --
 //! padding to byte
 //! ```
+//!
+//! The encoding is *canonical*: a message uses the sparse body exactly
+//! when [`sparse_nnz`] says it may (level 0 is +0.0, every unlisted
+//! element is an index-0/positive-sign slot, `d` is within
+//! [`MAX_SPARSE_DIM`], and the sparse form is strictly smaller than the
+//! dense one). Decoders enforce the same rule in both directions, so
+//! every `QuantizedVector` has exactly one byte encoding and byte
+//! meters can recompute message sizes from decoded content
+//! ([`body_bits`]). Sparsifiers (top-k, TernGrad) emit index-0 slots
+//! for dropped coordinates, which is what makes their messages
+//! sparse-eligible.
 
 use super::QuantizedVector;
 use crate::quant::bits::{ceil_log2, stream_bytes};
@@ -290,7 +309,15 @@ impl<'a> BitReader<'a> {
     }
 }
 
-/// Exact encoded size in bits for (d, s, implied_table).
+/// Largest element count a sparse body may claim. Decoding a sparse
+/// body materializes `d`-length index/sign vectors from a payload that
+/// is only O(k) bytes, so — unlike the dense body, whose `d` is bounded
+/// by the payload itself — a hostile `d` must be capped explicitly
+/// before any allocation.
+pub const MAX_SPARSE_DIM: usize = 1 << 24;
+
+/// Exact encoded size in bits of the *dense* body for
+/// (d, s, implied_table).
 pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
     let header = 32 + 16 + 8 + 32u64;
     let table = if implied_table { 0 } else { 32 * s as u64 };
@@ -299,6 +326,76 @@ pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
     let total = header + table + signs + indices;
     // padding to byte boundary
     (total + 7) / 8 * 8
+}
+
+/// Bit-width of one sparse-body position field for dimension `d`.
+#[inline]
+fn pos_bits(d: usize) -> u32 {
+    if d <= 1 {
+        0
+    } else {
+        ceil_log2(d)
+    }
+}
+
+/// Exact encoded size in bits of the *sparse* body for
+/// (d, s, implied_table) carrying `k` listed elements.
+pub fn sparse_encoded_bits(
+    d: usize,
+    s: usize,
+    implied_table: bool,
+    k: usize,
+) -> u64 {
+    let header = 32 + 16 + 8 + 32u64;
+    let table = if implied_table { 0 } else { 32 * s as u64 };
+    let count = 32u64;
+    let entry = pos_bits(d) as u64 + 1 + ceil_log2(s) as u64;
+    let total = header + table + count + k as u64 * entry;
+    (total + 7) / 8 * 8
+}
+
+/// `Some(k)` (the listed-element count) when the canonical encoding of
+/// `qv` is the sparse body; `None` when it is the dense one. Sparse is
+/// chosen exactly when level 0 is +0.0, every index-0 element carries a
+/// positive sign (so unlisted elements reconstruct bit-exactly), `d`
+/// fits [`MAX_SPARSE_DIM`], and the sparse form is strictly smaller.
+pub fn sparse_nnz(qv: &QuantizedVector) -> Option<usize> {
+    let d = qv.dim();
+    if d == 0 || d > MAX_SPARSE_DIM {
+        return None;
+    }
+    if qv.levels.first().map(|l| l.to_bits()) != Some(0) {
+        return None;
+    }
+    let mut k = 0usize;
+    for (&idx, &neg) in qv.indices.iter().zip(&qv.negative) {
+        if idx == 0 {
+            if neg {
+                return None;
+            }
+        } else {
+            k += 1;
+        }
+    }
+    let s = qv.s();
+    if sparse_encoded_bits(d, s, qv.implied_table, k)
+        < encoded_bits(d, s, qv.implied_table)
+    {
+        Some(k)
+    } else {
+        None
+    }
+}
+
+/// Exact encoded size in bits of the canonical body for `qv` — the
+/// sparse form when [`sparse_nnz`] elects it, the dense form otherwise.
+pub fn body_bits(qv: &QuantizedVector) -> u64 {
+    match sparse_nnz(qv) {
+        Some(k) => {
+            sparse_encoded_bits(qv.dim(), qv.s(), qv.implied_table, k)
+        }
+        None => encoded_bits(qv.dim(), qv.s(), qv.implied_table),
+    }
 }
 
 /// Encode a quantized vector to bytes.
@@ -312,31 +409,49 @@ pub fn encode(qv: &QuantizedVector) -> Vec<u8> {
 /// the buffer back in after shipping the bytes.
 pub fn encode_with_buf(qv: &QuantizedVector, out: Vec<u8>) -> Vec<u8> {
     // preallocate the exact message size so the buffer grows at most once
-    let mut w = BitWriter::with_capacity_bits(
-        out,
-        encoded_bits(qv.dim(), qv.s(), qv.implied_table),
-    );
+    let mut w = BitWriter::with_capacity_bits(out, body_bits(qv));
     encode_body(&mut w, qv);
     w.into_bytes()
 }
 
 /// Write the self-describing message body (d, s, flags, norm, optional
-/// level table, sign bits, index bits) into `w`. Shared by the bare
+/// level table, then the dense or sparse element stream — whichever the
+/// canonical rule [`sparse_nnz`] elects) into `w`. Shared by the bare
 /// [`encode`] framing and the versioned transport frames of
 /// [`crate::quant::wire`], so the two formats cannot drift.
 pub fn encode_body(w: &mut BitWriter, qv: &QuantizedVector) {
+    let sparse = sparse_nnz(qv);
     w.write_u32(qv.dim() as u32);
     w.write_u16(qv.s() as u16);
-    w.write_u8(if qv.implied_table { 0 } else { 1 });
+    let mut flags = if qv.implied_table { 0u8 } else { 1 };
+    if sparse.is_some() {
+        flags |= 2;
+    }
+    w.write_u8(flags);
     w.write_f32(qv.norm);
     if !qv.implied_table {
         for &l in &qv.levels {
             w.write_f32(l);
         }
     }
-    // signs and indices are the bulk of the stream: word-at-a-time
-    w.write_bools(&qv.negative);
-    w.write_packed(&qv.indices, ceil_log2(qv.s()));
+    if sparse.is_some() {
+        let pbits = pos_bits(qv.dim());
+        let ibits = ceil_log2(qv.s());
+        let k = qv.indices.iter().filter(|&&i| i != 0).count();
+        w.write_u32(k as u32);
+        for (p, &idx) in qv.indices.iter().enumerate() {
+            if idx == 0 {
+                continue;
+            }
+            w.write_bits(p as u64, pbits);
+            w.write_bit(qv.negative[p]);
+            w.write_bits(idx as u64, ibits);
+        }
+    } else {
+        // signs and indices are the bulk of the stream: word-at-a-time
+        w.write_bools(&qv.negative);
+        w.write_packed(&qv.indices, ceil_log2(qv.s()));
+    }
 }
 
 /// Decode. `implied_levels` supplies the level table when the flag says it
@@ -380,13 +495,32 @@ pub fn decode_body(
     if s == 0 {
         return Err(CodecError::Malformed("s must be >= 1".into()));
     }
-    let has_table = r.read_u8()? == 1;
+    let flags = r.read_u8()?;
+    if flags > 3 {
+        return Err(CodecError::Malformed(format!(
+            "unknown flag bits 0x{flags:02x}"
+        )));
+    }
+    let has_table = flags & 1 == 1;
+    let sparse = flags & 2 != 0;
     out.norm = r.read_f32()?;
+    if sparse && d > MAX_SPARSE_DIM {
+        // a sparse body's payload is O(k), so d must be capped before
+        // the d-sized materialization below — the dense payload bound
+        // cannot protect this branch
+        return Err(CodecError::Malformed(format!(
+            "sparse body claims d={d} (cap {MAX_SPARSE_DIM})"
+        )));
+    }
     // bound the claimed payload BEFORE any d-sized reservation: a
     // corrupt/hostile d (u32, up to ~4e9) must fail here, not drive a
     // multi-gigabyte allocation on its way to "out of bits"
     let table_bits = if has_table { 32 * s as u64 } else { 0 };
-    let need = table_bits + d as u64 * (1 + ceil_log2(s) as u64);
+    let need = if sparse {
+        table_bits + 32
+    } else {
+        table_bits + d as u64 * (1 + ceil_log2(s) as u64)
+    };
     if need > r.bits_remaining() {
         return Err(CodecError::Truncated {
             need_bits: need,
@@ -408,26 +542,96 @@ pub fn decode_body(
             )));
         }
     }
-    out.negative.clear();
-    r.read_bools_into(d, &mut out.negative)?;
     let idx_bits = ceil_log2(s);
-    out.indices.clear();
-    r.read_packed_into(idx_bits, d, &mut out.indices)?;
-    // range-check after the bulk unpack (one vectorizable scan instead
-    // of a branch per element)
-    if let Some(&i) = out.indices.iter().find(|&&i| i as usize >= s) {
-        return Err(CodecError::Malformed(format!(
-            "index {i} out of range s={s}"
-        )));
+    if sparse {
+        if out.levels[0].to_bits() != 0 {
+            return Err(CodecError::Malformed(
+                "sparse body requires level 0 == +0.0".into(),
+            ));
+        }
+        let k = r.read_u32()? as usize;
+        if k > d {
+            return Err(CodecError::Malformed(format!(
+                "sparse body lists k={k} of d={d} elements"
+            )));
+        }
+        let pbits = pos_bits(d);
+        let entry_bits = pbits as u64 + 1 + idx_bits as u64;
+        let need = k as u64 * entry_bits;
+        if need > r.bits_remaining() {
+            return Err(CodecError::Truncated {
+                need_bits: need,
+                have_bits: r.bits_remaining(),
+            });
+        }
+        out.negative.clear();
+        out.negative.resize(d, false);
+        out.indices.clear();
+        out.indices.resize(d, 0);
+        let mut prev: i64 = -1;
+        for _ in 0..k {
+            let p = r.read_bits(pbits)? as usize;
+            if (p as i64) <= prev || p >= d {
+                return Err(CodecError::Malformed(format!(
+                    "sparse position {p} not strictly increasing in \
+                     range d={d}"
+                )));
+            }
+            let neg = r.read_bit()?;
+            let idx = r.read_bits(idx_bits)? as u32;
+            if idx == 0 || idx as usize >= s {
+                return Err(CodecError::Malformed(format!(
+                    "sparse level index {idx} out of range 1..{s}"
+                )));
+            }
+            out.negative[p] = neg;
+            out.indices[p] = idx;
+            prev = p as i64;
+        }
+        // canonical-form enforcement: a sparse body that is not
+        // strictly smaller than its dense equivalent has exactly one
+        // other (dense) encoding and must use it
+        if sparse_encoded_bits(d, s, !has_table, k)
+            >= encoded_bits(d, s, !has_table)
+        {
+            return Err(CodecError::Malformed(
+                "non-canonical sparse body: dense form is no larger"
+                    .into(),
+            ));
+        }
+    } else {
+        out.negative.clear();
+        r.read_bools_into(d, &mut out.negative)?;
+        out.indices.clear();
+        r.read_packed_into(idx_bits, d, &mut out.indices)?;
+        // range-check after the bulk unpack (one vectorizable scan
+        // instead of a branch per element)
+        if let Some(&i) = out.indices.iter().find(|&&i| i as usize >= s)
+        {
+            return Err(CodecError::Malformed(format!(
+                "index {i} out of range s={s}"
+            )));
+        }
     }
     out.implied_table = !has_table;
+    if !sparse && sparse_nnz(out).is_some() {
+        // the mirror of the check above: a dense body whose content
+        // elects the sparse form is the non-canonical twin of a
+        // shorter message
+        return Err(CodecError::Malformed(
+            "non-canonical dense body: sparse form is smaller".into(),
+        ));
+    }
     Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{Quantizer, QsgdQuantizer, LloydMaxQuantizer};
+    use crate::quant::{
+        LloydMaxQuantizer, QsgdQuantizer, Quantizer, TernGradQuantizer,
+        TopKQuantizer,
+    };
     use crate::util::proptest::check;
     use crate::util::rng::Rng;
 
@@ -593,6 +797,167 @@ mod tests {
             bytes.capacity(),
             need
         );
+    }
+
+    #[test]
+    fn topk_messages_take_the_sparse_body_and_roundtrip() {
+        let mut q = TopKQuantizer::new(0.05);
+        let mut rng = Rng::new(7);
+        let v: Vec<f32> =
+            (0..800).map(|i| (i as f32 * 0.71).sin() * 0.3).collect();
+        let qv = q.quantize(&v, &mut rng);
+        let k = sparse_nnz(&qv).expect("top-k message is sparse-eligible");
+        assert_eq!(k, qv.indices.iter().filter(|&&i| i != 0).count());
+        let bytes = encode(&qv);
+        assert_eq!(
+            bytes.len() as u64 * 8,
+            sparse_encoded_bits(qv.dim(), qv.s(), false, k)
+        );
+        assert!(
+            (bytes.len() as u64 * 8) < encoded_bits(qv.dim(), qv.s(), false),
+            "sparse body must beat the dense one at keep=0.05"
+        );
+        let back = decode(&bytes, |_| unreachable!()).unwrap();
+        assert_eq!(back, qv);
+        assert_eq!(back.dequantize(), qv.dequantize());
+    }
+
+    #[test]
+    fn terngrad_messages_roundtrip_whichever_body_wins() {
+        let mut q = TernGradQuantizer::new();
+        let mut rng = Rng::new(8);
+        // mostly-small coordinates → few survivors → sparse wins
+        let v: Vec<f32> = (0..600)
+            .map(|i| if i % 97 == 0 { 1.0 } else { 1e-3 })
+            .collect();
+        let qv = q.quantize(&v, &mut rng);
+        let bytes = encode(&qv);
+        assert_eq!(bytes.len() as u64 * 8, body_bits(&qv));
+        let back = decode(&bytes, |_| unreachable!()).unwrap();
+        assert_eq!(back, qv);
+    }
+
+    #[test]
+    fn empty_topk_message_still_encodes_a_body() {
+        // a zero vector keeps nothing: k = 0, s = 1 — the sparse body
+        // must still ship (and stay decodable), not vanish to 0 bytes
+        let mut q = TopKQuantizer::new(0.1);
+        let mut rng = Rng::new(9);
+        let qv = q.quantize(&[0.0f32; 512], &mut rng);
+        assert_eq!(sparse_nnz(&qv), Some(0));
+        let bytes = encode(&qv);
+        assert_eq!(
+            bytes.len() as u64 * 8,
+            sparse_encoded_bits(512, 1, false, 0)
+        );
+        assert!(!bytes.is_empty());
+        let back = decode(&bytes, |_| unreachable!()).unwrap();
+        assert_eq!(back, qv);
+        assert!(back.dequantize().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sparse_body_rejects_hostile_inputs() {
+        let mut q = TopKQuantizer::new(0.05);
+        let mut rng = Rng::new(10);
+        let v: Vec<f32> =
+            (0..400).map(|i| (i as f32 * 0.13).cos()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        let bytes = encode(&qv);
+        // every truncation fails cleanly
+        for cut in 0..bytes.len() {
+            assert!(
+                decode(&bytes[..cut], |_| vec![]).is_err(),
+                "truncation to {cut} bytes decoded"
+            );
+        }
+        // hostile d on a sparse body is capped before materialization
+        let mut w = BitWriter::new();
+        w.write_u32(u32::MAX); // d
+        w.write_u16(1); // s
+        w.write_u8(2); // sparse, implied table
+        w.write_f32(1.0); // norm
+        w.write_u32(0); // k
+        let err = decode(&w.into_bytes(), |s| vec![0.0; s]).unwrap_err();
+        assert!(matches!(err, CodecError::Malformed(_)), "{err}");
+        // k > d is structural corruption
+        let mut w = BitWriter::new();
+        w.write_u32(64);
+        w.write_u16(2);
+        w.write_u8(3); // sparse, shipped table
+        w.write_f32(1.0);
+        w.write_f32(0.0);
+        w.write_f32(0.5);
+        w.write_u32(65); // k > d
+        let err = decode(&w.into_bytes(), |_| vec![]).unwrap_err();
+        assert!(matches!(err, CodecError::Malformed(_)), "{err}");
+        // unknown flag bits are rejected
+        let mut w = BitWriter::new();
+        w.write_u32(0);
+        w.write_u16(1);
+        w.write_u8(4);
+        w.write_f32(0.0);
+        let err = decode(&w.into_bytes(), |s| vec![0.0; s]).unwrap_err();
+        assert!(matches!(err, CodecError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn non_canonical_bodies_are_rejected() {
+        let mut q = TopKQuantizer::new(0.05);
+        let mut rng = Rng::new(11);
+        let v: Vec<f32> =
+            (0..500).map(|i| (i as f32 * 0.29).sin()).collect();
+        let qv = q.quantize(&v, &mut rng);
+        // force the dense body for a message whose canonical form is
+        // sparse: hand-write it and expect the mirror check to fire
+        let mut w = BitWriter::new();
+        w.write_u32(qv.dim() as u32);
+        w.write_u16(qv.s() as u16);
+        w.write_u8(1); // dense, shipped table
+        w.write_f32(qv.norm);
+        for &l in &qv.levels {
+            w.write_f32(l);
+        }
+        w.write_bools(&qv.negative);
+        w.write_packed(&qv.indices, ceil_log2(qv.s()));
+        let err = decode(&w.into_bytes(), |_| vec![]).unwrap_err();
+        assert!(
+            err.to_string().contains("non-canonical dense"),
+            "{err}"
+        );
+        // and the reverse: a sparse body that is not smaller than its
+        // dense twin (tiny d) is equally rejected
+        let mut w = BitWriter::new();
+        w.write_u32(2); // d
+        w.write_u16(2); // s
+        w.write_u8(3); // sparse, shipped table
+        w.write_f32(1.0);
+        w.write_f32(0.0);
+        w.write_f32(0.5);
+        w.write_u32(1); // k
+        w.write_bits(0, 1); // position 0
+        w.write_bit(false); // sign
+        w.write_bits(1, 1); // level index 1
+        let err = decode(&w.into_bytes(), |_| vec![]).unwrap_err();
+        assert!(
+            err.to_string().contains("non-canonical sparse"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn prop_sparse_roundtrip_arbitrary_vectors() {
+        check("sparse codec roundtrip", 40, |g| {
+            let v = g.vec_normal(1..400, 1.0);
+            let keep = *g.pick(&[0.01f64, 0.05, 0.2, 1.0]);
+            let mut q = TopKQuantizer::new(keep);
+            let mut rng = Rng::new(g.seed);
+            let qv = q.quantize(&v, &mut rng);
+            let bytes = encode(&qv);
+            assert_eq!(bytes.len() as u64 * 8, body_bits(&qv));
+            let back = decode(&bytes, |_| unreachable!()).unwrap();
+            assert_eq!(back, qv);
+        });
     }
 
     #[test]

@@ -182,6 +182,8 @@ pub fn build_quantizer(kind: &QuantizerKind) -> Box<dyn Quantizer> {
         QuantizerKind::DoublyAdaptive { s1, iters, .. } => {
             Box::new(LloydMaxQuantizer::new(*s1, *iters))
         }
+        QuantizerKind::TernGrad => Box::new(TernGradQuantizer::new()),
+        QuantizerKind::TopK { keep } => Box::new(TopKQuantizer::new(*keep)),
     }
 }
 
@@ -324,6 +326,8 @@ mod tests {
             QuantizerKind::Alq { s: 16 },
             QuantizerKind::LloydMax { s: 16, iters: 4 },
             QuantizerKind::DoublyAdaptive { s1: 4, iters: 4, s_max: 64 },
+            QuantizerKind::TernGrad,
+            QuantizerKind::TopK { keep: 0.1 },
         ];
         for k in &kinds {
             let q = build_quantizer(k);

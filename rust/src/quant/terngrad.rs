@@ -29,7 +29,6 @@ impl Quantizer for TernGradQuantizer {
     fn quantize(&mut self, v: &[f32], rng: &mut Rng) -> QuantizedVector {
         let norm = l2_norm(v) as f32;
         let vmax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let negative: Vec<bool> = v.iter().map(|&x| x < 0.0).collect();
         let (levels, indices) = if norm > 0.0 && vmax > 0.0 {
             // level table normalized by ||v||: {0, vmax/||v||}
             let top = vmax / norm;
@@ -44,6 +43,14 @@ impl Quantizer for TernGradQuantizer {
         } else {
             (vec![0.0, 1.0], vec![0u32; v.len()])
         };
+        // a coordinate rounded to zero carries no sign: emit the
+        // canonical index-0/positive-sign slot so the codec's sparse
+        // body applies when it is the smaller form
+        let negative: Vec<bool> = v
+            .iter()
+            .zip(&indices)
+            .map(|(&x, &i)| i != 0 && x < 0.0)
+            .collect();
         QuantizedVector {
             norm,
             negative,

@@ -1,11 +1,13 @@
 //! Top-k sparsification [12] extension baseline (paper §I): keep the k
 //! largest-magnitude coordinates at full precision, drop the rest.
 //!
-//! Expressed in the shared wire format by shipping a level table holding
-//! the k surviving normalized magnitudes is wasteful; instead top-k
-//! messages are accounted as k·(32 + ⌈log₂ d⌉) bits (value + coordinate
-//! index) + 32-bit norm — the standard sparse encoding. The dequantized
-//! form still plugs into the same engine via [`Quantizer`].
+//! Messages ship through the canonical sparse wire body of
+//! [`crate::quant::codec`]: a level table holding the k surviving
+//! normalized magnitudes plus one (position, sign, index) entry per
+//! survivor. Dropped coordinates are emitted as canonical index-0 /
+//! positive-sign slots, which is exactly what makes the message
+//! sparse-eligible — the encoded bytes are the measured cost, and
+//! [`TopKQuantizer::sparse_bits`] reproduces that size analytically.
 
 use super::{QuantizedVector, Quantizer};
 use crate::util::rng::Rng;
@@ -23,10 +25,12 @@ impl TopKQuantizer {
         TopKQuantizer { keep }
     }
 
-    /// Sparse-encoding bit cost (value+index per kept coordinate).
+    /// Sparse wire-body bit cost for a d-dimensional message keeping k
+    /// coordinates (the codec's exact sparse accounting: shipped table
+    /// of k+1 levels plus one position/sign/index entry per survivor).
     pub fn sparse_bits(&self, d: usize) -> u64 {
-        let k = ((d as f64 * self.keep).ceil() as u64).max(1);
-        k * (32 + crate::quant::bits::ceil_log2(d.max(2)) as u64) + 32
+        let k = ((d as f64 * self.keep).ceil() as usize).max(1);
+        crate::quant::codec::sparse_encoded_bits(d, k + 1, false, k)
     }
 }
 
@@ -57,17 +61,20 @@ impl Quantizer for TopKQuantizer {
         };
         // level table: 0 plus each kept magnitude (normalized); index i
         // selects its own slot. Ties at the threshold may keep a few
-        // extra coordinates — harmless for the baseline.
+        // extra coordinates — harmless for the baseline. Dropped
+        // coordinates get the canonical index-0/positive-sign slot so
+        // the codec's sparse body applies.
         let safe = if norm > 0.0 { norm } else { 1.0 };
         let mut levels = vec![0.0f32];
         let mut indices = Vec::with_capacity(d);
         let mut negative = Vec::with_capacity(d);
         for &x in v {
-            negative.push(x < 0.0);
             if x.abs() >= thresh && x != 0.0 {
+                negative.push(x < 0.0);
                 levels.push(x.abs() / safe);
                 indices.push((levels.len() - 1) as u32);
             } else {
+                negative.push(false);
                 indices.push(0);
             }
         }

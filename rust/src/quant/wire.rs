@@ -9,7 +9,7 @@
 //! the payload's index bit-width:
 //!
 //! ```text
-//! u8   version    wire format version (WIRE_VERSION = 1)
+//! u8   version    wire format version (WIRE_VERSION = 2)
 //! u8   tag        quantizer tag (QuantTag)
 //! u8   phase      protocol phase (sync: 0 = q2 mixing delta,
 //!                 2 = q1 local-update delta; async: 0)
@@ -18,8 +18,17 @@
 //! u32  round      global round (sync) / sender local round (async)
 //! -- codec body (quant::codec::encode_body) --
 //! u32  d; u16 s; u8 flags; f32 norm; [f32; s] table (if shipped);
-//! d sign bits; d·idx_bits index bits; zero padding to a whole byte
+//! then either the dense element stream (d sign bits; d·idx_bits
+//! index bits) or, when flags bit 1 is set, the sparse one
+//! (u32 k; k × [position, sign, index] entries); zero padding to a
+//! whole byte
 //! ```
+//!
+//! Version history: v1 shipped dense bodies only; v2 added the sparse
+//! body (flags bit 1) that lets the top-k and TernGrad sparsifiers ship
+//! only their surviving coordinates. The body encoding is canonical
+//! (see [`super::codec`]), so a message's length is a pure function of
+//! its decoded content and byte meters can re-derive it.
 //!
 //! Versioning rule: any change to the header layout or the body format
 //! bumps [`WIRE_VERSION`]; decoders reject unknown versions with an
@@ -43,7 +52,7 @@ use crate::quant::bits::{ceil_log2, stream_bytes};
 use crate::quant::{FullPrecision, NaturalQuantizer, QsgdQuantizer};
 
 /// Current wire format version (see the module docs for the rule).
-pub const WIRE_VERSION: u8 = 1;
+pub const WIRE_VERSION: u8 = 2;
 
 /// Fixed header size in bytes.
 pub const HEADER_BYTES: usize = 12;
@@ -88,6 +97,8 @@ impl QuantTag {
             QuantizerKind::DoublyAdaptive { .. } => {
                 QuantTag::DoublyAdaptive
             }
+            QuantizerKind::TernGrad => QuantTag::TernGrad,
+            QuantizerKind::TopK { .. } => QuantTag::TopK,
         }
     }
 
@@ -220,19 +231,23 @@ impl ImpliedCache {
     }
 }
 
-/// Exact encoded size in bits of a message for (d, s, implied_table).
+/// Exact encoded size in bits of a *dense-body* message for
+/// (d, s, implied_table). For the canonical (possibly sparse) size of a
+/// concrete message use [`message_len`].
 pub fn encoded_bits(d: usize, s: usize, implied_table: bool) -> u64 {
     HEADER_BITS + codec::encoded_bits(d, s, implied_table)
 }
 
-/// Exact encoded size in bytes.
+/// Exact encoded size in bytes of a *dense-body* message.
 pub fn encoded_len(d: usize, s: usize, implied_table: bool) -> usize {
     HEADER_BYTES + stream_bytes(codec::encoded_bits(d, s, implied_table))
 }
 
-/// Exact encoded size in bytes of the message carrying `qv`.
+/// Exact encoded size in bytes of the message carrying `qv` — the
+/// canonical body form ([`codec::body_bits`]), so this equals the
+/// measured length of the bytes [`encode`] produces.
 pub fn message_len(qv: &QuantizedVector) -> usize {
-    encoded_len(qv.dim(), qv.s(), qv.implied_table)
+    HEADER_BYTES + stream_bytes(codec::body_bits(qv))
 }
 
 /// Encode one message to fresh bytes.
@@ -251,7 +266,7 @@ pub fn encode_with_buf(
     debug_assert_eq!(h.idx_bits as u32, ceil_log2(qv.s()));
     let mut w = BitWriter::with_capacity_bits(
         buf,
-        encoded_bits(qv.dim(), qv.s(), qv.implied_table),
+        HEADER_BITS + codec::body_bits(qv),
     );
     w.write_u8(h.version);
     w.write_u8(h.tag as u8);
@@ -310,7 +325,7 @@ pub fn decode_into(
             ceil_log2(out.s())
         )));
     }
-    let want = encoded_len(out.dim(), out.s(), out.implied_table);
+    let want = HEADER_BYTES + stream_bytes(codec::body_bits(out));
     if bytes.len() != want {
         return Err(CodecError::Malformed(format!(
             "message is {} bytes, format says {want}",

@@ -424,6 +424,43 @@ mod tests {
     }
 
     #[test]
+    fn empty_sparse_topk_messages_still_occupy_links() {
+        // ISSUE 10 regression: a top-k message that kept NOTHING
+        // (k = 0) encodes to a sparse frame, not to zero bytes — the
+        // fabric must charge it link time like any other live message,
+        // keeping "sent an empty update" distinct from "offline"
+        use crate::quant::wire::{self, QuantTag, WireHeader};
+        use crate::quant::QuantizedVector;
+        let qv = QuantizedVector {
+            norm: 0.0,
+            negative: vec![false; 512],
+            indices: vec![0; 512],
+            levels: vec![0.0],
+            implied_table: false,
+        };
+        let header = WireHeader::new(QuantTag::TopK, 0, 0, 1, 1);
+        let frame = wire::encode(&header, &qv).len() as u64;
+        assert!(frame >= wire::MIN_ENCODED_BYTES as u64);
+        // ... and far below the dense form of a 512-dim message
+        assert!(frame < 512 / 8, "k=0 frame is not sparse: {frame}");
+        let mut live_fab = fabric(1e4, 4);
+        let live = vec![frame; 4];
+        let live_t = live_fab.simulate_round(1, &live, &live);
+        let mut silent_fab = fabric(1e4, 4);
+        let silent = vec![0u64; 4];
+        let silent_t = silent_fab.simulate_round(1, &silent, &silent);
+        assert!(
+            live_t.round_secs > silent_t.round_secs,
+            "k=0 sparse frames cost no time: {} !> {}",
+            live_t.round_secs,
+            silent_t.round_secs
+        );
+        // ring of 4: 2 out-links per node, 2 broadcasts per node/round
+        assert_eq!(live_fab.bytes_on_wire(), frame * 2 * 2 * 4);
+        assert_eq!(silent_fab.bytes_on_wire(), 0);
+    }
+
+    #[test]
     #[should_panic(expected = "wire minimum")]
     fn sub_header_sizes_are_rejected() {
         // nothing between 0 (offline) and a full header is encodable

@@ -10,7 +10,8 @@
 
 use crate::config::json::Json;
 use crate::config::{
-    EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
+    AttackConfig, AttackKind, EngineMode, ExperimentConfig,
+    QuantizerKind, TopologyKind,
 };
 use crate::experiments::fig_time;
 
@@ -72,6 +73,64 @@ impl NetRegime {
     }
 }
 
+/// Which adversary a sweep cell faces (the `attack` regime axis).
+/// The Byzantine regimes run the fig-robust preset's adversary: the
+/// first `f = 2` node ids corrupted, scale factor −4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackRegime {
+    /// keep the base config's `attack:` section (possibly none)
+    Base,
+    /// strip the section: every sender honest
+    Honest,
+    /// f=2 sign-flip senders
+    SignFlip,
+    /// f=2 scaled-gradient senders (factor −4)
+    Scale,
+    /// f=2 random-message senders
+    Random,
+}
+
+impl AttackRegime {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackRegime::Base => "base",
+            AttackRegime::Honest => "none",
+            AttackRegime::SignFlip => "sign_flip",
+            AttackRegime::Scale => "scale",
+            AttackRegime::Random => "random",
+        }
+    }
+
+    pub fn parse_str(text: &str) -> anyhow::Result<Self> {
+        Ok(match text {
+            "base" => AttackRegime::Base,
+            "none" => AttackRegime::Honest,
+            "sign_flip" => AttackRegime::SignFlip,
+            "scale" => AttackRegime::Scale,
+            "random" => AttackRegime::Random,
+            other => anyhow::bail!(
+                "unknown attack regime '{other}' \
+                 (have: base, none, sign_flip, scale, random)"
+            ),
+        })
+    }
+
+    /// Materialize the regime over `cfg.attack`.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        let kind = match self {
+            AttackRegime::Base => return,
+            AttackRegime::Honest => {
+                cfg.attack = None;
+                return;
+            }
+            AttackRegime::SignFlip => AttackKind::SignFlip,
+            AttackRegime::Scale => AttackKind::Scale { factor: -4.0 },
+            AttackRegime::Random => AttackKind::Random,
+        };
+        cfg.attack = Some(AttackConfig { kind, f: 2 });
+    }
+}
+
 /// Parse one quantizer axis value by name (the CLI's `lm` / `da`
 /// aliases included), with the crate's default parameters per kind.
 pub fn quantizer_from_name(
@@ -90,6 +149,8 @@ pub fn quantizer_from_name(
             iters: 12,
             s_max: 4096,
         },
+        "terngrad" => QuantizerKind::TernGrad,
+        "topk" => QuantizerKind::TopK { keep: 0.1 },
         other => anyhow::bail!("unknown quantizer '{other}'"),
     })
 }
@@ -116,19 +177,21 @@ pub struct Cell {
     pub topology: TopologyKind,
     pub net: NetRegime,
     pub mode: EngineMode,
+    pub attack: AttackRegime,
     pub seed: u64,
 }
 
 impl Cell {
     /// The stable human-readable cell id:
-    /// `quantizer/topology/net/mode/seed`.
+    /// `quantizer/topology/net/mode/attack/seed`.
     pub fn id(&self) -> String {
         format!(
-            "{}/{}/{}/{}/{}",
+            "{}/{}/{}/{}/{}/{}",
             self.quantizer.name(),
             self.topology.name(),
             self.net.name(),
             self.mode.name(),
+            self.attack.name(),
             self.seed
         )
     }
@@ -140,6 +203,7 @@ impl Cell {
             ("topology", Json::str(self.topology.name())),
             ("net", Json::str(self.net.name())),
             ("mode", Json::str(self.mode.name())),
+            ("attack", Json::str(self.attack.name())),
             ("seed", Json::num(self.seed as f64)),
         ])
     }
@@ -156,6 +220,7 @@ impl Cell {
         cfg.mode = self.mode;
         cfg.seed = self.seed;
         self.net.apply(&mut cfg);
+        self.attack.apply(&mut cfg);
         if cfg.mode == EngineMode::Async && cfg.agossip.is_none() {
             cfg.agossip = Some(fig_time::async_torus16_policy());
         }
@@ -170,6 +235,7 @@ pub struct Grid {
     pub topologies: Vec<TopologyKind>,
     pub nets: Vec<NetRegime>,
     pub modes: Vec<EngineMode>,
+    pub attacks: Vec<AttackRegime>,
     pub seeds: Vec<u64>,
 }
 
@@ -185,6 +251,7 @@ impl Grid {
             topologies: vec![base.topology.clone()],
             nets: vec![NetRegime::Base],
             modes: vec![base.mode],
+            attacks: vec![AttackRegime::Base],
             seeds: vec![base.seed],
         }
     }
@@ -227,6 +294,17 @@ impl Grid {
         Ok(())
     }
 
+    pub fn set_attacks(&mut self, list: &str) -> anyhow::Result<()> {
+        self.attacks = split(list)
+            .map(AttackRegime::parse_str)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !self.attacks.is_empty(),
+            "--attacks list is empty"
+        );
+        Ok(())
+    }
+
     /// Seed repeats: `base, base+1, ..., base+repeats-1`.
     pub fn set_seed_repeats(&mut self, base: u64, repeats: usize) {
         self.seeds =
@@ -254,6 +332,7 @@ impl Grid {
             * self.topologies.len()
             * self.nets.len()
             * self.modes.len()
+            * self.attacks.len()
             * self.seeds.len()
     }
 
@@ -269,14 +348,17 @@ impl Grid {
             for t in &self.topologies {
                 for n in &self.nets {
                     for m in &self.modes {
-                        for &s in &self.seeds {
-                            out.push(Cell {
-                                quantizer: q.clone(),
-                                topology: t.clone(),
-                                net: *n,
-                                mode: *m,
-                                seed: s,
-                            });
+                        for a in &self.attacks {
+                            for &s in &self.seeds {
+                                out.push(Cell {
+                                    quantizer: q.clone(),
+                                    topology: t.clone(),
+                                    net: *n,
+                                    mode: *m,
+                                    attack: *a,
+                                    seed: s,
+                                });
+                            }
                         }
                     }
                 }
@@ -325,6 +407,13 @@ impl Grid {
                     .collect(),
             ),
             axis(
+                "attack",
+                self.attacks
+                    .iter()
+                    .map(|a| Json::str(a.name()))
+                    .collect(),
+            ),
+            axis(
                 "seed",
                 self.seeds
                     .iter()
@@ -349,7 +438,9 @@ mod tests {
         assert_eq!(cfg.quantizer, base.quantizer);
         assert_eq!(cfg.topology, base.topology);
         assert_eq!(cfg.seed, base.seed);
-        assert_eq!(cfg.name, "lloyd_max/ring/base/sync/0");
+        assert_eq!(cfg.name, "lloyd_max/ring/base/sync/base/0");
+        // the default attack regime keeps the base section (none here)
+        assert!(cfg.attack.is_none());
     }
 
     #[test]
@@ -362,12 +453,12 @@ mod tests {
         assert_eq!(grid.len(), 8);
         let ids: Vec<String> =
             grid.cells().iter().map(Cell::id).collect();
-        assert_eq!(ids[0], "lloyd_max/ring/base/sync/5");
-        assert_eq!(ids[1], "lloyd_max/ring/base/sync/6");
-        assert_eq!(ids[2], "lloyd_max/ring/base/async/5");
-        assert_eq!(ids[4], "lloyd_max/ring/base/sync/5".replace(
+        assert_eq!(ids[0], "lloyd_max/ring/base/sync/base/5");
+        assert_eq!(ids[1], "lloyd_max/ring/base/sync/base/6");
+        assert_eq!(ids[2], "lloyd_max/ring/base/async/base/5");
+        assert_eq!(ids[4], "lloyd_max/ring/base/sync/base/5".replace(
             "lloyd_max", "qsgd"));
-        assert_eq!(ids[7], "qsgd/ring/base/async/6");
+        assert_eq!(ids[7], "qsgd/ring/base/async/base/6");
     }
 
     #[test]
@@ -409,7 +500,10 @@ mod tests {
             .collect();
         assert_eq!(
             order,
-            vec!["quantizer", "topology", "net", "mode", "seed"]
+            vec![
+                "quantizer", "topology", "net", "mode", "attack",
+                "seed"
+            ]
         );
         // list order inside an axis is preserved too (qsgd first)
         let qs = arr[0].get("values").unwrap().as_arr().unwrap();
@@ -425,6 +519,53 @@ mod tests {
         assert!(grid.set_topologies("moebius").is_err());
         assert!(grid.set_nets("underwater").is_err());
         assert!(grid.set_modes("both").is_err());
+        assert!(grid.set_attacks("polite").is_err());
         assert!(grid.set_seed_list("1,two").is_err());
+    }
+
+    #[test]
+    fn attack_regimes_materialize_adversaries() {
+        let mut base = ExperimentConfig::default();
+        base.attack = Some(AttackConfig {
+            kind: AttackKind::SignFlip,
+            f: 3,
+        });
+        let mut grid = Grid::from_base(&base);
+        grid.set_attacks("base,none,sign_flip,scale,random").unwrap();
+        let cells = grid.cells();
+        // `base` keeps the config's own section, f and all
+        let kept = cells[0].apply_to(&base).attack.unwrap();
+        assert_eq!(kept.f, 3);
+        // `none` strips it
+        assert!(cells[1].apply_to(&base).attack.is_none());
+        // the Byzantine regimes pin the fig-robust adversary (f = 2)
+        let sf = cells[2].apply_to(&base).attack.unwrap();
+        assert_eq!(sf.kind, AttackKind::SignFlip);
+        assert_eq!(sf.f, 2);
+        let sc = cells[3].apply_to(&base).attack.unwrap();
+        assert_eq!(sc.kind, AttackKind::Scale { factor: -4.0 });
+        let rn = cells[4].apply_to(&base).attack.unwrap();
+        assert_eq!(rn.kind, AttackKind::Random);
+        // ids carry the regime segment
+        assert_eq!(
+            cells[2].id(),
+            "lloyd_max/ring/base/sync/sign_flip/0"
+        );
+        // every materialized config stays valid
+        for c in &cells {
+            c.apply_to(&base).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sparse_quantizer_axis_values_parse() {
+        assert_eq!(
+            quantizer_from_name("terngrad").unwrap(),
+            QuantizerKind::TernGrad
+        );
+        assert!(matches!(
+            quantizer_from_name("topk").unwrap(),
+            QuantizerKind::TopK { .. }
+        ));
     }
 }

@@ -34,7 +34,7 @@ pub mod analyse;
 pub mod grid;
 pub mod monitor;
 
-pub use grid::{Cell, Grid, NetRegime};
+pub use grid::{AttackRegime, Cell, Grid, NetRegime};
 pub use monitor::{ProcessMonitor, ResourceUsage};
 
 use std::collections::{BTreeSet, VecDeque};
@@ -599,7 +599,7 @@ mod tests {
 
     fn sample_cell() -> CellResult {
         CellResult {
-            id: "qsgd/ring/base/sync/7".into(),
+            id: "qsgd/ring/base/sync/base/7".into(),
             hash: "00deadbeef001234".into(),
             axes: Json::obj(vec![(
                 "quantizer",

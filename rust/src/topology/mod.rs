@@ -17,6 +17,7 @@
 //! eigensolver. Larger graphs estimate ζ by deflated power iteration
 //! over the sparse matvec and never materialize C.
 
+pub mod robust;
 pub mod sparse;
 
 use crate::config::TopologyKind;
@@ -25,6 +26,7 @@ use crate::linalg::power::PowerBudget;
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
+pub use robust::robust_mix_into;
 pub use sparse::SparseTopology;
 
 /// Largest node count for which the dense confusion matrix (and the

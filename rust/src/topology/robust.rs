@@ -1,0 +1,291 @@
+//! Byzantine-robust mixing rules (the `mixing:` config axis).
+//!
+//! Plain Metropolis mixing is a fixed convex combination of neighbor
+//! estimates — a single Byzantine neighbor can drag a node arbitrarily
+//! far by shipping huge values. The two robust variants bound that
+//! influence per coordinate:
+//!
+//! * **trimmed(f)** — drop the `f` largest and `f` smallest *neighbor*
+//!   values at each coordinate (the node's own estimate is always
+//!   kept), then redistribute the dropped weight over the kept
+//!   neighbors so the row stays stochastic. With `2f ≥ deg` the whole
+//!   neighbor mass falls back to the node itself. `trimmed(0)` is
+//!   plain Metropolis.
+//! * **median** — replace the neighbor average by the unweighted
+//!   coordinate-wise median of {self} ∪ neighbors (even count →
+//!   midpoint), scaled by the row's total mass.
+//!
+//! One helper serves every runtime: the synchronous matrix engine, the
+//! asynchronous gossip engine (with its staleness-discounted weights),
+//! and the threaded/socket protocol loop all gather (values, weight)
+//! columns and call [`robust_mix_into`]. Engines route
+//! [`MixingKind::is_plain`] configurations through their historical
+//! axpy path, so default runs stay bit-identical to pre-robust builds.
+
+use crate::config::MixingKind;
+
+/// Mix `self_vals` (weight `self_w`) with neighbor columns into `out`
+/// under `kind`. Each neighbor is a (values, weight) pair; all slices
+/// must have `out.len()` elements and weights must be non-negative.
+/// Accumulation is f64 in a deterministic order (sorted per coordinate
+/// for the robust rules), so results are replayable bit-for-bit.
+///
+/// Returns the number of neighbor contributions discarded per
+/// coordinate (`min(2f, deg)` for trimmed, 0 otherwise) — the
+/// `trimmed_drops` observability quantity.
+pub fn robust_mix_into(
+    out: &mut [f32],
+    self_vals: &[f32],
+    self_w: f64,
+    neighbors: &[(&[f32], f64)],
+    kind: &MixingKind,
+) -> u64 {
+    debug_assert_eq!(out.len(), self_vals.len());
+    for (vals, _) in neighbors {
+        debug_assert_eq!(vals.len(), out.len());
+    }
+    let total_w: f64 = neighbors.iter().map(|(_, w)| *w).sum();
+    match kind {
+        MixingKind::Metropolis | MixingKind::Trimmed { f: 0 } => {
+            plain_mix(out, self_vals, self_w, neighbors);
+            0
+        }
+        MixingKind::Trimmed { f } => {
+            trimmed_mix(out, self_vals, self_w, neighbors, total_w, *f)
+        }
+        MixingKind::Median => {
+            median_mix(out, self_vals, self_w, neighbors, total_w);
+            0
+        }
+    }
+}
+
+/// Reference weighted sum (f64 accumulation, caller order). The
+/// engines' hot paths keep their own kernels for this case; this form
+/// exists so the helper is total over [`MixingKind`] and testable.
+fn plain_mix(
+    out: &mut [f32],
+    self_vals: &[f32],
+    self_w: f64,
+    neighbors: &[(&[f32], f64)],
+) {
+    for (c, o) in out.iter_mut().enumerate() {
+        let mut acc = self_w * self_vals[c] as f64;
+        for (vals, w) in neighbors {
+            acc += w * vals[c] as f64;
+        }
+        *o = acc as f32;
+    }
+}
+
+fn trimmed_mix(
+    out: &mut [f32],
+    self_vals: &[f32],
+    self_w: f64,
+    neighbors: &[(&[f32], f64)],
+    total_w: f64,
+    f: usize,
+) -> u64 {
+    let deg = neighbors.len();
+    if 2 * f >= deg {
+        // not enough neighbors to trim around: every neighbor value is
+        // suspect, so the whole row mass stays on the node itself
+        for (o, &s) in out.iter_mut().zip(self_vals) {
+            *o = ((self_w + total_w) * s as f64) as f32;
+        }
+        return deg as u64;
+    }
+    let mut entries: Vec<(f32, f64)> = Vec::with_capacity(deg);
+    for (c, o) in out.iter_mut().enumerate() {
+        entries.clear();
+        entries
+            .extend(neighbors.iter().map(|(vals, w)| (vals[c], *w)));
+        entries.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let kept = &entries[f..deg - f];
+        let kept_w: f64 = kept.iter().map(|(_, w)| *w).sum();
+        // redistribute the trimmed mass proportionally over the kept
+        // neighbors; if every kept weight is zero the mass falls back
+        // to the node (total_w is then also the trimmed weight)
+        let scale = if kept_w > 0.0 { total_w / kept_w } else { 0.0 };
+        let mut acc = self_w * self_vals[c] as f64;
+        if scale > 0.0 {
+            for (v, w) in kept {
+                acc += w * scale * *v as f64;
+            }
+        } else {
+            acc += total_w * self_vals[c] as f64;
+        }
+        *o = acc as f32;
+    }
+    (2 * f) as u64
+}
+
+fn median_mix(
+    out: &mut [f32],
+    self_vals: &[f32],
+    self_w: f64,
+    neighbors: &[(&[f32], f64)],
+    total_w: f64,
+) {
+    let mass = self_w + total_w;
+    let mut vals: Vec<f32> = Vec::with_capacity(neighbors.len() + 1);
+    for (c, o) in out.iter_mut().enumerate() {
+        vals.clear();
+        vals.push(self_vals[c]);
+        vals.extend(neighbors.iter().map(|(v, _)| v[c]));
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let n = vals.len();
+        let med = if n % 2 == 1 {
+            vals[n / 2] as f64
+        } else {
+            (vals[n / 2 - 1] as f64 + vals[n / 2] as f64) / 2.0
+        };
+        *o = (mass * med) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix(
+        self_vals: &[f32],
+        self_w: f64,
+        neighbors: &[(&[f32], f64)],
+        kind: &MixingKind,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; self_vals.len()];
+        robust_mix_into(&mut out, self_vals, self_w, neighbors, kind);
+        out
+    }
+
+    #[test]
+    fn trimmed_zero_is_the_plain_weighted_sum() {
+        let a = [1.0f32, -2.0, 3.0];
+        let b = [0.5f32, 0.5, 0.5];
+        let s = [0.0f32, 1.0, -1.0];
+        let nbrs: Vec<(&[f32], f64)> =
+            vec![(&a[..], 0.3), (&b[..], 0.3)];
+        let plain = mix(&s, 0.4, &nbrs, &MixingKind::Metropolis);
+        let t0 = mix(&s, 0.4, &nbrs, &MixingKind::Trimmed { f: 0 });
+        for (x, y) in plain.iter().zip(&t0) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn trimmed_discards_the_outlier() {
+        // four honest-ish neighbors plus one shipping a huge value:
+        // with f=1 the attacker is in the trimmed extreme, so the
+        // output stays near the honest range regardless of magnitude
+        let honest = [[0.9f32], [1.0f32], [1.1f32], [1.05f32]];
+        let evil = [1.0e9f32];
+        let s = [1.0f32];
+        let nbrs: Vec<(&[f32], f64)> = vec![
+            (&honest[0][..], 0.15),
+            (&honest[1][..], 0.15),
+            (&evil[..], 0.15),
+            (&honest[2][..], 0.15),
+            (&honest[3][..], 0.15),
+        ];
+        let plain = mix(&s, 0.25, &nbrs, &MixingKind::Metropolis);
+        assert!(plain[0] > 1.0e7, "plain mixing absorbed the attack?");
+        let trimmed = mix(&s, 0.25, &nbrs, &MixingKind::Trimmed { f: 1 });
+        assert!(
+            (0.8..=1.2).contains(&trimmed[0]),
+            "trimmed={}",
+            trimmed[0]
+        );
+    }
+
+    #[test]
+    fn median_ignores_a_minority_of_outliers() {
+        let cols = [[-1.0e8f32], [0.1f32], [0.15f32], [1.0e8f32]];
+        let s = [0.0f32];
+        let nbrs: Vec<(&[f32], f64)> =
+            cols.iter().map(|c| (&c[..], 0.2)).collect();
+        // 5 values {-1e8, 0, 0.1, 0.15, 1e8} -> median 0.1, mass 1.0
+        let m = mix(&s, 0.2, &nbrs, &MixingKind::Median);
+        assert!((m[0] - 0.1).abs() < 1e-6, "median={}", m[0]);
+    }
+
+    #[test]
+    fn rows_stay_stochastic_on_consensus_inputs() {
+        // every estimate equal => every rule must reproduce it scaled
+        // by the row mass (here 1.0): the row still sums to one
+        let v = [3.25f32, -7.5, 0.0, 42.0];
+        let nbrs: Vec<(&[f32], f64)> =
+            vec![(&v[..], 0.25), (&v[..], 0.25), (&v[..], 0.25)];
+        for kind in [
+            MixingKind::Metropolis,
+            MixingKind::Trimmed { f: 1 },
+            MixingKind::Median,
+        ] {
+            let out = mix(&v, 0.25, &nbrs, &kind);
+            for (o, &x) in out.iter().zip(&v) {
+                assert!(
+                    (o - x).abs() <= x.abs() * 1e-6 + 1e-6,
+                    "{kind:?}: {o} vs {x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overtrimmed_rows_fall_back_to_self() {
+        let a = [9.0f32];
+        let b = [-9.0f32];
+        let s = [2.0f32];
+        let nbrs: Vec<(&[f32], f64)> =
+            vec![(&a[..], 0.3), (&b[..], 0.3)];
+        // 2f = 2 >= deg = 2: all mass (0.4 + 0.6) collapses onto self
+        let mut out = [0.0f32];
+        let drops = robust_mix_into(
+            &mut out,
+            &s,
+            0.4,
+            &nbrs,
+            &MixingKind::Trimmed { f: 1 },
+        );
+        assert_eq!(drops, 2);
+        assert!((out[0] - 2.0).abs() < 1e-6, "out={}", out[0]);
+    }
+
+    #[test]
+    fn no_neighbors_degenerates_to_scaled_self() {
+        let s = [1.5f32, -2.5];
+        for kind in [
+            MixingKind::Metropolis,
+            MixingKind::Trimmed { f: 2 },
+            MixingKind::Median,
+        ] {
+            let out = mix(&s, 0.5, &[], &kind);
+            assert!((out[0] - 0.75).abs() < 1e-7, "{kind:?}");
+            assert!((out[1] + 1.25).abs() < 1e-7, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn trimmed_reports_drop_count() {
+        let a = [1.0f32];
+        let cols: Vec<(&[f32], f64)> =
+            vec![(&a[..], 0.2), (&a[..], 0.2), (&a[..], 0.2), (&a[..], 0.2)];
+        let mut out = [0.0f32];
+        let d = robust_mix_into(
+            &mut out,
+            &a,
+            0.2,
+            &cols,
+            &MixingKind::Trimmed { f: 1 },
+        );
+        assert_eq!(d, 2);
+        let d0 = robust_mix_into(
+            &mut out,
+            &a,
+            0.2,
+            &cols,
+            &MixingKind::Trimmed { f: 0 },
+        );
+        assert_eq!(d0, 0);
+    }
+}

@@ -256,6 +256,179 @@ mod tests {
     }
 
     #[test]
+    fn prop_sparse_wire_roundtrips_and_is_canonical() {
+        // ISSUE 10 satellite: messages with a zero level-0 and mostly
+        // index-0 coordinates may take the sparse body (flags bit1).
+        // The encoder must pick whichever form is strictly smaller,
+        // byte accounting must stay exact either way, the bytes must
+        // decode back to the same message, and truncation/corruption
+        // must never panic
+        use crate::quant::bits::stream_bytes;
+        use crate::quant::codec::{encoded_bits, sparse_nnz};
+        use crate::quant::wire::{
+            self, ImpliedCache, QuantTag, WireHeader, HEADER_BYTES,
+        };
+        use crate::quant::QuantizedVector;
+        check("sparse wire canonical roundtrip", 80, |g| {
+            let s = g.usize_in(2..33);
+            let d = g.usize_in(1..300);
+            // density knob: from fully sparse to fully dense payloads,
+            // so both body forms (and the tie region) are exercised
+            let density = g.usize_in(1..9);
+            let mut negative = Vec::with_capacity(d);
+            let mut indices = Vec::with_capacity(d);
+            for _ in 0..d {
+                if g.rng().below(8) < density {
+                    indices.push(1 + g.rng().below(s - 1) as u32);
+                    negative.push(g.bool());
+                } else {
+                    // the implicit slot: index 0, positive sign
+                    indices.push(0);
+                    negative.push(false);
+                }
+            }
+            let mut levels: Vec<f32> =
+                (0..s).map(|_| g.f32_in(0.01..1.0)).collect();
+            levels[0] = 0.0; // sparse-eligible table
+            let qv = QuantizedVector {
+                norm: g.f32_in(0.0..10.0),
+                negative,
+                indices,
+                levels,
+                implied_table: false,
+            };
+            let h = WireHeader::new(QuantTag::TopK, 2, 7, 11, s);
+            let bytes = wire::encode(&h, &qv);
+            assert_eq!(bytes.len(), wire::message_len(&qv));
+            let dense_len = HEADER_BYTES
+                + stream_bytes(encoded_bits(d, s, false));
+            match sparse_nnz(&qv) {
+                Some(k) => {
+                    assert_eq!(
+                        k,
+                        qv.indices.iter().filter(|&&i| i != 0).count()
+                    );
+                    assert!(
+                        bytes.len() < dense_len,
+                        "sparse form chosen but not smaller: {} vs \
+                         {dense_len}",
+                        bytes.len()
+                    );
+                }
+                None => assert_eq!(bytes.len(), dense_len),
+            }
+            let mut cache = ImpliedCache::new();
+            let mut out = QuantizedVector::empty();
+            let back =
+                wire::decode_into(&bytes, &mut cache, &mut out).unwrap();
+            assert_eq!(back, h);
+            assert_eq!(out, qv);
+            // any strict prefix fails cleanly, corruption never panics
+            let cut = g.usize_in(0..bytes.len());
+            assert!(wire::decode_into(
+                &bytes[..cut],
+                &mut cache,
+                &mut out
+            )
+            .is_err());
+            let mut corrupt = bytes.clone();
+            let pos = g.usize_in(0..corrupt.len());
+            corrupt[pos] ^= 0xFF;
+            let _ = wire::decode_into(&corrupt, &mut cache, &mut out);
+        });
+    }
+
+    #[test]
+    fn prop_robust_mixing_rows_stay_stochastic_and_bounded() {
+        // ISSUE 10 satellite: for arbitrary neighborhoods with a
+        // normalized weight row, every mixing rule is a convex
+        // combination — each output coordinate lies within the input
+        // range — trimmed(0) is BITWISE plain Metropolis, and the
+        // reported drop count is exactly min(2f, deg)
+        use crate::config::MixingKind;
+        use crate::topology::robust_mix_into;
+        check("robust mixing convexity", 100, |g| {
+            let dim = g.usize_in(1..20);
+            let deg = g.usize_in(0..8);
+            let cols: Vec<Vec<f32>> = (0..deg + 1)
+                .map(|_| {
+                    (0..dim)
+                        .map(|_| {
+                            g.rng().normal_ms(0.0, 3.0) as f32
+                        })
+                        .collect()
+                })
+                .collect();
+            let raw: Vec<f64> =
+                (0..deg + 1).map(|_| g.f64_in(0.1..1.0)).collect();
+            let total: f64 = raw.iter().sum();
+            let self_w = raw[0] / total;
+            let nbrs: Vec<(&[f32], f64)> = cols[1..]
+                .iter()
+                .zip(&raw[1..])
+                .map(|(c, w)| (c.as_slice(), *w / total))
+                .collect();
+            let f = g.usize_in(0..4);
+            let mut plain = vec![0.0f32; dim];
+            robust_mix_into(
+                &mut plain,
+                &cols[0],
+                self_w,
+                &nbrs,
+                &MixingKind::Metropolis,
+            );
+            let mut t0 = vec![0.0f32; dim];
+            robust_mix_into(
+                &mut t0,
+                &cols[0],
+                self_w,
+                &nbrs,
+                &MixingKind::Trimmed { f: 0 },
+            );
+            for (a, b) in plain.iter().zip(&t0) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for kind in [
+                MixingKind::Metropolis,
+                MixingKind::Trimmed { f },
+                MixingKind::Median,
+            ] {
+                let mut out = vec![0.0f32; dim];
+                let drops = robust_mix_into(
+                    &mut out,
+                    &cols[0],
+                    self_w,
+                    &nbrs,
+                    &kind,
+                );
+                let want_drops = match kind {
+                    MixingKind::Trimmed { f } if f > 0 => {
+                        (2 * f).min(deg) as u64
+                    }
+                    _ => 0,
+                };
+                assert_eq!(drops, want_drops, "{kind:?}");
+                for c in 0..dim {
+                    let lo = cols
+                        .iter()
+                        .map(|col| col[c])
+                        .fold(f32::INFINITY, f32::min);
+                    let hi = cols
+                        .iter()
+                        .map(|col| col[c])
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let tol = 1e-4 * (1.0 + hi.abs() + lo.abs());
+                    assert!(
+                        out[c] >= lo - tol && out[c] <= hi + tol,
+                        "{kind:?}: coord {c} = {} outside [{lo}, {hi}]",
+                        out[c]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
     fn prop_chrome_exporter_emits_balanced_monotone_streams() {
         // PR 7 satellite: for ARBITRARY span sets — overlapping,
         // nested, zero-length, duplicate-named — the Chrome exporter

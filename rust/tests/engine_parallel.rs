@@ -49,6 +49,8 @@ fn cfg(quant: QuantizerKind, parallelism: Parallelism) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 

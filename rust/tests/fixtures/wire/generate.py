@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Independent reference implementation of the lmdfl wire format (v1).
+"""Independent reference implementation of the lmdfl wire format (v2).
 
 Generates the golden hex fixtures consumed by
 rust/tests/wire_conformance.rs from the format SPEC (see
@@ -14,17 +14,31 @@ that and update this script to match the new spec.
 
 Layout (little-endian bit order within bytes, LSB first):
   u8 version; u8 tag; u8 phase; u8 idx_bits; u32 sender; u32 round;
-  u32 d; u16 s; u8 flags(1 = table shipped); f32 norm;
-  [f32 * s] level table (only if shipped);
-  d sign bits; d * idx_bits index bits; zero padding to a whole byte.
+  u32 d; u16 s; u8 flags(bit0: table shipped, bit1: sparse body);
+  f32 norm; [f32 * s] level table (only if shipped);
+  dense body:  d sign bits; d * idx_bits index bits
+  sparse body: u32 k; k entries of (position: ceil_log2(d) bits,
+               strictly increasing; sign: 1 bit; level index:
+               idx_bits, never 0)
+  zero padding to a whole byte.
+
+The encoding is canonical: the sparse body is used exactly when level 0
+is +0.0, every index-0 element carries a positive sign, d is within
+1 << 24, and the sparse form is strictly smaller than the dense one.
 """
 
 import struct
 from pathlib import Path
 
+MAX_SPARSE_DIM = 1 << 24
+
 
 def ceil_log2(s: int) -> int:
     return 0 if s <= 1 else (s - 1).bit_length()
+
+
+def pos_bits(d: int) -> int:
+    return 0 if d <= 1 else ceil_log2(d)
 
 
 class BitWriter:
@@ -58,28 +72,82 @@ class BitWriter:
         return bytes(out)
 
 
+def dense_bits(d: int, s: int, shipped: bool) -> int:
+    body = 88 + (32 * s if shipped else 0) + d + d * ceil_log2(s)
+    return (body + 7) // 8 * 8
+
+
+def sparse_bits(d: int, s: int, shipped: bool, k: int) -> int:
+    entry = pos_bits(d) + 1 + ceil_log2(s)
+    body = 88 + (32 * s if shipped else 0) + 32 + k * entry
+    return (body + 7) // 8 * 8
+
+
+def sparse_nnz(fix: dict):
+    """The canonical-form rule of quant::codec::sparse_nnz.
+
+    Returns the listed-element count k when the message takes the
+    sparse body, else None. Every implying tag's regenerated table
+    (full, qsgd, natural) has level 0 == +0.0, so an implied table
+    never blocks eligibility on the level-0 test.
+    """
+    d = len(fix["indices"])
+    if d == 0 or d > MAX_SPARSE_DIM:
+        return None
+    levels = fix["levels"]
+    if levels is not None and struct.pack("<f", levels[0]) != b"\x00" * 4:
+        return None
+    k = 0
+    for idx, neg in zip(fix["indices"], fix["signs"]):
+        if idx == 0:
+            if neg:
+                return None
+        else:
+            k += 1
+    shipped = levels is not None
+    s = fix["s"]
+    if sparse_bits(d, s, shipped, k) < dense_bits(d, s, shipped):
+        return k
+    return None
+
+
 def encode(fix: dict) -> bytes:
     w = BitWriter()
     s = fix["s"]
-    w.write_u8(1)  # WIRE_VERSION
+    d = len(fix["indices"])
+    nnz = sparse_nnz(fix)
+    w.write_u8(2)  # WIRE_VERSION
     w.write_u8(fix["tag"])
     w.write_u8(fix["phase"])
     w.write_u8(ceil_log2(s))
     w.write_u32(fix["sender"])
     w.write_u32(fix["round"])
-    w.write_u32(len(fix["indices"]))
+    w.write_u32(d)
     w.write_u16(s)
     shipped = fix["levels"] is not None
-    w.write_u8(1 if shipped else 0)
+    flags = (1 if shipped else 0) | (2 if nnz is not None else 0)
+    w.write_u8(flags)
     w.write_f32(fix["norm"])
     if shipped:
         for level in fix["levels"]:
             w.write_f32(level)
-    for sign in fix["signs"]:
-        w.write_bits(1 if sign else 0, 1)
     nbits = ceil_log2(s)
-    for idx in fix["indices"]:
-        w.write_bits(idx, nbits)
+    if nnz is not None:
+        w.write_u32(nnz)
+        pbits = pos_bits(d)
+        for p, (idx, neg) in enumerate(
+            zip(fix["indices"], fix["signs"])
+        ):
+            if idx == 0:
+                continue
+            w.write_bits(p, pbits)
+            w.write_bits(1 if neg else 0, 1)
+            w.write_bits(idx, nbits)
+    else:
+        for sign in fix["signs"]:
+            w.write_bits(1 if sign else 0, 1)
+        for idx in fix["indices"]:
+            w.write_bits(idx, nbits)
     return w.to_bytes()
 
 
@@ -127,6 +195,33 @@ FIXTURES = [
         norm=0.0, s=2, levels=[0.25, 0.75],
         signs=[], indices=[],
     ),
+    # sparse bodies (flags bit1): top-k keeps 5 of 64 coordinates —
+    # positions 3, 17, 31, 32, 63 survive, everything else is the
+    # implicit index-0/positive slot
+    dict(
+        name="topk_sparse", tag=7, phase=2, sender=5, round=21,
+        norm=1.25, s=2, levels=[0.0, 0.5],
+        signs=[p in (17, 32) for p in range(64)],
+        indices=[1 if p in (3, 17, 31, 32, 63) else 0
+                 for p in range(64)],
+    ),
+    # TernGrad over 48 coordinates, 6 survivors with mixed signs
+    dict(
+        name="terngrad_sparse", tag=6, phase=0, sender=9, round=4,
+        norm=0.875, s=2, levels=[0.0, 0.75],
+        signs=[p in (8, 24, 40) for p in range(48)],
+        indices=[1 if p in (0, 8, 19, 24, 40, 47) else 0
+                 for p in range(48)],
+    ),
+    # a top-k message that kept NOTHING: k = 0, s = 1 — the sparse
+    # body still ships a whole frame (offline drop is zero bytes, an
+    # empty message never is)
+    dict(
+        name="topk_empty_sparse", tag=7, phase=0, sender=2, round=33,
+        norm=0.0, s=1, levels=[0.0],
+        signs=[False] * 512,
+        indices=[0] * 512,
+    ),
 ]
 
 
@@ -135,13 +230,17 @@ def main() -> None:
     for fix in FIXTURES:
         data = encode(fix)
         # sanity: exact size formula from the spec
-        body_bits = 88
-        if fix["levels"] is not None:
-            body_bits += 32 * fix["s"]
         d = len(fix["indices"])
-        body_bits += d + d * ceil_log2(fix["s"])
-        want = 12 + (body_bits + 7) // 8
+        shipped = fix["levels"] is not None
+        nnz = sparse_nnz(fix)
+        if nnz is not None:
+            body = sparse_bits(d, fix["s"], shipped, nnz)
+        else:
+            body = dense_bits(d, fix["s"], shipped)
+        want = 12 + body // 8
         assert len(data) == want, (fix["name"], len(data), want)
+        expect_sparse = fix["name"].endswith("_sparse")
+        assert (nnz is not None) == expect_sparse, fix["name"]
         path = here / f"{fix['name']}.hex"
         path.write_text(data.hex() + "\n")
         print(f"{fix['name']}: {len(data)} bytes -> {path.name}")

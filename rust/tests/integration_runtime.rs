@@ -231,6 +231,8 @@ fn dfl_training_on_hlo_backend_converges() {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     };
     let log = lmdfl::dfl::Trainer::build(&cfg).unwrap().run().unwrap();
     assert_eq!(log.records.len(), 4);

@@ -6,8 +6,8 @@
 
 use lmdfl::agossip::{AsyncConfig, AsyncGossipEngine, AsyncRunLog, WaitPolicy};
 use lmdfl::config::{
-    DatasetKind, EngineMode, ExperimentConfig, QuantizerKind, TopologyKind,
-    WireEncoding,
+    AttackConfig, AttackKind, DatasetKind, EngineMode, ExperimentConfig,
+    MixingKind, QuantizerKind, TopologyKind, WireEncoding,
 };
 use lmdfl::metrics::RunLog;
 use lmdfl::simnet::{
@@ -221,8 +221,127 @@ fn async_different_seeds_produce_different_timelines() {
     );
 }
 
-/// Every configurable quantizer family, for the encoding-parity matrix.
-fn all_quantizers() -> [QuantizerKind; 6] {
+// ---- Byzantine determinism contract --------------------------------
+//
+// ISSUE 10: an adversary is part of the replayable world. Attacked
+// runs — robust mixing engaged, corrupted streams on the wire — must
+// replay byte-identically on both engines, with and without churn,
+// and tracing an attacked run must not perturb it.
+
+fn attacked_cfg(mixing: MixingKind, churn: bool) -> ExperimentConfig {
+    let mut cfg = sim_cfg(QuantizerKind::LloydMax { s: 8, iters: 6 });
+    cfg.attack = Some(AttackConfig { kind: AttackKind::SignFlip, f: 2 });
+    cfg.mixing = mixing;
+    if !churn {
+        cfg.network.as_mut().unwrap().churn = Default::default();
+    }
+    cfg
+}
+
+#[test]
+fn attacked_sync_replay_is_byte_identical() {
+    for churn in [false, true] {
+        for mixing in [MixingKind::Trimmed { f: 1 }, MixingKind::Median]
+        {
+            let cfg = attacked_cfg(mixing, churn);
+            let (mut a, digest_a, events_a) = run_once(&cfg);
+            let (mut b, digest_b, events_b) = run_once(&cfg);
+            assert_eq!(
+                digest_a, digest_b,
+                "{mixing:?} churn={churn}: event order diverged"
+            );
+            assert_eq!(events_a, events_b);
+            for r in a.records.iter_mut().chain(b.records.iter_mut()) {
+                r.wall_secs = 0.0;
+            }
+            assert_eq!(
+                a.to_csv(),
+                b.to_csv(),
+                "{mixing:?} churn={churn}"
+            );
+        }
+    }
+}
+
+#[test]
+fn attacked_async_replay_is_byte_identical() {
+    for churn in [false, true] {
+        let mut cfg = async_sim_cfg(churn);
+        cfg.attack =
+            Some(AttackConfig { kind: AttackKind::Random, f: 2 });
+        cfg.mixing = MixingKind::Trimmed { f: 1 };
+        assert_async_replay_identical(&cfg);
+    }
+}
+
+/// `mixing: trimmed(0)` must route through the plain Metropolis path:
+/// same event order, bit-identical records, byte-identical artifacts.
+#[test]
+fn trimmed_zero_replays_plain_metropolis_bitwise() {
+    let mut cfg = sim_cfg(QuantizerKind::LloydMax { s: 8, iters: 6 });
+    cfg.mixing = MixingKind::Metropolis;
+    let (mut plain, digest_p, _) = run_once(&cfg);
+    cfg.mixing = MixingKind::Trimmed { f: 0 };
+    let (mut t0, digest_t, _) = run_once(&cfg);
+    assert_eq!(digest_p, digest_t, "trimmed(0) changed the event order");
+    for r in plain.records.iter_mut().chain(t0.records.iter_mut()) {
+        r.wall_secs = 0.0;
+    }
+    assert_eq!(plain.to_csv(), t0.to_csv());
+}
+
+/// Tracing an attacked run is observation-only AND the trace carries
+/// the adversarial counters (`byzantine_msgs`, `trimmed_drops`).
+#[test]
+fn attacked_traced_replay_matches_untraced() {
+    use lmdfl::obs;
+
+    let cfg = attacked_cfg(MixingKind::Trimmed { f: 1 }, false);
+    let (mut plain, digest_plain, _) = run_once(&cfg);
+    let path = std::env::temp_dir()
+        .join(format!("lmdfl_attacked_{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    obs::start(
+        &obs::ObserveConfig {
+            trace_path: Some(path.clone()),
+            chrome_path: None,
+        },
+        0,
+    );
+    let (mut traced, digest_traced, _) = run_once(&cfg);
+    let written = obs::stop().unwrap();
+    assert_eq!(written, vec![path.clone()]);
+    assert_eq!(
+        digest_plain, digest_traced,
+        "tracing changed the attacked event order"
+    );
+    for r in plain.records.iter_mut().chain(traced.records.iter_mut()) {
+        r.wall_secs = 0.0;
+    }
+    assert_eq!(plain.to_csv(), traced.to_csv());
+    let text = std::fs::read_to_string(&path).unwrap();
+    let tf = obs::export::parse_trace(&text).unwrap();
+    assert!(tf.complete, "attacked trace missing its end footer");
+    let byz: u64 = tf
+        .counters
+        .iter()
+        .filter(|c| c.name == "byzantine_msgs")
+        .map(|c| c.value)
+        .sum();
+    assert!(byz > 0, "no byzantine_msgs counted in an attacked run");
+    assert!(
+        tf.counters
+            .iter()
+            .any(|c| c.name == "trimmed_drops" && c.value > 0),
+        "trimmed mixing recorded no drops"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Every configurable quantizer family, for the encoding-parity matrix
+/// (the last two emit sparse wire bodies).
+fn all_quantizers() -> [QuantizerKind; 8] {
     [
         QuantizerKind::Full,
         QuantizerKind::Qsgd { s: 8 },
@@ -230,6 +349,8 @@ fn all_quantizers() -> [QuantizerKind; 6] {
         QuantizerKind::Alq { s: 8 },
         QuantizerKind::LloydMax { s: 8, iters: 6 },
         QuantizerKind::DoublyAdaptive { s1: 4, iters: 6, s_max: 64 },
+        QuantizerKind::TernGrad,
+        QuantizerKind::TopK { keep: 0.1 },
     ]
 }
 

@@ -276,6 +276,8 @@ fn parity_cfg(name: &str, nodes: usize) -> ExperimentConfig {
         agossip: None,
         transport: None,
         observe: None,
+        attack: None,
+        mixing: Default::default(),
     }
 }
 
